@@ -1,0 +1,98 @@
+//! End-to-end driver: serve both networks' convolution stacks through the
+//! coordinator (real PJRT execution, batched requests) and report
+//! per-layer gigaflops and end-to-end latency — the measured counterpart
+//! of the paper's Figs. 6-9, recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --example network_inference
+//! ```
+//!
+//! Exercises every layer of the stack: manifest parsing, HLO-text
+//! compilation, the engine actor, the batcher, and the network runner.
+
+use std::time::Instant;
+
+use portable_kernels::coordinator::{
+    BatchPolicy, Batcher, EngineHandle, NetworkRunner,
+};
+use portable_kernels::harness::Report;
+use portable_kernels::runtime::ArtifactStore;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let store = ArtifactStore::open(dir)?;
+    let (handle, join) = EngineHandle::spawn(dir)?;
+    let runner = NetworkRunner::new(handle.clone());
+
+    // ---- per-layer sweeps: vendor baseline + pallas where available ----
+    for net in ["vgg", "resnet"] {
+        for implementation in ["xla", "pallas"] {
+            let layers =
+                NetworkRunner::available_layers(&store, net, implementation);
+            if layers.is_empty() {
+                continue;
+            }
+            let report =
+                runner.run_network(&store, net, implementation, 3)?;
+            let mut table = Report::new(
+                &format!("{net} / {implementation} (measured, PJRT CPU)"),
+                &["layer", "GFLOP", "ms", "GF/s"],
+            );
+            for l in &report.layers {
+                table.row(vec![
+                    l.layer.clone(),
+                    format!("{:.3}", l.flops as f64 / 1e9),
+                    format!("{:.2}", l.elapsed_s * 1e3),
+                    format!("{:.2}", l.gflops),
+                ]);
+            }
+            table.note(format!(
+                "total {:.1} ms, {:.2} GFLOP/s",
+                report.total_time_s * 1e3,
+                report.total_gflops()
+            ));
+            println!("{}", table.render());
+        }
+    }
+
+    // ---- batched serving: queue mixed requests, flush in groups ----
+    println!("== batched serving demo ==");
+    let mut batcher: Batcher<u64> = Batcher::new(BatchPolicy::default());
+    // A bursty client: interleaved requests against two ResNet layers.
+    let arts =
+        ["net_resnet_conv5_2_xla", "net_resnet_conv4_2_xla"];
+    for i in 0..24u64 {
+        batcher.push(arts[(i % 3 == 2) as usize], i);
+    }
+    for a in arts {
+        handle.warm(a)?;
+    }
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    let mut groups = 0usize;
+    while let Some((artifact, payloads)) = batcher.pop_group() {
+        let inputs = handle.synth_inputs(&artifact, 11)?;
+        for _ in &payloads {
+            let out = handle.run(&artifact, inputs.clone())?;
+            anyhow::ensure!(!out.outputs[0].is_empty());
+            served += 1;
+        }
+        groups += 1;
+    }
+    let elapsed = t0.elapsed();
+    let stats = handle.stats()?;
+    println!(
+        "served {served} requests in {groups} groups in {:.1} ms \
+         ({:.2} ms/request; engine ran {} executions, {} cached executables)",
+        elapsed.as_secs_f64() * 1e3,
+        elapsed.as_secs_f64() * 1e3 / served as f64,
+        stats.runs,
+        stats.cached_executables,
+    );
+
+    handle.shutdown();
+    let _ = join.join();
+    println!("network_inference OK");
+    Ok(())
+}

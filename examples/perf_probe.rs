@@ -1,0 +1,30 @@
+//! Perf probe: where does request time go? (literal build vs execute vs readback)
+use portable_kernels::runtime::{ArtifactStore, Engine};
+use std::time::Instant;
+fn main() {
+    let dir = std::path::Path::new("artifacts");
+    let mut engine = Engine::new(ArtifactStore::open(dir).unwrap()).unwrap();
+    for name in ["quickstart_gemm", "gemm_256x256x256_8x4_8x16_loc", "gemm_256x256x256_xla", "net_resnet_conv5_2_xla"] {
+        let meta = engine.store().get(name).unwrap().clone();
+        let inputs = engine.synth_inputs(name, 3).unwrap();
+        engine.warm(name).unwrap();
+        // total run (incl literal build) vs engine-reported execute time
+        let mut tot = f64::MAX; let mut exe = f64::MAX;
+        for _ in 0..5 {
+            let t0 = Instant::now();
+            let out = engine.run(name, &inputs).unwrap();
+            tot = tot.min(t0.elapsed().as_secs_f64());
+            exe = exe.min(out.elapsed.as_secs_f64());
+        }
+        // literal build alone
+        let t0 = Instant::now();
+        for _ in 0..10 {
+            for (d, s) in inputs.iter().zip(&meta.inputs) {
+                let _ = xla::Literal::vec1(d).reshape(&s.shape).unwrap();
+            }
+        }
+        let lit = t0.elapsed().as_secs_f64() / 10.0;
+        println!("{name}: total {:.3}ms exec {:.3}ms literal-build {:.3}ms overhead {:.3}ms",
+                 tot*1e3, exe*1e3, lit*1e3, (tot-exe-lit)*1e3);
+    }
+}

@@ -1,0 +1,56 @@
+//! Quickstart: load one AOT-compiled parametrized GEMM kernel and run it.
+//!
+//! ```sh
+//! make artifacts            # once: python lowers kernels to HLO text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This is the whole request-path story in one page: the artifact was
+//! produced at build time by the Pallas GEMM instantiated with the paper's
+//! `4x4_8x8_loc` configuration; Rust loads the HLO text, compiles it once
+//! on the PJRT CPU client, executes it, and verifies the numbers against
+//! the pure-Rust naive GEMM.
+
+use portable_kernels::blas::{gemm_naive, max_abs_diff};
+use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::util::rng::XorShift;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts");
+    let store = ArtifactStore::open(dir)?;
+    let mut engine = Engine::new(store)?;
+    println!("PJRT platform: {}", engine.platform());
+
+    // The quickstart artifact is a 64x64x64 GEMM with the paper's
+    // 4x4_8x8_loc configuration (see python/compile/manifests.py).
+    let name = "quickstart_gemm";
+    let meta = engine.store().get(name)?.clone();
+    println!(
+        "artifact {name}: config {:?}, {} flops",
+        meta.config, meta.flops
+    );
+
+    let (m, n, k) = (
+        meta.m.unwrap() as usize,
+        meta.n.unwrap() as usize,
+        meta.k.unwrap() as usize,
+    );
+    let mut rng = XorShift::new(7);
+    let a = rng.f32_vec(m * k);
+    let b = rng.f32_vec(k * n);
+
+    let out = engine.run(name, &[a.clone(), b.clone()])?;
+    println!(
+        "executed in {:?} -> {:.2} GFLOP/s",
+        out.elapsed,
+        out.gflops(meta.flops)
+    );
+
+    // Verify against the host-Rust oracle.
+    let expected = gemm_naive(&a, &b, m, n, k);
+    let err = max_abs_diff(&out.outputs[0], &expected);
+    println!("max |pjrt - rust_naive| = {err:.2e}");
+    anyhow::ensure!(err < 1e-3, "numerics mismatch");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Emit the full roofline sweep (paper Figs. 4 & 5) for any modeled
+//! device, as CSV on stdout.
+//!
+//! ```sh
+//! cargo run --release --example roofline -- mali-g71 > mali.csv
+//! cargo run --release --example roofline                  # defaults to uhd630
+//! ```
+
+use portable_kernels::config::GemmConfig;
+use portable_kernels::device::device_by_name;
+use portable_kernels::harness::sweep::{gemm_sweep, winners_per_point};
+use portable_kernels::perfmodel::{vendor_gemm, GemmProblem, VendorLib};
+
+fn main() -> anyhow::Result<()> {
+    let dev_id = std::env::args().nth(1).unwrap_or_else(|| "uhd630".into());
+    let dev = device_by_name(&dev_id)?;
+    eprintln!("device: {dev}");
+
+    println!("m,n,k,intensity,config,gflops,vendor_gflops,feasible");
+    for cfg in GemmConfig::table2() {
+        for p in gemm_sweep(&dev, &cfg) {
+            let v = vendor_gemm(
+                &dev,
+                VendorLib::ClBlast,
+                GemmProblem::new(p.m, p.n, p.k),
+            );
+            println!(
+                "{},{},{},{:.3},{},{:.2},{:.2},{}",
+                p.m, p.n, p.k, p.intensity, p.config, p.gflops, v, p.feasible
+            );
+        }
+    }
+
+    eprintln!("\nper-size winners (fig 5b-d structure):");
+    for (m, n, k, name, g) in winners_per_point(&dev, &GemmConfig::table2())
+    {
+        eprintln!("{m:>5} {n:>5} {k:>5}  {name:<16} {g:>8.2} GF");
+    }
+    Ok(())
+}

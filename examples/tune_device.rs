@@ -1,0 +1,115 @@
+//! Tune the parametrized kernels for two very different devices and show
+//! that the winning parameters differ — the paper's core portability
+//! workflow ("tuning for new devices amounts to choosing the combinations
+//! of kernel parameters that perform best on the hardware").
+//!
+//! ```sh
+//! cargo run --release --example tune_device
+//! ```
+
+use portable_kernels::config::GemmConfig;
+use portable_kernels::device::device_by_name;
+use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
+use portable_kernels::tuner::{
+    tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, SelectionDb,
+    SelectionKey,
+};
+use portable_kernels::util::tmp::TempDir;
+
+fn main() -> anyhow::Result<()> {
+    let devices = ["mali-g71", "r9-nano", "uhd630", "i7-6700k-cpu"];
+    let problems = [
+        GemmProblem::new(128, 128, 128),
+        GemmProblem::new(512, 512, 512),
+        GemmProblem::new(1024, 1024, 1024),
+    ];
+
+    println!("== GEMM: winning configuration per device per size ==");
+    let mut db = SelectionDb::new();
+    for dev_id in devices {
+        let dev = device_by_name(dev_id)?;
+        for p in problems {
+            let r = tune_gemm(&dev, p, &ExhaustiveSearch)
+                .expect("space is non-empty");
+            println!(
+                "{:>13}  {:>4}^3  -> {:<16} {:>8.1} GF  ({} evaluated, {} infeasible)",
+                dev_id,
+                p.m,
+                r.config.name(),
+                r.gflops,
+                r.evaluated,
+                r.infeasible
+            );
+            db.put_gemm(
+                SelectionKey::gemm(dev_id, p.m, p.n, p.k),
+                r.config,
+                r.gflops,
+            );
+        }
+    }
+
+    // The portability claim, demonstrated: the tuned config for Mali
+    // (cache-based, no local memory) differs from the R9 Nano's.
+    let mali = db
+        .get_gemm(&SelectionKey::gemm("mali-g71", 1024, 1024, 1024))
+        .unwrap()
+        .0;
+    let amd = db
+        .get_gemm(&SelectionKey::gemm("r9-nano", 1024, 1024, 1024))
+        .unwrap()
+        .0;
+    println!(
+        "\nmali winner {} vs r9-nano winner {} -> device-specific tuning",
+        mali.name(),
+        amd.name()
+    );
+    assert_ne!(mali, amd);
+
+    // How much does tuning buy over a one-size-fits-all default?
+    println!("\n== tuned vs default (4x4_8x8_loc) ==");
+    for dev_id in devices {
+        let dev = device_by_name(dev_id)?;
+        let p = GemmProblem::new(1024, 1024, 1024);
+        let tuned = tune_gemm(&dev, p, &ExhaustiveSearch).unwrap();
+        let default = gemm_estimate(&dev, p, &GemmConfig::default())?;
+        println!(
+            "{:>13}: tuned {:>8.1} GF vs default {:>8.1} GF  ({:.2}x)",
+            dev_id,
+            tuned.gflops,
+            default.gflops,
+            tuned.gflops / default.gflops
+        );
+    }
+
+    // Conv layers: hill-climbing finds (nearly) the exhaustive winner in
+    // a fraction of the evaluations — the paper's planned "ML tuner".
+    println!("\n== conv conv3_1-like layer: exhaustive vs hill-climb ==");
+    let layer = portable_kernels::nn::ConvLayer::same(
+        "demo", 3, 1, 56, 56, 128, 256,
+    );
+    for dev_id in devices {
+        let dev = device_by_name(dev_id)?;
+        let ex = tune_conv(&dev, &layer, 1, &ExhaustiveSearch).unwrap();
+        let hc =
+            tune_conv(&dev, &layer, 1, &HillClimb { restarts: 6, seed: 9 })
+                .unwrap();
+        println!(
+            "{:>13}: exhaustive {} @ {:.1} GF ({} evals) | hillclimb {} @ {:.1} GF ({} evals)",
+            dev_id,
+            ex.config.name(),
+            ex.gflops,
+            ex.evaluated,
+            hc.config.name(),
+            hc.gflops,
+            hc.evaluated
+        );
+    }
+
+    // Persist + reload the selection DB (what a deployment ships).
+    let tmp = TempDir::new("tune-demo")?;
+    let path = tmp.path().join("selections.json");
+    db.save(&path)?;
+    let loaded = SelectionDb::load(&path)?;
+    println!("\nselection DB round-trip: {} entries OK", loaded.len());
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time compile path: Pallas kernels, JAX layer graphs, AOT lowering.
+
+Nothing in this package runs at request time — ``make artifacts`` lowers
+all needed kernel instantiations to ``artifacts/*.hlo.txt`` once, and the
+Rust coordinator executes them through PJRT.
+"""

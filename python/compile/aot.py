@@ -1,0 +1,185 @@
+"""AOT artifact builder: lower every manifest entry to HLO text.
+
+Interchange format is HLO *text*, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``)::
+
+    python -m compile.aot --out ../artifacts --groups all
+
+Python runs exactly once, here; after this the Rust binary is
+self-contained.  Incremental: entries whose artifact already exists are
+skipped unless ``--force``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List, Optional, Tuple
+
+import jax
+
+from . import manifests, model
+from .configs import ConvAlgorithm, GemmConfig, layer_dict
+from .kernels.winograd import winograd_flops
+
+MANIFEST_VERSION = 1
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides array constants as `{...}`, which the Rust side's HLO parser
+    # silently reads back as ZEROS (found the hard way via the Winograd
+    # transform matrices).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _gemm_flops(e: manifests.ManifestEntry) -> int:
+    flops = 2 * e.m * e.n * e.k
+    if e.with_c:
+        flops += 3 * e.m * e.n  # alpha*AB + beta*C epilogue
+    return flops
+
+
+def _conv_flops(e: manifests.ManifestEntry) -> int:
+    layer = e.layer
+    if (e.conv_config is not None
+            and e.conv_config.algorithm == ConvAlgorithm.WINOGRAD):
+        return winograd_flops(e.batch, layer.out_h, layer.out_w,
+                              layer.in_c, layer.out_c, e.conv_config.wino_m)
+    return layer.flops(e.batch)
+
+
+def build_entry(e: manifests.ManifestEntry):
+    """Return (fn, arg_specs, metadata) for one manifest entry."""
+    if e.kind == "gemm":
+        fn, specs = model.gemm_fn(
+            e.m, e.n, e.k, config=e.gemm_config or GemmConfig(),
+            alpha=e.alpha, beta=e.beta, with_c=e.with_c,
+            xla_native=(e.impl == "xla"))
+        meta = {
+            "m": e.m, "n": e.n, "k": e.k,
+            "alpha": e.alpha, "beta": e.beta,
+            "config": e.gemm_config.name if e.gemm_config else None,
+            "flops": _gemm_flops(e),
+            "bytes": 4 * (e.m * e.k + e.k * e.n + e.m * e.n
+                          + (e.m * e.n if e.with_c else 0)),
+        }
+    elif e.kind == "conv":
+        if e.impl == "xla":
+            fn, specs = model.layer_fn_xla(e.layer, e.batch,
+                                           fuse_relu=e.fuse_relu)
+            cfg_name = None
+            alg = "xla"
+        else:
+            fn, specs = model.layer_fn(e.layer, e.batch,
+                                       config=e.conv_config,
+                                       gemm_config=(e.conv_gemm_config
+                                                    or GemmConfig()),
+                                       fuse_relu=e.fuse_relu)
+            cfg_name = e.conv_config.name
+            alg = e.conv_config.algorithm.value
+        layer = e.layer
+        in_bytes = 4 * e.batch * layer.in_h * layer.in_w * layer.in_c
+        f_bytes = 4 * layer.window ** 2 * layer.in_c * layer.out_c
+        out_bytes = 4 * e.batch * layer.out_h * layer.out_w * layer.out_c
+        meta = {
+            "layer": layer_dict(layer, e.batch),
+            "batch": e.batch,
+            "config": cfg_name,
+            "gemm_config": (e.conv_gemm_config.name
+                            if e.conv_gemm_config else None),
+            "algorithm": alg,
+            "fuse_relu": e.fuse_relu,
+            "scaled_from": e.scaled_from,
+            "flops": _conv_flops(e),
+            "bytes": in_bytes + f_bytes + out_bytes,
+        }
+    else:
+        raise ValueError(f"unknown kind {e.kind}")
+
+    meta.update({
+        "name": e.name,
+        "kind": e.kind,
+        "impl": e.impl,
+        "groups": list(e.groups),
+        "file": f"{e.name}.hlo.txt",
+        "inputs": [{"shape": list(s.shape), "dtype": s.dtype.name}
+                   for s in specs],
+    })
+    return fn, specs, meta
+
+
+def lower_entry(e: manifests.ManifestEntry, out_dir: str,
+                force: bool = False) -> Tuple[dict, bool]:
+    """Lower one entry; returns (metadata, was_built)."""
+    fn, specs, meta = build_entry(e)
+    path = os.path.join(out_dir, meta["file"])
+    if os.path.exists(path) and not force:
+        return meta, False
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    # Record output shapes from the lowered computation.
+    out_avals = lowered.out_info
+    meta["outputs"] = [{"shape": list(o.shape), "dtype": str(o.dtype)}
+                       for o in jax.tree_util.tree_leaves(out_avals)]
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(text)
+    os.replace(tmp, path)
+    return meta, True
+
+
+def build(out_dir: str, groups: List[str], force: bool = False,
+          verbose: bool = True) -> List[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = manifests.select(groups)
+    metas = []
+    t_all = time.time()
+    for i, e in enumerate(entries):
+        t0 = time.time()
+        meta, built = lower_entry(e, out_dir, force=force)
+        metas.append(meta)
+        if verbose:
+            status = "built" if built else "cached"
+            print(f"[{i + 1}/{len(entries)}] {e.name}: {status} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "groups": groups,
+        "artifacts": metas,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {len(metas)} artifact entries "
+              f"in {time.time() - t_all:.1f}s -> {out_dir}/manifest.json")
+    return metas
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--groups", default="all",
+                   help="comma-separated: core,gemm,conv,network,all")
+    p.add_argument("--force", action="store_true")
+    args = p.parse_args(argv)
+    build(args.out, args.groups.split(","), force=args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,281 @@
+"""Kernel configuration schema shared between the Python compile path and the
+Rust coordinator.
+
+This mirrors the paper's template-parameter space:
+
+* ``GemmConfig`` — SYCL-BLAS §3.1 GEMM parameters.  A configuration string
+  ``hxw_rxc[_loc|_noloc][_db]`` matches the paper's Table 2 naming:
+  ``h x w`` is the register tile computed per "thread" and ``r x c`` the
+  work-group shape.  The Pallas block computed per grid cell is therefore
+  ``(h*r) x (w*c)``.
+* ``ConvConfig`` — SYCL-DNN §4.1 tiled-convolution parameters: output tile
+  shape and channel vector widths.
+
+The JSON emitted by :func:`to_json` is the wire format consumed by
+``rust/src/config`` (serde) — field names must stay in sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from enum import Enum
+from typing import List, Optional, Tuple
+
+# Number of f32 elements staged per panel row/column — "X" in the paper's
+# local-memory size formula `h*r*X + X*w*c` (§5.2).  Back-solving Table 2
+# (e.g. 4x4_8x8_loc -> 8 KiB means 64*X*4 bytes = 8192) gives X = 32, i.e.
+# a 128-byte staging granularity (two 64-byte cache lines per fetch).
+DEFAULT_CACHE_LINE_ELEMS = 32
+
+
+@dataclass(frozen=True)
+class GemmConfig:
+    """Parameters of the blocked GEMM kernel (paper §3.1.1).
+
+    Attributes:
+        rt_m, rt_n: register tile per thread (``h x w`` in the paper).
+        wg_r, wg_c: work-group thread grid (``r x c``).
+        block_k:    k'-panel depth staged per iteration (cache-line elems).
+        use_local:  stage A/B panels through local memory (``_loc``).
+        double_buffer: double the local-memory staging buffers to overlap
+            loads of tile *i+1* with compute on tile *i* (§3.1.2).
+    """
+
+    rt_m: int = 4
+    rt_n: int = 4
+    wg_r: int = 8
+    wg_c: int = 8
+    block_k: int = DEFAULT_CACHE_LINE_ELEMS
+    use_local: bool = True
+    double_buffer: bool = False
+
+    @property
+    def block_m(self) -> int:
+        return self.rt_m * self.wg_r
+
+    @property
+    def block_n(self) -> int:
+        return self.rt_n * self.wg_c
+
+    @property
+    def registers(self) -> int:
+        """Accumulator registers per thread (paper Table 2 'Registers')."""
+        return self.rt_m * self.rt_n
+
+    @property
+    def work_group(self) -> int:
+        """Threads per work-group (paper Table 2 'Work group')."""
+        return self.wg_r * self.wg_c
+
+    def local_mem_elems(self, cache_line_elems: int = DEFAULT_CACHE_LINE_ELEMS) -> int:
+        """Local-memory footprint in data elements.
+
+        Paper §5.2: for configuration ``hxw_rxc`` the footprint is
+        ``h*r*X + X*w*c`` where X is the cache-line element count; doubled
+        when double buffering.
+        """
+        if not self.use_local:
+            return 0
+        x = cache_line_elems
+        elems = self.rt_m * self.wg_r * x + x * self.rt_n * self.wg_c
+        return 2 * elems if self.double_buffer else elems
+
+    @property
+    def name(self) -> str:
+        tag = "loc" if self.use_local else "noloc"
+        db = "_db" if self.double_buffer else ""
+        return f"{self.rt_m}x{self.rt_n}_{self.wg_r}x{self.wg_c}_{tag}{db}"
+
+    @staticmethod
+    def parse(name: str) -> "GemmConfig":
+        """Parse a paper-style config string such as ``8x4_8x16_loc``."""
+        parts = name.split("_")
+        if len(parts) < 2:
+            raise ValueError(f"bad gemm config string: {name!r}")
+        rt = parts[0].split("x")
+        wg = parts[1].split("x")
+        use_local = True
+        double_buffer = False
+        for p in parts[2:]:
+            if p == "loc":
+                use_local = True
+            elif p == "noloc":
+                use_local = False
+            elif p == "db":
+                double_buffer = True
+            else:
+                raise ValueError(f"bad gemm config suffix {p!r} in {name!r}")
+        return GemmConfig(
+            rt_m=int(rt[0]),
+            rt_n=int(rt[1]),
+            wg_r=int(wg[0]),
+            wg_c=int(wg[1]),
+            use_local=use_local,
+            double_buffer=double_buffer,
+        )
+
+
+#: The seven SYCL-BLAS configurations evaluated in the paper (Table 2).
+TABLE2_CONFIGS: Tuple[GemmConfig, ...] = (
+    GemmConfig.parse("4x4_8x8_loc"),
+    GemmConfig.parse("4x4_16x16_loc"),
+    GemmConfig.parse("8x4_8x16_loc"),
+    GemmConfig.parse("8x2_4x16_loc"),
+    GemmConfig.parse("8x4_8x16_noloc"),
+    GemmConfig.parse("8x4_4x8_noloc"),
+    GemmConfig.parse("4x4_8x8_noloc"),
+)
+
+
+class ConvAlgorithm(str, Enum):
+    """Convolution algorithms provided by the library (paper §4.1)."""
+
+    NAIVE = "naive"  # one output element per thread (tile 1x1)
+    TILED = "tiled"  # §4.1.1 tiled direct convolution
+    IM2COL = "im2col"  # lower to GEMM via im2col (BLAS-backed path)
+    WINOGRAD = "winograd"  # §4.1.2 Winograd/Cook-Toom fast convolution
+
+
+@dataclass(frozen=True)
+class ConvConfig:
+    """Parameters of the tiled direct convolution kernel (paper §4.1.1).
+
+    Attributes:
+        tile_h, tile_w: output elements computed per thread.
+        vec_c: input-channel vector width (vector loads of the input).
+        vec_k: output-channel (feature) vector width (vector stores).
+        block_k: output channels computed per grid cell; ``0`` = all.
+        algorithm: which convolution algorithm this config drives.
+        wino_m: Winograd output-tile size m for F(m x m, 3 x 3).
+    """
+
+    tile_h: int = 1
+    tile_w: int = 1
+    vec_c: int = 1
+    vec_k: int = 1
+    block_k: int = 0
+    algorithm: ConvAlgorithm = ConvAlgorithm.TILED
+    wino_m: int = 2
+
+    @property
+    def name(self) -> str:
+        if self.algorithm == ConvAlgorithm.WINOGRAD:
+            return f"wino{self.wino_m}_v{self.vec_c}x{self.vec_k}"
+        base = f"{self.algorithm.value}_{self.tile_h}x{self.tile_w}_v{self.vec_c}x{self.vec_k}"
+        return base
+
+    @staticmethod
+    def naive() -> "ConvConfig":
+        return ConvConfig(tile_h=1, tile_w=1, vec_c=1, vec_k=1, algorithm=ConvAlgorithm.NAIVE)
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    """One convolution layer (paper Tables 3 & 4).
+
+    ``padding`` follows the paper's conventions: VGG/ResNet internal layers
+    use SAME padding (spatial size preserved for stride 1, halved and
+    rounded up for stride 2); ResNet's first 7x7/s2 layer is listed with a
+    pre-padded 230x230 input and uses VALID padding.
+    """
+
+    name: str
+    window: int
+    stride: int
+    in_h: int
+    in_w: int
+    in_c: int
+    out_c: int
+    padding: str = "SAME"  # "SAME" | "VALID"
+
+    @property
+    def out_h(self) -> int:
+        if self.padding == "SAME":
+            return -(-self.in_h // self.stride)
+        return (self.in_h - self.window) // self.stride + 1
+
+    @property
+    def out_w(self) -> int:
+        if self.padding == "SAME":
+            return -(-self.in_w // self.stride)
+        return (self.in_w - self.window) // self.stride + 1
+
+    def flops(self, batch: int = 1) -> int:
+        """Multiply-add FLOPs (2 * madds) for the direct convolution."""
+        return (
+            2
+            * batch
+            * self.out_h
+            * self.out_w
+            * self.out_c
+            * self.window
+            * self.window
+            * self.in_c
+        )
+
+
+#: VGG-16 distinct convolution layers (paper Table 3).
+VGG_LAYERS: Tuple[LayerSpec, ...] = (
+    LayerSpec("conv1_1", 3, 1, 224, 224, 3, 64),
+    LayerSpec("conv1_2", 3, 1, 224, 224, 64, 64),
+    LayerSpec("conv2_1", 3, 1, 112, 112, 64, 128),
+    LayerSpec("conv2_2", 3, 1, 112, 112, 128, 128),
+    LayerSpec("conv3_1", 3, 1, 56, 56, 128, 256),
+    LayerSpec("conv3_2", 3, 1, 56, 56, 256, 256),
+    LayerSpec("conv4_1", 3, 1, 28, 28, 256, 512),
+    LayerSpec("conv4_2", 3, 1, 28, 28, 512, 512),
+    LayerSpec("conv5_1", 3, 1, 14, 14, 512, 512),
+)
+
+#: ResNet-50 distinct convolution layers (paper Table 4).
+RESNET_LAYERS: Tuple[LayerSpec, ...] = (
+    LayerSpec("conv1_1", 7, 2, 230, 230, 3, 64, padding="VALID"),
+    LayerSpec("conv2_1", 1, 1, 56, 56, 64, 256),
+    LayerSpec("conv2_2", 1, 1, 56, 56, 64, 64),
+    LayerSpec("conv2_3", 3, 1, 56, 56, 64, 64),
+    LayerSpec("conv2_4", 1, 1, 56, 56, 256, 64),
+    LayerSpec("conv2_5", 3, 2, 56, 56, 64, 64),
+    LayerSpec("conv3_1", 1, 1, 28, 28, 64, 256),
+    LayerSpec("conv3_2", 1, 1, 28, 28, 256, 512),
+    LayerSpec("conv3_3", 1, 1, 28, 28, 256, 128),
+    LayerSpec("conv3_4", 3, 1, 28, 28, 128, 128),
+    LayerSpec("conv3_5", 1, 1, 28, 28, 128, 512),
+    LayerSpec("conv3_6", 1, 1, 28, 28, 512, 128),
+    LayerSpec("conv3_7", 3, 2, 28, 28, 128, 128),
+    LayerSpec("conv4_1", 1, 1, 14, 14, 128, 512),
+    LayerSpec("conv4_2", 1, 1, 14, 14, 512, 1024),
+    LayerSpec("conv4_3", 1, 1, 14, 14, 512, 256),
+    LayerSpec("conv4_4", 3, 1, 14, 14, 256, 256),
+    LayerSpec("conv4_5", 1, 1, 14, 14, 256, 1024),
+    LayerSpec("conv4_6", 1, 1, 14, 14, 1024, 256),
+    LayerSpec("conv4_7", 3, 2, 14, 14, 256, 256),
+    LayerSpec("conv5_1", 1, 1, 7, 7, 256, 1024),
+    LayerSpec("conv5_2", 1, 1, 7, 7, 1024, 2048),
+    LayerSpec("conv5_3", 1, 1, 7, 7, 1024, 512),
+    LayerSpec("conv5_4", 3, 1, 7, 7, 512, 512),
+    LayerSpec("conv5_5", 1, 1, 7, 7, 512, 2048),
+    LayerSpec("conv5_6", 1, 1, 7, 7, 2048, 512),
+)
+
+
+def _dataclass_to_dict(obj):
+    d = dataclasses.asdict(obj)
+    for k, v in d.items():
+        if isinstance(v, Enum):
+            d[k] = v.value
+    return d
+
+
+def to_json(obj) -> str:
+    """Serialize a config dataclass to the Rust-compatible JSON schema."""
+    return json.dumps(_dataclass_to_dict(obj), sort_keys=True)
+
+
+def layer_dict(layer: LayerSpec, batch: int = 1) -> dict:
+    d = _dataclass_to_dict(layer)
+    d["out_h"] = layer.out_h
+    d["out_w"] = layer.out_w
+    d["flops"] = layer.flops(batch)
+    return d

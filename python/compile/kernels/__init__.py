@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels: parametrized GEMM and convolution.
+
+Every kernel is a *family* of instantiations indexed by a configuration
+object (``configs.GemmConfig`` / ``configs.ConvConfig``) — the Pallas
+analogue of the paper's C++-template-parametrized SYCL kernels.
+"""
+
+from .gemm import gemm, gemm_batched
+from .conv import conv2d, conv2d_naive
+from .im2col import conv2d_im2col, im2col
+from .winograd import conv2d_winograd, transform_matrices, winograd_flops
+from . import ref
+
+__all__ = [
+    "gemm",
+    "gemm_batched",
+    "conv2d",
+    "conv2d_naive",
+    "conv2d_im2col",
+    "im2col",
+    "conv2d_winograd",
+    "transform_matrices",
+    "winograd_flops",
+    "ref",
+]

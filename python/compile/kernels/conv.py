@@ -1,0 +1,188 @@
+"""Parametrized tiled direct 2D convolution Pallas kernel (paper §4.1.1).
+
+Layouts follow the paper (§4.1): input ``NHWC``, filter ``RSCK`` (HWIO),
+output ``NHWK``.  The kernel is parametrized by a :class:`ConvConfig`:
+
+* ``tile_h x tile_w`` — the output tile computed per grid cell ("per
+  thread" in the paper).  Adjacent output elements share overlapping input
+  windows, so a larger tile re-uses each loaded input element more times
+  and reduces total bytes read (paper Fig. 3's x-axis).
+* ``vec_c`` / ``vec_k`` — input/output channel vector widths.  They
+  constrain the channel blocking (``C % vec_c == 0``, ``K % vec_k == 0``)
+  and determine the register footprint the Rust model estimates (Fig. 2);
+  under the interpreter they are numerically inert — the paper's own point
+  is that parameters move performance, never semantics.
+* ``block_k`` — output channels computed per grid cell (0 = all of K),
+  the analogue of splitting feature maps across work-groups.
+
+The input is zero-padded up front so every in-kernel load is static-shape
+and in-bounds; strides are handled with static strided slices, so a single
+kernel serves every layer of Tables 3 & 4 (1x1, 3x3/s1, 3x3/s2, 7x7/s2).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import ConvConfig
+
+
+def _same_pads(size: int, window: int, stride: int) -> Tuple[int, int]:
+    """TF-style SAME padding (matches lax.conv 'SAME')."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + window - size, 0)
+    return total // 2, total - total // 2
+
+
+def _conv_kernel(x_ref, f_ref, o_ref, *, tile_h, tile_w, stride, window,
+                 in_c, block_k, acc_dtype):
+    """Compute one (1, tile_h, tile_w, block_k) output tile.
+
+    The input lives un-blocked in ANY memory space; each grid cell loads
+    its (overlapping) halo patch with a dynamic slice — the Pallas
+    expression of the paper's "each thread loads the input slice it
+    requires", with the tile overlap providing the data reuse.
+    """
+    n = pl.program_id(0)
+    th = pl.program_id(1)
+    tw = pl.program_id(2)
+    ko = pl.program_id(3)
+
+    patch_h = (tile_h - 1) * stride + window
+    patch_w = (tile_w - 1) * stride + window
+    patch = x_ref[
+        n,
+        pl.dslice(th * tile_h * stride, patch_h),
+        pl.dslice(tw * tile_w * stride, patch_w),
+        :,
+    ]
+    fblk = f_ref[:, :, :, pl.dslice(ko * block_k, block_k)]
+
+    acc = jnp.zeros((tile_h * tile_w, block_k), acc_dtype)
+    # R and S are static — this unrolls into `window**2` small matmuls of
+    # shape (tile_h*tile_w, C) x (C, block_k), the MXU-friendly form of
+    # Algorithm 1's inner loops.
+    for r in range(window):
+        for s in range(window):
+            win = jax.lax.slice(
+                patch,
+                (r, s, 0),
+                (r + (tile_h - 1) * stride + 1,
+                 s + (tile_w - 1) * stride + 1,
+                 in_c),
+                (stride, stride, 1),
+            )
+            acc += jax.lax.dot(
+                win.reshape(tile_h * tile_w, in_c),
+                fblk[r, s],
+                preferred_element_type=acc_dtype,
+            )
+    o_ref[...] = acc.reshape(1, tile_h, tile_w, block_k).astype(o_ref.dtype)
+
+
+def conv2d(x: jax.Array, f: jax.Array, *, config: ConvConfig = ConvConfig(),
+           stride: int = 1, padding: str = "SAME",
+           interpret: bool = True) -> jax.Array:
+    """Tiled direct convolution.
+
+    Args:
+        x: input ``(N, H, W, C)``.
+        f: filter ``(R, S, C, K)`` with R == S.
+        config: tile/vector parametrization.
+        stride: spatial stride (same in h and w).
+        padding: ``"SAME"`` or ``"VALID"``.
+
+    Returns:
+        ``(N, out_h, out_w, K)`` output, dtype of ``x``.
+    """
+    n, h, w, c = x.shape
+    r, s, cf, k = f.shape
+    if r != s:
+        raise ValueError(f"only square windows supported, got {r}x{s}")
+    if c != cf:
+        raise ValueError(f"channel mismatch: input {c} vs filter {cf}")
+    if c % config.vec_c or k % config.vec_k:
+        raise ValueError(
+            f"vector widths must divide channels: C={c}%{config.vec_c}, "
+            f"K={k}%{config.vec_k}"
+        )
+
+    if padding == "SAME":
+        ph = _same_pads(h, r, stride)
+        pw = _same_pads(w, s, stride)
+        out_h = -(-h // stride)
+        out_w = -(-w // stride)
+    elif padding == "VALID":
+        ph = pw = (0, 0)
+        out_h = (h - r) // stride + 1
+        out_w = (w - s) // stride + 1
+    else:
+        raise ValueError(f"bad padding {padding!r}")
+
+    tile_h = min(config.tile_h, out_h)
+    tile_w = min(config.tile_w, out_w)
+    block_k = config.block_k if config.block_k else k
+    block_k = min(block_k, k)
+    if k % block_k:
+        raise ValueError(f"block_k {block_k} must divide K={k}")
+
+    # Pad: front = SAME/VALID conv padding; back additionally rounds the
+    # output up to a tile multiple and guarantees the last tile's halo
+    # patch stays in bounds.
+    th_ct = -(-out_h // tile_h)
+    tw_ct = -(-out_w // tile_w)
+    need_h = (th_ct * tile_h - 1) * stride + r
+    need_w = (tw_ct * tile_w - 1) * stride + s
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (ph[0], max(ph[1], need_h - h - ph[0])),
+            (pw[0], max(pw[1], need_w - w - pw[0])),
+            (0, 0),
+        ),
+    )
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_kernel,
+            tile_h=tile_h,
+            tile_w=tile_w,
+            stride=stride,
+            window=r,
+            in_c=c,
+            block_k=block_k,
+            acc_dtype=jnp.float32,
+        ),
+        grid=(n, th_ct, tw_ct, k // block_k),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, tile_h, tile_w, block_k),
+            lambda ni, i, j, ko: (ni, i, j, ko),
+        ),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, th_ct * tile_h, tw_ct * tile_w, k), x.dtype
+        ),
+        interpret=interpret,
+    )(xp, f)
+    return out[:, :out_h, :out_w, :]
+
+
+def conv2d_naive(x: jax.Array, f: jax.Array, *, stride: int = 1,
+                 padding: str = "SAME", interpret: bool = True) -> jax.Array:
+    """Paper Algorithm 1: one output element per thread (tile 1x1).
+
+    This is the 0.29-TFLOP baseline of Fig. 3 — every thread re-loads its
+    full input window with zero cross-thread reuse.
+    """
+    cfg = ConvConfig(tile_h=1, tile_w=1)
+    return conv2d(x, f, config=cfg, stride=stride, padding=padding,
+                  interpret=interpret)

@@ -1,0 +1,206 @@
+"""Parametrized blocked GEMM Pallas kernel (paper §3.1).
+
+The kernel computes ``C = alpha * OP_a(A) @ OP_b(B) + beta * C`` for
+column-agnostic row-major arrays, parametrized by a :class:`GemmConfig`
+exactly as the paper's SYCL kernel is parametrized by C++ template
+arguments:
+
+* The Pallas output block per grid cell is ``block_m x block_n`` =
+  ``(rt_m * wg_r) x (rt_n * wg_c)`` — the work-group's tile of C
+  (paper Fig. 1b).  The register tile / work-group split within the block
+  does not change the mathematics, only the hardware mapping; it is what
+  the Rust performance model reasons about.
+* ``use_local`` selects the HBM->VMEM staging schedule: ``_loc`` stages
+  A/B panels in ``block_k``-deep slices (the local-memory tiles of
+  Fig. 1b), ``_noloc`` streams the whole K panel per grid cell (relying on
+  the cache, as on Mali G-71).
+* ``double_buffer`` is a pipelining hint; under ``interpret=True`` it does
+  not change the emitted schedule, but it doubles the modeled local-memory
+  footprint (see ``configs.GemmConfig.local_mem_elems``) and the Rust
+  performance model's latency-hiding term.
+
+Arbitrary (non-multiple) M/N/K are handled by zero-padding to block
+multiples and slicing the result; zero padding is exact for the ``alpha``
+term and ``beta`` acts only on the unpadded C region.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import GemmConfig
+
+
+def _gemm_kernel(a_ref, b_ref, c_ref, o_ref, *, k_steps, alpha, beta,
+                 trans_a, trans_b, acc_dtype):
+    """One (i, j, s) grid step: accumulate an A-slab x B-slab product.
+
+    The k grid dimension is innermost, so ``o_ref`` for a fixed (i, j) is
+    revisited across s = 0..k_steps-1 and used as the accumulator — this is
+    the register-resident C_ij of paper §3.1.2 ("C_ij is stored in
+    registers during the entire operation").
+    """
+    s = pl.program_id(2)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    if trans_a:
+        a = a.T
+    if trans_b:
+        b = b.T
+    prod = jax.lax.dot(a, b, preferred_element_type=acc_dtype)
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = prod.astype(o_ref.dtype)
+
+    @pl.when(s != 0)
+    def _accum():
+        o_ref[...] += prod.astype(o_ref.dtype)
+
+    @pl.when(s == k_steps - 1)
+    def _epilogue():
+        o_ref[...] = alpha * o_ref[...] + beta * c_ref[...]
+
+
+def _pad2(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def gemm(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None,
+         *, config: GemmConfig = GemmConfig(), alpha: float = 1.0,
+         beta: float = 0.0, trans_a: bool = False, trans_b: bool = False,
+         interpret: bool = True) -> jax.Array:
+    """Blocked GEMM: ``alpha * OP_a(a) @ OP_b(b) + beta * c``.
+
+    Args:
+        a: ``(M, K)`` (or ``(K, M)`` when ``trans_a``).
+        b: ``(K, N)`` (or ``(N, K)`` when ``trans_b``).
+        c: ``(M, N)`` accumulator input; required when ``beta != 0``.
+        config: the kernel parametrization (register tile, work-group,
+            local-memory schedule).
+        interpret: run the Pallas interpreter (required for CPU PJRT).
+
+    Returns:
+        ``(M, N)`` result with the dtype of ``a``.
+    """
+    m = a.shape[1] if trans_a else a.shape[0]
+    k = a.shape[0] if trans_a else a.shape[1]
+    kb = b.shape[1] if trans_b else b.shape[0]
+    n = b.shape[0] if trans_b else b.shape[1]
+    if k != kb:
+        raise ValueError(f"contraction mismatch: {k} vs {kb}")
+    if c is None:
+        if beta != 0.0:
+            raise ValueError("beta != 0 requires c")
+        c = jnp.zeros((m, n), a.dtype)
+
+    bm, bn = config.block_m, config.block_n
+    # _noloc streams the whole K panel per grid cell; _loc stages
+    # cache-line-deep k-slices (the local-memory tiles of Fig. 1b).
+    bk = k if not config.use_local else min(config.block_k, k)
+
+    ap = _pad2(a, bk if trans_a else bm, bm if trans_a else bk)
+    bp = _pad2(b, bn if trans_b else bk, bk if trans_b else bn)
+    cp = _pad2(c, bm, bn)
+    mp = cp.shape[0]
+    np_ = cp.shape[1]
+    kp = ap.shape[0] if trans_a else ap.shape[1]
+    k_steps = kp // bk
+
+    a_spec = (
+        pl.BlockSpec((bk, bm), lambda i, j, s: (s, i))
+        if trans_a
+        else pl.BlockSpec((bm, bk), lambda i, j, s: (i, s))
+    )
+    b_spec = (
+        pl.BlockSpec((bn, bk), lambda i, j, s: (j, s))
+        if trans_b
+        else pl.BlockSpec((bk, bn), lambda i, j, s: (s, j))
+    )
+
+    kernel = functools.partial(
+        _gemm_kernel,
+        k_steps=k_steps,
+        alpha=float(alpha),
+        beta=float(beta),
+        trans_a=trans_a,
+        trans_b=trans_b,
+        acc_dtype=jnp.float32,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            a_spec,
+            b_spec,
+            pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=interpret,
+    )(ap, bp, cp)
+    return out[:m, :n]
+
+
+def _batched_kernel(a_ref, b_ref, o_ref, *, k_steps, acc_dtype):
+    s = pl.program_id(3)
+    prod = jax.lax.dot(
+        a_ref[0], b_ref[0], preferred_element_type=acc_dtype
+    ).astype(o_ref.dtype)[None]
+
+    @pl.when(s == 0)
+    def _init():
+        o_ref[...] = prod
+
+    @pl.when(s != 0)
+    def _accum():
+        o_ref[...] += prod
+
+
+def gemm_batched(a: jax.Array, b: jax.Array, *,
+                 config: GemmConfig = GemmConfig(),
+                 interpret: bool = True) -> jax.Array:
+    """Batched GEMM ``(G, M, K) @ (G, K, N) -> (G, M, N)``.
+
+    This is the batched multiply at the heart of the Winograd path
+    (paper §4.1.2): one independent small GEMM per transform matrix, all
+    sharing a single kernel launch with the batch as the leading grid dim.
+    """
+    g, m, k = a.shape
+    g2, k2, n = b.shape
+    if g != g2 or k != k2:
+        raise ValueError(f"batched shape mismatch: {a.shape} vs {b.shape}")
+
+    bm = min(config.block_m, m) if m >= 8 else m
+    bn = min(config.block_n, n) if n >= 8 else n
+    bk = k if not config.use_local else min(config.block_k, k)
+
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    ap = jnp.pad(a, ((0, 0), (0, pm), (0, pk))) if (pm or pk) else a
+    bp = jnp.pad(b, ((0, 0), (0, pk), (0, pn))) if (pk or pn) else b
+    mp, kp, np_ = m + pm, k + pk, n + pn
+    k_steps = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_batched_kernel, k_steps=k_steps,
+                          acc_dtype=jnp.float32),
+        grid=(g, mp // bm, np_ // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda gi, i, j, s: (gi, i, s)),
+            pl.BlockSpec((1, bk, bn), lambda gi, i, j, s: (gi, s, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda gi, i, j, s: (gi, i, j)),
+        out_shape=jax.ShapeDtypeStruct((g, mp, np_), a.dtype),
+        interpret=interpret,
+    )(ap, bp)
+    return out[:, :m, :n]

@@ -1,0 +1,87 @@
+"""im2col convolution: lower conv2d onto the parametrized GEMM (paper §4).
+
+This is the "matrix multiplies supplied by a BLAS implementation" path:
+SYCL-DNN defers to SYCL-BLAS for GEMM-backed convolutions.  Here the patch
+matrix is built with static strided slices (one per filter tap, so the
+layout is fully explicit) and multiplied by the reshaped filter through
+``gemm.gemm`` — the GEMM configuration tunes this conv path too.
+
+For 1x1 stride-1 convolutions im2col is a pure reshape, which is why the
+paper's ResNet benchmarks (dominated by 1x1 layers) favour a good GEMM
+over specialized conv kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ConvConfig, GemmConfig
+from .gemm import gemm as _gemm
+from .conv import _same_pads
+
+
+def im2col(x: jax.Array, window: int, stride: int,
+           padding: str = "SAME") -> jax.Array:
+    """Extract conv patches: ``(N, H, W, C) -> (N*out_h*out_w, R*S*C)``.
+
+    Column order is ``(r, s, c)`` row-major, matching a ``(R, S, C, K)``
+    filter reshaped to ``(R*S*C, K)``.
+    """
+    n, h, w, c = x.shape
+    r = s = window
+    if padding == "SAME":
+        ph = _same_pads(h, r, stride)
+        pw = _same_pads(w, s, stride)
+        out_h = -(-h // stride)
+        out_w = -(-w // stride)
+    elif padding == "VALID":
+        ph = pw = (0, 0)
+        out_h = (h - r) // stride + 1
+        out_w = (w - s) // stride + 1
+    else:
+        raise ValueError(f"bad padding {padding!r}")
+    xp = jnp.pad(x, ((0, 0), ph, pw, (0, 0)))
+
+    taps = []
+    for ri in range(r):
+        for si in range(s):
+            sl = jax.lax.slice(
+                xp,
+                (0, ri, si, 0),
+                (n, ri + (out_h - 1) * stride + 1,
+                 si + (out_w - 1) * stride + 1, c),
+                (1, stride, stride, 1),
+            )
+            taps.append(sl)  # (N, out_h, out_w, C)
+    # (R*S, N, out_h, out_w, C) -> (N, out_h, out_w, R*S, C)
+    patches = jnp.stack(taps, axis=0).transpose(1, 2, 3, 0, 4)
+    return patches.reshape(n * out_h * out_w, r * s * c)
+
+
+def conv2d_im2col(x: jax.Array, f: jax.Array, *,
+                  config: ConvConfig = ConvConfig(),
+                  gemm_config: GemmConfig = GemmConfig(),
+                  stride: int = 1, padding: str = "SAME",
+                  interpret: bool = True) -> jax.Array:
+    """GEMM-backed convolution via im2col."""
+    del config  # conv tiling params do not apply on this path
+    n, h, w, c = x.shape
+    r, s, cf, k = f.shape
+    if c != cf:
+        raise ValueError(f"channel mismatch: {c} vs {cf}")
+    if padding == "SAME":
+        out_h = -(-h // stride)
+        out_w = -(-w // stride)
+    else:
+        out_h = (h - r) // stride + 1
+        out_w = (w - s) // stride + 1
+
+    if (r, s, stride) == (1, 1, 1) and padding == "SAME":
+        # 1x1/s1: im2col is a pure reshape — the GEMM-dominated ResNet case.
+        cols = x.reshape(n * h * w, c)
+    else:
+        cols = im2col(x, r, stride, padding)
+    fm = f.reshape(r * s * c, k)
+    out = _gemm(cols, fm, config=gemm_config, interpret=interpret)
+    return out.reshape(n, out_h, out_w, k).astype(x.dtype)

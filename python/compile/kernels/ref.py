@@ -1,0 +1,49 @@
+"""Pure-jnp correctness oracles for every kernel in this package.
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (``assert_allclose``), and the "hand-tuned vendor library" stand-in
+on the host: XLA's native ``dot`` / ``conv_general_dilated`` lowerings are
+the best-tuned implementations available on this hardware, playing the role
+clBLAST / ARM Compute Library / MKL-DNN play in the paper's comparisons.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm_ref(a: jax.Array, b: jax.Array, c: Optional[jax.Array] = None, *,
+             alpha: float = 1.0, beta: float = 0.0,
+             trans_a: bool = False, trans_b: bool = False) -> jax.Array:
+    """Reference GEMM: ``alpha * OP_a(a) @ OP_b(b) + beta * c``."""
+    op_a = a.T if trans_a else a
+    op_b = b.T if trans_b else b
+    out = alpha * jnp.matmul(op_a, op_b)
+    if c is not None and beta != 0.0:
+        out = out + beta * c
+    return out.astype(a.dtype)
+
+
+def gemm_batched_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference batched GEMM ``(G, M, K) @ (G, K, N)``."""
+    return jnp.einsum("gmk,gkn->gmn", a, b).astype(a.dtype)
+
+
+def conv2d_ref(x: jax.Array, f: jax.Array, *, stride: int = 1,
+               padding: str = "SAME") -> jax.Array:
+    """Reference NHWC x RSCK convolution via XLA's native lowering."""
+    return jax.lax.conv_general_dilated(
+        x,
+        f,
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def winograd_domain_ok(window: int, stride: int) -> bool:
+    """Winograd applies to 3x3 stride-1 convolutions only (paper §4.1.2)."""
+    return window == 3 and stride == 1

@@ -1,0 +1,184 @@
+"""Winograd fast convolution F(m x m, 3 x 3) (paper §4.1.2).
+
+Lavin & Gray's formulation: the input is split into overlapping
+``(m+2) x (m+2)`` tiles; input and filter are transformed
+(``V = B^T d B``, ``U = G g G^T``), the convolution becomes
+``(m+2)^2`` independent *batched matrix multiplies* ``M_ij = V_ij U_ij``
+of shape ``(tiles, C) x (C, K)``, and the output transform
+``Y = A^T M A`` recovers ``m x m`` output tiles.
+
+The tile size ``m`` is the parametrization knob the paper discusses:
+larger ``m`` gives more data reuse and fewer flops per output, but more
+intermediate matrices each of smaller size — harder to keep a device busy —
+and more registers per thread.  We provide F(2x2, 3x3) and F(4x4, 3x3).
+
+The batched multiply — the bulk of the compute — goes through the
+parametrized Pallas GEMM (``gemm.gemm_batched``), so the GEMM configuration
+chosen by the tuner applies here too, exactly as SYCL-DNN's Winograd path
+leans on SYCL-BLAS (paper §4.1.2 last paragraph).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ConvConfig, GemmConfig
+from .gemm import gemm_batched as _gemm_batched
+
+# F(2x2, 3x3): alpha = 4.
+_BT_2 = np.array(
+    [
+        [1, 0, -1, 0],
+        [0, 1, 1, 0],
+        [0, -1, 1, 0],
+        [0, 1, 0, -1],
+    ],
+    np.float32,
+)
+_G_2 = np.array(
+    [
+        [1, 0, 0],
+        [0.5, 0.5, 0.5],
+        [0.5, -0.5, 0.5],
+        [0, 0, 1],
+    ],
+    np.float32,
+)
+_AT_2 = np.array(
+    [
+        [1, 1, 1, 0],
+        [0, 1, -1, -1],
+    ],
+    np.float32,
+)
+
+# F(4x4, 3x3): alpha = 6 (Lavin & Gray, CVPR'16).
+_BT_4 = np.array(
+    [
+        [4, 0, -5, 0, 1, 0],
+        [0, -4, -4, 1, 1, 0],
+        [0, 4, -4, -1, 1, 0],
+        [0, -2, -1, 2, 1, 0],
+        [0, 2, -1, -2, 1, 0],
+        [0, 4, 0, -5, 0, 1],
+    ],
+    np.float32,
+)
+_G_4 = np.array(
+    [
+        [1 / 4, 0, 0],
+        [-1 / 6, -1 / 6, -1 / 6],
+        [-1 / 6, 1 / 6, -1 / 6],
+        [1 / 24, 1 / 12, 1 / 6],
+        [1 / 24, -1 / 12, 1 / 6],
+        [0, 0, 1],
+    ],
+    np.float32,
+)
+_AT_4 = np.array(
+    [
+        [1, 1, 1, 1, 1, 0],
+        [0, 1, -1, 2, -2, 0],
+        [0, 1, 1, 4, 4, 0],
+        [0, 1, -1, 8, -8, 1],
+    ],
+    np.float32,
+)
+
+_TRANSFORMS = {2: (_BT_2, _G_2, _AT_2), 4: (_BT_4, _G_4, _AT_4)}
+
+
+def transform_matrices(m: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Return ``(B^T, G, A^T)`` for F(m x m, 3 x 3)."""
+    if m not in _TRANSFORMS:
+        raise ValueError(f"unsupported Winograd tile m={m}; choose 2 or 4")
+    return _TRANSFORMS[m]
+
+
+def winograd_flops(n: int, h: int, w: int, c: int, k: int, m: int) -> int:
+    """Multiply-add flops of the batched-GEMM stage (transform flops excluded).
+
+    The paper quotes the Winograd op-count reduction "to as little as 30%";
+    this is the number our benchmarks use for the effective-gigaflops
+    normalization (figures report *convolution* flops / time, as the paper
+    does, so a faster algorithm shows as higher effective gigaflops).
+    """
+    alpha = m + 2
+    tiles = -(-h // m) * (-(-w // m)) * n
+    return 2 * alpha * alpha * tiles * c * k
+
+
+def extract_tiles(x: jax.Array, m: int) -> jax.Array:
+    """Split a SAME-padded NHWC input into overlapping Winograd tiles.
+
+    Returns ``(alpha, alpha, N, Ht, Wt, C)`` where
+    ``tiles[xi, nu, n, th, tw, c] = x_pad[n, th*m + xi, tw*m + nu, c]``.
+    """
+    n, h, w, c = x.shape
+    alpha = m + 2
+    ht = -(-h // m)
+    wt = -(-w // m)
+    # SAME padding for 3x3/s1 is 1 on each side; additionally round the
+    # spatial dims up to tile multiples.
+    xp = jnp.pad(x, ((0, 0), (1, m * ht + 2 - h - 1), (1, m * wt + 2 - w - 1), (0, 0)))
+
+    rows = []
+    for xi in range(alpha):
+        cols = []
+        for nu in range(alpha):
+            sl = jax.lax.slice(
+                xp,
+                (0, xi, nu, 0),
+                (n, xi + (ht - 1) * m + 1, nu + (wt - 1) * m + 1, c),
+                (1, m, m, 1),
+            )
+            cols.append(sl)
+        rows.append(jnp.stack(cols, axis=0))
+    return jnp.stack(rows, axis=0)  # (alpha, alpha, N, Ht, Wt, C)
+
+
+def conv2d_winograd(x: jax.Array, f: jax.Array, *,
+                    config: ConvConfig = ConvConfig(),
+                    gemm_config: GemmConfig = GemmConfig(),
+                    interpret: bool = True) -> jax.Array:
+    """Winograd convolution for 3x3 stride-1 SAME layers.
+
+    Args:
+        x: ``(N, H, W, C)`` input.
+        f: ``(3, 3, C, K)`` filter.
+        config: ``wino_m`` selects F(2x2,3x3) or F(4x4,3x3).
+        gemm_config: parametrization of the batched-multiply stage.
+    """
+    n, h, w, c = x.shape
+    r, s, cf, k = f.shape
+    if (r, s) != (3, 3):
+        raise ValueError("winograd path requires a 3x3 filter")
+    if c != cf:
+        raise ValueError(f"channel mismatch: {c} vs {cf}")
+    m = config.wino_m
+    bt, g, at = (jnp.asarray(t) for t in transform_matrices(m))
+    alpha = m + 2
+    ht = -(-h // m)
+    wt = -(-w // m)
+
+    d = extract_tiles(x, m)  # (alpha, alpha, N, Ht, Wt, C)
+    # Input transform V = B^T d B over the two tile axes.
+    v = jnp.einsum("ia,jb,abntwc->ijntwc", bt, bt, d)
+    # Filter transform U = G g G^T.
+    u = jnp.einsum("ia,jb,abck->ijck", g, g, f)
+
+    # Batched multiply: alpha^2 matrices of (N*Ht*Wt, C) x (C, K).
+    v2 = v.reshape(alpha * alpha, n * ht * wt, c)
+    u2 = u.reshape(alpha * alpha, c, k)
+    mm = _gemm_batched(v2, u2, config=gemm_config, interpret=interpret)
+    mm = mm.reshape(alpha, alpha, n, ht, wt, k)
+
+    # Output transform Y = A^T M A.
+    y = jnp.einsum("ia,jb,abntwk->ntiwjk", at, at, mm)
+    # (N, Ht, m, Wt, m, K) -> (N, Ht*m, Wt*m, K), crop to the true output.
+    y = y.reshape(n, ht * m, wt * m, k)
+    return y[:, :h, :w, :].astype(x.dtype)

@@ -1,0 +1,211 @@
+"""Artifact build manifests: which kernel instantiations get AOT-compiled.
+
+Each entry names one HLO artifact — one (operation, shape, configuration)
+instantiation of a parametrized kernel, exactly as the paper's SYCL library
+instantiates one OpenCL kernel per template-parameter combination.  The
+Rust coordinator discovers artifacts through the ``manifest.json`` this
+module describes.
+
+Groups:
+
+* ``core``      — quickstart + the artifacts integration tests need.
+* ``gemm``      — the measured GEMM sweep (Fig. 4/5 anchor points):
+                  Table-2 configurations x bench shapes + vendor baseline.
+* ``conv``      — representative Table-3/4 layers x algorithms (Fig. 6-9
+                  anchor points) + vendor baseline.
+* ``network``   — per-layer artifacts for the end-to-end network driver.
+
+Interpret-mode Pallas lowers to a serial XLA while-loop, so huge spatial
+grids execute slowly on the host; layers whose measured variant would be
+impractically slow are *spatially scaled* (channels untouched — they, not
+the spatial extent, determine the GEMM/conv regime) and tagged with
+``scaled_from`` so reports normalize by the scaled flop count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .configs import (ConvAlgorithm, ConvConfig, GemmConfig, LayerSpec,
+                      RESNET_LAYERS, TABLE2_CONFIGS, VGG_LAYERS)
+
+#: GEMM problem sizes measured on the host (anchors for the Fig. 4/5 sweeps).
+GEMM_BENCH_SHAPES: Tuple[Tuple[int, int, int], ...] = (
+    (64, 64, 64),
+    (256, 256, 256),
+    (512, 512, 512),
+    (1024, 1024, 64),
+    (64, 64, 1024),
+)
+
+#: GEMM configuration backing measured im2col/winograd conv artifacts.
+#: Large blocks keep the interpret-mode grid small (128x128 macro-tiles ->
+#: tens of grid steps instead of tens of thousands), which is what makes
+#: the measured conv sweep tractable on the host.
+CONV_GEMM = GemmConfig(rt_m=8, rt_n=8, wg_r=16, wg_c=16, block_k=64)
+
+#: Conv configurations measured per layer ("SYCL-DNN" side of Fig. 6-9).
+CONV_TILE = ConvConfig(tile_h=2, tile_w=2, vec_c=1, vec_k=1,
+                       algorithm=ConvAlgorithm.TILED)
+CONV_TILE_4x4 = ConvConfig(tile_h=4, tile_w=4, vec_c=1, vec_k=1,
+                           algorithm=ConvAlgorithm.TILED)
+CONV_IM2COL = ConvConfig(algorithm=ConvAlgorithm.IM2COL)
+CONV_WINO = ConvConfig(algorithm=ConvAlgorithm.WINOGRAD, wino_m=2)
+
+#: Max spatial extent measured through the interpreter per algorithm.
+_MAX_HW_PALLAS = 56
+
+
+@dataclass(frozen=True)
+class ManifestEntry:
+    """One artifact to build.  ``params`` are kind-specific."""
+
+    name: str
+    kind: str  # "gemm" | "conv"
+    impl: str  # "pallas" | "xla"
+    groups: Tuple[str, ...]
+    # GEMM params
+    m: int = 0
+    n: int = 0
+    k: int = 0
+    gemm_config: Optional[GemmConfig] = None
+    alpha: float = 1.0
+    beta: float = 0.0
+    with_c: bool = False
+    # Conv params
+    layer: Optional[LayerSpec] = None
+    batch: int = 1
+    conv_config: Optional[ConvConfig] = None
+    conv_gemm_config: Optional[GemmConfig] = None
+    fuse_relu: bool = False
+    scaled_from: Optional[str] = None
+
+
+def _scale_layer(layer: LayerSpec, max_hw: int) -> Tuple[LayerSpec, Optional[str]]:
+    """Clamp a layer's spatial extent for interpreter-speed measurement."""
+    if layer.in_h <= max_hw and layer.in_w <= max_hw:
+        return layer, None
+    scaled = dataclasses.replace(layer, in_h=max_hw, in_w=max_hw)
+    return scaled, f"{layer.in_h}x{layer.in_w}"
+
+
+def gemm_entries() -> List[ManifestEntry]:
+    entries: List[ManifestEntry] = []
+    for (m, n, k) in GEMM_BENCH_SHAPES:
+        for cfg in TABLE2_CONFIGS:
+            entries.append(ManifestEntry(
+                name=f"gemm_{m}x{n}x{k}_{cfg.name}",
+                kind="gemm", impl="pallas", groups=("gemm",),
+                m=m, n=n, k=k, gemm_config=cfg))
+        entries.append(ManifestEntry(
+            name=f"gemm_{m}x{n}x{k}_xla",
+            kind="gemm", impl="xla", groups=("gemm",),
+            m=m, n=n, k=k, gemm_config=GemmConfig()))
+    return entries
+
+
+#: Representative layers measured per algorithm (cover every regime in
+#: Tables 3/4: stem 7x7/s2, pointwise 1x1, 3x3/s1 at several widths,
+#: 3x3/s2 downsampling).
+CONV_BENCH_LAYERS: Tuple[Tuple[str, LayerSpec], ...] = tuple(
+    [("vgg", l) for l in VGG_LAYERS if l.name in
+     ("conv1_1", "conv3_1", "conv4_2", "conv5_1")] +
+    [("resnet", l) for l in RESNET_LAYERS if l.name in
+     ("conv1_1", "conv2_2", "conv2_3", "conv2_5", "conv3_2", "conv4_4",
+      "conv5_2", "conv5_4")]
+)
+
+
+def conv_entries() -> List[ManifestEntry]:
+    entries: List[ManifestEntry] = []
+    for net, layer in CONV_BENCH_LAYERS:
+        base = f"{net}_{layer.name}"
+        # Vendor baseline at full size (XLA conv executes fast).
+        entries.append(ManifestEntry(
+            name=f"conv_{base}_xla", kind="conv", impl="xla",
+            groups=("conv", "network"), layer=layer, batch=1))
+        scaled, src = _scale_layer(layer, _MAX_HW_PALLAS)
+        algs: List[Tuple[str, ConvConfig]] = [
+            ("tiled2x2", CONV_TILE),
+            ("tiled4x4", CONV_TILE_4x4),
+            ("im2col", CONV_IM2COL),
+        ]
+        if layer.window == 3 and layer.stride == 1:
+            algs.append(("wino2", CONV_WINO))
+        for tag, ccfg in algs:
+            entries.append(ManifestEntry(
+                name=f"conv_{base}_{tag}", kind="conv", impl="pallas",
+                groups=("conv",), layer=scaled, batch=1, conv_config=ccfg,
+                conv_gemm_config=CONV_GEMM, scaled_from=src))
+    return entries
+
+
+def network_entries() -> List[ManifestEntry]:
+    """Per-layer artifacts for the end-to-end network inference driver.
+
+    The driver runs *every* distinct layer of both networks through the
+    vendor-baseline path (fast everywhere) and through the tuned Pallas
+    path where the interpreter cost is practical.
+    """
+    entries: List[ManifestEntry] = []
+    for net, layers in (("vgg", VGG_LAYERS), ("resnet", RESNET_LAYERS)):
+        for layer in layers:
+            entries.append(ManifestEntry(
+                name=f"net_{net}_{layer.name}_xla", kind="conv", impl="xla",
+                groups=("network",), layer=layer, batch=1, fuse_relu=True))
+            if max(layer.in_h, layer.in_w) <= 28 and layer.window == 1:
+                # Pointwise layers lower to a single pallas GEMM — cheap
+                # enough to run everywhere at full size.
+                entries.append(ManifestEntry(
+                    name=f"net_{net}_{layer.name}_pallas", kind="conv",
+                    impl="pallas", groups=("network",), layer=layer,
+                    batch=1, conv_config=CONV_IM2COL,
+                    conv_gemm_config=CONV_GEMM, fuse_relu=True))
+    return entries
+
+
+def core_entries() -> List[ManifestEntry]:
+    return [
+        ManifestEntry(
+            name="quickstart_gemm", kind="gemm", impl="pallas",
+            groups=("core",), m=64, n=64, k=64,
+            gemm_config=GemmConfig.parse("4x4_8x8_loc")),
+        ManifestEntry(
+            name="test_gemm_ab", kind="gemm", impl="pallas",
+            groups=("core",), m=48, n=32, k=40,
+            gemm_config=GemmConfig.parse("8x4_8x16_loc"),
+            alpha=1.5, beta=0.5, with_c=True),
+        ManifestEntry(
+            name="test_conv_tiled", kind="conv", impl="pallas",
+            groups=("core",),
+            layer=LayerSpec("smoke", 3, 1, 14, 14, 8, 16),
+            batch=2, conv_config=CONV_TILE),
+        ManifestEntry(
+            name="test_conv_xla", kind="conv", impl="xla", groups=("core",),
+            layer=LayerSpec("smoke", 3, 1, 14, 14, 8, 16), batch=2),
+        ManifestEntry(
+            name="test_conv_wino", kind="conv", impl="pallas",
+            groups=("core",),
+            layer=LayerSpec("smoke", 3, 1, 14, 14, 8, 16),
+            batch=2, conv_config=CONV_WINO),
+    ]
+
+
+def all_entries() -> List[ManifestEntry]:
+    seen: Dict[str, ManifestEntry] = {}
+    for e in core_entries() + gemm_entries() + conv_entries() + network_entries():
+        if e.name in seen:
+            raise ValueError(f"duplicate manifest entry {e.name}")
+        seen[e.name] = e
+    return list(seen.values())
+
+
+def select(groups: Sequence[str]) -> List[ManifestEntry]:
+    """Entries belonging to any of the requested groups ('all' = everything)."""
+    entries = all_entries()
+    if "all" in groups:
+        return entries
+    want = set(groups)
+    return [e for e in entries if want & set(e.groups)]

@@ -1,0 +1,141 @@
+"""Layer-2 JAX compute graphs: convolution layers and network segments.
+
+These are the functions that get AOT-lowered to HLO artifacts.  Each one
+composes Layer-1 Pallas kernels with (cheap, XLA-fused) glue: algorithm
+dispatch, bias + ReLU epilogues, and multi-layer segments.  Python only
+ever runs at build time; the Rust coordinator executes the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ConvAlgorithm, ConvConfig, GemmConfig, LayerSpec
+from .kernels.gemm import gemm as _gemm
+from .kernels.conv import conv2d as _conv2d
+from .kernels.im2col import conv2d_im2col as _conv2d_im2col
+from .kernels.winograd import conv2d_winograd as _conv2d_winograd
+from .kernels import ref as ref_kernels
+
+
+def gemm_op(a, b, c=None, *, config: GemmConfig = GemmConfig(),
+            alpha: float = 1.0, beta: float = 0.0,
+            trans_a: bool = False, trans_b: bool = False,
+            interpret: bool = True):
+    """The BLAS GEMM entry point lowered into artifacts."""
+    return _gemm(a, b, c, config=config, alpha=alpha, beta=beta,
+                     trans_a=trans_a, trans_b=trans_b, interpret=interpret)
+
+
+def gemm_op_xla(a, b, c=None, *, alpha: float = 1.0, beta: float = 0.0,
+                trans_a: bool = False, trans_b: bool = False):
+    """Vendor-baseline GEMM: XLA's native dot (the clBLAST stand-in)."""
+    return ref_kernels.gemm_ref(a, b, c, alpha=alpha, beta=beta,
+                                trans_a=trans_a, trans_b=trans_b)
+
+
+def conv_layer(x, f, *, config: ConvConfig, stride: int = 1,
+               padding: str = "SAME", gemm_config: GemmConfig = GemmConfig(),
+               interpret: bool = True):
+    """Algorithm-dispatched convolution layer (paper §4.1)."""
+    alg = config.algorithm
+    if alg in (ConvAlgorithm.TILED, ConvAlgorithm.NAIVE):
+        return _conv2d(x, f, config=config, stride=stride,
+                           padding=padding, interpret=interpret)
+    if alg == ConvAlgorithm.IM2COL:
+        return _conv2d_im2col(x, f, config=config,
+                                    gemm_config=gemm_config, stride=stride,
+                                    padding=padding, interpret=interpret)
+    if alg == ConvAlgorithm.WINOGRAD:
+        if not ref_kernels.winograd_domain_ok(f.shape[0], stride):
+            raise ValueError("winograd requires 3x3 stride-1")
+        return _conv2d_winograd(x, f, config=config,
+                                        gemm_config=gemm_config,
+                                        interpret=interpret)
+    raise ValueError(f"unknown algorithm {alg}")
+
+
+def conv_layer_xla(x, f, *, stride: int = 1, padding: str = "SAME"):
+    """Vendor-baseline convolution: XLA's native conv lowering."""
+    return ref_kernels.conv2d_ref(x, f, stride=stride, padding=padding)
+
+
+def conv_bias_relu(x, f, bias, *, config: ConvConfig, stride: int = 1,
+                   padding: str = "SAME",
+                   gemm_config: GemmConfig = GemmConfig(),
+                   interpret: bool = True):
+    """Conv + bias + ReLU, the fused inference epilogue used by networks."""
+    y = conv_layer(x, f, config=config, stride=stride, padding=padding,
+                   gemm_config=gemm_config, interpret=interpret)
+    return jnp.maximum(y + bias, 0.0)
+
+
+def layer_fn(layer: LayerSpec, batch: int, *, config: ConvConfig,
+             gemm_config: GemmConfig = GemmConfig(), fuse_relu: bool = True,
+             interpret: bool = True):
+    """Build the jittable function + example args for one Table-3/4 layer."""
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, layer.in_h, layer.in_w, layer.in_c), jnp.float32)
+    f_spec = jax.ShapeDtypeStruct(
+        (layer.window, layer.window, layer.in_c, layer.out_c), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((layer.out_c,), jnp.float32)
+
+    if fuse_relu:
+        def fn(x, f, b):
+            return (conv_bias_relu(x, f, b, config=config,
+                                   stride=layer.stride,
+                                   padding=layer.padding,
+                                   gemm_config=gemm_config,
+                                   interpret=interpret),)
+        return fn, (x_spec, f_spec, b_spec)
+
+    def fn(x, f):
+        return (conv_layer(x, f, config=config, stride=layer.stride,
+                           padding=layer.padding, gemm_config=gemm_config,
+                           interpret=interpret),)
+    return fn, (x_spec, f_spec)
+
+
+def layer_fn_xla(layer: LayerSpec, batch: int, *, fuse_relu: bool = True):
+    """Vendor-baseline variant of :func:`layer_fn`."""
+    x_spec = jax.ShapeDtypeStruct(
+        (batch, layer.in_h, layer.in_w, layer.in_c), jnp.float32)
+    f_spec = jax.ShapeDtypeStruct(
+        (layer.window, layer.window, layer.in_c, layer.out_c), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((layer.out_c,), jnp.float32)
+    if fuse_relu:
+        def fn(x, f, b):
+            y = conv_layer_xla(x, f, stride=layer.stride,
+                               padding=layer.padding)
+            return (jnp.maximum(y + b, 0.0),)
+        return fn, (x_spec, f_spec, b_spec)
+
+    def fn(x, f):
+        return (conv_layer_xla(x, f, stride=layer.stride,
+                               padding=layer.padding),)
+    return fn, (x_spec, f_spec)
+
+
+def gemm_fn(m: int, n: int, k: int, *, config: GemmConfig,
+            alpha: float = 1.0, beta: float = 0.0, with_c: bool = False,
+            xla_native: bool = False, interpret: bool = True):
+    """Build the jittable GEMM + example args for an (M, N, K) problem."""
+    a_spec = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    b_spec = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    if with_c:
+        c_spec = jax.ShapeDtypeStruct((m, n), jnp.float32)
+
+        def fn(a, b, c):
+            if xla_native:
+                return (gemm_op_xla(a, b, c, alpha=alpha, beta=beta),)
+            return (gemm_op(a, b, c, config=config, alpha=alpha, beta=beta,
+                            interpret=interpret),)
+        return fn, (a_spec, b_spec, c_spec)
+
+    def fn(a, b):
+        if xla_native:
+            return (gemm_op_xla(a, b, alpha=alpha),)
+        return (gemm_op(a, b, config=config, alpha=alpha,
+                        interpret=interpret),)
+    return fn, (a_spec, b_spec)

@@ -1,0 +1,1 @@
+// filled in later

@@ -1,0 +1,141 @@
+"""Tiled direct convolution kernel vs XLA reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ConvConfig
+from compile.kernels import conv2d, conv2d_naive, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestConvWindows:
+    """Every window/stride/padding combination from Tables 3 & 4."""
+
+    @pytest.mark.parametrize("window,stride,padding", [
+        (1, 1, "SAME"),   # ResNet pointwise
+        (3, 1, "SAME"),   # VGG / ResNet 3x3
+        (3, 2, "SAME"),   # ResNet downsampling 3x3
+        (7, 2, "VALID"),  # ResNet stem on the pre-padded 230x230 input
+        (5, 1, "SAME"),
+        (1, 2, "SAME"),
+    ])
+    def test_window_stride(self, window, stride, padding):
+        x = _rand(0, (2, 15, 15, 8))
+        f = _rand(1, (window, window, 8, 12))
+        cfg = ConvConfig(tile_h=2, tile_w=2)
+        out = conv2d(x, f, config=cfg, stride=stride, padding=padding)
+        r = ref.conv2d_ref(x, f, stride=stride, padding=padding)
+        assert out.shape == r.shape
+        np.testing.assert_allclose(out, r, **TOL)
+
+
+class TestConvTiles:
+    """Tile size is a pure performance knob — results must be identical."""
+
+    @pytest.mark.parametrize("tile", [(1, 1), (1, 4), (4, 1), (2, 2),
+                                      (3, 3), (4, 5), (5, 4), (7, 7)])
+    def test_tile_sweep(self, tile):
+        x = _rand(0, (1, 14, 14, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        cfg = ConvConfig(tile_h=tile[0], tile_w=tile[1])
+        out = conv2d(x, f, config=cfg)
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, f), **TOL)
+
+    @pytest.mark.parametrize("vec_c,vec_k", [(1, 1), (2, 2), (4, 2), (4, 4)])
+    def test_vector_widths_inert(self, vec_c, vec_k):
+        """vec_c/vec_k shape the hardware mapping, not the math."""
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        base = conv2d(x, f, config=ConvConfig(tile_h=2, tile_w=2))
+        out = conv2d(x, f, config=ConvConfig(tile_h=2, tile_w=2,
+                                             vec_c=vec_c, vec_k=vec_k))
+        np.testing.assert_allclose(out, base, rtol=0, atol=0)
+
+    def test_vec_must_divide_channels(self):
+        x = _rand(0, (1, 8, 8, 3))
+        f = _rand(1, (3, 3, 3, 8))
+        with pytest.raises(ValueError, match="vector widths"):
+            conv2d(x, f, config=ConvConfig(vec_c=2))
+
+    def test_block_k_splits_features(self):
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 16))
+        out = conv2d(x, f, config=ConvConfig(tile_h=2, tile_w=2, block_k=4))
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, f), **TOL)
+
+    def test_block_k_must_divide(self):
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 16))
+        with pytest.raises(ValueError, match="block_k"):
+            conv2d(x, f, config=ConvConfig(block_k=5))
+
+    def test_tile_larger_than_output_clamps(self):
+        x = _rand(0, (1, 4, 4, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        out = conv2d(x, f, config=ConvConfig(tile_h=16, tile_w=16))
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, f), **TOL)
+
+
+class TestConvNaive:
+    def test_naive_matches_tiled(self):
+        """Algorithm 1 (one output element per thread) is the 1x1 tile."""
+        x = _rand(0, (1, 6, 6, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        naive = conv2d_naive(x, f)
+        tiled = conv2d(x, f, config=ConvConfig(tile_h=3, tile_w=3))
+        np.testing.assert_allclose(naive, tiled, **TOL)
+        np.testing.assert_allclose(naive, ref.conv2d_ref(x, f), **TOL)
+
+
+class TestConvErrors:
+    def test_rect_window_rejected(self):
+        with pytest.raises(ValueError, match="square"):
+            conv2d(_rand(0, (1, 8, 8, 4)), _rand(1, (3, 5, 4, 8)))
+
+    def test_channel_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="channel"):
+            conv2d(_rand(0, (1, 8, 8, 4)), _rand(1, (3, 3, 5, 8)))
+
+    def test_bad_padding_rejected(self):
+        with pytest.raises(ValueError, match="padding"):
+            conv2d(_rand(0, (1, 8, 8, 4)), _rand(1, (3, 3, 4, 8)),
+                   padding="CIRCULAR")
+
+
+class TestConvProperty:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.integers(4, 20), w=st.integers(4, 20),
+        c=st.sampled_from([1, 3, 4, 8]), k=st.sampled_from([1, 4, 8]),
+        window=st.sampled_from([1, 3, 5]), stride=st.sampled_from([1, 2]),
+        tile_h=st.integers(1, 4), tile_w=st.integers(1, 4),
+    )
+    def test_random_configs(self, h, w, c, k, window, stride, tile_h, tile_w):
+        x = _rand(h * 31 + w, (1, h, w, c))
+        f = _rand(c * 5 + k, (window, window, c, k))
+        cfg = ConvConfig(tile_h=tile_h, tile_w=tile_w)
+        out = conv2d(x, f, config=cfg, stride=stride)
+        r = ref.conv2d_ref(x, f, stride=stride)
+        assert out.shape == r.shape
+        np.testing.assert_allclose(out, r, **TOL)
+
+    @settings(max_examples=10, deadline=None)
+    @given(scale=st.floats(0.125, 8.0))
+    def test_linearity(self, scale):
+        """conv(s*x) == s*conv(x): catches accumulation-order bugs."""
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        cfg = ConvConfig(tile_h=2, tile_w=2)
+        np.testing.assert_allclose(
+            conv2d(scale * x, f, config=cfg),
+            scale * conv2d(x, f, config=cfg), rtol=1e-3, atol=1e-3)

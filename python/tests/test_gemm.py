@@ -1,0 +1,172 @@
+"""GEMM Pallas kernel vs pure-jnp oracle — the core correctness signal.
+
+The paper's central claim is that the *parametrization never changes the
+mathematics*: every configuration of the kernel family must agree with the
+reference.  Hypothesis sweeps shapes and configurations.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import DEFAULT_CACHE_LINE_ELEMS, GemmConfig, TABLE2_CONFIGS
+from compile.kernels import gemm, gemm_batched, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestGemmConfigs:
+    """Every Table-2 configuration computes the same product."""
+
+    @pytest.mark.parametrize("cfg", TABLE2_CONFIGS, ids=lambda c: c.name)
+    def test_table2_config(self, cfg):
+        a, b = _rand(0, (96, 48)), _rand(1, (48, 64))
+        out = gemm(a, b, config=cfg)
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), **TOL)
+
+    @pytest.mark.parametrize("cfg", TABLE2_CONFIGS, ids=lambda c: c.name)
+    def test_table2_config_alpha_beta(self, cfg):
+        a, b, c = _rand(0, (80, 40)), _rand(1, (40, 56)), _rand(2, (80, 56))
+        out = gemm(a, b, c, config=cfg, alpha=1.5, beta=-0.5)
+        np.testing.assert_allclose(
+            out, ref.gemm_ref(a, b, c, alpha=1.5, beta=-0.5), **TOL)
+
+    def test_double_buffer_config_same_result(self):
+        """double_buffer is a schedule hint, never a numerics change."""
+        a, b = _rand(0, (64, 64)), _rand(1, (64, 64))
+        base = GemmConfig.parse("8x4_8x16_loc")
+        db = GemmConfig.parse("8x4_8x16_loc_db")
+        np.testing.assert_allclose(
+            gemm(a, b, config=base), gemm(a, b, config=db), rtol=0, atol=0)
+
+
+class TestGemmOps:
+    @pytest.mark.parametrize("ta,tb", [(False, False), (True, False),
+                                       (False, True), (True, True)])
+    def test_transposes(self, ta, tb):
+        m, n, k = 72, 56, 40
+        a = _rand(0, (k, m) if ta else (m, k))
+        b = _rand(1, (n, k) if tb else (k, n))
+        c = _rand(2, (m, n))
+        out = gemm(a, b, c, alpha=2.0, beta=1.0, trans_a=ta, trans_b=tb)
+        np.testing.assert_allclose(
+            ref.gemm_ref(a, b, c, alpha=2.0, beta=1.0, trans_a=ta,
+                         trans_b=tb), out, **TOL)
+
+    def test_beta_without_c_raises(self):
+        a, b = _rand(0, (8, 8)), _rand(1, (8, 8))
+        with pytest.raises(ValueError, match="beta"):
+            gemm(a, b, beta=0.5)
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(ValueError, match="contraction"):
+            gemm(_rand(0, (8, 9)), _rand(1, (8, 8)))
+
+    def test_beta_only(self):
+        """alpha=0 reduces to a scaled copy of C."""
+        a, b, c = _rand(0, (32, 16)), _rand(1, (16, 24)), _rand(2, (32, 24))
+        out = gemm(a, b, c, alpha=0.0, beta=3.0)
+        np.testing.assert_allclose(out, 3.0 * c, **TOL)
+
+    def test_identity(self):
+        eye = jnp.eye(48, dtype=jnp.float32)
+        b = _rand(1, (48, 32))
+        np.testing.assert_allclose(gemm(eye, b), b, **TOL)
+
+
+class TestGemmShapes:
+    """Padding correctness: sizes that are not block multiples."""
+
+    @pytest.mark.parametrize("m,n,k", [
+        (1, 1, 1), (7, 5, 3), (33, 65, 17), (64, 64, 64),
+        (100, 50, 70), (129, 127, 65),
+    ])
+    def test_odd_shapes(self, m, n, k):
+        a, b = _rand(0, (m, k)), _rand(1, (k, n))
+        np.testing.assert_allclose(gemm(a, b), ref.gemm_ref(a, b), **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 150), n=st.integers(1, 150), k=st.integers(1, 100),
+        rt_m=st.sampled_from([1, 2, 4, 8]), rt_n=st.sampled_from([1, 2, 4, 8]),
+        wg_r=st.sampled_from([2, 4, 8]), wg_c=st.sampled_from([2, 4, 8]),
+        use_local=st.booleans(),
+    )
+    def test_property_shapes_and_configs(self, m, n, k, rt_m, rt_n, wg_r,
+                                         wg_c, use_local):
+        cfg = GemmConfig(rt_m=rt_m, rt_n=rt_n, wg_r=wg_r, wg_c=wg_c,
+                         use_local=use_local)
+        a, b = _rand(m * 7 + n, (m, k)), _rand(k * 3 + 1, (k, n))
+        out = gemm(a, b, config=cfg)
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), **TOL)
+
+
+class TestGemmBatched:
+    @pytest.mark.parametrize("g,m,n,k", [(1, 16, 16, 16), (4, 33, 29, 17),
+                                         (16, 8, 8, 8), (3, 100, 20, 50)])
+    def test_batched(self, g, m, n, k):
+        a, b = _rand(0, (g, m, k)), _rand(1, (g, k, n))
+        np.testing.assert_allclose(
+            gemm_batched(a, b), ref.gemm_batched_ref(a, b), **TOL)
+
+    def test_batched_mismatch_raises(self):
+        with pytest.raises(ValueError, match="batched"):
+            gemm_batched(_rand(0, (2, 8, 8)), _rand(1, (3, 8, 8)))
+
+
+class TestConfigSchema:
+    def test_parse_roundtrip(self):
+        for cfg in TABLE2_CONFIGS:
+            assert GemmConfig.parse(cfg.name) == cfg
+
+    def test_parse_rejects_garbage(self):
+        for bad in ["", "4x4", "4x4_8x8_bogus"]:
+            with pytest.raises(ValueError):
+                GemmConfig.parse(bad)
+
+    def test_table2_registers_column(self):
+        """Paper Table 2 'Registers' column."""
+        regs = {c.name: c.registers for c in TABLE2_CONFIGS}
+        assert regs["4x4_8x8_loc"] == 16
+        assert regs["4x4_16x16_loc"] == 16
+        assert regs["8x4_8x16_loc"] == 32
+        assert regs["8x2_4x16_loc"] == 16
+        assert regs["8x4_8x16_noloc"] == 32
+        assert regs["8x4_4x8_noloc"] == 32
+        assert regs["4x4_8x8_noloc"] == 16
+
+    def test_table2_workgroup_column(self):
+        """Paper Table 2 'Work group' column."""
+        wgs = {c.name: c.work_group for c in TABLE2_CONFIGS}
+        assert wgs["4x4_8x8_loc"] == 64
+        assert wgs["4x4_16x16_loc"] == 256
+        assert wgs["8x4_8x16_loc"] == 128
+        assert wgs["8x2_4x16_loc"] == 64
+        assert wgs["8x4_8x16_noloc"] == 128
+        assert wgs["8x4_4x8_noloc"] == 32
+        assert wgs["4x4_8x8_noloc"] == 64
+
+    def test_table2_localmem_column(self):
+        """Paper Table 2 'Local mem' column (KiB of f32 elements)."""
+        x = DEFAULT_CACHE_LINE_ELEMS
+        kib = {c.name: c.local_mem_elems(x) * 4 / 1024 for c in TABLE2_CONFIGS}
+        assert kib["4x4_8x8_loc"] == 8
+        assert kib["4x4_16x16_loc"] == 16
+        assert kib["8x4_8x16_loc"] == 16
+        assert kib["8x2_4x16_loc"] == 8
+        assert kib["8x4_8x16_noloc"] == 0
+        assert kib["8x4_4x8_noloc"] == 0
+        assert kib["4x4_8x8_noloc"] == 0
+
+    def test_double_buffer_doubles_local_mem(self):
+        base = GemmConfig.parse("8x4_8x16_loc")
+        db = GemmConfig.parse("8x4_8x16_loc_db")
+        assert db.local_mem_elems() == 2 * base.local_mem_elems()

@@ -1,0 +1,83 @@
+"""im2col/GEMM-backed convolution vs XLA reference (paper §4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import GemmConfig
+from compile.kernels import conv2d_im2col, im2col, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestIm2col:
+    def test_patch_shape(self):
+        x = _rand(0, (2, 10, 12, 3))
+        cols = im2col(x, 3, 1, "SAME")
+        assert cols.shape == (2 * 10 * 12, 3 * 3 * 3)
+
+    def test_patch_shape_strided(self):
+        x = _rand(0, (1, 8, 8, 4))
+        cols = im2col(x, 3, 2, "SAME")
+        assert cols.shape == (4 * 4, 36)
+
+    def test_patch_values_center_tap(self):
+        """The center tap of a 3x3 SAME patch matrix is the input itself."""
+        x = _rand(0, (1, 6, 6, 2))
+        cols = im2col(x, 3, 1, "SAME")
+        cols = cols.reshape(6 * 6, 9, 2)
+        center = cols[:, 4, :].reshape(6, 6, 2)
+        np.testing.assert_allclose(center, x[0], rtol=0, atol=0)
+
+    def test_valid_padding(self):
+        x = _rand(0, (1, 9, 9, 2))
+        cols = im2col(x, 3, 1, "VALID")
+        assert cols.shape == (7 * 7, 18)
+
+
+class TestConvIm2col:
+    @pytest.mark.parametrize("window,stride,padding", [
+        (1, 1, "SAME"), (3, 1, "SAME"), (3, 2, "SAME"), (7, 2, "VALID"),
+    ])
+    def test_matches_reference(self, window, stride, padding):
+        x = _rand(0, (2, 15, 15, 8))
+        f = _rand(1, (window, window, 8, 12))
+        out = conv2d_im2col(x, f, stride=stride, padding=padding)
+        r = ref.conv2d_ref(x, f, stride=stride, padding=padding)
+        assert out.shape == r.shape
+        np.testing.assert_allclose(out, r, **TOL)
+
+    def test_gemm_config_inert(self):
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        a = conv2d_im2col(x, f, gemm_config=GemmConfig.parse("4x4_8x8_loc"))
+        b = conv2d_im2col(x, f,
+                          gemm_config=GemmConfig.parse("8x4_8x16_noloc"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_pointwise_fast_path(self):
+        """1x1/s1 im2col must be a pure reshape (same numbers as GEMM)."""
+        x = _rand(0, (2, 7, 7, 16))
+        f = _rand(1, (1, 1, 16, 32))
+        out = conv2d_im2col(x, f)
+        r = ref.conv2d_ref(x, f)
+        np.testing.assert_allclose(out, r, **TOL)
+
+    @settings(max_examples=15, deadline=None)
+    @given(h=st.integers(3, 16), w=st.integers(3, 16),
+           c=st.sampled_from([1, 4]), k=st.sampled_from([1, 8]),
+           window=st.sampled_from([1, 3]), stride=st.sampled_from([1, 2]))
+    def test_property(self, h, w, c, k, window, stride):
+        x = _rand(h * 13 + w, (1, h, w, c))
+        f = _rand(7, (window, window, c, k))
+        out = conv2d_im2col(x, f, stride=stride)
+        np.testing.assert_allclose(
+            out, ref.conv2d_ref(x, f, stride=stride), **TOL)

@@ -1,0 +1,158 @@
+"""Network layer tables (paper Tables 3 & 4) and L2 layer graphs."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.configs import (ConvAlgorithm, ConvConfig, GemmConfig,
+                             LayerSpec, RESNET_LAYERS, VGG_LAYERS)
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+class TestVggTable:
+    """Paper Table 3."""
+
+    def test_layer_count(self):
+        assert len(VGG_LAYERS) == 9
+
+    def test_all_3x3_stride1(self):
+        assert all(l.window == 3 and l.stride == 1 for l in VGG_LAYERS)
+
+    @pytest.mark.parametrize("name,out", [
+        ("conv1_1", (224, 224, 64)), ("conv2_1", (112, 112, 128)),
+        ("conv3_2", (56, 56, 256)), ("conv4_2", (28, 28, 512)),
+        ("conv5_1", (14, 14, 512)),
+    ])
+    def test_output_shapes(self, name, out):
+        layer = next(l for l in VGG_LAYERS if l.name == name)
+        assert (layer.out_h, layer.out_w, layer.out_c) == out
+
+
+class TestResnetTable:
+    """Paper Table 4."""
+
+    def test_layer_count(self):
+        assert len(RESNET_LAYERS) == 26
+
+    def test_stem(self):
+        stem = RESNET_LAYERS[0]
+        assert (stem.window, stem.stride) == (7, 2)
+        assert (stem.in_h, stem.in_w, stem.in_c) == (230, 230, 3)
+        assert (stem.out_h, stem.out_w, stem.out_c) == (112, 112, 64)
+
+    @pytest.mark.parametrize("name,out", [
+        ("conv2_5", (28, 28, 64)),   # 3x3/s2 SAME: 56 -> 28
+        ("conv3_7", (14, 14, 128)),
+        ("conv4_7", (7, 7, 256)),
+        ("conv5_2", (7, 7, 2048)),
+    ])
+    def test_output_shapes(self, name, out):
+        layer = next(l for l in RESNET_LAYERS if l.name == name)
+        assert (layer.out_h, layer.out_w, layer.out_c) == out
+
+    def test_pointwise_majority(self):
+        """ResNet is dominated by 1x1 convolutions — the GEMM-bound case
+        the paper's §5.3 discussion hinges on."""
+        ones = sum(1 for l in RESNET_LAYERS if l.window == 1)
+        assert ones == 18  # 18 of 26 distinct layers are pointwise
+
+
+class TestFlops:
+    def test_flops_formula(self):
+        l = LayerSpec("t", 3, 1, 8, 8, 4, 16)
+        assert l.flops(batch=2) == 2 * 2 * 8 * 8 * 16 * 3 * 3 * 4
+
+    def test_flops_scale_with_batch(self):
+        l = VGG_LAYERS[0]
+        assert l.flops(batch=4) == 4 * l.flops(batch=1)
+
+
+def _scaled(layer: LayerSpec, hw: int = 14) -> LayerSpec:
+    """Shrink a layer spatially (channels intact) for interpreter speed."""
+    if layer.padding == "VALID":
+        hw = hw + layer.window - layer.stride
+    return dataclasses.replace(layer, in_h=hw, in_w=hw)
+
+
+class TestLayerFn:
+    """L2 graphs produce reference numerics for every algorithm."""
+
+    @pytest.mark.parametrize("alg", [ConvAlgorithm.TILED,
+                                     ConvAlgorithm.IM2COL,
+                                     ConvAlgorithm.WINOGRAD])
+    def test_vgg_layer(self, alg):
+        layer = _scaled(dataclasses.replace(VGG_LAYERS[0], name="t"))
+        cfg = ConvConfig(tile_h=2, tile_w=2, algorithm=alg)
+        fn, specs = model.layer_fn(layer, batch=1, config=cfg)
+        args = [jax.random.normal(jax.random.PRNGKey(i), s.shape, s.dtype)
+                for i, s in enumerate(specs)]
+        (out,) = fn(*args)
+        expected = jnp.maximum(
+            ref.conv2d_ref(args[0], args[1], stride=1) + args[2], 0.0)
+        np.testing.assert_allclose(out, expected, rtol=2e-3, atol=2e-3)
+
+    @pytest.mark.parametrize("idx", [0, 1, 3, 5])  # stem, 1x1, 3x3, 3x3/s2
+    def test_resnet_layers(self, idx):
+        layer = _scaled(RESNET_LAYERS[idx])
+        cfg = ConvConfig(tile_h=2, tile_w=2, algorithm=ConvAlgorithm.TILED)
+        fn, specs = model.layer_fn(layer, batch=1, config=cfg,
+                                   fuse_relu=False)
+        args = [jax.random.normal(jax.random.PRNGKey(i), s.shape, s.dtype)
+                for i, s in enumerate(specs)]
+        (out,) = fn(*args)
+        expected = ref.conv2d_ref(args[0], args[1], stride=layer.stride,
+                                  padding=layer.padding)
+        assert out.shape == expected.shape
+        np.testing.assert_allclose(out, expected, **TOL)
+
+    def test_xla_variant_matches(self):
+        layer = _scaled(RESNET_LAYERS[2])
+        fn, specs = model.layer_fn_xla(layer, batch=1)
+        args = [jax.random.normal(jax.random.PRNGKey(i), s.shape, s.dtype)
+                for i, s in enumerate(specs)]
+        (out,) = fn(*args)
+        expected = jnp.maximum(
+            ref.conv2d_ref(args[0], args[1]) + args[2], 0.0)
+        np.testing.assert_allclose(out, expected, **TOL)
+
+    def test_winograd_rejected_for_non_3x3(self):
+        layer = _scaled(RESNET_LAYERS[1])  # 1x1
+        cfg = ConvConfig(algorithm=ConvAlgorithm.WINOGRAD)
+        fn, specs = model.layer_fn(layer, batch=1, config=cfg)
+        args = [jnp.zeros(s.shape, s.dtype) for s in specs]
+        with pytest.raises(ValueError, match="winograd"):
+            fn(*args)
+
+
+class TestGemmFn:
+    def test_gemm_fn(self):
+        fn, specs = model.gemm_fn(32, 24, 16, config=GemmConfig())
+        a = jax.random.normal(jax.random.PRNGKey(0), specs[0].shape)
+        b = jax.random.normal(jax.random.PRNGKey(1), specs[1].shape)
+        (out,) = fn(a, b)
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), **TOL)
+
+    def test_gemm_fn_xla_native(self):
+        fn, specs = model.gemm_fn(32, 24, 16, config=GemmConfig(),
+                                  xla_native=True)
+        a = jax.random.normal(jax.random.PRNGKey(0), specs[0].shape)
+        b = jax.random.normal(jax.random.PRNGKey(1), specs[1].shape)
+        (out,) = fn(a, b)
+        np.testing.assert_allclose(out, ref.gemm_ref(a, b), **TOL)
+
+    def test_gemm_fn_with_c(self):
+        fn, specs = model.gemm_fn(16, 16, 16, config=GemmConfig(),
+                                  alpha=1.5, beta=0.5, with_c=True)
+        args = [jax.random.normal(jax.random.PRNGKey(i), s.shape)
+                for i, s in enumerate(specs)]
+        (out,) = fn(*args)
+        np.testing.assert_allclose(
+            out, ref.gemm_ref(*args, alpha=1.5, beta=0.5), **TOL)

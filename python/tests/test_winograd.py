@@ -1,0 +1,109 @@
+"""Winograd F(m x m, 3 x 3) convolution vs XLA reference (paper §4.1.2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import ConvAlgorithm, ConvConfig, GemmConfig
+from compile.kernels import conv2d_winograd, ref, transform_matrices, winograd_flops
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Winograd trades flops for numerical headroom; F(4,3) in particular has
+# larger transform constants, so the tolerance is looser than direct conv.
+TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _wcfg(m):
+    return ConvConfig(algorithm=ConvAlgorithm.WINOGRAD, wino_m=m)
+
+
+class TestTransformMatrices:
+    @pytest.mark.parametrize("m", [2, 4])
+    def test_transform_correctness_1d(self, m):
+        """A^T [ (B^T d) * (G g) ] == conv1d(d, g) for all unit vectors.
+
+        This is the defining identity of the Cook-Toom/Winograd transform;
+        checking it on a basis checks it everywhere (bilinearity).
+        """
+        bt, g, at = transform_matrices(m)
+        alpha = m + 2
+        for di in range(alpha):
+            for gi in range(3):
+                d = np.zeros(alpha, np.float32); d[di] = 1.0
+                ker = np.zeros(3, np.float32); ker[gi] = 1.0
+                out = at @ ((bt @ d) * (g @ ker))
+                expected = np.array(
+                    [sum(d[o + j] * ker[j] for j in range(3))
+                     for o in range(m)], np.float32)
+                np.testing.assert_allclose(out, expected, rtol=1e-5,
+                                           atol=1e-5)
+
+    def test_unsupported_m_raises(self):
+        with pytest.raises(ValueError, match="Winograd tile"):
+            transform_matrices(3)
+
+
+class TestWinogradConv:
+    @pytest.mark.parametrize("m", [2, 4])
+    @pytest.mark.parametrize("hw", [(4, 4), (8, 8), (14, 14), (7, 9)])
+    def test_matches_reference(self, m, hw):
+        x = _rand(0, (2, hw[0], hw[1], 4))
+        f = _rand(1, (3, 3, 4, 8))
+        out = conv2d_winograd(x, f, config=_wcfg(m))
+        r = ref.conv2d_ref(x, f, stride=1, padding="SAME")
+        assert out.shape == r.shape
+        np.testing.assert_allclose(out, r, **TOL)
+
+    @pytest.mark.parametrize("m", [2, 4])
+    def test_gemm_config_inert(self, m):
+        """The batched-GEMM parametrization must not change results."""
+        x = _rand(0, (1, 8, 8, 4))
+        f = _rand(1, (3, 3, 4, 8))
+        a = conv2d_winograd(x, f, config=_wcfg(m),
+                            gemm_config=GemmConfig.parse("4x4_8x8_loc"))
+        b = conv2d_winograd(x, f, config=_wcfg(m),
+                            gemm_config=GemmConfig.parse("8x4_4x8_noloc"))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+    def test_non_3x3_rejected(self):
+        with pytest.raises(ValueError, match="3x3"):
+            conv2d_winograd(_rand(0, (1, 8, 8, 4)), _rand(1, (5, 5, 4, 8)),
+                            config=_wcfg(2))
+
+    def test_channel_mismatch_rejected(self):
+        with pytest.raises(ValueError, match="channel"):
+            conv2d_winograd(_rand(0, (1, 8, 8, 4)), _rand(1, (3, 3, 5, 8)),
+                            config=_wcfg(2))
+
+    @settings(max_examples=10, deadline=None)
+    @given(h=st.integers(4, 16), w=st.integers(4, 16),
+           c=st.sampled_from([1, 4]), k=st.sampled_from([1, 8]),
+           m=st.sampled_from([2, 4]))
+    def test_property_shapes(self, h, w, c, k, m):
+        x = _rand(h * 17 + w, (1, h, w, c))
+        f = _rand(3, (3, 3, c, k))
+        out = conv2d_winograd(x, f, config=_wcfg(m))
+        np.testing.assert_allclose(
+            out, ref.conv2d_ref(x, f, stride=1, padding="SAME"), **TOL)
+
+
+class TestWinogradFlops:
+    def test_flop_reduction(self):
+        """Paper: Winograd cuts op count "to as little as 30%".
+
+        F(4x4, 3x3): 36 multiplies per 16 outputs vs 144 direct -> 25%
+        (plus transforms); F(2x2, 3x3): 16 vs 36 -> 44%.
+        """
+        n, h, w, c, k = 1, 56, 56, 64, 64
+        direct = 2 * n * h * w * k * 9 * c
+        f2 = winograd_flops(n, h, w, c, k, 2)
+        f4 = winograd_flops(n, h, w, c, k, 4)
+        assert f2 / direct == pytest.approx(16 / 36, rel=0.01)
+        assert f4 / direct == pytest.approx(36 / 144, rel=0.01)

@@ -1,0 +1,71 @@
+//! Bench: paper Figures 2 & 3 — conv register usage and the tile/vector
+//! throughput sweep — plus measured conv-algorithm anchors on the host.
+//!
+//! Run: `cargo bench --bench conv_sweep`.
+
+use std::path::Path;
+
+use portable_kernels::harness::{fig_conv, fig_registers, Report};
+use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::util::bench::bench;
+
+fn modeled() {
+    let reports = Path::new("reports");
+    let f2 = fig_registers::fig2();
+    f2.save_csv(&reports.join("fig2.csv")).unwrap();
+    println!("modeled fig2: {} rows -> reports/fig2.csv", f2.rows.len());
+
+    let f3 = fig_conv::fig3();
+    f3.save_csv(&reports.join("fig3.csv")).unwrap();
+    println!("modeled fig3: {} rows -> reports/fig3.csv", f3.rows.len());
+    for note in &f3.notes {
+        println!("  note: {note}");
+    }
+}
+
+/// Measured: the same layer through naive/tiled/im2col/winograd Pallas
+/// kernels and the XLA vendor baseline — the host anchor for Fig. 3's
+/// "algorithm and tile choice matter" story.
+fn measured() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("measured part skipped: run `make artifacts`");
+        return;
+    }
+    let store = ArtifactStore::open(dir).unwrap();
+    let mut engine = Engine::new(store).unwrap();
+
+    let mut table = Report::new(
+        "measured conv algorithms (PJRT CPU, best of 3)",
+        &["artifact", "algorithm", "ms", "effective GF/s", "scaled"],
+    );
+    let names: Vec<String> = engine
+        .store()
+        .in_group("conv")
+        .map(|m| m.name.clone())
+        .collect();
+    for name in names {
+        let meta = engine.store().get(&name).unwrap().clone();
+        let inputs = engine.synth_inputs(&name, 29).unwrap();
+        engine.warm(&name).unwrap();
+        let stats = bench(&name, 1, 2, || {
+            engine.run(&name, &inputs).unwrap();
+        });
+        table.row(vec![
+            meta.name.clone(),
+            meta.algorithm.clone().unwrap_or_default(),
+            format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+            format!("{:.2}", stats.gflops(meta.flops)),
+            meta.scaled_from.clone().unwrap_or_default(),
+        ]);
+    }
+    println!("\n{}", table.render());
+    table
+        .save_csv(Path::new("reports/conv_measured.csv"))
+        .expect("write csv");
+}
+
+fn main() {
+    modeled();
+    measured();
+}

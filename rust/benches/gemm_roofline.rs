@@ -1,0 +1,92 @@
+//! Bench: paper Figures 4a-c and 5a-d — the GEMM roofline sweeps.
+//!
+//! Two parts:
+//! 1. **Modeled** sweeps for the paper's devices (Intel UHD 630, Mali
+//!    G-71) — regenerated instantly from the analytic model, CSV to
+//!    `reports/`.
+//! 2. **Measured** anchors on the host: the Table-2 Pallas GEMM artifacts
+//!    vs the XLA-native vendor baseline, executed through PJRT.
+//!
+//! Run: `cargo bench --bench gemm_roofline` (artifacts required for the
+//! measured part; it degrades gracefully without them).
+
+use std::path::Path;
+
+use portable_kernels::config::GemmConfig;
+use portable_kernels::device::device_by_name;
+use portable_kernels::harness::{fig_gemm, Report};
+use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::util::bench::bench;
+
+fn modeled() {
+    let reports_dir = Path::new("reports");
+    for (name, report) in [
+        ("fig4a", fig_gemm::fig4a()),
+        ("fig4b", fig_gemm::fig4b()),
+        ("fig4c", fig_gemm::fig4c()),
+        ("fig5a", fig_gemm::fig5a()),
+        ("fig5_regions", fig_gemm::fig5_regions()),
+    ] {
+        report
+            .save_csv(&reports_dir.join(format!("{name}.csv")))
+            .expect("write csv");
+        println!("modeled {name}: {} rows -> reports/{name}.csv", report.rows.len());
+        for note in &report.notes {
+            println!("  note: {note}");
+        }
+    }
+    // Print the condensed fig4a comparison at the largest size.
+    let dev = device_by_name("uhd630").unwrap();
+    println!("\nfig4a @1024^3 (modeled GF on {}):", dev.id);
+    for cfg in GemmConfig::table2() {
+        use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
+        let p = GemmProblem::new(1024, 1024, 1024);
+        match gemm_estimate(&dev, p, &cfg) {
+            Ok(e) => println!("  {:<16} {:>8.1}", cfg.name(), e.gflops),
+            Err(_) => println!("  {:<16} infeasible", cfg.name()),
+        }
+    }
+}
+
+fn measured() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("measured part skipped: run `make artifacts`");
+        return;
+    }
+    let store = ArtifactStore::open(dir).unwrap();
+    let mut engine = Engine::new(store).unwrap();
+
+    let mut table = Report::new(
+        "measured GEMM anchors (PJRT CPU, best of 5)",
+        &["artifact", "config", "ms", "GF/s"],
+    );
+    let names: Vec<String> = engine
+        .store()
+        .in_group("gemm")
+        .map(|m| m.name.clone())
+        .collect();
+    for name in names {
+        let meta = engine.store().get(&name).unwrap().clone();
+        let inputs = engine.synth_inputs(&name, 13).unwrap();
+        engine.warm(&name).unwrap();
+        let stats = bench(&name, 1, 3, || {
+            engine.run(&name, &inputs).unwrap();
+        });
+        table.row(vec![
+            meta.name.clone(),
+            meta.config.clone().unwrap_or_else(|| "xla".into()),
+            format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+            format!("{:.2}", stats.gflops(meta.flops)),
+        ]);
+    }
+    println!("\n{}", table.render());
+    table
+        .save_csv(Path::new("reports/gemm_measured.csv"))
+        .expect("write csv");
+}
+
+fn main() {
+    modeled();
+    measured();
+}

@@ -1,0 +1,82 @@
+//! Bench: paper Figures 6-9 — per-layer network gigaflops.
+//!
+//! Modeled on the paper's two testbeds (HiKey 960, i7-6700K), measured on
+//! the host through the coordinator's network runner.
+//!
+//! Run: `cargo bench --bench network_layers`.
+
+use std::path::Path;
+
+use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
+use portable_kernels::harness::{fig_network, Report};
+use portable_kernels::runtime::ArtifactStore;
+
+fn modeled() {
+    let reports = Path::new("reports");
+    for (fid, net, bed) in [
+        ("fig6", "resnet", "hikey960"),
+        ("fig7", "resnet", "i7-6700k"),
+        ("fig8", "vgg", "hikey960"),
+        ("fig9", "vgg", "i7-6700k"),
+    ] {
+        let r = fig_network::fig_network(net, bed).unwrap();
+        r.save_csv(&reports.join(format!("{fid}.csv"))).unwrap();
+        println!("modeled {fid}: {} layers -> reports/{fid}.csv", r.rows.len());
+        for note in &r.notes {
+            println!("  note: {note}");
+        }
+    }
+}
+
+fn measured() {
+    let dir = Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("measured part skipped: run `make artifacts`");
+        return;
+    }
+    let store = ArtifactStore::open(dir).unwrap();
+    let (handle, join) = EngineHandle::spawn(dir).unwrap();
+    let runner = NetworkRunner::new(handle.clone());
+
+    for net in ["resnet", "vgg"] {
+        for implementation in ["xla", "pallas"] {
+            if NetworkRunner::available_layers(&store, net, implementation)
+                .is_empty()
+            {
+                continue;
+            }
+            let rep = runner
+                .run_network(&store, net, implementation, 3)
+                .unwrap();
+            let mut table = Report::new(
+                &format!("measured {net}/{implementation} per-layer (PJRT CPU)"),
+                &["layer", "ms", "GF/s"],
+            );
+            for l in &rep.layers {
+                table.row(vec![
+                    l.layer.clone(),
+                    format!("{:.2}", l.elapsed_s * 1e3),
+                    format!("{:.2}", l.gflops),
+                ]);
+            }
+            table.note(format!(
+                "total {:.1} ms, {:.2} GF/s",
+                rep.total_time_s * 1e3,
+                rep.total_gflops()
+            ));
+            println!("{}", table.render());
+            table
+                .save_csv(Path::new(&format!(
+                    "reports/network_{net}_{implementation}_measured.csv"
+                )))
+                .unwrap();
+        }
+    }
+    handle.shutdown();
+    let _ = join.join();
+}
+
+fn main() {
+    modeled();
+    measured();
+}

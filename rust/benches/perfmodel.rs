@@ -1,0 +1,48 @@
+//! Bench: the analytic model + tuner themselves (the coordinator-side hot
+//! path: a full exhaustive tune must be cheap enough to run at startup).
+//!
+//! Run: `cargo bench --bench perfmodel`.
+
+use portable_kernels::config::GemmConfig;
+use portable_kernels::device::device_by_name;
+use portable_kernels::nn::ConvLayer;
+use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
+use portable_kernels::tuner::{tune_conv, tune_gemm, ExhaustiveSearch, HillClimb};
+use portable_kernels::util::bench::{bench, black_box};
+
+fn main() {
+    let dev = device_by_name("mali-g71").unwrap();
+    let p = GemmProblem::new(512, 512, 512);
+    let cfg = GemmConfig::parse("8x4_8x16_loc").unwrap();
+
+    let s = bench("gemm_estimate (single)", 100, 1000, || {
+        black_box(gemm_estimate(&dev, p, &cfg).unwrap());
+    });
+    println!("{}", s.line(None));
+
+    let s = bench("tune_gemm exhaustive (432 configs)", 2, 30, || {
+        black_box(tune_gemm(&dev, p, &ExhaustiveSearch).unwrap());
+    });
+    println!("{}", s.line(None));
+
+    let s = bench("tune_gemm hillclimb", 2, 30, || {
+        black_box(
+            tune_gemm(&dev, p, &HillClimb { restarts: 8, seed: 42 }).unwrap(),
+        );
+    });
+    println!("{}", s.line(None));
+
+    let layer = ConvLayer::same("bench", 3, 1, 56, 56, 128, 256);
+    let s = bench("tune_conv exhaustive (incl. nested gemm tune)", 1, 10, || {
+        black_box(tune_conv(&dev, &layer, 1, &ExhaustiveSearch).unwrap());
+    });
+    println!("{}", s.line(None));
+
+    // Whole-network tuning cost (the startup path of the coordinator).
+    let s = bench("tune all 26 resnet layers", 1, 3, || {
+        for l in portable_kernels::nn::resnet50_layers() {
+            black_box(tune_conv(&dev, &l, 1, &ExhaustiveSearch).unwrap());
+        }
+    });
+    println!("{}", s.line(None));
+}

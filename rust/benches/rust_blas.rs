@@ -1,0 +1,43 @@
+//! Bench: the host-Rust GEMM baselines (naive vs blocked) — the "native
+//! library" comparator and a sanity check that blocking pays on the host
+//! exactly as §3.1.1 predicts.
+//!
+//! Run: `cargo bench --bench rust_blas`.
+
+use portable_kernels::blas::{gemm_blocked, gemm_naive, BlockedParams};
+use portable_kernels::util::bench::{bench, black_box};
+use portable_kernels::util::rng::XorShift;
+
+fn main() {
+    for &n in &[64usize, 128, 256, 512] {
+        let mut rng = XorShift::new(n as u64);
+        let a = rng.f32_vec(n * n);
+        let b = rng.f32_vec(n * n);
+        let flops = 2 * (n as u64).pow(3);
+
+        let s = bench(&format!("naive {n}^3"), 1, 5, || {
+            black_box(gemm_naive(&a, &b, n, n, n));
+        });
+        println!("{}", s.line(Some(flops)));
+
+        for params in [
+            BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8 },
+            BlockedParams::default(),
+            BlockedParams { bm: 128, bn: 128, bk: 64, mr: 8, nr: 16 },
+        ] {
+            let s = bench(
+                &format!(
+                    "blocked {n}^3 bm{} bn{} bk{} {}x{}",
+                    params.bm, params.bn, params.bk, params.mr, params.nr
+                ),
+                1,
+                5,
+                || {
+                    black_box(gemm_blocked(&a, &b, n, n, n, &params));
+                },
+            );
+            println!("{}", s.line(Some(flops)));
+        }
+        println!();
+    }
+}

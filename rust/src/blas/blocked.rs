@@ -1,0 +1,231 @@
+//! Blocked/tiled host GEMM — the paper's §3.1.1 scheme on the CPU.
+//!
+//! The same parametrization as the device kernel (macro-tile, register
+//! micro-tile, k-panel), instantiated for a cache hierarchy instead of
+//! local memory: `bm x bn` macro-tiles sized for L2, `bk` panels for L1,
+//! and a `4 x 4`-ish register micro-kernel the compiler can vectorize.
+
+/// Blocking parameters (the CPU analogue of `GemmConfig`).
+#[derive(Debug, Clone, Copy)]
+pub struct BlockedParams {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+    /// Register micro-tile rows.
+    pub mr: usize,
+    /// Register micro-tile columns.
+    pub nr: usize,
+}
+
+impl Default for BlockedParams {
+    fn default() -> Self {
+        Self { bm: 64, bn: 64, bk: 64, mr: 4, nr: 8 }
+    }
+}
+
+/// `C = A @ B`, row-major, blocked per `params`.
+///
+/// The A macro-panel is packed `mr`-row-interleaved before the micro
+/// kernels run (EXPERIMENTS.md §Perf: the unpacked version walked A with
+/// stride `k` in the innermost loop and ran *slower* than the naive
+/// kernel; packing is the paper's "local memory staging" played on a
+/// cache hierarchy).
+pub fn gemm_blocked(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+) -> Vec<f32> {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    let mut c = vec![0.0f32; m * n];
+    let &BlockedParams { bm, bn, bk, mr, nr } = params;
+    // Packed A panel: strips of `mr` rows, column-major within the strip
+    // so the micro-kernel reads it sequentially.  Ragged strips are
+    // zero-padded to `mr` rows, so size for the rounded-up strip count.
+    let mut apack =
+        vec![0.0f32; bm.max(mr).div_ceil(mr) * mr * bk.max(1)];
+
+    for i0 in (0..m).step_by(bm) {
+        let i1 = (i0 + bm).min(m);
+        for p0 in (0..k).step_by(bk) {
+            let p1 = (p0 + bk).min(k);
+            pack_a(a, &mut apack, k, i0, i1, p0, p1, mr);
+            for j0 in (0..n).step_by(bn) {
+                let j1 = (j0 + bn).min(n);
+                // Macro-tile: micro-kernels over mr x nr register tiles.
+                let mut i = i0;
+                while i < i1 {
+                    let ie = (i + mr).min(i1);
+                    let strip =
+                        ((i - i0) / mr) * (mr * (p1 - p0));
+                    let mut j = j0;
+                    while j < j1 {
+                        let je = (j + nr).min(j1);
+                        // Full tiles go through a monomorphized kernel
+                        // whose accumulator stays in registers
+                        // (EXPERIMENTS.md §Perf blas-2); ragged edges
+                        // take the generic path.
+                        let full = ie - i == mr && je - j == nr;
+                        match (full, mr, nr) {
+                            (true, 4, 8) => micro_kernel_fixed::<4, 8>(
+                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
+                            ),
+                            (true, 8, 8) => micro_kernel_fixed::<8, 8>(
+                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
+                            ),
+                            (true, 8, 16) => micro_kernel_fixed::<8, 16>(
+                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
+                            ),
+                            (true, 4, 16) => micro_kernel_fixed::<4, 16>(
+                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
+                            ),
+                            _ => micro_kernel(
+                                &apack[strip..], b, &mut c, n, i, ie, j,
+                                je, p0, p1, mr,
+                            ),
+                        }
+                        j = je;
+                    }
+                    i = ie;
+                }
+            }
+        }
+    }
+    c
+}
+
+/// Pack `A[i0..i1, p0..p1]` into `mr`-row strips, k-major within each
+/// strip: `apack[strip][p * mr + r] = A[i0 + strip*mr + r, p0 + p]`.
+fn pack_a(
+    a: &[f32],
+    apack: &mut [f32],
+    k: usize,
+    i0: usize,
+    i1: usize,
+    p0: usize,
+    p1: usize,
+    mr: usize,
+) {
+    let kc = p1 - p0;
+    let mut out = 0;
+    let mut i = i0;
+    while i < i1 {
+        let rows = (i + mr).min(i1) - i;
+        for p in 0..kc {
+            for r in 0..rows {
+                apack[out] = a[(i + r) * k + p0 + p];
+                out += 1;
+            }
+            // Zero-fill ragged strips so the kernel stays branch-free.
+            for _ in rows..mr {
+                apack[out] = 0.0;
+                out += 1;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Monomorphized micro-kernel for full `MR x NR` tiles: fixed trip
+/// counts let LLVM keep the whole accumulator in vector registers.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_fixed<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..(p1 - p0) {
+        let brow: &[f32] = &b[(p0 + p) * n + j..(p0 + p) * n + j + NR];
+        let astrip = &apack[p * MR..(p + 1) * MR];
+        for r in 0..MR {
+            let aip = astrip[r];
+            for s in 0..NR {
+                acc[r][s] += aip * brow[s];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+        for s in 0..NR {
+            crow[s] += accr[s];
+        }
+    }
+}
+
+/// The register micro-kernel: accumulate `C[i..ie, j..je] += Apack_strip
+/// @ B[p0..p1, j..je]` with accumulators held in a fixed-size stack tile
+/// (the "registers" of the device kernel).  `apack` points at the strip:
+/// `apack[p * mr + r]` is `A[i + r, p0 + p]` — sequential in the p-loop.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    apack: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    ie: usize,
+    j: usize,
+    je: usize,
+    p0: usize,
+    p1: usize,
+    mr: usize,
+) {
+    // Max micro-tile is 8x16; callers keep mr<=8, nr<=16.
+    let mut acc = [[0.0f32; 16]; 8];
+    let (mh, nw) = (ie - i, je - j);
+    debug_assert!(mh <= 8 && nw <= 16);
+    for p in 0..(p1 - p0) {
+        let brow = &b[(p0 + p) * n + j..(p0 + p) * n + je];
+        let astrip = &apack[p * mr..p * mr + mh];
+        for (r, (accr, aip)) in
+            acc.iter_mut().zip(astrip.iter()).enumerate()
+        {
+            let _ = r;
+            for (s, bv) in brow.iter().enumerate() {
+                accr[s] += aip * bv;
+            }
+        }
+    }
+    for r in 0..mh {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + je];
+        for (s, cv) in crow.iter_mut().enumerate() {
+            *cv += acc[r][s];
+        }
+    }
+    let _ = nw;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{gemm_naive, max_abs_diff};
+
+    #[test]
+    fn odd_blocking_params_still_correct() {
+        let m = 37;
+        let n = 29;
+        let k = 23;
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let expected = gemm_naive(&a, &b, m, n, k);
+        for params in [
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2 },
+            BlockedParams { bm: 16, bn: 32, bk: 5, mr: 4, nr: 8 },
+            BlockedParams { bm: 64, bn: 64, bk: 64, mr: 8, nr: 16 },
+        ] {
+            let got = gemm_blocked(&a, &b, m, n, k, &params);
+            assert!(max_abs_diff(&expected, &got) < 1e-4, "{params:?}");
+        }
+    }
+}

@@ -1,0 +1,66 @@
+//! Host Rust GEMM baselines.
+//!
+//! Two roles: (1) a pure-Rust oracle to validate PJRT results against in
+//! integration tests, and (2) the "hand-written native library" comparator
+//! for the measured host benchmarks — the role MKL-DNN/ARM-CL-NEON play on
+//! the paper's CPUs.
+
+mod blocked;
+mod naive;
+
+pub use blocked::{gemm_blocked, BlockedParams};
+pub use naive::gemm_naive;
+
+/// Max |a - b| over two equal-length slices (test helper).
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f32> {
+        // xorshift: deterministic, dependency-free.
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                ((s >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive() {
+        for &(m, n, k) in &[(1, 1, 1), (17, 13, 9), (64, 64, 64), (100, 50, 70)] {
+            let a = rand_vec(m * k, 1);
+            let b = rand_vec(k * n, 2);
+            let naive = gemm_naive(&a, &b, m, n, k);
+            let blocked =
+                gemm_blocked(&a, &b, m, n, k, &BlockedParams::default());
+            assert!(
+                max_abs_diff(&naive, &blocked) < 1e-4,
+                "mismatch at {m}x{n}x{k}"
+            );
+        }
+    }
+
+    #[test]
+    fn identity_times_b_is_b() {
+        let n = 16;
+        let mut eye = vec![0.0f32; n * n];
+        for i in 0..n {
+            eye[i * n + i] = 1.0;
+        }
+        let b = rand_vec(n * n, 3);
+        let out = gemm_blocked(&eye, &b, n, n, n, &BlockedParams::default());
+        assert!(max_abs_diff(&out, &b) < 1e-6);
+    }
+}

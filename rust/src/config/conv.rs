@@ -1,0 +1,225 @@
+//! Convolution kernel configuration (paper §4.1).
+
+
+use crate::error::{Error, Result};
+
+/// Convolution algorithms provided by the library (paper §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConvAlgorithm {
+    /// Algorithm 1: one output element per thread.
+    Naive,
+    /// §4.1.1 tiled direct convolution.
+    Tiled,
+    /// Lower onto GEMM via im2col (the BLAS-backed path).
+    Im2col,
+    /// §4.1.2 Winograd/Cook-Toom fast convolution.
+    Winograd,
+}
+
+impl ConvAlgorithm {
+    /// All algorithms, in the order reports list them.
+    pub fn all() -> [ConvAlgorithm; 4] {
+        [
+            ConvAlgorithm::Naive,
+            ConvAlgorithm::Tiled,
+            ConvAlgorithm::Im2col,
+            ConvAlgorithm::Winograd,
+        ]
+    }
+
+    /// Whether this algorithm can compute the given layer shape.
+    /// Winograd applies to 3x3 stride-1 convolutions only.
+    pub fn supports(&self, window: u32, stride: u32) -> bool {
+        match self {
+            ConvAlgorithm::Winograd => window == 3 && stride == 1,
+            _ => true,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ConvAlgorithm::Naive => "naive",
+            ConvAlgorithm::Tiled => "tiled",
+            ConvAlgorithm::Im2col => "im2col",
+            ConvAlgorithm::Winograd => "winograd",
+        }
+    }
+}
+
+impl std::fmt::Display for ConvAlgorithm {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for ConvAlgorithm {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "naive" => Ok(ConvAlgorithm::Naive),
+            "tiled" => Ok(ConvAlgorithm::Tiled),
+            "im2col" => Ok(ConvAlgorithm::Im2col),
+            "winograd" => Ok(ConvAlgorithm::Winograd),
+            other => Err(Error::Config(format!("unknown algorithm {other:?}"))),
+        }
+    }
+}
+
+/// Parameters of the tiled convolution kernel family (paper §4.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ConvConfig {
+    /// Output-tile rows computed per thread.
+    pub tile_h: u32,
+    /// Output-tile columns computed per thread.
+    pub tile_w: u32,
+    /// Input-channel vector width (vector loads).
+    pub vec_c: u32,
+    /// Output-channel vector width (vector stores / accumulators).
+    pub vec_k: u32,
+    /// Output channels per grid cell (0 = all).
+    pub block_k: u32,
+    /// Which algorithm this configuration drives.
+    pub algorithm: ConvAlgorithm,
+    /// Winograd output-tile size m for F(m x m, 3 x 3).
+    pub wino_m: u32,
+}
+
+impl Default for ConvConfig {
+    fn default() -> Self {
+        Self {
+            tile_h: 1,
+            tile_w: 1,
+            vec_c: 1,
+            vec_k: 1,
+            block_k: 0,
+            algorithm: ConvAlgorithm::Tiled,
+            wino_m: 2,
+        }
+    }
+}
+
+impl ConvConfig {
+    /// A tiled configuration with the given tile and vector widths.
+    pub fn tiled(tile_h: u32, tile_w: u32, vec_c: u32, vec_k: u32) -> Self {
+        Self {
+            tile_h,
+            tile_w,
+            vec_c,
+            vec_k,
+            algorithm: ConvAlgorithm::Tiled,
+            ..Default::default()
+        }
+    }
+
+    /// The naive (Algorithm 1) configuration: 1x1 tile, scalar loads.
+    pub fn naive() -> Self {
+        Self {
+            algorithm: ConvAlgorithm::Naive,
+            ..Default::default()
+        }
+    }
+
+    /// A Winograd configuration with output tile `m`.
+    pub fn winograd(m: u32) -> Self {
+        Self {
+            algorithm: ConvAlgorithm::Winograd,
+            wino_m: m,
+            ..Default::default()
+        }
+    }
+
+    /// An im2col/GEMM-backed configuration.
+    pub fn im2col() -> Self {
+        Self {
+            algorithm: ConvAlgorithm::Im2col,
+            ..Default::default()
+        }
+    }
+
+    /// Output elements per thread.
+    pub fn outputs_per_thread(&self) -> u32 {
+        self.tile_h * self.tile_w * self.vec_k
+    }
+
+    /// Configuration name matching `python/compile/configs.py`.
+    pub fn name(&self) -> String {
+        match self.algorithm {
+            ConvAlgorithm::Winograd => {
+                format!("wino{}_v{}x{}", self.wino_m, self.vec_c, self.vec_k)
+            }
+            alg => format!(
+                "{}_{}x{}_v{}x{}",
+                alg, self.tile_h, self.tile_w, self.vec_c, self.vec_k
+            ),
+        }
+    }
+
+    /// Validate basic structural constraints.
+    pub fn validate(&self) -> Result<()> {
+        if self.tile_h == 0 || self.tile_w == 0 {
+            return Err(Error::Config("zero conv tile".into()));
+        }
+        if self.vec_c == 0 || self.vec_k == 0 {
+            return Err(Error::Config("zero vector width".into()));
+        }
+        if self.algorithm == ConvAlgorithm::Winograd
+            && !matches!(self.wino_m, 2 | 4)
+        {
+            return Err(Error::Config(format!(
+                "unsupported winograd m={}",
+                self.wino_m
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl std::fmt::Display for ConvConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algorithm_support_matrix() {
+        assert!(ConvAlgorithm::Winograd.supports(3, 1));
+        assert!(!ConvAlgorithm::Winograd.supports(3, 2));
+        assert!(!ConvAlgorithm::Winograd.supports(1, 1));
+        assert!(!ConvAlgorithm::Winograd.supports(7, 2));
+        for alg in [ConvAlgorithm::Naive, ConvAlgorithm::Tiled, ConvAlgorithm::Im2col] {
+            assert!(alg.supports(7, 2));
+            assert!(alg.supports(1, 1));
+        }
+    }
+
+    #[test]
+    fn names_match_python_schema() {
+        assert_eq!(ConvConfig::tiled(4, 5, 4, 2).name(), "tiled_4x5_v4x2");
+        assert_eq!(ConvConfig::winograd(2).name(), "wino2_v1x1");
+        assert_eq!(ConvConfig::naive().name(), "naive_1x1_v1x1");
+        assert_eq!(ConvConfig::im2col().name(), "im2col_1x1_v1x1");
+    }
+
+    #[test]
+    fn validate_rejects_bad_configs() {
+        assert!(ConvConfig { tile_h: 0, ..Default::default() }.validate().is_err());
+        assert!(ConvConfig { vec_c: 0, ..Default::default() }.validate().is_err());
+        assert!(ConvConfig { wino_m: 3, algorithm: ConvAlgorithm::Winograd, ..Default::default() }
+            .validate()
+            .is_err());
+        assert!(ConvConfig::tiled(4, 5, 4, 2).validate().is_ok());
+    }
+
+    #[test]
+    fn algorithm_roundtrip() {
+        for alg in ConvAlgorithm::all() {
+            let s = alg.to_string();
+            assert_eq!(s.parse::<ConvAlgorithm>().unwrap(), alg);
+        }
+        assert!("bogus".parse::<ConvAlgorithm>().is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! GEMM kernel configuration (paper §3.1, Table 2).
+
+
+use crate::error::{Error, Result};
+
+/// Parameters of the blocked GEMM kernel family.
+///
+/// A configuration string `hxw_rxc[_loc|_noloc][_db]` follows the paper's
+/// Table-2 naming: `h x w` is the per-thread register tile, `r x c` the
+/// work-group thread grid.  The macro-tile of C computed per work-group is
+/// therefore `(h*r) x (w*c)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmConfig {
+    /// Register-tile rows per thread (`h`).
+    pub rt_m: u32,
+    /// Register-tile columns per thread (`w`).
+    pub rt_n: u32,
+    /// Work-group thread rows (`r`).
+    pub wg_r: u32,
+    /// Work-group thread columns (`c`).
+    pub wg_c: u32,
+    /// k'-panel depth staged per iteration, in elements.
+    pub block_k: u32,
+    /// Stage A/B panels through local memory (`_loc`).
+    pub use_local: bool,
+    /// Double-buffer the local staging tiles to overlap load and compute.
+    pub double_buffer: bool,
+}
+
+impl Default for GemmConfig {
+    fn default() -> Self {
+        Self {
+            rt_m: 4,
+            rt_n: 4,
+            wg_r: 8,
+            wg_c: 8,
+            block_k: 32,
+            use_local: true,
+            double_buffer: false,
+        }
+    }
+}
+
+impl GemmConfig {
+    /// Rows of the C macro-tile per work-group.
+    pub fn block_m(&self) -> u32 {
+        self.rt_m * self.wg_r
+    }
+
+    /// Columns of the C macro-tile per work-group.
+    pub fn block_n(&self) -> u32 {
+        self.rt_n * self.wg_c
+    }
+
+    /// Accumulator registers per thread (Table 2 "Registers").
+    pub fn registers(&self) -> u32 {
+        self.rt_m * self.rt_n
+    }
+
+    /// Threads per work-group (Table 2 "Work group").
+    pub fn work_group(&self) -> u32 {
+        self.wg_r * self.wg_c
+    }
+
+    /// Local-memory footprint in **elements** for staging granularity
+    /// `x` elements (paper §5.2: `h*r*X + X*w*c`, doubled when double
+    /// buffering).  Zero for `_noloc` configurations.
+    pub fn local_mem_elems(&self, x: u32) -> u32 {
+        if !self.use_local {
+            return 0;
+        }
+        let elems = self.rt_m * self.wg_r * x + x * self.rt_n * self.wg_c;
+        if self.double_buffer {
+            2 * elems
+        } else {
+            elems
+        }
+    }
+
+    /// Local-memory footprint in bytes for f32 data.
+    pub fn local_mem_bytes(&self, x: u32) -> u32 {
+        4 * self.local_mem_elems(x)
+    }
+
+    /// Data-reuse ratio of the register tile (paper Eq. 3):
+    /// `2*m'*n' / (m' + n')` flops per element loaded.
+    pub fn reuse_ratio(&self) -> f64 {
+        let m = self.rt_m as f64;
+        let n = self.rt_n as f64;
+        2.0 * m * n / (m + n)
+    }
+
+    /// Paper-style configuration name, e.g. `8x4_8x16_loc`.
+    pub fn name(&self) -> String {
+        let tag = if self.use_local { "loc" } else { "noloc" };
+        let db = if self.double_buffer { "_db" } else { "" };
+        format!(
+            "{}x{}_{}x{}_{}{}",
+            self.rt_m, self.rt_n, self.wg_r, self.wg_c, tag, db
+        )
+    }
+
+    /// Parse a paper-style configuration string.
+    ///
+    /// (`no_run`: doctest binaries do not inherit the xla_extension
+    /// rpath in this offline environment; the same assertions run as a
+    /// unit test below.)
+    ///
+    /// ```no_run
+    /// use portable_kernels::config::GemmConfig;
+    /// let c = GemmConfig::parse("8x4_8x16_loc").unwrap();
+    /// assert_eq!((c.rt_m, c.rt_n, c.wg_r, c.wg_c), (8, 4, 8, 16));
+    /// assert!(c.use_local);
+    /// assert_eq!(c.name(), "8x4_8x16_loc");
+    /// ```
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split('_').collect();
+        if parts.len() < 2 {
+            return Err(Error::Config(format!("bad gemm config {s:?}")));
+        }
+        let pair = |p: &str| -> Result<(u32, u32)> {
+            let (a, b) = p
+                .split_once('x')
+                .ok_or_else(|| Error::Config(format!("bad tile {p:?} in {s:?}")))?;
+            let a: u32 = a
+                .parse()
+                .map_err(|_| Error::Config(format!("bad number in {s:?}")))?;
+            let b: u32 = b
+                .parse()
+                .map_err(|_| Error::Config(format!("bad number in {s:?}")))?;
+            if a == 0 || b == 0 {
+                return Err(Error::Config(format!("zero tile dim in {s:?}")));
+            }
+            Ok((a, b))
+        };
+        let (rt_m, rt_n) = pair(parts[0])?;
+        let (wg_r, wg_c) = pair(parts[1])?;
+        let mut cfg = GemmConfig {
+            rt_m,
+            rt_n,
+            wg_r,
+            wg_c,
+            ..Default::default()
+        };
+        for p in &parts[2..] {
+            match *p {
+                "loc" => cfg.use_local = true,
+                "noloc" => cfg.use_local = false,
+                "db" => cfg.double_buffer = true,
+                other => {
+                    return Err(Error::Config(format!(
+                        "bad suffix {other:?} in {s:?}"
+                    )))
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// The seven configurations evaluated in the paper (Table 2).
+    pub fn table2() -> Vec<GemmConfig> {
+        [
+            "4x4_8x8_loc",
+            "4x4_16x16_loc",
+            "8x4_8x16_loc",
+            "8x2_4x16_loc",
+            "8x4_8x16_noloc",
+            "8x4_4x8_noloc",
+            "4x4_8x8_noloc",
+        ]
+        .iter()
+        .map(|s| GemmConfig::parse(s).expect("table2 configs are valid"))
+        .collect()
+    }
+}
+
+impl std::fmt::Display for GemmConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip_table2() {
+        for cfg in GemmConfig::table2() {
+            assert_eq!(GemmConfig::parse(&cfg.name()).unwrap(), cfg);
+        }
+    }
+
+    #[test]
+    fn table2_registers_and_workgroups() {
+        // Paper Table 2 columns.
+        let by_name: std::collections::HashMap<String, GemmConfig> =
+            GemmConfig::table2()
+                .into_iter()
+                .map(|c| (c.name(), c))
+                .collect();
+        assert_eq!(by_name["4x4_8x8_loc"].registers(), 16);
+        assert_eq!(by_name["4x4_8x8_loc"].work_group(), 64);
+        assert_eq!(by_name["4x4_16x16_loc"].work_group(), 256);
+        assert_eq!(by_name["8x4_8x16_loc"].registers(), 32);
+        assert_eq!(by_name["8x4_8x16_loc"].work_group(), 128);
+        assert_eq!(by_name["8x4_4x8_noloc"].work_group(), 32);
+    }
+
+    #[test]
+    fn table2_local_mem_column() {
+        // X = 32 elements (back-solved from the paper's Table 2; see
+        // python/compile/configs.py).
+        let kib = |s: &str| GemmConfig::parse(s).unwrap().local_mem_bytes(32) / 1024;
+        assert_eq!(kib("4x4_8x8_loc"), 8);
+        assert_eq!(kib("4x4_16x16_loc"), 16);
+        assert_eq!(kib("8x4_8x16_loc"), 16);
+        assert_eq!(kib("8x2_4x16_loc"), 8);
+        assert_eq!(kib("8x4_8x16_noloc"), 0);
+    }
+
+    #[test]
+    fn double_buffer_doubles() {
+        let a = GemmConfig::parse("8x4_8x16_loc").unwrap();
+        let b = GemmConfig::parse("8x4_8x16_loc_db").unwrap();
+        assert_eq!(b.local_mem_elems(32), 2 * a.local_mem_elems(32));
+    }
+
+    #[test]
+    fn reuse_ratio_square_beats_nonsquare_at_equal_registers() {
+        // Paper Fig. 4b: 4x4 (square) vs 8x2 (non-square), both 16 regs.
+        let sq = GemmConfig::parse("4x4_8x8_loc").unwrap();
+        let ns = GemmConfig::parse("8x2_4x16_loc").unwrap();
+        assert_eq!(sq.registers(), ns.registers());
+        assert!(sq.reuse_ratio() > ns.reuse_ratio());
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "4x4", "4x4_8x8_bogus", "0x4_8x8_loc", "4_8x8_loc"] {
+            assert!(GemmConfig::parse(bad).is_err(), "{bad}");
+        }
+    }
+}

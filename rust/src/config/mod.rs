@@ -1,0 +1,15 @@
+//! Kernel configuration types — the paper's template-parameter space.
+//!
+//! A *configuration* is one instantiation of a parametrized kernel family.
+//! Tuning for a new device (the paper's headline workflow) is searching
+//! this space; the types here are shared between the analytic performance
+//! model, the tuner, and the artifact manifest (JSON schema kept in sync
+//! with `python/compile/configs.py`).
+
+mod conv;
+mod gemm;
+mod space;
+
+pub use conv::{ConvAlgorithm, ConvConfig};
+pub use gemm::GemmConfig;
+pub use space::{conv_space, gemm_space, ConvSpace, GemmSpace};

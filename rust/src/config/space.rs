@@ -1,0 +1,197 @@
+//! Configuration-space enumeration for the tuner.
+//!
+//! The paper's tuning workflow sweeps the template-parameter space and
+//! keeps what performs best per device.  These iterators define the
+//! canonical search spaces.
+
+use super::{ConvAlgorithm, ConvConfig, GemmConfig};
+
+/// The GEMM search space: register tiles x work-groups x memory schedule.
+#[derive(Debug, Clone)]
+pub struct GemmSpace {
+    /// Candidate register-tile side lengths.
+    pub reg_tiles: Vec<u32>,
+    /// Candidate work-group side lengths.
+    pub work_groups: Vec<u32>,
+    /// Whether to include `_loc` / `_noloc` / double-buffered variants.
+    pub include_local: bool,
+    pub include_noloc: bool,
+    pub include_double_buffer: bool,
+}
+
+impl Default for GemmSpace {
+    fn default() -> Self {
+        Self {
+            reg_tiles: vec![1, 2, 4, 8],
+            work_groups: vec![4, 8, 16],
+            include_local: true,
+            include_noloc: true,
+            include_double_buffer: true,
+        }
+    }
+}
+
+impl GemmSpace {
+    /// Enumerate every configuration in the space.
+    pub fn enumerate(&self) -> Vec<GemmConfig> {
+        let mut out = Vec::new();
+        for &rt_m in &self.reg_tiles {
+            for &rt_n in &self.reg_tiles {
+                for &wg_r in &self.work_groups {
+                    for &wg_c in &self.work_groups {
+                        let mut variants = Vec::new();
+                        if self.include_local {
+                            variants.push((true, false));
+                            if self.include_double_buffer {
+                                variants.push((true, true));
+                            }
+                        }
+                        if self.include_noloc {
+                            variants.push((false, false));
+                        }
+                        for (use_local, double_buffer) in variants {
+                            out.push(GemmConfig {
+                                rt_m,
+                                rt_n,
+                                wg_r,
+                                wg_c,
+                                use_local,
+                                double_buffer,
+                                ..Default::default()
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Default GEMM search space (the paper's Table-2 region and around it).
+pub fn gemm_space() -> Vec<GemmConfig> {
+    GemmSpace::default().enumerate()
+}
+
+/// The convolution search space: tiles x vector widths x algorithms
+/// (the sweep of paper Figs. 2 & 3).
+#[derive(Debug, Clone)]
+pub struct ConvSpace {
+    pub tiles_h: Vec<u32>,
+    pub tiles_w: Vec<u32>,
+    pub vecs_c: Vec<u32>,
+    pub vecs_k: Vec<u32>,
+    pub algorithms: Vec<ConvAlgorithm>,
+    pub wino_ms: Vec<u32>,
+}
+
+impl Default for ConvSpace {
+    fn default() -> Self {
+        Self {
+            tiles_h: vec![1, 2, 3, 4, 5],
+            tiles_w: vec![1, 2, 3, 4, 5],
+            vecs_c: vec![1, 2, 4],
+            vecs_k: vec![1, 2, 4],
+            algorithms: vec![
+                ConvAlgorithm::Tiled,
+                ConvAlgorithm::Im2col,
+                ConvAlgorithm::Winograd,
+            ],
+            wino_ms: vec![2, 4],
+        }
+    }
+}
+
+impl ConvSpace {
+    /// Enumerate configurations applicable to the given layer shape.
+    pub fn enumerate(&self, window: u32, stride: u32) -> Vec<ConvConfig> {
+        let mut out = Vec::new();
+        for &alg in &self.algorithms {
+            if !alg.supports(window, stride) {
+                continue;
+            }
+            match alg {
+                ConvAlgorithm::Winograd => {
+                    for &m in &self.wino_ms {
+                        for &vc in &self.vecs_c {
+                            for &vk in &self.vecs_k {
+                                out.push(ConvConfig {
+                                    algorithm: alg,
+                                    wino_m: m,
+                                    vec_c: vc,
+                                    vec_k: vk,
+                                    ..Default::default()
+                                });
+                            }
+                        }
+                    }
+                }
+                ConvAlgorithm::Im2col => out.push(ConvConfig::im2col()),
+                _ => {
+                    for &th in &self.tiles_h {
+                        for &tw in &self.tiles_w {
+                            for &vc in &self.vecs_c {
+                                for &vk in &self.vecs_k {
+                                    out.push(ConvConfig {
+                                        tile_h: th,
+                                        tile_w: tw,
+                                        vec_c: vc,
+                                        vec_k: vk,
+                                        algorithm: alg,
+                                        ..Default::default()
+                                    });
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Default convolution search space for a layer shape.
+pub fn conv_space(window: u32, stride: u32) -> Vec<ConvConfig> {
+    ConvSpace::default().enumerate(window, stride)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_space_contains_table2() {
+        let space = gemm_space();
+        for cfg in GemmConfig::table2() {
+            assert!(
+                space.contains(&cfg),
+                "table2 config {} missing from default space",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn gemm_space_size() {
+        // 4 rt x 4 rt x 3 wg x 3 wg x 3 variants (loc, loc_db, noloc)
+        assert_eq!(gemm_space().len(), 4 * 4 * 3 * 3 * 3);
+    }
+
+    #[test]
+    fn conv_space_respects_winograd_domain() {
+        let s1 = conv_space(3, 1);
+        assert!(s1.iter().any(|c| c.algorithm == ConvAlgorithm::Winograd));
+        let s2 = conv_space(3, 2);
+        assert!(!s2.iter().any(|c| c.algorithm == ConvAlgorithm::Winograd));
+        let s3 = conv_space(1, 1);
+        assert!(!s3.iter().any(|c| c.algorithm == ConvAlgorithm::Winograd));
+    }
+
+    #[test]
+    fn conv_space_all_valid(){
+        for c in conv_space(3, 1) {
+            c.validate().unwrap();
+        }
+    }
+}

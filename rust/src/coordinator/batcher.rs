@@ -1,0 +1,171 @@
+//! Request batcher: group same-artifact requests to amortize dispatch.
+//!
+//! AOT artifacts are compiled for fixed batch shapes, so "batching" here
+//! is dispatch-level: queued requests for the same artifact run
+//! back-to-back on the engine thread without interleaving compile-cache
+//! churn, and the policy decides when a group is flushed.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// When to flush a pending group.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are queued for one artifact.
+    pub max_batch: usize,
+    /// Flush any group older than this.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// One queued request.
+#[derive(Debug)]
+struct Pending<T> {
+    artifact: String,
+    payload: T,
+    enqueued: Instant,
+}
+
+/// Order-preserving, per-artifact grouping queue.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queue: VecDeque<Pending<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self { policy, queue: VecDeque::new() }
+    }
+
+    /// Enqueue a request for `artifact`.
+    pub fn push(&mut self, artifact: &str, payload: T) {
+        self.queue.push_back(Pending {
+            artifact: artifact.to_string(),
+            payload,
+            enqueued: Instant::now(),
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Whether the head group must flush now (full batch or timeout).
+    pub fn should_flush(&self, now: Instant) -> bool {
+        let Some(head) = self.queue.front() else {
+            return false;
+        };
+        if now.duration_since(head.enqueued) >= self.policy.max_delay {
+            return true;
+        }
+        self.head_group_len() >= self.policy.max_batch
+    }
+
+    fn head_group_len(&self) -> usize {
+        let Some(head) = self.queue.front() else { return 0 };
+        self.queue
+            .iter()
+            .take_while(|p| p.artifact == head.artifact)
+            .count()
+    }
+
+    /// Pop the head group: all consecutive leading requests for the same
+    /// artifact, capped at `max_batch`.  Returns (artifact, payloads).
+    pub fn pop_group(&mut self) -> Option<(String, Vec<T>)> {
+        let head = self.queue.front()?;
+        let artifact = head.artifact.clone();
+        let n = self.head_group_len().min(self.policy.max_batch);
+        let mut payloads = Vec::with_capacity(n);
+        for _ in 0..n {
+            payloads.push(self.queue.pop_front().unwrap().payload);
+        }
+        Some((artifact, payloads))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher(max_batch: usize) -> Batcher<u32> {
+        Batcher::new(BatchPolicy {
+            max_batch,
+            max_delay: Duration::from_secs(3600), // disable timeout
+        })
+    }
+
+    #[test]
+    fn groups_consecutive_same_artifact() {
+        let mut b = batcher(8);
+        b.push("a", 1);
+        b.push("a", 2);
+        b.push("b", 3);
+        b.push("a", 4);
+        let (art, group) = b.pop_group().unwrap();
+        assert_eq!(art, "a");
+        assert_eq!(group, vec![1, 2]);
+        let (art, group) = b.pop_group().unwrap();
+        assert_eq!(art, "b");
+        assert_eq!(group, vec![3]);
+        let (art, group) = b.pop_group().unwrap();
+        assert_eq!(art, "a");
+        assert_eq!(group, vec![4]);
+        assert!(b.pop_group().is_none());
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let mut b = batcher(2);
+        for i in 0..5 {
+            b.push("a", i);
+        }
+        assert!(b.should_flush(Instant::now()));
+        assert_eq!(b.pop_group().unwrap().1, vec![0, 1]);
+        assert_eq!(b.pop_group().unwrap().1, vec![2, 3]);
+        assert_eq!(b.pop_group().unwrap().1, vec![4]);
+    }
+
+    #[test]
+    fn preserves_fifo_order() {
+        let mut b = batcher(8);
+        b.push("x", 1);
+        b.push("y", 2);
+        b.push("x", 3);
+        // Head group is only the first "x": order across artifacts is
+        // never reordered past a different artifact.
+        assert_eq!(b.pop_group().unwrap().1, vec![1]);
+        assert_eq!(b.pop_group().unwrap().1, vec![2]);
+        assert_eq!(b.pop_group().unwrap().1, vec![3]);
+    }
+
+    #[test]
+    fn timeout_forces_flush() {
+        let mut b = Batcher::new(BatchPolicy {
+            max_batch: 100,
+            max_delay: Duration::from_millis(0),
+        });
+        assert!(!b.should_flush(Instant::now()));
+        b.push("a", 1);
+        assert!(b.should_flush(Instant::now()));
+    }
+
+    #[test]
+    fn empty_behaviour() {
+        let mut b = batcher(4);
+        assert!(b.is_empty());
+        assert!(!b.should_flush(Instant::now()));
+        assert!(b.pop_group().is_none());
+        b.push("a", 1);
+        assert_eq!(b.len(), 1);
+    }
+}

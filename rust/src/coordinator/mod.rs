@@ -1,0 +1,23 @@
+//! Layer-3 coordinator: the Rust-owned event loop around the PJRT engine.
+//!
+//! The paper's contribution lives at the kernel layer, so the coordinator
+//! is the thin-but-real serving scaffold a library like SYCL-DNN needs in
+//! deployment:
+//!
+//! * [`scheduler`] — an actor thread owning the (non-`Sync`) [`Engine`],
+//!   with an async handle for tokio callers; all execution funnels
+//!   through it, so the request path is channel-send + hash-lookup +
+//!   execute.
+//! * [`batcher`] — groups same-artifact requests to amortize dispatch.
+//! * [`network`] — runs a whole VGG/ResNet convolution stack through the
+//!   engine, selecting each layer's artifact per the tuned selection DB.
+//!
+//! [`Engine`]: crate::runtime::Engine
+
+mod batcher;
+mod network;
+mod scheduler;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use network::{LayerRun, NetworkReport, NetworkRunner};
+pub use scheduler::{EngineHandle, EngineStats};

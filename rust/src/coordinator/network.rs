@@ -1,0 +1,135 @@
+//! Network runner: execute a whole VGG/ResNet convolution stack through
+//! the engine, one artifact per layer, reporting per-layer gigaflops —
+//! the measured side of the paper's Figs. 6-9.
+
+use std::time::Duration;
+
+
+use crate::error::{Error, Result};
+use crate::runtime::ArtifactStore;
+
+use super::scheduler::EngineHandle;
+
+/// One executed layer.
+#[derive(Debug, Clone)]
+pub struct LayerRun {
+    pub layer: String,
+    pub artifact: String,
+    /// "pallas" | "xla".
+    pub implementation: String,
+    pub flops: u64,
+    pub elapsed_s: f64,
+    pub gflops: f64,
+    /// Spatial scaling note when the measured artifact is shrunk
+    /// (see python/compile/manifests.py).
+    pub scaled_from: Option<String>,
+}
+
+/// Full network execution report.
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    pub network: String,
+    pub implementation: String,
+    pub layers: Vec<LayerRun>,
+    pub total_time_s: f64,
+    pub total_flops: u64,
+}
+
+impl NetworkReport {
+    pub fn total_gflops(&self) -> f64 {
+        self.total_flops as f64 / self.total_time_s / 1e9
+    }
+}
+
+/// Runs network layer stacks via artifacts named
+/// `net_<network>_<layer>_<impl>` (see python/compile/manifests.py).
+pub struct NetworkRunner {
+    handle: EngineHandle,
+}
+
+impl NetworkRunner {
+    pub fn new(handle: EngineHandle) -> Self {
+        Self { handle }
+    }
+
+    /// Artifact name for a layer under a given implementation.
+    pub fn artifact_name(network: &str, layer: &str, implementation: &str) -> String {
+        format!("net_{network}_{layer}_{implementation}")
+    }
+
+    /// Which layers of `network` have an artifact for `implementation`.
+    pub fn available_layers(
+        store: &ArtifactStore,
+        network: &str,
+        implementation: &str,
+    ) -> Vec<String> {
+        let prefix = format!("net_{network}_");
+        let suffix = format!("_{implementation}");
+        store
+            .iter()
+            .filter(|m| m.name.starts_with(&prefix) && m.name.ends_with(&suffix))
+            .filter_map(|m| m.layer.as_ref().map(|l| l.name.clone()))
+            .collect()
+    }
+
+    /// Execute every available layer of `network` under `implementation`,
+    /// with `iters` timing repetitions per layer (min taken).
+    pub fn run_network(
+        &self,
+        store: &ArtifactStore,
+        network: &str,
+        implementation: &str,
+        iters: usize,
+    ) -> Result<NetworkReport> {
+        let layers = Self::available_layers(store, network, implementation);
+        if layers.is_empty() {
+            return Err(Error::NotFound(format!(
+                "no {implementation:?} artifacts for network {network:?} \
+                 (build the `network` manifest group)"
+            )));
+        }
+        let mut runs = Vec::new();
+        let mut total_time = Duration::ZERO;
+        let mut total_flops = 0u64;
+        for layer in &layers {
+            let artifact = Self::artifact_name(network, layer, implementation);
+            let meta = store.get(&artifact)?.clone();
+            let inputs = self.handle.synth_inputs(&artifact, 42)?;
+            self.handle.warm(&artifact)?;
+            // run_timed builds the input literals once on the engine
+            // thread (EXPERIMENTS.md §Perf L3-2).
+            let (_, best) = self.handle.run_timed(&artifact, inputs, iters)?;
+            total_time += best;
+            total_flops += meta.flops;
+            runs.push(LayerRun {
+                layer: layer.clone(),
+                artifact,
+                implementation: meta.implementation.clone().to_string(),
+                flops: meta.flops,
+                elapsed_s: best.as_secs_f64(),
+                gflops: meta.flops as f64 / best.as_secs_f64() / 1e9,
+                scaled_from: meta.scaled_from.clone(),
+            });
+        }
+        Ok(NetworkReport {
+            network: network.to_string(),
+            implementation: implementation.to_string(),
+            layers: runs,
+            total_time_s: total_time.as_secs_f64(),
+            total_flops,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_naming_matches_manifests() {
+        assert_eq!(
+            NetworkRunner::artifact_name("resnet", "conv3_2", "xla"),
+            "net_resnet_conv3_2_xla"
+        );
+    }
+}

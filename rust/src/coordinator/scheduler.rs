@@ -1,0 +1,182 @@
+//! Engine actor: a dedicated thread owns the PJRT engine; callers talk to
+//! it through channels.  This keeps `xla`'s non-`Sync` types on one thread
+//! while any number of coordinator threads submit work.
+//!
+//! (The usual tokio runtime is unavailable in this offline build; the
+//! actor is pure `std::thread` + `mpsc`, which also keeps the request
+//! path allocation-free apart from the payload itself.)
+
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::{ArtifactStore, Engine, RunOutput};
+
+enum Request {
+    Run {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        reply: mpsc::Sender<Result<RunOutput>>,
+    },
+    RunTimed {
+        name: String,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+        reply: mpsc::Sender<Result<(RunOutput, Duration)>>,
+    },
+    Warm {
+        name: String,
+        reply: mpsc::Sender<Result<()>>,
+    },
+    SynthInputs {
+        name: String,
+        seed: u64,
+        reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+    },
+    Stats {
+        reply: mpsc::Sender<EngineStats>,
+    },
+    Shutdown,
+}
+
+/// Coordinator-visible engine statistics.
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Executions completed.
+    pub runs: u64,
+    /// Compiled executables resident in the cache.
+    pub cached_executables: usize,
+    /// Total device execution time.
+    pub device_time: Duration,
+}
+
+/// Cloneable handle to the engine actor.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Spawn the actor over the artifact directory.  Returns the handle
+    /// and the join handle of the actor thread.
+    pub fn spawn(artifact_dir: &Path) -> Result<(Self, JoinHandle<()>)> {
+        let store = ArtifactStore::open(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        // Engine construction happens on the actor thread; creation
+        // errors are reported through a one-time channel.
+        let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || {
+                let mut engine = match Engine::new(store) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut stats = EngineStats::default();
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { name, inputs, reply } => {
+                            let out = engine.run(&name, &inputs);
+                            if let Ok(o) = &out {
+                                stats.runs += 1;
+                                stats.device_time += o.elapsed;
+                            }
+                            stats.cached_executables = engine.cached();
+                            let _ = reply.send(out);
+                        }
+                        Request::RunTimed { name, inputs, iters, reply } => {
+                            let out = engine.run_timed(&name, &inputs, iters);
+                            if let Ok((o, _)) = &out {
+                                stats.runs += iters as u64;
+                                stats.device_time += o.elapsed * iters as u32;
+                            }
+                            stats.cached_executables = engine.cached();
+                            let _ = reply.send(out);
+                        }
+                        Request::Warm { name, reply } => {
+                            let r = engine.warm(&name).map(|_| ());
+                            stats.cached_executables = engine.cached();
+                            let _ = reply.send(r);
+                        }
+                        Request::SynthInputs { name, seed, reply } => {
+                            let _ = reply.send(engine.synth_inputs(&name, seed));
+                        }
+                        Request::Stats { reply } => {
+                            let _ = reply.send(stats.clone());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })
+            .expect("spawn engine thread");
+        init_rx
+            .recv()
+            .map_err(|_| Error::Runtime("engine thread died during init".into()))??;
+        Ok((Self { tx }, join))
+    }
+
+    fn send(&self, req: Request) -> Result<()> {
+        self.tx
+            .send(req)
+            .map_err(|_| Error::Runtime("engine actor gone".into()))
+    }
+
+    fn ask<T>(
+        &self,
+        make: impl FnOnce(mpsc::Sender<T>) -> Request,
+    ) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.send(make(reply))?;
+        rx.recv()
+            .map_err(|_| Error::Runtime("engine dropped request".into()))
+    }
+
+    /// Execute an artifact.
+    pub fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<RunOutput> {
+        self.ask(|reply| Request::Run { name: name.into(), inputs, reply })?
+    }
+
+    /// Execute an artifact `iters` times, input literals built once;
+    /// returns the last output with the best (min) time.
+    pub fn run_timed(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)> {
+        self.ask(|reply| Request::RunTimed {
+            name: name.into(),
+            inputs,
+            iters,
+            reply,
+        })?
+    }
+
+    /// Pre-compile an artifact.
+    pub fn warm(&self, name: &str) -> Result<()> {
+        self.ask(|reply| Request::Warm { name: name.into(), reply })?
+    }
+
+    /// Deterministic synthetic inputs for an artifact.
+    pub fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        self.ask(|reply| Request::SynthInputs { name: name.into(), seed, reply })?
+    }
+
+    /// Engine statistics snapshot.
+    pub fn stats(&self) -> Result<EngineStats> {
+        self.ask(|reply| Request::Stats { reply })
+    }
+
+    /// Ask the actor to exit (idempotent; pending requests drain first).
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Request::Shutdown);
+    }
+}

@@ -1,0 +1,8 @@
+//! Device specifications — the paper's Table 1, extended with the
+//! microarchitectural parameters the performance model needs.
+
+mod presets;
+mod spec;
+
+pub use presets::{all_devices, device_by_name, host_cpu};
+pub use spec::{DeviceClass, DeviceSpec};

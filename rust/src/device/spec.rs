@@ -1,0 +1,122 @@
+//! Device specification type.
+
+
+/// Broad device class; drives the coalescing/vectorization assumptions of
+/// the performance model (paper §2.2.4: SIMD GPUs favour coalesced access,
+/// CPUs favour blocked access).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// Multi-core CPU (cache hierarchy, wide SIMD units, few threads).
+    Cpu,
+    /// SIMT GPU with programmer-managed local memory.
+    Gpu,
+    /// Embedded accelerator (few compute units, large scratchpad).
+    Accelerator,
+}
+
+/// One compute device — the paper's Table-1 rows plus the
+/// microarchitectural parameters needed to model §2.2's four performance
+/// metrics (thread reuse, memory transactions, data reuse, vectorization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceSpec {
+    /// Marketing name, e.g. "ARM Mali G71 GPU".
+    pub name: String,
+    /// Short identifier used on the CLI, e.g. "mali-g71".
+    pub id: String,
+    pub class: DeviceClass,
+
+    // ---- Table 1 columns ----
+    /// Cache-line size in bytes (64 or 128 in the paper's zoo).
+    pub cache_line_bytes: u32,
+    /// Programmer-managed local memory per compute unit, bytes (0 = none;
+    /// Mali G-71 and the CPU rely on the cache instead).
+    pub local_mem_bytes: u32,
+    /// Number of compute units.
+    pub compute_units: u32,
+
+    // ---- extended parameters ----
+    /// Register file per compute unit, in f32 registers.
+    pub reg_file_per_cu: u32,
+    /// Architectural per-thread register budget before spilling.
+    pub max_regs_per_thread: u32,
+    /// Maximum resident threads per compute unit.
+    pub max_threads_per_cu: u32,
+    /// Maximum work-group size the device can launch.
+    pub max_wg_size: u32,
+    /// Resident threads per CU needed to fully hide memory latency.
+    pub latency_hiding_threads: u32,
+    /// Native vector width for loads/stores, in f32 elements
+    /// (paper §2.2.4: many GPUs have 4-element load/store units).
+    pub native_vector_width: u32,
+    /// Whether the ALUs execute vector math (vs scalar ALUs + ILP).
+    pub has_vector_math: bool,
+    /// Peak f32 throughput, GFLOP/s.
+    pub peak_gflops: f64,
+    /// Peak global-memory bandwidth, GB/s.
+    pub mem_bw_gbps: f64,
+    /// Local-memory bandwidth advantage over the (global) cache path.
+    /// >1 means explicit local memory is faster than relying on cache;
+    /// Mali-like devices with no local memory use 1.0.
+    pub local_mem_speedup: f64,
+}
+
+impl DeviceSpec {
+    /// Cache-line size in f32 elements — the paper's `X`.
+    pub fn cache_line_elems(&self) -> u32 {
+        self.cache_line_bytes / 4
+    }
+
+    /// Machine balance: flops per byte at the roofline ridge point.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_gflops / self.mem_bw_gbps
+    }
+
+    /// Roofline-attainable GFLOP/s at a given operational intensity
+    /// (flop/byte) — paper §5.2's comparison frame (Williams et al.).
+    pub fn roofline_gflops(&self, intensity: f64) -> f64 {
+        (self.mem_bw_gbps * intensity).min(self.peak_gflops)
+    }
+
+    /// Total resident threads across the device.
+    pub fn max_threads(&self) -> u64 {
+        self.max_threads_per_cu as u64 * self.compute_units as u64
+    }
+}
+
+impl std::fmt::Display for DeviceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} ({} CUs, {}B line, {} KiB local, {:.0} GF, {:.0} GB/s)",
+            self.name,
+            self.compute_units,
+            self.cache_line_bytes,
+            self.local_mem_bytes / 1024,
+            self.peak_gflops,
+            self.mem_bw_gbps
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::presets::all_devices;
+
+    #[test]
+    fn roofline_is_min_of_two_ceilings() {
+        for d in all_devices() {
+            let ridge = d.ridge_intensity();
+            assert!(d.roofline_gflops(ridge * 0.5) < d.peak_gflops);
+            assert!((d.roofline_gflops(ridge * 100.0) - d.peak_gflops).abs() < 1e-9);
+            // Monotone in intensity.
+            assert!(d.roofline_gflops(1.0) <= d.roofline_gflops(2.0));
+        }
+    }
+
+    #[test]
+    fn cache_line_elems() {
+        for d in all_devices() {
+            assert_eq!(d.cache_line_elems() * 4, d.cache_line_bytes);
+        }
+    }
+}

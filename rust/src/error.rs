@@ -1,0 +1,43 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the portable-kernels library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// A configuration string or parameter set failed validation.
+    #[error("invalid configuration: {0}")]
+    Config(String),
+
+    /// A kernel configuration cannot run on the given device (e.g. its
+    /// local-memory tile exceeds the device's local memory).
+    #[error("configuration infeasible on {device}: {reason}")]
+    Infeasible { device: String, reason: String },
+
+    /// Artifact manifest or HLO file problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT/XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Unknown device, layer, or artifact name.
+    #[error("not found: {0}")]
+    NotFound(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,307 @@
+//! Figures 4 & 5: GEMM roofline comparisons.
+//!
+//! * Fig. 4 (Intel UHD 630): (a) Table-2 configurations vs clBLAST;
+//!   (b) square vs non-square register tile at 16 registers;
+//!   (c) double buffering on/off.
+//! * Fig. 5 (ARM Mali G-71): configurations vs ARM Compute Library, with
+//!   the A/B/C regions where different configurations win.
+
+use std::collections::BTreeMap;
+
+use crate::config::GemmConfig;
+use crate::device::{device_by_name, DeviceSpec};
+use crate::perfmodel::{vendor_gemm, GemmProblem, VendorLib};
+
+use super::report::Report;
+use super::sweep::{gemm_sweep, paper_size_grid, winners_per_point};
+
+fn roofline_report(
+    title: &str,
+    dev: &DeviceSpec,
+    cfgs: &[GemmConfig],
+    vendor: VendorLib,
+) -> Report {
+    let mut r = Report::new(
+        title,
+        &["m", "n", "k", "intensity", "config", "gflops", "vendor_gflops"],
+    );
+    for cfg in cfgs {
+        for p in gemm_sweep(dev, cfg) {
+            let vp = vendor_gemm(
+                dev,
+                vendor,
+                GemmProblem::new(p.m, p.n, p.k),
+            );
+            r.row(vec![
+                p.m.to_string(),
+                p.n.to_string(),
+                p.k.to_string(),
+                format!("{:.2}", p.intensity),
+                p.config.clone(),
+                format!("{:.2}", p.gflops),
+                format!("{vp:.2}"),
+            ]);
+        }
+    }
+    r.note(format!("device: {dev}"));
+    r.note(format!("vendor baseline: {}", vendor.as_str()));
+    r
+}
+
+/// Figure 4a: all Table-2 configurations vs clBLAST on the UHD 630.
+pub fn fig4a() -> Report {
+    let dev = device_by_name("uhd630").expect("preset");
+    roofline_report(
+        "Figure 4a: SYCL-BLAS configurations vs clBLAST (Intel UHD 630, modeled)",
+        &dev,
+        &GemmConfig::table2(),
+        VendorLib::ClBlast,
+    )
+}
+
+/// Figure 4b: square (4x4_8x8) vs non-square (8x2_4x16) register tiles.
+pub fn fig4b() -> Report {
+    let dev = device_by_name("uhd630").expect("preset");
+    let cfgs = [
+        GemmConfig::parse("4x4_8x8_loc").unwrap(),
+        GemmConfig::parse("8x2_4x16_loc").unwrap(),
+    ];
+    let mut r = roofline_report(
+        "Figure 4b: square vs non-square register tile, 16 registers each",
+        &dev,
+        &cfgs,
+        VendorLib::ClBlast,
+    );
+    r.note("paper: the square 4x4_8x8 tile wins (Eq. 3 reuse)");
+    r
+}
+
+/// Figure 4c: double buffering on/off for 8x4_8x16_loc.
+pub fn fig4c() -> Report {
+    let dev = device_by_name("uhd630").expect("preset");
+    let cfgs = [
+        GemmConfig::parse("8x4_8x16_loc").unwrap(),
+        GemmConfig::parse("8x4_8x16_loc_db").unwrap(),
+    ];
+    let mut r = roofline_report(
+        "Figure 4c: double buffering (8x4_8x16_loc vs _db)",
+        &dev,
+        &cfgs,
+        VendorLib::ClBlast,
+    );
+    r.note("paper: double buffering hides panel-load latency");
+    r
+}
+
+/// Figure 5a: all configurations vs ARM Compute Library on the Mali G-71.
+pub fn fig5a() -> Report {
+    let dev = device_by_name("mali-g71").expect("preset");
+    roofline_report(
+        "Figure 5a: SYCL-BLAS configurations vs ARM Compute Library (Mali G-71, modeled)",
+        &dev,
+        &GemmConfig::table2(),
+        VendorLib::ArmClOpenCl,
+    )
+}
+
+/// ASCII roofline scatter (the visual shape of Fig. 4a / Fig. 5a): the
+/// best configuration per point vs the vendor curve, log-log.
+pub fn roofline_plot(device_id: &str) -> crate::error::Result<String> {
+    let dev = device_by_name(device_id)?;
+    let vendor = if device_id == "mali-g71" {
+        VendorLib::ArmClOpenCl
+    } else {
+        VendorLib::ClBlast
+    };
+    let mut ours = Vec::new();
+    let mut vend = Vec::new();
+    for (m, n, k, _, g) in winners_per_point(&dev, &GemmConfig::table2()) {
+        let p = GemmProblem::new(m, n, k);
+        ours.push((p.intensity(), g));
+        vend.push((p.intensity(), vendor_gemm(&dev, vendor, p)));
+    }
+    Ok(format!(
+        "roofline on {} (y: GFLOP/s, x: flop/byte):\n{}",
+        dev.name,
+        super::plot::scatter_loglog(
+            &[
+                super::plot::Series {
+                    glyph: 'v',
+                    label: vendor.as_str().into(),
+                    points: vend,
+                },
+                super::plot::Series {
+                    glyph: '*',
+                    label: "best SYCL-BLAS config".into(),
+                    points: ours,
+                },
+            ],
+            72,
+            18,
+        )
+    ))
+}
+
+/// Figures 5b-5d: the per-size winning configuration, with the region
+/// summary (small/square -> A, mid/rectangular -> B, large -> C).
+pub fn fig5_regions() -> Report {
+    let dev = device_by_name("mali-g71").expect("preset");
+    let mut r = Report::new(
+        "Figure 5b-d: winning configuration per problem size (Mali G-71)",
+        &["m", "n", "k", "flops(G)", "winner", "gflops"],
+    );
+    let winners = winners_per_point(&dev, &GemmConfig::table2());
+    for (m, n, k, name, g) in &winners {
+        r.row(vec![
+            m.to_string(),
+            n.to_string(),
+            k.to_string(),
+            format!("{:.3}", 2.0 * (*m as f64) * (*n as f64) * (*k as f64) / 1e9),
+            name.clone(),
+            format!("{g:.2}"),
+        ]);
+    }
+    // Region summary, bucketed the way the paper's prose describes them:
+    // A = small (typically square) matrices, B = small-to-medium, C =
+    // large high-intensity matrices.
+    let mut region_counts: BTreeMap<&str, BTreeMap<String, usize>> =
+        BTreeMap::new();
+    for ((m, n, k), (_, _, _, name, _)) in
+        paper_size_grid().iter().zip(&winners)
+    {
+        let lo = *m.min(n).min(k);
+        let hi = *m.max(n).max(k);
+        let region = if hi <= 128 {
+            "A (small)"
+        } else if lo >= 512 {
+            "C (large)"
+        } else {
+            "B (medium)"
+        };
+        *region_counts
+            .entry(region)
+            .or_default()
+            .entry(name.clone())
+            .or_default() += 1;
+    }
+    for (region, counts) in &region_counts {
+        let top = counts
+            .iter()
+            .max_by_key(|(_, c)| **c)
+            .map(|(n, c)| format!("{n} ({c} pts)"))
+            .unwrap_or_default();
+        r.note(format!("region {region}: most frequent winner {top}"));
+    }
+    r.note("paper: A -> 4x4_8x8, B -> 8x4_4x8, C -> 8x4_8x16");
+    r.note("reproduction: A and C winners match; in B our model picks the \
+            paper's 8x4 register tile but a different work-group split \
+            (see EXPERIMENTS.md)");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_rows(r: &Report) -> Vec<(String, f64, f64)> {
+        r.rows
+            .iter()
+            .map(|row| {
+                (
+                    row[4].clone(),
+                    row[5].parse::<f64>().unwrap(),
+                    row[6].parse::<f64>().unwrap(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fig4a_best_config_is_competitive_with_vendor() {
+        // Paper: 8x4_8x16_loc achieves "close to" clBLAST.  We require
+        // the best config to be within 2x of the vendor curve at the
+        // biggest size and to beat 60% of it.
+        let r = fig4a();
+        let rows = parse_rows(&r);
+        let at_big: Vec<_> = r
+            .rows
+            .iter()
+            .zip(&rows)
+            .filter(|(raw, _)| raw[0] == "1024" && raw[1] == "1024" && raw[2] == "1024")
+            .map(|(_, p)| p.clone())
+            .collect();
+        let (best_cfg, best, vendor) = at_big
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .cloned()
+            .unwrap();
+        assert!(best / vendor > 0.6, "{best_cfg}: {best} vs vendor {vendor}");
+        // And the paper's winner is among the top configs.
+        assert!(
+            best_cfg.starts_with("8x4"),
+            "expected an 8x4 tile to win at 1024^3, got {best_cfg}"
+        );
+    }
+
+    #[test]
+    fn fig4b_square_wins_on_average() {
+        let r = fig4b();
+        let rows = parse_rows(&r);
+        let mean = |cfg: &str| {
+            let v: Vec<f64> = rows
+                .iter()
+                .filter(|(c, _, _)| c == cfg)
+                .map(|(_, g, _)| *g)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean("4x4_8x8_loc") > mean("8x2_4x16_loc"));
+    }
+
+    #[test]
+    fn fig4c_db_wins_on_average() {
+        let r = fig4c();
+        let rows = parse_rows(&r);
+        let mean = |cfg: &str| {
+            let v: Vec<f64> = rows
+                .iter()
+                .filter(|(c, _, _)| c == cfg)
+                .map(|(_, g, _)| *g)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean("8x4_8x16_loc_db") > mean("8x4_8x16_loc"));
+    }
+
+    #[test]
+    fn fig5_has_multiple_regional_winners() {
+        // The paper's core portability result: no single configuration
+        // wins everywhere on Mali.
+        let r = fig5_regions();
+        let winners: std::collections::HashSet<String> =
+            r.rows.iter().map(|row| row[4].clone()).collect();
+        assert!(
+            winners.len() >= 2,
+            "expected regional structure, got only {winners:?}"
+        );
+    }
+
+    #[test]
+    fn fig5_small_sizes_prefer_smaller_blocks_than_large_sizes() {
+        let r = fig5_regions();
+        let block_area = |name: &str| {
+            let cfg = GemmConfig::parse(name).unwrap();
+            cfg.block_m() * cfg.block_n()
+        };
+        let row_for = |m: &str, n: &str, k: &str| {
+            r.rows
+                .iter()
+                .find(|row| row[0] == m && row[1] == n && row[2] == k)
+                .map(|row| row[4].clone())
+                .unwrap()
+        };
+        let small = block_area(&row_for("64", "64", "64"));
+        let large = block_area(&row_for("1024", "1024", "1024"));
+        assert!(small <= large, "small {small} vs large {large}");
+    }
+}

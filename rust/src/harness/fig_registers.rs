@@ -1,0 +1,78 @@
+//! Figure 2: register usage of the tiled 3x3 convolution kernel across
+//! tile and vector sizes (the paper's CodeXL measurements, modeled).
+
+use crate::config::ConvConfig;
+use crate::perfmodel::conv_regs;
+
+use super::report::Report;
+
+/// The sweep axes the paper's subplots use.
+pub const TILES: [(u32, u32); 9] =
+    [(1, 1), (1, 2), (2, 2), (2, 3), (3, 3), (3, 4), (4, 4), (4, 5), (5, 5)];
+pub const VECS: [u32; 3] = [1, 2, 4];
+
+/// Generate Figure 2's data: registers per (tile, vec_c, vec_k).
+pub fn fig2() -> Report {
+    let mut r = Report::new(
+        "Figure 2: registers used by the tiled 3x3 convolution kernel",
+        &["tile", "vec_c", "vec_k", "registers", "spills@256"],
+    );
+    for (th, tw) in TILES {
+        for vc in VECS {
+            for vk in VECS {
+                let regs = conv_regs(&ConvConfig::tiled(th, tw, vc, vk), 3);
+                r.row(vec![
+                    format!("{th}x{tw}"),
+                    vc.to_string(),
+                    vk.to_string(),
+                    regs.to_string(),
+                    if regs > 256 { "yes" } else { "no" }.into(),
+                ]);
+            }
+        }
+    }
+    r.note("model: accumulators + halo patch + filter slice + addressing");
+    r.note("paper reference: AMD CodeXL VGPR counts, 256-register budget");
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shape() {
+        let r = fig2();
+        assert_eq!(r.rows.len(), TILES.len() * VECS.len() * VECS.len());
+    }
+
+    #[test]
+    fn fig2_monotone_along_each_axis() {
+        // Fixing vectors, register usage grows with tile area.
+        let at = |th: u32, tw: u32, vc: u32, vk: u32| {
+            conv_regs(&ConvConfig::tiled(th, tw, vc, vk), 3)
+        };
+        assert!(at(1, 1, 1, 1) < at(2, 2, 1, 1));
+        assert!(at(2, 2, 1, 1) < at(4, 4, 1, 1));
+        assert!(at(4, 4, 1, 1) < at(4, 4, 2, 1));
+        assert!(at(4, 4, 2, 1) < at(4, 4, 4, 1));
+        assert!(at(4, 4, 4, 1) < at(4, 4, 4, 4));
+    }
+
+    #[test]
+    fn fig2_spill_region_is_top_right() {
+        // Only large-tile large-vector corners exceed the GCN budget.
+        let r = fig2();
+        let spills: Vec<_> = r
+            .rows
+            .iter()
+            .filter(|row| row[4] == "yes")
+            .map(|row| row[0].clone())
+            .collect();
+        assert!(!spills.is_empty());
+        assert!(spills.iter().all(|t| {
+            let (a, b) = t.split_once('x').unwrap();
+            a.parse::<u32>().unwrap() * b.parse::<u32>().unwrap() >= 12
+        }));
+    }
+}

@@ -1,0 +1,27 @@
+//! Evaluation harness: regenerate every table and figure of the paper.
+//!
+//! Each generator returns a [`report::Report`] (rows + rendered text) and
+//! can emit CSV; the `repro figures` CLI and the criterion benches drive
+//! them.  Figure numbering follows the paper:
+//!
+//! | id | generator | paper content |
+//! |----|-----------|---------------|
+//! | t1 | [`tables::table1`] | device metrics |
+//! | t2 | [`tables::table2`] | GEMM configurations |
+//! | t3/t4 | [`tables::table3`], [`tables::table4`] | VGG/ResNet layers |
+//! | f2 | [`fig_registers::fig2`] | conv register usage |
+//! | f3 | [`fig_conv::fig3`] | conv tile/vector sweep on R9 Nano |
+//! | f4a-c | [`fig_gemm::fig4`] | GEMM roofline on Intel UHD 630 |
+//! | f5a-d | [`fig_gemm::fig5`] | GEMM roofline on Mali G-71 |
+//! | f6-f9 | [`fig_network::fig_network`] | per-layer network gigaflops |
+
+pub mod fig_conv;
+pub mod fig_gemm;
+pub mod fig_network;
+pub mod fig_registers;
+pub mod plot;
+pub mod report;
+pub mod sweep;
+pub mod tables;
+
+pub use report::Report;

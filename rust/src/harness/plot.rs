@@ -1,0 +1,134 @@
+//! Terminal scatter plots for the roofline figures — a log-log ASCII
+//! renderer so `repro figures` shows the *shape* of Figs. 4/5 directly in
+//! the terminal, not just CSV.
+
+/// One series: a glyph + (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub glyph: char,
+    pub label: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Render a log-log scatter of several series into a `width x height`
+/// character grid with axis annotations.  Later series overwrite earlier
+/// ones on collisions (draw the baseline first).
+pub fn scatter_loglog(
+    series: &[Series],
+    width: usize,
+    height: usize,
+) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter().copied())
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return "(no data)\n".into();
+    }
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for (x, y) in &pts {
+        x0 = x0.min(*x);
+        x1 = x1.max(*x);
+        y0 = y0.min(*y);
+        y1 = y1.max(*y);
+    }
+    // Pad the log range slightly so extremes stay inside the frame.
+    let (lx0, lx1) = (x0.ln() - 0.05, x1.ln() + 0.05);
+    let (ly0, ly1) = (y0.ln() - 0.05, y1.ln() + 0.05);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for (x, y) in &s.points {
+            if *x <= 0.0 || *y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.ln() - lx0) / (lx1 - lx0) * (width - 1) as f64)
+                .round() as usize;
+            let cy = ((y.ln() - ly0) / (ly1 - ly0) * (height - 1) as f64)
+                .round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = s.glyph;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(&format!("{y1:>10.1} ┐\n"));
+    for row in grid {
+        out.push_str("           │");
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push_str(&format!("{y0:>10.1} ┘"));
+    out.push_str(&"─".repeat(width));
+    out.push('\n');
+    out.push_str(&format!(
+        "            x: {x0:.2} .. {x1:.2} (log)   legend: {}\n",
+        series
+            .iter()
+            .map(|s| format!("{} {}", s.glyph, s.label))
+            .collect::<Vec<_>>()
+            .join("  ")
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Vec<Series> {
+        vec![
+            Series {
+                glyph: '*',
+                label: "ours".into(),
+                points: vec![(1.0, 10.0), (10.0, 100.0), (100.0, 400.0)],
+            },
+            Series {
+                glyph: 'v',
+                label: "vendor".into(),
+                points: vec![(1.0, 12.0), (100.0, 460.0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn renders_all_series() {
+        let text = scatter_loglog(&demo(), 60, 16);
+        assert!(text.contains('*'));
+        assert!(text.contains('v'));
+        assert!(text.contains("ours"));
+        assert!(text.contains("vendor"));
+        // Frame height = height + 2 header/footer + legend.
+        assert_eq!(text.lines().count(), 16 + 3);
+    }
+
+    #[test]
+    fn empty_input_is_safe() {
+        assert_eq!(scatter_loglog(&[], 40, 10), "(no data)\n");
+        let s = Series { glyph: 'x', label: "neg".into(), points: vec![(-1.0, 1.0)] };
+        assert_eq!(scatter_loglog(&[s], 40, 10), "(no data)\n");
+    }
+
+    #[test]
+    fn monotone_series_renders_monotone() {
+        // The highest-y point must appear on an earlier (higher) row than
+        // the lowest-y point.
+        let s = Series {
+            glyph: '#',
+            label: "m".into(),
+            points: vec![(1.0, 1.0), (100.0, 1000.0)],
+        };
+        let text = scatter_loglog(&[s], 40, 12);
+        let rows: Vec<usize> = text
+            .lines()
+            .enumerate()
+            .filter(|(_, l)| l.starts_with("           │") && l.contains('#'))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(rows.len(), 2);
+        // First occurrence (top of frame) is the high-y point.
+        assert!(rows[0] < rows[1]);
+    }
+}

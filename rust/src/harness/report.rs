@@ -1,0 +1,148 @@
+//! Tabular report type: render as aligned text or CSV.
+
+use std::path::Path;
+
+use crate::error::Result;
+
+/// A rectangular report: header + rows of strings, with a title and
+/// free-text notes (assumptions, paper expectations).
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Report {
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row width mismatch in {:?}",
+            self.title
+        );
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
+        self.notes.push(s.into());
+        self
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.columns, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        for note in &self.notes {
+            out.push_str(&format!("note: {note}\n"));
+        }
+        out
+    }
+
+    /// Render as CSV (RFC-4180-ish; quotes cells containing commas).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = String::new();
+        out.push_str(
+            &self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(
+                &row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","),
+            );
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV next to other reports.
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+/// Format a gflops value compactly.
+pub fn gf(x: f64) -> String {
+    if x >= 1000.0 {
+        format!("{:.2} TF", x / 1000.0)
+    } else if x >= 10.0 {
+        format!("{x:.0} GF")
+    } else {
+        format!("{x:.2} GF")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_and_csv() {
+        let mut r = Report::new("demo", &["a", "bb"]);
+        r.row(vec!["1".into(), "x,y".into()]);
+        r.note("hello");
+        let text = r.render();
+        assert!(text.contains("== demo =="));
+        assert!(text.contains("note: hello"));
+        let csv = r.to_csv();
+        assert_eq!(csv, "a,bb\n1,\"x,y\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn row_width_checked() {
+        Report::new("demo", &["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn gf_formatting() {
+        assert_eq!(gf(2570.0), "2.57 TF");
+        assert_eq!(gf(290.0), "290 GF");
+        assert_eq!(gf(0.05), "0.05 GF");
+    }
+}

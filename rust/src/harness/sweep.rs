@@ -1,0 +1,125 @@
+//! Roofline sweeps: the (M, N, K) grid of paper §5.2 evaluated through
+//! the performance model.
+
+
+use crate::config::GemmConfig;
+use crate::device::DeviceSpec;
+use crate::perfmodel::{gemm_estimate, GemmProblem};
+
+/// One point of a roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// flop/byte — the x-axis.
+    pub intensity: f64,
+    /// GFLOP/s — the y-axis.
+    pub gflops: f64,
+    pub config: String,
+    pub feasible: bool,
+}
+
+/// The paper's §5.2 size grid: M, N, K powers of two in [64, 1024].
+pub fn paper_size_grid() -> Vec<(u64, u64, u64)> {
+    let sizes = [64u64, 128, 256, 512, 1024];
+    let mut out = Vec::with_capacity(sizes.len().pow(3));
+    for &m in &sizes {
+        for &n in &sizes {
+            for &k in &sizes {
+                out.push((m, n, k));
+            }
+        }
+    }
+    out
+}
+
+/// Sweep one configuration over the full size grid on one device.
+pub fn gemm_sweep(dev: &DeviceSpec, cfg: &GemmConfig) -> Vec<RooflinePoint> {
+    paper_size_grid()
+        .into_iter()
+        .map(|(m, n, k)| {
+            let p = GemmProblem::new(m, n, k);
+            match gemm_estimate(dev, p, cfg) {
+                Ok(e) => RooflinePoint {
+                    m,
+                    n,
+                    k,
+                    intensity: e.intensity,
+                    gflops: e.gflops,
+                    config: cfg.name(),
+                    feasible: true,
+                },
+                Err(_) => RooflinePoint {
+                    m,
+                    n,
+                    k,
+                    intensity: p.intensity(),
+                    gflops: 0.0,
+                    config: cfg.name(),
+                    feasible: false,
+                },
+            }
+        })
+        .collect()
+}
+
+/// For every grid point, which configuration wins (the "choose the best
+/// combination" tuning step) — the data behind Fig. 5's A/B/C regions.
+pub fn winners_per_point(
+    dev: &DeviceSpec,
+    cfgs: &[GemmConfig],
+) -> Vec<(u64, u64, u64, String, f64)> {
+    paper_size_grid()
+        .into_iter()
+        .map(|(m, n, k)| {
+            let p = GemmProblem::new(m, n, k);
+            let mut best: Option<(String, f64)> = None;
+            for cfg in cfgs {
+                if let Ok(e) = gemm_estimate(dev, p, cfg) {
+                    if best.as_ref().map(|(_, g)| e.gflops > *g).unwrap_or(true)
+                    {
+                        best = Some((cfg.name(), e.gflops));
+                    }
+                }
+            }
+            let (name, g) = best.unwrap_or(("<none>".into(), 0.0));
+            (m, n, k, name, g)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::device_by_name;
+
+    #[test]
+    fn grid_is_125_points() {
+        assert_eq!(paper_size_grid().len(), 125);
+    }
+
+    #[test]
+    fn sweep_covers_grid_and_stays_under_roofline() {
+        let dev = device_by_name("uhd630").unwrap();
+        let cfg = GemmConfig::parse("8x4_8x16_loc").unwrap();
+        let pts = gemm_sweep(&dev, &cfg);
+        assert_eq!(pts.len(), 125);
+        for p in &pts {
+            if p.feasible {
+                assert!(p.gflops <= dev.roofline_gflops(p.intensity) + 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn winners_exist_everywhere_for_table2() {
+        let dev = device_by_name("mali-g71").unwrap();
+        for (_, _, _, name, g) in
+            winners_per_point(&dev, &GemmConfig::table2())
+        {
+            assert_ne!(name, "<none>");
+            assert!(g > 0.0);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Paper Tables 1-4 as reports.
+
+use crate::config::GemmConfig;
+use crate::device::all_devices;
+use crate::nn::{resnet50_layers, vgg16_layers, ConvLayer};
+
+use super::report::Report;
+
+/// Table 1: performance metrics of the device zoo.
+pub fn table1() -> Report {
+    let mut r = Report::new(
+        "Table 1: device performance metrics",
+        &["device", "cache line", "local memory", "compute units"],
+    );
+    for d in all_devices().iter().take(6) {
+        // The first six presets are the paper's Table-1 rows, in order.
+        r.row(vec![
+            d.name.clone(),
+            format!("{} bytes", d.cache_line_bytes),
+            if d.local_mem_bytes == 0 {
+                "None".into()
+            } else {
+                format!("{} KiB", d.local_mem_bytes / 1024)
+            },
+            d.compute_units.to_string(),
+        ]);
+    }
+    r
+}
+
+/// Table 2: the seven SYCL-BLAS configurations.
+pub fn table2() -> Report {
+    let mut r = Report::new(
+        "Table 2: SYCL-BLAS GEMM configurations",
+        &["configuration", "registers", "work group", "local mem"],
+    );
+    for cfg in GemmConfig::table2() {
+        let lm = cfg.local_mem_bytes(32);
+        r.row(vec![
+            cfg.name(),
+            cfg.registers().to_string(),
+            cfg.work_group().to_string(),
+            if lm == 0 { "N/A".into() } else { format!("{} KiB", lm / 1024) },
+        ]);
+    }
+    r.note("local mem with X = 32 staging elements (see configs.py)");
+    r
+}
+
+fn layer_table(title: &str, layers: &[ConvLayer]) -> Report {
+    let mut r = Report::new(
+        title,
+        &["layer", "W", "S", "input", "output", "GFLOP(b=1)"],
+    );
+    for l in layers {
+        r.row(vec![
+            l.name.clone(),
+            l.window.to_string(),
+            l.stride.to_string(),
+            format!("{}x{}x{}", l.in_h, l.in_w, l.in_c),
+            format!("{}x{}x{}", l.out_h(), l.out_w(), l.out_c),
+            format!("{:.3}", l.flops(1) as f64 / 1e9),
+        ]);
+    }
+    r
+}
+
+/// Table 3: VGG-16 convolution layers.
+pub fn table3() -> Report {
+    layer_table("Table 3: VGG convolution layers", &vgg16_layers())
+}
+
+/// Table 4: ResNet-50 convolution layers.
+pub fn table4() -> Report {
+    layer_table("Table 4: ResNet convolution layers", &resnet50_layers())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper_rows() {
+        let r = table1();
+        assert_eq!(r.rows.len(), 6);
+        let text = r.render();
+        assert!(text.contains("ARM Mali G71 GPU"));
+        assert!(text.contains("447 KiB"));
+        assert!(text.contains("128 bytes"));
+    }
+
+    #[test]
+    fn table2_columns_match_paper() {
+        let r = table2();
+        assert_eq!(r.rows.len(), 7);
+        let csv = r.to_csv();
+        assert!(csv.contains("8x4_8x16_loc,32,128,16 KiB"));
+        assert!(csv.contains("4x4_8x8_loc,16,64,8 KiB"));
+        assert!(csv.contains("8x4_4x8_noloc,32,32,N/A"));
+    }
+
+    #[test]
+    fn layer_tables_sizes() {
+        assert_eq!(table3().rows.len(), 9);
+        assert_eq!(table4().rows.len(), 26);
+    }
+}

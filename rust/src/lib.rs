@@ -1,0 +1,49 @@
+//! # portable-kernels
+//!
+//! A Rust + JAX + Pallas reproduction of *"Cross-Platform Performance
+//! Portability Using Highly Parametrized SYCL Kernels"* (Lawson, Goli,
+//! McBain, Soutar, Sugy — Codeplay, 2019).
+//!
+//! The paper's thesis: write **one heavily parametrized kernel** per
+//! operation (GEMM, convolution) and reduce per-device tuning to *choosing
+//! the parameter combination that performs best on that hardware*.  This
+//! crate is the request-path half of the three-layer reproduction:
+//!
+//! * **Layer 1/2 (build time, Python)** — parametrized Pallas kernels and
+//!   JAX layer graphs, AOT-lowered to `artifacts/*.hlo.txt` by
+//!   `make artifacts`.  Python never runs at request time.
+//! * **Layer 3 (this crate)** — loads and executes the compiled artifacts
+//!   via PJRT ([`runtime`]), models the paper's device zoo analytically
+//!   ([`device`], [`perfmodel`]), tunes configurations per device
+//!   ([`tuner`]), and reproduces every table and figure of the paper's
+//!   evaluation ([`harness`]).
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`config`] | kernel parameter spaces (`GemmConfig`, `ConvConfig`) |
+//! | [`device`] | device specifications (paper Table 1) |
+//! | [`perfmodel`] | analytic performance simulator (§2.2 metrics) |
+//! | [`tuner`] | configuration search + selection database |
+//! | [`runtime`] | PJRT artifact loading & execution |
+//! | [`blas`] | host Rust GEMM baselines |
+//! | [`nn`] | VGG-16 / ResNet-50 layer tables (Tables 3 & 4) |
+//! | [`coordinator`] | benchmark scheduler + network runner |
+//! | [`harness`] | per-figure/table report generators |
+
+pub mod blas;
+pub mod config;
+pub mod coordinator;
+pub mod device;
+pub mod error;
+pub mod harness;
+pub mod nn;
+pub mod perfmodel;
+pub mod runtime;
+pub mod tuner;
+pub mod util;
+
+pub use config::{ConvAlgorithm, ConvConfig, GemmConfig};
+pub use device::DeviceSpec;
+pub use error::{Error, Result};

@@ -1,0 +1,401 @@
+//! `repro` — the portable-kernels coordinator CLI.
+//!
+//! Subcommands mirror the paper's workflow: inspect the device zoo, tune
+//! kernels per device, regenerate the evaluation figures, and run the
+//! measured network benchmarks through PJRT.
+//!
+//! (Arg parsing is hand-rolled: the offline build environment has no clap.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
+use portable_kernels::device::{all_devices, device_by_name};
+use portable_kernels::harness::{
+    fig_conv, fig_gemm, fig_network, fig_registers, tables, Report,
+};
+use portable_kernels::perfmodel::GemmProblem;
+use portable_kernels::runtime::ArtifactStore;
+use portable_kernels::tuner::{
+    tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,
+    SearchStrategy, SelectionDb, SelectionKey,
+};
+
+const USAGE: &str = "\
+repro — cross-platform performance portability via parametrized kernels
+        (reproduction of Lawson et al., 2019)
+
+USAGE: repro [--artifacts DIR] [--reports DIR] <command> [options]
+
+COMMANDS:
+  devices                      list the modeled device zoo (paper Table 1)
+  figures [--id ID] [--csv]    regenerate a paper table/figure:
+                               t1 t2 t3 t4 f2 f3 f4a f4b f4c f5 f6 f7 f8 f9 | all
+  tune --device ID [--gemm MxNxK]... [--networks]
+       [--strategy exhaustive|random|hillclimb] [--db PATH]
+                               tune kernels for a device, write selection DB
+  network [--network vgg|resnet] [--impl xla|pallas] [--iters N]
+                               run a conv stack through PJRT (measured)
+  run NAME [--iters N]         execute one artifact, report GFLOP/s
+  tune-measured [--group gemm|conv] [--iters N]
+                               measurement-driven tuning: execute every
+                               artifact in the group, report winners
+  artifacts                    list artifacts in the manifest
+";
+
+/// Tiny argv parser: flags (`--x val` / `--x`) + positionals.
+struct Args {
+    flags: HashMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+/// Flags that never take a value.
+const BOOL_FLAGS: &[&str] = &["csv", "networks", "help"];
+
+impl Args {
+    fn parse(argv: &[String]) -> Self {
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else if !BOOL_FLAGS.contains(&name)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    flags
+                        .entry(name.to_string())
+                        .or_default()
+                        .push(argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.entry(name.to_string()).or_default().push(String::new());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Self { flags, positional }
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    fn get_all(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} wants a number, got {v:?}")),
+        }
+    }
+}
+
+fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn SearchStrategy>> {
+    match name {
+        "exhaustive" => Ok(Box::new(ExhaustiveSearch)),
+        "random" => Ok(Box::new(RandomSearch { samples: 64, seed: 42 })),
+        "hillclimb" => Ok(Box::new(HillClimb { restarts: 8, seed: 42 })),
+        other => anyhow::bail!("unknown strategy {other:?}"),
+    }
+}
+
+fn emit(report: &Report, reports_dir: &PathBuf, csv: bool) -> anyhow::Result<()> {
+    println!("{}", report.render());
+    if csv {
+        let slug: String = report
+            .title
+            .chars()
+            .take_while(|c| *c != ':')
+            .filter(|c| c.is_alphanumeric())
+            .collect::<String>()
+            .to_lowercase();
+        let path = reports_dir.join(format!("{slug}.csv"));
+        report.save_csv(&path)?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
+}
+
+fn cmd_figures(id: &str, reports: &PathBuf, csv: bool) -> anyhow::Result<()> {
+    let all = id == "all";
+    let want = |x: &str| all || id == x;
+    let mut matched = all;
+    if want("t1") {
+        emit(&tables::table1(), reports, csv)?;
+        matched = true;
+    }
+    if want("t2") {
+        emit(&tables::table2(), reports, csv)?;
+        matched = true;
+    }
+    if want("t3") {
+        emit(&tables::table3(), reports, csv)?;
+        matched = true;
+    }
+    if want("t4") {
+        emit(&tables::table4(), reports, csv)?;
+        matched = true;
+    }
+    if want("f2") {
+        emit(&fig_registers::fig2(), reports, csv)?;
+        matched = true;
+    }
+    if want("f3") {
+        emit(&fig_conv::fig3(), reports, csv)?;
+        matched = true;
+    }
+    if want("f4a") {
+        emit(&fig_gemm::fig4a(), reports, csv)?;
+        println!("{}", fig_gemm::roofline_plot("uhd630")?);
+        matched = true;
+    }
+    if want("f4b") {
+        emit(&fig_gemm::fig4b(), reports, csv)?;
+        matched = true;
+    }
+    if want("f4c") {
+        emit(&fig_gemm::fig4c(), reports, csv)?;
+        matched = true;
+    }
+    if want("f5") {
+        emit(&fig_gemm::fig5a(), reports, csv)?;
+        println!("{}", fig_gemm::roofline_plot("mali-g71")?);
+        emit(&fig_gemm::fig5_regions(), reports, csv)?;
+        matched = true;
+    }
+    for (fid, net, bed) in [
+        ("f6", "resnet", "hikey960"),
+        ("f7", "resnet", "i7-6700k"),
+        ("f8", "vgg", "hikey960"),
+        ("f9", "vgg", "i7-6700k"),
+    ] {
+        if want(fid) {
+            emit(&fig_network::fig_network(net, bed)?, reports, csv)?;
+            matched = true;
+        }
+    }
+    anyhow::ensure!(matched, "unknown figure id {id:?} (see --help)");
+    Ok(())
+}
+
+fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+    let device = args
+        .get("device")
+        .ok_or_else(|| anyhow::anyhow!("tune needs --device (see `repro devices`)"))?;
+    let dev = device_by_name(device)?;
+    let strat = strategy_by_name(args.get("strategy").unwrap_or("exhaustive"))?;
+    let db_path =
+        PathBuf::from(args.get("db").unwrap_or("reports/selections.json"));
+    let mut db = if db_path.exists() {
+        SelectionDb::load(&db_path)?
+    } else {
+        SelectionDb::new()
+    };
+
+    for g in args.get_all("gemm") {
+        let dims: Vec<u64> = g
+            .split('x')
+            .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad gemm spec {g:?}")))
+            .collect::<anyhow::Result<_>>()?;
+        let [m, n, k] = dims[..] else {
+            anyhow::bail!("gemm spec must be MxNxK, got {g:?}");
+        };
+        let r = tune_gemm(&dev, GemmProblem::new(m, n, k), strat.as_ref())
+            .ok_or_else(|| anyhow::anyhow!("no feasible gemm config on {device}"))?;
+        println!(
+            "gemm {m}x{n}x{k} on {device}: {} @ {:.1} GF ({} evals, {} infeasible)",
+            r.config.name(),
+            r.gflops,
+            r.evaluated,
+            r.infeasible
+        );
+        db.put_gemm(SelectionKey::gemm(device, m, n, k), r.config, r.gflops);
+    }
+
+    if args.has("networks") {
+        for net in ["vgg", "resnet"] {
+            for layer in portable_kernels::nn::network_layers(net)? {
+                let batch = 1;
+                let r = tune_conv(&dev, &layer, batch, strat.as_ref())
+                    .ok_or_else(|| anyhow::anyhow!("no feasible conv config"))?;
+                println!(
+                    "{net}/{}: {} @ {:.1} GF",
+                    layer.name,
+                    r.config.name(),
+                    r.gflops
+                );
+                db.put_conv(
+                    SelectionKey::conv(
+                        device,
+                        layer.window,
+                        layer.stride,
+                        layer.in_h,
+                        layer.in_w,
+                        layer.in_c,
+                        layer.out_c,
+                        batch,
+                    ),
+                    r.config,
+                    r.gflops,
+                );
+            }
+        }
+    }
+    if let Some(parent) = db_path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    db.save(&db_path)?;
+    println!("selection DB ({} entries) -> {}", db.len(), db_path.display());
+    Ok(())
+}
+
+fn cmd_network(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let net = args.get("network").unwrap_or("resnet").to_string();
+    let implementation = args.get("impl").unwrap_or("xla").to_string();
+    let iters = args.usize_or("iters", 3)?;
+
+    let store = ArtifactStore::open(artifacts)?;
+    let (handle, join) = EngineHandle::spawn(artifacts)?;
+    let runner = NetworkRunner::new(handle.clone());
+    let report = runner.run_network(&store, &net, &implementation, iters)?;
+    let mut table = Report::new(
+        &format!("{net} via {implementation} (measured, PJRT CPU)"),
+        &["layer", "GFLOP", "time (ms)", "gflops", "scaled"],
+    );
+    for l in &report.layers {
+        table.row(vec![
+            l.layer.clone(),
+            format!("{:.3}", l.flops as f64 / 1e9),
+            format!("{:.2}", l.elapsed_s * 1e3),
+            format!("{:.2}", l.gflops),
+            l.scaled_from.clone().unwrap_or_default(),
+        ]);
+    }
+    table.note(format!(
+        "total: {:.1} ms, {:.2} GFLOP/s over {} layers",
+        report.total_time_s * 1e3,
+        report.total_gflops(),
+        report.layers.len()
+    ));
+    println!("{}", table.render());
+    handle.shutdown();
+    let _ = join.join();
+    Ok(())
+}
+
+fn cmd_run(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+    let name = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow::anyhow!("run needs an artifact name"))?
+        .clone();
+    let iters = args.usize_or("iters", 5)?;
+    let store = ArtifactStore::open(artifacts)?;
+    let meta = store.get(&name)?.clone();
+    let (handle, join) = EngineHandle::spawn(artifacts)?;
+    let inputs = handle.synth_inputs(&name, 7)?;
+    handle.warm(&name)?;
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let out = handle.run(&name, inputs.clone())?;
+        best = best.min(out.elapsed.as_secs_f64());
+    }
+    println!(
+        "{name}: {:.3} ms best of {iters}, {:.2} GFLOP/s ({} flops)",
+        best * 1e3,
+        meta.flops as f64 / best / 1e9,
+        meta.flops
+    );
+    handle.shutdown();
+    let _ = join.join();
+    Ok(())
+}
+
+fn real_main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    if args.has("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    let reports = PathBuf::from(args.get("reports").unwrap_or("reports"));
+
+    match args.positional[0].as_str() {
+        "devices" => {
+            for d in all_devices() {
+                println!("{:>14}  {d}", d.id);
+            }
+            Ok(())
+        }
+        "figures" => {
+            cmd_figures(args.get("id").unwrap_or("all"), &reports, args.has("csv"))
+        }
+        "tune" => cmd_tune(&args),
+        "network" => cmd_network(&artifacts, &args),
+        "run" => cmd_run(&artifacts, &args),
+        "tune-measured" => {
+            let group = args.get("group").unwrap_or("gemm").to_string();
+            let iters = args.usize_or("iters", 3)?;
+            let store = ArtifactStore::open(&artifacts)?;
+            let mut engine = portable_kernels::runtime::Engine::new(store)?;
+            let tuning = portable_kernels::tuner::tune_measured(
+                &mut engine, &group, iters)?;
+            let mut table = Report::new(
+                &format!("measured winners, group {group:?} (best of {iters})"),
+                &["problem", "winner", "config", "ms", "GF/s"],
+            );
+            for problem in tuning.problems().cloned().collect::<Vec<_>>() {
+                let w = tuning.winner(&problem).expect("non-empty");
+                table.row(vec![
+                    problem.clone(),
+                    w.artifact.clone(),
+                    w.config.clone().unwrap_or_else(|| w.implementation.clone()),
+                    format!("{:.3}", w.best.as_secs_f64() * 1e3),
+                    format!("{:.2}", w.gflops),
+                ]);
+            }
+            println!("{}", table.render());
+            Ok(())
+        }
+        "artifacts" => {
+            let store = ArtifactStore::open(&artifacts)?;
+            for m in store.iter() {
+                println!(
+                    "{:>40}  {:5}  {:6}  {:.3} GFLOP",
+                    m.name,
+                    m.kind,
+                    m.implementation,
+                    m.flops as f64 / 1e9
+                );
+            }
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

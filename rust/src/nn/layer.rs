@@ -1,0 +1,171 @@
+//! Convolution layer specification (rows of paper Tables 3 & 4).
+
+
+/// Spatial padding convention.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Padding {
+    /// Output spatial size = ceil(input / stride).
+    Same,
+    /// No padding.
+    Valid,
+}
+
+/// One 2D convolution layer: NHWC input, RSCK filter, NHWK output.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ConvLayer {
+    /// Layer name as printed in the paper's tables, e.g. "conv3_2".
+    pub name: String,
+    /// Square window size R (= S).
+    pub window: u32,
+    /// Spatial stride.
+    pub stride: u32,
+    pub in_h: u32,
+    pub in_w: u32,
+    pub in_c: u32,
+    pub out_c: u32,
+    pub padding: Padding,
+}
+
+impl ConvLayer {
+    /// Construct a SAME-padded layer (the common case in both tables).
+    pub fn same(
+        name: &str,
+        window: u32,
+        stride: u32,
+        in_h: u32,
+        in_w: u32,
+        in_c: u32,
+        out_c: u32,
+    ) -> Self {
+        Self {
+            name: name.into(),
+            window,
+            stride,
+            in_h,
+            in_w,
+            in_c,
+            out_c,
+            padding: Padding::Same,
+        }
+    }
+
+    pub fn out_h(&self) -> u32 {
+        match self.padding {
+            Padding::Same => self.in_h.div_ceil(self.stride),
+            Padding::Valid => (self.in_h - self.window) / self.stride + 1,
+        }
+    }
+
+    pub fn out_w(&self) -> u32 {
+        match self.padding {
+            Padding::Same => self.in_w.div_ceil(self.stride),
+            Padding::Valid => (self.in_w - self.window) / self.stride + 1,
+        }
+    }
+
+    /// Direct-convolution flops (2 x madds), as the paper's gigaflop
+    /// figures normalize.
+    pub fn flops(&self, batch: u32) -> u64 {
+        2 * batch as u64
+            * self.out_h() as u64
+            * self.out_w() as u64
+            * self.out_c as u64
+            * (self.window as u64).pow(2)
+            * self.in_c as u64
+    }
+
+    /// Bytes touched at least once (input + filter + output), f32.
+    pub fn min_bytes(&self, batch: u32) -> u64 {
+        let input =
+            batch as u64 * self.in_h as u64 * self.in_w as u64 * self.in_c as u64;
+        let filter =
+            (self.window as u64).pow(2) * self.in_c as u64 * self.out_c as u64;
+        let output = batch as u64
+            * self.out_h() as u64
+            * self.out_w() as u64
+            * self.out_c as u64;
+        4 * (input + filter + output)
+    }
+
+    /// Operational intensity (flop/byte) at minimal traffic.
+    pub fn intensity(&self, batch: u32) -> f64 {
+        self.flops(batch) as f64 / self.min_bytes(batch) as f64
+    }
+
+    /// The GEMM this layer lowers to under im2col:
+    /// `(batch*OH*OW) x (K) x (R*S*C)`.
+    pub fn im2col_gemm(&self, batch: u32) -> (u64, u64, u64) {
+        (
+            batch as u64 * self.out_h() as u64 * self.out_w() as u64,
+            self.out_c as u64,
+            (self.window as u64).pow(2) * self.in_c as u64,
+        )
+    }
+
+    /// Spatially scale the layer (channels intact) — used to shrink
+    /// interpreter-measured variants; see python/compile/manifests.py.
+    pub fn scaled_spatial(&self, max_hw: u32) -> ConvLayer {
+        let mut l = self.clone();
+        l.in_h = l.in_h.min(max_hw);
+        l.in_w = l.in_w.min(max_hw);
+        l
+    }
+}
+
+impl std::fmt::Display for ConvLayer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {}x{}/s{} {}x{}x{} -> {}x{}x{}",
+            self.name,
+            self.window,
+            self.window,
+            self.stride,
+            self.in_h,
+            self.in_w,
+            self.in_c,
+            self.out_h(),
+            self.out_w(),
+            self.out_c
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_shapes() {
+        let l = ConvLayer::same("t", 3, 2, 56, 56, 64, 64);
+        assert_eq!((l.out_h(), l.out_w()), (28, 28));
+        let l1 = ConvLayer::same("t", 3, 1, 224, 224, 3, 64);
+        assert_eq!((l1.out_h(), l1.out_w()), (224, 224));
+    }
+
+    #[test]
+    fn valid_padding_shapes() {
+        // ResNet stem: 230x230 pre-padded input, 7x7/s2 VALID -> 112.
+        let l = ConvLayer {
+            padding: Padding::Valid,
+            ..ConvLayer::same("stem", 7, 2, 230, 230, 3, 64)
+        };
+        assert_eq!((l.out_h(), l.out_w()), (112, 112));
+    }
+
+    #[test]
+    fn flops_match_formula() {
+        let l = ConvLayer::same("t", 3, 1, 8, 8, 4, 16);
+        assert_eq!(l.flops(2), 2 * 2 * 8 * 8 * 16 * 9 * 4);
+        assert_eq!(l.flops(4), 2 * l.flops(2));
+    }
+
+    #[test]
+    fn im2col_gemm_dims() {
+        let l = ConvLayer::same("t", 3, 1, 28, 28, 128, 256);
+        assert_eq!(l.im2col_gemm(1), (28 * 28, 256, 9 * 128));
+        // Pointwise: K-dim is just C.
+        let p = ConvLayer::same("t", 1, 1, 28, 28, 256, 512);
+        assert_eq!(p.im2col_gemm(4), (4 * 28 * 28, 512, 256));
+    }
+}

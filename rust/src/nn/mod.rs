@@ -1,0 +1,21 @@
+//! Network layer tables: VGG-16 (paper Table 3) and ResNet-50 (Table 4).
+
+mod layer;
+mod resnet;
+mod vgg;
+
+pub use layer::{ConvLayer, Padding};
+pub use resnet::resnet50_layers;
+pub use vgg::vgg16_layers;
+
+/// Both networks, keyed the way the figures are (F6/F7 = resnet,
+/// F8/F9 = vgg).
+pub fn network_layers(net: &str) -> crate::error::Result<Vec<ConvLayer>> {
+    match net {
+        "vgg" | "vgg16" => Ok(vgg16_layers()),
+        "resnet" | "resnet50" => Ok(resnet50_layers()),
+        other => Err(crate::error::Error::NotFound(format!(
+            "network {other:?} (use vgg | resnet)"
+        ))),
+    }
+}

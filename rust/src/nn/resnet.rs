@@ -1,0 +1,91 @@
+//! ResNet-50 distinct convolution layers — paper Table 4, verbatim.
+
+use super::layer::{ConvLayer, Padding};
+
+/// The 26 distinct ResNet-50 convolution shapes benchmarked in the paper
+/// (Figs. 6 & 7).  The stem is listed with its pre-padded 230x230 input
+/// and VALID padding, exactly as Table 4 does.
+pub fn resnet50_layers() -> Vec<ConvLayer> {
+    let mut layers = vec![ConvLayer {
+        padding: Padding::Valid,
+        ..ConvLayer::same("conv1_1", 7, 2, 230, 230, 3, 64)
+    }];
+    let same = [
+        ("conv2_1", 1, 1, 56, 56, 64, 256),
+        ("conv2_2", 1, 1, 56, 56, 64, 64),
+        ("conv2_3", 3, 1, 56, 56, 64, 64),
+        ("conv2_4", 1, 1, 56, 56, 256, 64),
+        ("conv2_5", 3, 2, 56, 56, 64, 64),
+        ("conv3_1", 1, 1, 28, 28, 64, 256),
+        ("conv3_2", 1, 1, 28, 28, 256, 512),
+        ("conv3_3", 1, 1, 28, 28, 256, 128),
+        ("conv3_4", 3, 1, 28, 28, 128, 128),
+        ("conv3_5", 1, 1, 28, 28, 128, 512),
+        ("conv3_6", 1, 1, 28, 28, 512, 128),
+        ("conv3_7", 3, 2, 28, 28, 128, 128),
+        ("conv4_1", 1, 1, 14, 14, 128, 512),
+        ("conv4_2", 1, 1, 14, 14, 512, 1024),
+        ("conv4_3", 1, 1, 14, 14, 512, 256),
+        ("conv4_4", 3, 1, 14, 14, 256, 256),
+        ("conv4_5", 1, 1, 14, 14, 256, 1024),
+        ("conv4_6", 1, 1, 14, 14, 1024, 256),
+        ("conv4_7", 3, 2, 14, 14, 256, 256),
+        ("conv5_1", 1, 1, 7, 7, 256, 1024),
+        ("conv5_2", 1, 1, 7, 7, 1024, 2048),
+        ("conv5_3", 1, 1, 7, 7, 1024, 512),
+        ("conv5_4", 3, 1, 7, 7, 512, 512),
+        ("conv5_5", 1, 1, 7, 7, 512, 2048),
+        ("conv5_6", 1, 1, 7, 7, 2048, 512),
+    ];
+    layers.extend(same.iter().map(|&(n, w, s, h, wd, c, k)| {
+        ConvLayer::same(n, w, s, h, wd, c, k)
+    }));
+    layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table4_row_count() {
+        assert_eq!(resnet50_layers().len(), 26);
+    }
+
+    #[test]
+    fn stem_output_is_112() {
+        let stem = &resnet50_layers()[0];
+        assert_eq!((stem.out_h(), stem.out_w(), stem.out_c), (112, 112, 64));
+    }
+
+    #[test]
+    fn downsampling_layers() {
+        let layers = resnet50_layers();
+        let by_name = |n: &str| layers.iter().find(|l| l.name == n).unwrap();
+        assert_eq!(by_name("conv2_5").out_h(), 28);
+        assert_eq!(by_name("conv3_7").out_h(), 14);
+        assert_eq!(by_name("conv4_7").out_h(), 7);
+    }
+
+    #[test]
+    fn pointwise_majority() {
+        // 18 of 26 distinct layers are 1x1 — why ResNet is GEMM-bound
+        // (paper §5.3 discussion).
+        let ones = resnet50_layers()
+            .iter()
+            .filter(|l| l.window == 1)
+            .count();
+        assert_eq!(ones, 18);
+    }
+
+    #[test]
+    fn matches_python_table() {
+        // Spot-check the rows most load-bearing for the figures.
+        let layers = resnet50_layers();
+        let by_name = |n: &str| layers.iter().find(|l| l.name == n).unwrap();
+        let c52 = by_name("conv5_2");
+        assert_eq!((c52.in_c, c52.out_c), (1024, 2048));
+        let c44 = by_name("conv4_4");
+        assert_eq!((c44.window, c44.in_c, c44.out_c), (3, 256, 256));
+    }
+}

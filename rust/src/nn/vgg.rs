@@ -1,0 +1,45 @@
+//! VGG-16 distinct convolution layers — paper Table 3, verbatim.
+
+use super::layer::ConvLayer;
+
+/// The nine distinct VGG-16 convolution shapes benchmarked in the paper
+/// (Figs. 8 & 9).  All are 3x3 stride-1 SAME convolutions.
+pub fn vgg16_layers() -> Vec<ConvLayer> {
+    vec![
+        ConvLayer::same("conv1_1", 3, 1, 224, 224, 3, 64),
+        ConvLayer::same("conv1_2", 3, 1, 224, 224, 64, 64),
+        ConvLayer::same("conv2_1", 3, 1, 112, 112, 64, 128),
+        ConvLayer::same("conv2_2", 3, 1, 112, 112, 128, 128),
+        ConvLayer::same("conv3_1", 3, 1, 56, 56, 128, 256),
+        ConvLayer::same("conv3_2", 3, 1, 56, 56, 256, 256),
+        ConvLayer::same("conv4_1", 3, 1, 28, 28, 256, 512),
+        ConvLayer::same("conv4_2", 3, 1, 28, 28, 512, 512),
+        ConvLayer::same("conv5_1", 3, 1, 14, 14, 512, 512),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_row_count_and_shapes() {
+        let layers = vgg16_layers();
+        assert_eq!(layers.len(), 9);
+        for l in &layers {
+            assert_eq!(l.window, 3);
+            assert_eq!(l.stride, 1);
+            assert_eq!(l.out_h(), l.in_h); // SAME s1 preserves space
+        }
+        let c42 = layers.iter().find(|l| l.name == "conv4_2").unwrap();
+        assert_eq!((c42.in_c, c42.out_c), (512, 512));
+        assert_eq!((c42.out_h(), c42.out_w()), (28, 28));
+    }
+
+    #[test]
+    fn conv1_1_flops() {
+        // 2 * 224^2 * 64 * 9 * 3 ≈ 0.173 GFLOP at batch 1.
+        let l = &vgg16_layers()[0];
+        assert_eq!(l.flops(1), 2 * 224 * 224 * 64 * 9 * 3);
+    }
+}

@@ -1,0 +1,303 @@
+//! Modeled GEMM throughput for one (problem, configuration, device)
+//! triple — the generator behind the Fig. 4 / Fig. 5 roofline sweeps.
+
+use crate::config::GemmConfig;
+use crate::device::DeviceSpec;
+use crate::error::Result;
+
+use super::memory::{
+    cpu_prefers_blocked, effective_bandwidth, overlap_factor,
+    vector_efficiency, Access,
+};
+use super::occupancy::{cu_utilization, effective_fraction, occupancy};
+use super::registers::gemm_regs;
+use super::reuse::gemm_global_traffic;
+use super::{Bound, Estimate, CPU_SIMT_PENALTY, LAUNCH_OVERHEAD_S};
+
+/// On-chip (local memory / L1 cache) bandwidth relative to DRAM.
+const ONCHIP_BW_RATIO: f64 = 6.0;
+
+/// One GEMM problem instance (C is M x N, contraction over K).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmProblem {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl GemmProblem {
+    pub fn new(m: u64, n: u64, k: u64) -> Self {
+        Self { m, n, k }
+    }
+
+    /// Useful flops: 2MNK (multiply + add).
+    pub fn flops(&self) -> u64 {
+        2 * self.m * self.n * self.k
+    }
+
+    /// Minimum possible traffic in bytes (each operand touched once) —
+    /// defines the operational intensity used as the roofline x-axis,
+    /// matching the paper's "flop per byte of data read or written".
+    pub fn min_bytes(&self) -> u64 {
+        4 * (self.m * self.k + self.k * self.n + 2 * self.m * self.n)
+    }
+
+    /// Operational intensity, flop/byte.
+    pub fn intensity(&self) -> f64 {
+        self.flops() as f64 / self.min_bytes() as f64
+    }
+}
+
+/// Model the throughput of `cfg` on `dev` for `p`.
+///
+/// Returns `Error::Infeasible` for configurations that cannot launch on
+/// the device (local-memory or register-file overflow) — exactly the
+/// configurations the paper's tuner discards up front.
+pub fn gemm_estimate(
+    dev: &DeviceSpec,
+    p: GemmProblem,
+    cfg: &GemmConfig,
+) -> Result<Estimate> {
+    let flops = p.flops();
+    let bm = cfg.block_m() as u64;
+    let bn = cfg.block_n() as u64;
+    let wgs = p.m.div_ceil(bm) * p.n.div_ceil(bn);
+
+    // --- registers & occupancy (§2.2.1) ---
+    let regs = gemm_regs(cfg);
+    let spilled = regs > dev.max_regs_per_thread;
+    let local_per_wg = cfg.local_mem_bytes(dev.cache_line_elems());
+    let occ = occupancy(dev, regs, cfg.work_group(), local_per_wg)?;
+    let occ_frac = effective_fraction(&occ, dev, cfg.work_group(), wgs);
+
+    // --- global traffic (§2.2.3) ---
+    let bytes = 4 * gemm_global_traffic(p.m, p.n, p.k, bm, bn);
+    // Spilled accumulators bounce through scratch every k-panel: one
+    // store + one load of the overflow per panel step, at per-lane
+    // scatter (scalar-transaction) bandwidth.
+    let spill_bytes = if spilled {
+        let overflow = (regs - dev.max_regs_per_thread) as u64;
+        let threads = wgs * cfg.work_group() as u64;
+        8 * overflow * threads * (p.k / cfg.block_k.max(1) as u64).max(1)
+    } else {
+        0
+    };
+
+    // --- access pattern (§2.2.2) ---
+    let access = if cfg.use_local {
+        Access::Coalesced // staging loads are coalesced by construction
+    } else if cpu_prefers_blocked(dev) || dev.local_mem_bytes == 0 {
+        // CPUs stream blocked panels through the cache, and cache-backed
+        // GPUs (Mali-style, no local memory) are built to do the same —
+        // the very reason the paper's `_noloc` configs exist (§2.2.3).
+        Access::Coalesced
+    } else {
+        // Direct loads on an LDS-style GPU: the A-panel walk is strided
+        // by the K pitch.
+        Access::Strided {
+            vec: cfg.rt_n.min(dev.native_vector_width),
+            stride_bytes: (p.k * 4).min(u32::MAX as u64) as u32,
+        }
+    };
+    let bw = effective_bandwidth(dev, access, cfg.use_local);
+    let scalar_bw =
+        dev.mem_bw_gbps * (4.0 / dev.cache_line_bytes as f64);
+    let t_mem = bytes as f64 / (bw * 1e9)
+        + spill_bytes as f64 / (scalar_bw * 1e9);
+
+    // --- compute (§2.2.4) ---
+    let vec_eff = vector_efficiency(dev, cfg.rt_n);
+    let util = cu_utilization(wgs, dev.compute_units);
+    // OpenCL-style work-item emulation on CPUs costs versus a native
+    // JIT'd library (the paper's SYCL-on-CPU vs MKL-DNN gap, §5.3).
+    let host_eff = if dev.class == crate::device::DeviceClass::Cpu {
+        CPU_SIMT_PENALTY
+    } else {
+        1.0
+    };
+    let eff_peak = dev.peak_gflops * 1e9
+        * occ_frac.max(0.05)
+        * vec_eff
+        * util.max(1e-3)
+        * host_eff;
+    let t_comp = flops as f64 / eff_peak;
+
+    // --- on-chip reuse bandwidth (Eq. 3) ---
+    // Every flop consumes one register-tile operand element per
+    // `reuse_ratio` flops, streamed from local memory / cache.  This is
+    // the ceiling that rewards square register tiles (Fig. 4b) and
+    // larger tiles at high intensity (Fig. 4a).
+    let onchip_bw = dev.mem_bw_gbps
+        * ONCHIP_BW_RATIO
+        * if cfg.use_local && dev.local_mem_bytes > 0 {
+            dev.local_mem_speedup
+        } else {
+            1.0
+        };
+    let t_onchip =
+        flops as f64 * 4.0 / (cfg.reuse_ratio() * onchip_bw * 1e9);
+
+    // --- combine (bounded overlap) ---
+    // Double buffering needs real local memory to prefetch into; on
+    // cache-only devices it just doubles the cache footprint (§2.2.3).
+    let db_effective = cfg.double_buffer
+        && cfg.use_local
+        && dev.local_mem_bytes > 0;
+    let ov = overlap_factor(occ_frac, db_effective);
+    let mut time = t_comp.max(t_mem).max(t_onchip)
+        + (1.0 - ov) * t_comp.min(t_mem);
+    time += LAUNCH_OVERHEAD_S;
+
+    let bound = if util < 0.5 {
+        Bound::Launch
+    } else if t_mem > t_comp {
+        Bound::Memory
+    } else {
+        Bound::Compute
+    };
+
+    Ok(Estimate {
+        gflops: flops as f64 / time / 1e9,
+        time_s: time,
+        flops,
+        global_bytes: bytes + spill_bytes,
+        intensity: p.intensity(),
+        occupancy: occ_frac,
+        regs_per_thread: regs,
+        spilled,
+        bound,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::device_by_name;
+
+    fn est(dev: &str, p: (u64, u64, u64), cfg: &str) -> Estimate {
+        gemm_estimate(
+            &device_by_name(dev).unwrap(),
+            GemmProblem::new(p.0, p.1, p.2),
+            &GemmConfig::parse(cfg).unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn never_exceeds_roofline() {
+        for dev in crate::device::all_devices() {
+            for cfg in GemmConfig::table2() {
+                for &(m, n, k) in
+                    &[(64, 64, 64), (512, 512, 512), (1024, 64, 1024)]
+                {
+                    let p = GemmProblem::new(m, n, k);
+                    if let Ok(e) = gemm_estimate(&dev, p, &cfg) {
+                        assert!(
+                            e.gflops <= dev.roofline_gflops(e.intensity) * 1.001,
+                            "{} {} {:?}: {} > roofline",
+                            dev.id, cfg.name(), (m, n, k), e.gflops
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Paper Fig. 4a: on the Intel GPU, 8x4_8x16_loc beats 4x4_8x8_loc at
+    /// high intensity ("increasing the number of registers from 4x4 to
+    /// 8x4 per thread significantly improves performance").
+    #[test]
+    fn fig4a_bigger_register_tile_wins_at_high_intensity() {
+        let big = est("uhd630", (1024, 1024, 1024), "8x4_8x16_loc");
+        let small = est("uhd630", (1024, 1024, 1024), "4x4_8x8_loc");
+        assert!(big.gflops > small.gflops);
+    }
+
+    /// Paper Fig. 4b: square register tile beats non-square at equal
+    /// register count.
+    #[test]
+    fn fig4b_square_beats_nonsquare() {
+        let sq = est("uhd630", (512, 512, 512), "4x4_8x8_loc");
+        let ns = est("uhd630", (512, 512, 512), "8x2_4x16_loc");
+        assert!(sq.gflops > ns.gflops, "{} vs {}", sq.gflops, ns.gflops);
+    }
+
+    /// Paper Fig. 4c: double buffering improves throughput.
+    #[test]
+    fn fig4c_double_buffering_helps() {
+        let db = est("uhd630", (512, 512, 512), "8x4_8x16_loc_db");
+        let nodb = est("uhd630", (512, 512, 512), "8x4_8x16_loc");
+        assert!(db.gflops > nodb.gflops);
+    }
+
+    /// Paper Fig. 5 region A: small matrices favour small blocks (more
+    /// work-groups, better utilization).
+    #[test]
+    fn fig5_region_a_small_matrices_prefer_small_blocks() {
+        let small_cfg = est("mali-g71", (64, 64, 64), "4x4_8x8_noloc");
+        let big_cfg = est("mali-g71", (64, 64, 64), "8x4_8x16_noloc");
+        assert!(
+            small_cfg.gflops > big_cfg.gflops,
+            "{} vs {}", small_cfg.gflops, big_cfg.gflops
+        );
+    }
+
+    /// Paper Fig. 5 region C: large matrices favour the bigger macro-tile.
+    #[test]
+    fn fig5_region_c_large_matrices_prefer_big_blocks() {
+        let big_cfg = est("mali-g71", (1024, 1024, 1024), "8x4_8x16_noloc");
+        let small_cfg = est("mali-g71", (1024, 1024, 1024), "4x4_8x8_noloc");
+        assert!(big_cfg.gflops > small_cfg.gflops);
+    }
+
+    /// On Mali (no local memory), `_loc` staging costs; `_noloc` is the
+    /// right choice (paper §2.2.3).
+    #[test]
+    fn mali_prefers_noloc() {
+        let loc = est("mali-g71", (512, 512, 512), "8x4_4x8_loc");
+        let noloc = est("mali-g71", (512, 512, 512), "8x4_4x8_noloc");
+        assert!(noloc.gflops > loc.gflops);
+    }
+
+    #[test]
+    fn spill_causes_cliff() {
+        // A pathological 16x16 register tile spills everywhere.
+        let huge = GemmConfig::parse("16x16_8x8_noloc").unwrap();
+        let sane = GemmConfig::parse("8x4_8x16_noloc").unwrap();
+        let dev = device_by_name("r9-nano").unwrap();
+        let p = GemmProblem::new(1024, 1024, 1024);
+        let h = gemm_estimate(&dev, p, &huge).unwrap();
+        let s = gemm_estimate(&dev, p, &sane).unwrap();
+        assert!(h.spilled && !s.spilled);
+        assert!(h.gflops < s.gflops / 2.0, "{} vs {}", h.gflops, s.gflops);
+    }
+
+    #[test]
+    fn local_overflow_infeasible_on_r9() {
+        // 32 KiB LDS: a config needing more must be rejected.
+        let dev = device_by_name("r9-nano").unwrap();
+        let cfg = GemmConfig {
+            rt_m: 8, rt_n: 8, wg_r: 16, wg_c: 16,
+            use_local: true, double_buffer: true,
+            ..Default::default()
+        };
+        assert!(cfg.local_mem_bytes(dev.cache_line_elems()) > 32 * 1024);
+        assert!(gemm_estimate(&dev, GemmProblem::new(512, 512, 512), &cfg)
+            .is_err());
+    }
+
+    #[test]
+    fn monotone_in_device_capability() {
+        // Doubling bandwidth or peak never lowers modeled throughput.
+        let p = GemmProblem::new(512, 512, 512);
+        let cfg = GemmConfig::parse("8x4_8x16_loc").unwrap();
+        let base = device_by_name("uhd630").unwrap();
+        let mut fast = base.clone();
+        fast.mem_bw_gbps *= 2.0;
+        let mut strong = base.clone();
+        strong.peak_gflops *= 2.0;
+        let e0 = gemm_estimate(&base, p, &cfg).unwrap().gflops;
+        assert!(gemm_estimate(&fast, p, &cfg).unwrap().gflops >= e0);
+        assert!(gemm_estimate(&strong, p, &cfg).unwrap().gflops >= e0);
+    }
+}

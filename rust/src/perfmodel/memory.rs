@@ -1,0 +1,155 @@
+//! Memory-transaction model (paper §2.2.2) and effective bandwidth.
+
+use crate::device::{DeviceClass, DeviceSpec};
+
+/// Access pattern of a kernel's dominant global loads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    /// Work-group threads read adjacent elements: every fetched cache
+    /// line is fully used.
+    Coalesced,
+    /// Threads read `vec` contiguous elements each, but consecutive
+    /// threads are `stride_bytes` apart: lines are partially used.
+    Strided { vec: u32, stride_bytes: u32 },
+}
+
+/// Fraction of each fetched cache line that carries useful data
+/// (paper §2.2.2: "loading a block of data will reduce the number of
+/// memory transactions").
+pub fn line_utilization(dev: &DeviceSpec, access: Access) -> f64 {
+    match access {
+        Access::Coalesced => 1.0,
+        Access::Strided { vec, stride_bytes } => {
+            let useful = (vec * 4).min(dev.cache_line_bytes) as f64;
+            let span = stride_bytes.max(vec * 4) as f64;
+            if span <= dev.cache_line_bytes as f64 {
+                // Several threads' elements share a line.
+                1.0
+            } else {
+                useful / dev.cache_line_bytes as f64
+            }
+        }
+    }
+}
+
+/// Effective global bandwidth for a kernel, GB/s.
+///
+/// * `access` — the dominant load pattern;
+/// * `through_local` — panels staged via local memory (coalesced staging
+///   loads; on devices with *no* local memory the staging writes compete
+///   with the cache, costing `local_mem_speedup < 1` as the paper notes
+///   for Mali G-71).
+pub fn effective_bandwidth(
+    dev: &DeviceSpec,
+    access: Access,
+    through_local: bool,
+) -> f64 {
+    let base = dev.mem_bw_gbps;
+    if through_local {
+        if dev.local_mem_bytes == 0 {
+            // "For such devices using local memory can be costly" (§2.2.3).
+            base * dev.local_mem_speedup.min(1.0)
+        } else {
+            // Staging loads are coalesced by construction.
+            base
+        }
+    } else {
+        base * line_utilization(dev, access)
+    }
+}
+
+/// Vector-unit efficiency (paper §2.2.4): how much of peak ALU throughput
+/// a kernel with `vec`-wide operations extracts.
+///
+/// * Devices with vector ALUs want `vec == native_vector_width`; narrower
+///   vectors idle lanes (floored at scalar issue, 1/width).
+/// * Devices with scalar-per-lane ALUs (GCN) get full throughput at any
+///   width; wider vectors only add instruction-level parallelism, which
+///   matters when occupancy is low (handled by the caller).
+pub fn vector_efficiency(dev: &DeviceSpec, vec: u32) -> f64 {
+    if !dev.has_vector_math {
+        return 1.0;
+    }
+    let w = dev.native_vector_width as f64;
+    (vec.min(dev.native_vector_width) as f64 / w).max(1.0 / w)
+}
+
+/// Overlap of compute and memory phases, 0..=1.  Double buffering
+/// (paper §3.1.2 "software pre-fetching") approaches full overlap; without
+/// it, overlap degrades with occupancy (fewer resident threads to switch
+/// to while a load is in flight).
+pub fn overlap_factor(occupancy_fraction: f64, double_buffer: bool) -> f64 {
+    if double_buffer {
+        0.95
+    } else {
+        0.45 + 0.40 * occupancy_fraction.clamp(0.0, 1.0)
+    }
+}
+
+/// CPU-class devices prefer blocked accesses over GPU-style interleaved
+/// coalescing (paper §3.1.1 last paragraph): a GPU-coalesced layout costs
+/// them cache-line splits, a blocked layout is free.
+pub fn cpu_prefers_blocked(dev: &DeviceSpec) -> bool {
+    dev.class == DeviceClass::Cpu
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::device_by_name;
+
+    #[test]
+    fn coalesced_uses_full_lines() {
+        let dev = device_by_name("r9-nano").unwrap();
+        assert_eq!(line_utilization(&dev, Access::Coalesced), 1.0);
+    }
+
+    #[test]
+    fn scattered_scalar_wastes_lines() {
+        let dev = device_by_name("r9-nano").unwrap(); // 128-byte lines
+        let u = line_utilization(
+            &dev,
+            Access::Strided { vec: 1, stride_bytes: 512 },
+        );
+        assert!((u - 4.0 / 128.0).abs() < 1e-12);
+        // Wider vectors recover utilization.
+        let u4 = line_utilization(
+            &dev,
+            Access::Strided { vec: 4, stride_bytes: 512 },
+        );
+        assert!(u4 > u);
+    }
+
+    #[test]
+    fn local_staging_on_maliless_device_costs() {
+        let mali = device_by_name("mali-g71").unwrap();
+        let bw_local = effective_bandwidth(&mali, Access::Coalesced, true);
+        let bw_direct = effective_bandwidth(&mali, Access::Coalesced, false);
+        assert!(bw_local < bw_direct, "local staging must cost on Mali");
+    }
+
+    #[test]
+    fn local_staging_on_gpu_with_lds_is_free() {
+        let amd = device_by_name("r9-nano").unwrap();
+        let bw_local = effective_bandwidth(&amd, Access::Coalesced, true);
+        assert_eq!(bw_local, amd.mem_bw_gbps);
+    }
+
+    #[test]
+    fn vector_efficiency_saturates_at_native_width() {
+        let intel = device_by_name("uhd630").unwrap(); // native 4
+        assert!(vector_efficiency(&intel, 1) < vector_efficiency(&intel, 4));
+        assert_eq!(vector_efficiency(&intel, 4), vector_efficiency(&intel, 8));
+        let amd = device_by_name("r9-nano").unwrap(); // scalar-per-lane
+        assert_eq!(vector_efficiency(&amd, 1), 1.0);
+    }
+
+    #[test]
+    fn double_buffering_always_helps_overlap() {
+        for occ in [0.0, 0.3, 0.7, 1.0] {
+            assert!(overlap_factor(occ, true) > overlap_factor(occ, false));
+        }
+        // And overlap grows with occupancy.
+        assert!(overlap_factor(0.9, false) > overlap_factor(0.1, false));
+    }
+}

@@ -1,0 +1,88 @@
+//! Analytic performance model — the simulated stand-in for the paper's
+//! OpenCL device zoo (DESIGN.md §2, substitution 1).
+//!
+//! The model implements, from first principles, exactly the four
+//! performance metrics the paper's §2.2 says govern kernel performance on
+//! all of its devices:
+//!
+//! 1. **Thread reusability / occupancy** (§2.2.1) — [`occupancy`]:
+//!    resident-thread limits from register file, local memory, and
+//!    hardware thread slots; work-group tail quantization over compute
+//!    units.
+//! 2. **Memory transactions** (§2.2.2) — [`memory`]: cache-line
+//!    granularity and coalescing efficiency of each access pattern.
+//! 3. **Data reusability** (§2.2.3) — [`reuse`]: the blocked-GEMM traffic
+//!    equations and Eq. 3's register-tile reuse ratio.
+//! 4. **Vectorization** (§2.2.4) — vector-width efficiency per device
+//!    class.
+//!
+//! [`gemm`](gemm_model) and [`conv`](conv_model) combine these into a
+//! bounded-overlap roofline estimate; [`vendor`] provides the calibrated
+//! hand-tuned-library curves the paper compares against.
+
+pub mod conv_model;
+pub mod gemm_model;
+pub mod memory;
+pub mod occupancy;
+pub mod registers;
+pub mod reuse;
+pub mod vendor;
+
+pub use conv_model::{conv_estimate, ConvProblem};
+pub use gemm_model::{gemm_estimate, GemmProblem};
+pub use occupancy::{occupancy, Occupancy};
+pub use registers::{conv_regs, gemm_regs};
+pub use vendor::{vendor_conv, vendor_gemm, VendorLib};
+
+
+/// Which roofline ceiling binds the estimate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bound {
+    /// ALU throughput bound (possibly occupancy-degraded).
+    Compute,
+    /// Global-memory bandwidth bound.
+    Memory,
+    /// Launch/underutilization bound (too few work-groups).
+    Launch,
+}
+
+/// One modeled kernel execution.
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    /// Modeled throughput in GFLOP/s.
+    pub gflops: f64,
+    /// Modeled wall time in seconds.
+    pub time_s: f64,
+    /// Useful floating-point operations.
+    pub flops: u64,
+    /// Modeled global-memory traffic in bytes.
+    pub global_bytes: u64,
+    /// Operational intensity (flop/byte) — the roofline x-axis of
+    /// paper Figs. 4 & 5.
+    pub intensity: f64,
+    /// Occupancy fraction achieved (0..=1).
+    pub occupancy: f64,
+    /// Registers per thread the configuration needs.
+    pub regs_per_thread: u32,
+    /// Whether the register budget was exceeded (the Fig. 3 cliff).
+    pub spilled: bool,
+    /// Which ceiling binds.
+    pub bound: Bound,
+}
+
+impl Estimate {
+    /// Fraction of the device's roofline this estimate attains at its
+    /// operational intensity.
+    pub fn roofline_fraction(&self, dev: &crate::device::DeviceSpec) -> f64 {
+        self.gflops / dev.roofline_gflops(self.intensity)
+    }
+}
+
+/// Fixed kernel-launch overhead (driver + scheduling), seconds.  One value
+/// for all modeled GPU-class devices; measured hosts use real timings.
+pub const LAUNCH_OVERHEAD_S: f64 = 8e-6;
+
+/// Fraction of peak an OpenCL/SYCL work-item model extracts on a CPU
+/// relative to a native JIT'd library.  Calibrated to the paper's §5.3
+/// observation (SYCL-DNN max 244 GF vs MKL-DNN 366 GF on the i7-6700K).
+pub const CPU_SIMT_PENALTY: f64 = 0.55;

@@ -1,0 +1,214 @@
+//! Occupancy model (paper §2.2.1, "thread reusability").
+//!
+//! GPUs hide memory latency by switching among resident threads; how many
+//! threads can be resident is limited by the register file, the local
+//! memory, and the hardware thread slots.  The paper's Fig. 3 discussion
+//! ("if each thread requires more registers then the number of concurrent
+//! threads decreases...") is exactly this computation.
+//!
+//! Hard infeasibility (the configurations the paper's tuner rejects up
+//! front) is limited to the two real launch failures: a work-group larger
+//! than the device's work-group limit, and a local-memory tile larger
+//! than the device's local memory.  Register pressure never refuses to
+//! launch — compilers spill or re-tile — it only degrades residency.
+
+use crate::device::DeviceSpec;
+use crate::error::{Error, Result};
+
+/// Resident-thread analysis for one kernel configuration on one device.
+#[derive(Debug, Clone, Copy)]
+pub struct Occupancy {
+    /// Latency-hiding effectiveness, 0..=1: resident threads relative to
+    /// what the device needs to cover its memory latency.
+    pub fraction: f64,
+    /// Concurrent threads per compute unit.
+    pub threads_per_cu: f64,
+    /// What limited residency.
+    pub limited_by: Limit,
+}
+
+/// The binding residency constraint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Limit {
+    /// Hardware thread slots.
+    ThreadSlots,
+    /// Register-file capacity.
+    Registers,
+    /// Local-memory capacity.
+    LocalMem,
+}
+
+/// Compute occupancy for a kernel needing `regs_per_thread` registers,
+/// work-groups of `wg_threads` threads, and `local_mem_per_wg` bytes of
+/// local memory per work-group.
+pub fn occupancy(
+    dev: &DeviceSpec,
+    regs_per_thread: u32,
+    wg_threads: u32,
+    local_mem_per_wg: u32,
+) -> Result<Occupancy> {
+    if wg_threads > dev.max_wg_size {
+        return Err(Error::Infeasible {
+            device: dev.id.clone(),
+            reason: format!(
+                "work-group of {wg_threads} exceeds the device limit {}",
+                dev.max_wg_size
+            ),
+        });
+    }
+    // Spilled kernels cap their register demand at the architectural
+    // budget (the overflow lives in memory; the caller charges for it).
+    let regs = regs_per_thread.min(dev.max_regs_per_thread).max(1);
+
+    let by_slots = dev.max_threads_per_cu as f64;
+    let by_regs = dev.reg_file_per_cu as f64 / regs as f64;
+
+    let by_local = if local_mem_per_wg == 0 || dev.local_mem_bytes == 0 {
+        // No request, or no local memory: staging buffers live in the
+        // cache; no residency constraint (the speed cost is modeled in
+        // `memory::effective_bandwidth`).
+        f64::INFINITY
+    } else if local_mem_per_wg > dev.local_mem_bytes {
+        return Err(Error::Infeasible {
+            device: dev.id.clone(),
+            reason: format!(
+                "work-group needs {local_mem_per_wg} B local, device has {}",
+                dev.local_mem_bytes
+            ),
+        });
+    } else {
+        (dev.local_mem_bytes / local_mem_per_wg) as f64 * wg_threads as f64
+    };
+
+    let (threads_per_cu, limited_by) = [
+        (by_slots, Limit::ThreadSlots),
+        (by_regs, Limit::Registers),
+        (by_local, Limit::LocalMem),
+    ]
+    .into_iter()
+    .fold((f64::INFINITY, Limit::ThreadSlots), |acc, (v, l)| {
+        if v < acc.0 {
+            (v, l)
+        } else {
+            acc
+        }
+    });
+
+    let fraction =
+        (threads_per_cu / dev.latency_hiding_threads as f64).min(1.0);
+    Ok(Occupancy {
+        fraction,
+        threads_per_cu,
+        limited_by,
+    })
+}
+
+/// Occupancy corrected for how many threads the *problem* actually
+/// provides: residency is work-group granular, so with fewer work-groups
+/// than compute units only one work-group's threads are resident per CU
+/// (why the paper's region A favours larger work-groups, Fig. 5b).
+pub fn effective_fraction(
+    occ: &Occupancy,
+    dev: &DeviceSpec,
+    wg_threads: u32,
+    wgs: u64,
+) -> f64 {
+    let per_cu_avail = (wgs as f64 / dev.compute_units as f64)
+        .max(1.0)
+        * wg_threads as f64;
+    let resident = occ.threads_per_cu.min(per_cu_avail);
+    (resident / dev.latency_hiding_threads as f64).min(1.0)
+}
+
+/// Work-group tail quantization: with `wgs` work-groups over `cus`
+/// compute units, the last "wave" may be partially empty.  Returns the
+/// utilization fraction (paper §2.2.1's trade-off between work-group
+/// count and per-thread workload).
+pub fn cu_utilization(wgs: u64, cus: u32) -> f64 {
+    if wgs == 0 {
+        return 0.0;
+    }
+    let cus = cus as u64;
+    let waves = wgs.div_ceil(cus);
+    wgs as f64 / (waves * cus) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{all_devices, device_by_name};
+
+    #[test]
+    fn more_registers_never_raises_occupancy() {
+        let dev = device_by_name("r9-nano").unwrap();
+        let mut last = f64::INFINITY;
+        for regs in [16, 32, 64, 128, 256] {
+            let occ = occupancy(&dev, regs, 64, 0).unwrap();
+            assert!(occ.threads_per_cu <= last);
+            last = occ.threads_per_cu;
+        }
+    }
+
+    #[test]
+    fn register_pressure_lowers_occupancy_on_r9() {
+        // Fig. 3's mechanism: heavy register use cuts resident threads
+        // below the latency-hiding requirement.
+        let dev = device_by_name("r9-nano").unwrap();
+        let light = occupancy(&dev, 32, 64, 0).unwrap();
+        let heavy = occupancy(&dev, 250, 64, 0).unwrap();
+        assert!(heavy.fraction < light.fraction);
+        assert_eq!(heavy.limited_by, Limit::Registers);
+    }
+
+    #[test]
+    fn local_mem_overflow_is_infeasible() {
+        let dev = device_by_name("r9-nano").unwrap(); // 32 KiB LDS
+        assert!(occupancy(&dev, 32, 64, 33 * 1024).is_err());
+        assert!(occupancy(&dev, 32, 64, 16 * 1024).is_ok());
+    }
+
+    #[test]
+    fn oversized_work_group_is_infeasible() {
+        let dev = device_by_name("uhd630").unwrap(); // max WG 256
+        assert!(occupancy(&dev, 16, 512, 0).is_err());
+        assert!(occupancy(&dev, 16, 256, 0).is_ok());
+    }
+
+    #[test]
+    fn no_local_mem_device_never_local_limited() {
+        let dev = device_by_name("mali-g71").unwrap();
+        // Huge "local" request is fine — it is emulated in the cache.
+        let occ = occupancy(&dev, 32, 64, 1 << 20).unwrap();
+        assert_ne!(occ.limited_by, Limit::LocalMem);
+    }
+
+    #[test]
+    fn full_occupancy_when_plenty_of_threads() {
+        let dev = device_by_name("r9-nano").unwrap();
+        let occ = occupancy(&dev, 32, 256, 8 * 1024).unwrap();
+        assert!(occ.fraction > 0.9);
+    }
+
+    #[test]
+    fn tail_quantization() {
+        assert_eq!(cu_utilization(64, 64), 1.0);
+        assert_eq!(cu_utilization(65, 64), 65.0 / 128.0);
+        assert_eq!(cu_utilization(32, 64), 0.5);
+        assert_eq!(cu_utilization(0, 64), 0.0);
+        // Large counts approach 1.
+        assert!(cu_utilization(64 * 100 + 1, 64) > 0.99);
+    }
+
+    #[test]
+    fn all_devices_run_every_table2_work_group() {
+        // Every Table-2 work-group size (32..256) must launch on every
+        // modeled device — the paper ran them all.
+        for dev in all_devices() {
+            for wg in [32u32, 64, 128, 256] {
+                occupancy(&dev, 32, wg, 1024).unwrap_or_else(|e| {
+                    panic!("{}: wg {wg}: {e}", dev.id)
+                });
+            }
+        }
+    }
+}

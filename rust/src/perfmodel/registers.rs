@@ -1,0 +1,72 @@
+//! Register-usage estimator (reproduces paper Fig. 2).
+//!
+//! The paper measured register counts with AMD CodeXL for its tiled 3x3
+//! convolution kernel across tile and vector sizes.  This module models
+//! the same quantity structurally: accumulators + input-window staging +
+//! filter staging + addressing overhead, in scalar f32 registers.
+
+use crate::config::{ConvConfig, GemmConfig};
+
+/// Bookkeeping registers every kernel needs (indices, strides, loop
+/// counters, base pointers).
+pub const ADDRESS_REGS: u32 = 16;
+
+/// Registers per thread for the tiled direct convolution kernel.
+///
+/// * accumulators: `tile_h * tile_w * vec_k` output values;
+/// * input window: the `(tile_h + R - 1) x (tile_w + R - 1)` halo patch,
+///   `vec_c` channels deep (vector loads hold `vec_c` values in `vec_c`
+///   scalar registers on GCN-class hardware);
+/// * filter: one `R`-row slice of `vec_c x vec_k` taps.
+pub fn conv_regs(cfg: &ConvConfig, window: u32) -> u32 {
+    let acc = cfg.tile_h * cfg.tile_w * cfg.vec_k;
+    let input = (cfg.tile_h + window - 1) * (cfg.tile_w + window - 1) * cfg.vec_c;
+    let filter = window * cfg.vec_c * cfg.vec_k;
+    acc + input + filter + ADDRESS_REGS
+}
+
+/// Registers per thread for the blocked GEMM kernel:
+/// `rt_m x rt_n` accumulators plus one A-fragment column and one
+/// B-fragment row (the rank-1 update operands).
+pub fn gemm_regs(cfg: &GemmConfig) -> u32 {
+    cfg.rt_m * cfg.rt_n + cfg.rt_m + cfg.rt_n + ADDRESS_REGS
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ConvConfig;
+
+    #[test]
+    fn registers_grow_with_tile_and_vector() {
+        // Fig. 2's qualitative content: register usage grows monotonically
+        // with tile area and with each vector width.
+        let base = conv_regs(&ConvConfig::tiled(1, 1, 1, 1), 3);
+        let tiles = conv_regs(&ConvConfig::tiled(4, 4, 1, 1), 3);
+        let vecs = conv_regs(&ConvConfig::tiled(4, 4, 4, 1), 3);
+        let both = conv_regs(&ConvConfig::tiled(4, 4, 4, 4), 3);
+        assert!(base < tiles && tiles < vecs && vecs < both);
+    }
+
+    #[test]
+    fn paper_peak_config_fits_gcn_budget() {
+        // Fig. 3: the 4x5 tile / vec4-input / vec2-output config is the
+        // R9 Nano's sweet spot — it must *fit* the 256-VGPR budget...
+        let peak = conv_regs(&ConvConfig::tiled(4, 5, 4, 2), 3);
+        assert!(peak <= 256, "peak config uses {peak} regs");
+        // ...while 5x5 with vec4/vec4 must spill (the Fig. 3 cliff).
+        let spill = conv_regs(&ConvConfig::tiled(5, 5, 4, 4), 3);
+        assert!(spill > 256, "5x5/v4x4 uses only {spill} regs");
+    }
+
+    #[test]
+    fn gemm_register_count_tracks_table2() {
+        let c44 = GemmConfig::parse("4x4_8x8_loc").unwrap();
+        let c84 = GemmConfig::parse("8x4_8x16_loc").unwrap();
+        assert_eq!(gemm_regs(&c44) - ADDRESS_REGS, 16 + 8);
+        assert_eq!(gemm_regs(&c84) - ADDRESS_REGS, 32 + 12);
+        assert!(gemm_regs(&c84) > gemm_regs(&c44));
+    }
+
+    use crate::config::GemmConfig;
+}

@@ -1,0 +1,98 @@
+//! Data-reuse arithmetic (paper §2.2.3 and §3.1.2, Eq. 3).
+
+/// Paper Eq. 3: flops per loaded element for an `m' x n'` register tile:
+/// `2 m' n' / (m' + n')`.  Independent of `k'`, which is why the paper
+/// picks `k' = 1` at the private-memory level.
+pub fn register_tile_reuse(m: u32, n: u32) -> f64 {
+    let (m, n) = (m as f64, n as f64);
+    2.0 * m * n / (m + n)
+}
+
+/// Global-memory traffic (elements) of a blocked GEMM with macro-tiles
+/// `bm x bn`: each A panel is re-read once per C column-block and each B
+/// panel once per C row-block; C is read and written once.
+pub fn gemm_global_traffic(m: u64, n: u64, k: u64, bm: u64, bn: u64) -> u64 {
+    let col_blocks = n.div_ceil(bn);
+    let row_blocks = m.div_ceil(bm);
+    m * k * col_blocks + k * n * row_blocks + 2 * m * n
+}
+
+/// Input traffic (elements) of a tiled direct convolution: each thread
+/// loads the halo patch for its `th x tw` output tile, so overlapping rows
+/// and columns are fetched once per tile instead of once per output
+/// (paper §4.1.1).  `s` is the stride, `r` the window.
+pub fn conv_input_traffic(
+    batch: u64,
+    out_h: u64,
+    out_w: u64,
+    c: u64,
+    r: u64,
+    s: u64,
+    th: u64,
+    tw: u64,
+) -> u64 {
+    let tiles_h = out_h.div_ceil(th);
+    let tiles_w = out_w.div_ceil(tw);
+    let patch_h = (th - 1) * s + r;
+    let patch_w = (tw - 1) * s + r;
+    batch * tiles_h * tiles_w * patch_h * patch_w * c
+}
+
+/// The naive kernel's input traffic: every output element fetches its full
+/// window (tile 1x1 in the formula above).
+pub fn conv_naive_input_traffic(
+    batch: u64,
+    out_h: u64,
+    out_w: u64,
+    c: u64,
+    r: u64,
+) -> u64 {
+    batch * out_h * out_w * r * r * c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eq3_square_is_optimal_at_fixed_register_count() {
+        // Paper §3.1.2: "the best reuse is obtained if m' = n'".
+        // 16 registers: 4x4 vs 8x2 vs 16x1.
+        assert!(register_tile_reuse(4, 4) > register_tile_reuse(8, 2));
+        assert!(register_tile_reuse(8, 2) > register_tile_reuse(16, 1));
+        // 32 registers: 8x4 beats 16x2 and 32x1.
+        assert!(register_tile_reuse(8, 4) > register_tile_reuse(16, 2));
+    }
+
+    #[test]
+    fn eq3_grows_with_tile_size() {
+        assert!(register_tile_reuse(8, 8) > register_tile_reuse(4, 4));
+    }
+
+    #[test]
+    fn bigger_blocks_reduce_gemm_traffic() {
+        let small = gemm_global_traffic(1024, 1024, 1024, 32, 32);
+        let large = gemm_global_traffic(1024, 1024, 1024, 64, 64);
+        assert!(large < small);
+        // And both beat the naive per-thread traffic bound 2*M*N*K.
+        assert!(small < 2 * 1024 * 1024 * 1024);
+    }
+
+    #[test]
+    fn conv_tiling_reduces_input_traffic() {
+        // 3x3/s1: 2x2 tiles read (4x4)/(2x2)=4 elements per output vs 9.
+        let naive = conv_naive_input_traffic(1, 56, 56, 64, 3);
+        let tiled = conv_input_traffic(1, 56, 56, 64, 3, 1, 2, 2);
+        assert!(tiled < naive);
+        let bigger = conv_input_traffic(1, 56, 56, 64, 3, 1, 4, 4);
+        assert!(bigger < tiled);
+    }
+
+    #[test]
+    fn pointwise_conv_has_no_overlap_gain() {
+        // 1x1 windows: tiling cannot reduce input traffic.
+        let naive = conv_naive_input_traffic(1, 28, 28, 256, 1);
+        let tiled = conv_input_traffic(1, 28, 28, 256, 1, 1, 2, 2);
+        assert_eq!(naive, tiled);
+    }
+}

@@ -1,0 +1,137 @@
+//! Calibrated vendor-library curves — the comparison targets of the
+//! paper's evaluation (clBLAST, ARM Compute Library, MKL-DNN).
+//!
+//! We do not have these libraries' hardware; their curves are modeled as
+//! roofline fractions *calibrated to the paper's reported behaviour* and
+//! documented here as explicit constants (DESIGN.md §2, substitution 2):
+//!
+//! * clBLAST on Intel UHD 630 reaches ~85% of roofline at high intensity
+//!   (Fig. 4a shows our 8x4_8x16_loc "close to" it).
+//! * ARM Compute Library's OpenCL 3x3 convolutions are heavily hand-tuned
+//!   (they "in most cases outperform SYCL-DNN" on VGG — Fig. 8), while its
+//!   1x1 paths are weaker (SYCL-DNN "typically out performs both the
+//!   OpenCL and Neon implementations in the ResNet benchmarks" — Fig. 6).
+//! * MKL-DNN on the i7-6700K reaches up to 366 GF on ResNet convolutions
+//!   (~68% of the CPU's 537 GF peak) and is "consistently faster" there,
+//!   while losing to the iGPU on VGG (Fig. 9).
+
+use crate::device::DeviceSpec;
+use crate::nn::ConvLayer;
+
+use super::gemm_model::GemmProblem;
+
+/// Which hand-tuned library a curve models.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VendorLib {
+    /// clBLAST tuned OpenCL GEMM (Fig. 4 baseline).
+    ClBlast,
+    /// ARM Compute Library, OpenCL kernels on the Mali GPU.
+    ArmClOpenCl,
+    /// ARM Compute Library, NEON kernels on the big CPU cluster.
+    ArmClNeon,
+    /// Intel MKL-DNN on the CPU.
+    MklDnn,
+}
+
+impl VendorLib {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            VendorLib::ClBlast => "clBLAST",
+            VendorLib::ArmClOpenCl => "ARM-CL (OpenCL)",
+            VendorLib::ArmClNeon => "ARM-CL (NEON)",
+            VendorLib::MklDnn => "MKL-DNN",
+        }
+    }
+}
+
+/// Roofline fraction a hand-tuned GEMM attains, by library.
+fn gemm_eff(lib: VendorLib) -> f64 {
+    match lib {
+        VendorLib::ClBlast => 0.85,
+        VendorLib::ArmClOpenCl => 0.80,
+        VendorLib::ArmClNeon => 0.70,
+        VendorLib::MklDnn => 0.90,
+    }
+}
+
+/// Modeled vendor GEMM throughput (GFLOP/s) for a problem on a device.
+/// Small problems pay the same launch-bound penalty our kernels do.
+pub fn vendor_gemm(dev: &DeviceSpec, lib: VendorLib, p: GemmProblem) -> f64 {
+    let roof = dev.roofline_gflops(p.intensity());
+    let t_ideal = p.flops() as f64 / (roof * gemm_eff(lib) * 1e9);
+    let time = t_ideal + super::LAUNCH_OVERHEAD_S;
+    p.flops() as f64 / time / 1e9
+}
+
+/// Roofline fraction a hand-tuned convolution attains, by library and
+/// window size.  The window-dependence encodes the paper's observations
+/// quoted in the module docs.
+fn conv_eff(lib: VendorLib, window: u32) -> f64 {
+    match (lib, window) {
+        // ARM's OpenCL 3x3 kernels use Winograd internally, so their
+        // *direct-flop-normalized* throughput exceeds the direct-conv
+        // roofline (effective factor > 1) — this is why they "in most
+        // cases outperform SYCL-DNN" on VGG (Fig. 8).
+        (VendorLib::ArmClOpenCl, 3) => 1.9,
+        (VendorLib::ArmClOpenCl, 1) => 0.38,
+        (VendorLib::ArmClOpenCl, _) => 0.55,
+        (VendorLib::ArmClNeon, 3) => 0.60,
+        (VendorLib::ArmClNeon, 1) => 0.45,
+        (VendorLib::ArmClNeon, _) => 0.45,
+        // MKL-DNN's JIT'd 3x3 path is Winograd-assisted too.
+        (VendorLib::MklDnn, 3) => 1.1,
+        (VendorLib::MklDnn, 1) => 0.62,
+        (VendorLib::MklDnn, _) => 0.55,
+        (VendorLib::ClBlast, _) => 0.75, // via im2col+GEMM
+    }
+}
+
+/// Modeled vendor convolution throughput (GFLOP/s).
+pub fn vendor_conv(
+    dev: &DeviceSpec,
+    lib: VendorLib,
+    layer: &ConvLayer,
+    batch: u32,
+) -> f64 {
+    let roof = dev.roofline_gflops(layer.intensity(batch));
+    let t_ideal =
+        layer.flops(batch) as f64 / (roof * conv_eff(lib, layer.window) * 1e9);
+    let time = t_ideal + super::LAUNCH_OVERHEAD_S;
+    layer.flops(batch) as f64 / time / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::device_by_name;
+
+    #[test]
+    fn vendor_never_exceeds_roofline() {
+        let dev = device_by_name("uhd630").unwrap();
+        for &(m, n, k) in &[(64, 64, 64), (1024, 1024, 1024)] {
+            let p = GemmProblem::new(m, n, k);
+            let g = vendor_gemm(&dev, VendorLib::ClBlast, p);
+            assert!(g <= dev.roofline_gflops(p.intensity()));
+        }
+    }
+
+    #[test]
+    fn mkldnn_resnet_ceiling_matches_paper() {
+        // Paper §5.3: MKL-DNN achieves up to 366 GF on the i7-6700K.
+        let dev = device_by_name("i7-6700k-cpu").unwrap();
+        let l = ConvLayer::same("conv3_2", 1, 1, 28, 28, 256, 512);
+        let g = vendor_conv(&dev, VendorLib::MklDnn, &l, 4);
+        assert!(g > 250.0 && g < 450.0, "got {g}");
+    }
+
+    #[test]
+    fn arm_opencl_is_much_better_at_3x3_than_1x1() {
+        let dev = device_by_name("mali-g71").unwrap();
+        let l3 = ConvLayer::same("c3", 3, 1, 56, 56, 128, 128);
+        let l1 = ConvLayer::same("c1", 1, 1, 56, 56, 128, 128);
+        let g3 = vendor_conv(&dev, VendorLib::ArmClOpenCl, &l3, 1);
+        let g1 = vendor_conv(&dev, VendorLib::ArmClOpenCl, &l1, 1);
+        // Per-flop efficiency gap (the 1x1 layer also has lower intensity).
+        assert!(g3 > g1);
+    }
+}

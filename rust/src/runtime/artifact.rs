@@ -1,0 +1,360 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Field names mirror the JSON that `aot.py` writes;
+//! parsing uses the from-scratch [`crate::util::json`] module.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Shape + dtype of one input or output.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+impl IoSpec {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let shape = v
+            .get("shape")
+            .and_then(|s| s.as_array())
+            .ok_or_else(|| Error::Artifact("io spec missing shape".into()))?
+            .iter()
+            .map(|d| {
+                d.as_i64()
+                    .ok_or_else(|| Error::Artifact("bad shape dim".into()))
+            })
+            .collect::<Result<Vec<i64>>>()?;
+        Ok(IoSpec {
+            shape,
+            dtype: v
+                .get("dtype")
+                .and_then(|d| d.as_str())
+                .unwrap_or("float32")
+                .to_string(),
+        })
+    }
+}
+
+/// Layer metadata recorded for conv artifacts (mirrors
+/// `configs.layer_dict`).
+#[derive(Debug, Clone)]
+pub struct LayerMeta {
+    pub name: String,
+    pub window: u32,
+    pub stride: u32,
+    pub in_h: u32,
+    pub in_w: u32,
+    pub in_c: u32,
+    pub out_c: u32,
+    pub out_h: u32,
+    pub out_w: u32,
+    pub padding: String,
+    pub flops: u64,
+}
+
+impl LayerMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let u = |k: &str| -> Result<u32> {
+            v.get(k)
+                .and_then(|x| x.as_u64())
+                .map(|x| x as u32)
+                .ok_or_else(|| Error::Artifact(format!("layer missing {k}")))
+        };
+        Ok(LayerMeta {
+            name: v
+                .get("name")
+                .and_then(|x| x.as_str())
+                .unwrap_or("?")
+                .to_string(),
+            window: u("window")?,
+            stride: u("stride")?,
+            in_h: u("in_h")?,
+            in_w: u("in_w")?,
+            in_c: u("in_c")?,
+            out_c: u("out_c")?,
+            out_h: u("out_h")?,
+            out_w: u("out_w")?,
+            padding: v
+                .get("padding")
+                .and_then(|x| x.as_str())
+                .unwrap_or("SAME")
+                .to_string(),
+            flops: v.get("flops").and_then(|x| x.as_u64()).unwrap_or(0),
+        })
+    }
+}
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// "gemm" | "conv".
+    pub kind: String,
+    /// "pallas" | "xla".
+    pub implementation: String,
+    /// Kernel configuration name (None for vendor-baseline artifacts).
+    pub config: Option<String>,
+    /// HLO file name, relative to the artifact directory.
+    pub file: String,
+    /// Useful flops of one execution.
+    pub flops: u64,
+    /// Bytes touched at least once.
+    pub bytes: Option<u64>,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub groups: Vec<String>,
+    // GEMM-specific.
+    pub m: Option<u64>,
+    pub n: Option<u64>,
+    pub k: Option<u64>,
+    // Conv-specific.
+    pub layer: Option<LayerMeta>,
+    pub algorithm: Option<String>,
+    pub batch: Option<u32>,
+    pub scaled_from: Option<String>,
+}
+
+impl ArtifactMeta {
+    fn from_json(v: &Value) -> Result<Self> {
+        let s = |k: &str| -> Result<String> {
+            v.get(k)
+                .and_then(|x| x.as_str())
+                .map(|x| x.to_string())
+                .ok_or_else(|| Error::Artifact(format!("artifact missing {k}")))
+        };
+        let io_list = |k: &str| -> Result<Vec<IoSpec>> {
+            v.get(k)
+                .and_then(|x| x.as_array())
+                .map(|items| items.iter().map(IoSpec::from_json).collect())
+                .unwrap_or_else(|| Ok(Vec::new()))
+        };
+        Ok(ArtifactMeta {
+            name: s("name")?,
+            kind: s("kind")?,
+            implementation: v
+                .get("impl")
+                .and_then(|x| x.as_str())
+                .unwrap_or("pallas")
+                .to_string(),
+            config: v.get("config").and_then(|x| x.as_str()).map(String::from),
+            file: s("file")?,
+            flops: v
+                .get("flops")
+                .and_then(|x| x.as_u64())
+                .ok_or_else(|| Error::Artifact("artifact missing flops".into()))?,
+            bytes: v.get("bytes").and_then(|x| x.as_u64()),
+            inputs: io_list("inputs")?,
+            outputs: io_list("outputs")?,
+            groups: v
+                .get("groups")
+                .and_then(|x| x.as_array())
+                .map(|items| {
+                    items
+                        .iter()
+                        .filter_map(|g| g.as_str().map(String::from))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            m: v.get("m").and_then(|x| x.as_u64()),
+            n: v.get("n").and_then(|x| x.as_u64()),
+            k: v.get("k").and_then(|x| x.as_u64()),
+            layer: v.get("layer").map(LayerMeta::from_json).transpose()?,
+            algorithm: v
+                .get("algorithm")
+                .and_then(|x| x.as_str())
+                .map(String::from),
+            batch: v.get("batch").and_then(|x| x.as_u64()).map(|b| b as u32),
+            scaled_from: v
+                .get("scaled_from")
+                .and_then(|x| x.as_str())
+                .map(String::from),
+        })
+    }
+}
+
+/// The artifact directory + parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    by_name: HashMap<String, ArtifactMeta>,
+    order: Vec<String>,
+}
+
+impl ArtifactStore {
+    /// Open `dir/manifest.json`.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let data = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {}: {e}; run `make artifacts` first",
+                manifest_path.display()
+            ))
+        })?;
+        let root = json::parse(&data).map_err(|e| Error::Json(e.to_string()))?;
+        let version = root
+            .get("version")
+            .and_then(|v| v.as_u64())
+            .ok_or_else(|| Error::Artifact("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(Error::Artifact(format!(
+                "manifest version {version} unsupported (want 1)"
+            )));
+        }
+        let artifacts = root
+            .get("artifacts")
+            .and_then(|v| v.as_array())
+            .ok_or_else(|| Error::Artifact("manifest missing artifacts".into()))?;
+        let mut by_name = HashMap::new();
+        let mut order = Vec::new();
+        for v in artifacts {
+            let meta = ArtifactMeta::from_json(v)?;
+            order.push(meta.name.clone());
+            by_name.insert(meta.name.clone(), meta);
+        }
+        Ok(Self { dir: dir.to_path_buf(), by_name, order })
+    }
+
+    /// Artifact metadata by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.by_name
+            .get(name)
+            .ok_or_else(|| Error::NotFound(format!("artifact {name:?}")))
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let meta = self.get(name)?;
+        let path = self.dir.join(&meta.file);
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "HLO file missing for {name:?}: {}",
+                path.display()
+            )));
+        }
+        Ok(path)
+    }
+
+    /// All artifacts, in manifest order.
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.order.iter().map(|n| &self.by_name[n])
+    }
+
+    /// Artifacts in a group (e.g. "gemm", "network").
+    pub fn in_group<'a>(
+        &'a self,
+        group: &'a str,
+    ) -> impl Iterator<Item = &'a ArtifactMeta> {
+        self.iter().filter(move |m| m.groups.iter().any(|g| g == group))
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn write_manifest(dir: &Path, artifacts: &str) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"version": 1, "groups": ["core"], "artifacts": {artifacts}}}"#),
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = TempDir::new("arts").unwrap();
+        write_manifest(
+            dir.path(),
+            r#"[{"name": "g1", "kind": "gemm", "impl": "pallas",
+                 "config": "4x4_8x8_loc", "file": "g1.hlo.txt",
+                 "flops": 1000, "m": 64, "n": 64, "k": 64,
+                 "inputs": [{"shape": [64, 64], "dtype": "float32"}],
+                 "groups": ["core", "gemm"], "scaled_from": null}]"#,
+        );
+        std::fs::write(dir.path().join("g1.hlo.txt"), "HloModule x").unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        assert_eq!(store.len(), 1);
+        let meta = store.get("g1").unwrap();
+        assert_eq!(meta.implementation, "pallas");
+        assert_eq!(meta.m, Some(64));
+        assert_eq!(meta.inputs[0].elems(), 4096);
+        assert!(meta.scaled_from.is_none());
+        assert!(store.hlo_path("g1").is_ok());
+        assert_eq!(store.in_group("gemm").count(), 1);
+        assert_eq!(store.in_group("conv").count(), 0);
+    }
+
+    #[test]
+    fn parses_conv_layer_meta() {
+        let dir = TempDir::new("arts").unwrap();
+        write_manifest(
+            dir.path(),
+            r#"[{"name": "c1", "kind": "conv", "impl": "xla",
+                 "file": "c1.hlo.txt", "flops": 99, "batch": 2,
+                 "algorithm": "xla",
+                 "layer": {"name": "conv1_1", "window": 3, "stride": 1,
+                           "in_h": 14, "in_w": 14, "in_c": 8, "out_c": 16,
+                           "out_h": 14, "out_w": 14, "padding": "SAME",
+                           "flops": 99},
+                 "inputs": []}]"#,
+        );
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let meta = store.get("c1").unwrap();
+        let layer = meta.layer.as_ref().unwrap();
+        assert_eq!(layer.window, 3);
+        assert_eq!(layer.out_c, 16);
+        assert_eq!(meta.batch, Some(2));
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let dir = TempDir::new("arts").unwrap();
+        let err = ArtifactStore::open(dir.path()).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn missing_hlo_file_reported() {
+        let dir = TempDir::new("arts").unwrap();
+        write_manifest(
+            dir.path(),
+            r#"[{"name": "g1", "kind": "gemm", "file": "absent.hlo.txt",
+                 "flops": 1, "inputs": []}]"#,
+        );
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        assert!(store.hlo_path("g1").is_err());
+        assert!(store.get("nope").is_err());
+    }
+
+    #[test]
+    fn wrong_version_rejected() {
+        let dir = TempDir::new("arts").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 99, "artifacts": []}"#,
+        )
+        .unwrap();
+        assert!(ArtifactStore::open(dir.path()).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//!
+//! The request-path half of the AOT bridge.  `make artifacts` (Python,
+//! build time) writes `artifacts/*.hlo.txt` plus `manifest.json`; this
+//! module parses the manifest ([`artifact`]), compiles each HLO module
+//! once on the PJRT CPU client, caches the executable, and runs it with
+//! concrete inputs ([`executor`]).  No Python anywhere.
+
+mod artifact;
+mod executor;
+
+pub use artifact::{ArtifactMeta, ArtifactStore, IoSpec, LayerMeta};
+pub use executor::{Engine, RunOutput};

@@ -1,0 +1,286 @@
+//! Selection database: persisted (device, problem) -> winning config.
+//!
+//! This is the tuning artifact a deployment ships — the paper's "choosing
+//! the combinations of kernel parameters that perform best on the
+//! hardware", made durable.  JSON on disk (via [`crate::util::json`]);
+//! the request path only does map lookups.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::{ConvAlgorithm, ConvConfig, GemmConfig};
+use crate::error::{Error, Result};
+use crate::util::json::{self, Value};
+
+/// Problem-class key.  GEMM problems are bucketed by size class so nearby
+/// shapes share a selection (the paper's Fig. 5 regions A/B/C); conv
+/// problems are keyed by layer signature.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct SelectionKey {
+    pub device: String,
+    pub op: String,
+}
+
+impl SelectionKey {
+    /// GEMM key: log2-bucketed M, N, K (the region structure of Fig. 5).
+    pub fn gemm(device: &str, m: u64, n: u64, k: u64) -> Self {
+        let b = |x: u64| 64u64.max(x.next_power_of_two());
+        SelectionKey {
+            device: device.to_string(),
+            op: format!("gemm_{}x{}x{}", b(m), b(n), b(k)),
+        }
+    }
+
+    /// Convolution key: the full layer signature.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        device: &str,
+        window: u32,
+        stride: u32,
+        h: u32,
+        w: u32,
+        c: u32,
+        k: u32,
+        batch: u32,
+    ) -> Self {
+        SelectionKey {
+            device: device.to_string(),
+            op: format!("conv_{window}x{window}s{stride}_{h}x{w}x{c}k{k}b{batch}"),
+        }
+    }
+
+    fn as_string(&self) -> String {
+        format!("{}::{}", self.device, self.op)
+    }
+}
+
+/// One stored selection.
+#[derive(Debug, Clone)]
+pub enum Selection {
+    Gemm { config: GemmConfig, gflops: f64 },
+    Conv { config: ConvConfig, gflops: f64 },
+}
+
+fn conv_to_json(c: &ConvConfig) -> Value {
+    let mut o = Value::object();
+    o.set("tile_h", c.tile_h)
+        .set("tile_w", c.tile_w)
+        .set("vec_c", c.vec_c)
+        .set("vec_k", c.vec_k)
+        .set("block_k", c.block_k)
+        .set("algorithm", c.algorithm.as_str())
+        .set("wino_m", c.wino_m);
+    o
+}
+
+fn conv_from_json(v: &Value) -> Result<ConvConfig> {
+    let field = |k: &str| -> Result<u32> {
+        v.get(k)
+            .and_then(|x| x.as_u64())
+            .map(|x| x as u32)
+            .ok_or_else(|| Error::Json(format!("conv config missing {k}")))
+    };
+    Ok(ConvConfig {
+        tile_h: field("tile_h")?,
+        tile_w: field("tile_w")?,
+        vec_c: field("vec_c")?,
+        vec_k: field("vec_k")?,
+        block_k: field("block_k")?,
+        algorithm: v
+            .get("algorithm")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::Json("conv config missing algorithm".into()))?
+            .parse::<ConvAlgorithm>()?,
+        wino_m: field("wino_m")?,
+    })
+}
+
+/// The database: ordered map for stable serialization.
+#[derive(Debug, Default, Clone)]
+pub struct SelectionDb {
+    entries: BTreeMap<String, Selection>,
+}
+
+impl SelectionDb {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put_gemm(&mut self, key: SelectionKey, config: GemmConfig, gflops: f64) {
+        self.entries
+            .insert(key.as_string(), Selection::Gemm { config, gflops });
+    }
+
+    pub fn put_conv(&mut self, key: SelectionKey, config: ConvConfig, gflops: f64) {
+        self.entries
+            .insert(key.as_string(), Selection::Conv { config, gflops });
+    }
+
+    pub fn get_gemm(&self, key: &SelectionKey) -> Option<(GemmConfig, f64)> {
+        match self.entries.get(&key.as_string()) {
+            Some(Selection::Gemm { config, gflops }) => Some((*config, *gflops)),
+            _ => None,
+        }
+    }
+
+    pub fn get_conv(&self, key: &SelectionKey) -> Option<(ConvConfig, f64)> {
+        match self.entries.get(&key.as_string()) {
+            Some(Selection::Conv { config, gflops }) => Some((*config, *gflops)),
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate all entries (for reports).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Selection)> {
+        self.entries.iter()
+    }
+
+    fn to_json(&self) -> Value {
+        let mut root = Value::object();
+        for (k, sel) in &self.entries {
+            let mut o = Value::object();
+            match sel {
+                Selection::Gemm { config, gflops } => {
+                    o.set("kind", "gemm")
+                        .set("config", config.name())
+                        .set("gflops", *gflops);
+                }
+                Selection::Conv { config, gflops } => {
+                    o.set("kind", "conv")
+                        .set("config", conv_to_json(config))
+                        .set("gflops", *gflops);
+                }
+            }
+            root.set(k, o);
+        }
+        root
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let obj = v
+            .as_object()
+            .ok_or_else(|| Error::Json("selection db must be an object".into()))?;
+        let mut entries = BTreeMap::new();
+        for (k, e) in obj {
+            let gflops = e
+                .get("gflops")
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| Error::Json(format!("{k}: missing gflops")))?;
+            let sel = match e.get("kind").and_then(|x| x.as_str()) {
+                Some("gemm") => Selection::Gemm {
+                    config: GemmConfig::parse(
+                        e.get("config").and_then(|x| x.as_str()).ok_or_else(
+                            || Error::Json(format!("{k}: missing config")),
+                        )?,
+                    )?,
+                    gflops,
+                },
+                Some("conv") => Selection::Conv {
+                    config: conv_from_json(e.get("config").ok_or_else(
+                        || Error::Json(format!("{k}: missing config")),
+                    )?)?,
+                    gflops,
+                },
+                other => {
+                    return Err(Error::Json(format!("{k}: bad kind {other:?}")))
+                }
+            };
+            entries.insert(k.clone(), sel);
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json().to_json_pretty())?;
+        std::fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let v = json::parse(&text).map_err(|e| Error::Json(e.to_string()))?;
+        Self::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn gemm_keys_bucket_by_power_of_two() {
+        let a = SelectionKey::gemm("mali-g71", 300, 300, 300);
+        let b = SelectionKey::gemm("mali-g71", 500, 400, 280);
+        assert_eq!(a, b); // both bucket to 512x512x512
+        let c = SelectionKey::gemm("mali-g71", 700, 400, 280);
+        assert_ne!(a, c);
+        // Tiny shapes floor at the 64 bucket.
+        let d = SelectionKey::gemm("mali-g71", 3, 5, 7);
+        assert_eq!(d.op, "gemm_64x64x64");
+    }
+
+    #[test]
+    fn keys_are_device_scoped() {
+        let a = SelectionKey::gemm("mali-g71", 512, 512, 512);
+        let b = SelectionKey::gemm("r9-nano", 512, 512, 512);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_via_disk() {
+        let mut db = SelectionDb::new();
+        db.put_gemm(
+            SelectionKey::gemm("mali-g71", 512, 512, 512),
+            GemmConfig::parse("8x4_4x8_noloc").unwrap(),
+            42.0,
+        );
+        db.put_conv(
+            SelectionKey::conv("mali-g71", 3, 1, 56, 56, 64, 64, 1),
+            ConvConfig::tiled(4, 4, 4, 2),
+            33.0,
+        );
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("selections.json");
+        db.save(&path).unwrap();
+        let loaded = SelectionDb::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        let (cfg, g) = loaded
+            .get_gemm(&SelectionKey::gemm("mali-g71", 512, 512, 512))
+            .unwrap();
+        assert_eq!(cfg.name(), "8x4_4x8_noloc");
+        assert_eq!(g, 42.0);
+        let (ccfg, _) = loaded
+            .get_conv(&SelectionKey::conv("mali-g71", 3, 1, 56, 56, 64, 64, 1))
+            .unwrap();
+        assert_eq!(ccfg.tile_h, 4);
+        assert_eq!(ccfg.algorithm, ConvAlgorithm::Tiled);
+    }
+
+    #[test]
+    fn missing_key_is_none() {
+        let db = SelectionDb::new();
+        assert!(db
+            .get_gemm(&SelectionKey::gemm("host", 64, 64, 64))
+            .is_none());
+    }
+
+    #[test]
+    fn corrupt_db_rejected() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("bad.json");
+        std::fs::write(&path, "{\"x\": {\"kind\": \"nope\"}}").unwrap();
+        assert!(SelectionDb::load(&path).is_err());
+        std::fs::write(&path, "not json").unwrap();
+        assert!(SelectionDb::load(&path).is_err());
+    }
+}

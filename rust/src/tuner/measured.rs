@@ -1,0 +1,153 @@
+//! Measurement-driven tuning: pick configurations by *executing* the AOT
+//! artifacts on the real runtime instead of consulting the analytic
+//! model.
+//!
+//! This is exactly the paper's methodology on hardware we do own (the
+//! host): every artifact in the `gemm`/`conv` manifest groups is one
+//! kernel instantiation; running them and keeping the fastest per problem
+//! is the measured counterpart of `tune_gemm`/`tune_conv`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::runtime::Engine;
+
+/// One measured candidate.
+#[derive(Debug, Clone)]
+pub struct MeasuredCandidate {
+    pub artifact: String,
+    pub config: Option<String>,
+    pub implementation: String,
+    pub best: Duration,
+    pub gflops: f64,
+}
+
+/// Measured winners per problem key (e.g. `gemm_512x512x512` or a layer
+/// name), with all candidates retained for reporting.
+#[derive(Debug, Default)]
+pub struct MeasuredTuning {
+    pub problems: BTreeMap<String, Vec<MeasuredCandidate>>,
+}
+
+impl MeasuredTuning {
+    /// The fastest candidate for a problem.
+    pub fn winner(&self, problem: &str) -> Option<&MeasuredCandidate> {
+        self.problems.get(problem)?.iter().min_by_key(|c| c.best)
+    }
+
+    /// Problems measured.
+    pub fn problems(&self) -> impl Iterator<Item = &String> {
+        self.problems.keys()
+    }
+}
+
+/// Derive the problem key for a manifest artifact: GEMMs bucket by shape,
+/// convs by (kind, layer, batch) — so artifacts differing only in their
+/// configuration compete.
+fn problem_key(meta: &crate::runtime::ArtifactMeta) -> Option<String> {
+    match meta.kind.as_str() {
+        "gemm" => Some(format!(
+            "gemm_{}x{}x{}",
+            meta.m?, meta.n?, meta.k?
+        )),
+        "conv" => {
+            let l = meta.layer.as_ref()?;
+            Some(format!(
+                "conv_{}_{}x{}x{}_b{}",
+                l.name,
+                l.in_h,
+                l.in_w,
+                l.in_c,
+                meta.batch.unwrap_or(1)
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Measure every artifact in `group`, `iters` repetitions each (min
+/// taken), grouped into competing problems.
+pub fn tune_measured(
+    engine: &mut Engine,
+    group: &str,
+    iters: usize,
+) -> Result<MeasuredTuning> {
+    let names: Vec<(String, u64, Option<String>)> = engine
+        .store()
+        .in_group(group)
+        .filter_map(|m| {
+            problem_key(m).map(|k| (m.name.clone(), m.flops, Some(k)))
+        })
+        .collect();
+
+    let mut tuning = MeasuredTuning::default();
+    for (name, flops, key) in names {
+        let key = key.expect("filtered above");
+        let meta = engine.store().get(&name)?.clone();
+        let inputs = engine.synth_inputs(&name, 17)?;
+        engine.warm(&name)?;
+        let (_, best) = engine.run_timed(&name, &inputs, iters)?;
+        tuning.problems.entry(key).or_default().push(MeasuredCandidate {
+            artifact: name,
+            config: meta.config.clone(),
+            implementation: meta.implementation.clone(),
+            best,
+            gflops: flops as f64 / best.as_secs_f64() / 1e9,
+        });
+    }
+    Ok(tuning)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactMeta, IoSpec};
+
+    fn meta(kind: &str, m: Option<u64>) -> ArtifactMeta {
+        ArtifactMeta {
+            name: "x".into(),
+            kind: kind.into(),
+            implementation: "pallas".into(),
+            config: None,
+            file: "x.hlo.txt".into(),
+            flops: 1,
+            bytes: None,
+            inputs: Vec::<IoSpec>::new(),
+            outputs: Vec::new(),
+            groups: vec![],
+            m,
+            n: m,
+            k: m,
+            layer: None,
+            algorithm: None,
+            batch: None,
+            scaled_from: None,
+        }
+    }
+
+    #[test]
+    fn gemm_artifacts_bucket_by_shape() {
+        let a = problem_key(&meta("gemm", Some(64))).unwrap();
+        assert_eq!(a, "gemm_64x64x64");
+        // Missing dims -> no key (never competes).
+        assert!(problem_key(&meta("gemm", None)).is_none());
+        assert!(problem_key(&meta("mystery", Some(4))).is_none());
+    }
+
+    #[test]
+    fn winner_is_min_duration() {
+        let mut t = MeasuredTuning::default();
+        let c = |n: &str, ms: u64| MeasuredCandidate {
+            artifact: n.into(),
+            config: None,
+            implementation: "pallas".into(),
+            best: Duration::from_millis(ms),
+            gflops: 0.0,
+        };
+        t.problems
+            .insert("p".into(), vec![c("slow", 30), c("fast", 10), c("mid", 20)]);
+        assert_eq!(t.winner("p").unwrap().artifact, "fast");
+        assert!(t.winner("q").is_none());
+    }
+}

@@ -1,0 +1,23 @@
+//! Auto-tuner: search the kernel parameter space per device.
+//!
+//! The paper's headline workflow — "tuning for new devices amounts to
+//! choosing the combinations of kernel parameters that perform best on
+//! the hardware" — plus its stated future work ("plans to develop a
+//! machine learning system to tune these libraries"), realized as:
+//!
+//! * [`search`] — exhaustive, random, and hill-climbing strategies over a
+//!   cost function (modeled throughput or measured wall time);
+//! * [`db`] — a persisted selection database mapping (device, problem
+//!   class) to the winning configuration, the artifact the coordinator
+//!   consults at request time.
+
+mod db;
+mod measured;
+mod search;
+
+pub use db::{SelectionDb, SelectionKey};
+pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};
+pub use search::{
+    tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,
+    SearchStrategy, TuneResult,
+};

@@ -1,0 +1,310 @@
+//! Search strategies over kernel configuration spaces.
+
+use crate::config::{conv_space, gemm_space, ConvConfig, GemmConfig};
+use crate::device::DeviceSpec;
+use crate::nn::ConvLayer;
+use crate::perfmodel::{conv_estimate, gemm_estimate, ConvProblem, GemmProblem};
+
+/// Outcome of tuning one problem on one device.
+#[derive(Debug, Clone)]
+pub struct TuneResult<C> {
+    /// Winning configuration.
+    pub config: C,
+    /// Its modeled (or measured) GFLOP/s.
+    pub gflops: f64,
+    /// Configurations evaluated.
+    pub evaluated: usize,
+    /// Configurations rejected as infeasible on the device.
+    pub infeasible: usize,
+}
+
+/// A search strategy over an indexable candidate list.
+pub trait SearchStrategy {
+    /// Pick the index of the best candidate given a scoring function
+    /// returning `None` for infeasible candidates.  Returns the chosen
+    /// index, the number of evaluations spent, and the best score.
+    fn search(
+        &self,
+        n_candidates: usize,
+        score: &mut dyn FnMut(usize) -> Option<f64>,
+    ) -> Option<(usize, usize, f64)>;
+}
+
+/// Evaluate every candidate (the paper's offline-tuning mode).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExhaustiveSearch;
+
+impl SearchStrategy for ExhaustiveSearch {
+    fn search(
+        &self,
+        n: usize,
+        score: &mut dyn FnMut(usize) -> Option<f64>,
+    ) -> Option<(usize, usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for i in 0..n {
+            if let Some(s) = score(i) {
+                if best.map(|(_, b)| s > b).unwrap_or(true) {
+                    best = Some((i, s));
+                }
+            }
+        }
+        best.map(|(i, s)| (i, n, s))
+    }
+}
+
+/// Evaluate a random subset (cheap screening for huge spaces).
+/// Deterministic for a given seed.
+#[derive(Debug, Clone, Copy)]
+pub struct RandomSearch {
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl SearchStrategy for RandomSearch {
+    fn search(
+        &self,
+        n: usize,
+        score: &mut dyn FnMut(usize) -> Option<f64>,
+    ) -> Option<(usize, usize, f64)> {
+        let mut state = self.seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state % n as u64) as usize
+        };
+        let mut best: Option<(usize, f64)> = None;
+        let samples = self.samples.min(n);
+        for _ in 0..samples {
+            let i = next();
+            if let Some(s) = score(i) {
+                if best.map(|(_, b)| s > b).unwrap_or(true) {
+                    best = Some((i, s));
+                }
+            }
+        }
+        best.map(|(i, s)| (i, samples, s))
+    }
+}
+
+/// Random restarts + greedy neighbourhood walk; the "ML-ish" strategy the
+/// paper leaves as future work, kept deterministic for reproducibility.
+#[derive(Debug, Clone, Copy)]
+pub struct HillClimb {
+    pub restarts: usize,
+    pub seed: u64,
+}
+
+impl SearchStrategy for HillClimb {
+    fn search(
+        &self,
+        n: usize,
+        score: &mut dyn FnMut(usize) -> Option<f64>,
+    ) -> Option<(usize, usize, f64)> {
+        if n == 0 {
+            return None;
+        }
+        let mut state = self.seed | 1;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state % n as u64) as usize
+        };
+        let mut cache: Vec<Option<Option<f64>>> = vec![None; n];
+        let mut evals = 0usize;
+        let mut eval = |i: usize, cache: &mut Vec<Option<Option<f64>>>,
+                        evals: &mut usize| {
+            if cache[i].is_none() {
+                *evals += 1;
+                cache[i] = Some(score(i));
+            }
+            cache[i].unwrap()
+        };
+        let mut best: Option<(usize, f64)> = None;
+        for _ in 0..self.restarts {
+            let mut cur = next();
+            let mut cur_score = match eval(cur, &mut cache, &mut evals) {
+                Some(s) => s,
+                None => continue,
+            };
+            // Greedy walk over the index neighbourhood (candidate lists
+            // are generated in lexicographic parameter order, so +-1 are
+            // parameter neighbours).
+            loop {
+                let mut improved = false;
+                for cand in [cur.wrapping_sub(1), cur + 1, cur + 3, cur.wrapping_sub(3)] {
+                    if cand < n {
+                        if let Some(s) = eval(cand, &mut cache, &mut evals) {
+                            if s > cur_score {
+                                cur = cand;
+                                cur_score = s;
+                                improved = true;
+                            }
+                        }
+                    }
+                }
+                if !improved {
+                    break;
+                }
+            }
+            if best.map(|(_, b)| cur_score > b).unwrap_or(true) {
+                best = Some((cur, cur_score));
+            }
+        }
+        best.map(|(i, s)| (i, evals, s))
+    }
+}
+
+/// Tune GEMM for a problem on a device using the analytic model.
+pub fn tune_gemm(
+    dev: &DeviceSpec,
+    p: GemmProblem,
+    strategy: &dyn SearchStrategy,
+) -> Option<TuneResult<GemmConfig>> {
+    let space = gemm_space();
+    let mut infeasible = 0usize;
+    let mut score = |i: usize| match gemm_estimate(dev, p, &space[i]) {
+        Ok(e) => Some(e.gflops),
+        Err(_) => {
+            infeasible += 1;
+            None
+        }
+    };
+    let (idx, evaluated, gflops) = strategy.search(space.len(), &mut score)?;
+    Some(TuneResult {
+        config: space[idx],
+        gflops,
+        evaluated,
+        infeasible,
+    })
+}
+
+/// Tune a convolution layer on a device using the analytic model.
+/// The GEMM configuration feeding im2col/Winograd is itself tuned first.
+pub fn tune_conv(
+    dev: &DeviceSpec,
+    layer: &ConvLayer,
+    batch: u32,
+    strategy: &dyn SearchStrategy,
+) -> Option<TuneResult<ConvConfig>> {
+    let (gm, gn, gk) = layer.im2col_gemm(batch);
+    let gemm_cfg = tune_gemm(dev, GemmProblem::new(gm, gn, gk), strategy)
+        .map(|r| r.config)
+        .unwrap_or_default();
+
+    let space = conv_space(layer.window, layer.stride);
+    let p = ConvProblem::new(layer.clone(), batch);
+    let mut infeasible = 0usize;
+    let mut score = |i: usize| match conv_estimate(dev, &p, &space[i], &gemm_cfg)
+    {
+        Ok(e) => Some(e.gflops),
+        Err(_) => {
+            infeasible += 1;
+            None
+        }
+    };
+    let (idx, evaluated, gflops) = strategy.search(space.len(), &mut score)?;
+    Some(TuneResult {
+        config: space[idx],
+        gflops,
+        evaluated,
+        infeasible,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::device_by_name;
+
+    #[test]
+    fn exhaustive_finds_global_argmax() {
+        let scores = [1.0, 5.0, 3.0, 5.5, 0.5];
+        let mut f = |i: usize| Some(scores[i]);
+        let (idx, evals, best) =
+            ExhaustiveSearch.search(scores.len(), &mut f).unwrap();
+        assert_eq!(idx, 3);
+        assert_eq!(evals, 5);
+        assert_eq!(best, 5.5);
+    }
+
+    #[test]
+    fn exhaustive_skips_infeasible() {
+        let mut f = |i: usize| if i == 2 { Some(1.0) } else { None };
+        let (idx, _, _) = ExhaustiveSearch.search(5, &mut f).unwrap();
+        assert_eq!(idx, 2);
+        let mut none = |_: usize| None;
+        assert!(ExhaustiveSearch.search(5, &mut none).is_none());
+    }
+
+    #[test]
+    fn random_search_is_deterministic() {
+        let mut f1 = |i: usize| Some(i as f64);
+        let mut f2 = |i: usize| Some(i as f64);
+        let s = RandomSearch { samples: 10, seed: 42 };
+        assert_eq!(s.search(100, &mut f1), s.search(100, &mut f2));
+    }
+
+    #[test]
+    fn hill_climb_never_worse_than_its_start_samples() {
+        // On a smooth landscape it should land near the peak.
+        let mut f = |i: usize| {
+            let x = i as f64 / 99.0;
+            Some(-(x - 0.7) * (x - 0.7))
+        };
+        let (idx, _, _) = HillClimb { restarts: 8, seed: 7 }
+            .search(100, &mut f)
+            .unwrap();
+        assert!((idx as i64 - 70).abs() <= 5, "landed at {idx}");
+    }
+
+    #[test]
+    fn tune_gemm_beats_fixed_default() {
+        let dev = device_by_name("mali-g71").unwrap();
+        let p = GemmProblem::new(512, 512, 512);
+        let tuned = tune_gemm(&dev, p, &ExhaustiveSearch).unwrap();
+        let default = crate::perfmodel::gemm_estimate(
+            &dev, p, &GemmConfig::default()
+        ).unwrap();
+        assert!(tuned.gflops >= default.gflops);
+        assert!(tuned.evaluated > 100);
+    }
+
+    #[test]
+    fn tuned_configs_differ_across_devices() {
+        // The paper's core claim: different hardware picks different
+        // parameters.  Tuned Mali (no local mem) and R9 Nano (big LDS)
+        // winners should differ in at least one parameter.
+        let p = GemmProblem::new(1024, 1024, 1024);
+        let mali = tune_gemm(&device_by_name("mali-g71").unwrap(), p,
+                             &ExhaustiveSearch).unwrap();
+        let amd = tune_gemm(&device_by_name("r9-nano").unwrap(), p,
+                            &ExhaustiveSearch).unwrap();
+        assert_ne!(mali.config, amd.config,
+                   "expected device-specific winners, both chose {}",
+                   mali.config.name());
+        // Mali must not stage through (emulated) local memory.
+        assert!(!mali.config.use_local);
+    }
+
+    #[test]
+    fn tune_conv_picks_winograd_for_heavy_3x3() {
+        let dev = device_by_name("uhd630").unwrap();
+        let layer = crate::nn::ConvLayer::same("t", 3, 1, 56, 56, 256, 256);
+        let r = tune_conv(&dev, &layer, 4, &ExhaustiveSearch).unwrap();
+        assert_eq!(
+            r.config.algorithm,
+            crate::config::ConvAlgorithm::Winograd,
+            "picked {:?}", r.config
+        );
+    }
+
+    #[test]
+    fn tune_conv_never_picks_winograd_for_pointwise() {
+        let dev = device_by_name("uhd630").unwrap();
+        let layer = crate::nn::ConvLayer::same("t", 1, 1, 28, 28, 256, 512);
+        let r = tune_conv(&dev, &layer, 4, &ExhaustiveSearch).unwrap();
+        assert_ne!(r.config.algorithm, crate::config::ConvAlgorithm::Winograd);
+    }
+}

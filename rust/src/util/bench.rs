@@ -1,0 +1,93 @@
+//! Minimal measurement harness (the criterion stand-in).
+//!
+//! Warmup + N timed repetitions, reporting min / median / mean.  The
+//! benches under `rust/benches/` are plain binaries built on this.
+
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of timed repetitions.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub samples: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// Throughput in GFLOP/s given useful flops per iteration.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        flops as f64 / self.min.as_secs_f64() / 1e9
+    }
+
+    /// One-line rendering.
+    pub fn line(&self, flops: Option<u64>) -> String {
+        let gf = flops
+            .map(|f| format!("  {:>9.3} GF/s", self.gflops(f)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} min {:>10.3?}  med {:>10.3?}  mean {:>10.3?}{gf}",
+            self.name, self.min, self.median, self.mean
+        )
+    }
+}
+
+/// Measure `f` with `warmup` untimed and `samples` timed repetitions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(samples.max(1));
+    for _ in 0..samples.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let sum: Duration = times.iter().sum();
+    BenchStats {
+        name: name.to_string(),
+        samples: times.len(),
+        min: times[0],
+        median: times[times.len() / 2],
+        mean: sum / times.len() as u32,
+        max: *times.last().unwrap(),
+    }
+}
+
+/// Prevent the optimizer from discarding a value (std::hint::black_box
+/// wrapper kept for symmetry with criterion's API).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = bench("spin", 1, 9, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.samples, 9);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.mean >= s.min && s.mean <= s.max);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let s = BenchStats {
+            name: "x".into(),
+            samples: 1,
+            min: Duration::from_secs(1),
+            median: Duration::from_secs(1),
+            mean: Duration::from_secs(1),
+            max: Duration::from_secs(1),
+        };
+        assert_eq!(s.gflops(2_000_000_000), 2.0);
+        assert!(s.line(Some(1_000_000_000)).contains("GF/s"));
+    }
+}

@@ -1,0 +1,19 @@
+//! From-scratch substrates.
+//!
+//! This build environment is offline; the usual ecosystem crates (serde,
+//! serde_json, criterion, proptest, tempfile, clap, tokio) are not
+//! available, so this module provides the minimal substrates the library
+//! needs, built from scratch and tested like everything else:
+//!
+//! * [`json`] — a complete JSON parser + serializer (the artifact
+//!   manifest and the selection DB wire format);
+//! * [`rng`] — a seeded xorshift64* generator (deterministic synthetic
+//!   data and random search);
+//! * [`bench`] — a small measurement harness with warmup, repetitions and
+//!   robust statistics (the criterion stand-in the benches use);
+//! * [`tmp`] — RAII temporary directories for tests.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod tmp;

@@ -1,0 +1,305 @@
+//! Property-based tests over seeded random generators (the offline
+//! environment has no proptest crate; `util::rng::XorShift` provides the
+//! deterministic generators, and every case prints its inputs on failure).
+
+use portable_kernels::blas::{gemm_blocked, gemm_naive, max_abs_diff, BlockedParams};
+use portable_kernels::config::{ConvConfig, GemmConfig};
+use portable_kernels::coordinator::{BatchPolicy, Batcher};
+use portable_kernels::device::{all_devices, DeviceSpec};
+use portable_kernels::nn::ConvLayer;
+use portable_kernels::perfmodel::{
+    conv_estimate, conv_regs, gemm_estimate, ConvProblem, GemmProblem,
+};
+use portable_kernels::tuner::{tune_gemm, ExhaustiveSearch};
+use portable_kernels::util::json;
+use portable_kernels::util::rng::XorShift;
+
+const CASES: usize = 60;
+
+fn random_gemm_config(rng: &mut XorShift) -> GemmConfig {
+    GemmConfig {
+        rt_m: *rng.choose(&[1, 2, 4, 8, 16]),
+        rt_n: *rng.choose(&[1, 2, 4, 8, 16]),
+        wg_r: *rng.choose(&[2, 4, 8, 16]),
+        wg_c: *rng.choose(&[2, 4, 8, 16]),
+        block_k: *rng.choose(&[8, 16, 32, 64]),
+        use_local: rng.below(2) == 0,
+        double_buffer: rng.below(2) == 0,
+    }
+}
+
+fn random_device(rng: &mut XorShift) -> DeviceSpec {
+    let devs = all_devices();
+    devs[rng.below(devs.len() as u64) as usize].clone()
+}
+
+/// Config-string round-trip for arbitrary configurations.
+#[test]
+fn prop_gemm_config_roundtrip() {
+    let mut rng = XorShift::new(101);
+    for case in 0..CASES {
+        let cfg = random_gemm_config(&mut rng);
+        let parsed = GemmConfig::parse(&cfg.name())
+            .unwrap_or_else(|e| panic!("case {case}: {} -> {e}", cfg.name()));
+        // block_k is not encoded in the name; compare the rest.
+        assert_eq!(
+            (parsed.rt_m, parsed.rt_n, parsed.wg_r, parsed.wg_c,
+             parsed.use_local, parsed.double_buffer),
+            (cfg.rt_m, cfg.rt_n, cfg.wg_r, cfg.wg_c, cfg.use_local,
+             cfg.double_buffer),
+            "case {case}"
+        );
+    }
+}
+
+/// The model never exceeds the device roofline, for any (device, config,
+/// problem) triple.
+#[test]
+fn prop_model_bounded_by_roofline() {
+    let mut rng = XorShift::new(202);
+    for case in 0..CASES {
+        let dev = random_device(&mut rng);
+        let cfg = random_gemm_config(&mut rng);
+        let p = GemmProblem::new(
+            rng.range(1, 2048),
+            rng.range(1, 2048),
+            rng.range(1, 2048),
+        );
+        if let Ok(e) = gemm_estimate(&dev, p, &cfg) {
+            let roof = dev.roofline_gflops(e.intensity);
+            assert!(
+                e.gflops <= roof * 1.0001,
+                "case {case}: {} {} {:?}: {} > {roof}",
+                dev.id, cfg.name(), p, e.gflops
+            );
+            assert!(e.time_s > 0.0 && e.gflops.is_finite());
+        }
+    }
+}
+
+/// Estimates are deterministic (pure function of inputs).
+#[test]
+fn prop_model_deterministic() {
+    let mut rng = XorShift::new(303);
+    for _ in 0..CASES {
+        let dev = random_device(&mut rng);
+        let cfg = random_gemm_config(&mut rng);
+        let p = GemmProblem::new(rng.range(8, 512), rng.range(8, 512), rng.range(8, 512));
+        let a = gemm_estimate(&dev, p, &cfg).map(|e| e.gflops);
+        let b = gemm_estimate(&dev, p, &cfg).map(|e| e.gflops);
+        match (a, b) {
+            (Ok(x), Ok(y)) => assert_eq!(x, y),
+            (Err(_), Err(_)) => {}
+            other => panic!("non-deterministic feasibility: {other:?}"),
+        }
+    }
+}
+
+/// Exhaustive tuning returns the argmax: no feasible config in the space
+/// scores higher than the winner.
+#[test]
+fn prop_tuner_returns_argmax() {
+    let mut rng = XorShift::new(404);
+    for case in 0..8 {
+        let dev = random_device(&mut rng);
+        let p = GemmProblem::new(
+            rng.range(32, 1024),
+            rng.range(32, 1024),
+            rng.range(32, 1024),
+        );
+        let win = tune_gemm(&dev, p, &ExhaustiveSearch).unwrap();
+        for cfg in portable_kernels::config::gemm_space() {
+            if let Ok(e) = gemm_estimate(&dev, p, &cfg) {
+                assert!(
+                    e.gflops <= win.gflops + 1e-9,
+                    "case {case}: {} beats winner {} on {}",
+                    cfg.name(), win.config.name(), dev.id
+                );
+            }
+        }
+    }
+}
+
+/// Blocked host GEMM equals the naive oracle for arbitrary shapes and
+/// blocking parameters.
+#[test]
+fn prop_blocked_gemm_correct() {
+    let mut rng = XorShift::new(505);
+    for case in 0..30 {
+        let m = rng.range(1, 96) as usize;
+        let n = rng.range(1, 96) as usize;
+        let k = rng.range(1, 96) as usize;
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let params = BlockedParams {
+            bm: rng.range(1, 64) as usize,
+            bn: rng.range(1, 64) as usize,
+            bk: rng.range(1, 64) as usize,
+            mr: rng.range(1, 8) as usize,
+            nr: rng.range(1, 16) as usize,
+        };
+        let expected = gemm_naive(&a, &b, m, n, k);
+        let got = gemm_blocked(&a, &b, m, n, k, &params);
+        assert!(
+            max_abs_diff(&expected, &got) < 1e-3,
+            "case {case}: {m}x{n}x{k} {params:?}"
+        );
+    }
+}
+
+/// conv register model: monotone in every parameter.
+#[test]
+fn prop_conv_regs_monotone() {
+    let mut rng = XorShift::new(606);
+    for _ in 0..CASES {
+        let th = rng.range(1, 7) as u32;
+        let tw = rng.range(1, 7) as u32;
+        let vc = *rng.choose(&[1u32, 2, 4]);
+        let vk = *rng.choose(&[1u32, 2, 4]);
+        let w = *rng.choose(&[1u32, 3, 5, 7]);
+        let base = conv_regs(&ConvConfig::tiled(th, tw, vc, vk), w);
+        assert!(conv_regs(&ConvConfig::tiled(th + 1, tw, vc, vk), w) > base);
+        assert!(conv_regs(&ConvConfig::tiled(th, tw + 1, vc, vk), w) > base);
+        assert!(conv_regs(&ConvConfig::tiled(th, tw, vc * 2, vk), w) > base);
+        assert!(conv_regs(&ConvConfig::tiled(th, tw, vc, vk * 2), w) > base);
+    }
+}
+
+/// Conv model: increasing the tile never increases modeled *traffic*
+/// (the §4.1.1 reuse argument), for stride-1 windows.
+#[test]
+fn prop_conv_tile_reduces_traffic() {
+    let mut rng = XorShift::new(707);
+    for case in 0..30 {
+        let dev = random_device(&mut rng);
+        let c = *rng.choose(&[16u32, 64, 128]);
+        let k = *rng.choose(&[16u32, 64]);
+        let hw = *rng.choose(&[14u32, 28, 56]);
+        let layer = ConvLayer::same("p", 3, 1, hw, hw, c, k);
+        let p = ConvProblem::new(layer, 1);
+        let small = conv_estimate(&dev, &p, &ConvConfig::tiled(1, 1, 1, 1),
+                                  &GemmConfig::default()).unwrap();
+        let large = conv_estimate(&dev, &p, &ConvConfig::tiled(4, 4, 1, 1),
+                                  &GemmConfig::default()).unwrap();
+        assert!(
+            large.global_bytes <= small.global_bytes,
+            "case {case} on {}: {} > {}",
+            dev.id, large.global_bytes, small.global_bytes
+        );
+    }
+}
+
+/// JSON round-trip for arbitrary machine-generated values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_value(rng: &mut XorShift, depth: u32) -> json::Value {
+        match if depth == 0 { rng.below(5) } else { rng.below(7) } {
+            0 => json::Value::Null,
+            1 => json::Value::Bool(rng.below(2) == 0),
+            2 => json::Value::Int(rng.next_u64() as i64 >> rng.below(40)),
+            3 => json::Value::Float(
+                (rng.next_u64() as f64 / 1e12).floor() / 1024.0,
+            ),
+            4 => {
+                let n = rng.below(12) as usize;
+                json::Value::Str(
+                    (0..n)
+                        .map(|_| {
+                            *rng.choose(&[
+                                'a', 'b', '"', '\\', '\n', 'é', '😀', ' ',
+                            ])
+                        })
+                        .collect(),
+                )
+            }
+            5 => json::Value::Array(
+                (0..rng.below(5)).map(|_| random_value(rng, depth - 1)).collect(),
+            ),
+            _ => {
+                let mut o = json::Value::object();
+                for i in 0..rng.below(5) {
+                    o.set(&format!("k{i}"), random_value(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    let mut rng = XorShift::new(808);
+    for case in 0..200 {
+        let v = random_value(&mut rng, 3);
+        let text = v.to_json();
+        let parsed = json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {text} -> {e}"));
+        assert_eq!(parsed, v, "case {case}: {text}");
+        // Pretty round-trips too.
+        assert_eq!(json::parse(&v.to_json_pretty()).unwrap(), v);
+    }
+}
+
+/// Batcher invariants under random workloads: every request is delivered
+/// exactly once, groups are homogeneous, relative order per artifact is
+/// preserved, group sizes respect the cap.
+#[test]
+fn prop_batcher_invariants() {
+    let mut rng = XorShift::new(909);
+    for case in 0..40 {
+        let max_batch = rng.range(1, 6) as usize;
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy {
+            max_batch,
+            max_delay: std::time::Duration::from_secs(3600),
+        });
+        let n = rng.range(0, 60);
+        let arts = ["x", "y", "z"];
+        let mut expected_per_art: std::collections::HashMap<&str, Vec<u64>> =
+            Default::default();
+        for i in 0..n {
+            let art = *rng.choose(&arts);
+            b.push(art, i);
+            expected_per_art.entry(art).or_default().push(i);
+        }
+        let mut seen_per_art: std::collections::HashMap<String, Vec<u64>> =
+            Default::default();
+        let mut total = 0usize;
+        while let Some((art, group)) = b.pop_group() {
+            assert!(!group.is_empty() && group.len() <= max_batch,
+                    "case {case}");
+            total += group.len();
+            seen_per_art.entry(art).or_default().extend(group);
+        }
+        assert_eq!(total, n as usize, "case {case}");
+        for (art, expected) in expected_per_art {
+            assert_eq!(
+                seen_per_art.get(art).map(|v| v.as_slice()).unwrap_or(&[]),
+                expected.as_slice(),
+                "case {case}: order broken for {art}"
+            );
+        }
+    }
+}
+
+/// LayerSpec shape arithmetic: SAME output size matches the ceil-div
+/// definition for arbitrary layer shapes, and im2col GEMM dims are
+/// consistent with output size.
+#[test]
+fn prop_layer_shapes_consistent() {
+    let mut rng = XorShift::new(1010);
+    for _ in 0..CASES {
+        let layer = ConvLayer::same(
+            "p",
+            *rng.choose(&[1u32, 3, 5, 7]),
+            *rng.choose(&[1u32, 2]),
+            rng.range(4, 256) as u32,
+            rng.range(4, 256) as u32,
+            rng.range(1, 512) as u32,
+            rng.range(1, 512) as u32,
+        );
+        assert_eq!(layer.out_h(), layer.in_h.div_ceil(layer.stride));
+        assert_eq!(layer.out_w(), layer.in_w.div_ceil(layer.stride));
+        let (m, n, k) = layer.im2col_gemm(3);
+        assert_eq!(m, 3 * layer.out_h() as u64 * layer.out_w() as u64);
+        assert_eq!(n, layer.out_c as u64);
+        assert_eq!(k, (layer.window as u64).pow(2) * layer.in_c as u64);
+        // flops consistency: 2*M*N*K == direct conv flops.
+        assert_eq!(2 * m * n * k, layer.flops(3));
+    }
+}

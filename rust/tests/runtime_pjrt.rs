@@ -1,0 +1,171 @@
+//! PJRT integration tests: real HLO-text load + compile + execute against
+//! the artifacts built by `make artifacts`, with numerics checked against
+//! the pure-Rust oracle.
+//!
+//! These tests require `artifacts/manifest.json`; they are skipped (with a
+//! loud message) when it is absent so `cargo test` works pre-`make`.
+
+use std::path::{Path, PathBuf};
+
+use portable_kernels::blas::{gemm_naive, max_abs_diff};
+use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
+use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::util::rng::XorShift;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIPPED: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn quickstart_gemm_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    let meta = engine.store().get("quickstart_gemm").unwrap().clone();
+    let (m, n, k) = (
+        meta.m.unwrap() as usize,
+        meta.n.unwrap() as usize,
+        meta.k.unwrap() as usize,
+    );
+    let mut rng = XorShift::new(3);
+    let a = rng.f32_vec(m * k);
+    let b = rng.f32_vec(k * n);
+    let out = engine.run("quickstart_gemm", &[a.clone(), b.clone()]).unwrap();
+    let expected = gemm_naive(&a, &b, m, n, k);
+    assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+}
+
+#[test]
+fn gemm_with_alpha_beta_epilogue() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    // test_gemm_ab: 48x32x40, alpha=1.5, beta=0.5, with C input.
+    let meta = engine.store().get("test_gemm_ab").unwrap().clone();
+    let (m, n, k) = (48usize, 32usize, 40usize);
+    assert_eq!(meta.m, Some(48));
+    let mut rng = XorShift::new(4);
+    let a = rng.f32_vec(m * k);
+    let b = rng.f32_vec(k * n);
+    let c = rng.f32_vec(m * n);
+    let out = engine
+        .run("test_gemm_ab", &[a.clone(), b.clone(), c.clone()])
+        .unwrap();
+    let ab = gemm_naive(&a, &b, m, n, k);
+    let expected: Vec<f32> = ab
+        .iter()
+        .zip(&c)
+        .map(|(x, y)| 1.5 * x + 0.5 * y)
+        .collect();
+    assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+}
+
+/// The parametrization-is-semantics-free claim, measured end-to-end on
+/// the real runtime: the Pallas tiled conv, the Winograd conv, and XLA's
+/// native conv all produce the same numbers.
+#[test]
+fn conv_algorithms_agree_through_pjrt() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    let names = ["test_conv_tiled", "test_conv_wino", "test_conv_xla"];
+    let inputs = engine.synth_inputs(names[0], 77).unwrap();
+    let mut outs = Vec::new();
+    for name in names {
+        let meta = engine.store().get(name).unwrap();
+        assert_eq!(
+            meta.inputs.iter().map(|s| s.elems()).collect::<Vec<_>>(),
+            inputs.iter().map(|v| v.len()).collect::<Vec<_>>(),
+            "{name} input shapes"
+        );
+        outs.push(engine.run(name, &inputs).unwrap().outputs[0].clone());
+    }
+    assert!(max_abs_diff(&outs[0], &outs[2]) < 1e-2, "tiled vs xla");
+    assert!(max_abs_diff(&outs[1], &outs[2]) < 1e-2, "wino vs xla");
+}
+
+#[test]
+fn executable_cache_hits() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    assert_eq!(engine.cached(), 0);
+    engine.warm("quickstart_gemm").unwrap();
+    assert_eq!(engine.cached(), 1);
+    engine.warm("quickstart_gemm").unwrap();
+    assert_eq!(engine.cached(), 1, "second warm must hit the cache");
+    let inputs = engine.synth_inputs("quickstart_gemm", 5).unwrap();
+    engine.run("quickstart_gemm", &inputs).unwrap();
+    assert_eq!(engine.cached(), 1);
+}
+
+#[test]
+fn engine_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    // Wrong arity.
+    assert!(engine.run("quickstart_gemm", &[vec![0.0; 64 * 64]]).is_err());
+    // Wrong element count.
+    assert!(engine
+        .run("quickstart_gemm", &[vec![0.0; 7], vec![0.0; 64 * 64]])
+        .is_err());
+    // Unknown artifact.
+    assert!(engine.run("no_such_artifact", &[]).is_err());
+}
+
+#[test]
+fn engine_actor_serves_concurrent_callers() {
+    let Some(dir) = artifacts_dir() else { return };
+    let (handle, join) = EngineHandle::spawn(&dir).unwrap();
+    let mut threads = Vec::new();
+    for t in 0..4 {
+        let h = handle.clone();
+        threads.push(std::thread::spawn(move || {
+            let inputs = h.synth_inputs("quickstart_gemm", t).unwrap();
+            for _ in 0..3 {
+                let out = h.run("quickstart_gemm", inputs.clone()).unwrap();
+                assert_eq!(out.outputs[0].len(), 64 * 64);
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+    let stats = handle.stats().unwrap();
+    assert_eq!(stats.runs, 12);
+    assert_eq!(stats.cached_executables, 1);
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn network_runner_executes_resnet_xla_stack() {
+    let Some(dir) = artifacts_dir() else { return };
+    let store = ArtifactStore::open(&dir).unwrap();
+    let (handle, join) = EngineHandle::spawn(&dir).unwrap();
+    let runner = NetworkRunner::new(handle.clone());
+    let report = runner.run_network(&store, "resnet", "xla", 1).unwrap();
+    assert_eq!(report.layers.len(), 26, "all Table-4 layers");
+    assert!(report.total_gflops() > 0.0);
+    for l in &report.layers {
+        assert!(l.gflops > 0.0, "{}", l.layer);
+        assert!(l.elapsed_s > 0.0);
+    }
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+/// Timing discipline: best-of-N never exceeds a single-run time.
+#[test]
+fn run_timed_takes_minimum() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::new(ArtifactStore::open(&dir).unwrap()).unwrap();
+    let inputs = engine.synth_inputs("quickstart_gemm", 9).unwrap();
+    let (_, best) = engine.run_timed("quickstart_gemm", &inputs, 5).unwrap();
+    let single = engine.run("quickstart_gemm", &inputs).unwrap().elapsed;
+    // Not a strict inequality in general, but best-of-5 should not be
+    // dramatically slower than any observed run.
+    assert!(best <= single * 3);
+}
