@@ -1,0 +1,18 @@
+# Build-time entry points.  The Rust side is plain cargo (workspace root
+# is this directory); `make artifacts` runs the Python AOT bridge that
+# lowers the parametrized Pallas kernels to artifacts/*.hlo.txt +
+# manifest.json (requires JAX; the Rust NativeEngine also runs synthetic
+# manifests without it).
+
+.PHONY: artifacts test rust-test python-test
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts --groups all
+
+rust-test:
+	cargo build --release && cargo test -q
+
+python-test:
+	python3 -m pytest python/tests -q
+
+test: rust-test python-test

@@ -1,0 +1,18 @@
+"""Shared pytest setup for the kernel test suites.
+
+Puts ``python/`` on ``sys.path`` so ``from compile...`` imports work no
+matter which directory pytest is invoked from.
+
+Availability guards live in the test modules themselves: each
+``test_*.py`` opens with ``pytest.importorskip("jax")`` (and
+``"hypothesis"`` where used) *before* its heavy imports, so on machines
+without the JAX/Pallas stack ``pytest python/tests -q`` reports the
+modules as skipped instead of erroring at collection.
+"""
+
+import os
+import sys
+
+sys.path.insert(
+    0, os.path.abspath(os.path.join(os.path.dirname(__file__), os.pardir))
+)

@@ -1,5 +1,9 @@
 """AOT pipeline tests: manifest integrity and HLO round-trip."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas is required for the kernel tests")
+
 import json
 import os
 

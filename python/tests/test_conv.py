@@ -1,5 +1,10 @@
 """Tiled direct convolution kernel vs XLA reference."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas is required for the kernel tests")
+pytest.importorskip("hypothesis", reason="hypothesis is required for the property tests")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -5,6 +5,11 @@ mathematics*: every configuration of the kernel family must agree with the
 reference.  Hypothesis sweeps shapes and configurations.
 """
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas is required for the kernel tests")
+pytest.importorskip("hypothesis", reason="hypothesis is required for the property tests")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,5 +1,9 @@
 """Network layer tables (paper Tables 3 & 4) and L2 layer graphs."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas is required for the kernel tests")
+
 import dataclasses
 
 import jax

@@ -1,5 +1,10 @@
 """Winograd F(m x m, 3 x 3) convolution vs XLA reference (paper §4.1.2)."""
 
+import pytest
+
+pytest.importorskip("jax", reason="JAX/Pallas is required for the kernel tests")
+pytest.importorskip("hypothesis", reason="hypothesis is required for the property tests")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

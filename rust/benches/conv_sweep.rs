@@ -6,7 +6,7 @@
 use std::path::Path;
 
 use portable_kernels::harness::{fig_conv, fig_registers, Report};
-use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
 use portable_kernels::util::bench::bench;
 
 fn modeled() {
@@ -33,10 +33,10 @@ fn measured() {
         return;
     }
     let store = ArtifactStore::open(dir).unwrap();
-    let mut engine = Engine::new(store).unwrap();
+    let mut engine = DefaultEngine::new(store).unwrap();
 
     let mut table = Report::new(
-        "measured conv algorithms (PJRT CPU, best of 3)",
+        "measured conv algorithms (default backend, best of 3)",
         &["artifact", "algorithm", "ms", "effective GF/s", "scaled"],
     );
     let names: Vec<String> = engine

@@ -15,7 +15,7 @@ use std::path::Path;
 use portable_kernels::config::GemmConfig;
 use portable_kernels::device::device_by_name;
 use portable_kernels::harness::{fig_gemm, Report};
-use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
 use portable_kernels::util::bench::bench;
 
 fn modeled() {
@@ -55,10 +55,10 @@ fn measured() {
         return;
     }
     let store = ArtifactStore::open(dir).unwrap();
-    let mut engine = Engine::new(store).unwrap();
+    let mut engine = DefaultEngine::new(store).unwrap();
 
     let mut table = Report::new(
-        "measured GEMM anchors (PJRT CPU, best of 5)",
+        "measured GEMM anchors (default backend, best of 5)",
         &["artifact", "config", "ms", "GF/s"],
     );
     let names: Vec<String> = engine

@@ -1,5 +1,5 @@
 //! End-to-end driver: serve both networks' convolution stacks through the
-//! coordinator (real PJRT execution, batched requests) and report
+//! coordinator (real backend execution, batched requests) and report
 //! per-layer gigaflops and end-to-end latency — the measured counterpart
 //! of the paper's Figs. 6-9, recorded in EXPERIMENTS.md.
 //!
@@ -8,8 +8,9 @@
 //! cargo run --release --example network_inference
 //! ```
 //!
-//! Exercises every layer of the stack: manifest parsing, HLO-text
-//! compilation, the engine actor, the batcher, and the network runner.
+//! Exercises every layer of the stack: manifest parsing, backend
+//! planning/compilation, the engine actor, the batcher, and the network
+//! runner.
 
 use std::time::Instant;
 
@@ -19,7 +20,7 @@ use portable_kernels::coordinator::{
 use portable_kernels::harness::Report;
 use portable_kernels::runtime::ArtifactStore;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::path::Path::new("artifacts");
     let store = ArtifactStore::open(dir)?;
     let (handle, join) = EngineHandle::spawn(dir)?;
@@ -36,7 +37,7 @@ fn main() -> anyhow::Result<()> {
             let report =
                 runner.run_network(&store, net, implementation, 3)?;
             let mut table = Report::new(
-                &format!("{net} / {implementation} (measured, PJRT CPU)"),
+                &format!("{net} / {implementation} (measured)"),
                 &["layer", "GFLOP", "ms", "GF/s"],
             );
             for l in &report.layers {
@@ -75,7 +76,9 @@ fn main() -> anyhow::Result<()> {
         let inputs = handle.synth_inputs(&artifact, 11)?;
         for _ in &payloads {
             let out = handle.run(&artifact, inputs.clone())?;
-            anyhow::ensure!(!out.outputs[0].is_empty());
+            if out.outputs[0].is_empty() {
+                return Err("empty output from engine".into());
+            }
             served += 1;
         }
         groups += 1;

@@ -1,5 +1,6 @@
-//! Perf probe: where does request time go? (literal build vs execute vs readback)
-use portable_kernels::runtime::{ArtifactStore, Engine};
+//! Perf probe: where does request time go? (literal build vs execute vs
+//! readback).  PJRT-only — build with `--features pjrt`.
+use portable_kernels::runtime::{ArtifactStore, Backend, Engine};
 use std::time::Instant;
 fn main() {
     let dir = std::path::Path::new("artifacts");

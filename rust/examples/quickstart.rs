@@ -7,19 +7,20 @@
 //!
 //! This is the whole request-path story in one page: the artifact was
 //! produced at build time by the Pallas GEMM instantiated with the paper's
-//! `4x4_8x8_loc` configuration; Rust loads the HLO text, compiles it once
-//! on the PJRT CPU client, executes it, and verifies the numbers against
-//! the pure-Rust naive GEMM.
+//! `4x4_8x8_loc` configuration; Rust loads the manifest, plans/compiles it
+//! once on the default backend (the pure-Rust native engine offline, PJRT
+//! under `--features pjrt`), executes it, and verifies the numbers against
+//! the naive GEMM oracle.
 
 use portable_kernels::blas::{gemm_naive, max_abs_diff};
-use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
 use portable_kernels::util::rng::XorShift;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dir = std::path::Path::new("artifacts");
     let store = ArtifactStore::open(dir)?;
-    let mut engine = Engine::new(store)?;
-    println!("PJRT platform: {}", engine.platform());
+    let mut engine = DefaultEngine::new(store)?;
+    println!("backend: {}", engine.platform());
 
     // The quickstart artifact is a 64x64x64 GEMM with the paper's
     // 4x4_8x8_loc configuration (see python/compile/manifests.py).
@@ -49,8 +50,10 @@ fn main() -> anyhow::Result<()> {
     // Verify against the host-Rust oracle.
     let expected = gemm_naive(&a, &b, m, n, k);
     let err = max_abs_diff(&out.outputs[0], &expected);
-    println!("max |pjrt - rust_naive| = {err:.2e}");
-    anyhow::ensure!(err < 1e-3, "numerics mismatch");
+    println!("max |backend - rust_naive| = {err:.2e}");
+    if err >= 1e-3 {
+        return Err(format!("numerics mismatch: {err:.2e}").into());
+    }
     println!("quickstart OK");
     Ok(())
 }

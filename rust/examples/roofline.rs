@@ -11,7 +11,7 @@ use portable_kernels::device::device_by_name;
 use portable_kernels::harness::sweep::{gemm_sweep, winners_per_point};
 use portable_kernels::perfmodel::{vendor_gemm, GemmProblem, VendorLib};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let dev_id = std::env::args().nth(1).unwrap_or_else(|| "uhd630".into());
     let dev = device_by_name(&dev_id)?;
     eprintln!("device: {dev}");

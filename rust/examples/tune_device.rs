@@ -16,7 +16,7 @@ use portable_kernels::tuner::{
 };
 use portable_kernels::util::tmp::TempDir;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let devices = ["mali-g71", "r9-nano", "uhd630", "i7-6700k-cpu"];
     let problems = [
         GemmProblem::new(128, 128, 128),

@@ -1,0 +1,281 @@
+//! Host Rust 2D convolution references: a direct (naive) oracle and the
+//! im2col+GEMM path the native engine dispatches to.
+//!
+//! Layouts match the Pallas kernels and the artifact manifest: NHWC
+//! input, RSCK (window x window x in_c x out_c) filters, NHWK output.
+//! SAME padding follows the TF/JAX convention (`out = ceil(in / stride)`,
+//! deficit split low-side-first), so the native engine's numbers line up
+//! with the AOT artifacts bit-for-bit in structure.
+
+use super::blocked::{gemm_blocked, BlockedParams};
+
+/// Fully resolved shape of one conv2d execution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dShape {
+    pub batch: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+    pub in_c: usize,
+    pub out_h: usize,
+    pub out_w: usize,
+    pub out_c: usize,
+    pub window: usize,
+    pub stride: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+}
+
+impl Conv2dShape {
+    /// SAME-padded shape: `out = ceil(in / stride)`, padding deficit
+    /// split with the smaller half on the top/left (TF/JAX convention).
+    pub fn same(
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        window: usize,
+        stride: usize,
+    ) -> Self {
+        let out_h = in_h.div_ceil(stride);
+        let out_w = in_w.div_ceil(stride);
+        let pad_h =
+            ((out_h - 1) * stride + window).saturating_sub(in_h);
+        let pad_w =
+            ((out_w - 1) * stride + window).saturating_sub(in_w);
+        Self {
+            batch,
+            in_h,
+            in_w,
+            in_c,
+            out_h,
+            out_w,
+            out_c,
+            window,
+            stride,
+            pad_top: pad_h / 2,
+            pad_left: pad_w / 2,
+        }
+    }
+
+    /// VALID (no padding) shape: `out = (in - window) / stride + 1`.
+    pub fn valid(
+        batch: usize,
+        in_h: usize,
+        in_w: usize,
+        in_c: usize,
+        out_c: usize,
+        window: usize,
+        stride: usize,
+    ) -> Self {
+        Self {
+            batch,
+            in_h,
+            in_w,
+            in_c,
+            out_h: (in_h - window) / stride + 1,
+            out_w: (in_w - window) / stride + 1,
+            out_c,
+            window,
+            stride,
+            pad_top: 0,
+            pad_left: 0,
+        }
+    }
+
+    pub fn input_elems(&self) -> usize {
+        self.batch * self.in_h * self.in_w * self.in_c
+    }
+
+    pub fn filter_elems(&self) -> usize {
+        self.window * self.window * self.in_c * self.out_c
+    }
+
+    pub fn output_elems(&self) -> usize {
+        self.batch * self.out_h * self.out_w * self.out_c
+    }
+}
+
+/// Direct (quadruple-loop) convolution — the correctness oracle.
+pub fn conv2d_direct(x: &[f32], f: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    let mut out = vec![0.0f32; s.output_elems()];
+    for b in 0..s.batch {
+        for oh in 0..s.out_h {
+            for ow in 0..s.out_w {
+                let o0 = ((b * s.out_h + oh) * s.out_w + ow) * s.out_c;
+                for r in 0..s.window {
+                    let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
+                    if ih < 0 || ih as usize >= s.in_h {
+                        continue;
+                    }
+                    for sw in 0..s.window {
+                        let iw = (ow * s.stride + sw) as isize
+                            - s.pad_left as isize;
+                        if iw < 0 || iw as usize >= s.in_w {
+                            continue;
+                        }
+                        let x0 = ((b * s.in_h + ih as usize) * s.in_w
+                            + iw as usize)
+                            * s.in_c;
+                        for c in 0..s.in_c {
+                            let xv = x[x0 + c];
+                            let f0 = ((r * s.window + sw) * s.in_c + c)
+                                * s.out_c;
+                            for k in 0..s.out_c {
+                                out[o0 + k] += xv * f[f0 + k];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Materialize the im2col patch matrix: `(batch*out_h*out_w) x
+/// (window*window*in_c)`, rows in output-pixel order, columns in (r, s, c)
+/// order — exactly the RSC-major flattening of the filters, so the
+/// lowered GEMM is `patches @ filters`.
+pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    let kdim = s.window * s.window * s.in_c;
+    let mut patches =
+        vec![0.0f32; s.batch * s.out_h * s.out_w * kdim];
+    let mut row = 0usize;
+    for b in 0..s.batch {
+        for oh in 0..s.out_h {
+            for ow in 0..s.out_w {
+                let base = row * kdim;
+                for r in 0..s.window {
+                    let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
+                    for sw in 0..s.window {
+                        let iw = (ow * s.stride + sw) as isize
+                            - s.pad_left as isize;
+                        if ih < 0
+                            || ih as usize >= s.in_h
+                            || iw < 0
+                            || iw as usize >= s.in_w
+                        {
+                            continue; // zero padding (buffer pre-zeroed)
+                        }
+                        let x0 = ((b * s.in_h + ih as usize) * s.in_w
+                            + iw as usize)
+                            * s.in_c;
+                        let p0 = base + (r * s.window + sw) * s.in_c;
+                        patches[p0..p0 + s.in_c]
+                            .copy_from_slice(&x[x0..x0 + s.in_c]);
+                    }
+                }
+                row += 1;
+            }
+        }
+    }
+    patches
+}
+
+/// Convolution by im2col + blocked GEMM — the native engine's conv path
+/// (the paper's §4.1 "lower onto GEMM" algorithm played on the host).
+pub fn conv2d_im2col(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    params: &BlockedParams,
+) -> Vec<f32> {
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    let patches = im2col(x, s);
+    let m = s.batch * s.out_h * s.out_w;
+    let k = s.window * s.window * s.in_c;
+    // Filters are RSCK row-major: already the (K x N) operand.
+    gemm_blocked(&patches, f, m, s.out_c, k, params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::max_abs_diff;
+    use crate::util::rng::XorShift;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        XorShift::new(seed).f32_vec(n)
+    }
+
+    #[test]
+    fn same_padding_geometry() {
+        // 3x3/s1 SAME keeps the spatial size; pad is 1 on each side.
+        let s = Conv2dShape::same(1, 14, 14, 8, 16, 3, 1);
+        assert_eq!((s.out_h, s.out_w), (14, 14));
+        assert_eq!((s.pad_top, s.pad_left), (1, 1));
+        // 3x3/s2 SAME on even input: ceil(56/2)=28, total pad 1 -> top 0.
+        let s = Conv2dShape::same(1, 56, 56, 4, 4, 3, 2);
+        assert_eq!((s.out_h, s.out_w), (28, 28));
+        assert_eq!(s.pad_top, 0);
+        // 1x1 never pads.
+        let s = Conv2dShape::same(2, 7, 7, 32, 64, 1, 1);
+        assert_eq!((s.pad_top, s.pad_left), (0, 0));
+    }
+
+    #[test]
+    fn valid_padding_geometry() {
+        let s = Conv2dShape::valid(1, 230, 230, 3, 64, 7, 2);
+        assert_eq!((s.out_h, s.out_w), (112, 112));
+    }
+
+    #[test]
+    fn im2col_matches_direct() {
+        for &(h, w, c, k, win, stride) in &[
+            (8, 8, 3, 4, 3, 1),
+            (9, 7, 2, 5, 3, 2),
+            (6, 6, 4, 4, 1, 1),
+            (10, 10, 2, 3, 5, 2),
+        ] {
+            let s = Conv2dShape::same(2, h, w, c, k, win, stride);
+            let x = rand(s.input_elems(), 1);
+            let f = rand(s.filter_elems(), 2);
+            let direct = conv2d_direct(&x, &f, &s);
+            let lowered =
+                conv2d_im2col(&x, &f, &s, &BlockedParams::default());
+            assert!(
+                max_abs_diff(&direct, &lowered) < 1e-4,
+                "{h}x{w}x{c}->{k} {win}x{win}/s{stride}"
+            );
+        }
+    }
+
+    #[test]
+    fn valid_conv_matches_direct() {
+        let s = Conv2dShape::valid(1, 12, 12, 3, 8, 5, 2);
+        let x = rand(s.input_elems(), 3);
+        let f = rand(s.filter_elems(), 4);
+        let direct = conv2d_direct(&x, &f, &s);
+        let lowered = conv2d_im2col(&x, &f, &s, &BlockedParams::default());
+        assert!(max_abs_diff(&direct, &lowered) < 1e-4);
+    }
+
+    #[test]
+    fn pointwise_conv_is_a_gemm() {
+        // A 1x1 conv is exactly (B*H*W x C) @ (C x K).
+        let s = Conv2dShape::same(2, 5, 5, 16, 8, 1, 1);
+        let x = rand(s.input_elems(), 5);
+        let f = rand(s.filter_elems(), 6);
+        let conv = conv2d_im2col(&x, &f, &s, &BlockedParams::default());
+        let gemm = crate::blas::gemm_naive(&x, &f, 2 * 5 * 5, 8, 16);
+        assert!(max_abs_diff(&conv, &gemm) < 1e-4);
+    }
+
+    #[test]
+    fn identity_filter_passes_input_through() {
+        // 1x1, in_c == out_c, identity matrix filter.
+        let c = 6;
+        let s = Conv2dShape::same(1, 4, 4, c, c, 1, 1);
+        let x = rand(s.input_elems(), 7);
+        let mut f = vec![0.0f32; c * c];
+        for i in 0..c {
+            f[i * c + i] = 1.0;
+        }
+        let out = conv2d_direct(&x, &f, &s);
+        assert!(max_abs_diff(&out, &x) < 1e-6);
+    }
+}

@@ -1,14 +1,18 @@
-//! Host Rust GEMM baselines.
+//! Host Rust reference kernels: GEMM baselines and the im2col conv path.
 //!
-//! Two roles: (1) a pure-Rust oracle to validate PJRT results against in
-//! integration tests, and (2) the "hand-written native library" comparator
+//! Three roles: (1) a pure-Rust oracle to validate backend results against
+//! in integration tests, (2) the "hand-written native library" comparator
 //! for the measured host benchmarks — the role MKL-DNN/ARM-CL-NEON play on
-//! the paper's CPUs.
+//! the paper's CPUs — and (3) the compute kernels behind
+//! [`runtime::NativeEngine`](crate::runtime::NativeEngine), the default
+//! (offline) execution backend.
 
 mod blocked;
+mod conv;
 mod naive;
 
 pub use blocked::{gemm_blocked, BlockedParams};
+pub use conv::{conv2d_direct, conv2d_im2col, im2col, Conv2dShape};
 pub use naive::gemm_naive;
 
 /// Max |a - b| over two equal-length slices (test helper).

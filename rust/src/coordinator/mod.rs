@@ -1,18 +1,18 @@
-//! Layer-3 coordinator: the Rust-owned event loop around the PJRT engine.
+//! Layer-3 coordinator: the Rust-owned event loop around the execution
+//! backend.
 //!
 //! The paper's contribution lives at the kernel layer, so the coordinator
 //! is the thin-but-real serving scaffold a library like SYCL-DNN needs in
 //! deployment:
 //!
-//! * [`scheduler`] — an actor thread owning the (non-`Sync`) [`Engine`],
-//!   with an async handle for tokio callers; all execution funnels
-//!   through it, so the request path is channel-send + hash-lookup +
-//!   execute.
+//! * [`scheduler`] — an actor thread owning any (`&mut self`, possibly
+//!   non-`Sync`) [`Backend`]; all execution funnels through it, so the
+//!   request path is channel-send + hash-lookup + execute.
 //! * [`batcher`] — groups same-artifact requests to amortize dispatch.
 //! * [`network`] — runs a whole VGG/ResNet convolution stack through the
 //!   engine, selecting each layer's artifact per the tuned selection DB.
 //!
-//! [`Engine`]: crate::runtime::Engine
+//! [`Backend`]: crate::runtime::Backend
 
 mod batcher;
 mod network;

@@ -1,6 +1,13 @@
-//! Engine actor: a dedicated thread owns the PJRT engine; callers talk to
-//! it through channels.  This keeps `xla`'s non-`Sync` types on one thread
-//! while any number of coordinator threads submit work.
+//! Engine actor: a dedicated thread owns the execution backend; callers
+//! talk to it through channels.  Backends are `&mut self` and (for PJRT)
+//! hold non-`Sync` types, so the actor keeps them on one thread while any
+//! number of coordinator threads submit work.
+//!
+//! The actor is generic over [`Backend`]: [`EngineHandle::spawn`] uses the
+//! build's [`DefaultEngine`] (native offline, PJRT under `--features
+//! pjrt`), and [`EngineHandle::spawn_with`] accepts any backend
+//! constructor — construction happens *on the actor thread*, so backends
+//! whose internals are not `Send` still work.
 //!
 //! (The usual tokio runtime is unavailable in this offline build; the
 //! actor is pure `std::thread` + `mpsc`, which also keeps the request
@@ -12,7 +19,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
-use crate::runtime::{ArtifactStore, Engine, RunOutput};
+use crate::runtime::{ArtifactStore, Backend, DefaultEngine, RunOutput};
 
 enum Request {
     Run {
@@ -46,7 +53,7 @@ enum Request {
 pub struct EngineStats {
     /// Executions completed.
     pub runs: u64,
-    /// Compiled executables resident in the cache.
+    /// Compiled/planned artifacts resident in the cache.
     pub cached_executables: usize,
     /// Total device execution time.
     pub device_time: Duration,
@@ -59,18 +66,28 @@ pub struct EngineHandle {
 }
 
 impl EngineHandle {
-    /// Spawn the actor over the artifact directory.  Returns the handle
-    /// and the join handle of the actor thread.
+    /// Spawn the actor over the artifact directory with the build's
+    /// default backend.  Returns the handle and the join handle of the
+    /// actor thread.
     pub fn spawn(artifact_dir: &Path) -> Result<(Self, JoinHandle<()>)> {
         let store = ArtifactStore::open(artifact_dir)?;
+        Self::spawn_with(move || DefaultEngine::new(store))
+    }
+
+    /// Spawn the actor with an explicit backend constructor.  The
+    /// constructor runs on the actor thread (PJRT clients never cross
+    /// threads); construction errors are reported synchronously.
+    pub fn spawn_with<B, F>(make: F) -> Result<(Self, JoinHandle<()>)>
+    where
+        B: Backend + 'static,
+        F: FnOnce() -> Result<B> + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<Request>();
-        // Engine construction happens on the actor thread; creation
-        // errors are reported through a one-time channel.
         let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
         let join = std::thread::Builder::new()
-            .name("pjrt-engine".into())
+            .name("engine".into())
             .spawn(move || {
-                let mut engine = match Engine::new(store) {
+                let mut engine = match make() {
                     Ok(e) => {
                         let _ = init_tx.send(Ok(()));
                         e
@@ -102,7 +119,7 @@ impl EngineHandle {
                             let _ = reply.send(out);
                         }
                         Request::Warm { name, reply } => {
-                            let r = engine.warm(&name).map(|_| ());
+                            let r = engine.warm(&name);
                             stats.cached_executables = engine.cached();
                             let _ = reply.send(r);
                         }
@@ -144,8 +161,8 @@ impl EngineHandle {
         self.ask(|reply| Request::Run { name: name.into(), inputs, reply })?
     }
 
-    /// Execute an artifact `iters` times, input literals built once;
-    /// returns the last output with the best (min) time.
+    /// Execute an artifact `iters` times, per-run setup hoisted by the
+    /// backend; returns the last output with the best (min) time.
     pub fn run_timed(
         &self,
         name: &str,
@@ -160,7 +177,7 @@ impl EngineHandle {
         })?
     }
 
-    /// Pre-compile an artifact.
+    /// Pre-compile (or pre-plan) an artifact.
     pub fn warm(&self, name: &str) -> Result<()> {
         self.ask(|reply| Request::Warm { name: name.into(), reply })?
     }

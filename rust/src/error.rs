@@ -1,38 +1,67 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — the offline build has no
+//! `thiserror`, and the surface is small enough that the derive buys
+//! nothing.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the portable-kernels library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// A configuration string or parameter set failed validation.
-    #[error("invalid configuration: {0}")]
     Config(String),
 
     /// A kernel configuration cannot run on the given device (e.g. its
     /// local-memory tile exceeds the device's local memory).
-    #[error("configuration infeasible on {device}: {reason}")]
     Infeasible { device: String, reason: String },
 
     /// Artifact manifest or HLO file problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT/XLA runtime failure.
-    #[error("runtime error: {0}")]
+    /// Execution-backend failure (native dispatch or PJRT/XLA).
     Runtime(String),
 
     /// Unknown device, layer, or artifact name.
-    #[error("not found: {0}")]
     NotFound(String),
 
-    #[error("i/o error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json error: {0}")]
     Json(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "invalid configuration: {m}"),
+            Error::Infeasible { device, reason } => {
+                write!(f, "configuration infeasible on {device}: {reason}")
+            }
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::NotFound(m) => write!(f, "not found: {m}"),
+            Error::Io(e) => write!(f, "i/o error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Runtime(e.to_string())
@@ -41,3 +70,31 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        assert_eq!(
+            Error::Config("bad".into()).to_string(),
+            "invalid configuration: bad"
+        );
+        assert_eq!(
+            Error::Infeasible { device: "mali-g71".into(), reason: "lds".into() }
+                .to_string(),
+            "configuration infeasible on mali-g71: lds"
+        );
+        assert!(Error::NotFound("x".into()).to_string().contains("not found"));
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let err: Error = io.into();
+        assert!(err.to_string().contains("gone"));
+        use std::error::Error as _;
+        assert!(err.source().is_some());
+    }
+}

@@ -12,11 +12,31 @@
 //! * **Layer 1/2 (build time, Python)** — parametrized Pallas kernels and
 //!   JAX layer graphs, AOT-lowered to `artifacts/*.hlo.txt` by
 //!   `make artifacts`.  Python never runs at request time.
-//! * **Layer 3 (this crate)** — loads and executes the compiled artifacts
-//!   via PJRT ([`runtime`]), models the paper's device zoo analytically
-//!   ([`device`], [`perfmodel`]), tunes configurations per device
-//!   ([`tuner`]), and reproduces every table and figure of the paper's
-//!   evaluation ([`harness`]).
+//! * **Layer 3 (this crate)** — loads the compiled artifacts and executes
+//!   them through a pluggable [`runtime::Backend`], models the paper's
+//!   device zoo analytically ([`device`], [`perfmodel`]), tunes
+//!   configurations per device ([`tuner`]), and reproduces every table
+//!   and figure of the paper's evaluation ([`harness`]).
+//!
+//! ## Execution backends
+//!
+//! The runtime is abstracted behind the [`runtime::Backend`] trait; two
+//! implementations exist and everything above them (the coordinator
+//! actor, the network runner, the measured tuner, the benches) is
+//! backend-agnostic:
+//!
+//! * [`runtime::NativeEngine`] — the **default**.  Plans each manifest
+//!   entry from its metadata (GEMM dims + α/β, or the conv
+//!   [`runtime::LayerMeta`]) and dispatches to the pure-Rust reference
+//!   kernels in [`blas`] (`gemm_blocked` with the α/β epilogue; the
+//!   im2col conv path).  This is how the full
+//!   load→plan→execute→oracle-check pipeline runs in the offline build,
+//!   with zero external dependencies.
+//! * [`runtime::Engine`] — the PJRT/XLA engine, gated behind the `pjrt`
+//!   cargo feature because the `xla` crate it drives is not available
+//!   offline (see `rust/Cargo.toml` for how to vendor it back in).
+//!
+//! [`runtime::DefaultEngine`] names whichever backend the build selected.
 //!
 //! ## Module map
 //!
@@ -25,11 +45,11 @@
 //! | [`config`] | kernel parameter spaces (`GemmConfig`, `ConvConfig`) |
 //! | [`device`] | device specifications (paper Table 1) |
 //! | [`perfmodel`] | analytic performance simulator (§2.2 metrics) |
-//! | [`tuner`] | configuration search + selection database |
-//! | [`runtime`] | PJRT artifact loading & execution |
-//! | [`blas`] | host Rust GEMM baselines |
+//! | [`tuner`] | configuration search + selection DB + measured tuning |
+//! | [`runtime`] | artifact manifest + `Backend` trait (`NativeEngine` default, PJRT `Engine` behind `pjrt`) |
+//! | [`blas`] | host Rust reference kernels (GEMM + im2col conv) |
 //! | [`nn`] | VGG-16 / ResNet-50 layer tables (Tables 3 & 4) |
-//! | [`coordinator`] | benchmark scheduler + network runner |
+//! | [`coordinator`] | backend actor, batcher, network runner |
 //! | [`harness`] | per-figure/table report generators |
 
 pub mod blas;

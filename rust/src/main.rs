@@ -2,9 +2,11 @@
 //!
 //! Subcommands mirror the paper's workflow: inspect the device zoo, tune
 //! kernels per device, regenerate the evaluation figures, and run the
-//! measured network benchmarks through PJRT.
+//! measured network benchmarks through the execution backend (the native
+//! reference engine by default; PJRT under `--features pjrt`).
 //!
-//! (Arg parsing is hand-rolled: the offline build environment has no clap.)
+//! (Arg parsing and error plumbing are hand-rolled: the offline build
+//! environment has no clap/anyhow.)
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -16,11 +18,20 @@ use portable_kernels::harness::{
     fig_conv, fig_gemm, fig_network, fig_registers, tables, Report,
 };
 use portable_kernels::perfmodel::GemmProblem;
-use portable_kernels::runtime::ArtifactStore;
+use portable_kernels::runtime::{ArtifactStore, DefaultEngine};
 use portable_kernels::tuner::{
     tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,
     SearchStrategy, SelectionDb, SelectionKey,
 };
+
+/// CLI-level error: any library error or an ad-hoc message.
+type CliError = Box<dyn std::error::Error>;
+type CliResult<T> = std::result::Result<T, CliError>;
+
+/// Build an ad-hoc CLI error from a message.
+fn cli(msg: String) -> CliError {
+    msg.into()
+}
 
 const USAGE: &str = "\
 repro — cross-platform performance portability via parametrized kernels
@@ -36,7 +47,7 @@ COMMANDS:
        [--strategy exhaustive|random|hillclimb] [--db PATH]
                                tune kernels for a device, write selection DB
   network [--network vgg|resnet] [--impl xla|pallas] [--iters N]
-                               run a conv stack through PJRT (measured)
+                               run a conv stack through the backend (measured)
   run NAME [--iters N]         execute one artifact, report GFLOP/s
   tune-measured [--group gemm|conv] [--iters N]
                                measurement-driven tuning: execute every
@@ -95,26 +106,26 @@ impl Args {
         self.flags.contains_key(name)
     }
 
-    fn usize_or(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+    fn usize_or(&self, name: &str, default: usize) -> CliResult<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|_| anyhow::anyhow!("--{name} wants a number, got {v:?}")),
+            Some(v) => v.parse().map_err(|_| {
+                cli(format!("--{name} wants a number, got {v:?}"))
+            }),
         }
     }
 }
 
-fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn SearchStrategy>> {
+fn strategy_by_name(name: &str) -> CliResult<Box<dyn SearchStrategy>> {
     match name {
         "exhaustive" => Ok(Box::new(ExhaustiveSearch)),
         "random" => Ok(Box::new(RandomSearch { samples: 64, seed: 42 })),
         "hillclimb" => Ok(Box::new(HillClimb { restarts: 8, seed: 42 })),
-        other => anyhow::bail!("unknown strategy {other:?}"),
+        other => Err(cli(format!("unknown strategy {other:?}"))),
     }
 }
 
-fn emit(report: &Report, reports_dir: &PathBuf, csv: bool) -> anyhow::Result<()> {
+fn emit(report: &Report, reports_dir: &PathBuf, csv: bool) -> CliResult<()> {
     println!("{}", report.render());
     if csv {
         let slug: String = report
@@ -131,7 +142,7 @@ fn emit(report: &Report, reports_dir: &PathBuf, csv: bool) -> anyhow::Result<()>
     Ok(())
 }
 
-fn cmd_figures(id: &str, reports: &PathBuf, csv: bool) -> anyhow::Result<()> {
+fn cmd_figures(id: &str, reports: &PathBuf, csv: bool) -> CliResult<()> {
     let all = id == "all";
     let want = |x: &str| all || id == x;
     let mut matched = all;
@@ -189,14 +200,16 @@ fn cmd_figures(id: &str, reports: &PathBuf, csv: bool) -> anyhow::Result<()> {
             matched = true;
         }
     }
-    anyhow::ensure!(matched, "unknown figure id {id:?} (see --help)");
+    if !matched {
+        return Err(cli(format!("unknown figure id {id:?} (see --help)")));
+    }
     Ok(())
 }
 
-fn cmd_tune(args: &Args) -> anyhow::Result<()> {
+fn cmd_tune(args: &Args) -> CliResult<()> {
     let device = args
         .get("device")
-        .ok_or_else(|| anyhow::anyhow!("tune needs --device (see `repro devices`)"))?;
+        .ok_or_else(|| cli("tune needs --device (see `repro devices`)".into()))?;
     let dev = device_by_name(device)?;
     let strat = strategy_by_name(args.get("strategy").unwrap_or("exhaustive"))?;
     let db_path =
@@ -210,13 +223,21 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     for g in args.get_all("gemm") {
         let dims: Vec<u64> = g
             .split('x')
-            .map(|s| s.parse().map_err(|_| anyhow::anyhow!("bad gemm spec {g:?}")))
-            .collect::<anyhow::Result<_>>()?;
-        let [m, n, k] = dims[..] else {
-            anyhow::bail!("gemm spec must be MxNxK, got {g:?}");
+            .map(|s| {
+                s.parse()
+                    .map_err(|_| cli(format!("bad gemm spec {g:?}")))
+            })
+            .collect::<CliResult<_>>()?;
+        let (m, n, k) = match dims[..] {
+            [m, n, k] => (m, n, k),
+            _ => {
+                return Err(cli(format!("gemm spec must be MxNxK, got {g:?}")))
+            }
         };
         let r = tune_gemm(&dev, GemmProblem::new(m, n, k), strat.as_ref())
-            .ok_or_else(|| anyhow::anyhow!("no feasible gemm config on {device}"))?;
+            .ok_or_else(|| {
+                cli(format!("no feasible gemm config on {device}"))
+            })?;
         println!(
             "gemm {m}x{n}x{k} on {device}: {} @ {:.1} GF ({} evals, {} infeasible)",
             r.config.name(),
@@ -232,7 +253,7 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
             for layer in portable_kernels::nn::network_layers(net)? {
                 let batch = 1;
                 let r = tune_conv(&dev, &layer, batch, strat.as_ref())
-                    .ok_or_else(|| anyhow::anyhow!("no feasible conv config"))?;
+                    .ok_or_else(|| cli("no feasible conv config".into()))?;
                 println!(
                     "{net}/{}: {} @ {:.1} GF",
                     layer.name,
@@ -264,7 +285,7 @@ fn cmd_tune(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_network(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+fn cmd_network(artifacts: &PathBuf, args: &Args) -> CliResult<()> {
     let net = args.get("network").unwrap_or("resnet").to_string();
     let implementation = args.get("impl").unwrap_or("xla").to_string();
     let iters = args.usize_or("iters", 3)?;
@@ -274,7 +295,7 @@ fn cmd_network(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     let runner = NetworkRunner::new(handle.clone());
     let report = runner.run_network(&store, &net, &implementation, iters)?;
     let mut table = Report::new(
-        &format!("{net} via {implementation} (measured, PJRT CPU)"),
+        &format!("{net} via {implementation} (measured)"),
         &["layer", "GFLOP", "time (ms)", "gflops", "scaled"],
     );
     for l in &report.layers {
@@ -298,11 +319,11 @@ fn cmd_network(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_run(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
+fn cmd_run(artifacts: &PathBuf, args: &Args) -> CliResult<()> {
     let name = args
         .positional
         .get(1)
-        .ok_or_else(|| anyhow::anyhow!("run needs an artifact name"))?
+        .ok_or_else(|| cli("run needs an artifact name".into()))?
         .clone();
     let iters = args.usize_or("iters", 5)?;
     let store = ArtifactStore::open(artifacts)?;
@@ -310,15 +331,11 @@ fn cmd_run(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     let (handle, join) = EngineHandle::spawn(artifacts)?;
     let inputs = handle.synth_inputs(&name, 7)?;
     handle.warm(&name)?;
-    let mut best = f64::INFINITY;
-    for _ in 0..iters.max(1) {
-        let out = handle.run(&name, inputs.clone())?;
-        best = best.min(out.elapsed.as_secs_f64());
-    }
+    let (out, best) = handle.run_timed(&name, inputs, iters)?;
     println!(
         "{name}: {:.3} ms best of {iters}, {:.2} GFLOP/s ({} flops)",
-        best * 1e3,
-        meta.flops as f64 / best / 1e9,
+        best.as_secs_f64() * 1e3,
+        out.gflops(meta.flops),
         meta.flops
     );
     handle.shutdown();
@@ -326,7 +343,7 @@ fn cmd_run(artifacts: &PathBuf, args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn real_main() -> anyhow::Result<()> {
+fn real_main() -> CliResult<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
     if args.has("help") || args.positional.is_empty() {
@@ -353,7 +370,7 @@ fn real_main() -> anyhow::Result<()> {
             let group = args.get("group").unwrap_or("gemm").to_string();
             let iters = args.usize_or("iters", 3)?;
             let store = ArtifactStore::open(&artifacts)?;
-            let mut engine = portable_kernels::runtime::Engine::new(store)?;
+            let mut engine = DefaultEngine::new(store)?;
             let tuning = portable_kernels::tuner::tune_measured(
                 &mut engine, &group, iters)?;
             let mut table = Report::new(
@@ -386,7 +403,7 @@ fn real_main() -> anyhow::Result<()> {
             }
             Ok(())
         }
-        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+        other => Err(cli(format!("unknown command {other:?}\n{USAGE}"))),
     }
 }
 
@@ -394,7 +411,7 @@ fn main() -> ExitCode {
     match real_main() {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             ExitCode::FAILURE
         }
     }

@@ -115,10 +115,17 @@ pub struct ArtifactMeta {
     pub m: Option<u64>,
     pub n: Option<u64>,
     pub k: Option<u64>,
+    /// GEMM epilogue scale on A@B (aot.py records 1.0 when unused).
+    pub alpha: Option<f64>,
+    /// GEMM epilogue scale on the C operand.
+    pub beta: Option<f64>,
     // Conv-specific.
     pub layer: Option<LayerMeta>,
     pub algorithm: Option<String>,
     pub batch: Option<u32>,
+    /// Conv artifact was lowered with the fused bias+ReLU epilogue
+    /// (third input is the bias vector).
+    pub fuse_relu: bool,
     pub scaled_from: Option<String>,
 }
 
@@ -166,12 +173,18 @@ impl ArtifactMeta {
             m: v.get("m").and_then(|x| x.as_u64()),
             n: v.get("n").and_then(|x| x.as_u64()),
             k: v.get("k").and_then(|x| x.as_u64()),
+            alpha: v.get("alpha").and_then(|x| x.as_f64()),
+            beta: v.get("beta").and_then(|x| x.as_f64()),
             layer: v.get("layer").map(LayerMeta::from_json).transpose()?,
             algorithm: v
                 .get("algorithm")
                 .and_then(|x| x.as_str())
                 .map(String::from),
             batch: v.get("batch").and_then(|x| x.as_u64()).map(|b| b as u32),
+            fuse_relu: v
+                .get("fuse_relu")
+                .and_then(|x| x.as_bool())
+                .unwrap_or(false),
             scaled_from: v
                 .get("scaled_from")
                 .and_then(|x| x.as_str())
@@ -289,6 +302,7 @@ mod tests {
             r#"[{"name": "g1", "kind": "gemm", "impl": "pallas",
                  "config": "4x4_8x8_loc", "file": "g1.hlo.txt",
                  "flops": 1000, "m": 64, "n": 64, "k": 64,
+                 "alpha": 1.5, "beta": 0.5,
                  "inputs": [{"shape": [64, 64], "dtype": "float32"}],
                  "groups": ["core", "gemm"], "scaled_from": null}]"#,
         );
@@ -298,6 +312,8 @@ mod tests {
         let meta = store.get("g1").unwrap();
         assert_eq!(meta.implementation, "pallas");
         assert_eq!(meta.m, Some(64));
+        assert_eq!(meta.alpha, Some(1.5));
+        assert_eq!(meta.beta, Some(0.5));
         assert_eq!(meta.inputs[0].elems(), 4096);
         assert!(meta.scaled_from.is_none());
         assert!(store.hlo_path("g1").is_ok());
@@ -312,7 +328,7 @@ mod tests {
             dir.path(),
             r#"[{"name": "c1", "kind": "conv", "impl": "xla",
                  "file": "c1.hlo.txt", "flops": 99, "batch": 2,
-                 "algorithm": "xla",
+                 "algorithm": "xla", "fuse_relu": true,
                  "layer": {"name": "conv1_1", "window": 3, "stride": 1,
                            "in_h": 14, "in_w": 14, "in_c": 8, "out_c": 16,
                            "out_h": 14, "out_w": 14, "padding": "SAME",
@@ -325,6 +341,7 @@ mod tests {
         assert_eq!(layer.window, 3);
         assert_eq!(layer.out_c, 16);
         assert_eq!(meta.batch, Some(2));
+        assert!(meta.fuse_relu);
     }
 
     #[test]

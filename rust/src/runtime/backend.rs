@@ -1,0 +1,149 @@
+//! The execution-backend abstraction.
+//!
+//! Every engine — the pure-Rust [`NativeEngine`](super::NativeEngine) and
+//! the feature-gated PJRT [`Engine`](super::Engine) — exposes the same
+//! load→compile→execute surface over an [`ArtifactStore`].  Everything
+//! above the runtime (the coordinator actor, the network runner, the
+//! measured tuner, the benches) is written against this trait, so the
+//! backend is a deployment decision, not an architectural one.
+
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::util::rng::XorShift;
+
+use super::artifact::ArtifactStore;
+
+/// Output of one artifact execution.
+#[derive(Debug, Clone)]
+pub struct RunOutput {
+    /// Flattened f32 outputs, one per tuple element.
+    pub outputs: Vec<Vec<f32>>,
+    /// Device execution wall time (compile excluded).
+    pub elapsed: Duration,
+}
+
+impl RunOutput {
+    /// Effective throughput for a run of `flops` useful operations.
+    ///
+    /// A zero-duration run (possible on coarse clocks for tiny kernels)
+    /// reports 0.0 rather than dividing by zero: "no measurable
+    /// throughput" is what downstream `> 0.0` sanity checks should see,
+    /// not `inf`.
+    pub fn gflops(&self, flops: u64) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        flops as f64 / secs / 1e9
+    }
+}
+
+/// An execution backend: compiles (or plans) artifacts once, caches the
+/// result, and executes them with concrete inputs.
+///
+/// Backends are deliberately `&mut self` + single-threaded — PJRT buffers
+/// are not `Sync`, and the native engine keeps the same shape so the two
+/// are interchangeable.  Concurrency is the coordinator's job: it wraps
+/// any backend in an actor thread (see `coordinator::scheduler`).
+pub trait Backend {
+    /// Human-readable platform name (diagnostics).
+    fn platform(&self) -> String;
+
+    /// The artifact store this backend serves.
+    fn store(&self) -> &ArtifactStore;
+
+    /// Compile (or plan) an artifact ahead of time, filling the cache.
+    fn warm(&mut self, name: &str) -> Result<()>;
+
+    /// Number of compiled/planned artifacts currently cached.
+    fn cached(&self) -> usize;
+
+    /// Execute an artifact with flattened f32 inputs (shapes taken from
+    /// the manifest).  Returns flattened outputs + execution time.
+    fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<RunOutput>;
+
+    /// Execute `name` `iters` times and return the last output with the
+    /// best (minimum) execution time — the measurement discipline of the
+    /// benches and the steady-state shape of the network runner.
+    ///
+    /// Backends with an expensive per-run input setup (PJRT literal
+    /// construction) override this to hoist that setup out of the loop.
+    fn run_timed(
+        &mut self,
+        name: &str,
+        inputs: &[Vec<f32>],
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)> {
+        let mut best = Duration::MAX;
+        let mut last = None;
+        for _ in 0..iters.max(1) {
+            let out = self.run(name, inputs)?;
+            best = best.min(out.elapsed);
+            last = Some(out);
+        }
+        let mut out = last.expect("iters >= 1");
+        out.elapsed = best;
+        Ok((out, best))
+    }
+
+    /// Deterministic pseudo-random input vectors for an artifact (used by
+    /// examples, benches, and the measured tuner; values in [-0.5, 0.5)).
+    fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        let meta = self.store().get(name)?;
+        let mut rng = XorShift::new(seed);
+        Ok(meta
+            .inputs
+            .iter()
+            .map(|spec| rng.f32_vec(spec.elems()))
+            .collect())
+    }
+}
+
+/// Validate a request's inputs against an artifact's manifest entry.
+/// Shared by every backend so error messages match.
+pub(super) fn check_inputs(
+    meta: &super::artifact::ArtifactMeta,
+    inputs: &[Vec<f32>],
+) -> Result<()> {
+    if inputs.len() != meta.inputs.len() {
+        return Err(crate::error::Error::Runtime(format!(
+            "{}: expected {} inputs, got {}",
+            meta.name,
+            meta.inputs.len(),
+            inputs.len()
+        )));
+    }
+    for (i, (data, spec)) in inputs.iter().zip(&meta.inputs).enumerate() {
+        if data.len() != spec.elems() {
+            return Err(crate::error::Error::Runtime(format!(
+                "{}: input {i} expected {} elems (shape {:?}), got {}",
+                meta.name,
+                spec.elems(),
+                spec.shape,
+                data.len()
+            )));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gflops_guards_zero_duration() {
+        let out = RunOutput { outputs: vec![], elapsed: Duration::ZERO };
+        assert_eq!(out.gflops(1_000_000_000), 0.0);
+    }
+
+    #[test]
+    fn gflops_normal_case() {
+        let out = RunOutput {
+            outputs: vec![],
+            elapsed: Duration::from_secs(2),
+        };
+        assert_eq!(out.gflops(4_000_000_000), 2.0);
+    }
+}

@@ -1,4 +1,8 @@
 //! Compiled-executable cache + typed execution over the PJRT CPU client.
+//!
+//! Feature-gated (`--features pjrt`): the `xla` crate this backend drives
+//! is unavailable in the offline build, where [`super::NativeEngine`]
+//! serves the same [`Backend`] surface through the pure-Rust kernels.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -7,22 +11,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Error, Result};
 
 use super::artifact::ArtifactStore;
-
-/// Output of one artifact execution.
-#[derive(Debug, Clone)]
-pub struct RunOutput {
-    /// Flattened f32 outputs, one per tuple element.
-    pub outputs: Vec<Vec<f32>>,
-    /// Device execution wall time (compile excluded).
-    pub elapsed: Duration,
-}
-
-impl RunOutput {
-    /// Effective throughput for a run of `flops` useful operations.
-    pub fn gflops(&self, flops: u64) -> f64 {
-        flops as f64 / self.elapsed.as_secs_f64() / 1e9
-    }
-}
+use super::backend::{check_inputs, Backend, RunOutput};
 
 /// The execution engine: one PJRT CPU client plus a compile cache.
 ///
@@ -43,18 +32,11 @@ impl Engine {
         Ok(Self { client, store, cache: HashMap::new() })
     }
 
-    /// The artifact store this engine serves.
-    pub fn store(&self) -> &ArtifactStore {
-        &self.store
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
     /// Compile (or fetch from cache) an artifact's executable.
-    pub fn warm(&mut self, name: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    pub fn warm_executable(
+        &mut self,
+        name: &str,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         if let Some(exe) = self.cache.get(name) {
             return Ok(exe.clone());
         }
@@ -70,11 +52,6 @@ impl Engine {
         Ok(exe)
     }
 
-    /// Number of compiled executables currently cached.
-    pub fn cached(&self) -> usize {
-        self.cache.len()
-    }
-
     /// Build input literals for an artifact, validating shapes.  One copy
     /// per input (EXPERIMENTS.md §Perf L3-1: the obvious
     /// `vec1(data).reshape(dims)` costs two copies and dominated
@@ -86,23 +63,9 @@ impl Engine {
         inputs: &[Vec<f32>],
     ) -> Result<Vec<xla::Literal>> {
         let meta = self.store.get(name)?;
-        if inputs.len() != meta.inputs.len() {
-            return Err(Error::Runtime(format!(
-                "{name}: expected {} inputs, got {}",
-                meta.inputs.len(),
-                inputs.len()
-            )));
-        }
+        check_inputs(meta, inputs)?;
         let mut literals = Vec::with_capacity(inputs.len());
         for (data, spec) in inputs.iter().zip(&meta.inputs) {
-            if data.len() != spec.elems() {
-                return Err(Error::Runtime(format!(
-                    "{name}: input expected {} elems (shape {:?}), got {}",
-                    spec.elems(),
-                    spec.shape,
-                    data.len()
-                )));
-            }
             let dims: Vec<usize> =
                 spec.shape.iter().map(|d| *d as usize).collect();
             let bytes: &[u8] = unsafe {
@@ -138,26 +101,40 @@ impl Engine {
         }
         Ok(RunOutput { outputs, elapsed })
     }
+}
 
-    /// Execute an artifact with flattened f32 inputs (shapes taken from
-    /// the manifest).  Returns flattened outputs + execution time.
-    pub fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<RunOutput> {
-        let exe = self.warm(name)?;
+impl Backend for Engine {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    fn warm(&mut self, name: &str) -> Result<()> {
+        self.warm_executable(name).map(|_| ())
+    }
+
+    fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<RunOutput> {
+        let exe = self.warm_executable(name)?;
         let literals = self.build_literals(name, inputs)?;
         self.execute_literals(&exe, &literals)
     }
 
-    /// Execute `name` `iters` times with the input literals built ONCE
-    /// and return the best (minimum) execution time — the measurement
-    /// discipline of the benches and the steady-state shape of the
-    /// network runner (EXPERIMENTS.md §Perf L3-2).
-    pub fn run_timed(
+    /// Input literals are built ONCE for all `iters` repetitions
+    /// (EXPERIMENTS.md §Perf L3-2).
+    fn run_timed(
         &mut self,
         name: &str,
         inputs: &[Vec<f32>],
         iters: usize,
     ) -> Result<(RunOutput, Duration)> {
-        let exe = self.warm(name)?;
+        let exe = self.warm_executable(name)?;
         let literals = self.build_literals(name, inputs)?;
         let mut best = Duration::MAX;
         let mut last = None;
@@ -168,24 +145,6 @@ impl Engine {
         }
         let mut out = last.expect("iters >= 1");
         out.elapsed = best;
-        Ok((out.clone(), best))
-    }
-
-    /// Deterministic pseudo-random input vectors for an artifact (used by
-    /// examples and benches; xorshift, values in [-0.5, 0.5)).
-    pub fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
-        let meta = self.store.get(name)?;
-        let mut state = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
-        let mut next = move || {
-            state ^= state << 13;
-            state ^= state >> 7;
-            state ^= state << 17;
-            ((state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
-        };
-        Ok(meta
-            .inputs
-            .iter()
-            .map(|spec| (0..spec.elems()).map(|_| next()).collect())
-            .collect())
+        Ok((out, best))
     }
 }

@@ -1,13 +1,38 @@
-//! PJRT runtime: load AOT artifacts (HLO text) and execute them.
+//! Runtime: load AOT artifacts and execute them through a pluggable
+//! [`Backend`].
 //!
-//! The request-path half of the AOT bridge.  `make artifacts` (Python,
-//! build time) writes `artifacts/*.hlo.txt` plus `manifest.json`; this
-//! module parses the manifest ([`artifact`]), compiles each HLO module
-//! once on the PJRT CPU client, caches the executable, and runs it with
-//! concrete inputs ([`executor`]).  No Python anywhere.
+//! `make artifacts` (Python, build time) writes `artifacts/*.hlo.txt`
+//! plus `manifest.json`; this module parses the manifest ([`artifact`])
+//! and executes its entries through one of two backends:
+//!
+//! * [`NativeEngine`] (default) — plans each artifact from its manifest
+//!   metadata and dispatches to the pure-Rust reference kernels in
+//!   [`crate::blas`] (blocked GEMM with the α/β epilogue; im2col conv
+//!   keyed on [`LayerMeta`]).  Runs everywhere, including the offline
+//!   build, with no external dependencies.
+//! * [`Engine`] (`--features pjrt`) — compiles each artifact's HLO text
+//!   once on the PJRT CPU client and caches the executable.
+//!
+//! Both implement [`Backend`]; [`DefaultEngine`] names whichever one the
+//! build selected, so callers stay backend-agnostic.  No Python anywhere.
 
 mod artifact;
+mod backend;
+#[cfg(feature = "pjrt")]
 mod executor;
+mod native;
 
 pub use artifact::{ArtifactMeta, ArtifactStore, IoSpec, LayerMeta};
-pub use executor::{Engine, RunOutput};
+pub use backend::{Backend, RunOutput};
+#[cfg(feature = "pjrt")]
+pub use executor::Engine;
+pub use native::NativeEngine;
+
+/// The backend the build defaults to: PJRT when the `pjrt` feature is
+/// enabled, the pure-Rust native engine otherwise.
+#[cfg(feature = "pjrt")]
+pub type DefaultEngine = executor::Engine;
+/// The backend the build defaults to: PJRT when the `pjrt` feature is
+/// enabled, the pure-Rust native engine otherwise.
+#[cfg(not(feature = "pjrt"))]
+pub type DefaultEngine = native::NativeEngine;

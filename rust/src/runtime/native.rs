@@ -1,0 +1,529 @@
+//! The native execution backend: run manifest artifacts through the
+//! pure-Rust reference kernels instead of PJRT.
+//!
+//! This is what makes the whole load→plan→execute→verify pipeline work in
+//! the offline build: `NativeEngine` reads the same `manifest.json` the
+//! AOT bridge writes, but instead of compiling HLO text it *plans* each
+//! artifact — keying on the manifest's GEMM dims or conv [`LayerMeta`] —
+//! and dispatches to [`blas::gemm_blocked`](crate::blas::gemm_blocked)
+//! (GEMM, with the α/β epilogue) or the im2col conv path
+//! ([`blas::conv2d_im2col`](crate::blas::conv2d_im2col)).  The HLO files
+//! referenced by the manifest are never opened, so synthetic manifests
+//! (tests) and real AOT output both execute.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::blas::{conv2d_im2col, gemm_blocked, BlockedParams, Conv2dShape};
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta};
+use super::backend::{check_inputs, Backend, RunOutput};
+
+/// One planned artifact: everything `run` needs, resolved once at warm
+/// time (the native analogue of the PJRT compile cache).
+#[derive(Debug, Clone)]
+enum Plan {
+    Gemm {
+        m: usize,
+        n: usize,
+        k: usize,
+        alpha: f32,
+        beta: f32,
+        /// Third input is a C operand for the β epilogue.
+        with_c: bool,
+    },
+    Conv {
+        shape: Conv2dShape,
+        /// Apply the fused bias+ReLU epilogue (third input is the bias
+        /// vector over output channels), matching how `aot.py` lowers
+        /// `network`-group artifacts.
+        fuse_relu: bool,
+    },
+}
+
+fn gemm_plan(meta: &ArtifactMeta) -> Result<Plan> {
+    let dim = |v: Option<u64>, what: &str| -> Result<usize> {
+        v.map(|x| x as usize).ok_or_else(|| {
+            Error::Artifact(format!(
+                "{}: gemm artifact missing {what}",
+                meta.name
+            ))
+        })
+    };
+    let (m, n, k) = (dim(meta.m, "m")?, dim(meta.n, "n")?, dim(meta.k, "k")?);
+    let with_c = meta.inputs.len() >= 3;
+    // The declared input specs must agree with the dims we will execute
+    // with: check_inputs later enforces data == spec, so spec == dims
+    // here makes a kernel-side shape panic unreachable.
+    let mut expect = vec![m * k, k * n];
+    if with_c {
+        expect.push(m * n);
+    }
+    if meta.inputs.len() < 2
+        || meta
+            .inputs
+            .iter()
+            .zip(&expect)
+            .any(|(spec, want)| spec.elems() != *want)
+    {
+        return Err(Error::Artifact(format!(
+            "{}: gemm input specs {:?} inconsistent with m/n/k {m}x{n}x{k}",
+            meta.name,
+            meta.inputs.iter().map(|s| s.elems()).collect::<Vec<_>>()
+        )));
+    }
+    Ok(Plan::Gemm {
+        m,
+        n,
+        k,
+        alpha: meta.alpha.unwrap_or(1.0) as f32,
+        beta: meta.beta.unwrap_or(0.0) as f32,
+        with_c,
+    })
+}
+
+fn conv_plan(meta: &ArtifactMeta) -> Result<Plan> {
+    let layer: &LayerMeta = meta.layer.as_ref().ok_or_else(|| {
+        Error::Artifact(format!(
+            "{}: conv artifact missing layer metadata",
+            meta.name
+        ))
+    })?;
+    let batch = meta.batch.unwrap_or(1) as usize;
+    // Validate the geometry before any unchecked shape arithmetic: a
+    // malformed manifest must be a loud error, never a panic/overflow.
+    if layer.window == 0
+        || layer.stride == 0
+        || layer.in_h == 0
+        || layer.in_w == 0
+        || layer.in_c == 0
+        || layer.out_c == 0
+    {
+        return Err(Error::Artifact(format!(
+            "{}: conv layer has a zero dimension ({}x{}x{} window {} stride {})",
+            meta.name, layer.in_h, layer.in_w, layer.in_c, layer.window,
+            layer.stride
+        )));
+    }
+    if layer.padding == "VALID"
+        && (layer.window > layer.in_h || layer.window > layer.in_w)
+    {
+        return Err(Error::Artifact(format!(
+            "{}: VALID padding needs window <= input ({} > {}x{})",
+            meta.name, layer.window, layer.in_h, layer.in_w
+        )));
+    }
+    let shape = match layer.padding.as_str() {
+        "SAME" => Conv2dShape::same(
+            batch,
+            layer.in_h as usize,
+            layer.in_w as usize,
+            layer.in_c as usize,
+            layer.out_c as usize,
+            layer.window as usize,
+            layer.stride as usize,
+        ),
+        "VALID" => Conv2dShape::valid(
+            batch,
+            layer.in_h as usize,
+            layer.in_w as usize,
+            layer.in_c as usize,
+            layer.out_c as usize,
+            layer.window as usize,
+            layer.stride as usize,
+        ),
+        other => {
+            return Err(Error::Artifact(format!(
+                "{}: unsupported padding {other:?}",
+                meta.name
+            )))
+        }
+    };
+    // The manifest records the output size the kernel was lowered with;
+    // refuse to run if our padding arithmetic disagrees rather than
+    // silently producing a differently shaped output.
+    if (shape.out_h, shape.out_w)
+        != (layer.out_h as usize, layer.out_w as usize)
+    {
+        return Err(Error::Artifact(format!(
+            "{}: manifest says {}x{} output, padding arithmetic gives {}x{}",
+            meta.name, layer.out_h, layer.out_w, shape.out_h, shape.out_w
+        )));
+    }
+    // The declared x/filter specs must agree with the layer geometry the
+    // kernels will execute with (same rationale as the GEMM plan check).
+    let want_x = shape.input_elems();
+    let want_f = shape.filter_elems();
+    if meta.inputs.len() < 2
+        || meta.inputs[0].elems() != want_x
+        || meta.inputs[1].elems() != want_f
+    {
+        return Err(Error::Artifact(format!(
+            "{}: conv input specs {:?} inconsistent with layer geometry \
+             (want {want_x} input + {want_f} filter elems)",
+            meta.name,
+            meta.inputs.iter().map(|s| s.elems()).collect::<Vec<_>>()
+        )));
+    }
+    if meta.fuse_relu {
+        let bias_ok = meta
+            .inputs
+            .get(2)
+            .map(|b| b.elems() == shape.out_c)
+            .unwrap_or(false);
+        if !bias_ok {
+            return Err(Error::Artifact(format!(
+                "{}: fuse_relu artifact needs a third (bias) input of {} \
+                 elements",
+                meta.name, shape.out_c
+            )));
+        }
+    }
+    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu })
+}
+
+fn build_plan(meta: &ArtifactMeta) -> Result<Plan> {
+    match meta.kind.as_str() {
+        "gemm" => gemm_plan(meta),
+        "conv" => conv_plan(meta),
+        other => Err(Error::Runtime(format!(
+            "{}: unknown op kind {other:?} — the native backend executes \
+             \"gemm\" and \"conv\" artifacts only",
+            meta.name
+        ))),
+    }
+}
+
+/// The pure-Rust execution engine: an artifact store plus a plan cache.
+///
+/// Planning happens once per artifact (first use or [`Backend::warm`]);
+/// the request path is hash-lookup + kernel dispatch, mirroring the PJRT
+/// engine's compile-once/execute-many shape.
+pub struct NativeEngine {
+    store: ArtifactStore,
+    plans: HashMap<String, Plan>,
+    params: BlockedParams,
+}
+
+impl NativeEngine {
+    /// Create a native engine over an artifact store.
+    pub fn new(store: ArtifactStore) -> Result<Self> {
+        Ok(Self {
+            store,
+            plans: HashMap::new(),
+            params: BlockedParams::default(),
+        })
+    }
+
+    /// Create an engine with explicit host blocking parameters (the CPU
+    /// analogue of picking a kernel configuration per device).
+    pub fn with_params(store: ArtifactStore, params: BlockedParams) -> Self {
+        Self { store, plans: HashMap::new(), params }
+    }
+
+    /// Plan (or fetch the cached plan for) an artifact.
+    fn plan(&mut self, name: &str) -> Result<Plan> {
+        if let Some(plan) = self.plans.get(name) {
+            return Ok(plan.clone());
+        }
+        let meta = self.store.get(name)?;
+        let plan = build_plan(meta)?;
+        self.plans.insert(name.to_string(), plan.clone());
+        Ok(plan)
+    }
+
+    fn execute(&self, plan: &Plan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        match plan {
+            Plan::Gemm { m, n, k, alpha, beta, with_c } => {
+                let mut out = gemm_blocked(
+                    &inputs[0],
+                    &inputs[1],
+                    *m,
+                    *n,
+                    *k,
+                    &self.params,
+                );
+                if *with_c {
+                    for (o, c) in out.iter_mut().zip(&inputs[2]) {
+                        *o = alpha * *o + beta * c;
+                    }
+                } else if *alpha != 1.0 {
+                    for o in out.iter_mut() {
+                        *o *= alpha;
+                    }
+                }
+                vec![out]
+            }
+            Plan::Conv { shape, fuse_relu } => {
+                let mut out = conv2d_im2col(
+                    &inputs[0],
+                    &inputs[1],
+                    shape,
+                    &self.params,
+                );
+                if *fuse_relu {
+                    let bias = &inputs[2];
+                    for (i, o) in out.iter_mut().enumerate() {
+                        *o = (*o + bias[i % shape.out_c]).max(0.0);
+                    }
+                }
+                vec![out]
+            }
+        }
+    }
+}
+
+impl Backend for NativeEngine {
+    fn platform(&self) -> String {
+        "native-cpu (pure-Rust reference kernels)".to_string()
+    }
+
+    fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    fn warm(&mut self, name: &str) -> Result<()> {
+        self.plan(name).map(|_| ())
+    }
+
+    fn cached(&self) -> usize {
+        self.plans.len()
+    }
+
+    fn run(&mut self, name: &str, inputs: &[Vec<f32>]) -> Result<RunOutput> {
+        let plan = self.plan(name)?;
+        check_inputs(self.store.get(name)?, inputs)?;
+        let start = Instant::now();
+        let outputs = self.execute(&plan, inputs);
+        let elapsed = start.elapsed();
+        Ok(RunOutput { outputs, elapsed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{conv2d_direct, gemm_naive, max_abs_diff};
+    use crate::util::rng::XorShift;
+    use crate::util::tmp::TempDir;
+    use std::path::Path;
+
+    fn write_manifest(dir: &Path, artifacts: &str) {
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(r#"{{"version": 1, "artifacts": {artifacts}}}"#),
+        )
+        .unwrap();
+    }
+
+    fn engine_with(artifacts: &str) -> (TempDir, NativeEngine) {
+        let dir = TempDir::new("native").unwrap();
+        write_manifest(dir.path(), artifacts);
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let engine = NativeEngine::new(store).unwrap();
+        (dir, engine)
+    }
+
+    const GEMM_8: &str = r#"[{
+        "name": "g8", "kind": "gemm", "impl": "pallas",
+        "file": "g8.hlo.txt", "flops": 1024,
+        "m": 8, "n": 8, "k": 8,
+        "inputs": [{"shape": [8, 8], "dtype": "float32"},
+                   {"shape": [8, 8], "dtype": "float32"}],
+        "groups": ["gemm"]}]"#;
+
+    #[test]
+    fn plan_cache_hit_and_miss() {
+        let (_dir, mut e) = engine_with(GEMM_8);
+        assert_eq!(e.cached(), 0, "fresh engine has an empty cache");
+        e.warm("g8").unwrap();
+        assert_eq!(e.cached(), 1, "first warm is a miss that fills");
+        e.warm("g8").unwrap();
+        assert_eq!(e.cached(), 1, "second warm must hit the cache");
+        let inputs = e.synth_inputs("g8", 1).unwrap();
+        e.run("g8", &inputs).unwrap();
+        assert_eq!(e.cached(), 1, "run reuses the cached plan");
+        assert!(e.warm("missing").is_err());
+        assert_eq!(e.cached(), 1);
+    }
+
+    #[test]
+    fn gemm_matches_naive_oracle() {
+        let (_dir, mut e) = engine_with(GEMM_8);
+        let mut rng = XorShift::new(3);
+        let a = rng.f32_vec(64);
+        let b = rng.f32_vec(64);
+        let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
+        let expected = gemm_naive(&a, &b, 8, 8, 8);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+    }
+
+    #[test]
+    fn gemm_alpha_beta_epilogue() {
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "gab", "kind": "gemm", "impl": "pallas",
+            "file": "gab.hlo.txt", "flops": 100,
+            "m": 4, "n": 6, "k": 5, "alpha": 1.5, "beta": 0.5,
+            "inputs": [{"shape": [4, 5], "dtype": "float32"},
+                       {"shape": [5, 6], "dtype": "float32"},
+                       {"shape": [4, 6], "dtype": "float32"}],
+            "groups": ["gemm"]}]"#,
+        );
+        let mut rng = XorShift::new(4);
+        let a = rng.f32_vec(20);
+        let b = rng.f32_vec(30);
+        let c = rng.f32_vec(24);
+        let out = e.run("gab", &[a.clone(), b.clone(), c.clone()]).unwrap();
+        let ab = gemm_naive(&a, &b, 4, 6, 5);
+        let expected: Vec<f32> =
+            ab.iter().zip(&c).map(|(x, y)| 1.5 * x + 0.5 * y).collect();
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+    }
+
+    #[test]
+    fn conv_matches_direct_oracle() {
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "c1", "kind": "conv", "impl": "pallas",
+            "file": "c1.hlo.txt", "flops": 99, "batch": 2,
+            "algorithm": "im2col",
+            "layer": {"name": "smoke", "window": 3, "stride": 1,
+                      "in_h": 6, "in_w": 6, "in_c": 3, "out_c": 4,
+                      "out_h": 6, "out_w": 6, "padding": "SAME",
+                      "flops": 99},
+            "inputs": [{"shape": [2, 6, 6, 3], "dtype": "float32"},
+                       {"shape": [3, 3, 3, 4], "dtype": "float32"}],
+            "groups": ["conv"]}]"#,
+        );
+        let inputs = e.synth_inputs("c1", 7).unwrap();
+        let out = e.run("c1", &inputs).unwrap();
+        let shape = Conv2dShape::same(2, 6, 6, 3, 4, 3, 1);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+        assert_eq!(out.outputs[0].len(), 2 * 6 * 6 * 4);
+    }
+
+    #[test]
+    fn conv_fused_bias_relu_epilogue() {
+        // Mirrors aot.py's `network`-group lowering: conv + bias + ReLU,
+        // bias as a third input over output channels.
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "cf", "kind": "conv", "impl": "pallas",
+            "file": "cf.hlo.txt", "flops": 10, "batch": 1,
+            "algorithm": "im2col", "fuse_relu": true,
+            "layer": {"name": "fused", "window": 1, "stride": 1,
+                      "in_h": 4, "in_w": 4, "in_c": 2, "out_c": 3,
+                      "out_h": 4, "out_w": 4, "padding": "SAME",
+                      "flops": 10},
+            "inputs": [{"shape": [1, 4, 4, 2], "dtype": "float32"},
+                       {"shape": [1, 1, 2, 3], "dtype": "float32"},
+                       {"shape": [3], "dtype": "float32"}],
+            "groups": ["network"]}]"#,
+        );
+        let inputs = e.synth_inputs("cf", 21).unwrap();
+        let out = e.run("cf", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 4, 4, 2, 3, 1, 1);
+        let conv = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        let expected: Vec<f32> = conv
+            .iter()
+            .enumerate()
+            .map(|(i, v)| (v + inputs[2][i % 3]).max(0.0))
+            .collect();
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+        // ReLU actually clamps something (inputs are centered, so some
+        // outputs go negative pre-clamp).
+        assert!(out.outputs[0].iter().any(|v| *v == 0.0));
+    }
+
+    #[test]
+    fn unknown_op_kind_is_a_loud_error_not_a_panic() {
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "mystery", "kind": "fft", "impl": "pallas",
+            "file": "mystery.hlo.txt", "flops": 1,
+            "inputs": [], "groups": []}]"#,
+        );
+        let err = e.run("mystery", &[]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown op kind"), "got: {msg}");
+        assert!(msg.contains("fft"), "names the offending kind: {msg}");
+        assert!(matches!(err, Error::Runtime(_)));
+        assert_eq!(e.cached(), 0, "failed plans are not cached");
+    }
+
+    #[test]
+    fn input_validation_mirrors_pjrt() {
+        let (_dir, mut e) = engine_with(GEMM_8);
+        // Wrong arity.
+        assert!(e.run("g8", &[vec![0.0; 64]]).is_err());
+        // Wrong element count.
+        assert!(e.run("g8", &[vec![0.0; 7], vec![0.0; 64]]).is_err());
+        // Unknown artifact.
+        assert!(e.run("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn malformed_conv_geometry_is_an_error_not_a_panic() {
+        // VALID window larger than the input used to underflow in
+        // Conv2dShape::valid; it must surface as Error::Artifact.
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "cbad", "kind": "conv", "impl": "pallas",
+            "file": "cbad.hlo.txt", "flops": 1, "batch": 1,
+            "layer": {"name": "bad", "window": 5, "stride": 1,
+                      "in_h": 3, "in_w": 3, "in_c": 1, "out_c": 1,
+                      "out_h": 1, "out_w": 1, "padding": "VALID",
+                      "flops": 1},
+            "inputs": [], "groups": []}]"#,
+        );
+        let msg = e.warm("cbad").unwrap_err().to_string();
+        assert!(msg.contains("VALID padding needs"), "got: {msg}");
+        // Zero dimensions are rejected the same way.
+        let (_dir2, mut e2) = engine_with(
+            r#"[{
+            "name": "czero", "kind": "conv", "impl": "pallas",
+            "file": "czero.hlo.txt", "flops": 1, "batch": 1,
+            "layer": {"name": "z", "window": 3, "stride": 0,
+                      "in_h": 8, "in_w": 8, "in_c": 4, "out_c": 4,
+                      "out_h": 8, "out_w": 8, "padding": "SAME",
+                      "flops": 1},
+            "inputs": [], "groups": []}]"#,
+        );
+        assert!(e2.warm("czero").is_err());
+    }
+
+    #[test]
+    fn fused_conv_with_wrong_bias_shape_rejected_at_plan_time() {
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "cfbad", "kind": "conv", "impl": "pallas",
+            "file": "cfbad.hlo.txt", "flops": 1, "batch": 1,
+            "fuse_relu": true,
+            "layer": {"name": "fb", "window": 1, "stride": 1,
+                      "in_h": 4, "in_w": 4, "in_c": 2, "out_c": 3,
+                      "out_h": 4, "out_w": 4, "padding": "SAME",
+                      "flops": 1},
+            "inputs": [{"shape": [1, 4, 4, 2], "dtype": "float32"},
+                       {"shape": [1, 1, 2, 3], "dtype": "float32"},
+                       {"shape": [2], "dtype": "float32"}],
+            "groups": []}]"#,
+        );
+        let msg = e.warm("cfbad").unwrap_err().to_string();
+        assert!(msg.contains("bias"), "got: {msg}");
+    }
+
+    #[test]
+    fn gemm_artifact_missing_dims_reported() {
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "gx", "kind": "gemm", "impl": "pallas",
+            "file": "gx.hlo.txt", "flops": 1,
+            "inputs": [], "groups": []}]"#,
+        );
+        let msg = e.warm("gx").unwrap_err().to_string();
+        assert!(msg.contains("missing m"), "got: {msg}");
+    }
+}

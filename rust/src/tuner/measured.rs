@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 use std::time::Duration;
 
 use crate::error::Result;
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// One measured candidate.
 #[derive(Debug, Clone)]
@@ -67,9 +67,11 @@ fn problem_key(meta: &crate::runtime::ArtifactMeta) -> Option<String> {
 }
 
 /// Measure every artifact in `group`, `iters` repetitions each (min
-/// taken), grouped into competing problems.
-pub fn tune_measured(
-    engine: &mut Engine,
+/// taken), grouped into competing problems.  Works against any
+/// [`Backend`] — the native engine measures the host reference kernels,
+/// the PJRT engine measures the AOT artifacts.
+pub fn tune_measured<B: Backend>(
+    engine: &mut B,
     group: &str,
     iters: usize,
 ) -> Result<MeasuredTuning> {
@@ -87,13 +89,15 @@ pub fn tune_measured(
         let meta = engine.store().get(&name)?.clone();
         let inputs = engine.synth_inputs(&name, 17)?;
         engine.warm(&name)?;
-        let (_, best) = engine.run_timed(&name, &inputs, iters)?;
+        let (out, best) = engine.run_timed(&name, &inputs, iters)?;
         tuning.problems.entry(key).or_default().push(MeasuredCandidate {
             artifact: name,
             config: meta.config.clone(),
             implementation: meta.implementation.clone(),
             best,
-            gflops: flops as f64 / best.as_secs_f64() / 1e9,
+            // RunOutput::gflops guards zero-duration runs (reports 0.0,
+            // not inf); such candidates still compete on `best`.
+            gflops: out.gflops(flops),
         });
     }
     Ok(tuning)
@@ -119,9 +123,12 @@ mod tests {
             m,
             n: m,
             k: m,
+            alpha: None,
+            beta: None,
             layer: None,
             algorithm: None,
             batch: None,
+            fuse_relu: false,
             scaled_from: None,
         }
     }
@@ -149,5 +156,38 @@ mod tests {
             .insert("p".into(), vec![c("slow", 30), c("fast", 10), c("mid", 20)]);
         assert_eq!(t.winner("p").unwrap().artifact, "fast");
         assert!(t.winner("q").is_none());
+    }
+
+    #[test]
+    fn tune_measured_runs_on_native_backend() {
+        use crate::runtime::{ArtifactStore, NativeEngine};
+        use crate::util::tmp::TempDir;
+
+        let dir = TempDir::new("measured").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+              {"name": "g16_a", "kind": "gemm", "impl": "pallas",
+               "config": "4x4_8x8_loc", "file": "a.hlo.txt", "flops": 8192,
+               "m": 16, "n": 16, "k": 16, "groups": ["gemm"],
+               "inputs": [{"shape": [16, 16], "dtype": "float32"},
+                          {"shape": [16, 16], "dtype": "float32"}]},
+              {"name": "g16_b", "kind": "gemm", "impl": "xla",
+               "file": "b.hlo.txt", "flops": 8192,
+               "m": 16, "n": 16, "k": 16, "groups": ["gemm"],
+               "inputs": [{"shape": [16, 16], "dtype": "float32"},
+                          {"shape": [16, 16], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let mut engine = NativeEngine::new(store).unwrap();
+        let t = tune_measured(&mut engine, "gemm", 2).unwrap();
+        // Both artifacts share the shape, so they compete in one problem.
+        assert_eq!(t.problems.len(), 1);
+        let cands = &t.problems["gemm_16x16x16"];
+        assert_eq!(cands.len(), 2);
+        let w = t.winner("gemm_16x16x16").unwrap();
+        assert!(cands.iter().all(|c| c.best >= w.best));
     }
 }

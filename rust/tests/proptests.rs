@@ -147,6 +147,103 @@ fn prop_blocked_gemm_correct() {
     }
 }
 
+/// Blocked GEMM on deliberately ragged edges: shapes constructed so that
+/// `m % mr != 0` and `n % nr != 0` (the partial register tiles) and
+/// `k < bk` (a single short k-panel) all occur together, across sampled
+/// `BlockedParams`.  These are exactly the strips the packed micro-kernel
+/// zero-pads; a bug there shows up only off the aligned fast path.
+#[test]
+fn prop_blocked_gemm_ragged_edges() {
+    let mut rng = XorShift::new(1111);
+    for case in 0..30 {
+        let mr = rng.range(2, 8) as usize;
+        let nr = rng.range(2, 16) as usize;
+        // q whole strips plus a ragged remainder in [1, mr).
+        let m = rng.range(0, 3) as usize * mr + rng.range(1, mr as u64 - 1).max(1) as usize;
+        let n = rng.range(0, 3) as usize * nr + rng.range(1, nr as u64 - 1).max(1) as usize;
+        // k strictly below the panel depth: one short panel.
+        let bk = rng.range(8, 64) as usize;
+        let k = rng.range(1, bk as u64 - 1) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 64) as usize,
+            bn: rng.range(1, 64) as usize,
+            bk,
+            mr,
+            nr,
+        };
+        assert!(m % mr != 0, "case {case}: m={m} mr={mr}");
+        assert!(n % nr != 0, "case {case}: n={n} nr={nr}");
+        assert!(k < bk, "case {case}: k={k} bk={bk}");
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let expected = gemm_naive(&a, &b, m, n, k);
+        let got = gemm_blocked(&a, &b, m, n, k, &params);
+        assert!(
+            max_abs_diff(&expected, &got) < 1e-3,
+            "case {case}: {m}x{n}x{k} {params:?}"
+        );
+    }
+}
+
+/// Degenerate dimensions: every combination of `m == 1`, `n == 1`,
+/// `k == 1` (vector-vector, outer-product, and scalar-ish GEMMs) must
+/// still agree with the oracle under sampled blocking parameters.
+#[test]
+fn prop_blocked_gemm_degenerate_dims() {
+    let mut rng = XorShift::new(2222);
+    for case in 0..24 {
+        // Cycle through the degenerate corner assignments.
+        let m = if case % 2 == 0 { 1 } else { rng.range(2, 48) as usize };
+        let n = if (case / 2) % 2 == 0 { 1 } else { rng.range(2, 48) as usize };
+        let k = if (case / 4) % 2 == 0 { 1 } else { rng.range(2, 48) as usize };
+        let params = BlockedParams {
+            bm: rng.range(1, 32) as usize,
+            bn: rng.range(1, 32) as usize,
+            bk: rng.range(1, 32) as usize,
+            mr: rng.range(1, 8) as usize,
+            nr: rng.range(1, 16) as usize,
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let expected = gemm_naive(&a, &b, m, n, k);
+        let got = gemm_blocked(&a, &b, m, n, k, &params);
+        assert!(
+            max_abs_diff(&expected, &got) < 1e-3,
+            "case {case}: {m}x{n}x{k} {params:?}"
+        );
+    }
+}
+
+/// Micro-tile raggedness specifically: fix awkward micro-tiles against
+/// block sizes that do not divide them, sweeping the monomorphized
+/// (4x8, 8x8, 8x16, 4x16) and generic kernel paths.
+#[test]
+fn prop_blocked_gemm_all_kernel_paths() {
+    let mut rng = XorShift::new(3333);
+    for &(mr, nr) in &[(4usize, 8usize), (8, 8), (8, 16), (4, 16), (3, 5), (1, 1)] {
+        for _ in 0..4 {
+            let m = rng.range(1, 70) as usize;
+            let n = rng.range(1, 70) as usize;
+            let k = rng.range(1, 70) as usize;
+            let params = BlockedParams {
+                bm: rng.range(1, 48) as usize,
+                bn: rng.range(1, 48) as usize,
+                bk: rng.range(1, 48) as usize,
+                mr,
+                nr,
+            };
+            let a = rng.f32_vec(m * k);
+            let b = rng.f32_vec(k * n);
+            let expected = gemm_naive(&a, &b, m, n, k);
+            let got = gemm_blocked(&a, &b, m, n, k, &params);
+            assert!(
+                max_abs_diff(&expected, &got) < 1e-3,
+                "{m}x{n}x{k} {params:?}"
+            );
+        }
+    }
+}
+
 /// conv register model: monotone in every parameter.
 #[test]
 fn prop_conv_regs_monotone() {

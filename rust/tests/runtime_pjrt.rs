@@ -2,14 +2,19 @@
 //! the artifacts built by `make artifacts`, with numerics checked against
 //! the pure-Rust oracle.
 //!
+//! Feature-gated: the `xla` crate is unavailable offline, so this file
+//! only compiles under `--features pjrt`.  The same flow runs against the
+//! native backend unconditionally in `runtime_native.rs`.
+//!
 //! These tests require `artifacts/manifest.json`; they are skipped (with a
 //! loud message) when it is absent so `cargo test` works pre-`make`.
+#![cfg(feature = "pjrt")]
 
 use std::path::{Path, PathBuf};
 
 use portable_kernels::blas::{gemm_naive, max_abs_diff};
 use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
-use portable_kernels::runtime::{ArtifactStore, Engine};
+use portable_kernels::runtime::{ArtifactStore, Backend, Engine};
 use portable_kernels::util::rng::XorShift;
 
 fn artifacts_dir() -> Option<PathBuf> {
