@@ -4,7 +4,7 @@
 # manifest.json (requires JAX; the Rust NativeEngine also runs synthetic
 # manifests without it).
 
-.PHONY: artifacts test rust-test python-test
+.PHONY: artifacts test rust-test python-test tune bench-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts --groups all
@@ -16,3 +16,19 @@ python-test:
 	python3 -m pytest python/tests -q
 
 test: rust-test python-test
+
+# Measured per-host tuner sweep, quick grid — exactly what CI's
+# tune-smoke job runs.  Writes reports/tuning_host.json (the selection
+# DB NativeEngine consults at plan time) and reports/BENCH_ci.json
+# (tuned-vs-default GFLOP/s per problem).  Drop --quick for the full
+# grid (and the modeled device-zoo demo).
+tune:
+	cargo run --release --example tune_device -- --quick --out reports
+
+# Offline bench smoke: modeled paper figures plus the measured host
+# BlockedParams x threads sweeps (reports/*_host_sweep.csv).  No JAX
+# artifacts needed; the artifact-backed sections skip gracefully.
+bench-smoke:
+	cargo bench --bench rust_blas
+	cargo bench --bench gemm_roofline
+	cargo bench --bench conv_sweep

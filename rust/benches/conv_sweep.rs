@@ -5,9 +5,12 @@
 
 use std::path::Path;
 
+use portable_kernels::blas::{conv2d_im2col, Conv2dShape};
 use portable_kernels::harness::{fig_conv, fig_registers, Report};
 use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
-use portable_kernels::util::bench::bench;
+use portable_kernels::tuner::blocked_grid;
+use portable_kernels::util::bench::{bench, black_box};
+use portable_kernels::util::rng::XorShift;
 
 fn modeled() {
     let reports = Path::new("reports");
@@ -65,7 +68,40 @@ fn measured() {
         .expect("write csv");
 }
 
+/// Measured host anchor, no artifacts needed: the im2col conv kernel on
+/// a conv3_1-ish layer across the tuner's `BlockedParams × threads`
+/// grid — the host counterpart of Fig. 3's "tile and vector choice
+/// matter" sweep.
+fn host_blocked() {
+    let s = Conv2dShape::same(2, 32, 32, 16, 32, 3, 1);
+    let flops = 2 * (s.batch * s.out_h * s.out_w * s.out_c
+        * s.window * s.window * s.in_c) as u64;
+    let mut rng = XorShift::new(11);
+    let x = rng.f32_vec(s.input_elems());
+    let f = rng.f32_vec(s.filter_elems());
+
+    let mut table = Report::new(
+        "host im2col conv 2x32x32x16->32 across the tuner grid (best of 3)",
+        &["config", "ms", "effective GF/s"],
+    );
+    for params in blocked_grid(true, &[1, 2, 0]) {
+        let stats = bench(&params.name(), 1, 3, || {
+            black_box(conv2d_im2col(&x, &f, &s, &params));
+        });
+        table.row(vec![
+            params.name(),
+            format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+            format!("{:.2}", stats.gflops(flops)),
+        ]);
+    }
+    println!("\n{}", table.render());
+    table
+        .save_csv(Path::new("reports/conv_host_sweep.csv"))
+        .expect("write csv");
+}
+
 fn main() {
     modeled();
+    host_blocked();
     measured();
 }

@@ -12,11 +12,14 @@
 
 use std::path::Path;
 
+use portable_kernels::blas::gemm_blocked;
 use portable_kernels::config::GemmConfig;
 use portable_kernels::device::device_by_name;
 use portable_kernels::harness::{fig_gemm, Report};
 use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
-use portable_kernels::util::bench::bench;
+use portable_kernels::tuner::blocked_grid;
+use portable_kernels::util::bench::{bench, black_box};
+use portable_kernels::util::rng::XorShift;
 
 fn modeled() {
     let reports_dir = Path::new("reports");
@@ -86,7 +89,39 @@ fn measured() {
         .expect("write csv");
 }
 
+/// Measured host anchor for the paper's sweep story, no artifacts
+/// needed: the blocked GEMM kernel across the tuner's
+/// `BlockedParams × threads` grid — the same grid `tune_device --quick`
+/// sweeps, so bench output and CI tuning DB are directly comparable.
+fn host_blocked() {
+    let n = 256usize;
+    let flops = 2 * (n as u64).pow(3);
+    let mut rng = XorShift::new(7);
+    let a = rng.f32_vec(n * n);
+    let b = rng.f32_vec(n * n);
+
+    let mut table = Report::new(
+        &format!("host blocked GEMM {n}^3 across the tuner grid (best of 3)"),
+        &["config", "ms", "GF/s"],
+    );
+    for params in blocked_grid(true, &[1, 2, 0]) {
+        let stats = bench(&params.name(), 1, 3, || {
+            black_box(gemm_blocked(&a, &b, n, n, n, &params));
+        });
+        table.row(vec![
+            params.name(),
+            format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+            format!("{:.2}", stats.gflops(flops)),
+        ]);
+    }
+    println!("\n{}", table.render());
+    table
+        .save_csv(Path::new("reports/gemm_host_sweep.csv"))
+        .expect("write csv");
+}
+
 fn main() {
     modeled();
+    host_blocked();
     measured();
 }

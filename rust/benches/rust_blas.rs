@@ -20,16 +20,19 @@ fn main() {
         });
         println!("{}", s.line(Some(flops)));
 
+        // Serial configs plus the same shapes threaded: the `threads`
+        // knob is one more parameter of the sweep, not a separate mode.
         for params in [
-            BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8 },
-            BlockedParams::default(),
-            BlockedParams { bm: 128, bn: 128, bk: 64, mr: 8, nr: 16 },
+            BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8, threads: 1 },
+            BlockedParams { threads: 1, ..Default::default() },
+            BlockedParams {
+                bm: 128, bn: 128, bk: 64, mr: 8, nr: 16, threads: 1,
+            },
+            BlockedParams { threads: 2, ..Default::default() },
+            BlockedParams::default(), // threads: 0 = all cores
         ] {
             let s = bench(
-                &format!(
-                    "blocked {n}^3 bm{} bn{} bk{} {}x{}",
-                    params.bm, params.bn, params.bk, params.mr, params.nr
-                ),
+                &format!("blocked {n}^3 {}", params.name()),
                 1,
                 5,
                 || {

@@ -4,9 +4,15 @@
 //! micro-tile, k-panel), instantiated for a cache hierarchy instead of
 //! local memory: `bm x bn` macro-tiles sized for L2, `bk` panels for L1,
 //! and a `4 x 4`-ish register micro-kernel the compiler can vectorize.
+//! The `threads` knob adds the work-group dimension of the device kernel:
+//! `bm`-row macro-tile bands are distributed over a scoped thread pool
+//! ([`crate::util::pool`]), each worker owning a disjoint band of C rows,
+//! so parallel results are bit-identical to the serial path.
+
+use crate::util::pool;
 
 /// Blocking parameters (the CPU analogue of `GemmConfig`).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockedParams {
     pub bm: usize,
     pub bn: usize,
@@ -15,11 +21,28 @@ pub struct BlockedParams {
     pub mr: usize,
     /// Register micro-tile columns.
     pub nr: usize,
+    /// Worker threads over `bm`-row macro-tile bands: `0` = one per
+    /// available core, `1` = the serial path.  Any value produces
+    /// bit-identical results (each worker owns disjoint output rows and
+    /// runs the exact serial per-band code), so `threads` is a pure
+    /// throughput knob the tuner sweeps like any other parameter.
+    pub threads: usize,
 }
 
 impl Default for BlockedParams {
     fn default() -> Self {
-        Self { bm: 64, bn: 64, bk: 64, mr: 4, nr: 8 }
+        Self { bm: 64, bn: 64, bk: 64, mr: 4, nr: 8, threads: 0 }
+    }
+}
+
+impl BlockedParams {
+    /// Compact config name for reports and the tuning DB
+    /// (`bm64bn64bk64_4x8_t0` style; `t0` = auto threads).
+    pub fn name(&self) -> String {
+        format!(
+            "bm{}bn{}bk{}_{}x{}_t{}",
+            self.bm, self.bn, self.bk, self.mr, self.nr, self.threads
+        )
     }
 }
 
@@ -30,6 +53,11 @@ impl Default for BlockedParams {
 /// stride `k` in the innermost loop and ran *slower* than the naive
 /// kernel; packing is the paper's "local memory staging" played on a
 /// cache hierarchy).
+///
+/// With `params.threads != 1` the `bm`-row macro-tile bands are claimed
+/// dynamically by a fixed worker set; each band runs [`gemm_band`] —
+/// the same code the serial path runs — against its own disjoint slice
+/// of C, so the output is bit-identical for every thread count.
 pub fn gemm_blocked(
     a: &[f32],
     b: &[f32],
@@ -40,61 +68,127 @@ pub fn gemm_blocked(
 ) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert!(
+        params.bm > 0
+            && params.bn > 0
+            && params.bk > 0
+            && params.mr > 0
+            && params.nr > 0,
+        "BlockedParams dims must be non-zero: {params:?}"
+    );
     let mut c = vec![0.0f32; m * n];
-    let &BlockedParams { bm, bn, bk, mr, nr } = params;
-    // Packed A panel: strips of `mr` rows, column-major within the strip
-    // so the micro-kernel reads it sequentially.  Ragged strips are
-    // zero-padded to `mr` rows, so size for the rounded-up strip count.
-    let mut apack =
-        vec![0.0f32; bm.max(mr).div_ceil(mr) * mr * bk.max(1)];
+    let bm = params.bm;
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(bm);
+    if workers <= 1 || bands <= 1 || n == 0 {
+        // Serial path: one packing buffer reused across bands (every band
+        // fully rewrites the prefix it reads, so reuse is invisible).
+        let mut apack = alloc_apack(params);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + bm).min(m);
+            gemm_band(
+                a,
+                b,
+                &mut c[i0 * n..i1 * n],
+                n,
+                k,
+                i0,
+                i1,
+                params,
+                &mut apack,
+            );
+            i0 = i1;
+        }
+    } else {
+        // Parallel path: split C into disjoint bm-row bands and let the
+        // pool's workers claim them; each worker packs into its own
+        // buffer and runs the identical per-band code.
+        let row_bands: Vec<(usize, &mut [f32])> =
+            c.chunks_mut(bm * n).enumerate().collect();
+        pool::run_parallel(workers, row_bands, |_, (band, cband)| {
+            let i0 = band * bm;
+            let i1 = (i0 + bm).min(m);
+            let mut apack = alloc_apack(params);
+            gemm_band(a, b, cband, n, k, i0, i1, params, &mut apack);
+        });
+    }
+    c
+}
 
-    for i0 in (0..m).step_by(bm) {
-        let i1 = (i0 + bm).min(m);
-        for p0 in (0..k).step_by(bk) {
-            let p1 = (p0 + bk).min(k);
-            pack_a(a, &mut apack, k, i0, i1, p0, p1, mr);
-            for j0 in (0..n).step_by(bn) {
-                let j1 = (j0 + bn).min(n);
-                // Macro-tile: micro-kernels over mr x nr register tiles.
-                let mut i = i0;
-                while i < i1 {
-                    let ie = (i + mr).min(i1);
-                    let strip =
-                        ((i - i0) / mr) * (mr * (p1 - p0));
-                    let mut j = j0;
-                    while j < j1 {
-                        let je = (j + nr).min(j1);
-                        // Full tiles go through a monomorphized kernel
-                        // whose accumulator stays in registers
-                        // (EXPERIMENTS.md §Perf blas-2); ragged edges
-                        // take the generic path.
-                        let full = ie - i == mr && je - j == nr;
-                        match (full, mr, nr) {
-                            (true, 4, 8) => micro_kernel_fixed::<4, 8>(
-                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
-                            ),
-                            (true, 8, 8) => micro_kernel_fixed::<8, 8>(
-                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
-                            ),
-                            (true, 8, 16) => micro_kernel_fixed::<8, 16>(
-                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
-                            ),
-                            (true, 4, 16) => micro_kernel_fixed::<4, 16>(
-                                &apack[strip..], b, &mut c, n, i, j, p0, p1,
-                            ),
-                            _ => micro_kernel(
-                                &apack[strip..], b, &mut c, n, i, ie, j,
-                                je, p0, p1, mr,
-                            ),
-                        }
-                        j = je;
+/// Packing buffer for one `bm x bk` A macro-panel: strips of `mr` rows,
+/// ragged strips zero-padded, so size for the rounded-up strip count.
+fn alloc_apack(params: &BlockedParams) -> Vec<f32> {
+    vec![
+        0.0f32;
+        params.bm.max(params.mr).div_ceil(params.mr)
+            * params.mr
+            * params.bk.max(1)
+    ]
+}
+
+/// One `bm`-row macro-tile band: `cband = A[i0..i1, :] @ B`, with
+/// `cband` the band's rows of C (`(i1 - i0) x n`, row-major).  This is
+/// the unit of parallelism — the serial path calls it per band in order,
+/// the pool calls it per band concurrently; the code is shared so the
+/// two are bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn gemm_band(
+    a: &[f32],
+    b: &[f32],
+    cband: &mut [f32],
+    n: usize,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    params: &BlockedParams,
+    apack: &mut [f32],
+) {
+    let &BlockedParams { bn, bk, mr, nr, .. } = params;
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        pack_a(a, apack, k, i0, i1, p0, p1, mr);
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            // Macro-tile: micro-kernels over mr x nr register tiles.
+            let mut i = i0;
+            while i < i1 {
+                let ie = (i + mr).min(i1);
+                let strip = ((i - i0) / mr) * (mr * (p1 - p0));
+                // Row index within the band's slice of C.
+                let il = i - i0;
+                let mut j = j0;
+                while j < j1 {
+                    let je = (j + nr).min(j1);
+                    // Full tiles go through a monomorphized kernel
+                    // whose accumulator stays in registers
+                    // (EXPERIMENTS.md §Perf blas-2); ragged edges
+                    // take the generic path.
+                    let full = ie - i == mr && je - j == nr;
+                    match (full, mr, nr) {
+                        (true, 4, 8) => micro_kernel_fixed::<4, 8>(
+                            &apack[strip..], b, cband, n, il, j, p0, p1,
+                        ),
+                        (true, 8, 8) => micro_kernel_fixed::<8, 8>(
+                            &apack[strip..], b, cband, n, il, j, p0, p1,
+                        ),
+                        (true, 8, 16) => micro_kernel_fixed::<8, 16>(
+                            &apack[strip..], b, cband, n, il, j, p0, p1,
+                        ),
+                        (true, 4, 16) => micro_kernel_fixed::<4, 16>(
+                            &apack[strip..], b, cband, n, il, j, p0, p1,
+                        ),
+                        _ => micro_kernel(
+                            &apack[strip..], b, cband, n, il, il + (ie - i),
+                            j, je, p0, p1, mr,
+                        ),
                     }
-                    i = ie;
+                    j = je;
                 }
+                i = ie;
             }
         }
     }
-    c
 }
 
 /// Pack `A[i0..i1, p0..p1]` into `mr`-row strips, k-major within each
@@ -131,6 +225,8 @@ fn pack_a(
 
 /// Monomorphized micro-kernel for full `MR x NR` tiles: fixed trip
 /// counts let LLVM keep the whole accumulator in vector registers.
+/// `c` is the current band's slice of the output; `i` is the row within
+/// that band.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_kernel_fixed<const MR: usize, const NR: usize>(
@@ -165,7 +261,9 @@ fn micro_kernel_fixed<const MR: usize, const NR: usize>(
 /// The register micro-kernel: accumulate `C[i..ie, j..je] += Apack_strip
 /// @ B[p0..p1, j..je]` with accumulators held in a fixed-size stack tile
 /// (the "registers" of the device kernel).  `apack` points at the strip:
-/// `apack[p * mr + r]` is `A[i + r, p0 + p]` — sequential in the p-loop.
+/// `apack[p * mr + r]` is the packed A value for band-local row `i + r`
+/// at depth `p0 + p` — sequential in the p-loop.  `c` is the band slice;
+/// `i..ie` are rows within it.
 #[inline]
 #[allow(clippy::too_many_arguments)]
 fn micro_kernel(
@@ -220,12 +318,55 @@ mod tests {
         let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
         let expected = gemm_naive(&a, &b, m, n, k);
         for params in [
-            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2 },
-            BlockedParams { bm: 16, bn: 32, bk: 5, mr: 4, nr: 8 },
-            BlockedParams { bm: 64, bn: 64, bk: 64, mr: 8, nr: 16 },
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 },
+            BlockedParams { bm: 16, bn: 32, bk: 5, mr: 4, nr: 8, threads: 2 },
+            BlockedParams {
+                bm: 64, bn: 64, bk: 64, mr: 8, nr: 16, threads: 0,
+            },
         ] {
             let got = gemm_blocked(&a, &b, m, n, k, &params);
             assert!(max_abs_diff(&expected, &got) < 1e-4, "{params:?}");
         }
+    }
+
+    #[test]
+    fn parallel_bands_bit_identical_to_serial() {
+        // More bands than the default bm would give: force bm small so
+        // every thread count actually splits the row range.
+        let (m, n, k) = (53, 31, 19);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 11) as f32 - 5.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let base =
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 1 };
+        let serial = gemm_blocked(&a, &b, m, n, k, &base);
+        for threads in [0usize, 2, 3, 8, 64] {
+            let par = gemm_blocked(
+                &a,
+                &b,
+                m,
+                n,
+                k,
+                &BlockedParams { threads, ..base },
+            );
+            assert!(
+                serial == par,
+                "threads={threads} diverged from serial (max diff {})",
+                max_abs_diff(&serial, &par)
+            );
+        }
+    }
+
+    #[test]
+    fn config_name_roundtrips_the_knobs() {
+        let p = BlockedParams { bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3 };
+        assert_eq!(p.name(), "bm32bn48bk8_2x4_t3");
+        assert_eq!(BlockedParams::default().name(), "bm64bn64bk64_4x8_t0");
+    }
+
+    #[test]
+    #[should_panic(expected = "non-zero")]
+    fn zero_block_dim_is_a_loud_panic() {
+        let params = BlockedParams { bm: 0, ..Default::default() };
+        gemm_blocked(&[1.0], &[1.0], 1, 1, 1, &params);
     }
 }

@@ -6,8 +6,14 @@
 //! SAME padding follows the TF/JAX convention (`out = ceil(in / stride)`,
 //! deficit split low-side-first), so the native engine's numbers line up
 //! with the AOT artifacts bit-for-bit in structure.
+//!
+//! Parallelism: `conv2d_im2col` honors `BlockedParams::threads` twice —
+//! the patch matrix is materialized in batch×output-row chunks claimed by
+//! the pool workers (disjoint writes, so bit-identical to serial), and
+//! the lowered GEMM parallelizes over its own macro-tile bands.
 
 use super::blocked::{gemm_blocked, BlockedParams};
+use crate::util::pool;
 
 /// Fully resolved shape of one conv2d execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -135,49 +141,90 @@ pub fn conv2d_direct(x: &[f32], f: &[f32], s: &Conv2dShape) -> Vec<f32> {
     out
 }
 
+/// Fill `out` with im2col patch rows `[row0, row1)` of the full patch
+/// matrix (`out.len() == (row1 - row0) * window²·in_c`).  Row index
+/// decomposes as `row = (b * out_h + oh) * out_w + ow`, so any contiguous
+/// range is a batch×output-pixel chunk — the unit the parallel path
+/// hands to each pool worker.  `out` must be pre-zeroed (padding taps are
+/// skipped, not written).
+fn im2col_rows(
+    x: &[f32],
+    s: &Conv2dShape,
+    row0: usize,
+    row1: usize,
+    out: &mut [f32],
+) {
+    let kdim = s.window * s.window * s.in_c;
+    debug_assert_eq!(out.len(), (row1 - row0) * kdim);
+    for row in row0..row1 {
+        let ow = row % s.out_w;
+        let oh = (row / s.out_w) % s.out_h;
+        let b = row / (s.out_w * s.out_h);
+        let base = (row - row0) * kdim;
+        for r in 0..s.window {
+            let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
+            for sw in 0..s.window {
+                let iw =
+                    (ow * s.stride + sw) as isize - s.pad_left as isize;
+                if ih < 0
+                    || ih as usize >= s.in_h
+                    || iw < 0
+                    || iw as usize >= s.in_w
+                {
+                    continue; // zero padding (buffer pre-zeroed)
+                }
+                let x0 = ((b * s.in_h + ih as usize) * s.in_w
+                    + iw as usize)
+                    * s.in_c;
+                let p0 = base + (r * s.window + sw) * s.in_c;
+                out[p0..p0 + s.in_c].copy_from_slice(&x[x0..x0 + s.in_c]);
+            }
+        }
+    }
+}
+
 /// Materialize the im2col patch matrix: `(batch*out_h*out_w) x
 /// (window*window*in_c)`, rows in output-pixel order, columns in (r, s, c)
 /// order — exactly the RSC-major flattening of the filters, so the
 /// lowered GEMM is `patches @ filters`.
 pub fn im2col(x: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    im2col_threaded(x, s, 1)
+}
+
+/// [`im2col`] with the patch rows built in parallel chunks (`threads`
+/// follows the [`BlockedParams::threads`] convention).  The chunks write
+/// disjoint row ranges of the pre-zeroed buffer, so the result is
+/// bit-identical for every thread count.
+pub fn im2col_threaded(
+    x: &[f32],
+    s: &Conv2dShape,
+    threads: usize,
+) -> Vec<f32> {
     assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
     let kdim = s.window * s.window * s.in_c;
-    let mut patches =
-        vec![0.0f32; s.batch * s.out_h * s.out_w * kdim];
-    let mut row = 0usize;
-    for b in 0..s.batch {
-        for oh in 0..s.out_h {
-            for ow in 0..s.out_w {
-                let base = row * kdim;
-                for r in 0..s.window {
-                    let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
-                    for sw in 0..s.window {
-                        let iw = (ow * s.stride + sw) as isize
-                            - s.pad_left as isize;
-                        if ih < 0
-                            || ih as usize >= s.in_h
-                            || iw < 0
-                            || iw as usize >= s.in_w
-                        {
-                            continue; // zero padding (buffer pre-zeroed)
-                        }
-                        let x0 = ((b * s.in_h + ih as usize) * s.in_w
-                            + iw as usize)
-                            * s.in_c;
-                        let p0 = base + (r * s.window + sw) * s.in_c;
-                        patches[p0..p0 + s.in_c]
-                            .copy_from_slice(&x[x0..x0 + s.in_c]);
-                    }
-                }
-                row += 1;
-            }
-        }
+    let rows = s.batch * s.out_h * s.out_w;
+    let mut patches = vec![0.0f32; rows * kdim];
+    let workers = pool::resolve_threads(threads);
+    if workers <= 1 || rows <= 1 || kdim == 0 {
+        im2col_rows(x, s, 0, rows, &mut patches);
+        return patches;
     }
+    let chunk_rows = rows.div_ceil(workers);
+    let chunks: Vec<(usize, &mut [f32])> = patches
+        .chunks_mut(chunk_rows * kdim)
+        .enumerate()
+        .collect();
+    pool::run_parallel(workers, chunks, |_, (c, chunk)| {
+        let row0 = c * chunk_rows;
+        let row1 = (row0 + chunk_rows).min(rows);
+        im2col_rows(x, s, row0, row1, chunk);
+    });
     patches
 }
 
 /// Convolution by im2col + blocked GEMM — the native engine's conv path
 /// (the paper's §4.1 "lower onto GEMM" algorithm played on the host).
+/// Both stages honor `params.threads`.
 pub fn conv2d_im2col(
     x: &[f32],
     f: &[f32],
@@ -185,7 +232,7 @@ pub fn conv2d_im2col(
     params: &BlockedParams,
 ) -> Vec<f32> {
     assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
-    let patches = im2col(x, s);
+    let patches = im2col_threaded(x, s, params.threads);
     let m = s.batch * s.out_h * s.out_w;
     let k = s.window * s.window * s.in_c;
     // Filters are RSCK row-major: already the (K x N) operand.
@@ -200,6 +247,34 @@ mod tests {
 
     fn rand(n: usize, seed: u64) -> Vec<f32> {
         XorShift::new(seed).f32_vec(n)
+    }
+
+    /// The parameter sets conv tests run under: the default, a small
+    /// serial config, and threaded configs — so tuned (non-default) conv
+    /// configurations are exercised by the suite, not just
+    /// `BlockedParams::default()`.
+    fn param_matrix() -> Vec<BlockedParams> {
+        vec![
+            BlockedParams::default(),
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 },
+            BlockedParams { bm: 16, bn: 32, bk: 16, mr: 4, nr: 8, threads: 2 },
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 4, threads: 8 },
+        ]
+    }
+
+    /// Assert `conv2d_im2col` matches the direct oracle for a shape,
+    /// under every parameter set in the matrix.
+    fn check_against_direct(s: &Conv2dShape, seed: u64) {
+        let x = rand(s.input_elems(), seed);
+        let f = rand(s.filter_elems(), seed + 1);
+        let direct = conv2d_direct(&x, &f, s);
+        for params in param_matrix() {
+            let lowered = conv2d_im2col(&x, &f, s, &params);
+            assert!(
+                max_abs_diff(&direct, &lowered) < 1e-4,
+                "{s:?} under {params:?}"
+            );
+        }
     }
 
     #[test]
@@ -232,26 +307,35 @@ mod tests {
             (10, 10, 2, 3, 5, 2),
         ] {
             let s = Conv2dShape::same(2, h, w, c, k, win, stride);
-            let x = rand(s.input_elems(), 1);
-            let f = rand(s.filter_elems(), 2);
-            let direct = conv2d_direct(&x, &f, &s);
-            let lowered =
-                conv2d_im2col(&x, &f, &s, &BlockedParams::default());
-            assert!(
-                max_abs_diff(&direct, &lowered) < 1e-4,
-                "{h}x{w}x{c}->{k} {win}x{win}/s{stride}"
-            );
+            check_against_direct(&s, 1);
         }
     }
 
     #[test]
     fn valid_conv_matches_direct() {
         let s = Conv2dShape::valid(1, 12, 12, 3, 8, 5, 2);
-        let x = rand(s.input_elems(), 3);
-        let f = rand(s.filter_elems(), 4);
-        let direct = conv2d_direct(&x, &f, &s);
-        let lowered = conv2d_im2col(&x, &f, &s, &BlockedParams::default());
-        assert!(max_abs_diff(&direct, &lowered) < 1e-4);
+        check_against_direct(&s, 3);
+    }
+
+    #[test]
+    fn threaded_im2col_bit_identical_to_serial() {
+        for &(b, h, w, c, win, stride) in &[
+            (2usize, 9usize, 7usize, 3usize, 3usize, 2usize),
+            (1, 5, 5, 2, 3, 1),
+            (3, 4, 4, 1, 1, 1), // pointwise: kdim == in_c
+            (1, 1, 1, 4, 1, 1), // single output pixel, threads > rows
+        ] {
+            let s = Conv2dShape::same(b, h, w, c, 4, win, stride);
+            let x = rand(s.input_elems(), 11);
+            let serial = im2col(&x, &s);
+            for threads in [0usize, 2, 3, 8] {
+                let par = im2col_threaded(&x, &s, threads);
+                assert!(
+                    serial == par,
+                    "im2col threads={threads} diverged on {s:?}"
+                );
+            }
+        }
     }
 
     #[test]
@@ -260,9 +344,11 @@ mod tests {
         let s = Conv2dShape::same(2, 5, 5, 16, 8, 1, 1);
         let x = rand(s.input_elems(), 5);
         let f = rand(s.filter_elems(), 6);
-        let conv = conv2d_im2col(&x, &f, &s, &BlockedParams::default());
         let gemm = crate::blas::gemm_naive(&x, &f, 2 * 5 * 5, 8, 16);
-        assert!(max_abs_diff(&conv, &gemm) < 1e-4);
+        for params in param_matrix() {
+            let conv = conv2d_im2col(&x, &f, &s, &params);
+            assert!(max_abs_diff(&conv, &gemm) < 1e-4, "{params:?}");
+        }
     }
 
     #[test]

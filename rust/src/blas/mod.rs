@@ -12,7 +12,9 @@ mod conv;
 mod naive;
 
 pub use blocked::{gemm_blocked, BlockedParams};
-pub use conv::{conv2d_direct, conv2d_im2col, im2col, Conv2dShape};
+pub use conv::{
+    conv2d_direct, conv2d_im2col, im2col, im2col_threaded, Conv2dShape,
+};
 pub use naive::gemm_naive;
 
 /// Max |a - b| over two equal-length slices (test helper).
@@ -41,18 +43,30 @@ mod tests {
             .collect()
     }
 
+    /// Parameter sets the module-level checks run under — the default
+    /// plus tuned-looking serial and threaded configs, so correctness is
+    /// never asserted for the default configuration alone.
+    fn param_matrix() -> Vec<BlockedParams> {
+        vec![
+            BlockedParams::default(),
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 },
+            BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8, threads: 3 },
+        ]
+    }
+
     #[test]
     fn blocked_matches_naive() {
         for &(m, n, k) in &[(1, 1, 1), (17, 13, 9), (64, 64, 64), (100, 50, 70)] {
             let a = rand_vec(m * k, 1);
             let b = rand_vec(k * n, 2);
             let naive = gemm_naive(&a, &b, m, n, k);
-            let blocked =
-                gemm_blocked(&a, &b, m, n, k, &BlockedParams::default());
-            assert!(
-                max_abs_diff(&naive, &blocked) < 1e-4,
-                "mismatch at {m}x{n}x{k}"
-            );
+            for params in param_matrix() {
+                let blocked = gemm_blocked(&a, &b, m, n, k, &params);
+                assert!(
+                    max_abs_diff(&naive, &blocked) < 1e-4,
+                    "mismatch at {m}x{n}x{k} under {params:?}"
+                );
+            }
         }
     }
 
@@ -64,7 +78,9 @@ mod tests {
             eye[i * n + i] = 1.0;
         }
         let b = rand_vec(n * n, 3);
-        let out = gemm_blocked(&eye, &b, n, n, n, &BlockedParams::default());
-        assert!(max_abs_diff(&out, &b) < 1e-6);
+        for params in param_matrix() {
+            let out = gemm_blocked(&eye, &b, n, n, n, &params);
+            assert!(max_abs_diff(&out, &b) < 1e-6, "{params:?}");
+        }
     }
 }

@@ -38,6 +38,26 @@
 //!
 //! [`runtime::DefaultEngine`] names whichever backend the build selected.
 //!
+//! ## Parallel execution and per-host tuning
+//!
+//! The host kernels are parametrized one step further than the paper's
+//! device kernels: [`blas::BlockedParams`] carries a `threads` knob
+//! (`0` = all cores, `1` = serial) and the kernels distribute macro-tile
+//! row bands (GEMM) and batch×output-row chunks (im2col) over a
+//! hand-rolled scoped thread pool ([`util::pool`]).  Every worker owns a
+//! disjoint slice of the output and runs the exact serial per-chunk
+//! code, so parallel results are **bit-identical** to serial — `threads`
+//! is just one more axis of the parameter space.
+//!
+//! The measure→persist→plan loop closes over that space:
+//! [`tuner::tune_blocked_sweep`] times the `BlockedParams × threads`
+//! grid through any [`runtime::Backend`] and persists per-problem
+//! winners into a [`tuner::SelectionDb`]; a [`runtime::NativeEngine`]
+//! built with `with_tuning` resolves each artifact's parameters from
+//! that DB at plan time.  `cargo run --release --example tune_device --
+//! --quick` runs the whole loop (CI does, on every merge, archiving the
+//! DB and a GFLOP/s summary as artifacts).
+//!
 //! ## Module map
 //!
 //! | module | role |
@@ -45,9 +65,9 @@
 //! | [`config`] | kernel parameter spaces (`GemmConfig`, `ConvConfig`) |
 //! | [`device`] | device specifications (paper Table 1) |
 //! | [`perfmodel`] | analytic performance simulator (§2.2 metrics) |
-//! | [`tuner`] | configuration search + selection DB + measured tuning |
+//! | [`tuner`] | configuration search + selection DB + measured tuning + the per-host `BlockedParams × threads` sweep |
 //! | [`runtime`] | artifact manifest + `Backend` trait (`NativeEngine` default, PJRT `Engine` behind `pjrt`) |
-//! | [`blas`] | host Rust reference kernels (GEMM + im2col conv) |
+//! | [`blas`] | host Rust reference kernels (GEMM + im2col conv), band-parallel via `BlockedParams::threads` |
 //! | [`nn`] | VGG-16 / ResNet-50 layer tables (Tables 3 & 4) |
 //! | [`coordinator`] | backend actor, batcher, network runner |
 //! | [`harness`] | per-figure/table report generators |

@@ -26,7 +26,7 @@ pub use artifact::{ArtifactMeta, ArtifactStore, IoSpec, LayerMeta};
 pub use backend::{Backend, RunOutput};
 #[cfg(feature = "pjrt")]
 pub use executor::Engine;
-pub use native::NativeEngine;
+pub use native::{NativeEngine, HOST_DEVICE};
 
 /// The backend the build defaults to: PJRT when the `pjrt` feature is
 /// enabled, the pure-Rust native engine otherwise.

@@ -10,18 +10,34 @@
 //! ([`blas::conv2d_im2col`](crate::blas::conv2d_im2col)).  The HLO files
 //! referenced by the manifest are never opened, so synthetic manifests
 //! (tests) and real AOT output both execute.
+//!
+//! Each plan resolves the [`BlockedParams`] it will execute with: when a
+//! per-host tuning DB is attached ([`NativeEngine::with_tuning`]), the
+//! measured winner for the artifact's problem class is used; otherwise
+//! the engine-wide params (default: auto-threaded over all cores).  The
+//! kernels parallelize over macro-tile bands per the params' `threads`
+//! knob, bit-identically to the serial path.
 
 use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::blas::{conv2d_im2col, gemm_blocked, BlockedParams, Conv2dShape};
 use crate::error::{Error, Result};
+use crate::tuner::{selection_key_for, SelectionDb};
 
 use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta};
 use super::backend::{check_inputs, Backend, RunOutput};
 
+/// The device string host selections are keyed under in the tuning DB.
+/// The sweep (`tuner::tune_blocked_sweep`) and the engine's plan-time
+/// lookup must agree on it, or tuned entries are never found.
+pub const HOST_DEVICE: &str = "host";
+
 /// One planned artifact: everything `run` needs, resolved once at warm
-/// time (the native analogue of the PJRT compile cache).
+/// time (the native analogue of the PJRT compile cache).  The blocking
+/// parameters are part of the plan: tuned entries resolve from the
+/// attached [`SelectionDb`], everything else falls back to the engine's
+/// configured params.
 #[derive(Debug, Clone)]
 enum Plan {
     Gemm {
@@ -32,6 +48,7 @@ enum Plan {
         beta: f32,
         /// Third input is a C operand for the β epilogue.
         with_c: bool,
+        params: BlockedParams,
     },
     Conv {
         shape: Conv2dShape,
@@ -39,10 +56,19 @@ enum Plan {
         /// vector over output channels), matching how `aot.py` lowers
         /// `network`-group artifacts.
         fuse_relu: bool,
+        params: BlockedParams,
     },
 }
 
-fn gemm_plan(meta: &ArtifactMeta) -> Result<Plan> {
+impl Plan {
+    fn params(&self) -> BlockedParams {
+        match self {
+            Plan::Gemm { params, .. } | Plan::Conv { params, .. } => *params,
+        }
+    }
+}
+
+fn gemm_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
     let dim = |v: Option<u64>, what: &str| -> Result<usize> {
         v.map(|x| x as usize).ok_or_else(|| {
             Error::Artifact(format!(
@@ -80,10 +106,11 @@ fn gemm_plan(meta: &ArtifactMeta) -> Result<Plan> {
         alpha: meta.alpha.unwrap_or(1.0) as f32,
         beta: meta.beta.unwrap_or(0.0) as f32,
         with_c,
+        params,
     })
 }
 
-fn conv_plan(meta: &ArtifactMeta) -> Result<Plan> {
+fn conv_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
     let layer: &LayerMeta = meta.layer.as_ref().ok_or_else(|| {
         Error::Artifact(format!(
             "{}: conv artifact missing layer metadata",
@@ -180,13 +207,37 @@ fn conv_plan(meta: &ArtifactMeta) -> Result<Plan> {
             )));
         }
     }
-    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu })
+    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, params })
 }
 
-fn build_plan(meta: &ArtifactMeta) -> Result<Plan> {
+/// Resolve the blocking parameters an artifact will execute with: a
+/// tuned entry from the selection DB when one exists for this problem
+/// class on this platform, the engine's configured params otherwise.
+fn resolve_params(
+    meta: &ArtifactMeta,
+    fallback: BlockedParams,
+    tuning: Option<&SelectionDb>,
+    device: &str,
+) -> BlockedParams {
+    tuning
+        .and_then(|db| {
+            selection_key_for(meta, device)
+                .and_then(|key| db.get_blocked(&key))
+        })
+        .map(|(params, _gflops)| params)
+        .unwrap_or(fallback)
+}
+
+fn build_plan(
+    meta: &ArtifactMeta,
+    fallback: BlockedParams,
+    tuning: Option<&SelectionDb>,
+    device: &str,
+) -> Result<Plan> {
+    let params = resolve_params(meta, fallback, tuning, device);
     match meta.kind.as_str() {
-        "gemm" => gemm_plan(meta),
-        "conv" => conv_plan(meta),
+        "gemm" => gemm_plan(meta, params),
+        "conv" => conv_plan(meta, params),
         other => Err(Error::Runtime(format!(
             "{}: unknown op kind {other:?} — the native backend executes \
              \"gemm\" and \"conv\" artifacts only",
@@ -204,6 +255,11 @@ pub struct NativeEngine {
     store: ArtifactStore,
     plans: HashMap<String, Plan>,
     params: BlockedParams,
+    /// Per-host tuning DB (`tuner::tune_blocked_sweep` output).  When
+    /// present, plans resolve their blocking parameters from it.
+    tuning: Option<SelectionDb>,
+    /// Platform string tuned selections are keyed under.
+    device: String,
 }
 
 impl NativeEngine {
@@ -213,13 +269,60 @@ impl NativeEngine {
             store,
             plans: HashMap::new(),
             params: BlockedParams::default(),
+            tuning: None,
+            device: HOST_DEVICE.to_string(),
         })
     }
 
     /// Create an engine with explicit host blocking parameters (the CPU
     /// analogue of picking a kernel configuration per device).
     pub fn with_params(store: ArtifactStore, params: BlockedParams) -> Self {
-        Self { store, plans: HashMap::new(), params }
+        Self {
+            store,
+            plans: HashMap::new(),
+            params,
+            tuning: None,
+            device: HOST_DEVICE.to_string(),
+        }
+    }
+
+    /// Create an engine that consults a per-host tuning DB at plan time:
+    /// artifacts whose problem class has a measured winner execute with
+    /// the tuned `BlockedParams`, the rest with the defaults.  This is
+    /// the deployment shape: run the sweep once per host, ship the DB.
+    pub fn with_tuning(store: ArtifactStore, tuning: SelectionDb) -> Self {
+        Self {
+            store,
+            plans: HashMap::new(),
+            params: BlockedParams::default(),
+            tuning: Some(tuning),
+            device: HOST_DEVICE.to_string(),
+        }
+    }
+
+    /// Replace the fallback blocking parameters.  Invalidates the plan
+    /// cache — plans embed the params they resolved.
+    pub fn set_params(&mut self, params: BlockedParams) {
+        self.params = params;
+        self.plans.clear();
+    }
+
+    /// Attach (or replace) the tuning DB.  Invalidates the plan cache.
+    pub fn set_tuning(&mut self, tuning: SelectionDb) {
+        self.tuning = Some(tuning);
+        self.plans.clear();
+    }
+
+    /// The fallback blocking parameters currently configured.
+    pub fn params(&self) -> BlockedParams {
+        self.params
+    }
+
+    /// The blocking parameters artifact `name` will execute with —
+    /// plans it if needed.  This is how tests and reports demonstrate
+    /// that a tuned selection is actually consulted.
+    pub fn planned_params(&mut self, name: &str) -> Result<BlockedParams> {
+        Ok(self.plan(name)?.params())
     }
 
     /// Plan (or fetch the cached plan for) an artifact.
@@ -228,21 +331,22 @@ impl NativeEngine {
             return Ok(plan.clone());
         }
         let meta = self.store.get(name)?;
-        let plan = build_plan(meta)?;
+        let plan =
+            build_plan(meta, self.params, self.tuning.as_ref(), &self.device)?;
         self.plans.insert(name.to_string(), plan.clone());
         Ok(plan)
     }
 
     fn execute(&self, plan: &Plan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match plan {
-            Plan::Gemm { m, n, k, alpha, beta, with_c } => {
+            Plan::Gemm { m, n, k, alpha, beta, with_c, params } => {
                 let mut out = gemm_blocked(
                     &inputs[0],
                     &inputs[1],
                     *m,
                     *n,
                     *k,
-                    &self.params,
+                    params,
                 );
                 if *with_c {
                     for (o, c) in out.iter_mut().zip(&inputs[2]) {
@@ -255,12 +359,12 @@ impl NativeEngine {
                 }
                 vec![out]
             }
-            Plan::Conv { shape, fuse_relu } => {
+            Plan::Conv { shape, fuse_relu, params } => {
                 let mut out = conv2d_im2col(
                     &inputs[0],
                     &inputs[1],
                     shape,
-                    &self.params,
+                    params,
                 );
                 if *fuse_relu {
                     let bias = &inputs[2];
@@ -513,6 +617,66 @@ mod tests {
         );
         let msg = e.warm("cfbad").unwrap_err().to_string();
         assert!(msg.contains("bias"), "got: {msg}");
+    }
+
+    #[test]
+    fn planned_entries_use_tuned_params_over_defaults() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A tuning DB holding a distinctive winner for g8's problem
+        // class (8^3 buckets to the 64^3 class).
+        let tuned =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
+        let mut db = SelectionDb::new();
+        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 9.0);
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        assert_eq!(
+            e.planned_params("g8").unwrap(),
+            tuned,
+            "plan must consult the tuning DB"
+        );
+        assert_ne!(tuned, BlockedParams::default());
+        // The tuned plan still computes the right answer.
+        let mut rng = XorShift::new(12);
+        let a = rng.f32_vec(64);
+        let b = rng.f32_vec(64);
+        let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
+        let expected = gemm_naive(&a, &b, 8, 8, 8);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+    }
+
+    #[test]
+    fn untuned_entries_fall_back_to_engine_params() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // DB tuned for a *different* problem class: g8 must fall back.
+        let mut db = SelectionDb::new();
+        db.put_blocked(
+            SelectionKey::gemm(HOST_DEVICE, 512, 512, 512),
+            BlockedParams { bm: 128, bn: 128, bk: 64, mr: 8, nr: 16, threads: 4 },
+            20.0,
+        );
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        assert_eq!(e.planned_params("g8").unwrap(), BlockedParams::default());
+    }
+
+    #[test]
+    fn set_params_invalidates_cached_plans() {
+        let (_dir, mut e) = engine_with(GEMM_8);
+        e.warm("g8").unwrap();
+        assert_eq!(e.planned_params("g8").unwrap(), BlockedParams::default());
+        let small =
+            BlockedParams { bm: 4, bn: 4, bk: 4, mr: 2, nr: 2, threads: 2 };
+        e.set_params(small);
+        assert_eq!(e.cached(), 0, "set_params must drop stale plans");
+        assert_eq!(
+            e.planned_params("g8").unwrap(),
+            small,
+            "re-planned entries must use the new params"
+        );
+        assert_eq!(e.params(), small);
     }
 
     #[test]

@@ -8,6 +8,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
+use crate::blas::BlockedParams;
 use crate::config::{ConvAlgorithm, ConvConfig, GemmConfig};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
@@ -59,6 +60,49 @@ impl SelectionKey {
 pub enum Selection {
     Gemm { config: GemmConfig, gflops: f64 },
     Conv { config: ConvConfig, gflops: f64 },
+    /// A measured host-kernel selection: the winning
+    /// [`BlockedParams`] × threads combination from a per-host sweep
+    /// (`tuner::tune_blocked_sweep`), consulted by `NativeEngine` at
+    /// plan time.
+    Blocked { params: BlockedParams, gflops: f64 },
+}
+
+fn blocked_to_json(p: &BlockedParams) -> Value {
+    let mut o = Value::object();
+    o.set("bm", p.bm)
+        .set("bn", p.bn)
+        .set("bk", p.bk)
+        .set("mr", p.mr)
+        .set("nr", p.nr)
+        .set("threads", p.threads);
+    o
+}
+
+fn blocked_from_json(v: &Value) -> Result<BlockedParams> {
+    let field = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(|x| x.as_u64())
+            .map(|x| x as usize)
+            .ok_or_else(|| Error::Json(format!("blocked config missing {k}")))
+    };
+    let p = BlockedParams {
+        bm: field("bm")?,
+        bn: field("bn")?,
+        bk: field("bk")?,
+        mr: field("mr")?,
+        nr: field("nr")?,
+        // Absent threads (a pre-threads DB) means "auto".
+        threads: v
+            .get("threads")
+            .and_then(|x| x.as_u64())
+            .unwrap_or(0) as usize,
+    };
+    if p.bm == 0 || p.bn == 0 || p.bk == 0 || p.mr == 0 || p.nr == 0 {
+        return Err(Error::Json(format!(
+            "blocked config has a zero block dimension: {p:?}"
+        )));
+    }
+    Ok(p)
 }
 
 fn conv_to_json(c: &ConvConfig) -> Value {
@@ -130,6 +174,31 @@ impl SelectionDb {
         }
     }
 
+    /// Store a measured host selection ([`BlockedParams`] × threads) for
+    /// a problem class.  The key is the same `gemm`/`conv` key the
+    /// modeled selections use, with the platform as the device.
+    pub fn put_blocked(
+        &mut self,
+        key: SelectionKey,
+        params: BlockedParams,
+        gflops: f64,
+    ) {
+        self.entries
+            .insert(key.as_string(), Selection::Blocked { params, gflops });
+    }
+
+    pub fn get_blocked(
+        &self,
+        key: &SelectionKey,
+    ) -> Option<(BlockedParams, f64)> {
+        match self.entries.get(&key.as_string()) {
+            Some(Selection::Blocked { params, gflops }) => {
+                Some((*params, *gflops))
+            }
+            _ => None,
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }
@@ -156,6 +225,12 @@ impl SelectionDb {
                 Selection::Conv { config, gflops } => {
                     o.set("kind", "conv")
                         .set("config", conv_to_json(config))
+                        .set("gflops", *gflops);
+                }
+                Selection::Blocked { params, gflops } => {
+                    o.set("kind", "blocked")
+                        .set("config", blocked_to_json(params))
+                        .set("name", params.name())
                         .set("gflops", *gflops);
                 }
             }
@@ -185,6 +260,12 @@ impl SelectionDb {
                 },
                 Some("conv") => Selection::Conv {
                     config: conv_from_json(e.get("config").ok_or_else(
+                        || Error::Json(format!("{k}: missing config")),
+                    )?)?,
+                    gflops,
+                },
+                Some("blocked") => Selection::Blocked {
+                    params: blocked_from_json(e.get("config").ok_or_else(
                         || Error::Json(format!("{k}: missing config")),
                     )?)?,
                     gflops,
@@ -267,10 +348,79 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_blocked_via_disk() {
+        let mut db = SelectionDb::new();
+        let gp = BlockedParams {
+            bm: 32, bn: 64, bk: 16, mr: 4, nr: 8, threads: 2,
+        };
+        let cp = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 0,
+        };
+        db.put_blocked(SelectionKey::gemm("host", 96, 96, 96), gp, 7.5);
+        db.put_blocked(
+            SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2),
+            cp,
+            3.25,
+        );
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("host.json");
+        db.save(&path).unwrap();
+        let loaded = SelectionDb::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        let (p, g) = loaded
+            .get_blocked(&SelectionKey::gemm("host", 96, 96, 96))
+            .unwrap();
+        assert_eq!(p, gp);
+        assert_eq!(g, 7.5);
+        let (p, _) = loaded
+            .get_blocked(&SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2))
+            .unwrap();
+        assert_eq!(p, cp);
+        // A blocked entry never answers gemm/conv lookups and vice versa.
+        assert!(loaded
+            .get_gemm(&SelectionKey::gemm("host", 96, 96, 96))
+            .is_none());
+    }
+
+    #[test]
+    fn blocked_zero_dim_rejected_on_load() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("bad_blocked.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 0, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}}}"#,
+        )
+        .unwrap();
+        assert!(SelectionDb::load(&path).is_err());
+    }
+
+    #[test]
+    fn pre_threads_blocked_entry_defaults_to_auto() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("old.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2}}}"#,
+        )
+        .unwrap();
+        let db = SelectionDb::load(&path).unwrap();
+        let (p, _) = db
+            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .unwrap();
+        assert_eq!(p.threads, 0);
+    }
+
+    #[test]
     fn missing_key_is_none() {
         let db = SelectionDb::new();
         assert!(db
             .get_gemm(&SelectionKey::gemm("host", 64, 64, 64))
+            .is_none());
+        assert!(db
+            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
             .is_none());
     }
 

@@ -1,0 +1,335 @@
+//! Measured per-host sweep over the `BlockedParams` × `threads` grid.
+//!
+//! This is the paper's headline workflow run end-to-end on hardware we
+//! actually own: enumerate kernel parameter combinations, *measure* each
+//! one through a [`Backend`] (no model in the loop), and persist the
+//! winner per (platform, problem class) into the [`SelectionDb`] that
+//! `NativeEngine` consults at plan time.  Measured — not modeled — sweeps
+//! are what make the portability claim credible (cf. Reguly,
+//! arXiv:2309.10075); CI runs the quick variant on every merge via
+//! `cargo run --release --example tune_device -- --quick`.
+
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+use crate::blas::BlockedParams;
+use crate::error::Result;
+use crate::runtime::{ArtifactMeta, Backend};
+
+use super::db::{SelectionDb, SelectionKey};
+use super::search::{ExhaustiveSearch, SearchStrategy};
+
+/// One timed grid point: artifact × parameter combination.
+#[derive(Debug, Clone)]
+pub struct SweepMeasurement {
+    /// Problem-class op key (the `SelectionKey::op` the winner persists
+    /// under, e.g. `gemm_128x128x128`).
+    pub problem: String,
+    pub artifact: String,
+    pub params: BlockedParams,
+    pub best: Duration,
+    pub gflops: f64,
+}
+
+/// A finished sweep: every measurement plus the per-problem winners that
+/// were persisted.
+#[derive(Debug, Default)]
+pub struct BlockedSweep {
+    pub rows: Vec<SweepMeasurement>,
+    /// Winner per problem-class op key.
+    pub winners: BTreeMap<String, (BlockedParams, f64)>,
+}
+
+impl BlockedSweep {
+    /// Best measured gflops for a problem under exactly `params`
+    /// (e.g. the default config, for tuned-vs-default reporting).
+    pub fn gflops_for(
+        &self,
+        problem: &str,
+        params: &BlockedParams,
+    ) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.problem == problem && r.params == *params)
+            .map(|r| r.gflops)
+            .reduce(f64::max)
+    }
+}
+
+/// The base `BlockedParams` candidate sets — the same serial candidates
+/// the `blocked.rs` tests and the `rust_blas` bench exercise, so the
+/// sweep measures configurations the suite already proves correct.
+pub fn blocked_candidates(quick: bool) -> Vec<BlockedParams> {
+    let p = |bm, bn, bk, mr, nr| BlockedParams {
+        bm,
+        bn,
+        bk,
+        mr,
+        nr,
+        threads: 1,
+    };
+    if quick {
+        // Tiny grid for the CI smoke sweep.
+        vec![
+            BlockedParams { threads: 1, ..Default::default() },
+            p(32, 32, 32, 4, 8),
+            p(16, 32, 16, 4, 8),
+        ]
+    } else {
+        vec![
+            BlockedParams { threads: 1, ..Default::default() },
+            p(8, 8, 8, 2, 2),
+            p(16, 32, 5, 4, 8),
+            p(64, 64, 64, 8, 16),
+            p(32, 32, 32, 4, 8),
+            p(128, 128, 64, 8, 16),
+        ]
+    }
+}
+
+/// The full sweep grid: [`blocked_candidates`] × `threads`, deduplicated,
+/// with [`BlockedParams::default`] always present so every sweep measures
+/// the untuned baseline it is compared against.
+pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
+    let mut grid: Vec<BlockedParams> = Vec::new();
+    for base in blocked_candidates(quick) {
+        for &t in threads {
+            let cand = BlockedParams { threads: t, ..base };
+            if !grid.contains(&cand) {
+                grid.push(cand);
+            }
+        }
+    }
+    let default = BlockedParams::default();
+    if !grid.contains(&default) {
+        grid.insert(0, default);
+    }
+    grid
+}
+
+/// Derive the tuning-DB key for an artifact on `device` (the platform
+/// string the host sweep and `NativeEngine`'s plan-time lookup share —
+/// both must produce identical keys or tuned entries are never found).
+pub fn selection_key_for(
+    meta: &ArtifactMeta,
+    device: &str,
+) -> Option<SelectionKey> {
+    match meta.kind.as_str() {
+        "gemm" => {
+            Some(SelectionKey::gemm(device, meta.m?, meta.n?, meta.k?))
+        }
+        "conv" => {
+            let l = meta.layer.as_ref()?;
+            Some(SelectionKey::conv(
+                device,
+                l.window,
+                l.stride,
+                l.in_h,
+                l.in_w,
+                l.in_c,
+                l.out_c,
+                meta.batch.unwrap_or(1),
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Measure every artifact in `group` under every grid point and persist
+/// the per-problem winner into `db`, keyed by (device, problem class).
+///
+/// Generic over [`Backend`]; `apply` installs a candidate on the engine
+/// before it is timed (for `NativeEngine` that is
+/// `|e, p| e.set_params(*p)`).  The per-problem argmax runs through
+/// [`ExhaustiveSearch`] — the measured counterpart of the modeled
+/// `tune_gemm`/`tune_conv`, and the same discipline as `tune_measured`:
+/// `iters` repetitions, minimum taken, throughput from manifest flops.
+pub fn tune_blocked_sweep<B: Backend>(
+    engine: &mut B,
+    group: &str,
+    grid: &[BlockedParams],
+    iters: usize,
+    device: &str,
+    apply: &mut dyn FnMut(&mut B, &BlockedParams),
+    db: &mut SelectionDb,
+) -> Result<BlockedSweep> {
+    let metas: Vec<ArtifactMeta> =
+        engine.store().in_group(group).cloned().collect();
+    let mut sweep = BlockedSweep::default();
+    for meta in metas {
+        let Some(key) = selection_key_for(&meta, device) else {
+            continue;
+        };
+        let inputs = engine.synth_inputs(&meta.name, 17)?;
+        let mut run_err = None;
+        let mut score = |i: usize| -> Option<f64> {
+            apply(engine, &grid[i]);
+            match engine.run_timed(&meta.name, &inputs, iters) {
+                Ok((out, best)) => {
+                    let gflops = out.gflops(meta.flops);
+                    sweep.rows.push(SweepMeasurement {
+                        problem: key.op.clone(),
+                        artifact: meta.name.clone(),
+                        params: grid[i],
+                        best,
+                        gflops,
+                    });
+                    Some(gflops)
+                }
+                Err(e) => {
+                    run_err = Some(e);
+                    None
+                }
+            }
+        };
+        let found = ExhaustiveSearch.search(grid.len(), &mut score);
+        if let Some(e) = run_err {
+            return Err(e);
+        }
+        if let Some((idx, _evals, gflops)) = found {
+            // Several artifacts can share a problem class (same shape,
+            // different lowering); keep the best selection seen.
+            let better = db
+                .get_blocked(&key)
+                .map(|(_, g)| gflops > g)
+                .unwrap_or(true);
+            if better {
+                db.put_blocked(key.clone(), grid[idx], gflops);
+                sweep.winners.insert(key.op.clone(), (grid[idx], gflops));
+            }
+        }
+    }
+    Ok(sweep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
+    use crate::util::tmp::TempDir;
+
+    fn sweep_fixture() -> (TempDir, NativeEngine) {
+        let dir = TempDir::new("hostsweep").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+              {"name": "g96", "kind": "gemm", "impl": "pallas",
+               "file": "g96.hlo.txt", "flops": 1769472,
+               "m": 96, "n": 96, "k": 96, "groups": ["gemm"],
+               "inputs": [{"shape": [96, 96], "dtype": "float32"},
+                          {"shape": [96, 96], "dtype": "float32"}]},
+              {"name": "c16", "kind": "conv", "impl": "pallas",
+               "file": "c16.hlo.txt", "flops": 1179648, "batch": 2,
+               "algorithm": "im2col", "groups": ["conv"],
+               "layer": {"name": "sweep", "window": 3, "stride": 1,
+                         "in_h": 16, "in_w": 16, "in_c": 8, "out_c": 16,
+                         "out_h": 16, "out_w": 16, "padding": "SAME",
+                         "flops": 1179648},
+               "inputs": [{"shape": [2, 16, 16, 8], "dtype": "float32"},
+                          {"shape": [3, 3, 8, 16], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let engine = NativeEngine::new(store).unwrap();
+        (dir, engine)
+    }
+
+    #[test]
+    fn grid_always_contains_the_default() {
+        for quick in [true, false] {
+            let grid = blocked_grid(quick, &[1, 2]);
+            assert!(grid.contains(&BlockedParams::default()), "quick={quick}");
+            // Dedup: no candidate appears twice.
+            for (i, a) in grid.iter().enumerate() {
+                assert!(!grid[i + 1..].contains(a), "{a:?} duplicated");
+            }
+            // The threads axis is actually crossed in.
+            assert!(grid.iter().any(|p| p.threads == 2));
+        }
+    }
+
+    #[test]
+    fn sweep_measures_grid_and_persists_winners() {
+        let (_dir, mut engine) = sweep_fixture();
+        let grid = blocked_grid(true, &[1, 2]);
+        let mut db = SelectionDb::new();
+        let gemm = tune_blocked_sweep(
+            &mut engine,
+            "gemm",
+            &grid,
+            2,
+            HOST_DEVICE,
+            &mut |e, p| e.set_params(*p),
+            &mut db,
+        )
+        .unwrap();
+        let conv = tune_blocked_sweep(
+            &mut engine,
+            "conv",
+            &grid,
+            2,
+            HOST_DEVICE,
+            &mut |e, p| e.set_params(*p),
+            &mut db,
+        )
+        .unwrap();
+        // Every grid point was measured for every artifact.
+        assert_eq!(gemm.rows.len(), grid.len());
+        assert_eq!(conv.rows.len(), grid.len());
+        assert_eq!(db.len(), 2, "one selection per problem class");
+        // The persisted winner is the row argmax, and it comes from the
+        // grid.
+        for sweep in [&gemm, &conv] {
+            for (op, (params, gflops)) in &sweep.winners {
+                assert!(grid.contains(params));
+                let max = sweep
+                    .rows
+                    .iter()
+                    .filter(|r| &r.problem == op)
+                    .map(|r| r.gflops)
+                    .fold(f64::MIN, f64::max);
+                assert!(*gflops >= max - 1e-12, "{op}: {gflops} < {max}");
+            }
+        }
+        // Tuned >= default by construction: the default is in the grid,
+        // so the argmax can never score below it.  Note the key op is
+        // the *bucketed* problem class (96^3 -> the 128^3 bucket), and
+        // sweep rows carry the same bucketed op.
+        let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+        assert_eq!(key.op, "gemm_128x128x128");
+        let (_, tuned) = db.get_blocked(&key).unwrap();
+        let dflt = gemm
+            .gflops_for(&key.op, &BlockedParams::default())
+            .unwrap();
+        assert!(tuned >= dflt);
+    }
+
+    #[test]
+    fn artifacts_without_keys_are_skipped() {
+        let dir = TempDir::new("hostsweep").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+              {"name": "odd", "kind": "fft", "impl": "pallas",
+               "file": "odd.hlo.txt", "flops": 1, "inputs": [],
+               "groups": ["gemm"]}]}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let mut engine = NativeEngine::new(store).unwrap();
+        let mut db = SelectionDb::new();
+        let sweep = tune_blocked_sweep(
+            &mut engine,
+            "gemm",
+            &blocked_grid(true, &[1]),
+            1,
+            HOST_DEVICE,
+            &mut |e, p| e.set_params(*p),
+            &mut db,
+        )
+        .unwrap();
+        assert!(sweep.rows.is_empty());
+        assert!(db.is_empty());
+    }
+}

@@ -6,6 +6,12 @@
 //! host): every artifact in the `gemm`/`conv` manifest groups is one
 //! kernel instantiation; running them and keeping the fastest per problem
 //! is the measured counterpart of `tune_gemm`/`tune_conv`.
+//!
+//! [`tune_measured`] races *artifacts* against each other for a fixed
+//! engine configuration; its sibling [`super::tune_blocked_sweep`] races
+//! *host configurations* (`BlockedParams` × threads) against each other
+//! per artifact and persists the winners — together they close the
+//! paper's parametrize → measure → select loop on the host.
 
 use std::collections::BTreeMap;
 use std::time::Duration;

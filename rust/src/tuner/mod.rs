@@ -7,15 +7,26 @@
 //!
 //! * [`search`] — exhaustive, random, and hill-climbing strategies over a
 //!   cost function (modeled throughput or measured wall time);
+//! * [`measured`] — run competing artifacts through a backend and keep
+//!   the fastest per problem;
+//! * [`host`] — the measured per-host sweep: enumerate the
+//!   `BlockedParams` × `threads` grid, time every point through a
+//!   [`crate::runtime::Backend`], and persist the winners — the
+//!   parametrize → measure → select loop CI runs on every merge;
 //! * [`db`] — a persisted selection database mapping (device, problem
 //!   class) to the winning configuration, the artifact the coordinator
-//!   consults at request time.
+//!   and `NativeEngine` consult at request/plan time.
 
 mod db;
+mod host;
 mod measured;
 mod search;
 
-pub use db::{SelectionDb, SelectionKey};
+pub use db::{Selection, SelectionDb, SelectionKey};
+pub use host::{
+    blocked_candidates, blocked_grid, selection_key_for, tune_blocked_sweep,
+    BlockedSweep, SweepMeasurement,
+};
 pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};
 pub use search::{
     tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,

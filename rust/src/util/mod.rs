@@ -11,9 +11,12 @@
 //!   data and random search);
 //! * [`bench`] — a small measurement harness with warmup, repetitions and
 //!   robust statistics (the criterion stand-in the benches use);
+//! * [`pool`] — a scoped, work-stealing-lite thread pool (the rayon
+//!   stand-in the parallel kernels use);
 //! * [`tmp`] — RAII temporary directories for tests.
 
 pub mod bench;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod tmp;

@@ -1,0 +1,143 @@
+//! Hand-rolled work-stealing-lite thread pool over `std::thread::scope`.
+//!
+//! No rayon in the offline build, so this is the minimal substrate the
+//! parallel kernels need: a fixed worker set spawned per call (scoped, so
+//! borrowed inputs work and panics propagate on join), self-scheduling
+//! over an atomic chunk counter — the "lite" half of work stealing: every
+//! worker steals from one shared queue of chunk indices, so a slow chunk
+//! never serializes the rest of the range behind it.
+//!
+//! Determinism note: parallelism here never changes *results*.  Callers
+//! hand each chunk a disjoint `&mut` slice of the output (macro-tile row
+//! bands for GEMM, patch-row ranges for im2col), and each chunk runs the
+//! exact serial per-chunk code, so outputs are bit-identical to the
+//! serial path by construction — only the order chunks *start* in varies.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a `threads` knob: `0` means "one worker per available core"
+/// (`std::thread::available_parallelism`, falling back to 1 when the OS
+/// refuses to say), any other value is taken literally.
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// Run `f(index, item)` for every item, on up to `threads` workers.
+///
+/// Each item is claimed exactly once (atomic counter + one-shot slot), so
+/// `f` may own per-chunk `&mut` output slices.  With `threads <= 1` or a
+/// single item everything runs inline on the caller's thread — that *is*
+/// the serial path, not a simulation of it.  A panic in any worker
+/// propagates to the caller when the scope joins.
+pub fn run_parallel<T, F>(threads: usize, items: Vec<T>, f: F)
+where
+    T: Send,
+    F: Fn(usize, T) + Sync,
+{
+    let n = items.len();
+    let workers = match threads.min(n) {
+        0 => 1,
+        w => w,
+    };
+    if workers <= 1 {
+        for (i, item) in items.into_iter().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    // One-shot slots: claiming is the uncontended fetch_add; the per-slot
+    // mutex only transfers ownership of the item to the claiming worker.
+    let slots: Vec<Mutex<Option<T>>> =
+        items.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i]
+                    .lock()
+                    .expect("pool slot poisoned")
+                    .take()
+                    .expect("chunk claimed twice");
+                f(i, item);
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_chunk_runs_exactly_once() {
+        for threads in [1usize, 2, 3, 8] {
+            let mut out = vec![0u64; 37];
+            let chunks: Vec<(usize, &mut u64)> =
+                out.iter_mut().enumerate().collect();
+            run_parallel(threads, chunks, |i, (j, slot)| {
+                assert_eq!(i, j);
+                *slot += i as u64 + 1;
+            });
+            let expect: Vec<u64> = (0..37).map(|i| i + 1).collect();
+            assert_eq!(out, expect, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn more_threads_than_chunks_is_fine() {
+        let hits = AtomicU64::new(0);
+        run_parallel(16, vec![(), ()], |_, ()| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        run_parallel(8, Vec::<()>::new(), |_, ()| unreachable!());
+    }
+
+    #[test]
+    fn disjoint_mut_slices_compose() {
+        // The exact shape the kernels use: split one output buffer into
+        // row bands and let workers fill them concurrently.
+        let mut c = vec![0.0f32; 6 * 10];
+        let bands: Vec<(usize, &mut [f32])> =
+            c.chunks_mut(2 * 10).enumerate().collect();
+        run_parallel(3, bands, |_, (b, band)| {
+            for (i, v) in band.iter_mut().enumerate() {
+                *v = (b * 20 + i) as f32;
+            }
+        });
+        for (i, v) in c.iter().enumerate() {
+            assert_eq!(*v, i as f32);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates() {
+        let caught = std::panic::catch_unwind(|| {
+            run_parallel(2, vec![0, 1, 2, 3], |_, x| {
+                if x == 2 {
+                    panic!("chunk failure must not be swallowed");
+                }
+            });
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn resolve_threads_contract() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(5), 5);
+    }
+}

@@ -137,6 +137,7 @@ fn prop_blocked_gemm_correct() {
             bk: rng.range(1, 64) as usize,
             mr: rng.range(1, 8) as usize,
             nr: rng.range(1, 16) as usize,
+            threads: rng.range(0, 4) as usize,
         };
         let expected = gemm_naive(&a, &b, m, n, k);
         let got = gemm_blocked(&a, &b, m, n, k, &params);
@@ -170,6 +171,7 @@ fn prop_blocked_gemm_ragged_edges() {
             bk,
             mr,
             nr,
+            threads: 1,
         };
         assert!(m % mr != 0, "case {case}: m={m} mr={mr}");
         assert!(n % nr != 0, "case {case}: n={n} nr={nr}");
@@ -202,6 +204,7 @@ fn prop_blocked_gemm_degenerate_dims() {
             bk: rng.range(1, 32) as usize,
             mr: rng.range(1, 8) as usize,
             nr: rng.range(1, 16) as usize,
+            threads: 1,
         };
         let a = rng.f32_vec(m * k);
         let b = rng.f32_vec(k * n);
@@ -231,6 +234,7 @@ fn prop_blocked_gemm_all_kernel_paths() {
                 bk: rng.range(1, 48) as usize,
                 mr,
                 nr,
+                threads: 1,
             };
             let a = rng.f32_vec(m * k);
             let b = rng.f32_vec(k * n);
@@ -239,6 +243,97 @@ fn prop_blocked_gemm_all_kernel_paths() {
             assert!(
                 max_abs_diff(&expected, &got) < 1e-3,
                 "{m}x{n}x{k} {params:?}"
+            );
+        }
+    }
+}
+
+/// Parallel blocked GEMM is BIT-identical (not approximately equal) to
+/// the serial path, for ragged and degenerate shapes, across thread
+/// counts — including threads far above the number of macro-tile bands.
+/// Each worker owns a disjoint band of C rows and runs the exact serial
+/// per-band code, so this is an equality the design guarantees, and the
+/// test that keeps it guaranteed.
+#[test]
+fn prop_parallel_gemm_bit_identical_to_serial() {
+    let mut rng = XorShift::new(5555);
+    for case in 0..20 {
+        // Mix ragged (m % mr != 0), degenerate (dim == 1), and
+        // multi-band (m > bm) shapes.
+        let m = match case % 4 {
+            0 => 1,
+            1 => rng.range(2, 24) as usize,
+            _ => rng.range(24, 160) as usize,
+        };
+        let n = if case % 5 == 0 { 1 } else { rng.range(1, 64) as usize };
+        let k = if case % 7 == 0 { 1 } else { rng.range(1, 64) as usize };
+        let params = BlockedParams {
+            bm: rng.range(1, 32) as usize,
+            bn: rng.range(1, 32) as usize,
+            bk: rng.range(1, 32) as usize,
+            mr: rng.range(1, 8) as usize,
+            nr: rng.range(1, 16) as usize,
+            threads: 1,
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let serial = gemm_blocked(&a, &b, m, n, k, &params);
+        for threads in [2usize, 3, 8] {
+            let par = gemm_blocked(
+                &a,
+                &b,
+                m,
+                n,
+                k,
+                &BlockedParams { threads, ..params },
+            );
+            assert!(
+                serial == par,
+                "case {case}: threads={threads} diverged at {m}x{n}x{k} \
+                 {params:?} (max diff {})",
+                max_abs_diff(&serial, &par)
+            );
+        }
+    }
+}
+
+/// Parallel im2col conv is bit-identical to the serial path on ragged
+/// and degenerate shapes, threads ∈ {2, 3, 8} — including thread counts
+/// above the number of output rows (single-pixel outputs).
+#[test]
+fn prop_parallel_conv_bit_identical_to_serial() {
+    use portable_kernels::blas::{conv2d_im2col, Conv2dShape};
+    let mut rng = XorShift::new(6666);
+    for case in 0..12 {
+        let window = *rng.choose(&[1usize, 3, 5]);
+        let stride = *rng.choose(&[1usize, 2]);
+        let batch = rng.range(1, 3) as usize;
+        let h = rng.range(1, 13).max(window as u64) as usize;
+        let w = rng.range(1, 13).max(window as u64) as usize;
+        let c = rng.range(1, 9) as usize;
+        let kc = rng.range(1, 9) as usize;
+        let s = Conv2dShape::same(batch, h, w, c, kc, window, stride);
+        let x = rng.f32_vec(s.input_elems());
+        let f = rng.f32_vec(s.filter_elems());
+        let params = BlockedParams {
+            bm: rng.range(1, 24) as usize,
+            bn: rng.range(1, 24) as usize,
+            bk: rng.range(1, 24) as usize,
+            mr: rng.range(1, 8) as usize,
+            nr: rng.range(1, 16) as usize,
+            threads: 1,
+        };
+        let serial = conv2d_im2col(&x, &f, &s, &params);
+        for threads in [2usize, 3, 8] {
+            let par = conv2d_im2col(
+                &x,
+                &f,
+                &s,
+                &BlockedParams { threads, ..params },
+            );
+            assert!(
+                serial == par,
+                "case {case}: threads={threads} diverged on {s:?} {params:?}"
             );
         }
     }
