@@ -4,7 +4,8 @@
 # manifest.json (requires JAX; the Rust NativeEngine also runs synthetic
 # manifests without it).
 
-.PHONY: artifacts test rust-test python-test tune bench-smoke
+.PHONY: artifacts test rust-test python-test tune bench-smoke docs \
+	serve-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts --groups all
@@ -26,9 +27,24 @@ tune:
 	cargo run --release --example tune_device -- --quick --out reports
 
 # Offline bench smoke: modeled paper figures plus the measured host
-# BlockedParams x threads sweeps (reports/*_host_sweep.csv).  No JAX
+# BlockedParams x threads sweeps (reports/*_host_sweep.csv) and the
+# serving contention sweep (reports/serving_contention.csv).  No JAX
 # artifacts needed; the artifact-backed sections skip gracefully.
 bench-smoke:
 	cargo bench --bench rust_blas
 	cargo bench --bench gemm_roofline
 	cargo bench --bench conv_sweep
+	cargo bench --bench serving_contention
+
+# Documentation gate — exactly what CI's docs job runs: rustdoc with
+# warnings as errors (missing_docs is enforced crate-wide) plus the
+# markdown cross-reference check over docs/*.md and ROADMAP.md.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+	python3 scripts/check_doc_links.py
+
+# Serving scale-out smoke — exactly what CI's serve-smoke job runs:
+# 8 closed-loop clients over the synthetic zoo, serial kernels, and the
+# assertion that pool(2) throughput >= the single-actor baseline.
+serve-smoke:
+	cargo run --release --example serve_loadgen -- --smoke --out reports

@@ -7,7 +7,9 @@
 
 use std::path::Path;
 
-use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
+use portable_kernels::coordinator::{
+    available_layers, EngineHandle, NetworkRunner,
+};
 use portable_kernels::harness::{fig_network, Report};
 use portable_kernels::runtime::ArtifactStore;
 
@@ -40,9 +42,7 @@ fn measured() {
 
     for net in ["resnet", "vgg"] {
         for implementation in ["xla", "pallas"] {
-            if NetworkRunner::available_layers(&store, net, implementation)
-                .is_empty()
-            {
+            if available_layers(&store, net, implementation).is_empty() {
                 continue;
             }
             let rep = runner

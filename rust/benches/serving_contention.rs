@@ -1,0 +1,212 @@
+//! Bench: serving throughput/latency under contention — client count ×
+//! pool size × threads-per-engine, over a synthetic manifest zoo.
+//!
+//! This is the measurement the serving scale-out exists for: the
+//! `threads` kernel knob (intra-engine parallelism) and the pool width
+//! (inter-request parallelism) compete for the same cores, and the right
+//! split depends on concurrency.  At 1 client a wide-threads single
+//! engine wins; at 8 clients, narrow engines behind a pool usually do.
+//! Saturation behaviour — not peak — is what separates portable serving
+//! configurations (cf. Reguly, arXiv:2309.10075).
+//!
+//! Run: `cargo bench --bench serving_contention`.
+//! Writes `reports/serving_contention.csv`.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use portable_kernels::blas::BlockedParams;
+use portable_kernels::coordinator::{EngineClient, EnginePool, PoolConfig};
+use portable_kernels::runtime::{ArtifactStore, NativeEngine};
+use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::tmp::TempDir;
+
+/// Total requests per sweep cell (split across the cell's clients).
+const REQUESTS_PER_CELL: usize = 96;
+const QUEUE_DEPTH: usize = 64;
+
+fn gemm_entry(name: &str, m: usize) -> String {
+    let flops = 2 * (m as u64).pow(3);
+    format!(
+        r#"{{"name": "{name}", "kind": "gemm", "impl": "native",
+            "file": "{name}.hlo.txt", "flops": {flops},
+            "m": {m}, "n": {m}, "k": {m}, "groups": ["gemm"],
+            "inputs": [{{"shape": [{m}, {m}], "dtype": "float32"}},
+                       {{"shape": [{m}, {m}], "dtype": "float32"}}]}}"#
+    )
+}
+
+fn conv_entry(name: &str, batch: usize, h: usize, c: usize, k: usize) -> String {
+    let flops = 2 * (batch * h * h * k * 9 * c) as u64;
+    format!(
+        r#"{{"name": "{name}", "kind": "conv", "impl": "native",
+            "file": "{name}.hlo.txt", "flops": {flops}, "batch": {batch},
+            "algorithm": "im2col", "groups": ["conv"],
+            "layer": {{"name": "{name}", "window": 3, "stride": 1,
+                       "in_h": {h}, "in_w": {h}, "in_c": {c}, "out_c": {k},
+                       "out_h": {h}, "out_w": {h}, "padding": "SAME",
+                       "flops": {flops}}},
+            "inputs": [{{"shape": [{batch}, {h}, {h}, {c}], "dtype": "float32"}},
+                       {{"shape": [3, 3, {c}, {k}], "dtype": "float32"}}]}}"#
+    )
+}
+
+fn write_zoo(dir: &Path) {
+    let entries = [
+        gemm_entry("serve_gemm_96", 96),
+        gemm_entry("serve_gemm_128", 128),
+        gemm_entry("serve_gemm_160", 160),
+        gemm_entry("serve_gemm_192", 192),
+        conv_entry("serve_conv_16", 2, 16, 8, 16),
+        conv_entry("serve_conv_24", 2, 24, 8, 16),
+    ];
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"{{"version": 1, "artifacts": [{}]}}"#,
+            entries.join(",\n")
+        ),
+    )
+    .unwrap();
+}
+
+fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx].as_secs_f64() * 1e3
+}
+
+struct Cell {
+    clients: usize,
+    pool: usize,
+    threads: usize,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+    wall_s: f64,
+}
+
+fn run_cell(
+    store: &ArtifactStore,
+    clients: usize,
+    pool_size: usize,
+    threads: usize,
+) -> Cell {
+    let config = PoolConfig {
+        actors: pool_size,
+        queue_depth: QUEUE_DEPTH,
+        spill_depth: (QUEUE_DEPTH / 2).max(1),
+    };
+    let actor_store = store.clone();
+    let params = BlockedParams { threads, ..BlockedParams::default() };
+    let pool = EnginePool::spawn_with(config, move |_| {
+        Ok(NativeEngine::with_params(actor_store.clone(), params))
+    })
+    .unwrap();
+
+    let names: Vec<String> = store.iter().map(|m| m.name.clone()).collect();
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(names.len());
+    for name in &names {
+        inputs.push(pool.synth_inputs(name, 17).unwrap());
+        pool.warm(name).unwrap();
+    }
+
+    let per_client = (REQUESTS_PER_CELL / clients).max(1);
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let pool = &pool;
+                let names = &names;
+                let inputs = &inputs;
+                s.spawn(move || {
+                    let mut rng = XorShift::new(0xbe9c4 + c as u64);
+                    let mut lat = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let i =
+                            (rng.next_u64() % names.len() as u64) as usize;
+                        let t = Instant::now();
+                        pool.run(&names[i], inputs[i].clone()).unwrap();
+                        lat.push(t.elapsed());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+
+    latencies.sort();
+    Cell {
+        clients,
+        pool: pool_size,
+        threads,
+        rps: (clients * per_client) as f64 / wall,
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p95_ms: percentile_ms(&latencies, 0.95),
+        wall_s: wall,
+    }
+}
+
+fn main() {
+    let zoo = TempDir::new("serving-contention").unwrap();
+    write_zoo(zoo.path());
+    let store = ArtifactStore::open(zoo.path()).unwrap();
+
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!(
+        "== serving contention sweep ({} artifacts, {REQUESTS_PER_CELL} \
+         requests/cell, {cores} cores) ==",
+        store.len()
+    );
+    println!(
+        "{:>7} {:>5} {:>8} | {:>10} {:>9} {:>9}",
+        "clients", "pool", "threads", "req/s", "p50 ms", "p95 ms"
+    );
+
+    let mut csv = String::from(
+        "clients,pool,threads,requests,wall_s,throughput_rps,p50_ms,p95_ms\n",
+    );
+    for clients in [1usize, 2, 4, 8] {
+        for pool_size in [1usize, 2, 4] {
+            // threads=0 means "all cores" — each actor's kernels fan out
+            // over the whole machine, fighting the pool for cores.
+            for threads in [1usize, 2, 0] {
+                let cell = run_cell(&store, clients, pool_size, threads);
+                println!(
+                    "{:>7} {:>5} {:>8} | {:>10.1} {:>9.2} {:>9.2}",
+                    cell.clients,
+                    cell.pool,
+                    cell.threads,
+                    cell.rps,
+                    cell.p50_ms,
+                    cell.p95_ms
+                );
+                csv.push_str(&format!(
+                    "{},{},{},{},{:.6},{:.2},{:.4},{:.4}\n",
+                    cell.clients,
+                    cell.pool,
+                    cell.threads,
+                    REQUESTS_PER_CELL,
+                    cell.wall_s,
+                    cell.rps,
+                    cell.p50_ms,
+                    cell.p95_ms
+                ));
+            }
+        }
+    }
+
+    std::fs::create_dir_all("reports").unwrap();
+    std::fs::write("reports/serving_contention.csv", csv).unwrap();
+    println!("wrote reports/serving_contention.csv");
+}

@@ -15,7 +15,7 @@
 use std::time::Instant;
 
 use portable_kernels::coordinator::{
-    BatchPolicy, Batcher, EngineHandle, NetworkRunner,
+    available_layers, BatchPolicy, Batcher, EngineHandle, NetworkRunner,
 };
 use portable_kernels::harness::Report;
 use portable_kernels::runtime::ArtifactStore;
@@ -29,8 +29,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     // ---- per-layer sweeps: vendor baseline + pallas where available ----
     for net in ["vgg", "resnet"] {
         for implementation in ["xla", "pallas"] {
-            let layers =
-                NetworkRunner::available_layers(&store, net, implementation);
+            let layers = available_layers(&store, net, implementation);
             if layers.is_empty() {
                 continue;
             }

@@ -1,0 +1,315 @@
+//! Synthetic load generator for the multi-actor serving layer.
+//!
+//! Builds a synthetic manifest zoo (mixed GEMM + conv shapes), spawns an
+//! `EnginePool` per configured size, and hammers it from M closed-loop
+//! client threads, reporting throughput and latency percentiles per pool
+//! size — the contention workload where inter-request parallelism (pool
+//! width) and intra-engine parallelism (the `threads` kernel knob)
+//! compete for the same cores.
+//!
+//! ```sh
+//! cargo run --release --example serve_loadgen                  # sweep
+//! cargo run --release --example serve_loadgen -- --smoke       # CI gate
+//! cargo run --release --example serve_loadgen -- \
+//!     --pools 1,2,4 --clients 8 --requests 60 --threads 1 --out reports
+//! ```
+//!
+//! `--smoke` runs pool sizes 1 and 2 on the contention workload and
+//! **exits non-zero unless pool(2) throughput >= --assert-speedup ×
+//! pool(1)** (default 1.0) — the CI `serve-smoke` contract.  All modes
+//! write `<out>/serve_loadgen.csv`.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use portable_kernels::blas::BlockedParams;
+use portable_kernels::coordinator::{EngineClient, EnginePool, PoolConfig};
+use portable_kernels::runtime::{ArtifactStore, NativeEngine};
+use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::tmp::TempDir;
+
+/// One synthetic square GEMM manifest entry.
+fn gemm_entry(name: &str, m: usize) -> String {
+    let flops = 2 * (m as u64).pow(3);
+    format!(
+        r#"{{"name": "{name}", "kind": "gemm", "impl": "native",
+            "file": "{name}.hlo.txt", "flops": {flops},
+            "m": {m}, "n": {m}, "k": {m}, "groups": ["gemm"],
+            "inputs": [{{"shape": [{m}, {m}], "dtype": "float32"}},
+                       {{"shape": [{m}, {m}], "dtype": "float32"}}]}}"#
+    )
+}
+
+/// One synthetic SAME-padded conv manifest entry.
+fn conv_entry(name: &str, batch: usize, h: usize, c: usize, k: usize) -> String {
+    let flops = 2 * (batch * h * h * k * 9 * c) as u64;
+    format!(
+        r#"{{"name": "{name}", "kind": "conv", "impl": "native",
+            "file": "{name}.hlo.txt", "flops": {flops}, "batch": {batch},
+            "algorithm": "im2col", "groups": ["conv"],
+            "layer": {{"name": "{name}", "window": 3, "stride": 1,
+                       "in_h": {h}, "in_w": {h}, "in_c": {c}, "out_c": {k},
+                       "out_h": {h}, "out_w": {h}, "padding": "SAME",
+                       "flops": {flops}}},
+            "inputs": [{{"shape": [{batch}, {h}, {h}, {c}], "dtype": "float32"}},
+                       {{"shape": [3, 3, {c}, {k}], "dtype": "float32"}}]}}"#
+    )
+}
+
+/// The serving zoo: shapes big enough that one request is real work
+/// (~0.5-5 ms serial), varied enough that routing spreads them.
+fn write_zoo(dir: &Path) {
+    let entries = [
+        gemm_entry("serve_gemm_96", 96),
+        gemm_entry("serve_gemm_128", 128),
+        gemm_entry("serve_gemm_160", 160),
+        gemm_entry("serve_gemm_192", 192),
+        conv_entry("serve_conv_16", 2, 16, 8, 16),
+        conv_entry("serve_conv_24", 2, 24, 8, 16),
+    ];
+    std::fs::write(
+        dir.join("manifest.json"),
+        format!(
+            r#"{{"version": 1, "artifacts": [{}]}}"#,
+            entries.join(",\n")
+        ),
+    )
+    .unwrap();
+}
+
+/// One measured cell of the sweep.
+struct Cell {
+    pool: usize,
+    clients: usize,
+    threads: usize,
+    queue_depth: usize,
+    requests: usize,
+    wall_s: f64,
+    rps: f64,
+    p50_ms: f64,
+    p95_ms: f64,
+}
+
+impl Cell {
+    fn csv_header() -> &'static str {
+        "pool,clients,threads,queue_depth,requests,wall_s,throughput_rps,\
+         p50_ms,p95_ms"
+    }
+
+    fn csv_row(&self) -> String {
+        format!(
+            "{},{},{},{},{},{:.6},{:.2},{:.4},{:.4}",
+            self.pool,
+            self.clients,
+            self.threads,
+            self.queue_depth,
+            self.requests,
+            self.wall_s,
+            self.rps,
+            self.p50_ms,
+            self.p95_ms
+        )
+    }
+}
+
+fn percentile_ms(sorted: &[Duration], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx].as_secs_f64() * 1e3
+}
+
+/// Drive one (pool size, clients, threads) cell: M closed-loop client
+/// threads, each issuing `requests_per_client` blocking runs over a
+/// seeded-random artifact mix.
+fn run_cell(
+    store: &ArtifactStore,
+    pool_size: usize,
+    clients: usize,
+    threads: usize,
+    queue_depth: usize,
+    requests_per_client: usize,
+) -> Result<Cell, Box<dyn std::error::Error>> {
+    let config = PoolConfig {
+        actors: pool_size,
+        queue_depth,
+        spill_depth: (queue_depth / 2).max(1),
+    };
+    let actor_store = store.clone();
+    let params = BlockedParams { threads, ..BlockedParams::default() };
+    let pool = EnginePool::spawn_with(config, move |_| {
+        Ok(NativeEngine::with_params(actor_store.clone(), params))
+    })?;
+
+    let names: Vec<String> = store.iter().map(|m| m.name.clone()).collect();
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(names.len());
+    for name in &names {
+        inputs.push(pool.synth_inputs(name, 17)?);
+        pool.warm(name)?;
+    }
+
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let pool = &pool;
+                let names = &names;
+                let inputs = &inputs;
+                s.spawn(move || {
+                    let mut rng = XorShift::new(0x5eed + c as u64);
+                    let mut lat = Vec::with_capacity(requests_per_client);
+                    for _ in 0..requests_per_client {
+                        let i =
+                            (rng.next_u64() % names.len() as u64) as usize;
+                        let t = Instant::now();
+                        let out =
+                            pool.run(&names[i], inputs[i].clone()).unwrap();
+                        lat.push(t.elapsed());
+                        assert!(!out.outputs[0].is_empty());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+
+    latencies.sort();
+    let requests = clients * requests_per_client;
+    Ok(Cell {
+        pool: pool_size,
+        clients,
+        threads,
+        queue_depth,
+        requests,
+        wall_s: wall,
+        rps: requests as f64 / wall,
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p95_ms: percentile_ms(&latencies, 0.95),
+    })
+}
+
+fn parse_pools(spec: &str) -> Result<Vec<usize>, Box<dyn std::error::Error>> {
+    let pools: Result<Vec<usize>, _> =
+        spec.split(',').map(|s| s.trim().parse::<usize>()).collect();
+    let pools = pools.map_err(|_| format!("bad --pools list {spec:?}"))?;
+    if pools.is_empty() || pools.contains(&0) {
+        return Err(format!("--pools needs positive sizes, got {spec:?}").into());
+    }
+    Ok(pools)
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let mut pools: Vec<usize> = vec![1, 2];
+    let mut clients = 8usize;
+    let mut requests = 40usize;
+    let mut threads = 1usize;
+    let mut queue_depth = 64usize;
+    let mut out_dir = PathBuf::from("reports");
+    let mut smoke = false;
+    let mut assert_speedup: Option<f64> = None;
+
+    let mut it = std::env::args().skip(1);
+    while let Some(arg) = it.next() {
+        let mut value = |what: &str| {
+            it.next().ok_or_else(|| format!("{what} needs a value"))
+        };
+        match arg.as_str() {
+            "--pools" => pools = parse_pools(&value("--pools")?)?,
+            "--clients" => clients = value("--clients")?.parse()?,
+            "--requests" => requests = value("--requests")?.parse()?,
+            "--threads" => threads = value("--threads")?.parse()?,
+            "--depth" => queue_depth = value("--depth")?.parse()?,
+            "--out" => out_dir = PathBuf::from(value("--out")?),
+            "--smoke" => smoke = true,
+            "--assert-speedup" => {
+                assert_speedup = Some(value("--assert-speedup")?.parse()?)
+            }
+            other => {
+                return Err(format!(
+                    "unknown argument {other:?}; usage: serve_loadgen \
+                     [--pools 1,2,..] [--clients M] [--requests R] \
+                     [--threads T] [--depth D] [--out DIR] [--smoke] \
+                     [--assert-speedup X]"
+                )
+                .into())
+            }
+        }
+    }
+    if smoke {
+        // The CI contract: pool sizes 1 and 2 on one contention
+        // workload, serial kernels so pool width is the only
+        // parallelism axis.
+        pools = vec![1, 2];
+        threads = 1;
+    }
+
+    let zoo = TempDir::new("serve-loadgen")?;
+    write_zoo(zoo.path());
+    let store = ArtifactStore::open(zoo.path())?;
+    println!(
+        "== serve_loadgen: {} artifacts, {clients} clients x {requests} \
+         requests, threads={threads}, pools {pools:?} ==",
+        store.len()
+    );
+
+    let mut cells: Vec<Cell> = Vec::new();
+    for &pool_size in &pools {
+        let cell = run_cell(
+            &store, pool_size, clients, threads, queue_depth, requests,
+        )?;
+        println!(
+            "pool={:<2} threads={threads}: {:>8.1} req/s  p50 {:>7.2} ms  \
+             p95 {:>7.2} ms  (wall {:.2} s, {} requests)",
+            cell.pool, cell.rps, cell.p50_ms, cell.p95_ms, cell.wall_s,
+            cell.requests
+        );
+        cells.push(cell);
+    }
+
+    std::fs::create_dir_all(&out_dir)?;
+    let csv_path = out_dir.join("serve_loadgen.csv");
+    let mut csv = String::from(Cell::csv_header());
+    csv.push('\n');
+    for cell in &cells {
+        csv.push_str(&cell.csv_row());
+        csv.push('\n');
+    }
+    std::fs::write(&csv_path, csv)?;
+    println!("wrote {}", csv_path.display());
+
+    if smoke {
+        let min_speedup = assert_speedup.unwrap_or(1.0);
+        let single = cells
+            .iter()
+            .find(|c| c.pool == 1)
+            .ok_or("smoke needs the pool=1 cell")?;
+        let pooled = cells
+            .iter()
+            .find(|c| c.pool == 2)
+            .ok_or("smoke needs the pool=2 cell")?;
+        let ratio = pooled.rps / single.rps;
+        println!(
+            "smoke: pool(2) / pool(1) throughput = {ratio:.2}x \
+             (required >= {min_speedup:.2}x)"
+        );
+        if ratio < min_speedup {
+            return Err(format!(
+                "serving smoke failed: pool(2) at {:.1} req/s is only \
+                 {ratio:.2}x pool(1) at {:.1} req/s (need >= \
+                 {min_speedup:.2}x): scale-out must not lose throughput \
+                 under contention",
+                pooled.rps, single.rps
+            )
+            .into());
+        }
+        println!("OK: pool(2) sustains >= {min_speedup:.2}x single-actor throughput");
+    }
+    Ok(())
+}

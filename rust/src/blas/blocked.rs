@@ -14,8 +14,11 @@ use crate::util::pool;
 /// Blocking parameters (the CPU analogue of `GemmConfig`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct BlockedParams {
+    /// Macro-tile rows (sized for L2).
     pub bm: usize,
+    /// Macro-tile columns (sized for L2).
     pub bn: usize,
+    /// K-panel depth (sized for L1).
     pub bk: usize,
     /// Register micro-tile rows.
     pub mr: usize,
@@ -55,7 +58,7 @@ impl BlockedParams {
 /// cache hierarchy).
 ///
 /// With `params.threads != 1` the `bm`-row macro-tile bands are claimed
-/// dynamically by a fixed worker set; each band runs [`gemm_band`] —
+/// dynamically by a fixed worker set; each band runs `gemm_band` —
 /// the same code the serial path runs — against its own disjoint slice
 /// of C, so the output is bit-identical for every thread count.
 pub fn gemm_blocked(

@@ -18,16 +18,27 @@ use crate::util::pool;
 /// Fully resolved shape of one conv2d execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Conv2dShape {
+    /// Batch size N.
     pub batch: usize,
+    /// Input height.
     pub in_h: usize,
+    /// Input width.
     pub in_w: usize,
+    /// Input channels.
     pub in_c: usize,
+    /// Output height.
     pub out_h: usize,
+    /// Output width.
     pub out_w: usize,
+    /// Output channels.
     pub out_c: usize,
+    /// Square filter window size.
     pub window: usize,
+    /// Spatial stride.
     pub stride: usize,
+    /// Zero-padding rows above the input (SAME convention).
     pub pad_top: usize,
+    /// Zero-padding columns left of the input (SAME convention).
     pub pad_left: usize,
 }
 
@@ -89,14 +100,17 @@ impl Conv2dShape {
         }
     }
 
+    /// Element count of the NHWC input tensor.
     pub fn input_elems(&self) -> usize {
         self.batch * self.in_h * self.in_w * self.in_c
     }
 
+    /// Element count of the RSCK filter tensor.
     pub fn filter_elems(&self) -> usize {
         self.window * self.window * self.in_c * self.out_c
     }
 
+    /// Element count of the NHWK output tensor.
     pub fn output_elems(&self) -> usize {
         self.batch * self.out_h * self.out_w * self.out_c
     }

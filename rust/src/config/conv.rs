@@ -36,6 +36,7 @@ impl ConvAlgorithm {
         }
     }
 
+    /// Stable lowercase name (manifests, selection DB, reports).
     pub fn as_str(&self) -> &'static str {
         match self {
             ConvAlgorithm::Naive => "naive",

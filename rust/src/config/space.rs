@@ -13,9 +13,11 @@ pub struct GemmSpace {
     pub reg_tiles: Vec<u32>,
     /// Candidate work-group side lengths.
     pub work_groups: Vec<u32>,
-    /// Whether to include `_loc` / `_noloc` / double-buffered variants.
+    /// Whether to include local-memory (`_loc`) variants.
     pub include_local: bool,
+    /// Whether to include cache-only (`_noloc`) variants.
     pub include_noloc: bool,
+    /// Whether to include double-buffered local-memory variants.
     pub include_double_buffer: bool,
 }
 
@@ -77,11 +79,17 @@ pub fn gemm_space() -> Vec<GemmConfig> {
 /// (the sweep of paper Figs. 2 & 3).
 #[derive(Debug, Clone)]
 pub struct ConvSpace {
+    /// Candidate output-tile heights.
     pub tiles_h: Vec<u32>,
+    /// Candidate output-tile widths.
     pub tiles_w: Vec<u32>,
+    /// Candidate input-channel vector widths.
     pub vecs_c: Vec<u32>,
+    /// Candidate output-channel vector widths.
     pub vecs_k: Vec<u32>,
+    /// Algorithms to sweep.
     pub algorithms: Vec<ConvAlgorithm>,
+    /// Winograd output-tile sizes (used by the Winograd algorithm only).
     pub wino_ms: Vec<u32>,
 }
 

@@ -4,9 +4,19 @@
 //! is dispatch-level: queued requests for the same artifact run
 //! back-to-back on the engine thread without interleaving compile-cache
 //! churn, and the policy decides when a group is flushed.
+//!
+//! [`Batcher::flush_due`] connects the queue to an [`EngineClient`]:
+//! each due group is submitted back-to-back, and because the
+//! [`EnginePool`](super::EnginePool) routes per artifact, a whole group
+//! lands on the one actor whose plan cache is already warm for it.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
+
+use crate::error::Result;
+use crate::runtime::RunOutput;
+
+use super::EngineClient;
 
 /// When to flush a pending group.
 #[derive(Debug, Clone, Copy)]
@@ -32,6 +42,27 @@ struct Pending<T> {
 }
 
 /// Order-preserving, per-artifact grouping queue.
+///
+/// # Examples
+///
+/// ```
+/// use std::time::Duration;
+/// use portable_kernels::coordinator::{BatchPolicy, Batcher};
+///
+/// let policy = BatchPolicy {
+///     max_batch: 8,
+///     max_delay: Duration::from_secs(3600),
+/// };
+/// let mut b: Batcher<u32> = Batcher::new(policy);
+/// b.push("gemm_512", 1);
+/// b.push("gemm_512", 2);
+/// b.push("conv3_1", 3);
+///
+/// // Consecutive same-artifact requests flush as one group.
+/// let (artifact, group) = b.pop_group().unwrap();
+/// assert_eq!(artifact, "gemm_512");
+/// assert_eq!(group, vec![1, 2]);
+/// ```
 #[derive(Debug)]
 pub struct Batcher<T> {
     policy: BatchPolicy,
@@ -39,6 +70,7 @@ pub struct Batcher<T> {
 }
 
 impl<T> Batcher<T> {
+    /// Create an empty batcher under `policy`.
     pub fn new(policy: BatchPolicy) -> Self {
         Self { policy, queue: VecDeque::new() }
     }
@@ -52,10 +84,12 @@ impl<T> Batcher<T> {
         });
     }
 
+    /// Requests currently queued (across all artifacts).
     pub fn len(&self) -> usize {
         self.queue.len()
     }
 
+    /// Whether nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -90,6 +124,35 @@ impl<T> Batcher<T> {
             payloads.push(self.queue.pop_front().unwrap().payload);
         }
         Some((artifact, payloads))
+    }
+}
+
+/// One flushed group: the artifact plus the per-request execution
+/// results, in submission order.
+pub type FlushedGroup = (String, Vec<Result<RunOutput>>);
+
+impl Batcher<Vec<Vec<f32>>> {
+    /// Flush every group that is due at `now` through `client`,
+    /// executing each group's requests back-to-back (same artifact →
+    /// same pool actor → warm plan cache).  Per-request failures are
+    /// reported in place; they never abort the rest of the flush.
+    pub fn flush_due<C: EngineClient>(
+        &mut self,
+        client: &C,
+        now: Instant,
+    ) -> Vec<FlushedGroup> {
+        let mut flushed = Vec::new();
+        while self.should_flush(now) {
+            let Some((artifact, group)) = self.pop_group() else {
+                break;
+            };
+            let results: Vec<Result<RunOutput>> = group
+                .into_iter()
+                .map(|inputs| client.run(&artifact, inputs))
+                .collect();
+            flushed.push((artifact, results));
+        }
+        flushed
     }
 }
 

@@ -1,23 +1,88 @@
-//! Layer-3 coordinator: the Rust-owned event loop around the execution
-//! backend.
+//! Layer-3 coordinator: the Rust-owned serving layer around the
+//! execution backend.
 //!
 //! The paper's contribution lives at the kernel layer, so the coordinator
 //! is the thin-but-real serving scaffold a library like SYCL-DNN needs in
-//! deployment:
+//! deployment (see `docs/ARCHITECTURE.md` for the end-to-end narrative):
 //!
-//! * [`scheduler`] — an actor thread owning any (`&mut self`, possibly
+//! * [`EngineHandle`] — an actor thread owning any (`&mut self`, possibly
 //!   non-`Sync`) [`Backend`]; all execution funnels through it, so the
 //!   request path is channel-send + hash-lookup + execute.
-//! * [`batcher`] — groups same-artifact requests to amortize dispatch.
-//! * [`network`] — runs a whole VGG/ResNet convolution stack through the
-//!   engine, selecting each layer's artifact per the tuned selection DB.
+//! * [`EnginePool`] — the scale-out shape: N backend actors behind a
+//!   consistent-hash router with bounded queues, explicit backpressure
+//!   ([`EnginePool::try_submit_run`] returns [`SubmitError::Busy`]),
+//!   least-loaded spill, and panic containment.
+//! * [`Batcher`] — groups same-artifact requests to amortize dispatch;
+//!   flushing a group through a pool keeps it on one actor's warm cache.
+//! * [`NetworkRunner`] — runs a whole VGG/ResNet convolution stack
+//!   through any [`EngineClient`], selecting each layer's artifact per
+//!   the tuned selection DB.
 //!
 //! [`Backend`]: crate::runtime::Backend
 
 mod batcher;
 mod network;
+mod pool;
 mod scheduler;
 
-pub use batcher::{BatchPolicy, Batcher};
-pub use network::{LayerRun, NetworkReport, NetworkRunner};
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::runtime::RunOutput;
+
+pub use batcher::{BatchPolicy, Batcher, FlushedGroup};
+pub use network::{
+    available_layers, layer_artifact_name, LayerRun, NetworkReport,
+    NetworkRunner,
+};
+pub use pool::{EnginePool, PoolConfig, RunTicket, SubmitError};
 pub use scheduler::{EngineHandle, EngineStats};
+
+/// Client-side surface shared by the one-actor [`EngineHandle`] and the
+/// multi-actor [`EnginePool`]: everything above the coordinator (the
+/// network runner, the batcher, benches, load generators) is written
+/// against this trait, so the serving shape — like the backend — is a
+/// deployment decision, not an architectural one.
+pub trait EngineClient {
+    /// Execute an artifact with flattened f32 inputs.
+    fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<RunOutput>;
+
+    /// Execute an artifact `iters` times; returns the last output with
+    /// the best (minimum) execution time.
+    fn run_timed(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)>;
+
+    /// Pre-compile (or pre-plan) an artifact, filling the owning
+    /// engine's cache.
+    fn warm(&self, name: &str) -> Result<()>;
+
+    /// Deterministic synthetic inputs for an artifact.
+    fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>>;
+}
+
+impl<C: EngineClient> EngineClient for &C {
+    fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<RunOutput> {
+        (**self).run(name, inputs)
+    }
+
+    fn run_timed(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)> {
+        (**self).run_timed(name, inputs, iters)
+    }
+
+    fn warm(&self, name: &str) -> Result<()> {
+        (**self).warm(name)
+    }
+
+    fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        (**self).synth_inputs(name, seed)
+    }
+}

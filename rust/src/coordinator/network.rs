@@ -1,24 +1,34 @@
 //! Network runner: execute a whole VGG/ResNet convolution stack through
 //! the engine, one artifact per layer, reporting per-layer gigaflops —
 //! the measured side of the paper's Figs. 6-9.
+//!
+//! The runner is generic over [`EngineClient`], so the same code drives
+//! a single [`EngineHandle`](super::EngineHandle) actor or a whole
+//! [`EnginePool`](super::EnginePool) — with a pool, each layer's
+//! artifact routes to its owning actor and the per-layer plan/compile
+//! caches stay hot there across repetitions.
 
 use std::time::Duration;
-
 
 use crate::error::{Error, Result};
 use crate::runtime::ArtifactStore;
 
-use super::scheduler::EngineHandle;
+use super::EngineClient;
 
 /// One executed layer.
 #[derive(Debug, Clone)]
 pub struct LayerRun {
+    /// Layer name as the network tables list it (e.g. `conv3_2`).
     pub layer: String,
+    /// Artifact the layer executed as.
     pub artifact: String,
     /// "pallas" | "xla".
     pub implementation: String,
+    /// Useful floating-point operations of one execution.
     pub flops: u64,
+    /// Best execution time over the timing repetitions, seconds.
     pub elapsed_s: f64,
+    /// Measured throughput, GFLOP/s.
     pub gflops: f64,
     /// Spatial scaling note when the measured artifact is shrunk
     /// (see python/compile/manifests.py).
@@ -28,48 +38,61 @@ pub struct LayerRun {
 /// Full network execution report.
 #[derive(Debug, Clone)]
 pub struct NetworkReport {
+    /// Network name ("vgg" | "resnet").
     pub network: String,
+    /// Implementation the layers executed under ("pallas" | "xla").
     pub implementation: String,
+    /// Per-layer measurements, in layer order.
     pub layers: Vec<LayerRun>,
+    /// Sum of per-layer best times, seconds.
     pub total_time_s: f64,
+    /// Sum of per-layer useful flops.
     pub total_flops: u64,
 }
 
 impl NetworkReport {
+    /// Whole-network throughput (total flops over total time), GFLOP/s.
     pub fn total_gflops(&self) -> f64 {
         self.total_flops as f64 / self.total_time_s / 1e9
     }
 }
 
-/// Runs network layer stacks via artifacts named
-/// `net_<network>_<layer>_<impl>` (see python/compile/manifests.py).
-pub struct NetworkRunner {
-    handle: EngineHandle,
+/// Artifact name for a network layer under a given implementation
+/// (`net_<network>_<layer>_<impl>`, see python/compile/manifests.py).
+pub fn layer_artifact_name(
+    network: &str,
+    layer: &str,
+    implementation: &str,
+) -> String {
+    format!("net_{network}_{layer}_{implementation}")
 }
 
-impl NetworkRunner {
-    pub fn new(handle: EngineHandle) -> Self {
-        Self { handle }
-    }
+/// Which layers of `network` have an artifact for `implementation`.
+pub fn available_layers(
+    store: &ArtifactStore,
+    network: &str,
+    implementation: &str,
+) -> Vec<String> {
+    let prefix = format!("net_{network}_");
+    let suffix = format!("_{implementation}");
+    store
+        .iter()
+        .filter(|m| m.name.starts_with(&prefix) && m.name.ends_with(&suffix))
+        .filter_map(|m| m.layer.as_ref().map(|l| l.name.clone()))
+        .collect()
+}
 
-    /// Artifact name for a layer under a given implementation.
-    pub fn artifact_name(network: &str, layer: &str, implementation: &str) -> String {
-        format!("net_{network}_{layer}_{implementation}")
-    }
+/// Runs network layer stacks via artifacts named
+/// `net_<network>_<layer>_<impl>` through any [`EngineClient`].
+pub struct NetworkRunner<C: EngineClient> {
+    client: C,
+}
 
-    /// Which layers of `network` have an artifact for `implementation`.
-    pub fn available_layers(
-        store: &ArtifactStore,
-        network: &str,
-        implementation: &str,
-    ) -> Vec<String> {
-        let prefix = format!("net_{network}_");
-        let suffix = format!("_{implementation}");
-        store
-            .iter()
-            .filter(|m| m.name.starts_with(&prefix) && m.name.ends_with(&suffix))
-            .filter_map(|m| m.layer.as_ref().map(|l| l.name.clone()))
-            .collect()
+impl<C: EngineClient> NetworkRunner<C> {
+    /// Wrap a client ([`EngineHandle`](super::EngineHandle), a reference
+    /// to an [`EnginePool`](super::EnginePool), ...).
+    pub fn new(client: C) -> Self {
+        Self { client }
     }
 
     /// Execute every available layer of `network` under `implementation`,
@@ -81,7 +104,7 @@ impl NetworkRunner {
         implementation: &str,
         iters: usize,
     ) -> Result<NetworkReport> {
-        let layers = Self::available_layers(store, network, implementation);
+        let layers = available_layers(store, network, implementation);
         if layers.is_empty() {
             return Err(Error::NotFound(format!(
                 "no {implementation:?} artifacts for network {network:?} \
@@ -92,13 +115,14 @@ impl NetworkRunner {
         let mut total_time = Duration::ZERO;
         let mut total_flops = 0u64;
         for layer in &layers {
-            let artifact = Self::artifact_name(network, layer, implementation);
+            let artifact =
+                layer_artifact_name(network, layer, implementation);
             let meta = store.get(&artifact)?.clone();
-            let inputs = self.handle.synth_inputs(&artifact, 42)?;
-            self.handle.warm(&artifact)?;
+            let inputs = self.client.synth_inputs(&artifact, 42)?;
+            self.client.warm(&artifact)?;
             // run_timed builds the input literals once on the engine
             // thread (EXPERIMENTS.md §Perf L3-2).
-            let (_, best) = self.handle.run_timed(&artifact, inputs, iters)?;
+            let (_, best) = self.client.run_timed(&artifact, inputs, iters)?;
             total_time += best;
             total_flops += meta.flops;
             runs.push(LayerRun {
@@ -128,7 +152,7 @@ mod tests {
     #[test]
     fn artifact_naming_matches_manifests() {
         assert_eq!(
-            NetworkRunner::artifact_name("resnet", "conv3_2", "xla"),
+            layer_artifact_name("resnet", "conv3_2", "xla"),
             "net_resnet_conv3_2_xla"
         );
     }

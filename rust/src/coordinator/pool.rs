@@ -1,0 +1,1124 @@
+//! Multi-actor engine pool: the serving scale-out layer.
+//!
+//! [`EnginePool`] spawns N backend actors (each a dedicated thread owning
+//! one [`Backend`], exactly like the single [`EngineHandle`] actor) and
+//! routes requests to them per artifact:
+//!
+//! * **Consistent-hash routing** — each artifact key hashes onto a ring
+//!   of virtual nodes, so the same artifact always lands on the same
+//!   actor while that actor is healthy.  Plan/compile caches therefore
+//!   stay hot on exactly one actor instead of being rebuilt N times, and
+//!   when an actor dies only its keys move (the ring property).
+//! * **Bounded queues + explicit backpressure** — every actor has a
+//!   bounded request queue.  [`EnginePool::try_submit_run`] returns
+//!   [`SubmitError::Busy`] instead of queueing unboundedly;
+//!   [`EnginePool::submit_run`] blocks until the queue has room.
+//! * **Least-loaded spill** — when an artifact's home queue reaches the
+//!   configured spill depth, the request spills to the least-loaded
+//!   healthy actor: affinity is a throughput optimization, never a
+//!   head-of-line blocking guarantee violation.
+//! * **Panic containment** — a backend panic poisons only its actor:
+//!   the in-flight request fails loudly, the dead actor's queued
+//!   requests drain onto the surviving actors, and routing stops
+//!   considering the dead actor.  The pool keeps serving until no
+//!   healthy actor remains.
+//!
+//! The interesting tension this layer exposes (and
+//! `benches/serving_contention.rs` measures) is *intra*-engine
+//! parallelism — the [`BlockedParams::threads`] knob each actor's kernels
+//! use — competing with *inter*-request parallelism (pool width) for the
+//! same cores.
+//!
+//! [`Backend`]: crate::runtime::Backend
+//! [`BlockedParams::threads`]: crate::blas::BlockedParams
+//! [`EngineHandle`]: super::EngineHandle
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::runtime::{
+    ArtifactStore, Backend, DefaultEngine, NativeEngine, RunOutput,
+};
+use crate::tuner::SelectionDb;
+
+use super::scheduler::{serve_request, EngineStats, Request};
+use super::EngineClient;
+
+/// Virtual ring nodes per actor: enough that key ownership is roughly
+/// balanced for small pools without making ring construction costly.
+const RING_VNODES: usize = 32;
+
+/// FNV-1a 64-bit over the key bytes, then a murmur-style finalizer.
+///
+/// Plain FNV-1a disperses the *low* bits well but barely avalanches the
+/// high bits, and ring placement is ordered by the full 64-bit value —
+/// measured on 200 sequential keys, a raw-FNV ring sent 95% of them to
+/// one of four actors.  The finalizer fixes the high bits.
+fn hash_key(key: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in key.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xc4ce_b9fe_1a85_ec53);
+    h ^= h >> 33;
+    h
+}
+
+/// Consistent-hash ring: actor indices placed at [`RING_VNODES`] pseudo-
+/// random points each; a key routes to the first point clockwise from
+/// its own hash whose actor is still alive.
+struct HashRing {
+    /// (point hash, actor index), sorted by hash.
+    points: Vec<(u64, usize)>,
+}
+
+impl HashRing {
+    fn new(actors: usize) -> Self {
+        let mut points = Vec::with_capacity(actors * RING_VNODES);
+        for a in 0..actors {
+            for v in 0..RING_VNODES {
+                points.push((hash_key(&format!("actor-{a}/vnode-{v}")), a));
+            }
+        }
+        points.sort_unstable();
+        HashRing { points }
+    }
+
+    /// First alive actor clockwise from the key's hash, or `None` when
+    /// no actor is alive.
+    fn route(&self, key: &str, alive: impl Fn(usize) -> bool) -> Option<usize> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let h = hash_key(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        for off in 0..self.points.len() {
+            let (_, actor) = self.points[(start + off) % self.points.len()];
+            if alive(actor) {
+                return Some(actor);
+            }
+        }
+        None
+    }
+}
+
+/// Why a push into a bounded queue did not happen.
+enum PushError<T> {
+    /// The queue is at its bounded depth.
+    Full(T),
+    /// The queue is closed (its actor is dead or shutting down).
+    Closed(T),
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+}
+
+/// Hand-rolled bounded MPSC queue (`Mutex` + two `Condvar`s): the
+/// blocking/backpressure substrate `std::sync::mpsc` channels do not
+/// expose (no `len`, no close-and-drain).
+struct BoundedQueue<T> {
+    depth: usize,
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    /// Mirror of `items.len()` so the router can read load without
+    /// taking the queue lock.
+    len: AtomicUsize,
+}
+
+impl<T> BoundedQueue<T> {
+    fn new(depth: usize) -> Self {
+        BoundedQueue {
+            depth,
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            len: AtomicUsize::new(0),
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    /// Non-blocking push: `Full` at the bounded depth, `Closed` after
+    /// [`BoundedQueue::close`]; the item is handed back either way.
+    fn try_push(&self, item: T) -> std::result::Result<(), PushError<T>> {
+        let mut st = self.state.lock().expect("queue lock poisoned");
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.depth {
+            return Err(PushError::Full(item));
+        }
+        st.items.push_back(item);
+        self.len.store(st.items.len(), Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push: waits while the queue is at depth; `Err(item)`
+    /// only if the queue closed while (or before) waiting.
+    fn push(&self, item: T) -> std::result::Result<(), T> {
+        let mut st = self.state.lock().expect("queue lock poisoned");
+        while !st.closed && st.items.len() >= self.depth {
+            st = self.not_full.wait(st).expect("queue lock poisoned");
+        }
+        if st.closed {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        self.len.store(st.items.len(), Ordering::Relaxed);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop: `None` only once the queue is closed *and* empty,
+    /// so closing a queue still drains everything already accepted.
+    fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().expect("queue lock poisoned");
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.len.store(st.items.len(), Ordering::Relaxed);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).expect("queue lock poisoned");
+        }
+    }
+
+    /// Close the queue: every blocked producer/consumer wakes, further
+    /// pushes fail, already-queued items remain poppable/drainable.
+    fn close(&self) {
+        let mut st = self.state.lock().expect("queue lock poisoned");
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Remove and return everything queued (used by a dying actor to
+    /// hand its backlog to the survivors).
+    fn drain(&self) -> Vec<T> {
+        let mut st = self.state.lock().expect("queue lock poisoned");
+        let items: Vec<T> = st.items.drain(..).collect();
+        self.len.store(0, Ordering::Relaxed);
+        self.not_full.notify_all();
+        items
+    }
+}
+
+/// State shared between the router (pool handle) and the actor threads.
+struct Shared {
+    queues: Vec<BoundedQueue<Request>>,
+    healthy: Vec<AtomicBool>,
+    ring: HashRing,
+    spill_depth: usize,
+    panics: AtomicUsize,
+}
+
+impl Shared {
+    fn is_healthy(&self, idx: usize) -> bool {
+        self.healthy[idx].load(Ordering::Acquire)
+    }
+
+    fn healthy_count(&self) -> usize {
+        self.healthy
+            .iter()
+            .filter(|h| h.load(Ordering::Acquire))
+            .count()
+    }
+
+    fn least_loaded(&self) -> Option<usize> {
+        (0..self.queues.len())
+            .filter(|&i| self.is_healthy(i))
+            .min_by_key(|&i| self.queues[i].len())
+    }
+
+    /// Routing decision for one request: the artifact's ring home while
+    /// its queue is under the spill depth, otherwise whichever healthy
+    /// actor is least loaded (if actually less loaded than home).
+    fn route(&self, artifact: &str) -> Option<usize> {
+        let primary = self.ring.route(artifact, |i| self.is_healthy(i))?;
+        if self.queues[primary].len() < self.spill_depth {
+            return Some(primary);
+        }
+        match self.least_loaded() {
+            Some(ll) if self.queues[ll].len() < self.queues[primary].len() => {
+                Some(ll)
+            }
+            _ => Some(primary),
+        }
+    }
+}
+
+/// Push an orphaned request from a dead actor onto the least-loaded
+/// healthy survivor.  If every survivor dies too, the request is dropped
+/// — its reply channel closes and the waiting client gets a loud error
+/// rather than a hang.
+fn redistribute(shared: &Shared, mut req: Request) {
+    for _ in 0..shared.queues.len() {
+        let Some(target) = shared.least_loaded() else {
+            return;
+        };
+        match shared.queues[target].push(req) {
+            Ok(()) => return,
+            Err(r) => req = r,
+        }
+    }
+}
+
+fn actor_main<B, F>(
+    idx: usize,
+    shared: Arc<Shared>,
+    make: F,
+    init_tx: mpsc::Sender<Result<()>>,
+) where
+    B: Backend,
+    F: FnOnce() -> Result<B>,
+{
+    let mut engine = match make() {
+        Ok(e) => {
+            let _ = init_tx.send(Ok(()));
+            e
+        }
+        Err(e) => {
+            shared.healthy[idx].store(false, Ordering::Release);
+            shared.queues[idx].close();
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    let mut stats = EngineStats::default();
+    loop {
+        let Some(req) = shared.queues[idx].pop() else {
+            // Queue closed and fully drained: graceful shutdown.
+            break;
+        };
+        let served = catch_unwind(AssertUnwindSafe(|| {
+            serve_request(&mut engine, &mut stats, req)
+        }));
+        match served {
+            Ok(true) => {}
+            Ok(false) => break,
+            Err(_) => {
+                // The backend panicked mid-request.  Its state may be
+                // poisoned, so this actor retires: the in-flight
+                // request's reply channel died with the unwind (loud
+                // error on the client), and the backlog moves to the
+                // survivors.
+                shared.panics.fetch_add(1, Ordering::Relaxed);
+                shared.healthy[idx].store(false, Ordering::Release);
+                shared.queues[idx].close();
+                for orphan in shared.queues[idx].drain() {
+                    redistribute(&shared, orphan);
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Sizing knobs for an [`EnginePool`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Number of backend actors (each owns one engine on one thread).
+    pub actors: usize,
+    /// Bounded per-actor queue depth; at this depth `try_submit` reports
+    /// [`SubmitError::Busy`] and blocking submits wait.
+    pub queue_depth: usize,
+    /// Queue depth at which routing abandons artifact affinity and
+    /// spills to the least-loaded healthy actor.  Must be in
+    /// `1..=queue_depth`.
+    pub spill_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { actors: 2, queue_depth: 32, spill_depth: 8 }
+    }
+}
+
+/// Rejection from a non-blocking submit.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Every healthy actor's queue is at its bounded depth — the
+    /// caller's backpressure signal (shed load or retry later).
+    Busy,
+    /// The request cannot be accepted at all (e.g. no healthy actors).
+    Engine(Error),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy => {
+                write!(f, "engine pool busy: every bounded queue is full")
+            }
+            SubmitError::Engine(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// A pending execution submitted to the pool.
+///
+/// Dropping the ticket abandons the result (the run still executes);
+/// [`RunTicket::wait`] blocks for it.
+pub struct RunTicket {
+    rx: mpsc::Receiver<Result<RunOutput>>,
+}
+
+impl RunTicket {
+    /// Block until the routed actor has executed the request.
+    pub fn wait(self) -> Result<RunOutput> {
+        self.rx.recv().map_err(|_| {
+            Error::Runtime(
+                "engine pool dropped the request (actor died)".into(),
+            )
+        })?
+    }
+}
+
+/// N engine actors behind a consistent-hash router with bounded queues.
+///
+/// Semantics: the same artifact always routes to the same actor while
+/// that actor is healthy (plan/compile caches build exactly once);
+/// queues are bounded, with [`EnginePool::try_submit_run`] reporting
+/// [`SubmitError::Busy`] at depth and blocking submits waiting; an
+/// overloaded home queue spills to the least-loaded healthy actor; and
+/// a backend panic retires only its actor — the in-flight request fails
+/// loudly, the backlog drains onto survivors, and the ring reroutes the
+/// dead actor's keys.
+///
+/// The pool implements [`EngineClient`], so anything written against the
+/// single-actor [`EngineHandle`](super::EngineHandle) — the network
+/// runner, the batcher, the benches — scales out without code changes.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::coordinator::{EngineClient, EnginePool, PoolConfig};
+/// use portable_kernels::util::tmp::TempDir;
+///
+/// let dir = TempDir::new("doc-pool").unwrap();
+/// std::fs::write(
+///     dir.path().join("manifest.json"),
+///     r#"{"version": 1, "artifacts": [{
+///         "name": "g4", "kind": "gemm", "impl": "pallas",
+///         "file": "g4.hlo.txt", "flops": 128, "m": 4, "n": 4, "k": 4,
+///         "inputs": [{"shape": [4, 4], "dtype": "float32"},
+///                    {"shape": [4, 4], "dtype": "float32"}],
+///         "groups": ["gemm"]}]}"#,
+/// )
+/// .unwrap();
+///
+/// let config = PoolConfig { actors: 2, ..Default::default() };
+/// let pool = EnginePool::spawn(dir.path(), config).unwrap();
+/// assert_eq!(pool.healthy_actors(), 2);
+///
+/// // "g4" always routes to the same actor, so its plan is built once.
+/// let home = pool.route_of("g4").unwrap();
+/// assert_eq!(pool.route_of("g4"), Some(home));
+///
+/// let inputs = pool.synth_inputs("g4", 7).unwrap();
+/// let out = pool.run("g4", inputs).unwrap();
+/// assert_eq!(out.outputs[0].len(), 16);
+/// pool.shutdown();
+/// ```
+pub struct EnginePool {
+    shared: Arc<Shared>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Spawn `config.actors` actors over one artifact directory with the
+    /// build's default backend, each actor opening its own engine over a
+    /// shared store clone.
+    pub fn spawn(artifact_dir: &Path, config: PoolConfig) -> Result<Self> {
+        let store = ArtifactStore::open(artifact_dir)?;
+        Self::spawn_with(config, move |_| DefaultEngine::new(store.clone()))
+    }
+
+    /// Spawn native-engine actors that all consult one shared, read-only
+    /// tuning DB at plan time — the deployment shape: run the per-host
+    /// sweep once, then every actor plans with the host-tuned
+    /// [`BlockedParams`](crate::blas::BlockedParams).
+    pub fn native_tuned(
+        store: ArtifactStore,
+        tuning: Arc<SelectionDb>,
+        config: PoolConfig,
+    ) -> Result<Self> {
+        Self::spawn_with(config, move |_| {
+            Ok(NativeEngine::with_shared_tuning(
+                store.clone(),
+                Arc::clone(&tuning),
+            ))
+        })
+    }
+
+    /// Spawn the pool with an explicit per-actor backend constructor
+    /// (`make(actor_index)` runs *on* that actor's thread, so non-`Send`
+    /// backend internals never cross threads).
+    ///
+    /// Any actor failing to spawn — OS thread-spawn failure, constructor
+    /// `Err`, constructor panic — is a loud, synchronous `Err`: the
+    /// already-spawned actors are shut down and joined before this
+    /// returns, never leaving a half-alive pool or a hung handle.
+    pub fn spawn_with<B, F>(config: PoolConfig, make: F) -> Result<Self>
+    where
+        B: Backend + 'static,
+        F: Fn(usize) -> Result<B> + Send + Clone + 'static,
+    {
+        if config.actors == 0 {
+            return Err(Error::Config(
+                "engine pool needs at least one actor".into(),
+            ));
+        }
+        if config.queue_depth == 0 {
+            return Err(Error::Config(
+                "engine pool queue_depth must be >= 1".into(),
+            ));
+        }
+        if config.spill_depth == 0 || config.spill_depth > config.queue_depth {
+            return Err(Error::Config(format!(
+                "engine pool spill_depth must be in 1..={} (got {})",
+                config.queue_depth, config.spill_depth
+            )));
+        }
+        let shared = Arc::new(Shared {
+            queues: (0..config.actors)
+                .map(|_| BoundedQueue::new(config.queue_depth))
+                .collect(),
+            healthy: (0..config.actors).map(|_| AtomicBool::new(true)).collect(),
+            ring: HashRing::new(config.actors),
+            spill_depth: config.spill_depth,
+            panics: AtomicUsize::new(0),
+        });
+        fn cleanup(shared: &Shared, joins: Vec<JoinHandle<()>>) {
+            for q in &shared.queues {
+                q.close();
+            }
+            for j in joins {
+                let _ = j.join();
+            }
+        }
+        let mut joins = Vec::with_capacity(config.actors);
+        for idx in 0..config.actors {
+            let (init_tx, init_rx) = mpsc::channel::<Result<()>>();
+            let make_i = make.clone();
+            let shared_i = Arc::clone(&shared);
+            let spawned = std::thread::Builder::new()
+                .name(format!("engine-{idx}"))
+                .spawn(move || {
+                    actor_main(idx, shared_i, move || make_i(idx), init_tx)
+                });
+            match spawned {
+                Ok(j) => joins.push(j),
+                Err(e) => {
+                    cleanup(&shared, joins);
+                    return Err(Error::Runtime(format!(
+                        "cannot spawn engine actor {idx}: {e}"
+                    )));
+                }
+            }
+            match init_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    cleanup(&shared, joins);
+                    return Err(e);
+                }
+                Err(_) => {
+                    cleanup(&shared, joins);
+                    return Err(Error::Runtime(format!(
+                        "engine actor {idx} died during init"
+                    )));
+                }
+            }
+        }
+        Ok(EnginePool { shared, joins })
+    }
+
+    /// Number of actors the pool was built with (healthy or not).
+    pub fn actors(&self) -> usize {
+        self.shared.queues.len()
+    }
+
+    /// Number of actors still serving requests.
+    pub fn healthy_actors(&self) -> usize {
+        self.shared.healthy_count()
+    }
+
+    /// Number of actors retired by a backend panic.
+    pub fn panicked_actors(&self) -> usize {
+        self.shared.panics.load(Ordering::Relaxed)
+    }
+
+    /// The artifact's current ring home (ignoring spill), or `None` when
+    /// no healthy actor remains.  Stable for a given pool while the home
+    /// actor stays healthy — the routing-determinism contract.
+    pub fn route_of(&self, artifact: &str) -> Option<usize> {
+        self.shared.ring.route(artifact, |i| self.shared.is_healthy(i))
+    }
+
+    /// Current depth of one actor's request queue.
+    pub fn queue_len(&self, idx: usize) -> usize {
+        self.shared.queues[idx].len()
+    }
+
+    fn submit(&self, artifact: &str, req: Request) -> Result<()> {
+        let mut req = req;
+        // Each retry means the routed actor died between the routing
+        // decision and the push; one attempt per actor bounds the loop.
+        for _ in 0..=self.shared.queues.len() {
+            let Some(target) = self.shared.route(artifact) else {
+                break;
+            };
+            match self.shared.queues[target].push(req) {
+                Ok(()) => return Ok(()),
+                Err(r) => req = r,
+            }
+        }
+        Err(Error::Runtime(
+            "engine pool has no healthy actors left".into(),
+        ))
+    }
+
+    fn try_submit(
+        &self,
+        artifact: &str,
+        req: Request,
+    ) -> std::result::Result<(), SubmitError> {
+        let Some(primary) = self.shared.route(artifact) else {
+            return Err(SubmitError::Engine(Error::Runtime(
+                "engine pool has no healthy actors left".into(),
+            )));
+        };
+        let mut req = match self.shared.queues[primary].try_push(req) {
+            Ok(()) => return Ok(()),
+            Err(PushError::Full(r)) | Err(PushError::Closed(r)) => r,
+        };
+        // The routed target is full (or died): offer the request to the
+        // remaining healthy actors, least-loaded first.
+        let mut others: Vec<usize> = (0..self.shared.queues.len())
+            .filter(|&i| i != primary && self.shared.is_healthy(i))
+            .collect();
+        others.sort_by_key(|&i| self.shared.queues[i].len());
+        for i in others {
+            match self.shared.queues[i].try_push(req) {
+                Ok(()) => return Ok(()),
+                Err(PushError::Full(r)) | Err(PushError::Closed(r)) => req = r,
+            }
+        }
+        if self.shared.healthy_count() == 0 {
+            return Err(SubmitError::Engine(Error::Runtime(
+                "engine pool has no healthy actors left".into(),
+            )));
+        }
+        Err(SubmitError::Busy)
+    }
+
+    /// Submit an execution without waiting for it; blocks only while the
+    /// routed queue is at its bounded depth.
+    pub fn submit_run(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> Result<RunTicket> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(name, Request::Run { name: name.into(), inputs, reply })?;
+        Ok(RunTicket { rx })
+    }
+
+    /// Non-blocking submit: [`SubmitError::Busy`] when every healthy
+    /// queue is at its bounded depth — the pool's backpressure signal.
+    pub fn try_submit_run(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+    ) -> std::result::Result<RunTicket, SubmitError> {
+        let (reply, rx) = mpsc::channel();
+        self.try_submit(
+            name,
+            Request::Run { name: name.into(), inputs, reply },
+        )?;
+        Ok(RunTicket { rx })
+    }
+
+    fn ask<T>(
+        &self,
+        artifact: &str,
+        make: impl FnOnce(mpsc::Sender<T>) -> Request,
+    ) -> Result<T> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(artifact, make(reply))?;
+        rx.recv().map_err(|_| {
+            Error::Runtime(
+                "engine pool dropped the request (actor died)".into(),
+            )
+        })
+    }
+
+    /// One actor's statistics.  Non-blocking on the submit side: fails
+    /// if the actor is dead *or* its queue is at the bounded depth —
+    /// observability must never park behind (or displace) a saturated
+    /// work queue.
+    pub fn actor_stats(&self, idx: usize) -> Result<EngineStats> {
+        if idx >= self.shared.queues.len() {
+            return Err(Error::NotFound(format!("pool actor {idx}")));
+        }
+        let (reply, rx) = mpsc::channel();
+        self.shared.queues[idx]
+            .try_push(Request::Stats { reply })
+            .map_err(|e| match e {
+                PushError::Full(_) => Error::Runtime(format!(
+                    "engine actor {idx} is saturated; stats unavailable"
+                )),
+                PushError::Closed(_) => {
+                    Error::Runtime(format!("engine actor {idx} is gone"))
+                }
+            })?;
+        rx.recv()
+            .map_err(|_| Error::Runtime(format!("engine actor {idx} died")))
+    }
+
+    /// Aggregate statistics over the surviving actors.
+    pub fn stats(&self) -> EngineStats {
+        let mut total = EngineStats::default();
+        for idx in 0..self.shared.queues.len() {
+            if let Ok(s) = self.actor_stats(idx) {
+                total.runs += s.runs;
+                total.cached_executables += s.cached_executables;
+                total.device_time += s.device_time;
+            }
+        }
+        total
+    }
+
+    /// Graceful shutdown: close every queue (accepted requests still
+    /// drain), then join every actor thread.
+    pub fn shutdown(mut self) {
+        self.shutdown_and_join();
+    }
+
+    fn shutdown_and_join(&mut self) {
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        self.shutdown_and_join();
+    }
+}
+
+impl EngineClient for EnginePool {
+    fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<RunOutput> {
+        self.ask(name, |reply| Request::Run { name: name.into(), inputs, reply })?
+    }
+
+    fn run_timed(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)> {
+        self.ask(name, |reply| Request::RunTimed {
+            name: name.into(),
+            inputs,
+            iters,
+            reply,
+        })?
+    }
+
+    fn warm(&self, name: &str) -> Result<()> {
+        self.ask(name, |reply| Request::Warm { name: name.into(), reply })?
+    }
+
+    fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        self.ask(name, |reply| Request::SynthInputs {
+            name: name.into(),
+            seed,
+            reply,
+        })?
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    // ---- pure-logic units -------------------------------------------
+
+    #[test]
+    fn ring_balances_and_covers_every_actor() {
+        let ring = HashRing::new(4);
+        let mut counts = [0usize; 4];
+        for i in 0..200 {
+            let a = ring.route(&format!("key-{i}"), |_| true).unwrap();
+            counts[a] += 1;
+        }
+        for (a, c) in counts.iter().enumerate() {
+            assert!(*c > 0, "actor {a} owns no keys: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn ring_death_moves_only_the_dead_actors_keys() {
+        let ring = HashRing::new(4);
+        let dead = 1usize;
+        for i in 0..200 {
+            let key = format!("key-{i}");
+            let before = ring.route(&key, |_| true).unwrap();
+            let after = ring.route(&key, |a| a != dead).unwrap();
+            if before == dead {
+                assert_ne!(after, dead);
+            } else {
+                assert_eq!(
+                    before, after,
+                    "{key} moved although its actor survived"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_with_no_alive_actor_routes_nowhere() {
+        let ring = HashRing::new(3);
+        assert_eq!(ring.route("anything", |_| false), None);
+    }
+
+    #[test]
+    fn bounded_queue_semantics() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.len(), 2);
+        match q.try_push(3) {
+            Err(PushError::Full(3)) => {}
+            _ => panic!("third push must report Full with the item"),
+        }
+        assert_eq!(q.pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        q.close();
+        match q.try_push(4) {
+            Err(PushError::Closed(4)) => {}
+            _ => panic!("push after close must report Closed"),
+        }
+        // Closing still drains what was accepted.
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn bounded_queue_drain_empties() {
+        let q: BoundedQueue<u32> = BoundedQueue::new(8);
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        q.close();
+        assert_eq!(q.drain(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(q.len(), 0);
+        assert_eq!(q.pop(), None);
+    }
+
+    // ---- actor-level behaviour via a controllable mock backend ------
+
+    /// Open/closed barrier: backends park in `enter_and_wait` until the
+    /// test calls `open`, and the test can wait until `n` requests are
+    /// parked — the determinism handle the concurrency tests need.
+    struct Gate {
+        state: Mutex<(usize, bool)>,
+        cv: Condvar,
+    }
+
+    impl Gate {
+        fn closed() -> Arc<Gate> {
+            Arc::new(Gate { state: Mutex::new((0, false)), cv: Condvar::new() })
+        }
+
+        fn enter_and_wait(&self) {
+            let mut st = self.state.lock().unwrap();
+            st.0 += 1;
+            self.cv.notify_all();
+            while !st.1 {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+
+        fn wait_entered(&self, n: usize) {
+            let mut st = self.state.lock().unwrap();
+            while st.0 < n {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+
+        fn open(&self) {
+            let mut st = self.state.lock().unwrap();
+            st.1 = true;
+            self.cv.notify_all();
+        }
+    }
+
+    /// Backend double: `slow-*` artifacts park on the gate, `poison-*`
+    /// artifacts panic, everything else returns immediately.  The pool
+    /// never interprets artifact names, so none of these need manifest
+    /// entries beyond an empty store.
+    struct MockBackend {
+        store: ArtifactStore,
+        gate: Arc<Gate>,
+    }
+
+    impl Backend for MockBackend {
+        fn platform(&self) -> String {
+            "mock".into()
+        }
+
+        fn store(&self) -> &ArtifactStore {
+            &self.store
+        }
+
+        fn warm(&mut self, _name: &str) -> Result<()> {
+            Ok(())
+        }
+
+        fn cached(&self) -> usize {
+            0
+        }
+
+        fn run(&mut self, name: &str, _inputs: &[Vec<f32>]) -> Result<RunOutput> {
+            if name.starts_with("slow") {
+                self.gate.enter_and_wait();
+            }
+            if name.starts_with("poison") {
+                panic!("poisoned artifact executed");
+            }
+            Ok(RunOutput {
+                outputs: vec![vec![1.0]],
+                elapsed: Duration::from_micros(1),
+            })
+        }
+    }
+
+    fn empty_store() -> (TempDir, ArtifactStore) {
+        let dir = TempDir::new("pool-mock").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": []}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        (dir, store)
+    }
+
+    fn mock_pool(
+        config: PoolConfig,
+        gate: &Arc<Gate>,
+    ) -> (TempDir, EnginePool) {
+        let (dir, store) = empty_store();
+        let gate = Arc::clone(gate);
+        let pool = EnginePool::spawn_with(config, move |_| {
+            Ok(MockBackend { store: store.clone(), gate: Arc::clone(&gate) })
+        })
+        .unwrap();
+        (dir, pool)
+    }
+
+    /// Find an artifact name with the given prefix whose ring home is
+    /// `actor` (the ring spreads prefixed names across actors, so a few
+    /// candidates always suffice).
+    fn name_on(pool: &EnginePool, prefix: &str, actor: usize) -> String {
+        for i in 0..64 {
+            let name = format!("{prefix}-{i}");
+            if pool.route_of(&name) == Some(actor) {
+                return name;
+            }
+        }
+        panic!("no {prefix}-* name routes to actor {actor}");
+    }
+
+    #[test]
+    fn try_submit_reports_busy_at_bounded_depth() {
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 1, queue_depth: 2, spill_depth: 2 };
+        let (_dir, pool) = mock_pool(config, &gate);
+
+        // One request in flight (parked on the gate), two filling the
+        // bounded queue.
+        let t0 = pool.submit_run("slow-0", vec![]).unwrap();
+        gate.wait_entered(1);
+        let t1 = pool.submit_run("work-1", vec![]).unwrap();
+        let t2 = pool.submit_run("work-2", vec![]).unwrap();
+        assert_eq!(pool.queue_len(0), 2);
+
+        // The queue is at depth: non-blocking submission must shed load,
+        // not grow the queue.
+        match pool.try_submit_run("work-3", vec![]) {
+            Err(SubmitError::Busy) => {}
+            Ok(_) => panic!("try_submit must not exceed the bounded depth"),
+            Err(e) => panic!("expected Busy, got {e}"),
+        }
+
+        gate.open();
+        assert!(t0.wait().is_ok());
+        assert!(t1.wait().is_ok());
+        assert!(t2.wait().is_ok());
+        assert_eq!(pool.stats().runs, 3);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn overloaded_home_queue_spills_to_least_loaded() {
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 1 };
+        let (_dir, pool) = mock_pool(config, &gate);
+        let slow = name_on(&pool, "slow", 0);
+
+        // First submission: actor 0 parks on the gate (queue empty).
+        let t0 = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(1);
+        // Second: queues on actor 0 (depth 1 = spill threshold).
+        let t1 = pool.submit_run(&slow, vec![]).unwrap();
+        assert_eq!(pool.queue_len(0), 1);
+        // Third: the home queue is at the spill depth, so the router
+        // must hand this to idle actor 1 — which parks on the gate too.
+        let t2 = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(2);
+
+        gate.open();
+        for t in [t0, t1, t2] {
+            assert!(t.wait().is_ok());
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn panic_is_contained_and_backlog_drains_to_survivors() {
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 8 };
+        let (_dir, pool) = mock_pool(config, &gate);
+
+        // Everything below targets whichever actor owns "poison-0".
+        let victim = pool.route_of("poison-0").unwrap();
+        let survivor = 1 - victim;
+        let slow = name_on(&pool, "slow", victim);
+        let work_a = name_on(&pool, "work", victim);
+        let work_b = name_on(&pool, "work", victim);
+
+        // Park the victim actor, then queue: poison first, real work
+        // behind it.
+        let t_slow = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(1);
+        let t_poison = pool.submit_run("poison-0", vec![]).unwrap();
+        let t_a = pool.submit_run(&work_a, vec![]).unwrap();
+        let t_b = pool.submit_run(&work_b, vec![]).unwrap();
+        assert_eq!(pool.queue_len(victim), 3);
+
+        // Release: the victim serves `slow`, panics on `poison`, and its
+        // backlog must drain onto the survivor.
+        gate.open();
+        assert!(t_slow.wait().is_ok(), "pre-panic request must succeed");
+        assert!(
+            t_poison.wait().is_err(),
+            "the panicking request must fail loudly, not hang"
+        );
+        assert!(t_a.wait().is_ok(), "queued work must drain to survivors");
+        assert!(t_b.wait().is_ok(), "queued work must drain to survivors");
+
+        assert_eq!(pool.healthy_actors(), 1);
+        assert_eq!(pool.panicked_actors(), 1);
+        // Routing now sends the victim's artifacts to the survivor.
+        assert_eq!(pool.route_of(&work_a), Some(survivor));
+        // And the pool keeps serving.
+        assert!(pool.run("after-the-fire", vec![]).is_ok());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn actor_construction_failure_is_a_loud_err_with_cleanup() {
+        let (_dir, store) = empty_store();
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 3, ..Default::default() };
+        let err = EnginePool::spawn_with(config, move |idx| {
+            if idx == 1 {
+                return Err(Error::Runtime("actor 1 refused to start".into()));
+            }
+            Ok(MockBackend { store: store.clone(), gate: Arc::clone(&gate) })
+        })
+        .err()
+        .expect("constructor failure must fail the whole spawn");
+        assert!(err.to_string().contains("refused to start"), "got: {err}");
+    }
+
+    #[test]
+    fn zero_sized_configs_rejected() {
+        let (_dir, store) = empty_store();
+        let gate = Gate::closed();
+        for config in [
+            PoolConfig { actors: 0, queue_depth: 4, spill_depth: 2 },
+            PoolConfig { actors: 2, queue_depth: 0, spill_depth: 1 },
+            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 0 },
+            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 5 },
+        ] {
+            let store = store.clone();
+            let gate = Arc::clone(&gate);
+            assert!(
+                EnginePool::spawn_with(config, move |_| {
+                    Ok(MockBackend {
+                        store: store.clone(),
+                        gate: Arc::clone(&gate),
+                    })
+                })
+                .is_err(),
+                "{config:?} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn graceful_shutdown_drains_accepted_requests() {
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 2, queue_depth: 16, spill_depth: 16 };
+        let (_dir, pool) = mock_pool(config, &gate);
+        let slow = name_on(&pool, "slow", 0);
+
+        let t_slow = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(1);
+        let tickets: Vec<RunTicket> = (0..10)
+            .map(|i| pool.submit_run(&format!("work-{i}"), vec![]).unwrap())
+            .collect();
+
+        // Shutdown closes the queues but must serve what was accepted.
+        gate.open();
+        pool.shutdown();
+        assert!(t_slow.wait().is_ok());
+        for t in tickets {
+            assert!(t.wait().is_ok(), "accepted request dropped at shutdown");
+        }
+    }
+}

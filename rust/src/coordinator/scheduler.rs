@@ -9,6 +9,10 @@
 //! constructor — construction happens *on the actor thread*, so backends
 //! whose internals are not `Send` still work.
 //!
+//! The request/serve plumbing ([`Request`], [`serve_request`]) is shared
+//! with the multi-actor [`EnginePool`](super::EnginePool): one actor is
+//! the degenerate pool, and both speak the same protocol.
+//!
 //! (The usual tokio runtime is unavailable in this offline build; the
 //! actor is pure `std::thread` + `mpsc`, which also keeps the request
 //! path allocation-free apart from the payload itself.)
@@ -21,31 +25,91 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactStore, Backend, DefaultEngine, RunOutput};
 
-enum Request {
+/// One message to an engine actor.  Every variant that expects an answer
+/// carries its own one-shot reply channel, so any number of clients can
+/// have requests in flight against the same actor.
+pub(crate) enum Request {
+    /// Execute an artifact once.
     Run {
         name: String,
         inputs: Vec<Vec<f32>>,
         reply: mpsc::Sender<Result<RunOutput>>,
     },
+    /// Execute an artifact `iters` times, best (min) time reported.
     RunTimed {
         name: String,
         inputs: Vec<Vec<f32>>,
         iters: usize,
         reply: mpsc::Sender<Result<(RunOutput, Duration)>>,
     },
+    /// Pre-compile (or pre-plan) an artifact.
     Warm {
         name: String,
         reply: mpsc::Sender<Result<()>>,
     },
+    /// Deterministic synthetic inputs for an artifact.
     SynthInputs {
         name: String,
         seed: u64,
         reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
     },
+    /// Snapshot the actor's statistics.
     Stats {
         reply: mpsc::Sender<EngineStats>,
     },
+    /// Ask the actor to exit its serve loop.
     Shutdown,
+}
+
+/// Serve one request against a backend, updating `stats`.  Returns
+/// `false` when the request asks the serve loop to stop.
+///
+/// This is the single place requests are interpreted: the
+/// [`EngineHandle`] actor and every [`EnginePool`](super::EnginePool)
+/// actor run exactly this function, so the two serving shapes cannot
+/// drift apart.
+pub(crate) fn serve_request<B: Backend>(
+    engine: &mut B,
+    stats: &mut EngineStats,
+    req: Request,
+) -> bool {
+    match req {
+        Request::Run { name, inputs, reply } => {
+            let out = engine.run(&name, &inputs);
+            if let Ok(o) = &out {
+                stats.runs += 1;
+                stats.device_time += o.elapsed;
+            }
+            stats.cached_executables = engine.cached();
+            let _ = reply.send(out);
+            true
+        }
+        Request::RunTimed { name, inputs, iters, reply } => {
+            let out = engine.run_timed(&name, &inputs, iters);
+            if let Ok((o, _)) = &out {
+                stats.runs += iters as u64;
+                stats.device_time += o.elapsed * iters as u32;
+            }
+            stats.cached_executables = engine.cached();
+            let _ = reply.send(out);
+            true
+        }
+        Request::Warm { name, reply } => {
+            let r = engine.warm(&name);
+            stats.cached_executables = engine.cached();
+            let _ = reply.send(r);
+            true
+        }
+        Request::SynthInputs { name, seed, reply } => {
+            let _ = reply.send(engine.synth_inputs(&name, seed));
+            true
+        }
+        Request::Stats { reply } => {
+            let _ = reply.send(stats.clone());
+            true
+        }
+        Request::Shutdown => false,
+    }
 }
 
 /// Coordinator-visible engine statistics.
@@ -59,7 +123,41 @@ pub struct EngineStats {
     pub device_time: Duration,
 }
 
-/// Cloneable handle to the engine actor.
+/// Cloneable handle to a single engine actor.
+///
+/// The handle is the one-actor serving shape: every request funnels
+/// through one backend thread.  For multi-actor serving with routing and
+/// backpressure, see [`EnginePool`](super::EnginePool) — both implement
+/// [`EngineClient`](super::EngineClient), so callers like
+/// [`NetworkRunner`](super::NetworkRunner) work against either.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::coordinator::EngineHandle;
+/// use portable_kernels::util::tmp::TempDir;
+///
+/// // A synthetic manifest: the native backend plans from metadata and
+/// // never opens the HLO file.
+/// let dir = TempDir::new("doc-engine").unwrap();
+/// std::fs::write(
+///     dir.path().join("manifest.json"),
+///     r#"{"version": 1, "artifacts": [{
+///         "name": "g4", "kind": "gemm", "impl": "pallas",
+///         "file": "g4.hlo.txt", "flops": 128, "m": 4, "n": 4, "k": 4,
+///         "inputs": [{"shape": [4, 4], "dtype": "float32"},
+///                    {"shape": [4, 4], "dtype": "float32"}],
+///         "groups": ["gemm"]}]}"#,
+/// )
+/// .unwrap();
+///
+/// let (handle, join) = EngineHandle::spawn(dir.path()).unwrap();
+/// let inputs = handle.synth_inputs("g4", 7).unwrap();
+/// let out = handle.run("g4", inputs).unwrap();
+/// assert_eq!(out.outputs[0].len(), 16);
+/// handle.shutdown();
+/// join.join().unwrap();
+/// ```
 #[derive(Clone)]
 pub struct EngineHandle {
     tx: mpsc::Sender<Request>,
@@ -76,7 +174,12 @@ impl EngineHandle {
 
     /// Spawn the actor with an explicit backend constructor.  The
     /// constructor runs on the actor thread (PJRT clients never cross
-    /// threads); construction errors are reported synchronously.
+    /// threads).
+    ///
+    /// Spawn failure is always a loud, synchronous `Err`: an OS-level
+    /// thread-spawn failure, a constructor that returns `Err`, and a
+    /// constructor that panics all surface here — never as a handle
+    /// whose requests silently hang.
     pub fn spawn_with<B, F>(make: F) -> Result<(Self, JoinHandle<()>)>
     where
         B: Backend + 'static,
@@ -99,41 +202,14 @@ impl EngineHandle {
                 };
                 let mut stats = EngineStats::default();
                 while let Ok(req) = rx.recv() {
-                    match req {
-                        Request::Run { name, inputs, reply } => {
-                            let out = engine.run(&name, &inputs);
-                            if let Ok(o) = &out {
-                                stats.runs += 1;
-                                stats.device_time += o.elapsed;
-                            }
-                            stats.cached_executables = engine.cached();
-                            let _ = reply.send(out);
-                        }
-                        Request::RunTimed { name, inputs, iters, reply } => {
-                            let out = engine.run_timed(&name, &inputs, iters);
-                            if let Ok((o, _)) = &out {
-                                stats.runs += iters as u64;
-                                stats.device_time += o.elapsed * iters as u32;
-                            }
-                            stats.cached_executables = engine.cached();
-                            let _ = reply.send(out);
-                        }
-                        Request::Warm { name, reply } => {
-                            let r = engine.warm(&name);
-                            stats.cached_executables = engine.cached();
-                            let _ = reply.send(r);
-                        }
-                        Request::SynthInputs { name, seed, reply } => {
-                            let _ = reply.send(engine.synth_inputs(&name, seed));
-                        }
-                        Request::Stats { reply } => {
-                            let _ = reply.send(stats.clone());
-                        }
-                        Request::Shutdown => break,
+                    if !serve_request(&mut engine, &mut stats, req) {
+                        break;
                     }
                 }
             })
-            .expect("spawn engine thread");
+            .map_err(|e| {
+                Error::Runtime(format!("cannot spawn engine thread: {e}"))
+            })?;
         init_rx
             .recv()
             .map_err(|_| Error::Runtime("engine thread died during init".into()))??;
@@ -195,5 +271,53 @@ impl EngineHandle {
     /// Ask the actor to exit (idempotent; pending requests drain first).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Request::Shutdown);
+    }
+}
+
+impl super::EngineClient for EngineHandle {
+    fn run(&self, name: &str, inputs: Vec<Vec<f32>>) -> Result<RunOutput> {
+        EngineHandle::run(self, name, inputs)
+    }
+
+    fn run_timed(
+        &self,
+        name: &str,
+        inputs: Vec<Vec<f32>>,
+        iters: usize,
+    ) -> Result<(RunOutput, Duration)> {
+        EngineHandle::run_timed(self, name, inputs, iters)
+    }
+
+    fn warm(&self, name: &str) -> Result<()> {
+        EngineHandle::warm(self, name)
+    }
+
+    fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {
+        EngineHandle::synth_inputs(self, name, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructor_error_is_a_loud_err_not_a_hang() {
+        let err = EngineHandle::spawn_with(|| -> Result<DefaultEngine> {
+            Err(Error::Runtime("backend exploded during construction".into()))
+        })
+        .err()
+        .expect("constructor failure must surface as Err");
+        assert!(err.to_string().contains("exploded"), "got: {err}");
+    }
+
+    #[test]
+    fn constructor_panic_is_a_loud_err_not_a_hang() {
+        let err = EngineHandle::spawn_with(|| -> Result<DefaultEngine> {
+            panic!("constructor panicked");
+        })
+        .err()
+        .expect("constructor panic must surface as Err");
+        assert!(err.to_string().contains("died during init"), "got: {err}");
     }
 }

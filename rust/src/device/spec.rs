@@ -23,6 +23,7 @@ pub struct DeviceSpec {
     pub name: String,
     /// Short identifier used on the CLI, e.g. "mali-g71".
     pub id: String,
+    /// Broad device class (CPU / GPU / accelerator).
     pub class: DeviceClass,
 
     // ---- Table 1 columns ----

@@ -14,7 +14,12 @@ pub enum Error {
 
     /// A kernel configuration cannot run on the given device (e.g. its
     /// local-memory tile exceeds the device's local memory).
-    Infeasible { device: String, reason: String },
+    Infeasible {
+        /// Device the configuration was rejected for.
+        device: String,
+        /// Which constraint failed.
+        reason: String,
+    },
 
     /// Artifact manifest or HLO file problems.
     Artifact(String),
@@ -25,8 +30,10 @@ pub enum Error {
     /// Unknown device, layer, or artifact name.
     NotFound(String),
 
+    /// Underlying filesystem failure.
     Io(std::io::Error),
 
+    /// Malformed JSON (manifest or selection DB).
     Json(String),
 }
 

@@ -9,6 +9,7 @@ use super::report::Report;
 /// The sweep axes the paper's subplots use.
 pub const TILES: [(u32, u32); 9] =
     [(1, 1), (1, 2), (2, 2), (2, 3), (3, 3), (3, 4), (4, 4), (4, 5), (5, 5)];
+/// The vector widths the paper's subplots sweep.
 pub const VECS: [u32; 3] = [1, 2, 4];
 
 /// Generate Figure 2's data: registers per (tile, vec_c, vec_k).

@@ -5,8 +5,11 @@
 /// One series: a glyph + (x, y) points.
 #[derive(Debug, Clone)]
 pub struct Series {
+    /// Character drawn for this series' points.
     pub glyph: char,
+    /// Legend label.
     pub label: String,
+    /// (x, y) data points.
     pub points: Vec<(f64, f64)>,
 }
 

@@ -8,13 +8,18 @@ use crate::error::Result;
 /// free-text notes (assumptions, paper expectations).
 #[derive(Debug, Clone, Default)]
 pub struct Report {
+    /// Report title (also drives the CSV file slug).
     pub title: String,
+    /// Column headers.
     pub columns: Vec<String>,
+    /// Data rows; every row is as wide as `columns`.
     pub rows: Vec<Vec<String>>,
+    /// Free-text notes rendered under the table.
     pub notes: Vec<String>,
 }
 
 impl Report {
+    /// An empty report with a title and column headers.
     pub fn new(title: &str, columns: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -24,6 +29,7 @@ impl Report {
         }
     }
 
+    /// Append a data row (must match the column count); chainable.
     pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
         assert_eq!(
             cells.len(),
@@ -35,6 +41,7 @@ impl Report {
         self
     }
 
+    /// Append a free-text note; chainable.
     pub fn note(&mut self, s: impl Into<String>) -> &mut Self {
         self.notes.push(s.into());
         self

@@ -9,14 +9,19 @@ use crate::perfmodel::{gemm_estimate, GemmProblem};
 /// One point of a roofline plot.
 #[derive(Debug, Clone)]
 pub struct RooflinePoint {
+    /// GEMM M dimension.
     pub m: u64,
+    /// GEMM N dimension.
     pub n: u64,
+    /// GEMM K dimension.
     pub k: u64,
     /// flop/byte — the x-axis.
     pub intensity: f64,
     /// GFLOP/s — the y-axis.
     pub gflops: f64,
+    /// Kernel configuration the point was modeled with.
     pub config: String,
+    /// Whether the configuration is feasible on the device.
     pub feasible: bool,
 }
 

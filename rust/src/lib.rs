@@ -7,16 +7,20 @@
 //! The paper's thesis: write **one heavily parametrized kernel** per
 //! operation (GEMM, convolution) and reduce per-device tuning to *choosing
 //! the parameter combination that performs best on that hardware*.  This
-//! crate is the request-path half of the three-layer reproduction:
+//! crate is the request-path half of the three-layer reproduction
+//! (`docs/ARCHITECTURE.md` in the repository walks the full
+//! load→plan→tune→route→execute→oracle path with a layer diagram):
 //!
 //! * **Layer 1/2 (build time, Python)** — parametrized Pallas kernels and
 //!   JAX layer graphs, AOT-lowered to `artifacts/*.hlo.txt` by
 //!   `make artifacts`.  Python never runs at request time.
 //! * **Layer 3 (this crate)** — loads the compiled artifacts and executes
-//!   them through a pluggable [`runtime::Backend`], models the paper's
+//!   them through a pluggable [`runtime::Backend`], serves them from one
+//!   engine actor or a routed pool ([`coordinator`]), models the paper's
 //!   device zoo analytically ([`device`], [`perfmodel`]), tunes
-//!   configurations per device ([`tuner`]), and reproduces every table
-//!   and figure of the paper's evaluation ([`harness`]).
+//!   configurations per device ([`tuner`], `docs/TUNING.md`), and
+//!   reproduces every table and figure of the paper's evaluation
+//!   ([`harness`]).
 //!
 //! ## Execution backends
 //!
@@ -32,11 +36,26 @@
 //!   im2col conv path).  This is how the full
 //!   load→plan→execute→oracle-check pipeline runs in the offline build,
 //!   with zero external dependencies.
-//! * [`runtime::Engine`] — the PJRT/XLA engine, gated behind the `pjrt`
+//! * `runtime::Engine` — the PJRT/XLA engine, gated behind the `pjrt`
 //!   cargo feature because the `xla` crate it drives is not available
 //!   offline (see `rust/Cargo.toml` for how to vendor it back in).
 //!
 //! [`runtime::DefaultEngine`] names whichever backend the build selected.
+//!
+//! ## Serving scale-out
+//!
+//! Backends are `&mut self` (and, for PJRT, non-`Sync`), so concurrency
+//! lives in the [`coordinator`]: a single actor thread
+//! ([`coordinator::EngineHandle`]) or a pool of them
+//! ([`coordinator::EnginePool`]) with per-artifact consistent-hash
+//! routing (plan caches build on exactly one actor), bounded queues with
+//! explicit backpressure (`try_submit_run` returns
+//! [`coordinator::SubmitError::Busy`]), least-loaded spill, and panic
+//! containment (a dead actor's backlog drains onto survivors).  Both
+//! shapes implement [`coordinator::EngineClient`], so the network
+//! runner, the batcher, and the benches scale out unchanged;
+//! `benches/serving_contention.rs` measures the resulting tension
+//! between intra-engine `threads` and pool width competing for cores.
 //!
 //! ## Parallel execution and per-host tuning
 //!
@@ -69,8 +88,10 @@
 //! | [`runtime`] | artifact manifest + `Backend` trait (`NativeEngine` default, PJRT `Engine` behind `pjrt`) |
 //! | [`blas`] | host Rust reference kernels (GEMM + im2col conv), band-parallel via `BlockedParams::threads` |
 //! | [`nn`] | VGG-16 / ResNet-50 layer tables (Tables 3 & 4) |
-//! | [`coordinator`] | backend actor, batcher, network runner |
+//! | [`coordinator`] | serving layer: engine actor + routed pool, batcher, network runner |
 //! | [`harness`] | per-figure/table report generators |
+
+#![warn(missing_docs)]
 
 pub mod blas;
 pub mod config;

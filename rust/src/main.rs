@@ -12,7 +12,9 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use portable_kernels::coordinator::{EngineHandle, NetworkRunner};
+use portable_kernels::coordinator::{
+    EngineHandle, EnginePool, NetworkRunner, PoolConfig,
+};
 use portable_kernels::device::{all_devices, device_by_name};
 use portable_kernels::harness::{
     fig_conv, fig_gemm, fig_network, fig_registers, tables, Report,
@@ -47,7 +49,10 @@ COMMANDS:
        [--strategy exhaustive|random|hillclimb] [--db PATH]
                                tune kernels for a device, write selection DB
   network [--network vgg|resnet] [--impl xla|pallas] [--iters N]
-                               run a conv stack through the backend (measured)
+          [--pool N] [--queue-depth D]
+                               run a conv stack through the backend (measured);
+                               --pool N > 1 serves it from an N-actor engine
+                               pool with per-artifact routing
   run NAME [--iters N]         execute one artifact, report GFLOP/s
   tune-measured [--group gemm|conv] [--iters N]
                                measurement-driven tuning: execute every
@@ -289,11 +294,42 @@ fn cmd_network(artifacts: &PathBuf, args: &Args) -> CliResult<()> {
     let net = args.get("network").unwrap_or("resnet").to_string();
     let implementation = args.get("impl").unwrap_or("xla").to_string();
     let iters = args.usize_or("iters", 3)?;
+    let pool_size = args.usize_or("pool", 1)?;
 
     let store = ArtifactStore::open(artifacts)?;
-    let (handle, join) = EngineHandle::spawn(artifacts)?;
-    let runner = NetworkRunner::new(handle.clone());
-    let report = runner.run_network(&store, &net, &implementation, iters)?;
+    let mut pool_note = None;
+    let report = if pool_size > 1 {
+        let queue_depth = args.usize_or("queue-depth", 32)?;
+        let config = PoolConfig {
+            actors: pool_size,
+            queue_depth,
+            spill_depth: (queue_depth / 2).max(1),
+        };
+        let pool = EnginePool::spawn(artifacts, config)?;
+        let runner = NetworkRunner::new(&pool);
+        let report = runner.run_network(&store, &net, &implementation, iters)?;
+        let per_actor: Vec<String> = (0..pool.actors())
+            .map(|i| {
+                pool.actor_stats(i)
+                    .map(|s| format!("actor {i}: {} runs", s.runs))
+                    .unwrap_or_else(|_| format!("actor {i}: dead"))
+            })
+            .collect();
+        pool_note = Some(format!(
+            "pool: {} actors ({})",
+            pool.actors(),
+            per_actor.join(", ")
+        ));
+        pool.shutdown();
+        report
+    } else {
+        let (handle, join) = EngineHandle::spawn(artifacts)?;
+        let runner = NetworkRunner::new(handle.clone());
+        let report = runner.run_network(&store, &net, &implementation, iters)?;
+        handle.shutdown();
+        let _ = join.join();
+        report
+    };
     let mut table = Report::new(
         &format!("{net} via {implementation} (measured)"),
         &["layer", "GFLOP", "time (ms)", "gflops", "scaled"],
@@ -313,9 +349,10 @@ fn cmd_network(artifacts: &PathBuf, args: &Args) -> CliResult<()> {
         report.total_gflops(),
         report.layers.len()
     ));
+    if let Some(note) = pool_note {
+        table.note(note);
+    }
     println!("{}", table.render());
-    handle.shutdown();
-    let _ = join.join();
     Ok(())
 }
 

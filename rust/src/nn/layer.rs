@@ -19,10 +19,15 @@ pub struct ConvLayer {
     pub window: u32,
     /// Spatial stride.
     pub stride: u32,
+    /// Input height.
     pub in_h: u32,
+    /// Input width.
     pub in_w: u32,
+    /// Input channels.
     pub in_c: u32,
+    /// Output channels.
     pub out_c: u32,
+    /// Padding convention.
     pub padding: Padding,
 }
 
@@ -49,6 +54,7 @@ impl ConvLayer {
         }
     }
 
+    /// Output height under the layer's padding convention.
     pub fn out_h(&self) -> u32 {
         match self.padding {
             Padding::Same => self.in_h.div_ceil(self.stride),
@@ -56,6 +62,7 @@ impl ConvLayer {
         }
     }
 
+    /// Output width under the layer's padding convention.
     pub fn out_w(&self) -> u32 {
         match self.padding {
             Padding::Same => self.in_w.div_ceil(self.stride),

@@ -31,11 +31,14 @@ const LOAD_ISSUE_COST: f64 = 24.0;
 /// One convolution problem: a layer shape at a batch size.
 #[derive(Debug, Clone)]
 pub struct ConvProblem {
+    /// The layer geometry.
     pub layer: ConvLayer,
+    /// Batch size.
     pub batch: u32,
 }
 
 impl ConvProblem {
+    /// Bundle a layer with a batch size.
     pub fn new(layer: ConvLayer, batch: u32) -> Self {
         Self { layer, batch }
     }
@@ -47,6 +50,7 @@ impl ConvProblem {
         self.layer.flops(self.batch)
     }
 
+    /// Operational intensity (flop/byte), the roofline x-axis.
     pub fn intensity(&self) -> f64 {
         self.layer.intensity(self.batch)
     }

@@ -20,12 +20,16 @@ const ONCHIP_BW_RATIO: f64 = 6.0;
 /// One GEMM problem instance (C is M x N, contraction over K).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct GemmProblem {
+    /// Rows of A and C.
     pub m: u64,
+    /// Columns of B and C.
     pub n: u64,
+    /// Contraction (inner) dimension.
     pub k: u64,
 }
 
 impl GemmProblem {
+    /// An M x N x K problem.
     pub fn new(m: u64, n: u64, k: u64) -> Self {
         Self { m, n, k }
     }

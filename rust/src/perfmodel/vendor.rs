@@ -34,6 +34,7 @@ pub enum VendorLib {
 }
 
 impl VendorLib {
+    /// Display name as the paper's figure legends spell it.
     pub fn as_str(&self) -> &'static str {
         match self {
             VendorLib::ClBlast => "clBLAST",

@@ -11,7 +11,9 @@ use crate::util::json::{self, Value};
 /// Shape + dtype of one input or output.
 #[derive(Debug, Clone)]
 pub struct IoSpec {
+    /// Dimension sizes, outermost first.
     pub shape: Vec<i64>,
+    /// Element type name as the manifest spells it (e.g. `float32`).
     pub dtype: String,
 }
 
@@ -47,16 +49,27 @@ impl IoSpec {
 /// `configs.layer_dict`).
 #[derive(Debug, Clone)]
 pub struct LayerMeta {
+    /// Layer name as the paper's tables list it (e.g. `conv3_2`).
     pub name: String,
+    /// Square filter window size.
     pub window: u32,
+    /// Spatial stride.
     pub stride: u32,
+    /// Input height.
     pub in_h: u32,
+    /// Input width.
     pub in_w: u32,
+    /// Input channels.
     pub in_c: u32,
+    /// Output channels.
     pub out_c: u32,
+    /// Output height the layer was lowered with.
     pub out_h: u32,
+    /// Output width the layer was lowered with.
     pub out_w: u32,
+    /// Padding convention, `SAME` or `VALID`.
     pub padding: String,
+    /// Useful floating-point operations of one execution.
     pub flops: u64,
 }
 
@@ -95,6 +108,7 @@ impl LayerMeta {
 /// One artifact's metadata.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// Unique artifact name (the key every runtime request uses).
     pub name: String,
     /// "gemm" | "conv".
     pub kind: String,
@@ -108,24 +122,33 @@ pub struct ArtifactMeta {
     pub flops: u64,
     /// Bytes touched at least once.
     pub bytes: Option<u64>,
+    /// Input specs, in call order.
     pub inputs: Vec<IoSpec>,
+    /// Output specs, in tuple order.
     pub outputs: Vec<IoSpec>,
+    /// Manifest groups the artifact belongs to (e.g. `gemm`, `network`).
     pub groups: Vec<String>,
-    // GEMM-specific.
+    /// GEMM rows of A/C.
     pub m: Option<u64>,
+    /// GEMM columns of B/C.
     pub n: Option<u64>,
+    /// GEMM inner (contraction) dimension.
     pub k: Option<u64>,
     /// GEMM epilogue scale on A@B (aot.py records 1.0 when unused).
     pub alpha: Option<f64>,
     /// GEMM epilogue scale on the C operand.
     pub beta: Option<f64>,
-    // Conv-specific.
+    /// Conv layer geometry (conv artifacts only).
     pub layer: Option<LayerMeta>,
+    /// Conv algorithm the artifact was lowered with (e.g. `im2col`).
     pub algorithm: Option<String>,
+    /// Conv batch size (defaults to 1 when absent).
     pub batch: Option<u32>,
     /// Conv artifact was lowered with the fused bias+ReLU epilogue
     /// (third input is the bias vector).
     pub fuse_relu: bool,
+    /// Spatial scaling note when the measured artifact is shrunk
+    /// (see python/compile/manifests.py).
     pub scaled_from: Option<String>,
 }
 
@@ -268,14 +291,17 @@ impl ArtifactStore {
         self.iter().filter(move |m| m.groups.iter().any(|g| g == group))
     }
 
+    /// Number of artifacts in the manifest.
     pub fn len(&self) -> usize {
         self.order.len()
     }
 
+    /// Whether the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.order.is_empty()
     }
 
+    /// The artifact directory this store was opened over.
     pub fn dir(&self) -> &Path {
         &self.dir
     }

@@ -1,11 +1,14 @@
 //! The execution-backend abstraction.
 //!
 //! Every engine — the pure-Rust [`NativeEngine`](super::NativeEngine) and
-//! the feature-gated PJRT [`Engine`](super::Engine) — exposes the same
+//! the feature-gated PJRT `Engine` — exposes the same
 //! load→compile→execute surface over an [`ArtifactStore`].  Everything
-//! above the runtime (the coordinator actor, the network runner, the
+//! above the runtime (the coordinator actors, the network runner, the
 //! measured tuner, the benches) is written against this trait, so the
 //! backend is a deployment decision, not an architectural one.
+//! Concurrency lives one layer up: the coordinator wraps a backend in an
+//! actor thread (`coordinator::EngineHandle`) or a whole pool of them
+//! (`coordinator::EnginePool`).
 
 use std::time::Duration;
 
@@ -45,7 +48,8 @@ impl RunOutput {
 /// Backends are deliberately `&mut self` + single-threaded — PJRT buffers
 /// are not `Sync`, and the native engine keeps the same shape so the two
 /// are interchangeable.  Concurrency is the coordinator's job: it wraps
-/// any backend in an actor thread (see `coordinator::scheduler`).
+/// any backend in an actor thread (`coordinator::EngineHandle`) or a
+/// routed pool of them (`coordinator::EnginePool`).
 pub trait Backend {
     /// Human-readable platform name (diagnostics).
     fn platform(&self) -> String;

@@ -18,7 +18,8 @@ use super::backend::{check_inputs, Backend, RunOutput};
 /// Compilation happens once per artifact (first use or [`Engine::warm`]);
 /// the request path is hash-lookup + execute.  The engine is deliberately
 /// single-threaded (PJRT buffers are not `Sync`); the coordinator wraps it
-/// in an actor thread (see `coordinator::scheduler`).
+/// in an actor thread (`coordinator::EngineHandle`) or a pool of them
+/// (`coordinator::EnginePool`).
 pub struct Engine {
     client: xla::PjRtClient,
     store: ArtifactStore,

@@ -2,15 +2,16 @@
 //! [`Backend`].
 //!
 //! `make artifacts` (Python, build time) writes `artifacts/*.hlo.txt`
-//! plus `manifest.json`; this module parses the manifest ([`artifact`])
-//! and executes its entries through one of two backends:
+//! plus `manifest.json`; this module parses the manifest into an
+//! [`ArtifactStore`] and executes its entries through one of two
+//! backends:
 //!
 //! * [`NativeEngine`] (default) — plans each artifact from its manifest
 //!   metadata and dispatches to the pure-Rust reference kernels in
 //!   [`crate::blas`] (blocked GEMM with the α/β epilogue; im2col conv
 //!   keyed on [`LayerMeta`]).  Runs everywhere, including the offline
 //!   build, with no external dependencies.
-//! * [`Engine`] (`--features pjrt`) — compiles each artifact's HLO text
+//! * `Engine` (`--features pjrt`) — compiles each artifact's HLO text
 //!   once on the PJRT CPU client and caches the executable.
 //!
 //! Both implement [`Backend`]; [`DefaultEngine`] names whichever one the

@@ -19,6 +19,7 @@
 //! knob, bit-identically to the serial path.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::blas::{conv2d_im2col, gemm_blocked, BlockedParams, Conv2dShape};
@@ -256,8 +257,10 @@ pub struct NativeEngine {
     plans: HashMap<String, Plan>,
     params: BlockedParams,
     /// Per-host tuning DB (`tuner::tune_blocked_sweep` output).  When
-    /// present, plans resolve their blocking parameters from it.
-    tuning: Option<SelectionDb>,
+    /// present, plans resolve their blocking parameters from it.  Held
+    /// behind an `Arc` so every actor of an engine pool shares one
+    /// read-only copy instead of cloning the DB per actor.
+    tuning: Option<Arc<SelectionDb>>,
     /// Platform string tuned selections are keyed under.
     device: String,
 }
@@ -291,6 +294,18 @@ impl NativeEngine {
     /// the tuned `BlockedParams`, the rest with the defaults.  This is
     /// the deployment shape: run the sweep once per host, ship the DB.
     pub fn with_tuning(store: ArtifactStore, tuning: SelectionDb) -> Self {
+        Self::with_shared_tuning(store, Arc::new(tuning))
+    }
+
+    /// Like [`NativeEngine::with_tuning`], but sharing an existing
+    /// reference-counted DB.  This is how an engine pool gives all of
+    /// its actors one read-only copy of the host selections, so every
+    /// actor plans with the same tuned `BlockedParams` at zero
+    /// per-actor memory cost.
+    pub fn with_shared_tuning(
+        store: ArtifactStore,
+        tuning: Arc<SelectionDb>,
+    ) -> Self {
         Self {
             store,
             plans: HashMap::new(),
@@ -309,7 +324,7 @@ impl NativeEngine {
 
     /// Attach (or replace) the tuning DB.  Invalidates the plan cache.
     pub fn set_tuning(&mut self, tuning: SelectionDb) {
-        self.tuning = Some(tuning);
+        self.tuning = Some(Arc::new(tuning));
         self.plans.clear();
     }
 
@@ -332,7 +347,7 @@ impl NativeEngine {
         }
         let meta = self.store.get(name)?;
         let plan =
-            build_plan(meta, self.params, self.tuning.as_ref(), &self.device)?;
+            build_plan(meta, self.params, self.tuning.as_deref(), &self.device)?;
         self.plans.insert(name.to_string(), plan.clone());
         Ok(plan)
     }
@@ -644,6 +659,30 @@ mod tests {
         let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
         let expected = gemm_naive(&a, &b, 8, 8, 8);
         assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+    }
+
+    #[test]
+    fn shared_tuning_db_is_consulted_by_every_engine() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // One Arc'd DB, many engines — the engine-pool sharing shape.
+        let tuned =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
+        let mut db = SelectionDb::new();
+        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 9.0);
+        let shared = Arc::new(db);
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut a = NativeEngine::with_shared_tuning(
+            plain.store.clone(),
+            Arc::clone(&shared),
+        );
+        let mut b = NativeEngine::with_shared_tuning(
+            plain.store.clone(),
+            Arc::clone(&shared),
+        );
+        assert_eq!(a.planned_params("g8").unwrap(), tuned);
+        assert_eq!(b.planned_params("g8").unwrap(), tuned);
+        assert_eq!(Arc::strong_count(&shared), 3, "one DB, shared by all");
     }
 
     #[test]

@@ -16,9 +16,26 @@ use crate::util::json::{self, Value};
 /// Problem-class key.  GEMM problems are bucketed by size class so nearby
 /// shapes share a selection (the paper's Fig. 5 regions A/B/C); conv
 /// problems are keyed by layer signature.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::tuner::SelectionKey;
+///
+/// // Nearby GEMM shapes bucket to one power-of-two problem class...
+/// let a = SelectionKey::gemm("host", 96, 96, 96);
+/// let b = SelectionKey::gemm("host", 128, 100, 70);
+/// assert_eq!(a, b);
+/// assert_eq!(a.op, "gemm_128x128x128");
+/// // ...but selections never leak across devices.
+/// assert_ne!(a, SelectionKey::gemm("mali-g71", 96, 96, 96));
+/// ```
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 pub struct SelectionKey {
+    /// Device / platform namespace (`host` for measured host sweeps,
+    /// paper device ids for the modeled zoo).
     pub device: String,
+    /// Problem-class identifier, e.g. `gemm_128x128x128`.
     pub op: String,
 }
 
@@ -58,13 +75,30 @@ impl SelectionKey {
 /// One stored selection.
 #[derive(Debug, Clone)]
 pub enum Selection {
-    Gemm { config: GemmConfig, gflops: f64 },
-    Conv { config: ConvConfig, gflops: f64 },
+    /// A modeled device-zoo GEMM selection.
+    Gemm {
+        /// Winning kernel configuration.
+        config: GemmConfig,
+        /// Its modeled throughput, GFLOP/s.
+        gflops: f64,
+    },
+    /// A modeled device-zoo convolution selection.
+    Conv {
+        /// Winning kernel configuration.
+        config: ConvConfig,
+        /// Its modeled throughput, GFLOP/s.
+        gflops: f64,
+    },
     /// A measured host-kernel selection: the winning
     /// [`BlockedParams`] × threads combination from a per-host sweep
     /// (`tuner::tune_blocked_sweep`), consulted by `NativeEngine` at
     /// plan time.
-    Blocked { params: BlockedParams, gflops: f64 },
+    Blocked {
+        /// Winning blocking parameters (including `threads`).
+        params: BlockedParams,
+        /// Its measured throughput, GFLOP/s.
+        gflops: f64,
+    },
 }
 
 fn blocked_to_json(p: &BlockedParams) -> Value {
@@ -140,26 +174,48 @@ fn conv_from_json(v: &Value) -> Result<ConvConfig> {
 }
 
 /// The database: ordered map for stable serialization.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::blas::BlockedParams;
+/// use portable_kernels::tuner::{SelectionDb, SelectionKey};
+///
+/// let mut db = SelectionDb::new();
+/// let key = SelectionKey::gemm("host", 96, 96, 96);
+/// let winner = BlockedParams { threads: 2, ..BlockedParams::default() };
+/// db.put_blocked(key.clone(), winner, 12.5);
+///
+/// // The same bucketed key answers lookups for nearby shapes.
+/// let (params, gflops) =
+///     db.get_blocked(&SelectionKey::gemm("host", 128, 128, 128)).unwrap();
+/// assert_eq!(params, winner);
+/// assert_eq!(gflops, 12.5);
+/// ```
 #[derive(Debug, Default, Clone)]
 pub struct SelectionDb {
     entries: BTreeMap<String, Selection>,
 }
 
 impl SelectionDb {
+    /// An empty database.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Store a modeled GEMM selection for a problem class.
     pub fn put_gemm(&mut self, key: SelectionKey, config: GemmConfig, gflops: f64) {
         self.entries
             .insert(key.as_string(), Selection::Gemm { config, gflops });
     }
 
+    /// Store a modeled convolution selection for a problem class.
     pub fn put_conv(&mut self, key: SelectionKey, config: ConvConfig, gflops: f64) {
         self.entries
             .insert(key.as_string(), Selection::Conv { config, gflops });
     }
 
+    /// Look up a modeled GEMM selection (config + GFLOP/s).
     pub fn get_gemm(&self, key: &SelectionKey) -> Option<(GemmConfig, f64)> {
         match self.entries.get(&key.as_string()) {
             Some(Selection::Gemm { config, gflops }) => Some((*config, *gflops)),
@@ -167,6 +223,7 @@ impl SelectionDb {
         }
     }
 
+    /// Look up a modeled convolution selection (config + GFLOP/s).
     pub fn get_conv(&self, key: &SelectionKey) -> Option<(ConvConfig, f64)> {
         match self.entries.get(&key.as_string()) {
             Some(Selection::Conv { config, gflops }) => Some((*config, *gflops)),
@@ -187,6 +244,7 @@ impl SelectionDb {
             .insert(key.as_string(), Selection::Blocked { params, gflops });
     }
 
+    /// Look up a measured host selection (params + GFLOP/s).
     pub fn get_blocked(
         &self,
         key: &SelectionKey,
@@ -199,10 +257,12 @@ impl SelectionDb {
         }
     }
 
+    /// Number of stored selections.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the database holds no selections.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
@@ -279,6 +339,8 @@ impl SelectionDb {
         Ok(Self { entries })
     }
 
+    /// Persist to `path` as pretty-printed JSON (atomic: write to a
+    /// sibling `.tmp`, then rename).
     pub fn save(&self, path: &Path) -> Result<()> {
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, self.to_json().to_json_pretty())?;
@@ -286,6 +348,7 @@ impl SelectionDb {
         Ok(())
     }
 
+    /// Load a database previously written by [`SelectionDb::save`].
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
         let v = json::parse(&text).map_err(|e| Error::Json(e.to_string()))?;

@@ -25,9 +25,13 @@ pub struct SweepMeasurement {
     /// Problem-class op key (the `SelectionKey::op` the winner persists
     /// under, e.g. `gemm_128x128x128`).
     pub problem: String,
+    /// Artifact the measurement executed.
     pub artifact: String,
+    /// Parameter combination this grid point timed.
     pub params: BlockedParams,
+    /// Best (minimum) execution time over the repetitions.
     pub best: Duration,
+    /// Measured throughput, GFLOP/s (from the artifact's manifest flops).
     pub gflops: f64,
 }
 
@@ -35,6 +39,7 @@ pub struct SweepMeasurement {
 /// were persisted.
 #[derive(Debug, Default)]
 pub struct BlockedSweep {
+    /// Every timed grid point, in measurement order.
     pub rows: Vec<SweepMeasurement>,
     /// Winner per problem-class op key.
     pub winners: BTreeMap<String, (BlockedParams, f64)>,
@@ -144,6 +149,51 @@ pub fn selection_key_for(
 /// [`ExhaustiveSearch`] — the measured counterpart of the modeled
 /// `tune_gemm`/`tune_conv`, and the same discipline as `tune_measured`:
 /// `iters` repetitions, minimum taken, throughput from manifest flops.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::blas::BlockedParams;
+/// use portable_kernels::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
+/// use portable_kernels::tuner::{
+///     tune_blocked_sweep, SelectionDb, SelectionKey,
+/// };
+/// use portable_kernels::util::tmp::TempDir;
+///
+/// let dir = TempDir::new("doc-sweep").unwrap();
+/// std::fs::write(
+///     dir.path().join("manifest.json"),
+///     r#"{"version": 1, "artifacts": [{
+///         "name": "g16", "kind": "gemm", "impl": "pallas",
+///         "file": "g16.hlo.txt", "flops": 8192,
+///         "m": 16, "n": 16, "k": 16,
+///         "inputs": [{"shape": [16, 16], "dtype": "float32"},
+///                    {"shape": [16, 16], "dtype": "float32"}],
+///         "groups": ["gemm"]}]}"#,
+/// )
+/// .unwrap();
+/// let store = ArtifactStore::open(dir.path()).unwrap();
+/// let mut engine = NativeEngine::new(store).unwrap();
+///
+/// let grid = [
+///     BlockedParams { threads: 1, ..BlockedParams::default() },
+///     BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 },
+/// ];
+/// let mut db = SelectionDb::new();
+/// let sweep = tune_blocked_sweep(
+///     &mut engine,
+///     "gemm",
+///     &grid,
+///     1,
+///     HOST_DEVICE,
+///     &mut |e, p| e.set_params(*p),
+///     &mut db,
+/// )
+/// .unwrap();
+/// assert_eq!(sweep.rows.len(), grid.len());
+/// let key = SelectionKey::gemm(HOST_DEVICE, 16, 16, 16);
+/// assert!(db.get_blocked(&key).is_some(), "winner persisted");
+/// ```
 pub fn tune_blocked_sweep<B: Backend>(
     engine: &mut B,
     group: &str,

@@ -22,10 +22,15 @@ use crate::runtime::Backend;
 /// One measured candidate.
 #[derive(Debug, Clone)]
 pub struct MeasuredCandidate {
+    /// Artifact that was executed.
     pub artifact: String,
+    /// Kernel configuration name, when the manifest records one.
     pub config: Option<String>,
+    /// "pallas" | "xla" (which lowering produced the artifact).
     pub implementation: String,
+    /// Best (minimum) execution time over the repetitions.
     pub best: Duration,
+    /// Measured throughput, GFLOP/s.
     pub gflops: f64,
 }
 
@@ -33,6 +38,7 @@ pub struct MeasuredCandidate {
 /// name), with all candidates retained for reporting.
 #[derive(Debug, Default)]
 pub struct MeasuredTuning {
+    /// Every candidate measured, grouped by the problem it competes in.
     pub problems: BTreeMap<String, Vec<MeasuredCandidate>>,
 }
 

@@ -5,17 +5,20 @@
 //! the hardware" — plus its stated future work ("plans to develop a
 //! machine learning system to tune these libraries"), realized as:
 //!
-//! * [`search`] — exhaustive, random, and hill-climbing strategies over a
-//!   cost function (modeled throughput or measured wall time);
-//! * [`measured`] — run competing artifacts through a backend and keep
-//!   the fastest per problem;
-//! * [`host`] — the measured per-host sweep: enumerate the
+//! * search strategies ([`ExhaustiveSearch`], [`RandomSearch`],
+//!   [`HillClimb`]) over a cost function (modeled throughput or measured
+//!   wall time);
+//! * [`tune_measured`] — run competing artifacts through a backend and
+//!   keep the fastest per problem;
+//! * [`tune_blocked_sweep`] — the measured per-host sweep: enumerate the
 //!   `BlockedParams` × `threads` grid, time every point through a
 //!   [`crate::runtime::Backend`], and persist the winners — the
-//!   parametrize → measure → select loop CI runs on every merge;
-//! * [`db`] — a persisted selection database mapping (device, problem
-//!   class) to the winning configuration, the artifact the coordinator
-//!   and `NativeEngine` consult at request/plan time.
+//!   parametrize → measure → select loop CI runs on every merge
+//!   (`docs/TUNING.md` documents the workflow end to end);
+//! * [`SelectionDb`] — a persisted selection database mapping (device,
+//!   problem class) to the winning configuration, the artifact the
+//!   coordinator and `NativeEngine` consult at request/plan time — and
+//!   which an engine pool shares read-only across all of its actors.
 
 mod db;
 mod host;

@@ -56,7 +56,9 @@ impl SearchStrategy for ExhaustiveSearch {
 /// Deterministic for a given seed.
 #[derive(Debug, Clone, Copy)]
 pub struct RandomSearch {
+    /// How many candidates to sample (capped at the space size).
     pub samples: usize,
+    /// RNG seed; identical seeds reproduce the search exactly.
     pub seed: u64,
 }
 
@@ -89,9 +91,27 @@ impl SearchStrategy for RandomSearch {
 
 /// Random restarts + greedy neighbourhood walk; the "ML-ish" strategy the
 /// paper leaves as future work, kept deterministic for reproducibility.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::tuner::{HillClimb, SearchStrategy};
+///
+/// // Climb a simple unimodal score over 100 candidates.
+/// let strategy = HillClimb { restarts: 4, seed: 7 };
+/// let (best, evals, score) = strategy
+///     .search(100, &mut |i| Some(-(i as f64 - 60.0).abs()))
+///     .unwrap();
+/// assert_eq!(best, 60);
+/// assert_eq!(score, 0.0);
+/// // ...in far fewer evaluations than the exhaustive 100.
+/// assert!(evals < 100);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct HillClimb {
+    /// Number of random restart points.
     pub restarts: usize,
+    /// RNG seed; identical seeds reproduce the search exactly.
     pub seed: u64,
 }
 

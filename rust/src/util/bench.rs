@@ -8,11 +8,17 @@ use std::time::{Duration, Instant};
 /// Statistics over a set of timed repetitions.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
+    /// Label the measurement was taken under.
     pub name: String,
+    /// Timed repetitions recorded.
     pub samples: usize,
+    /// Fastest repetition.
     pub min: Duration,
+    /// Median repetition.
     pub median: Duration,
+    /// Arithmetic mean over all repetitions.
     pub mean: Duration,
+    /// Slowest repetition.
     pub max: Duration,
 }
 

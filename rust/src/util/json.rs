@@ -11,13 +11,17 @@ use std::fmt::Write as _;
 /// A JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
     /// Integer-valued number (fits i64 exactly).
     Int(i64),
     /// Any other number.
     Float(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Array(Vec<Value>),
     /// Ordered map for deterministic serialization.
     Object(BTreeMap<String, Value>),
@@ -26,7 +30,9 @@ pub enum Value {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
+    /// Byte offset into the input where parsing failed.
     pub offset: usize,
+    /// What the parser expected or found.
     pub message: String,
 }
 
@@ -41,6 +47,7 @@ impl std::error::Error for ParseError {}
 impl Value {
     // ---- accessors ----
 
+    /// The contained string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -48,6 +55,8 @@ impl Value {
         }
     }
 
+    /// The contained number as i64 (integers, plus floats that are
+    /// exactly integral).
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Value::Int(i) => Some(*i),
@@ -58,10 +67,12 @@ impl Value {
         }
     }
 
+    /// The contained number as u64 (non-negative integers only).
     pub fn as_u64(&self) -> Option<u64> {
         self.as_i64().and_then(|i| u64::try_from(i).ok())
     }
 
+    /// The contained number as f64 (integers widen losslessly).
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Int(i) => Some(*i as f64),
@@ -70,6 +81,7 @@ impl Value {
         }
     }
 
+    /// The contained boolean, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -77,6 +89,7 @@ impl Value {
         }
     }
 
+    /// The contained elements, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -84,6 +97,7 @@ impl Value {
         }
     }
 
+    /// The contained map, if this is an object.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Object(o) => Some(o),
@@ -102,16 +116,19 @@ impl Value {
         }
     }
 
+    /// Whether this is JSON `null`.
     pub fn is_null(&self) -> bool {
         matches!(self, Value::Null)
     }
 
     // ---- construction helpers ----
 
+    /// An empty JSON object.
     pub fn object() -> Value {
         Value::Object(BTreeMap::new())
     }
 
+    /// Set a field on an object (no-op on non-objects); chainable.
     pub fn set(&mut self, key: &str, v: impl Into<Value>) -> &mut Self {
         if let Value::Object(o) = self {
             o.insert(key.to_string(), v.into());

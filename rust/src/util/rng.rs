@@ -8,11 +8,13 @@ pub struct XorShift {
 }
 
 impl XorShift {
+    /// Seeded generator; identical seeds reproduce identical streams.
     pub fn new(seed: u64) -> Self {
         // Avoid the all-zero fixed point; mix the seed.
         Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15) | 1 }
     }
 
+    /// Next raw 64-bit value.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x << 13;

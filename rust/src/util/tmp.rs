@@ -12,6 +12,7 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    /// Create a fresh directory whose name starts with `prefix`.
     pub fn new(prefix: &str) -> std::io::Result<Self> {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
@@ -26,6 +27,7 @@ impl TempDir {
         Ok(Self { path })
     }
 
+    /// The directory's path (valid until drop).
     pub fn path(&self) -> &Path {
         &self.path
     }

@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Check that the repo's markdown docs stay coherent.
+
+Two classes of check, both cheap and dependency-free (CI `docs` job):
+
+1. Every relative markdown link in docs/*.md and ROADMAP.md resolves to
+   a file that exists (external URLs are skipped).
+2. The canonical docs exist and are actually referenced from the places
+   the repo promises they are (ROADMAP.md and the crate docs in
+   rust/src/lib.rs) — so the architecture/tuning docs cannot silently
+   fall out of the entry points.
+"""
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FILES = sorted(ROOT.glob("docs/*.md")) + [ROOT / "ROADMAP.md"]
+# [text](target) with an optional #anchor; bare URLs are not links.
+LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(#[^)]*)?\)")
+
+bad = []
+
+for md in FILES:
+    if not md.exists():
+        bad.append(f"missing markdown file: {md.relative_to(ROOT)}")
+        continue
+    for match in LINK.finditer(md.read_text()):
+        target = match.group(1)
+        if re.match(r"[a-z][a-z0-9+.-]*://", target):
+            continue  # external URL: out of scope for an offline check
+        resolved = (md.parent / target).resolve()
+        if not resolved.exists():
+            bad.append(
+                f"{md.relative_to(ROOT)}: broken link -> {target}"
+            )
+
+for required in ("docs/ARCHITECTURE.md", "docs/TUNING.md"):
+    if not (ROOT / required).exists():
+        bad.append(f"missing required doc: {required}")
+
+# Tolerate missing files here: their absence is already reported above
+# (or is its own finding below), and a clean report beats a traceback.
+roadmap_path = ROOT / "ROADMAP.md"
+lib_path = ROOT / "rust" / "src" / "lib.rs"
+roadmap = roadmap_path.read_text() if roadmap_path.exists() else ""
+lib_rs = lib_path.read_text() if lib_path.exists() else ""
+for needle, haystack, where in (
+    ("docs/ARCHITECTURE.md", roadmap, "ROADMAP.md"),
+    ("docs/TUNING.md", roadmap, "ROADMAP.md"),
+    ("docs/ARCHITECTURE.md", lib_rs, "rust/src/lib.rs crate docs"),
+    ("docs/TUNING.md", lib_rs, "rust/src/lib.rs crate docs"),
+):
+    if needle not in haystack:
+        bad.append(f"{where} no longer references {needle}")
+
+if bad:
+    print("\n".join(bad))
+    sys.exit(1)
+print(f"OK: {len(FILES)} markdown files checked, all references resolve")
