@@ -5,10 +5,13 @@
 
 use std::path::Path;
 
-use portable_kernels::blas::{conv2d_im2col, Conv2dShape};
+use portable_kernels::blas::{
+    conv2d_im2col, conv2d_native, BlockedParams, Conv2dShape,
+};
+use portable_kernels::config::ConvAlgorithm;
 use portable_kernels::harness::{fig_conv, fig_registers, Report};
 use portable_kernels::runtime::{ArtifactStore, Backend, DefaultEngine};
-use portable_kernels::tuner::blocked_grid;
+use portable_kernels::tuner::{blocked_grid, conv_native_grid};
 use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::rng::XorShift;
 
@@ -100,8 +103,60 @@ fn host_blocked() {
         .expect("write csv");
 }
 
+/// Measured host anchor for the *algorithm* axis: the same 3×3/s1 layer
+/// through every native algorithm × config × threads candidate of the
+/// tuner's conv grid — Fig. 3's "the winning algorithm flips" story,
+/// measured on the host with no artifacts needed.
+fn host_algorithms() {
+    let s = Conv2dShape::same(2, 32, 32, 16, 32, 3, 1);
+    let flops = 2 * (s.batch * s.out_h * s.out_w * s.out_c
+        * s.window * s.window * s.in_c) as u64;
+    let mut rng = XorShift::new(13);
+    let x = rng.f32_vec(s.input_elems());
+    let f = rng.f32_vec(s.filter_elems());
+
+    let mut table = Report::new(
+        "host conv algorithms 2x32x32x16->32 across the tuner grid \
+         (best of 3)",
+        &["algorithm", "config", "ms", "effective GF/s"],
+    );
+    let mut default_gf = 0.0f64;
+    let mut best: Option<(String, f64)> = None;
+    for cand in conv_native_grid(true, &[1, 2, 0]) {
+        let stats = bench(&cand.name(), 1, 3, || {
+            black_box(conv2d_native(&x, &f, &s, &cand.config, &cand.blocked));
+        });
+        let gf = stats.gflops(flops);
+        if cand.config.algorithm == ConvAlgorithm::Im2col
+            && cand.blocked == BlockedParams::default()
+        {
+            default_gf = gf;
+        }
+        if best.as_ref().map(|(_, g)| gf > *g).unwrap_or(true) {
+            best = Some((cand.name(), gf));
+        }
+        table.row(vec![
+            cand.config.algorithm.to_string(),
+            cand.name(),
+            format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+            format!("{gf:.2}"),
+        ]);
+    }
+    println!("\n{}", table.render());
+    if let Some((name, gf)) = best {
+        println!(
+            "algorithm winner: {name} at {gf:.2} GF/s \
+             (default im2col: {default_gf:.2} GF/s)"
+        );
+    }
+    table
+        .save_csv(Path::new("reports/conv_algo_host.csv"))
+        .expect("write csv");
+}
+
 fn main() {
     modeled();
     host_blocked();
+    host_algorithms();
     measured();
 }

@@ -5,8 +5,41 @@
 //! Run: `cargo bench --bench rust_blas`.
 
 use portable_kernels::blas::{gemm_blocked, gemm_naive, BlockedParams};
+use portable_kernels::config::micro_kernel_shapes;
 use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::rng::XorShift;
+
+/// The macro-generated micro-kernel registry end to end: one
+/// representative blocking, every monomorphized `(mr, nr)` shape — the
+/// widened register-tile axis the tuner now sweeps.
+fn registry_sweep() {
+    let n = 256usize;
+    let mut rng = XorShift::new(0x5e6);
+    let a = rng.f32_vec(n * n);
+    let b = rng.f32_vec(n * n);
+    let flops = 2 * (n as u64).pow(3);
+    println!("== micro-kernel registry sweep ({n}^3, serial) ==");
+    for &(mr, nr) in micro_kernel_shapes() {
+        let params = BlockedParams {
+            bm: 64,
+            bn: 64,
+            bk: 64,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let s = bench(
+            &format!("registry {n}^3 {}", params.name()),
+            1,
+            3,
+            || {
+                black_box(gemm_blocked(&a, &b, n, n, n, &params));
+            },
+        );
+        println!("{}", s.line(Some(flops)));
+    }
+    println!();
+}
 
 fn main() {
     for &n in &[64usize, 128, 256, 512] {
@@ -43,4 +76,5 @@ fn main() {
         }
         println!();
     }
+    registry_sweep();
 }

@@ -98,6 +98,7 @@ fn run_cell(
         actors: pool_size,
         queue_depth: QUEUE_DEPTH,
         spill_depth: (QUEUE_DEPTH / 2).max(1),
+        ..Default::default()
     };
     let actor_store = store.clone();
     let params = BlockedParams { threads, ..BlockedParams::default() };

@@ -1,29 +1,38 @@
 //! Synthetic load generator for the multi-actor serving layer.
 //!
 //! Builds a synthetic manifest zoo (mixed GEMM + conv shapes), spawns an
-//! `EnginePool` per configured size, and hammers it from M closed-loop
-//! client threads, reporting throughput and latency percentiles per pool
-//! size — the contention workload where inter-request parallelism (pool
-//! width) and intra-engine parallelism (the `threads` kernel knob)
-//! compete for the same cores.
+//! `EnginePool` per configured size, and drives it either from M
+//! **closed-loop** client threads (each waits for its response before
+//! issuing the next request) or in **open-loop** mode (`--open-loop
+//! RATE`: arrivals at a fixed rate regardless of completions, submitted
+//! through `try_submit_run` so overload sheds as `Busy` instead of
+//! queueing unboundedly).  Reports throughput, latency percentiles, and
+//! — in open-loop mode — the shed rate, the pool's backpressure signal
+//! under a load it cannot absorb.
 //!
 //! ```sh
 //! cargo run --release --example serve_loadgen                  # sweep
 //! cargo run --release --example serve_loadgen -- --smoke       # CI gate
 //! cargo run --release --example serve_loadgen -- \
 //!     --pools 1,2,4 --clients 8 --requests 60 --threads 1 --out reports
+//! cargo run --release --example serve_loadgen -- \
+//!     --open-loop 500 --pools 1,2 --requests 100   # 500 arrivals/s
 //! ```
 //!
-//! `--smoke` runs pool sizes 1 and 2 on the contention workload and
-//! **exits non-zero unless pool(2) throughput >= --assert-speedup ×
-//! pool(1)** (default 1.0) — the CI `serve-smoke` contract.  All modes
-//! write `<out>/serve_loadgen.csv`.
+//! `--smoke` runs pool sizes 1 and 2 on the closed-loop contention
+//! workload and **exits non-zero unless pool(2) throughput >=
+//! --assert-speedup × pool(1)** (default 1.0) — the CI `serve-smoke`
+//! contract.  All modes write `<out>/serve_loadgen.csv`, with a `mode`
+//! column and shed accounting (always 0 for closed-loop rows).
 
 use std::path::{Path, PathBuf};
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use portable_kernels::blas::BlockedParams;
-use portable_kernels::coordinator::{EngineClient, EnginePool, PoolConfig};
+use portable_kernels::coordinator::{
+    EngineClient, EnginePool, PoolConfig, RunTicket, SubmitError,
+};
 use portable_kernels::runtime::{ArtifactStore, NativeEngine};
 use portable_kernels::util::rng::XorShift;
 use portable_kernels::util::tmp::TempDir;
@@ -79,11 +88,18 @@ fn write_zoo(dir: &Path) {
 
 /// One measured cell of the sweep.
 struct Cell {
+    /// "closed" (M waiting clients) or "open" (fixed arrival rate).
+    mode: &'static str,
     pool: usize,
     clients: usize,
     threads: usize,
     queue_depth: usize,
+    /// Arrivals (open loop) or issued requests (closed loop).
     requests: usize,
+    /// Open-loop target arrival rate (0 for closed loop).
+    target_rps: f64,
+    /// Arrivals rejected with `Busy` (always 0 for closed loop).
+    shed: usize,
     wall_s: f64,
     rps: f64,
     p50_ms: f64,
@@ -92,18 +108,30 @@ struct Cell {
 
 impl Cell {
     fn csv_header() -> &'static str {
-        "pool,clients,threads,queue_depth,requests,wall_s,throughput_rps,\
-         p50_ms,p95_ms"
+        "mode,pool,clients,threads,queue_depth,requests,target_rps,shed,\
+         shed_rate,wall_s,throughput_rps,p50_ms,p95_ms"
+    }
+
+    fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.requests as f64
+        }
     }
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{:.6},{:.2},{:.4},{:.4}",
+            "{},{},{},{},{},{},{:.2},{},{:.4},{:.6},{:.2},{:.4},{:.4}",
+            self.mode,
             self.pool,
             self.clients,
             self.threads,
             self.queue_depth,
             self.requests,
+            self.target_rps,
+            self.shed,
+            self.shed_rate(),
             self.wall_s,
             self.rps,
             self.p50_ms,
@@ -135,6 +163,7 @@ fn run_cell(
         actors: pool_size,
         queue_depth,
         spill_depth: (queue_depth / 2).max(1),
+        ..Default::default()
     };
     let actor_store = store.clone();
     let params = BlockedParams { threads, ..BlockedParams::default() };
@@ -183,13 +212,129 @@ fn run_cell(
     latencies.sort();
     let requests = clients * requests_per_client;
     Ok(Cell {
+        mode: "closed",
         pool: pool_size,
         clients,
         threads,
         queue_depth,
         requests,
+        target_rps: 0.0,
+        shed: 0,
         wall_s: wall,
         rps: requests as f64 / wall,
+        p50_ms: percentile_ms(&latencies, 0.50),
+        p95_ms: percentile_ms(&latencies, 0.95),
+    })
+}
+
+/// Drive one open-loop cell: arrivals at a fixed `rate` (requests/s)
+/// submitted through `try_submit_run` — the non-blocking, backpressured
+/// path — with `Busy` rejections counted as shed load rather than
+/// queued.  `collectors` threads wait on the accepted tickets so
+/// completion latency is measured without the dispatcher ever blocking.
+fn run_cell_open(
+    store: &ArtifactStore,
+    pool_size: usize,
+    collectors: usize,
+    threads: usize,
+    queue_depth: usize,
+    arrivals: usize,
+    rate: f64,
+) -> Result<Cell, Box<dyn std::error::Error>> {
+    let config = PoolConfig {
+        actors: pool_size,
+        queue_depth,
+        spill_depth: (queue_depth / 2).max(1),
+        ..Default::default()
+    };
+    let actor_store = store.clone();
+    let params = BlockedParams { threads, ..BlockedParams::default() };
+    let pool = EnginePool::spawn_with(config, move |_| {
+        Ok(NativeEngine::with_params(actor_store.clone(), params))
+    })?;
+
+    let names: Vec<String> = store.iter().map(|m| m.name.clone()).collect();
+    let mut inputs: Vec<Vec<Vec<f32>>> = Vec::with_capacity(names.len());
+    for name in &names {
+        inputs.push(pool.synth_inputs(name, 17)?);
+        pool.warm(name)?;
+    }
+
+    let mut shed = 0usize;
+    let mut latencies: Vec<Duration> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> Result<(), Box<dyn std::error::Error>> {
+        // One shared FIFO of accepted tickets: whichever collector is
+        // free takes the oldest outstanding ticket.  (Round-robin
+        // pre-assignment would park fast tickets behind a slow one on
+        // the same collector and inflate the recorded percentiles; with
+        // a shared queue a ticket only waits when *every* collector is
+        // busy on an older ticket, which is the FIFO-optimal order.)
+        let (tx, rx) = mpsc::channel::<(RunTicket, Instant)>();
+        let rx = std::sync::Mutex::new(rx);
+        let mut handles = Vec::new();
+        for _ in 0..collectors.max(1) {
+            let rx = &rx;
+            handles.push(s.spawn(move || {
+                let mut lat = Vec::new();
+                loop {
+                    // Holding the lock across recv is intended: at most
+                    // one collector parks on an empty queue; the rest
+                    // queue on the mutex and each wakes for the next
+                    // ticket as soon as it is free.
+                    let msg = rx.lock().expect("collector lock").recv();
+                    match msg {
+                        Ok((ticket, submitted)) => {
+                            ticket.wait().expect("accepted request failed");
+                            lat.push(submitted.elapsed());
+                        }
+                        Err(_) => break,
+                    }
+                }
+                lat
+            }));
+        }
+        let mut rng = XorShift::new(0x0bea);
+        for i in 0..arrivals {
+            // Fixed arrival schedule, independent of completions — the
+            // defining property of an open loop.
+            let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+            let idx = (rng.next_u64() % names.len() as u64) as usize;
+            match pool.try_submit_run(&names[idx], inputs[idx].clone()) {
+                Ok(ticket) => {
+                    tx.send((ticket, Instant::now()))
+                        .expect("collector gone");
+                }
+                Err(SubmitError::Busy) => shed += 1,
+                Err(SubmitError::Engine(e)) => return Err(e.into()),
+            }
+        }
+        drop(tx);
+        for h in handles {
+            latencies.extend(h.join().expect("collector panicked"));
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    pool.shutdown();
+
+    latencies.sort();
+    let served = arrivals - shed;
+    Ok(Cell {
+        mode: "open",
+        pool: pool_size,
+        clients: collectors,
+        threads,
+        queue_depth,
+        requests: arrivals,
+        target_rps: rate,
+        shed,
+        wall_s: wall,
+        rps: served as f64 / wall,
         p50_ms: percentile_ms(&latencies, 0.50),
         p95_ms: percentile_ms(&latencies, 0.95),
     })
@@ -214,6 +359,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut out_dir = PathBuf::from("reports");
     let mut smoke = false;
     let mut assert_speedup: Option<f64> = None;
+    let mut open_loop: Option<f64> = None;
 
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -231,12 +377,19 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             "--assert-speedup" => {
                 assert_speedup = Some(value("--assert-speedup")?.parse()?)
             }
+            "--open-loop" => {
+                let rate: f64 = value("--open-loop")?.parse()?;
+                if rate <= 0.0 || !rate.is_finite() {
+                    return Err("--open-loop needs a positive rate".into());
+                }
+                open_loop = Some(rate);
+            }
             other => {
                 return Err(format!(
                     "unknown argument {other:?}; usage: serve_loadgen \
                      [--pools 1,2,..] [--clients M] [--requests R] \
                      [--threads T] [--depth D] [--out DIR] [--smoke] \
-                     [--assert-speedup X]"
+                     [--assert-speedup X] [--open-loop RATE]"
                 )
                 .into())
             }
@@ -245,7 +398,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if smoke {
         // The CI contract: pool sizes 1 and 2 on one contention
         // workload, serial kernels so pool width is the only
-        // parallelism axis.
+        // parallelism axis.  The contract is closed-loop by definition.
+        if open_loop.is_some() {
+            return Err("--smoke and --open-loop are exclusive".into());
+        }
         pools = vec![1, 2];
         threads = 1;
     }
@@ -253,22 +409,49 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let zoo = TempDir::new("serve-loadgen")?;
     write_zoo(zoo.path());
     let store = ArtifactStore::open(zoo.path())?;
-    println!(
-        "== serve_loadgen: {} artifacts, {clients} clients x {requests} \
-         requests, threads={threads}, pools {pools:?} ==",
-        store.len()
-    );
+    match open_loop {
+        Some(rate) => println!(
+            "== serve_loadgen (open loop): {} artifacts, {} arrivals at \
+             {rate} req/s, threads={threads}, pools {pools:?} ==",
+            store.len(),
+            clients * requests
+        ),
+        None => println!(
+            "== serve_loadgen: {} artifacts, {clients} clients x \
+             {requests} requests, threads={threads}, pools {pools:?} ==",
+            store.len()
+        ),
+    }
 
     let mut cells: Vec<Cell> = Vec::new();
     for &pool_size in &pools {
-        let cell = run_cell(
-            &store, pool_size, clients, threads, queue_depth, requests,
-        )?;
+        let cell = match open_loop {
+            Some(rate) => run_cell_open(
+                &store,
+                pool_size,
+                clients,
+                threads,
+                queue_depth,
+                clients * requests,
+                rate,
+            )?,
+            None => run_cell(
+                &store, pool_size, clients, threads, queue_depth, requests,
+            )?,
+        };
         println!(
             "pool={:<2} threads={threads}: {:>8.1} req/s  p50 {:>7.2} ms  \
-             p95 {:>7.2} ms  (wall {:.2} s, {} requests)",
-            cell.pool, cell.rps, cell.p50_ms, cell.p95_ms, cell.wall_s,
-            cell.requests
+             p95 {:>7.2} ms  shed {:>4} ({:>5.1}%)  (wall {:.2} s, {} \
+             {})",
+            cell.pool,
+            cell.rps,
+            cell.p50_ms,
+            cell.p95_ms,
+            cell.shed,
+            cell.shed_rate() * 100.0,
+            cell.wall_s,
+            cell.requests,
+            if cell.mode == "open" { "arrivals" } else { "requests" }
         );
         cells.push(cell);
     }

@@ -7,9 +7,13 @@
 //!    analytic model and show the winning parameters differ per device —
 //!    the paper's core portability workflow.
 //! 2. **Measured**: the real per-host sweep.  Enumerate the
-//!    `BlockedParams` × `threads` grid, execute every point through
-//!    `NativeEngine` via `Backend::run_timed`, persist the winners into
-//!    a `SelectionDb`, and prove the engine consults it at plan time.
+//!    `BlockedParams` × `threads` grid for GEMM and the
+//!    `ConvAlgorithm × ConvConfig × threads` grid for convolutions
+//!    (tiled vs im2col vs winograd — the paper's §4.1 algorithm axis),
+//!    execute every point through `NativeEngine` via
+//!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
+//!    and prove the engine consults it — including the chosen
+//!    algorithm — at plan time.
 //!
 //! ```sh
 //! cargo run --release --example tune_device              # full
@@ -25,16 +29,16 @@
 use std::path::{Path, PathBuf};
 
 use portable_kernels::blas::BlockedParams;
-use portable_kernels::config::GemmConfig;
+use portable_kernels::config::{ConvAlgorithm, ConvConfig, GemmConfig};
 use portable_kernels::device::device_by_name;
 use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
 use portable_kernels::runtime::{
     ArtifactStore, Backend, NativeEngine, HOST_DEVICE,
 };
 use portable_kernels::tuner::{
-    blocked_grid, selection_key_for, tune_blocked_sweep, tune_conv,
-    tune_gemm, BlockedSweep, ExhaustiveSearch, HillClimb, SelectionDb,
-    SelectionKey,
+    blocked_grid, conv_native_grid, selection_key_for, tune_blocked_sweep,
+    tune_conv, tune_conv_native_sweep, tune_gemm, BlockedSweep,
+    ConvCandidate, ExhaustiveSearch, HillClimb, SelectionDb, SelectionKey,
 };
 use portable_kernels::util::json::Value;
 use portable_kernels::util::tmp::TempDir;
@@ -230,7 +234,9 @@ fn sweep_store(
     Ok((Some(dir), store))
 }
 
-/// The measured half: sweep, persist, prove the engine consults the DB.
+/// The measured half: sweep GEMM over `BlockedParams × threads` and conv
+/// over `ConvAlgorithm × ConvConfig × threads`, persist, prove the
+/// engine consults the DB — algorithm included — at plan time.
 fn measured_host_sweep(
     quick: bool,
     out_dir: &Path,
@@ -244,36 +250,69 @@ fn measured_host_sweep(
     let threads: &[usize] =
         if quick { &[1, 2] } else { &[1, 2, 4, 0] };
     let grid = blocked_grid(quick, threads);
+    let conv_grid = conv_native_grid(quick, threads);
     let iters = if quick { 3 } else { 5 };
     println!(
-        "grid: {} BlockedParams x threads points, {} iters each",
+        "gemm grid: {} BlockedParams x threads points; conv grid: {} \
+         algorithm x config x threads points; {} iters each",
         grid.len(),
+        conv_grid.len(),
         iters
     );
 
     let mut db = SelectionDb::new();
-    let mut sweeps: Vec<BlockedSweep> = Vec::new();
-    for group in ["gemm", "conv"] {
-        let sweep = tune_blocked_sweep(
-            &mut engine,
-            group,
-            &grid,
-            iters,
-            HOST_DEVICE,
-            &mut |e, p| e.set_params(*p),
-            &mut db,
-        )?;
-        for (op, (params, gflops)) in &sweep.winners {
-            println!(
-                "  {op:<28} -> {:<22} {gflops:>8.2} GF/s",
-                params.name()
-            );
-        }
-        sweeps.push(sweep);
+    let gemm_sweep: BlockedSweep = tune_blocked_sweep(
+        &mut engine,
+        "gemm",
+        &grid,
+        iters,
+        HOST_DEVICE,
+        &mut |e, p| e.set_params(*p),
+        &mut db,
+    )?;
+    for (op, (params, gflops)) in &gemm_sweep.winners {
+        println!("  {op:<28} -> {:<26} {gflops:>8.2} GF/s", params.name());
+    }
+    let conv_sweep = tune_conv_native_sweep(
+        &mut engine,
+        "conv",
+        &conv_grid,
+        iters,
+        HOST_DEVICE,
+        &mut |e, c| e.set_conv_params(c.config, c.blocked),
+        &mut db,
+    )?;
+    for (op, (cand, gflops)) in &conv_sweep.winners {
+        println!(
+            "  {op:<28} -> [{}] {:<26} {gflops:>8.2} GF/s",
+            cand.config.algorithm,
+            cand.name()
+        );
     }
 
     if db.is_empty() {
         return Err("sweep produced an empty tuning DB".into());
+    }
+    // The algorithm axis must actually have been swept: every 3x3/s1
+    // conv problem measures all three native algorithms.
+    for op in conv_sweep.winners.keys() {
+        let algs = conv_sweep.algorithms_for(op);
+        if op.starts_with("conv_3x3s1") {
+            for want in [
+                ConvAlgorithm::Im2col,
+                ConvAlgorithm::Tiled,
+                ConvAlgorithm::Winograd,
+            ] {
+                if !algs.contains(&want) {
+                    return Err(format!(
+                        "{op}: algorithm {want} was never measured \
+                         ({algs:?}) — the algorithm axis collapsed"
+                    )
+                    .into());
+                }
+            }
+        }
+        println!("  {op}: measured algorithms {algs:?}");
     }
 
     // Persist + reload: the DB a deployment ships.
@@ -288,7 +327,7 @@ fn measured_host_sweep(
 
     // Prove plan-time consultation: a fresh engine over the same store,
     // with the reloaded DB attached, must plan every swept artifact with
-    // the persisted winner.
+    // the persisted winner — for conv problems including the algorithm.
     let mut tuned_engine =
         NativeEngine::with_tuning(engine.store().clone(), loaded.clone());
     let names: Vec<String> =
@@ -310,37 +349,99 @@ fn measured_host_sweep(
             }
             println!("  plan({name}) consults DB -> {}", got.name());
         }
-    }
-
-    // BENCH_ci.json: tuned vs default per problem.  The default config
-    // is always in the grid, so tuned >= default is an invariant of the
-    // argmax, not a flaky timing assertion.
-    let default = BlockedParams::default();
-    let mut problems = Value::object();
-    let mut worst_ratio = f64::INFINITY;
-    for sweep in &sweeps {
-        for (op, (params, tuned_gf)) in &sweep.winners {
-            let default_gf =
-                sweep.gflops_for(op, &default).unwrap_or(0.0);
-            if *tuned_gf < default_gf {
+        if let Some((want_cfg, want_blocked, _)) =
+            loaded.get_conv_native(&key)
+        {
+            let got_cfg = tuned_engine
+                .planned_conv(name)?
+                .ok_or_else(|| format!("{name}: no conv plan"))?;
+            let got_blocked = tuned_engine.planned_params(name)?;
+            if got_cfg != want_cfg || got_blocked != want_blocked {
                 return Err(format!(
-                    "{op}: tuned {tuned_gf:.2} GF/s below default \
-                     {default_gf:.2} GF/s"
+                    "{name}: engine planned [{}] {} but the tuned \
+                     selection is [{}] {}",
+                    got_cfg.algorithm,
+                    got_cfg.name(),
+                    want_cfg.algorithm,
+                    want_cfg.name()
                 )
                 .into());
             }
-            let mut entry = Value::object();
-            entry
-                .set("default_gflops", default_gf)
-                .set("tuned_gflops", *tuned_gf)
-                .set("tuned_config", params.name());
-            if default_gf > 0.0 {
-                let ratio = tuned_gf / default_gf;
-                entry.set("speedup", ratio);
-                worst_ratio = worst_ratio.min(ratio);
-            }
-            problems.set(op, entry);
+            println!(
+                "  plan({name}) consults DB -> algorithm {} ({})",
+                got_cfg.algorithm,
+                got_cfg.name()
+            );
         }
+    }
+
+    // BENCH_ci.json: tuned vs default per problem.  The default configs
+    // are always in the grids, so tuned >= default is an invariant of
+    // the argmax, not a flaky timing assertion.  Conv entries carry the
+    // chosen-algorithm column.
+    let default = BlockedParams::default();
+    let conv_default = ConvCandidate {
+        config: ConvConfig::im2col(),
+        blocked: BlockedParams::default(),
+    };
+    let mut problems = Value::object();
+    let mut worst_ratio = f64::INFINITY;
+    let add_problem = |op: &str,
+                           tuned_gf: f64,
+                           default_gf: f64,
+                           tuned_config: String,
+                           algorithm: Option<&str>,
+                           problems: &mut Value,
+                           worst_ratio: &mut f64|
+     -> Result<(), Box<dyn std::error::Error>> {
+        if tuned_gf < default_gf {
+            return Err(format!(
+                "{op}: tuned {tuned_gf:.2} GF/s below default \
+                 {default_gf:.2} GF/s"
+            )
+            .into());
+        }
+        let mut entry = Value::object();
+        entry
+            .set("default_gflops", default_gf)
+            .set("tuned_gflops", tuned_gf)
+            .set("tuned_config", tuned_config);
+        if let Some(alg) = algorithm {
+            entry.set("algorithm", alg);
+        }
+        if default_gf > 0.0 {
+            let ratio = tuned_gf / default_gf;
+            entry.set("speedup", ratio);
+            *worst_ratio = worst_ratio.min(ratio);
+        }
+        problems.set(op, entry);
+        Ok(())
+    };
+    for (op, (params, tuned_gf)) in &gemm_sweep.winners {
+        let default_gf =
+            gemm_sweep.gflops_for(op, &default).unwrap_or(0.0);
+        add_problem(
+            op,
+            *tuned_gf,
+            default_gf,
+            params.name(),
+            None,
+            &mut problems,
+            &mut worst_ratio,
+        )?;
+    }
+    for (op, (cand, tuned_gf)) in &conv_sweep.winners {
+        let default_gf =
+            conv_sweep.gflops_for(op, &conv_default).unwrap_or(0.0);
+        add_problem(
+            op,
+            *tuned_gf,
+            default_gf,
+            cand.name(),
+            Some(cand.config.algorithm.as_str()),
+            &mut problems,
+            &mut worst_ratio,
+        )?;
     }
     let mut bench = Value::object();
     bench
@@ -348,6 +449,7 @@ fn measured_host_sweep(
         .set("device", HOST_DEVICE)
         .set("mode", mode)
         .set("grid_points", grid.len())
+        .set("conv_grid_points", conv_grid.len())
         .set("iters", iters)
         .set("problems", problems);
     let bench_path = out_dir.join("BENCH_ci.json");
@@ -356,6 +458,9 @@ fn measured_host_sweep(
     if worst_ratio.is_finite() {
         println!("worst tuned/default speedup: {worst_ratio:.2}x");
     }
-    println!("OK: tuned >= default for every problem; DB consulted at plan time");
+    println!(
+        "OK: all conv algorithms swept; tuned >= default for every \
+         problem; DB (incl. algorithm) consulted at plan time"
+    );
     Ok(())
 }

@@ -47,7 +47,81 @@ impl BlockedParams {
             self.bm, self.bn, self.bk, self.mr, self.nr, self.threads
         )
     }
+
+    /// Whether this `(mr, nr)` micro-tile has a monomorphized kernel in
+    /// the registry (see [`MICRO_KERNEL_SHAPES`]).  Other shapes are
+    /// still correct — they run the generic ragged-edge kernel for every
+    /// tile — but leave register-tiling throughput on the table, so the
+    /// tuner's grids stick to registry shapes.
+    pub fn is_monomorphized(&self) -> bool {
+        MICRO_KERNEL_SHAPES.contains(&(self.mr, self.nr))
+    }
 }
+
+/// Generate the monomorphized micro-kernel registry: the public list of
+/// `(mr, nr)` register-tile shapes with a fixed-trip-count kernel
+/// ([`MICRO_KERNEL_SHAPES`]) and the dispatch that binds a full tile to
+/// its monomorphized instantiation (ragged edges and unregistered shapes
+/// take the generic kernel).  One macro invocation is the single source
+/// of truth: the tuner's grids ([`crate::config::micro_kernel_shapes`])
+/// and this dispatch can never disagree about which shapes are "fast".
+macro_rules! micro_kernel_registry {
+    ($(($mr:literal, $nr:literal)),+ $(,)?) => {
+        /// Every `(mr, nr)` register micro-tile with a monomorphized
+        /// kernel, in grid-sweep order.  `config::space` re-exports this
+        /// as the legal fast set for tuner grids and validation.
+        pub const MICRO_KERNEL_SHAPES: &[(usize, usize)] =
+            &[$(($mr, $nr)),+];
+
+        /// Dispatch one register tile: full tiles of a registered shape
+        /// run their monomorphized kernel, everything else the generic
+        /// one.  `il` is the row within the band slice `c`.
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        fn dispatch_micro_kernel(
+            full: bool,
+            mr: usize,
+            nr: usize,
+            apack: &[f32],
+            b: &[f32],
+            c: &mut [f32],
+            n: usize,
+            il: usize,
+            ie: usize,
+            j: usize,
+            je: usize,
+            p0: usize,
+            p1: usize,
+        ) {
+            match (full, mr, nr) {
+                $(
+                    (true, $mr, $nr) => micro_kernel_fixed::<$mr, $nr>(
+                        apack, b, c, n, il, j, p0, p1,
+                    ),
+                )+
+                _ => micro_kernel(apack, b, c, n, il, ie, j, je, p0, p1, mr),
+            }
+        }
+    };
+}
+
+// The registry: {2, 4, 8, 16} × {4, 8, 16} — the paper's Table-2 region
+// of register-tile shapes, monomorphized so LLVM keeps each accumulator
+// in vector registers.
+micro_kernel_registry!(
+    (2, 4),
+    (2, 8),
+    (2, 16),
+    (4, 4),
+    (4, 8),
+    (4, 16),
+    (8, 4),
+    (8, 8),
+    (8, 16),
+    (16, 4),
+    (16, 8),
+    (16, 16),
+);
 
 /// `C = A @ B`, row-major, blocked per `params`.
 ///
@@ -78,6 +152,10 @@ pub fn gemm_blocked(
             && params.mr > 0
             && params.nr > 0,
         "BlockedParams dims must be non-zero: {params:?}"
+    );
+    assert!(
+        params.mr <= 16 && params.nr <= 16,
+        "micro-tile exceeds the 16x16 register kernel cap: {params:?}"
     );
     let mut c = vec![0.0f32; m * n];
     let bm = params.bm;
@@ -163,29 +241,16 @@ fn gemm_band(
                 let mut j = j0;
                 while j < j1 {
                     let je = (j + nr).min(j1);
-                    // Full tiles go through a monomorphized kernel
-                    // whose accumulator stays in registers
-                    // (EXPERIMENTS.md §Perf blas-2); ragged edges
-                    // take the generic path.
+                    // Full tiles of a registry shape go through their
+                    // monomorphized kernel, whose accumulator stays in
+                    // registers (EXPERIMENTS.md §Perf blas-2); ragged
+                    // edges and unregistered shapes take the generic
+                    // path.
                     let full = ie - i == mr && je - j == nr;
-                    match (full, mr, nr) {
-                        (true, 4, 8) => micro_kernel_fixed::<4, 8>(
-                            &apack[strip..], b, cband, n, il, j, p0, p1,
-                        ),
-                        (true, 8, 8) => micro_kernel_fixed::<8, 8>(
-                            &apack[strip..], b, cband, n, il, j, p0, p1,
-                        ),
-                        (true, 8, 16) => micro_kernel_fixed::<8, 16>(
-                            &apack[strip..], b, cband, n, il, j, p0, p1,
-                        ),
-                        (true, 4, 16) => micro_kernel_fixed::<4, 16>(
-                            &apack[strip..], b, cband, n, il, j, p0, p1,
-                        ),
-                        _ => micro_kernel(
-                            &apack[strip..], b, cband, n, il, il + (ie - i),
-                            j, je, p0, p1, mr,
-                        ),
-                    }
+                    dispatch_micro_kernel(
+                        full, mr, nr, &apack[strip..], b, cband, n, il,
+                        il + (ie - i), j, je, p0, p1,
+                    );
                     j = je;
                 }
                 i = ie;
@@ -282,10 +347,11 @@ fn micro_kernel(
     p1: usize,
     mr: usize,
 ) {
-    // Max micro-tile is 8x16; callers keep mr<=8, nr<=16.
-    let mut acc = [[0.0f32; 16]; 8];
+    // Max micro-tile is 16x16; callers keep mr<=16, nr<=16 (the registry
+    // tops out at (16, 16)).
+    let mut acc = [[0.0f32; 16]; 16];
     let (mh, nw) = (ie - i, je - j);
-    debug_assert!(mh <= 8 && nw <= 16);
+    debug_assert!(mh <= 16 && nw <= 16);
     for p in 0..(p1 - p0) {
         let brow = &b[(p0 + p) * n + j..(p0 + p) * n + je];
         let astrip = &apack[p * mr..p * mr + mh];
@@ -371,5 +437,57 @@ mod tests {
     fn zero_block_dim_is_a_loud_panic() {
         let params = BlockedParams { bm: 0, ..Default::default() };
         gemm_blocked(&[1.0], &[1.0], 1, 1, 1, &params);
+    }
+
+    #[test]
+    #[should_panic(expected = "register kernel cap")]
+    fn oversized_micro_tile_is_a_loud_panic() {
+        let params = BlockedParams { mr: 32, ..Default::default() };
+        gemm_blocked(&[1.0], &[1.0], 1, 1, 1, &params);
+    }
+
+    #[test]
+    fn registry_covers_the_advertised_cross() {
+        // The macro invocation is the source of truth; this pins the
+        // contract the tuner grids rely on: at least {2,4,8,16}x{4,8,16}.
+        for mr in [2usize, 4, 8, 16] {
+            for nr in [4usize, 8, 16] {
+                assert!(
+                    MICRO_KERNEL_SHAPES.contains(&(mr, nr)),
+                    "({mr}, {nr}) missing from the registry"
+                );
+                let p = BlockedParams { mr, nr, ..Default::default() };
+                assert!(p.is_monomorphized());
+            }
+        }
+        assert!(!BlockedParams { mr: 3, nr: 5, ..Default::default() }
+            .is_monomorphized());
+        // No duplicates: dedup discipline for grid construction.
+        for (i, s) in MICRO_KERNEL_SHAPES.iter().enumerate() {
+            assert!(!MICRO_KERNEL_SHAPES[i + 1..].contains(s));
+        }
+    }
+
+    #[test]
+    fn every_registry_shape_is_correct_on_ragged_dims() {
+        // 37x29x23 leaves ragged edges for every registry shape, so both
+        // the monomorphized kernel (interior) and the generic kernel
+        // (edges) run for each (mr, nr).
+        let (m, n, k) = (37, 29, 23);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let expected = gemm_naive(&a, &b, m, n, k);
+        for &(mr, nr) in MICRO_KERNEL_SHAPES {
+            let params = BlockedParams {
+                bm: 32,
+                bn: 32,
+                bk: 16,
+                mr,
+                nr,
+                threads: 1,
+            };
+            let got = gemm_blocked(&a, &b, m, n, k, &params);
+            assert!(max_abs_diff(&expected, &got) < 1e-4, "{params:?}");
+        }
     }
 }

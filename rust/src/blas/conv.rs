@@ -1,5 +1,7 @@
-//! Host Rust 2D convolution references: a direct (naive) oracle and the
-//! im2col+GEMM path the native engine dispatches to.
+//! Host Rust 2D convolution: the direct (naive) oracle, the im2col+GEMM
+//! lowering, and [`conv2d_native`] — the algorithm dispatch the native
+//! engine's plans execute (im2col / tiled / winograd, with im2col
+//! fallback off an algorithm's domain).
 //!
 //! Layouts match the Pallas kernels and the artifact manifest: NHWC
 //! input, RSCK (window x window x in_c x out_c) filters, NHWK output.
@@ -13,6 +15,9 @@
 //! the lowered GEMM parallelizes over its own macro-tile bands.
 
 use super::blocked::{gemm_blocked, BlockedParams};
+use super::direct::conv2d_tiled;
+use super::winograd::conv2d_winograd;
+use crate::config::{ConvAlgorithm, ConvConfig};
 use crate::util::pool;
 
 /// Fully resolved shape of one conv2d execution.
@@ -236,9 +241,9 @@ pub fn im2col_threaded(
     patches
 }
 
-/// Convolution by im2col + blocked GEMM — the native engine's conv path
-/// (the paper's §4.1 "lower onto GEMM" algorithm played on the host).
-/// Both stages honor `params.threads`.
+/// Convolution by im2col + blocked GEMM — the native engine's historical
+/// conv path (the paper's §4.1 "lower onto GEMM" algorithm played on the
+/// host).  Both stages honor `params.threads`.
 pub fn conv2d_im2col(
     x: &[f32],
     f: &[f32],
@@ -251,6 +256,75 @@ pub fn conv2d_im2col(
     let k = s.window * s.window * s.in_c;
     // Filters are RSCK row-major: already the (K x N) operand.
     gemm_blocked(&patches, f, m, s.out_c, k, params)
+}
+
+/// Dimensions-only form of [`native_conv_algorithm`], for callers that
+/// have a layer's `(window, stride)` but no fully resolved shape (the
+/// tuner's sweep applicability filter).  THE single fallback rule —
+/// everything else ([`native_conv_algorithm`], the sweep filter)
+/// delegates here: an algorithm whose kernel cannot compute the layer
+/// ([`ConvAlgorithm::supports`]), or a Winograd configuration with
+/// `wino_m != 2` (only the m=2 kernel exists natively), runs
+/// [`ConvAlgorithm::Im2col`] instead.
+pub fn native_conv_algorithm_dims(
+    cfg: &ConvConfig,
+    window: u32,
+    stride: u32,
+) -> ConvAlgorithm {
+    if cfg.algorithm.supports(window, stride)
+        && (cfg.algorithm != ConvAlgorithm::Winograd || cfg.wino_m == 2)
+    {
+        cfg.algorithm
+    } else {
+        ConvAlgorithm::Im2col
+    }
+}
+
+/// The algorithm a native conv configuration *actually* executes on a
+/// shape: the requested algorithm when the kernel can compute it,
+/// [`ConvAlgorithm::Im2col`] otherwise (see
+/// [`native_conv_algorithm_dims`] for the rule).  `NativeEngine`
+/// resolves this at plan time (so `planned_conv` reports what will
+/// really run) and [`conv2d_native`] enforces it at dispatch.
+pub fn native_conv_algorithm(
+    cfg: &ConvConfig,
+    s: &Conv2dShape,
+) -> ConvAlgorithm {
+    native_conv_algorithm_dims(cfg, s.window as u32, s.stride as u32)
+}
+
+/// Convolution by whichever algorithm `cfg` selects — the dispatch the
+/// native engine's plans execute, making the conv *algorithm* a kernel
+/// parameter exactly like the tile sizes (paper §4.1):
+///
+/// * [`ConvAlgorithm::Im2col`] → [`conv2d_im2col`] under `blocked`;
+/// * [`ConvAlgorithm::Tiled`] / [`ConvAlgorithm::Naive`] →
+///   [`conv2d_tiled`](super::conv2d_tiled) under `cfg`'s tile/vector
+///   knobs (the naive kernel is the 1×1-tile member of the family);
+/// * [`ConvAlgorithm::Winograd`] →
+///   [`conv2d_winograd`](super::conv2d_winograd), falling back to im2col
+///   off its domain (see [`native_conv_algorithm`]).
+///
+/// All paths honor `blocked.threads` with the crate's disjoint-slice
+/// discipline, so every algorithm is bit-identical across thread counts;
+/// algorithms agree with each other within floating-point tolerance
+/// (proptested).
+pub fn conv2d_native(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    cfg: &ConvConfig,
+    blocked: &BlockedParams,
+) -> Vec<f32> {
+    match native_conv_algorithm(cfg, s) {
+        ConvAlgorithm::Im2col => conv2d_im2col(x, f, s, blocked),
+        ConvAlgorithm::Winograd => {
+            conv2d_winograd(x, f, s, blocked.threads)
+        }
+        ConvAlgorithm::Tiled | ConvAlgorithm::Naive => {
+            conv2d_tiled(x, f, s, cfg, blocked.threads)
+        }
+    }
 }
 
 #[cfg(test)]
@@ -363,6 +437,64 @@ mod tests {
             let conv = conv2d_im2col(&x, &f, &s, &params);
             assert!(max_abs_diff(&conv, &gemm) < 1e-4, "{params:?}");
         }
+    }
+
+    #[test]
+    fn native_dispatch_falls_back_off_the_winograd_domain() {
+        // 3x3 stride 1: winograd runs natively (m=2 only).
+        let s1 = Conv2dShape::same(1, 8, 8, 2, 2, 3, 1);
+        let w2 = ConvConfig::winograd(2);
+        assert_eq!(
+            native_conv_algorithm(&w2, &s1),
+            ConvAlgorithm::Winograd
+        );
+        // m=4 has no native kernel: im2col fallback.
+        assert_eq!(
+            native_conv_algorithm(&ConvConfig::winograd(4), &s1),
+            ConvAlgorithm::Im2col
+        );
+        // Strided / non-3x3 shapes: im2col fallback.
+        let s2 = Conv2dShape::same(1, 8, 8, 2, 2, 3, 2);
+        assert_eq!(native_conv_algorithm(&w2, &s2), ConvAlgorithm::Im2col);
+        let s3 = Conv2dShape::same(1, 8, 8, 2, 2, 1, 1);
+        assert_eq!(native_conv_algorithm(&w2, &s3), ConvAlgorithm::Im2col);
+        // Everything else runs what it asked for.
+        let t = ConvConfig::tiled(2, 2, 1, 4);
+        assert_eq!(native_conv_algorithm(&t, &s2), ConvAlgorithm::Tiled);
+        assert_eq!(
+            native_conv_algorithm(&ConvConfig::im2col(), &s2),
+            ConvAlgorithm::Im2col
+        );
+    }
+
+    #[test]
+    fn native_dispatch_agrees_across_algorithms() {
+        // One 3x3/s1 shape where all three algorithms run natively.
+        let s = Conv2dShape::same(2, 7, 9, 3, 4, 3, 1);
+        let x = rand(s.input_elems(), 31);
+        let f = rand(s.filter_elems(), 32);
+        let direct = conv2d_direct(&x, &f, &s);
+        let blocked =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
+        for cfg in [
+            ConvConfig::im2col(),
+            ConvConfig::tiled(2, 2, 1, 4),
+            ConvConfig::naive(),
+            ConvConfig::winograd(2),
+            ConvConfig::winograd(4), // falls back to im2col
+        ] {
+            let out = conv2d_native(&x, &f, &s, &cfg, &blocked);
+            assert!(
+                max_abs_diff(&direct, &out) < 1e-3,
+                "{} disagrees with the oracle",
+                cfg.name()
+            );
+        }
+        // The fallback really is the im2col computation, bit for bit.
+        assert!(
+            conv2d_native(&x, &f, &s, &ConvConfig::winograd(4), &blocked)
+                == conv2d_im2col(&x, &f, &s, &blocked)
+        );
     }
 
     #[test]

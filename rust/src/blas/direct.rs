@@ -1,0 +1,249 @@
+//! Tiled direct convolution — the paper's §4.1.1 kernel family on the
+//! host.  Each "work item" computes a `tile_h × tile_w` spatial tile of
+//! outputs for a `vec_k`-wide block of output channels, holding the whole
+//! accumulator tile live while it streams the filter taps and input
+//! channels — the input-reuse structure that makes the tiled family
+//! competitive with im2col without materializing a patch matrix.
+//!
+//! The knobs come straight from [`ConvConfig`]: `tile_h`/`tile_w` are the
+//! output tile, `vec_k` the output-channel block (the accumulator width),
+//! `vec_c` the input-channel inner blocking.  All knob settings compute
+//! the same accumulation order per output element — ascending
+//! `(r, s, c)`, exactly the order of [`conv2d_direct`] — so every tiled
+//! configuration is bit-identical to the direct oracle, and the knobs
+//! are pure throughput parameters the tuner sweeps.
+//!
+//! Parallelism: the unit is one `(batch, tile-row)` band of output rows;
+//! workers own disjoint `&mut` output slices and run the exact serial
+//! per-band code (bit-identical to serial, the crate discipline).
+//!
+//! [`conv2d_direct`]: super::conv2d_direct
+
+use super::conv::Conv2dShape;
+use crate::config::ConvConfig;
+use crate::util::pool;
+
+/// One `(batch, tile-row)` band: output rows `[r0, r1)` of batch `b`
+/// into `out_band` (pre-zeroed, `(r1 - r0) * out_w * out_c` elements).
+#[allow(clippy::too_many_arguments)]
+fn tiled_band(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    tile_w: usize,
+    kb: usize,
+    cb: usize,
+    b: usize,
+    r0: usize,
+    r1: usize,
+    out_band: &mut [f32],
+    acc: &mut [f32],
+) {
+    let (ci, co, win) = (s.in_c, s.out_c, s.window);
+    for ow0 in (0..s.out_w).step_by(tile_w) {
+        let ow1 = (ow0 + tile_w).min(s.out_w);
+        for k0 in (0..co).step_by(kb) {
+            let kbe = (k0 + kb).min(co) - k0;
+            acc.fill(0.0);
+            // Accumulate in ascending (r, s, c) order — the direct
+            // oracle's order — so every knob setting rounds identically.
+            for r in 0..win {
+                for sw in 0..win {
+                    for c0 in (0..ci).step_by(cb) {
+                        let c1 = (c0 + cb).min(ci);
+                        for c in c0..c1 {
+                            let f0 = ((r * win + sw) * ci + c) * co + k0;
+                            let frow = &f[f0..f0 + kbe];
+                            for oh in r0..r1 {
+                                let ih = (oh * s.stride + r) as isize
+                                    - s.pad_top as isize;
+                                if ih < 0 || ih as usize >= s.in_h {
+                                    continue;
+                                }
+                                let xrow = ((b * s.in_h + ih as usize)
+                                    * s.in_w)
+                                    * ci;
+                                for ow in ow0..ow1 {
+                                    let iw = (ow * s.stride + sw) as isize
+                                        - s.pad_left as isize;
+                                    if iw < 0 || iw as usize >= s.in_w {
+                                        continue;
+                                    }
+                                    let xv =
+                                        x[xrow + iw as usize * ci + c];
+                                    let a0 = ((oh - r0) * tile_w
+                                        + (ow - ow0))
+                                        * kb;
+                                    for (av, fv) in acc
+                                        [a0..a0 + kbe]
+                                        .iter_mut()
+                                        .zip(frow)
+                                    {
+                                        *av += xv * fv;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // Write the finished accumulator tile.
+            for oh in r0..r1 {
+                for ow in ow0..ow1 {
+                    let a0 = ((oh - r0) * tile_w + (ow - ow0)) * kb;
+                    let o0 = ((oh - r0) * s.out_w + ow) * co + k0;
+                    out_band[o0..o0 + kbe]
+                        .copy_from_slice(&acc[a0..a0 + kbe]);
+                }
+            }
+        }
+    }
+}
+
+/// Tiled direct convolution per `cfg` (`tile_h`/`tile_w`/`vec_c`/`vec_k`;
+/// the algorithm field is ignored — dispatch happens in
+/// [`conv2d_native`](super::conv2d_native)).  `threads` follows the
+/// [`BlockedParams::threads`](super::BlockedParams::threads) convention.
+/// Output is bit-identical to [`conv2d_direct`](super::conv2d_direct)
+/// for every knob setting and thread count.
+pub fn conv2d_tiled(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    cfg: &ConvConfig,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    assert!(
+        cfg.tile_h > 0 && cfg.tile_w > 0 && cfg.vec_c > 0 && cfg.vec_k > 0,
+        "tiled conv knobs must be non-zero: {cfg:?}"
+    );
+    let tile_h = cfg.tile_h as usize;
+    let tile_w = cfg.tile_w as usize;
+    let kb = (cfg.vec_k as usize).min(s.out_c.max(1));
+    let cb = cfg.vec_c as usize;
+    let mut out = vec![0.0f32; s.output_elems()];
+    if s.output_elems() == 0 {
+        return out;
+    }
+    let tiles_h = s.out_h.div_ceil(tile_h);
+
+    // Disjoint (batch, tile-row) output bands, sized for the ragged last
+    // tile row of each batch.
+    let mut bands: Vec<(usize, usize, usize, &mut [f32])> = Vec::new();
+    {
+        let mut rest: &mut [f32] = &mut out;
+        for b in 0..s.batch {
+            for tr in 0..tiles_h {
+                let r0 = tr * tile_h;
+                let r1 = (r0 + tile_h).min(s.out_h);
+                let (band, tail) = std::mem::take(&mut rest)
+                    .split_at_mut((r1 - r0) * s.out_w * s.out_c);
+                bands.push((b, r0, r1, band));
+                rest = tail;
+            }
+        }
+        debug_assert!(rest.is_empty());
+    }
+
+    let acc_len = tile_h * tile_w * kb;
+    let workers = pool::resolve_threads(threads);
+    if workers <= 1 || bands.len() <= 1 {
+        let mut acc = vec![0.0f32; acc_len];
+        for (b, r0, r1, band) in bands {
+            tiled_band(x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc);
+        }
+    } else {
+        pool::run_parallel(workers, bands, |_, (b, r0, r1, band)| {
+            let mut acc = vec![0.0f32; acc_len];
+            tiled_band(x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::conv2d_direct;
+    use crate::util::rng::XorShift;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        XorShift::new(seed).f32_vec(n)
+    }
+
+    /// The tiled configurations the tests sweep: 1x1 (== algorithm 1,
+    /// the naive kernel), square and rectangular tiles, wide and narrow
+    /// channel blocks.
+    fn cfg_matrix() -> Vec<ConvConfig> {
+        vec![
+            ConvConfig::tiled(1, 1, 1, 1),
+            ConvConfig::tiled(2, 2, 1, 4),
+            ConvConfig::tiled(4, 4, 4, 4),
+            ConvConfig::tiled(3, 5, 2, 16), // vec_k > out_c gets clamped
+            ConvConfig::tiled(5, 1, 4, 2),
+        ]
+    }
+
+    #[test]
+    fn every_config_is_bit_identical_to_direct() {
+        for &(b, h, w, c, k, win, stride) in &[
+            (2usize, 8usize, 8usize, 3usize, 4usize, 3usize, 1usize),
+            (1, 9, 7, 2, 5, 3, 2),
+            (1, 6, 6, 4, 4, 1, 1), // pointwise
+            (2, 10, 10, 2, 3, 5, 2),
+            (1, 1, 1, 4, 2, 1, 1), // single output pixel
+        ] {
+            let s = Conv2dShape::same(b, h, w, c, k, win, stride);
+            let x = rand(s.input_elems(), 3);
+            let f = rand(s.filter_elems(), 4);
+            let direct = conv2d_direct(&x, &f, &s);
+            for cfg in cfg_matrix() {
+                let tiled = conv2d_tiled(&x, &f, &s, &cfg, 1);
+                assert!(
+                    direct == tiled,
+                    "{} not bit-identical to direct on {s:?}",
+                    cfg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn valid_padding_matches_direct() {
+        let s = Conv2dShape::valid(1, 12, 12, 3, 8, 5, 2);
+        let x = rand(s.input_elems(), 7);
+        let f = rand(s.filter_elems(), 8);
+        let direct = conv2d_direct(&x, &f, &s);
+        for cfg in cfg_matrix() {
+            assert!(direct == conv2d_tiled(&x, &f, &s, &cfg, 1));
+        }
+    }
+
+    #[test]
+    fn threaded_is_bit_identical_to_serial() {
+        let s = Conv2dShape::same(2, 9, 7, 3, 4, 3, 1);
+        let x = rand(s.input_elems(), 9);
+        let f = rand(s.filter_elems(), 10);
+        for cfg in cfg_matrix() {
+            let serial = conv2d_tiled(&x, &f, &s, &cfg, 1);
+            for threads in [0usize, 2, 3, 8, 64] {
+                let par = conv2d_tiled(&x, &f, &s, &cfg, threads);
+                assert!(
+                    serial == par,
+                    "{} threads={threads} diverged",
+                    cfg.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-zero")]
+    fn zero_tile_is_a_loud_panic() {
+        let s = Conv2dShape::same(1, 2, 2, 1, 1, 1, 1);
+        let cfg = ConvConfig { tile_h: 0, ..Default::default() };
+        conv2d_tiled(&[0.0; 4], &[0.0], &s, &cfg, 1);
+    }
+}

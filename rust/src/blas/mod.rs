@@ -1,4 +1,5 @@
-//! Host Rust reference kernels: GEMM baselines and the im2col conv path.
+//! Host Rust reference kernels: GEMM baselines and the native conv
+//! algorithm family (im2col, tiled direct, Winograd).
 //!
 //! Three roles: (1) a pure-Rust oracle to validate backend results against
 //! in integration tests, (2) the "hand-written native library" comparator
@@ -6,16 +7,30 @@
 //! the paper's CPUs — and (3) the compute kernels behind
 //! [`runtime::NativeEngine`](crate::runtime::NativeEngine), the default
 //! (offline) execution backend.
+//!
+//! The convolution *algorithm* is itself a kernel parameter (paper §4.1):
+//! [`conv2d_native`] dispatches one [`crate::config::ConvConfig`] to the
+//! im2col/GEMM lowering ([`conv2d_im2col`]), the §4.1.1 tiled direct
+//! kernel ([`conv2d_tiled`]), or the §4.1.2 Winograd F(2×2, 3×3) kernel
+//! ([`conv2d_winograd`]), with im2col fallback for shapes an algorithm
+//! cannot compute ([`native_conv_algorithm`]).  GEMM's monomorphized
+//! register micro-tiles are enumerated by the macro-generated
+//! [`MICRO_KERNEL_SHAPES`] registry.
 
 mod blocked;
 mod conv;
+mod direct;
 mod naive;
+mod winograd;
 
-pub use blocked::{gemm_blocked, BlockedParams};
+pub use blocked::{gemm_blocked, BlockedParams, MICRO_KERNEL_SHAPES};
 pub use conv::{
-    conv2d_direct, conv2d_im2col, im2col, im2col_threaded, Conv2dShape,
+    conv2d_direct, conv2d_im2col, conv2d_native, im2col, im2col_threaded,
+    native_conv_algorithm, native_conv_algorithm_dims, Conv2dShape,
 };
+pub use direct::conv2d_tiled;
 pub use naive::gemm_naive;
+pub use winograd::{conv2d_winograd, winograd_supports};
 
 /// Max |a - b| over two equal-length slices (test helper).
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {

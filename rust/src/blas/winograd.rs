@@ -1,0 +1,375 @@
+//! Native Winograd F(2×2, 3×3) convolution — the paper's §4.1.2 fast
+//! algorithm played on the host, so conv-algorithm selection (tiled vs
+//! im2col vs winograd) can be *measured* natively instead of only through
+//! PJRT.
+//!
+//! The Cook-Toom construction (Lavin & Gray, arXiv:1509.09308): each
+//! 2×2 output tile is computed from a 4×4 input tile in the transform
+//! domain — `Y = Aᵀ[(G g Gᵀ) ⊙ (Bᵀ d B)]A` — replacing the 36
+//! multiplies of the direct 3×3 computation with 16, at the cost of the
+//! (cheap, addition-only) transforms.  Filters are transformed once per
+//! call; per-tile work is the input transform, a channel-contraction at
+//! each of the 16 transform-domain positions, and the inverse transform.
+//!
+//! Parallelism follows the crate discipline: the parallel unit is one
+//! `(batch, tile-row)` band of the output, each worker owns a disjoint
+//! `&mut` slice and runs the exact serial per-band code, so results are
+//! bit-identical to serial for every thread count.  Winograd output is
+//! *not* bit-identical to im2col/direct — it is a different
+//! factorization — but agrees within floating-point tolerance
+//! (proptested in `tests/proptests.rs`).
+
+use super::conv::Conv2dShape;
+use crate::util::pool;
+
+/// Whether the native Winograd kernel can compute this shape:
+/// F(2×2, 3×3) covers 3×3 windows at stride 1 (any padding).  Delegates
+/// to [`ConvAlgorithm::supports`](crate::config::ConvAlgorithm::supports)
+/// so the kernel domain has exactly one definition.
+pub fn winograd_supports(s: &Conv2dShape) -> bool {
+    crate::config::ConvAlgorithm::Winograd
+        .supports(s.window as u32, s.stride as u32)
+}
+
+/// Transform one 3×3 filter tap matrix `g` (for a fixed (c, k) pair) to
+/// the 4×4 transform domain: `U = G g Gᵀ`.
+#[inline]
+fn filter_transform(g: &[f32; 9]) -> [f32; 16] {
+    // t = G g (4x3), with G = [[1,0,0],[.5,.5,.5],[.5,-.5,.5],[0,0,1]].
+    let mut t = [0.0f32; 12];
+    for j in 0..3 {
+        let (g0, g1, g2) = (g[j], g[3 + j], g[6 + j]);
+        t[j] = g0;
+        t[3 + j] = 0.5 * (g0 + g1 + g2);
+        t[6 + j] = 0.5 * (g0 - g1 + g2);
+        t[9 + j] = g2;
+    }
+    // U = t Gᵀ (4x4): same stencil applied along rows.
+    let mut u = [0.0f32; 16];
+    for r in 0..4 {
+        let (t0, t1, t2) = (t[3 * r], t[3 * r + 1], t[3 * r + 2]);
+        u[4 * r] = t0;
+        u[4 * r + 1] = 0.5 * (t0 + t1 + t2);
+        u[4 * r + 2] = 0.5 * (t0 - t1 + t2);
+        u[4 * r + 3] = t2;
+    }
+    u
+}
+
+/// Transform one 4×4 input tile `d` to the transform domain:
+/// `V = Bᵀ d B`, with `Bᵀ = [[1,0,-1,0],[0,1,1,0],[0,-1,1,0],[0,1,0,-1]]`.
+#[inline]
+fn input_transform(d: &[f32; 16]) -> [f32; 16] {
+    // t = Bᵀ d (rows).
+    let mut t = [0.0f32; 16];
+    for j in 0..4 {
+        let (d0, d1, d2, d3) = (d[j], d[4 + j], d[8 + j], d[12 + j]);
+        t[j] = d0 - d2;
+        t[4 + j] = d1 + d2;
+        t[8 + j] = d2 - d1;
+        t[12 + j] = d1 - d3;
+    }
+    // V = t B (columns): the same stencil along each row.
+    let mut v = [0.0f32; 16];
+    for r in 0..4 {
+        let (t0, t1, t2, t3) =
+            (t[4 * r], t[4 * r + 1], t[4 * r + 2], t[4 * r + 3]);
+        v[4 * r] = t0 - t2;
+        v[4 * r + 1] = t1 + t2;
+        v[4 * r + 2] = t2 - t1;
+        v[4 * r + 3] = t1 - t3;
+    }
+    v
+}
+
+/// Inverse-transform one 4×4 transform-domain tile `m` to the 2×2
+/// output tile: `Y = Aᵀ m A`, with `Aᵀ = [[1,1,1,0],[0,1,-1,-1]]`.
+#[inline]
+fn output_transform(m: &[f32; 16]) -> [f32; 4] {
+    // t = Aᵀ m (2x4).
+    let mut t = [0.0f32; 8];
+    for j in 0..4 {
+        let (m0, m1, m2, m3) = (m[j], m[4 + j], m[8 + j], m[12 + j]);
+        t[j] = m0 + m1 + m2;
+        t[4 + j] = m1 - m2 - m3;
+    }
+    // Y = t A (2x2).
+    let mut y = [0.0f32; 4];
+    for r in 0..2 {
+        let (t0, t1, t2, t3) =
+            (t[4 * r], t[4 * r + 1], t[4 * r + 2], t[4 * r + 3]);
+        y[2 * r] = t0 + t1 + t2;
+        y[2 * r + 1] = t1 - t2 - t3;
+    }
+    y
+}
+
+/// Transform every filter once: `u[pos][c * out_c + k]` for the 16
+/// transform-domain positions (RSCK filter layout in, position-major
+/// out — the layout the per-tile channel contraction streams through).
+fn transform_filters(f: &[f32], s: &Conv2dShape) -> Vec<f32> {
+    let (ci, co) = (s.in_c, s.out_c);
+    let mut u = vec![0.0f32; 16 * ci * co];
+    let mut g = [0.0f32; 9];
+    for c in 0..ci {
+        for k in 0..co {
+            for (tap, gv) in g.iter_mut().enumerate() {
+                // f is RSCK: tap = r * 3 + sw.
+                *gv = f[(tap * ci + c) * co + k];
+            }
+            let ut = filter_transform(&g);
+            for (pos, uv) in ut.iter().enumerate() {
+                u[pos * ci * co + c * co + k] = *uv;
+            }
+        }
+    }
+    u
+}
+
+/// One `(batch, tile-row)` band: compute output rows `[r0, r1)` of batch
+/// `b` into `out_band` (the band's disjoint slice of the output, row-major
+/// NHWK with `r0` as its first row).  Shared verbatim by the serial and
+/// parallel paths, so the two are bit-identical by construction.
+#[allow(clippy::too_many_arguments)]
+fn winograd_band(
+    x: &[f32],
+    u: &[f32],
+    s: &Conv2dShape,
+    b: usize,
+    ty: usize,
+    r0: usize,
+    out_band: &mut [f32],
+    vbuf: &mut [f32],
+    mbuf: &mut [f32],
+) {
+    let (ci, co) = (s.in_c, s.out_c);
+    let tiles_w = s.out_w.div_ceil(2);
+    let ih0 = (2 * ty) as isize - s.pad_top as isize;
+    for tx in 0..tiles_w {
+        let iw0 = (2 * tx) as isize - s.pad_left as isize;
+        // Input transform per channel: vbuf[pos * ci + c].
+        let mut d = [0.0f32; 16];
+        for c in 0..ci {
+            for dy in 0..4 {
+                let ih = ih0 + dy as isize;
+                for dx in 0..4 {
+                    let iw = iw0 + dx as isize;
+                    d[4 * dy + dx] = if ih < 0
+                        || ih as usize >= s.in_h
+                        || iw < 0
+                        || iw as usize >= s.in_w
+                    {
+                        0.0
+                    } else {
+                        x[((b * s.in_h + ih as usize) * s.in_w
+                            + iw as usize)
+                            * ci
+                            + c]
+                    };
+                }
+            }
+            let v = input_transform(&d);
+            for (pos, vv) in v.iter().enumerate() {
+                vbuf[pos * ci + c] = *vv;
+            }
+        }
+        // Channel contraction at each transform-domain position:
+        // mbuf[pos * co + k] = Σ_c vbuf[pos][c] * u[pos][c][k].
+        mbuf.fill(0.0);
+        for pos in 0..16 {
+            let urow = &u[pos * ci * co..(pos + 1) * ci * co];
+            let mrow = &mut mbuf[pos * co..(pos + 1) * co];
+            for c in 0..ci {
+                let vv = vbuf[pos * ci + c];
+                let uk = &urow[c * co..(c + 1) * co];
+                for (mv, uv) in mrow.iter_mut().zip(uk) {
+                    *mv += vv * uv;
+                }
+            }
+        }
+        // Inverse transform per output channel, clipped to the ragged
+        // bottom/right edge.
+        let mut m = [0.0f32; 16];
+        for k in 0..co {
+            for (pos, mv) in m.iter_mut().enumerate() {
+                *mv = mbuf[pos * co + k];
+            }
+            let y = output_transform(&m);
+            for dy in 0..2 {
+                let oh = 2 * ty + dy;
+                if oh >= s.out_h {
+                    break;
+                }
+                for dx in 0..2 {
+                    let ow = 2 * tx + dx;
+                    if ow >= s.out_w {
+                        break;
+                    }
+                    out_band[((oh - r0) * s.out_w + ow) * co + k] =
+                        y[2 * dy + dx];
+                }
+            }
+        }
+    }
+}
+
+/// Convolution by Winograd F(2×2, 3×3).  Panics unless
+/// [`winograd_supports`] accepts the shape — callers wanting automatic
+/// fallback go through [`conv2d_native`](super::conv2d_native).
+/// `threads` follows the [`BlockedParams::threads`] convention (`0` =
+/// all cores, `1` = serial); every thread count produces bit-identical
+/// output.
+///
+/// [`BlockedParams::threads`]: super::BlockedParams::threads
+pub fn conv2d_winograd(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    threads: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    assert!(
+        winograd_supports(s),
+        "winograd F(2x2,3x3) needs window 3 / stride 1, got {s:?}"
+    );
+    let (ci, co) = (s.in_c, s.out_c);
+    let mut out = vec![0.0f32; s.output_elems()];
+    if s.output_elems() == 0 || ci == 0 {
+        return out;
+    }
+    let u = transform_filters(f, s);
+    let tiles_h = s.out_h.div_ceil(2);
+
+    // Split the output into one disjoint slice per (batch, tile-row)
+    // band.  Bands are 2 output rows except the last of each batch when
+    // out_h is odd, so the split is computed, not chunked.
+    let mut bands: Vec<(usize, usize, usize, &mut [f32])> = Vec::new();
+    {
+        let mut rest: &mut [f32] = &mut out;
+        for b in 0..s.batch {
+            for ty in 0..tiles_h {
+                let r0 = 2 * ty;
+                let rows = (r0 + 2).min(s.out_h) - r0;
+                let (band, tail) = std::mem::take(&mut rest)
+                    .split_at_mut(rows * s.out_w * co);
+                bands.push((b, ty, r0, band));
+                rest = tail;
+            }
+        }
+        debug_assert!(rest.is_empty());
+    }
+
+    let workers = pool::resolve_threads(threads);
+    if workers <= 1 || bands.len() <= 1 {
+        let mut vbuf = vec![0.0f32; 16 * ci];
+        let mut mbuf = vec![0.0f32; 16 * co];
+        for (b, ty, r0, band) in bands {
+            winograd_band(x, &u, s, b, ty, r0, band, &mut vbuf, &mut mbuf);
+        }
+    } else {
+        pool::run_parallel(workers, bands, |_, (b, ty, r0, band)| {
+            let mut vbuf = vec![0.0f32; 16 * ci];
+            let mut mbuf = vec![0.0f32; 16 * co];
+            winograd_band(x, &u, s, b, ty, r0, band, &mut vbuf, &mut mbuf);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::{conv2d_direct, max_abs_diff};
+    use crate::util::rng::XorShift;
+
+    fn rand(n: usize, seed: u64) -> Vec<f32> {
+        XorShift::new(seed).f32_vec(n)
+    }
+
+    fn check_against_direct(s: &Conv2dShape, seed: u64) {
+        let x = rand(s.input_elems(), seed);
+        let f = rand(s.filter_elems(), seed + 1);
+        let direct = conv2d_direct(&x, &f, s);
+        let wino = conv2d_winograd(&x, &f, s, 1);
+        assert!(max_abs_diff(&direct, &wino) < 1e-3, "{s:?}");
+    }
+
+    #[test]
+    fn matches_direct_on_same_padding() {
+        for &(b, h, w, c, k) in &[
+            (1usize, 8usize, 8usize, 3usize, 4usize),
+            (2, 9, 7, 2, 5),  // odd spatial: ragged bottom/right tiles
+            (1, 4, 4, 8, 8),
+            (3, 6, 10, 1, 1), // degenerate channels
+        ] {
+            check_against_direct(&Conv2dShape::same(b, h, w, c, k, 3, 1), 1);
+        }
+    }
+
+    #[test]
+    fn matches_direct_on_valid_padding() {
+        // No padding: interior tiles only, plus ragged edges.
+        check_against_direct(&Conv2dShape::valid(2, 11, 9, 3, 4, 3, 1), 5);
+        check_against_direct(&Conv2dShape::valid(1, 3, 3, 2, 3, 3, 1), 6);
+    }
+
+    #[test]
+    fn single_pixel_output_works() {
+        // VALID 3x3 on a 3x3 input: one output pixel (ragged 2x2 tile).
+        let s = Conv2dShape::valid(1, 3, 3, 4, 2, 3, 1);
+        assert_eq!((s.out_h, s.out_w), (1, 1));
+        check_against_direct(&s, 9);
+    }
+
+    #[test]
+    fn threaded_is_bit_identical_to_serial() {
+        for &(b, h, w, c, k) in &[
+            (2usize, 9usize, 7usize, 3usize, 4usize),
+            (1, 1, 5, 2, 3), // out_h 1: one ragged tile row per batch
+            (3, 4, 4, 1, 2),
+        ] {
+            let s = Conv2dShape::same(b, h, w, c, k, 3, 1);
+            let x = rand(s.input_elems(), 11);
+            let f = rand(s.filter_elems(), 12);
+            let serial = conv2d_winograd(&x, &f, &s, 1);
+            for threads in [0usize, 2, 3, 8, 64] {
+                let par = conv2d_winograd(&x, &f, &s, threads);
+                assert!(serial == par, "threads={threads} diverged on {s:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn support_predicate_matches_the_kernel_domain() {
+        assert!(winograd_supports(&Conv2dShape::same(1, 8, 8, 2, 2, 3, 1)));
+        assert!(!winograd_supports(&Conv2dShape::same(1, 8, 8, 2, 2, 3, 2)));
+        assert!(!winograd_supports(&Conv2dShape::same(1, 8, 8, 2, 2, 1, 1)));
+        assert!(!winograd_supports(&Conv2dShape::same(1, 8, 8, 2, 2, 5, 1)));
+    }
+
+    #[test]
+    #[should_panic(expected = "winograd F(2x2,3x3)")]
+    fn unsupported_shape_is_a_loud_panic() {
+        let s = Conv2dShape::same(1, 4, 4, 1, 1, 5, 1);
+        let x = vec![0.0; s.input_elems()];
+        let f = vec![0.0; s.filter_elems()];
+        conv2d_winograd(&x, &f, &s, 1);
+    }
+
+    #[test]
+    fn identity_like_filter_center_tap() {
+        // A filter with only the center tap set to 1 for c==k passes the
+        // input through (interior pixels exactly, borders via padding).
+        let c = 3;
+        let s = Conv2dShape::same(1, 6, 6, c, c, 3, 1);
+        let x = rand(s.input_elems(), 21);
+        let mut f = vec![0.0f32; s.filter_elems()];
+        for ch in 0..c {
+            // center tap index r * 3 + sw with r = sw = 1.
+            f[(4 * c + ch) * c + ch] = 1.0;
+        }
+        let out = conv2d_winograd(&x, &f, &s, 1);
+        assert!(max_abs_diff(&out, &x) < 1e-4);
+    }
+}

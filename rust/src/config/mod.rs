@@ -12,4 +12,7 @@ mod space;
 
 pub use conv::{ConvAlgorithm, ConvConfig};
 pub use gemm::GemmConfig;
-pub use space::{conv_space, gemm_space, ConvSpace, GemmSpace};
+pub use space::{
+    conv_space, gemm_space, micro_kernel_shapes, ConvSpace, GemmSpace,
+    MICRO_KERNEL_SHAPES,
+};

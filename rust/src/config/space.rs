@@ -6,6 +6,20 @@
 
 use super::{ConvAlgorithm, ConvConfig, GemmConfig};
 
+/// The monomorphized `(mr, nr)` register micro-tile shapes of the host
+/// GEMM kernel — re-exported from the macro-generated registry in
+/// `blas::blocked` so tuner grids, validation
+/// (`BlockedParams::is_monomorphized`), and dispatch share one source
+/// of truth (at least `{2, 4, 8, 16} × {4, 8, 16}`).
+pub use crate::blas::MICRO_KERNEL_SHAPES;
+
+/// The legal monomorphized micro-kernel shapes as a slice, for sweep
+/// construction: `micro_kernel_shapes().iter()` enumerates every
+/// `(mr, nr)` the host kernel dispatches to a fixed-trip-count kernel.
+pub fn micro_kernel_shapes() -> &'static [(usize, usize)] {
+    MICRO_KERNEL_SHAPES
+}
+
 /// The GEMM search space: register tiles x work-groups x memory schedule.
 #[derive(Debug, Clone)]
 pub struct GemmSpace {
@@ -201,5 +215,20 @@ mod tests {
         for c in conv_space(3, 1) {
             c.validate().unwrap();
         }
+    }
+
+    #[test]
+    fn micro_kernel_registry_is_the_shared_source_of_truth() {
+        // Grids and validation must agree: every advertised shape is
+        // registered, registered shapes validate, off-registry shapes do
+        // not.
+        use crate::blas::BlockedParams;
+        assert_eq!(micro_kernel_shapes(), MICRO_KERNEL_SHAPES);
+        for &(mr, nr) in micro_kernel_shapes() {
+            let p = BlockedParams { mr, nr, ..Default::default() };
+            assert!(p.is_monomorphized(), "({mr}, {nr})");
+        }
+        assert!(!BlockedParams { mr: 3, nr: 7, ..Default::default() }
+            .is_monomorphized());
     }
 }

@@ -348,11 +348,21 @@ pub struct PoolConfig {
     /// spills to the least-loaded healthy actor.  Must be in
     /// `1..=queue_depth`.
     pub spill_depth: usize,
+    /// Pre-warm every manifest artifact on its ring-home actor before
+    /// `spawn` returns ([`EnginePool::prewarm`]), so first requests
+    /// never pay plan/compile latency.  A plan failure during warm-up
+    /// fails the spawn loudly.
+    pub warm_at_spawn: bool,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { actors: 2, queue_depth: 32, spill_depth: 8 }
+        Self {
+            actors: 2,
+            queue_depth: 32,
+            spill_depth: 8,
+            warm_at_spawn: false,
+        }
     }
 }
 
@@ -554,7 +564,42 @@ impl EnginePool {
                 }
             }
         }
-        Ok(EnginePool { shared, joins })
+        let pool = EnginePool { shared, joins };
+        if config.warm_at_spawn {
+            // Drop on the error path shuts the actors down and joins.
+            pool.prewarm()?;
+        }
+        Ok(pool)
+    }
+
+    /// Warm every manifest artifact on its ring-home actor: each name is
+    /// routed exactly like a request, so per-actor plan caches end up
+    /// holding precisely the artifacts that actor owns.  Returns the
+    /// number of artifacts warmed.  Runs automatically at spawn when
+    /// [`PoolConfig::warm_at_spawn`] is set; callable any time after a
+    /// membership change.  A plan failure is a loud `Err` — a manifest
+    /// entry the backend cannot execute should surface here, not on the
+    /// first unlucky request.
+    pub fn prewarm(&self) -> Result<usize> {
+        // Any healthy actor can list the manifest (all actors share it).
+        let Some(idx) = self.shared.least_loaded() else {
+            return Err(Error::Runtime(
+                "engine pool has no healthy actors left".into(),
+            ));
+        };
+        let (reply, rx) = mpsc::channel();
+        self.shared.queues[idx]
+            .push(Request::Artifacts { reply })
+            .map_err(|_| {
+                Error::Runtime(format!("engine actor {idx} is gone"))
+            })?;
+        let names: Vec<String> = rx.recv().map_err(|_| {
+            Error::Runtime(format!("engine actor {idx} died"))
+        })?;
+        for name in &names {
+            EngineClient::warm(self, name)?;
+        }
+        Ok(names.len())
     }
 
     /// Number of actors the pool was built with (healthy or not).
@@ -965,7 +1010,7 @@ mod tests {
     #[test]
     fn try_submit_reports_busy_at_bounded_depth() {
         let gate = Gate::closed();
-        let config = PoolConfig { actors: 1, queue_depth: 2, spill_depth: 2 };
+        let config = PoolConfig { actors: 1, queue_depth: 2, spill_depth: 2, ..Default::default() };
         let (_dir, pool) = mock_pool(config, &gate);
 
         // One request in flight (parked on the gate), two filling the
@@ -995,7 +1040,7 @@ mod tests {
     #[test]
     fn overloaded_home_queue_spills_to_least_loaded() {
         let gate = Gate::closed();
-        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 1 };
+        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 1, ..Default::default() };
         let (_dir, pool) = mock_pool(config, &gate);
         let slow = name_on(&pool, "slow", 0);
 
@@ -1020,7 +1065,7 @@ mod tests {
     #[test]
     fn panic_is_contained_and_backlog_drains_to_survivors() {
         let gate = Gate::closed();
-        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 8 };
+        let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 8, ..Default::default() };
         let (_dir, pool) = mock_pool(config, &gate);
 
         // Everything below targets whichever actor owns "poison-0".
@@ -1080,10 +1125,10 @@ mod tests {
         let (_dir, store) = empty_store();
         let gate = Gate::closed();
         for config in [
-            PoolConfig { actors: 0, queue_depth: 4, spill_depth: 2 },
-            PoolConfig { actors: 2, queue_depth: 0, spill_depth: 1 },
-            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 0 },
-            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 5 },
+            PoolConfig { actors: 0, queue_depth: 4, spill_depth: 2, ..Default::default() },
+            PoolConfig { actors: 2, queue_depth: 0, spill_depth: 1, ..Default::default() },
+            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 0, ..Default::default() },
+            PoolConfig { actors: 2, queue_depth: 4, spill_depth: 5, ..Default::default() },
         ] {
             let store = store.clone();
             let gate = Arc::clone(&gate);
@@ -1103,7 +1148,7 @@ mod tests {
     #[test]
     fn graceful_shutdown_drains_accepted_requests() {
         let gate = Gate::closed();
-        let config = PoolConfig { actors: 2, queue_depth: 16, spill_depth: 16 };
+        let config = PoolConfig { actors: 2, queue_depth: 16, spill_depth: 16, ..Default::default() };
         let (_dir, pool) = mock_pool(config, &gate);
         let slow = name_on(&pool, "slow", 0);
 

@@ -53,6 +53,12 @@ pub(crate) enum Request {
         seed: u64,
         reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
     },
+    /// List every artifact name in the actor's store (manifest order).
+    /// Used by the pool's warm fan-out to enumerate what to pre-warm
+    /// without opening the manifest a second time.
+    Artifacts {
+        reply: mpsc::Sender<Vec<String>>,
+    },
     /// Snapshot the actor's statistics.
     Stats {
         reply: mpsc::Sender<EngineStats>,
@@ -102,6 +108,12 @@ pub(crate) fn serve_request<B: Backend>(
         }
         Request::SynthInputs { name, seed, reply } => {
             let _ = reply.send(engine.synth_inputs(&name, seed));
+            true
+        }
+        Request::Artifacts { reply } => {
+            let names =
+                engine.store().iter().map(|m| m.name.clone()).collect();
+            let _ = reply.send(names);
             true
         }
         Request::Stats { reply } => {

@@ -68,14 +68,26 @@
 //! code, so parallel results are **bit-identical** to serial — `threads`
 //! is just one more axis of the parameter space.
 //!
+//! The convolution *algorithm* is one more axis of the same space:
+//! [`blas::conv2d_native`] dispatches a [`config::ConvConfig`] to the
+//! im2col/GEMM lowering, the §4.1.1 tiled direct kernel, or the §4.1.2
+//! Winograd F(2×2, 3×3) kernel (im2col fallback off an algorithm's
+//! domain), and GEMM's monomorphized `mr × nr` micro-tiles come from
+//! the macro-generated [`blas::MICRO_KERNEL_SHAPES`] registry shared
+//! with [`config::micro_kernel_shapes`].
+//!
 //! The measure→persist→plan loop closes over that space:
 //! [`tuner::tune_blocked_sweep`] times the `BlockedParams × threads`
-//! grid through any [`runtime::Backend`] and persists per-problem
-//! winners into a [`tuner::SelectionDb`]; a [`runtime::NativeEngine`]
-//! built with `with_tuning` resolves each artifact's parameters from
-//! that DB at plan time.  `cargo run --release --example tune_device --
-//! --quick` runs the whole loop (CI does, on every merge, archiving the
-//! DB and a GFLOP/s summary as artifacts).
+//! grid and [`tuner::tune_conv_native_sweep`] the `ConvAlgorithm ×
+//! ConvConfig × threads` grid through any [`runtime::Backend`],
+//! persisting per-problem winners into a [`tuner::SelectionDb`]; a
+//! [`runtime::NativeEngine`] built with `with_tuning` resolves each
+//! artifact's parameters — for conv, including the algorithm — from
+//! that DB at plan time (small untuned problems default to serial
+//! threads per [`runtime::SMALL_PROBLEM_FLOP_CUTOFF`]).  `cargo run
+//! --release --example tune_device -- --quick` runs the whole loop (CI
+//! does, on every merge, archiving the DB and a GFLOP/s summary as
+//! artifacts).
 //!
 //! ## Module map
 //!

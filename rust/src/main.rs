@@ -304,6 +304,7 @@ fn cmd_network(artifacts: &PathBuf, args: &Args) -> CliResult<()> {
             actors: pool_size,
             queue_depth,
             spill_depth: (queue_depth / 2).max(1),
+            ..Default::default()
         };
         let pool = EnginePool::spawn(artifacts, config)?;
         let runner = NetworkRunner::new(&pool);

@@ -8,9 +8,11 @@
 //!
 //! * [`NativeEngine`] (default) — plans each artifact from its manifest
 //!   metadata and dispatches to the pure-Rust reference kernels in
-//!   [`crate::blas`] (blocked GEMM with the α/β epilogue; im2col conv
-//!   keyed on [`LayerMeta`]).  Runs everywhere, including the offline
-//!   build, with no external dependencies.
+//!   [`crate::blas`] (blocked GEMM with the α/β epilogue; the conv
+//!   algorithm family — im2col / tiled / winograd — keyed on
+//!   [`LayerMeta`] with the algorithm resolved per plan).  Runs
+//!   everywhere, including the offline build, with no external
+//!   dependencies.
 //! * `Engine` (`--features pjrt`) — compiles each artifact's HLO text
 //!   once on the PJRT CPU client and caches the executable.
 //!
@@ -27,7 +29,7 @@ pub use artifact::{ArtifactMeta, ArtifactStore, IoSpec, LayerMeta};
 pub use backend::{Backend, RunOutput};
 #[cfg(feature = "pjrt")]
 pub use executor::Engine;
-pub use native::{NativeEngine, HOST_DEVICE};
+pub use native::{NativeEngine, HOST_DEVICE, SMALL_PROBLEM_FLOP_CUTOFF};
 
 /// The backend the build defaults to: PJRT when the `pjrt` feature is
 /// enabled, the pure-Rust native engine otherwise.

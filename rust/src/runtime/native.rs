@@ -6,23 +6,41 @@
 //! AOT bridge writes, but instead of compiling HLO text it *plans* each
 //! artifact — keying on the manifest's GEMM dims or conv [`LayerMeta`] —
 //! and dispatches to [`blas::gemm_blocked`](crate::blas::gemm_blocked)
-//! (GEMM, with the α/β epilogue) or the im2col conv path
-//! ([`blas::conv2d_im2col`](crate::blas::conv2d_im2col)).  The HLO files
-//! referenced by the manifest are never opened, so synthetic manifests
-//! (tests) and real AOT output both execute.
+//! (GEMM, with the α/β epilogue) or the native conv algorithm family
+//! ([`blas::conv2d_native`](crate::blas::conv2d_native): im2col, tiled
+//! direct, or Winograd).  The HLO files referenced by the manifest are
+//! never opened, so synthetic manifests (tests) and real AOT output both
+//! execute.
 //!
-//! Each plan resolves the [`BlockedParams`] it will execute with: when a
-//! per-host tuning DB is attached ([`NativeEngine::with_tuning`]), the
-//! measured winner for the artifact's problem class is used; otherwise
-//! the engine-wide params (default: auto-threaded over all cores).  The
-//! kernels parallelize over macro-tile bands per the params' `threads`
-//! knob, bit-identically to the serial path.
+//! Each plan resolves the parameters it will execute with — for GEMM the
+//! [`BlockedParams`], for conv additionally *which algorithm* runs
+//! ([`crate::config::ConvConfig`]).  Resolution order, first hit wins:
+//!
+//! 1. a measured [`Selection::ConvNative`](crate::tuner::Selection) /
+//!    `Blocked` entry in the attached tuning DB
+//!    ([`NativeEngine::with_tuning`]) for the artifact's problem class;
+//! 2. engine-wide overrides ([`NativeEngine::set_params`] /
+//!    [`NativeEngine::set_conv_params`] — what the tuner's sweeps drive);
+//! 3. the defaults: im2col, auto threads — except that *small* problems
+//!    (below [`SMALL_PROBLEM_FLOP_CUTOFF`] manifest flops) plan
+//!    `threads: 1`, because thread fan-out costs more than it buys on
+//!    sub-millisecond kernels.  A tuned DB entry always overrides the
+//!    heuristic.
+//!
+//! Winograd selections additionally fall back to im2col at plan time on
+//! shapes outside the F(2×2, 3×3) domain, so
+//! [`NativeEngine::planned_conv`] always reports the algorithm that will
+//! really run.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::blas::{conv2d_im2col, gemm_blocked, BlockedParams, Conv2dShape};
+use crate::blas::{
+    conv2d_native, gemm_blocked, native_conv_algorithm, BlockedParams,
+    Conv2dShape,
+};
+use crate::config::ConvConfig;
 use crate::error::{Error, Result};
 use crate::tuner::{selection_key_for, SelectionDb};
 
@@ -33,6 +51,17 @@ use super::backend::{check_inputs, Backend, RunOutput};
 /// The sweep (`tuner::tune_blocked_sweep`) and the engine's plan-time
 /// lookup must agree on it, or tuned entries are never found.
 pub const HOST_DEVICE: &str = "host";
+
+/// Problems below this many manifest flops plan `threads: 1` by default:
+/// on sub-millisecond kernels the pool fan-out/join overhead exceeds the
+/// parallel win, so small shapes want the serial path unless a measured
+/// selection says otherwise.  The cutoff sits between the serving zoo's
+/// small GEMMs (≤ 2·192³ ≈ 14 MFlop is already borderline; 96³ ≈ 1.8
+/// MFlop clearly serial) and the first shapes where band parallelism
+/// reliably pays (≥ 256³ ≈ 34 MFlop).  Applies only to the *fallback*
+/// resolution — tuned DB entries and explicitly set engine params are
+/// used verbatim, so the tuner can always override it.
+pub const SMALL_PROBLEM_FLOP_CUTOFF: u64 = 8_000_000;
 
 /// One planned artifact: everything `run` needs, resolved once at warm
 /// time (the native analogue of the PJRT compile cache).  The blocking
@@ -57,6 +86,10 @@ enum Plan {
         /// vector over output channels), matching how `aot.py` lowers
         /// `network`-group artifacts.
         fuse_relu: bool,
+        /// The algorithm + tile/vector knobs this plan dispatches to —
+        /// already resolved through the fallback rule, so `algorithm`
+        /// is what will actually execute.
+        conv: ConvConfig,
         params: BlockedParams,
     },
 }
@@ -65,6 +98,13 @@ impl Plan {
     fn params(&self) -> BlockedParams {
         match self {
             Plan::Gemm { params, .. } | Plan::Conv { params, .. } => *params,
+        }
+    }
+
+    fn conv_config(&self) -> Option<ConvConfig> {
+        match self {
+            Plan::Gemm { .. } => None,
+            Plan::Conv { conv, .. } => Some(*conv),
         }
     }
 }
@@ -111,7 +151,11 @@ fn gemm_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
     })
 }
 
-fn conv_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
+fn conv_plan(
+    meta: &ArtifactMeta,
+    conv: ConvConfig,
+    params: BlockedParams,
+) -> Result<Plan> {
     let layer: &LayerMeta = meta.layer.as_ref().ok_or_else(|| {
         Error::Artifact(format!(
             "{}: conv artifact missing layer metadata",
@@ -208,15 +252,67 @@ fn conv_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
             )));
         }
     }
-    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, params })
+    // Resolve the fallback rule *now*, so the plan (and everything that
+    // reports it: `planned_conv`, tuning reports) names the algorithm
+    // that will really execute.
+    let conv = ConvConfig {
+        algorithm: native_conv_algorithm(&conv, &shape),
+        ..conv
+    };
+    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, conv, params })
 }
 
-/// Resolve the blocking parameters an artifact will execute with: a
+/// What the engine falls back to when the tuning DB has no entry for a
+/// problem class.
+#[derive(Debug, Clone, Copy)]
+struct Fallback {
+    /// Engine-wide blocking parameters.
+    params: BlockedParams,
+    /// Whether `params` was set explicitly ([`NativeEngine::with_params`]
+    /// / [`NativeEngine::set_params`]); explicit params bypass the
+    /// small-problem threads heuristic.
+    explicit: bool,
+    /// Engine-wide conv override ([`NativeEngine::set_conv_params`]):
+    /// algorithm + knobs + blocking, used verbatim for conv plans.
+    conv: Option<(ConvConfig, BlockedParams)>,
+}
+
+/// The small-problem threads heuristic: auto-threaded (`threads: 0`)
+/// fallback params plan serially below the flop cutoff.
+fn heuristic_params(params: BlockedParams, flops: u64) -> BlockedParams {
+    if params.threads == 0 && flops < SMALL_PROBLEM_FLOP_CUTOFF {
+        BlockedParams { threads: 1, ..params }
+    } else {
+        params
+    }
+}
+
+impl Fallback {
+    fn gemm_params(&self, meta: &ArtifactMeta) -> BlockedParams {
+        if self.explicit {
+            self.params
+        } else {
+            heuristic_params(self.params, meta.flops)
+        }
+    }
+
+    fn conv_params(
+        &self,
+        meta: &ArtifactMeta,
+    ) -> (ConvConfig, BlockedParams) {
+        match self.conv {
+            Some((config, blocked)) => (config, blocked),
+            None => (ConvConfig::im2col(), self.gemm_params(meta)),
+        }
+    }
+}
+
+/// Resolve the GEMM blocking parameters an artifact will execute with: a
 /// tuned entry from the selection DB when one exists for this problem
-/// class on this platform, the engine's configured params otherwise.
+/// class on this platform, the engine fallback otherwise.
 fn resolve_params(
     meta: &ArtifactMeta,
-    fallback: BlockedParams,
+    fallback: &Fallback,
     tuning: Option<&SelectionDb>,
     device: &str,
 ) -> BlockedParams {
@@ -226,19 +322,45 @@ fn resolve_params(
                 .and_then(|key| db.get_blocked(&key))
         })
         .map(|(params, _gflops)| params)
-        .unwrap_or(fallback)
+        .unwrap_or_else(|| fallback.gemm_params(meta))
+}
+
+/// Resolve the conv algorithm + parameters: a measured `ConvNative`
+/// selection first, then a legacy `Blocked` selection (pre-algorithm
+/// DBs: im2col under those params), then the engine fallback.
+fn resolve_conv(
+    meta: &ArtifactMeta,
+    fallback: &Fallback,
+    tuning: Option<&SelectionDb>,
+    device: &str,
+) -> (ConvConfig, BlockedParams) {
+    if let (Some(db), Some(key)) = (tuning, selection_key_for(meta, device))
+    {
+        if let Some((config, blocked, _)) = db.get_conv_native(&key) {
+            return (config, blocked);
+        }
+        if let Some((params, _)) = db.get_blocked(&key) {
+            return (ConvConfig::im2col(), params);
+        }
+    }
+    fallback.conv_params(meta)
 }
 
 fn build_plan(
     meta: &ArtifactMeta,
-    fallback: BlockedParams,
+    fallback: &Fallback,
     tuning: Option<&SelectionDb>,
     device: &str,
 ) -> Result<Plan> {
-    let params = resolve_params(meta, fallback, tuning, device);
     match meta.kind.as_str() {
-        "gemm" => gemm_plan(meta, params),
-        "conv" => conv_plan(meta, params),
+        "gemm" => {
+            gemm_plan(meta, resolve_params(meta, fallback, tuning, device))
+        }
+        "conv" => {
+            let (conv, params) =
+                resolve_conv(meta, fallback, tuning, device);
+            conv_plan(meta, conv, params)
+        }
         other => Err(Error::Runtime(format!(
             "{}: unknown op kind {other:?} — the native backend executes \
              \"gemm\" and \"conv\" artifacts only",
@@ -255,11 +377,12 @@ fn build_plan(
 pub struct NativeEngine {
     store: ArtifactStore,
     plans: HashMap<String, Plan>,
-    params: BlockedParams,
-    /// Per-host tuning DB (`tuner::tune_blocked_sweep` output).  When
-    /// present, plans resolve their blocking parameters from it.  Held
-    /// behind an `Arc` so every actor of an engine pool shares one
-    /// read-only copy instead of cloning the DB per actor.
+    fallback: Fallback,
+    /// Per-host tuning DB (`tuner::tune_blocked_sweep` /
+    /// `tuner::tune_conv_native_sweep` output).  When present, plans
+    /// resolve their parameters — including the conv algorithm — from
+    /// it.  Held behind an `Arc` so every actor of an engine pool shares
+    /// one read-only copy instead of cloning the DB per actor.
     tuning: Option<Arc<SelectionDb>>,
     /// Platform string tuned selections are keyed under.
     device: String,
@@ -271,19 +394,25 @@ impl NativeEngine {
         Ok(Self {
             store,
             plans: HashMap::new(),
-            params: BlockedParams::default(),
+            fallback: Fallback {
+                params: BlockedParams::default(),
+                explicit: false,
+                conv: None,
+            },
             tuning: None,
             device: HOST_DEVICE.to_string(),
         })
     }
 
     /// Create an engine with explicit host blocking parameters (the CPU
-    /// analogue of picking a kernel configuration per device).
+    /// analogue of picking a kernel configuration per device).  Explicit
+    /// params are used verbatim — the small-problem threads heuristic
+    /// only shapes the built-in defaults.
     pub fn with_params(store: ArtifactStore, params: BlockedParams) -> Self {
         Self {
             store,
             plans: HashMap::new(),
-            params,
+            fallback: Fallback { params, explicit: true, conv: None },
             tuning: None,
             device: HOST_DEVICE.to_string(),
         }
@@ -291,8 +420,9 @@ impl NativeEngine {
 
     /// Create an engine that consults a per-host tuning DB at plan time:
     /// artifacts whose problem class has a measured winner execute with
-    /// the tuned `BlockedParams`, the rest with the defaults.  This is
-    /// the deployment shape: run the sweep once per host, ship the DB.
+    /// the tuned parameters — for conv problems including the winning
+    /// *algorithm* — the rest with the defaults.  This is the deployment
+    /// shape: run the sweep once per host, ship the DB.
     pub fn with_tuning(store: ArtifactStore, tuning: SelectionDb) -> Self {
         Self::with_shared_tuning(store, Arc::new(tuning))
     }
@@ -300,8 +430,8 @@ impl NativeEngine {
     /// Like [`NativeEngine::with_tuning`], but sharing an existing
     /// reference-counted DB.  This is how an engine pool gives all of
     /// its actors one read-only copy of the host selections, so every
-    /// actor plans with the same tuned `BlockedParams` at zero
-    /// per-actor memory cost.
+    /// actor plans with the same tuned parameters at zero per-actor
+    /// memory cost.
     pub fn with_shared_tuning(
         store: ArtifactStore,
         tuning: Arc<SelectionDb>,
@@ -309,16 +439,38 @@ impl NativeEngine {
         Self {
             store,
             plans: HashMap::new(),
-            params: BlockedParams::default(),
+            fallback: Fallback {
+                params: BlockedParams::default(),
+                explicit: false,
+                conv: None,
+            },
             tuning: Some(tuning),
             device: HOST_DEVICE.to_string(),
         }
     }
 
     /// Replace the fallback blocking parameters.  Invalidates the plan
-    /// cache — plans embed the params they resolved.
+    /// cache — plans embed the params they resolved.  Explicitly set
+    /// params bypass the small-problem threads heuristic (this is what
+    /// lets the tuner measure `threads: 0` grid points on small shapes).
     pub fn set_params(&mut self, params: BlockedParams) {
-        self.params = params;
+        self.fallback.params = params;
+        self.fallback.explicit = true;
+        self.plans.clear();
+    }
+
+    /// Set the engine-wide conv override: the algorithm (+ tile/vector
+    /// knobs) and GEMM blocking every conv plan without a tuned DB entry
+    /// resolves to.  Invalidates the plan cache.  This is the handle the
+    /// measured conv sweep drives (`tuner::tune_conv_native_sweep`);
+    /// shapes an algorithm cannot compute still fall back to im2col at
+    /// plan time.
+    pub fn set_conv_params(
+        &mut self,
+        config: ConvConfig,
+        blocked: BlockedParams,
+    ) {
+        self.fallback.conv = Some((config, blocked));
         self.plans.clear();
     }
 
@@ -330,7 +482,12 @@ impl NativeEngine {
 
     /// The fallback blocking parameters currently configured.
     pub fn params(&self) -> BlockedParams {
-        self.params
+        self.fallback.params
+    }
+
+    /// The engine-wide conv override, if one was set.
+    pub fn conv_params(&self) -> Option<(ConvConfig, BlockedParams)> {
+        self.fallback.conv
     }
 
     /// The blocking parameters artifact `name` will execute with —
@@ -340,14 +497,26 @@ impl NativeEngine {
         Ok(self.plan(name)?.params())
     }
 
+    /// The conv configuration artifact `name` will execute with —
+    /// `None` for non-conv artifacts.  The `algorithm` field is the
+    /// *resolved* one (post im2col fallback), so this is the ground
+    /// truth for "which algorithm won" in tests and tuning reports.
+    pub fn planned_conv(&mut self, name: &str) -> Result<Option<ConvConfig>> {
+        Ok(self.plan(name)?.conv_config())
+    }
+
     /// Plan (or fetch the cached plan for) an artifact.
     fn plan(&mut self, name: &str) -> Result<Plan> {
         if let Some(plan) = self.plans.get(name) {
             return Ok(plan.clone());
         }
         let meta = self.store.get(name)?;
-        let plan =
-            build_plan(meta, self.params, self.tuning.as_deref(), &self.device)?;
+        let plan = build_plan(
+            meta,
+            &self.fallback,
+            self.tuning.as_deref(),
+            &self.device,
+        )?;
         self.plans.insert(name.to_string(), plan.clone());
         Ok(plan)
     }
@@ -374,11 +543,12 @@ impl NativeEngine {
                 }
                 vec![out]
             }
-            Plan::Conv { shape, fuse_relu, params } => {
-                let mut out = conv2d_im2col(
+            Plan::Conv { shape, fuse_relu, conv, params } => {
+                let mut out = conv2d_native(
                     &inputs[0],
                     &inputs[1],
                     shape,
+                    conv,
                     params,
                 );
                 if *fuse_relu {
@@ -690,6 +860,8 @@ mod tests {
         use crate::tuner::{SelectionDb, SelectionKey};
 
         // DB tuned for a *different* problem class: g8 must fall back.
+        // g8 is tiny (1024 flops), so the fallback is the default params
+        // shaped by the small-problem heuristic: serial threads.
         let mut db = SelectionDb::new();
         db.put_blocked(
             SelectionKey::gemm(HOST_DEVICE, 512, 512, 512),
@@ -698,14 +870,21 @@ mod tests {
         );
         let (_dir, plain) = engine_with(GEMM_8);
         let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
-        assert_eq!(e.planned_params("g8").unwrap(), BlockedParams::default());
+        assert_eq!(
+            e.planned_params("g8").unwrap(),
+            BlockedParams { threads: 1, ..Default::default() }
+        );
     }
 
     #[test]
     fn set_params_invalidates_cached_plans() {
         let (_dir, mut e) = engine_with(GEMM_8);
         e.warm("g8").unwrap();
-        assert_eq!(e.planned_params("g8").unwrap(), BlockedParams::default());
+        // Default fallback on a tiny problem: heuristic serial threads.
+        assert_eq!(
+            e.planned_params("g8").unwrap(),
+            BlockedParams { threads: 1, ..Default::default() }
+        );
         let small =
             BlockedParams { bm: 4, bn: 4, bk: 4, mr: 2, nr: 2, threads: 2 };
         e.set_params(small);
@@ -716,6 +895,195 @@ mod tests {
             "re-planned entries must use the new params"
         );
         assert_eq!(e.params(), small);
+    }
+
+    #[test]
+    fn small_problems_default_to_serial_threads() {
+        // The heuristic cutoff: a tiny GEMM plans threads: 1, a big one
+        // keeps auto threads — and the boundary is the manifest flops.
+        let (_dir, mut e) = engine_with(
+            r#"[{
+            "name": "big", "kind": "gemm", "impl": "pallas",
+            "file": "big.hlo.txt", "flops": 33554432,
+            "m": 256, "n": 256, "k": 256,
+            "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                       {"shape": [256, 256], "dtype": "float32"}],
+            "groups": ["gemm"]},
+           {"name": "tiny", "kind": "gemm", "impl": "pallas",
+            "file": "tiny.hlo.txt", "flops": 1024,
+            "m": 8, "n": 8, "k": 8,
+            "inputs": [{"shape": [8, 8], "dtype": "float32"},
+                       {"shape": [8, 8], "dtype": "float32"}],
+            "groups": ["gemm"]}]"#,
+        );
+        let big_flops = e.store().get("big").unwrap().flops;
+        assert!(big_flops >= SMALL_PROBLEM_FLOP_CUTOFF);
+        assert_eq!(e.planned_params("tiny").unwrap().threads, 1);
+        assert_eq!(
+            e.planned_params("big").unwrap().threads,
+            0,
+            "above the cutoff the auto-threads default stands"
+        );
+    }
+
+    #[test]
+    fn explicit_params_bypass_the_small_problem_heuristic() {
+        // with_params / set_params mean "I chose this": the heuristic
+        // must not rewrite an explicit threads: 0 on a small problem
+        // (this is how the tuner measures auto-threaded grid points).
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_params(
+            plain.store.clone(),
+            BlockedParams::default(),
+        );
+        assert_eq!(e.planned_params("g8").unwrap().threads, 0);
+        let (_dir2, mut e2) = engine_with(GEMM_8);
+        e2.set_params(BlockedParams::default());
+        assert_eq!(e2.planned_params("g8").unwrap().threads, 0);
+    }
+
+    #[test]
+    fn tuner_selection_overrides_the_threads_heuristic() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A measured winner with threads: 4 on a problem the heuristic
+        // would plan serially — the DB wins, verbatim.
+        let tuned =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 4 };
+        let mut db = SelectionDb::new();
+        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 2.0);
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        assert_eq!(e.planned_params("g8").unwrap(), tuned);
+    }
+
+    /// A 3x3/stride-1 conv artifact (the winograd-eligible shape).
+    const CONV_3X3: &str = r#"[{
+        "name": "c33", "kind": "conv", "impl": "pallas",
+        "file": "c33.hlo.txt", "flops": 55296, "batch": 1,
+        "algorithm": "im2col", "groups": ["conv"],
+        "layer": {"name": "c33", "window": 3, "stride": 1,
+                  "in_h": 8, "in_w": 8, "in_c": 3, "out_c": 4,
+                  "out_h": 8, "out_w": 8, "padding": "SAME",
+                  "flops": 55296},
+        "inputs": [{"shape": [1, 8, 8, 3], "dtype": "float32"},
+                   {"shape": [3, 3, 3, 4], "dtype": "float32"}]}]"#;
+
+    #[test]
+    fn conv_plans_resolve_the_algorithm_from_the_db() {
+        use crate::config::ConvAlgorithm;
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let winner = ConvConfig::winograd(2);
+        let blocked =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
+        let mut db = SelectionDb::new();
+        db.put_conv_native(
+            SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
+            winner,
+            blocked,
+            4.0,
+        );
+        let (_dir, plain) = engine_with(CONV_3X3);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_conv("c33").unwrap().unwrap();
+        assert_eq!(planned.algorithm, ConvAlgorithm::Winograd);
+        assert_eq!(planned, winner);
+        assert_eq!(e.planned_params("c33").unwrap(), blocked);
+        // The winograd plan still computes the right answer.
+        let inputs = e.synth_inputs("c33", 13).unwrap();
+        let out = e.run("c33", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 8, 8, 3, 4, 3, 1);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+        // GEMM artifacts report no conv config.
+        let (_dir2, mut g) = engine_with(GEMM_8);
+        assert!(g.planned_conv("g8").unwrap().is_none());
+    }
+
+    #[test]
+    fn legacy_blocked_conv_selection_resolves_as_im2col() {
+        use crate::config::ConvAlgorithm;
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // Pre-algorithm DBs stored conv winners as plain Blocked
+        // entries; they must keep planning as im2col under those params.
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 2 };
+        let mut db = SelectionDb::new();
+        db.put_blocked(
+            SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
+            params,
+            3.0,
+        );
+        let (_dir, plain) = engine_with(CONV_3X3);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_conv("c33").unwrap().unwrap();
+        assert_eq!(planned.algorithm, ConvAlgorithm::Im2col);
+        assert_eq!(e.planned_params("c33").unwrap(), params);
+    }
+
+    #[test]
+    fn winograd_selection_falls_back_to_im2col_off_its_domain() {
+        use crate::config::ConvAlgorithm;
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A strided conv with a (bogus) winograd selection: the plan
+        // must resolve the fallback so what planned_conv reports is what
+        // executes.
+        let (_dir, plain) = engine_with(
+            r#"[{
+            "name": "cs2", "kind": "conv", "impl": "pallas",
+            "file": "cs2.hlo.txt", "flops": 9216, "batch": 1,
+            "layer": {"name": "s2", "window": 3, "stride": 2,
+                      "in_h": 8, "in_w": 8, "in_c": 2, "out_c": 4,
+                      "out_h": 4, "out_w": 4, "padding": "SAME",
+                      "flops": 9216},
+            "inputs": [{"shape": [1, 8, 8, 2], "dtype": "float32"},
+                       {"shape": [3, 3, 2, 4], "dtype": "float32"}],
+            "groups": ["conv"]}]"#,
+        );
+        let mut db = SelectionDb::new();
+        db.put_conv_native(
+            SelectionKey::conv(HOST_DEVICE, 3, 2, 8, 8, 2, 4, 1),
+            ConvConfig::winograd(2),
+            BlockedParams::default(),
+            1.0,
+        );
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_conv("cs2").unwrap().unwrap();
+        assert_eq!(planned.algorithm, ConvAlgorithm::Im2col);
+        let inputs = e.synth_inputs("cs2", 5).unwrap();
+        let out = e.run("cs2", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 8, 8, 2, 4, 3, 2);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+    }
+
+    #[test]
+    fn set_conv_params_drives_the_dispatch() {
+        use crate::config::ConvAlgorithm;
+
+        let (_dir, mut e) = engine_with(CONV_3X3);
+        // Default: im2col.
+        assert_eq!(
+            e.planned_conv("c33").unwrap().unwrap().algorithm,
+            ConvAlgorithm::Im2col
+        );
+        // Engine-wide override: the tiled family.
+        let cfg = ConvConfig::tiled(2, 2, 1, 4);
+        let blocked =
+            BlockedParams { threads: 1, ..BlockedParams::default() };
+        e.set_conv_params(cfg, blocked);
+        assert_eq!(e.cached(), 0, "set_conv_params must drop stale plans");
+        assert_eq!(e.planned_conv("c33").unwrap().unwrap(), cfg);
+        assert_eq!(e.conv_params(), Some((cfg, blocked)));
+        let inputs = e.synth_inputs("c33", 23).unwrap();
+        let out = e.run("c33", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 8, 8, 3, 4, 3, 1);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        // The tiled path is bit-identical to the direct oracle.
+        assert_eq!(out.outputs[0], expected);
     }
 
     #[test]

@@ -99,6 +99,20 @@ pub enum Selection {
         /// Its measured throughput, GFLOP/s.
         gflops: f64,
     },
+    /// A measured native convolution selection: the winning *algorithm*
+    /// plus its knobs (`tuner::tune_conv_native_sweep`) — the
+    /// [`ConvConfig`] names the algorithm (tiled/im2col/winograd) and
+    /// its tile/vector parameters, the [`BlockedParams`] carry the
+    /// im2col GEMM blocking and the `threads` knob every path honors.
+    /// `NativeEngine` resolves conv plans from these first.
+    ConvNative {
+        /// Winning algorithm + tile/vector configuration.
+        config: ConvConfig,
+        /// Winning GEMM blocking (im2col path) and `threads`.
+        blocked: BlockedParams,
+        /// Its measured throughput, GFLOP/s.
+        gflops: f64,
+    },
 }
 
 fn blocked_to_json(p: &BlockedParams) -> Value {
@@ -257,6 +271,35 @@ impl SelectionDb {
         }
     }
 
+    /// Store a measured native conv selection (algorithm + knobs) for a
+    /// problem class.
+    pub fn put_conv_native(
+        &mut self,
+        key: SelectionKey,
+        config: ConvConfig,
+        blocked: BlockedParams,
+        gflops: f64,
+    ) {
+        self.entries.insert(
+            key.as_string(),
+            Selection::ConvNative { config, blocked, gflops },
+        );
+    }
+
+    /// Look up a measured native conv selection
+    /// (config + blocked + GFLOP/s).
+    pub fn get_conv_native(
+        &self,
+        key: &SelectionKey,
+    ) -> Option<(ConvConfig, BlockedParams, f64)> {
+        match self.entries.get(&key.as_string()) {
+            Some(Selection::ConvNative { config, blocked, gflops }) => {
+                Some((*config, *blocked, *gflops))
+            }
+            _ => None,
+        }
+    }
+
     /// Number of stored selections.
     pub fn len(&self) -> usize {
         self.entries.len()
@@ -291,6 +334,20 @@ impl SelectionDb {
                     o.set("kind", "blocked")
                         .set("config", blocked_to_json(params))
                         .set("name", params.name())
+                        .set("gflops", *gflops);
+                }
+                Selection::ConvNative { config, blocked, gflops } => {
+                    // The top-level "algorithm" duplicates
+                    // config.algorithm so reports (and the CI check) can
+                    // read the chosen algorithm without digging.
+                    o.set("kind", "conv_native")
+                        .set("algorithm", config.algorithm.as_str())
+                        .set("config", conv_to_json(config))
+                        .set("blocked", blocked_to_json(blocked))
+                        .set(
+                            "name",
+                            format!("{}+{}", config.name(), blocked.name()),
+                        )
                         .set("gflops", *gflops);
                 }
             }
@@ -330,6 +387,23 @@ impl SelectionDb {
                     )?)?,
                     gflops,
                 },
+                Some("conv_native") => {
+                    let config = conv_from_json(e.get("config").ok_or_else(
+                        || Error::Json(format!("{k}: missing config")),
+                    )?)?;
+                    config.validate().map_err(|err| {
+                        Error::Json(format!("{k}: {err}"))
+                    })?;
+                    Selection::ConvNative {
+                        config,
+                        blocked: blocked_from_json(
+                            e.get("blocked").ok_or_else(|| {
+                                Error::Json(format!("{k}: missing blocked"))
+                            })?,
+                        )?,
+                        gflops,
+                    }
+                }
                 other => {
                     return Err(Error::Json(format!("{k}: bad kind {other:?}")))
                 }
@@ -443,6 +517,69 @@ mod tests {
         assert!(loaded
             .get_gemm(&SelectionKey::gemm("host", 96, 96, 96))
             .is_none());
+    }
+
+    #[test]
+    fn roundtrip_conv_native_via_disk() {
+        let mut db = SelectionDb::new();
+        let cfg = ConvConfig::winograd(2);
+        let blk = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
+        };
+        let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
+        db.put_conv_native(key.clone(), cfg, blk, 5.5);
+        db.put_conv_native(
+            SelectionKey::conv("host", 3, 1, 32, 32, 16, 32, 2),
+            ConvConfig::tiled(2, 2, 1, 4),
+            BlockedParams::default(),
+            7.75,
+        );
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("convnative.json");
+        db.save(&path).unwrap();
+        // The serialized entry carries the algorithm twice: once inside
+        // the config, once as the top-level report column.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""kind": "conv_native""#), "{text}");
+        assert!(text.contains(r#""algorithm": "winograd""#), "{text}");
+        let loaded = SelectionDb::load(&path).unwrap();
+        let (c, b, g) = loaded.get_conv_native(&key).unwrap();
+        assert_eq!(c, cfg);
+        assert_eq!(b, blk);
+        assert_eq!(g, 5.5);
+        // A conv_native entry never answers blocked/conv lookups.
+        assert!(loaded.get_blocked(&key).is_none());
+        assert!(loaded.get_conv(&key).is_none());
+    }
+
+    #[test]
+    fn conv_native_invalid_config_rejected_on_load() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("bad_cn.json");
+        // wino_m 3 is outside the supported set: load must fail loudly.
+        std::fs::write(
+            &path,
+            r#"{"host::conv_3x3s1_8x8x4k4b1": {"kind": "conv_native",
+                "gflops": 1.0,
+                "config": {"tile_h": 1, "tile_w": 1, "vec_c": 1,
+                           "vec_k": 1, "block_k": 0,
+                           "algorithm": "winograd", "wino_m": 3},
+                "blocked": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                            "threads": 1}}}"#,
+        )
+        .unwrap();
+        assert!(SelectionDb::load(&path).is_err());
+        // Missing the blocked half is just as fatal.
+        std::fs::write(
+            &path,
+            r#"{"host::conv_3x3s1_8x8x4k4b1": {"kind": "conv_native",
+                "gflops": 1.0,
+                "config": {"tile_h": 1, "tile_w": 1, "vec_c": 1,
+                           "vec_k": 1, "block_k": 0,
+                           "algorithm": "tiled", "wino_m": 2}}}"#,
+        )
+        .unwrap();
+        assert!(SelectionDb::load(&path).is_err());
     }
 
     #[test]

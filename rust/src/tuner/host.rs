@@ -1,9 +1,12 @@
-//! Measured per-host sweep over the `BlockedParams` × `threads` grid.
+//! Measured per-host sweeps: the `BlockedParams` × `threads` grid for
+//! GEMM and the `ConvAlgorithm × ConvConfig × threads` grid for
+//! convolutions.
 //!
 //! This is the paper's headline workflow run end-to-end on hardware we
-//! actually own: enumerate kernel parameter combinations, *measure* each
-//! one through a [`Backend`] (no model in the loop), and persist the
-//! winner per (platform, problem class) into the [`SelectionDb`] that
+//! actually own: enumerate kernel parameter combinations — including
+//! *which algorithm* runs, the §4.1 axis — *measure* each one through a
+//! [`Backend`] (no model in the loop), and persist the winner per
+//! (platform, problem class) into the [`SelectionDb`] that
 //! `NativeEngine` consults at plan time.  Measured — not modeled — sweeps
 //! are what make the portability claim credible (cf. Reguly,
 //! arXiv:2309.10075); CI runs the quick variant on every merge via
@@ -12,7 +15,8 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::blas::BlockedParams;
+use crate::blas::{native_conv_algorithm_dims, BlockedParams};
+use crate::config::{micro_kernel_shapes, ConvAlgorithm, ConvConfig};
 use crate::error::Result;
 use crate::runtime::{ArtifactMeta, Backend};
 
@@ -62,8 +66,10 @@ impl BlockedSweep {
 }
 
 /// The base `BlockedParams` candidate sets — the same serial candidates
-/// the `blocked.rs` tests and the `rust_blas` bench exercise, so the
-/// sweep measures configurations the suite already proves correct.
+/// the `blocked.rs` tests and the `rust_blas` bench exercise, widened
+/// over the monomorphized `(mr, nr)` registry
+/// ([`crate::config::micro_kernel_shapes`]) so the sweep measures the
+/// whole fast micro-tile set, not a hand-picked subset.
 pub fn blocked_candidates(quick: bool) -> Vec<BlockedParams> {
     let p = |bm, bn, bk, mr, nr| BlockedParams {
         bm,
@@ -73,23 +79,44 @@ pub fn blocked_candidates(quick: bool) -> Vec<BlockedParams> {
         nr,
         threads: 1,
     };
-    if quick {
-        // Tiny grid for the CI smoke sweep.
+    let mut out = if quick {
+        // Tiny grid for the CI smoke sweep, plus registry shapes beyond
+        // the historical hand-written set so the widened axis is always
+        // exercised.
         vec![
             BlockedParams { threads: 1, ..Default::default() },
             p(32, 32, 32, 4, 8),
             p(16, 32, 16, 4, 8),
+            p(32, 32, 32, 2, 16),
+            p(32, 32, 32, 16, 8),
         ]
     } else {
-        vec![
+        let mut v = vec![
             BlockedParams { threads: 1, ..Default::default() },
             p(8, 8, 8, 2, 2),
             p(16, 32, 5, 4, 8),
             p(64, 64, 64, 8, 16),
             p(32, 32, 32, 4, 8),
             p(128, 128, 64, 8, 16),
-        ]
-    }
+        ];
+        // The full mr × nr registry at one representative blocking.
+        for &(mr, nr) in micro_kernel_shapes() {
+            v.push(p(64, 64, 64, mr, nr));
+        }
+        v
+    };
+    // Order-preserving dedup (the registry cross re-generates a couple
+    // of the hand-written entries).
+    let mut seen: Vec<BlockedParams> = Vec::with_capacity(out.len());
+    out.retain(|c| {
+        if seen.contains(c) {
+            false
+        } else {
+            seen.push(*c);
+            true
+        }
+    });
+    out
 }
 
 /// The full sweep grid: [`blocked_candidates`] × `threads`, deduplicated,
@@ -110,6 +137,241 @@ pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
         grid.insert(0, default);
     }
     grid
+}
+
+/// One native conv sweep candidate: an algorithm + its knobs.  The
+/// [`ConvConfig`] names the algorithm and tile/vector parameters; the
+/// [`BlockedParams`] carry the im2col GEMM blocking and the `threads`
+/// knob every algorithm honors.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvCandidate {
+    /// Algorithm + tile/vector configuration.
+    pub config: ConvConfig,
+    /// im2col GEMM blocking + `threads`.
+    pub blocked: BlockedParams,
+}
+
+impl ConvCandidate {
+    /// Compact name for reports (`wino2_v1x1+bm64bn64bk64_4x8_t2` style).
+    pub fn name(&self) -> String {
+        format!("{}+{}", self.config.name(), self.blocked.name())
+    }
+}
+
+/// The base [`ConvConfig`] candidates the native conv sweep measures:
+/// im2col, a handful of tiled tile/vector shapes, and Winograd m=2 —
+/// all three §4.1 algorithm families, deliberately much smaller than
+/// the modeled `config::conv_space` (these get *measured*, every point
+/// costs wall time).
+pub fn conv_candidates(quick: bool) -> Vec<ConvConfig> {
+    let mut out = vec![ConvConfig::im2col()];
+    if quick {
+        out.push(ConvConfig::tiled(1, 1, 1, 4));
+        out.push(ConvConfig::tiled(2, 2, 1, 4));
+        out.push(ConvConfig::winograd(2));
+    } else {
+        for (th, tw, vc, vk) in
+            [(1, 1, 1, 4), (2, 2, 1, 4), (4, 4, 4, 4), (2, 4, 1, 8)]
+        {
+            out.push(ConvConfig::tiled(th, tw, vc, vk));
+        }
+        out.push(ConvConfig::winograd(2));
+    }
+    out
+}
+
+/// The full native conv grid: [`conv_candidates`] × `threads`, im2col
+/// additionally crossed with the [`blocked_candidates`] GEMM blockings,
+/// deduplicated, with the plain default im2col candidate always present
+/// as the untuned baseline.
+pub fn conv_native_grid(
+    quick: bool,
+    threads: &[usize],
+) -> Vec<ConvCandidate> {
+    let mut grid: Vec<ConvCandidate> = Vec::new();
+    let push = |grid: &mut Vec<ConvCandidate>, cand: ConvCandidate| {
+        if !grid.contains(&cand) {
+            grid.push(cand);
+        }
+    };
+    for config in conv_candidates(quick) {
+        // Only the im2col path uses the GEMM blocking; other algorithms
+        // read just `threads` from it, so sweeping blockings for them
+        // would time the same kernel repeatedly.
+        let bases: Vec<BlockedParams> =
+            if config.algorithm == ConvAlgorithm::Im2col {
+                blocked_candidates(quick)
+            } else {
+                vec![BlockedParams { threads: 1, ..Default::default() }]
+            };
+        for base in bases {
+            for &t in threads {
+                push(
+                    &mut grid,
+                    ConvCandidate {
+                        config,
+                        blocked: BlockedParams { threads: t, ..base },
+                    },
+                );
+            }
+        }
+    }
+    let default = ConvCandidate {
+        config: ConvConfig::im2col(),
+        blocked: BlockedParams::default(),
+    };
+    if !grid.contains(&default) {
+        grid.insert(0, default);
+    }
+    grid
+}
+
+/// One timed conv grid point.
+#[derive(Debug, Clone)]
+pub struct ConvSweepMeasurement {
+    /// Problem-class op key the winner persists under.
+    pub problem: String,
+    /// Artifact the measurement executed.
+    pub artifact: String,
+    /// Candidate this grid point timed.
+    pub candidate: ConvCandidate,
+    /// Best (minimum) execution time over the repetitions.
+    pub best: Duration,
+    /// Measured throughput, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// A finished native conv sweep: every measurement plus the per-problem
+/// winners that were persisted as [`super::Selection::ConvNative`].
+#[derive(Debug, Default)]
+pub struct ConvNativeSweep {
+    /// Every timed grid point, in measurement order.
+    pub rows: Vec<ConvSweepMeasurement>,
+    /// Winner per problem-class op key.
+    pub winners: BTreeMap<String, (ConvCandidate, f64)>,
+}
+
+impl ConvNativeSweep {
+    /// Best measured gflops for a problem under exactly `candidate`.
+    pub fn gflops_for(
+        &self,
+        problem: &str,
+        candidate: &ConvCandidate,
+    ) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.problem == problem && r.candidate == *candidate)
+            .map(|r| r.gflops)
+            .reduce(f64::max)
+    }
+
+    /// The distinct algorithms measured for a problem — the sweep's
+    /// proof that the algorithm axis was actually swept, not collapsed.
+    pub fn algorithms_for(&self, problem: &str) -> Vec<ConvAlgorithm> {
+        let mut algs: Vec<ConvAlgorithm> = Vec::new();
+        for r in self.rows.iter().filter(|r| r.problem == problem) {
+            if !algs.contains(&r.candidate.config.algorithm) {
+                algs.push(r.candidate.config.algorithm);
+            }
+        }
+        algs
+    }
+}
+
+/// Measure every conv artifact in `group` under every applicable grid
+/// point and persist the per-problem winner into `db` as a
+/// [`super::Selection::ConvNative`] entry.
+///
+/// "Applicable" applies the native fallback rule per artifact shape:
+/// candidates whose algorithm would fall back (e.g. Winograd on a
+/// strided layer) are skipped rather than timed as im2col duplicates.
+/// `apply` installs a candidate on the engine before timing — for
+/// `NativeEngine` that is `|e, c| e.set_conv_params(c.config,
+/// c.blocked)`.
+pub fn tune_conv_native_sweep<B: Backend>(
+    engine: &mut B,
+    group: &str,
+    grid: &[ConvCandidate],
+    iters: usize,
+    device: &str,
+    apply: &mut dyn FnMut(&mut B, &ConvCandidate),
+    db: &mut SelectionDb,
+) -> Result<ConvNativeSweep> {
+    let metas: Vec<ArtifactMeta> = engine
+        .store()
+        .in_group(group)
+        .filter(|m| m.kind == "conv")
+        .cloned()
+        .collect();
+    let mut sweep = ConvNativeSweep::default();
+    for meta in metas {
+        let Some(key) = selection_key_for(&meta, device) else {
+            continue;
+        };
+        let Some(layer) = meta.layer.as_ref() else {
+            continue;
+        };
+        // Keep only candidates that run their own algorithm on this
+        // shape — the engine's plan-time fallback rule, verbatim, so
+        // the sweep can never time a fallback duplicate the plan would
+        // resolve differently.
+        let applicable: Vec<&ConvCandidate> = grid
+            .iter()
+            .filter(|c| {
+                native_conv_algorithm_dims(
+                    &c.config,
+                    layer.window,
+                    layer.stride,
+                ) == c.config.algorithm
+            })
+            .collect();
+        if applicable.is_empty() {
+            continue;
+        }
+        let inputs = engine.synth_inputs(&meta.name, 17)?;
+        let mut run_err = None;
+        let mut score = |i: usize| -> Option<f64> {
+            apply(engine, applicable[i]);
+            match engine.run_timed(&meta.name, &inputs, iters) {
+                Ok((out, best)) => {
+                    let gflops = out.gflops(meta.flops);
+                    sweep.rows.push(ConvSweepMeasurement {
+                        problem: key.op.clone(),
+                        artifact: meta.name.clone(),
+                        candidate: *applicable[i],
+                        best,
+                        gflops,
+                    });
+                    Some(gflops)
+                }
+                Err(e) => {
+                    run_err = Some(e);
+                    None
+                }
+            }
+        };
+        let found = ExhaustiveSearch.search(applicable.len(), &mut score);
+        if let Some(e) = run_err {
+            return Err(e);
+        }
+        if let Some((idx, _evals, gflops)) = found {
+            let better = db
+                .get_conv_native(&key)
+                .map(|(_, _, g)| gflops > g)
+                .unwrap_or(true);
+            if better {
+                let win = *applicable[idx];
+                db.put_conv_native(
+                    key.clone(),
+                    win.config,
+                    win.blocked,
+                    gflops,
+                );
+                sweep.winners.insert(key.op.clone(), (win, gflops));
+            }
+        }
+    }
+    Ok(sweep)
 }
 
 /// Derive the tuning-DB key for an artifact on `device` (the platform
@@ -353,6 +615,151 @@ mod tests {
             .gflops_for(&key.op, &BlockedParams::default())
             .unwrap();
         assert!(tuned >= dflt);
+    }
+
+    #[test]
+    fn conv_grid_sweeps_all_three_algorithms() {
+        for quick in [true, false] {
+            let grid = conv_native_grid(quick, &[1, 2]);
+            for alg in [
+                ConvAlgorithm::Im2col,
+                ConvAlgorithm::Tiled,
+                ConvAlgorithm::Winograd,
+            ] {
+                assert!(
+                    grid.iter().any(|c| c.config.algorithm == alg),
+                    "quick={quick}: {alg} missing from the grid"
+                );
+            }
+            // Dedup + the untuned baseline is always present.
+            for (i, c) in grid.iter().enumerate() {
+                assert!(!grid[i + 1..].contains(c), "{} duplicated", c.name());
+            }
+            assert!(grid.contains(&ConvCandidate {
+                config: ConvConfig::im2col(),
+                blocked: BlockedParams::default(),
+            }));
+            // The threads axis is crossed into every algorithm family.
+            for alg in [ConvAlgorithm::Tiled, ConvAlgorithm::Winograd] {
+                assert!(grid
+                    .iter()
+                    .any(|c| c.config.algorithm == alg
+                        && c.blocked.threads == 2));
+            }
+        }
+    }
+
+    #[test]
+    fn conv_sweep_measures_algorithms_and_persists_conv_native() {
+        let (_dir, mut engine) = sweep_fixture();
+        let grid = conv_native_grid(true, &[1, 2]);
+        let mut db = SelectionDb::new();
+        let sweep = tune_conv_native_sweep(
+            &mut engine,
+            "conv",
+            &grid,
+            2,
+            HOST_DEVICE,
+            &mut |e, c| e.set_conv_params(c.config, c.blocked),
+            &mut db,
+        )
+        .unwrap();
+        // c16 is 3x3/s1: every candidate applies, so the whole grid was
+        // measured and all three algorithms ran natively.
+        assert_eq!(sweep.rows.len(), grid.len());
+        let key = SelectionKey::conv(HOST_DEVICE, 3, 1, 16, 16, 8, 16, 2);
+        let algs = sweep.algorithms_for(&key.op);
+        for alg in [
+            ConvAlgorithm::Im2col,
+            ConvAlgorithm::Tiled,
+            ConvAlgorithm::Winograd,
+        ] {
+            assert!(algs.contains(&alg), "{alg} never measured: {algs:?}");
+        }
+        // The persisted winner is the argmax and beats (or ties) the
+        // untuned default, which is in the grid by construction.
+        let (wc, wb, wg) = db.get_conv_native(&key).unwrap();
+        let (win, win_g) = &sweep.winners[&key.op];
+        assert_eq!((wc, wb), (win.config, win.blocked));
+        assert_eq!(wg, *win_g);
+        let default = ConvCandidate {
+            config: ConvConfig::im2col(),
+            blocked: BlockedParams::default(),
+        };
+        let dflt = sweep.gflops_for(&key.op, &default).unwrap();
+        assert!(wg >= dflt);
+        // GEMM artifacts are untouched by the conv sweep.
+        assert!(db
+            .get_conv_native(&SelectionKey::gemm(HOST_DEVICE, 96, 96, 96))
+            .is_none());
+    }
+
+    #[test]
+    fn conv_sweep_skips_winograd_off_its_domain() {
+        // A strided conv: winograd candidates must be skipped, not timed
+        // as im2col duplicates.
+        let dir = TempDir::new("hostsweep").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": [
+              {"name": "cs2", "kind": "conv", "impl": "pallas",
+               "file": "cs2.hlo.txt", "flops": 294912, "batch": 1,
+               "algorithm": "im2col", "groups": ["conv"],
+               "layer": {"name": "s2", "window": 3, "stride": 2,
+                         "in_h": 16, "in_w": 16, "in_c": 8, "out_c": 16,
+                         "out_h": 8, "out_w": 8, "padding": "SAME",
+                         "flops": 294912},
+               "inputs": [{"shape": [1, 16, 16, 8], "dtype": "float32"},
+                          {"shape": [3, 3, 8, 16], "dtype": "float32"}]}
+            ]}"#,
+        )
+        .unwrap();
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let mut engine = NativeEngine::new(store).unwrap();
+        let grid = conv_native_grid(true, &[1]);
+        let n_wino = grid
+            .iter()
+            .filter(|c| c.config.algorithm == ConvAlgorithm::Winograd)
+            .count();
+        assert!(n_wino > 0);
+        let mut db = SelectionDb::new();
+        let sweep = tune_conv_native_sweep(
+            &mut engine,
+            "conv",
+            &grid,
+            1,
+            HOST_DEVICE,
+            &mut |e, c| e.set_conv_params(c.config, c.blocked),
+            &mut db,
+        )
+        .unwrap();
+        assert_eq!(sweep.rows.len(), grid.len() - n_wino);
+        let key = SelectionKey::conv(HOST_DEVICE, 3, 2, 16, 16, 8, 16, 1);
+        assert!(!sweep
+            .algorithms_for(&key.op)
+            .contains(&ConvAlgorithm::Winograd));
+        assert!(db.get_conv_native(&key).is_some());
+    }
+
+    #[test]
+    fn widened_gemm_candidates_cover_the_registry() {
+        // Full mode sweeps every monomorphized (mr, nr); quick mode
+        // reaches beyond the historical {4x8, 8x16} hand-set.
+        let full = blocked_candidates(false);
+        for &(mr, nr) in micro_kernel_shapes() {
+            assert!(
+                full.iter().any(|p| p.mr == mr && p.nr == nr),
+                "({mr}, {nr}) missing from the full candidate set"
+            );
+        }
+        let quick = blocked_candidates(true);
+        assert!(quick.iter().any(|p| (p.mr, p.nr) == (2, 16)));
+        assert!(quick.iter().any(|p| (p.mr, p.nr) == (16, 8)));
+        for set in [&full, &quick] {
+            for (i, c) in set.iter().enumerate() {
+                assert!(!set[i + 1..].contains(c), "{c:?} duplicated");
+            }
+        }
     }
 
     #[test]

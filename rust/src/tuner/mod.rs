@@ -10,11 +10,16 @@
 //!   wall time);
 //! * [`tune_measured`] — run competing artifacts through a backend and
 //!   keep the fastest per problem;
-//! * [`tune_blocked_sweep`] — the measured per-host sweep: enumerate the
-//!   `BlockedParams` × `threads` grid, time every point through a
+//! * [`tune_blocked_sweep`] — the measured per-host GEMM sweep:
+//!   enumerate the `BlockedParams` × `threads` grid (micro-tiles drawn
+//!   from the monomorphized registry), time every point through a
 //!   [`crate::runtime::Backend`], and persist the winners — the
 //!   parametrize → measure → select loop CI runs on every merge
 //!   (`docs/TUNING.md` documents the workflow end to end);
+//! * [`tune_conv_native_sweep`] — the same loop over the convolution
+//!   *algorithm* axis: `ConvAlgorithm × ConvConfig × threads`
+//!   ([`conv_native_grid`]), persisting per-layer algorithm winners as
+//!   [`Selection::ConvNative`] entries;
 //! * [`SelectionDb`] — a persisted selection database mapping (device,
 //!   problem class) to the winning configuration, the artifact the
 //!   coordinator and `NativeEngine` consult at request/plan time — and
@@ -27,8 +32,10 @@ mod search;
 
 pub use db::{Selection, SelectionDb, SelectionKey};
 pub use host::{
-    blocked_candidates, blocked_grid, selection_key_for, tune_blocked_sweep,
-    BlockedSweep, SweepMeasurement,
+    blocked_candidates, blocked_grid, conv_candidates, conv_native_grid,
+    selection_key_for, tune_blocked_sweep, tune_conv_native_sweep,
+    BlockedSweep, ConvCandidate, ConvNativeSweep, ConvSweepMeasurement,
+    SweepMeasurement,
 };
 pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};
 pub use search::{

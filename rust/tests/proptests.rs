@@ -339,6 +339,88 @@ fn prop_parallel_conv_bit_identical_to_serial() {
     }
 }
 
+/// The conv algorithm family agrees: winograd and tiled-direct outputs
+/// match im2col within tolerance on ragged/degenerate 3×3-stride-1
+/// shapes — the shapes where all three algorithms run natively — and
+/// each algorithm is BIT-identical across thread counts (threads ∈
+/// {2, 8} vs serial).  This is the native counterpart of the paper's
+/// "the algorithm is a parameter, not a semantic" claim.
+#[test]
+fn prop_conv_algorithms_agree_on_winograd_domain() {
+    use portable_kernels::blas::{
+        conv2d_im2col, conv2d_tiled, conv2d_winograd, max_abs_diff,
+        Conv2dShape,
+    };
+    let mut rng = XorShift::new(7777);
+    for case in 0..12 {
+        // Force degenerate corners through the cycle: single-row,
+        // single-column, single-channel, and batch-of-one shapes all
+        // occur (SAME pads, so any spatial size is legal for 3x3/s1).
+        let h = match case % 4 {
+            0 => 1,
+            1 => 2,
+            _ => rng.range(3, 12) as usize,
+        };
+        let w = match case % 3 {
+            0 => 1,
+            _ => rng.range(2, 12) as usize,
+        };
+        let c = if case % 5 == 0 { 1 } else { rng.range(1, 8) as usize };
+        let k = if case % 7 == 0 { 1 } else { rng.range(1, 8) as usize };
+        let batch = rng.range(1, 3) as usize;
+        let s = Conv2dShape::same(batch, h, w, c, k, 3, 1);
+        let x = rng.f32_vec(s.input_elems());
+        let f = rng.f32_vec(s.filter_elems());
+        let params = BlockedParams {
+            bm: rng.range(1, 24) as usize,
+            bn: rng.range(1, 24) as usize,
+            bk: rng.range(1, 24) as usize,
+            mr: rng.range(1, 8) as usize,
+            nr: rng.range(1, 16) as usize,
+            threads: 1,
+        };
+        let tile = ConvConfig::tiled(
+            rng.range(1, 5) as u32,
+            rng.range(1, 5) as u32,
+            *rng.choose(&[1u32, 2, 4]),
+            *rng.choose(&[1u32, 2, 4]),
+        );
+        let reference = conv2d_im2col(&x, &f, &s, &params);
+        let tiled = conv2d_tiled(&x, &f, &s, &tile, 1);
+        let wino = conv2d_winograd(&x, &f, &s, 1);
+        assert!(
+            max_abs_diff(&reference, &tiled) < 1e-3,
+            "case {case}: tiled {} vs im2col on {s:?}",
+            tile.name()
+        );
+        assert!(
+            max_abs_diff(&reference, &wino) < 1e-3,
+            "case {case}: winograd vs im2col on {s:?}"
+        );
+        // Threaded runs of every algorithm are bit-identical to their
+        // serial runs.
+        for threads in [2usize, 8] {
+            assert!(
+                conv2d_tiled(&x, &f, &s, &tile, threads) == tiled,
+                "case {case}: tiled threads={threads} diverged on {s:?}"
+            );
+            assert!(
+                conv2d_winograd(&x, &f, &s, threads) == wino,
+                "case {case}: winograd threads={threads} diverged on {s:?}"
+            );
+            assert!(
+                conv2d_im2col(
+                    &x,
+                    &f,
+                    &s,
+                    &BlockedParams { threads, ..params }
+                ) == reference,
+                "case {case}: im2col threads={threads} diverged on {s:?}"
+            );
+        }
+    }
+}
+
 /// conv register model: monotone in every parameter.
 #[test]
 fn prop_conv_regs_monotone() {

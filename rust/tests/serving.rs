@@ -74,7 +74,7 @@ fn zoo_pool(actors: usize) -> (TempDir, ArtifactStore, EnginePool) {
     write_zoo(dir.path());
     let store = ArtifactStore::open(dir.path()).unwrap();
     let actor_store = store.clone();
-    let config = PoolConfig { actors, queue_depth: 64, spill_depth: 64 };
+    let config = PoolConfig { actors, queue_depth: 64, spill_depth: 64, ..Default::default() };
     let pool = EnginePool::spawn_with(config, move |_| {
         NativeEngine::new(actor_store.clone())
     })
@@ -192,6 +192,62 @@ fn every_actor_plans_with_the_shared_tuning_db() {
     .unwrap();
     assert_eq!(pool.healthy_actors(), 2);
     pool.shutdown();
+}
+
+#[test]
+fn warm_at_spawn_prewarms_every_artifact_on_its_home_actor() {
+    let dir = TempDir::new("serving-warm").unwrap();
+    write_zoo(dir.path());
+    let store = ArtifactStore::open(dir.path()).unwrap();
+    let actor_store = store.clone();
+    let config = PoolConfig {
+        actors: 3,
+        warm_at_spawn: true,
+        ..Default::default()
+    };
+    let pool = EnginePool::spawn_with(config, move |_| {
+        NativeEngine::new(actor_store.clone())
+    })
+    .unwrap();
+
+    // Before ANY request: every artifact is already planned, and planned
+    // on exactly its ring-home actor — first requests never pay
+    // plan-compile latency, and caches are never duplicated.
+    let names: Vec<String> = store.iter().map(|m| m.name.clone()).collect();
+    let mut owned = vec![0usize; pool.actors()];
+    for name in &names {
+        owned[pool.route_of(name).unwrap()] += 1;
+    }
+    let mut cached_total = 0;
+    for idx in 0..pool.actors() {
+        let cached = pool.actor_stats(idx).unwrap().cached_executables;
+        assert_eq!(
+            cached, owned[idx],
+            "actor {idx}: warm fan-out cached {cached} plans but owns \
+             {} artifacts",
+            owned[idx]
+        );
+        cached_total += cached;
+    }
+    assert_eq!(cached_total, store.len(), "every artifact pre-warmed");
+
+    // Explicit re-warm is idempotent.
+    assert_eq!(pool.prewarm().unwrap(), store.len());
+    for idx in 0..pool.actors() {
+        assert_eq!(
+            pool.actor_stats(idx).unwrap().cached_executables,
+            owned[idx]
+        );
+    }
+    pool.shutdown();
+
+    // Without the flag, spawn leaves caches cold (the pre-existing
+    // behavior stays the default).
+    let (_dir2, _store2, cold) = zoo_pool(2);
+    for idx in 0..cold.actors() {
+        assert_eq!(cold.actor_stats(idx).unwrap().cached_executables, 0);
+    }
+    cold.shutdown();
 }
 
 #[test]
