@@ -4,8 +4,8 @@
 # manifest.json (requires JAX; the Rust NativeEngine also runs synthetic
 # manifests without it).
 
-.PHONY: artifacts test rust-test python-test tune bench-smoke docs \
-	serve-smoke
+.PHONY: artifacts test rust-test python-test tune tune-merge bench-smoke \
+	docs serve-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts --groups all
@@ -25,6 +25,17 @@ test: rust-test python-test
 # grid (and the modeled device-zoo demo).
 tune:
 	cargo run --release --example tune_device -- --quick --out reports
+
+# Exercise the selection-DB merge flag end to end: sweep once, then
+# sweep again folding the first run's DB back in (--merge migrates any
+# legacy blocked/conv_native entries to the unified gemm_point /
+# conv_point schema and keeps the faster entry per key).  CI's
+# tune-smoke job runs the same fold after its main sweep.
+tune-merge:
+	cargo run --release --example tune_device -- --quick --out reports
+	cp reports/tuning_host.json reports/tuning_prev.json
+	cargo run --release --example tune_device -- --quick --out reports \
+		--merge reports/tuning_prev.json
 
 # Offline bench smoke: modeled paper figures plus the measured host
 # BlockedParams x threads sweeps (reports/*_host_sweep.csv) and the

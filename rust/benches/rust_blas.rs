@@ -4,10 +4,37 @@
 //!
 //! Run: `cargo bench --bench rust_blas`.
 
-use portable_kernels::blas::{gemm_blocked, gemm_naive, BlockedParams};
+use portable_kernels::blas::{
+    gemm_blocked, gemm_blocked_isa, gemm_naive, BlockedParams, Isa,
+};
 use portable_kernels::config::micro_kernel_shapes;
 use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::rng::XorShift;
+
+/// The runtime-detected ISA axis end to end: one registry blocking,
+/// every micro-kernel variant this host supports — the per-host payoff
+/// the tuner's `gemm_point_grid` sweeps measure.
+fn isa_sweep() {
+    let n = 256usize;
+    let mut rng = XorShift::new(0x15a);
+    let a = rng.f32_vec(n * n);
+    let b = rng.f32_vec(n * n);
+    let flops = 2 * (n as u64).pow(3);
+    let params =
+        BlockedParams { bm: 64, bn: 64, bk: 64, mr: 8, nr: 16, threads: 1 };
+    println!(
+        "== micro-kernel ISA sweep ({n}^3, serial, {}; detected {:?}) ==",
+        params.name(),
+        Isa::detect()
+    );
+    for isa in Isa::detect() {
+        let s = bench(&format!("isa {n}^3 {isa}"), 1, 3, || {
+            black_box(gemm_blocked_isa(&a, &b, n, n, n, &params, isa));
+        });
+        println!("{}", s.line(Some(flops)));
+    }
+    println!();
+}
 
 /// The macro-generated micro-kernel registry end to end: one
 /// representative blocking, every monomorphized `(mr, nr)` shape — the
@@ -77,4 +104,5 @@ fn main() {
         println!();
     }
     registry_sweep();
+    isa_sweep();
 }

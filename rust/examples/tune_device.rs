@@ -6,39 +6,51 @@
 //! 1. **Modeled** (full mode only): tune the device zoo through the
 //!    analytic model and show the winning parameters differ per device —
 //!    the paper's core portability workflow.
-//! 2. **Measured**: the real per-host sweep.  Enumerate the
-//!    `BlockedParams` × `threads` grid for GEMM and the
-//!    `ConvAlgorithm × ConvConfig × threads` grid for convolutions
-//!    (tiled vs im2col vs winograd — the paper's §4.1 algorithm axis),
-//!    execute every point through `NativeEngine` via
+//! 2. **Measured**: the real per-host sweep, one generic loop per
+//!    kernel space (`tuner::tune_space_sweep`).  Enumerate the GEMM
+//!    space grid (`BlockedParams` × `threads` × runtime-detected
+//!    micro-kernel **ISA** — scalar/SSE2/AVX2/FMA on x86-64) and the
+//!    conv space grid (`ConvAlgorithm × ConvConfig × threads` — tiled
+//!    vs im2col vs winograd, the paper's §4.1 algorithm axis), execute
+//!    every applicable point through `NativeEngine` via
 //!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
-//!    and prove the engine consults it — including the chosen
-//!    algorithm — at plan time.
+//!    and prove the engine consults it — including the chosen algorithm
+//!    and ISA — at plan time.
 //!
 //! ```sh
 //! cargo run --release --example tune_device              # full
 //! cargo run --release --example tune_device -- --quick   # CI smoke
 //! cargo run --release --example tune_device -- --quick --out reports
+//! cargo run --release --example tune_device -- --quick --out reports \
+//!     --merge old_reports/tuning_host.json   # fold a legacy DB in
 //! ```
 //!
 //! Outputs (measured half): `<out>/tuning_host.json` (the persisted
-//! selection DB) and `<out>/BENCH_ci.json` (tuned-vs-default GFLOP/s per
-//! problem).  Exits non-zero if the sweep produced no selections or a
-//! tuned config measured below the default — the CI contract.
+//! selection DB, unified `gemm_point`/`conv_point` schema) and
+//! `<out>/BENCH_ci.json` (tuned-vs-default GFLOP/s per problem, with
+//! `algorithm` columns on conv rows and `isa` columns on GEMM rows).
+//! `--merge OLD.json` folds a previously written (possibly legacy
+//! `blocked`/`conv_native`) DB into the unified schema, keeping the
+//! faster entry per key.  Exits non-zero if the sweep produced no
+//! selections, a tuned config measured below the default, the algorithm
+//! axis collapsed, or the ISA axis collapsed on a host that supports
+//! more than scalar — the CI contract.
 
 use std::path::{Path, PathBuf};
 
-use portable_kernels::blas::BlockedParams;
-use portable_kernels::config::{ConvAlgorithm, ConvConfig, GemmConfig};
+use portable_kernels::blas::Isa;
+use portable_kernels::config::{
+    ConvAlgorithm, ConvPoint, GemmConfig, GemmPoint,
+};
 use portable_kernels::device::device_by_name;
 use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
 use portable_kernels::runtime::{
     ArtifactStore, Backend, NativeEngine, HOST_DEVICE,
 };
 use portable_kernels::tuner::{
-    blocked_grid, conv_native_grid, selection_key_for, tune_blocked_sweep,
-    tune_conv, tune_conv_native_sweep, tune_gemm, BlockedSweep,
-    ConvCandidate, ExhaustiveSearch, HillClimb, SelectionDb, SelectionKey,
+    conv_native_grid, gemm_point_grid, selection_key_for, tune_conv,
+    tune_gemm, tune_space_sweep, ExhaustiveSearch, HillClimb, SelectionDb,
+    SelectionKey, SpaceSweep,
 };
 use portable_kernels::util::json::Value;
 use portable_kernels::util::tmp::TempDir;
@@ -46,6 +58,7 @@ use portable_kernels::util::tmp::TempDir;
 fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut quick = false;
     let mut out_dir = PathBuf::from("reports");
+    let mut merge_path: Option<PathBuf> = None;
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
         match arg.as_str() {
@@ -55,10 +68,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     it.next().ok_or("--out needs a directory argument")?,
                 );
             }
+            "--merge" => {
+                merge_path = Some(PathBuf::from(
+                    it.next().ok_or("--merge needs a DB path argument")?,
+                ));
+            }
             other => {
                 return Err(format!(
                     "unknown argument {other:?}; \
-                     usage: tune_device [--quick] [--out DIR]"
+                     usage: tune_device [--quick] [--out DIR] \
+                     [--merge OLD.json]"
                 )
                 .into())
             }
@@ -68,7 +87,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !quick {
         modeled_zoo()?;
     }
-    measured_host_sweep(quick, &out_dir)
+    measured_host_sweep(quick, &out_dir, merge_path.as_deref())
 }
 
 /// The modeled half: the paper's device zoo through the analytic model.
@@ -234,12 +253,14 @@ fn sweep_store(
     Ok((Some(dir), store))
 }
 
-/// The measured half: sweep GEMM over `BlockedParams × threads` and conv
-/// over `ConvAlgorithm × ConvConfig × threads`, persist, prove the
-/// engine consults the DB — algorithm included — at plan time.
+/// The measured half: one generic sweep per kernel space (GEMM:
+/// `BlockedParams × threads × ISA`; conv: `ConvAlgorithm × ConvConfig ×
+/// threads`), persist, optionally fold a legacy DB in, and prove the
+/// engine consults the DB — algorithm and ISA included — at plan time.
 fn measured_host_sweep(
     quick: bool,
     out_dir: &Path,
+    merge_path: Option<&Path>,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let mode = if quick { "quick" } else { "full" };
     println!("== measured host sweep ({mode}) ==");
@@ -249,42 +270,49 @@ fn measured_host_sweep(
     let mut engine = NativeEngine::new(store)?;
     let threads: &[usize] =
         if quick { &[1, 2] } else { &[1, 2, 4, 0] };
-    let grid = blocked_grid(quick, threads);
+    let isas = Isa::detect();
+    let grid = gemm_point_grid(quick, threads, &isas);
     let conv_grid = conv_native_grid(quick, threads);
     let iters = if quick { 3 } else { 5 };
     println!(
-        "gemm grid: {} BlockedParams x threads points; conv grid: {} \
-         algorithm x config x threads points; {} iters each",
+        "detected ISAs: {:?}; gemm grid: {} blocking x threads x isa \
+         points; conv grid: {} algorithm x config x threads points; \
+         {} iters each",
+        isas.iter().map(|i| i.as_str()).collect::<Vec<_>>(),
         grid.len(),
         conv_grid.len(),
         iters
     );
 
     let mut db = SelectionDb::new();
-    let gemm_sweep: BlockedSweep = tune_blocked_sweep(
+    let gemm_sweep: SpaceSweep<GemmPoint> = tune_space_sweep(
         &mut engine,
         "gemm",
         &grid,
         iters,
         HOST_DEVICE,
-        &mut |e, p| e.set_params(*p),
+        &mut |e, p| e.set_gemm_point(*p),
         &mut db,
     )?;
-    for (op, (params, gflops)) in &gemm_sweep.winners {
-        println!("  {op:<28} -> {:<26} {gflops:>8.2} GF/s", params.name());
+    for (op, (point, gflops)) in &gemm_sweep.winners {
+        println!(
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s",
+            point.isa,
+            point.name()
+        );
     }
-    let conv_sweep = tune_conv_native_sweep(
+    let conv_sweep: SpaceSweep<ConvPoint> = tune_space_sweep(
         &mut engine,
         "conv",
         &conv_grid,
         iters,
         HOST_DEVICE,
-        &mut |e, c| e.set_conv_params(c.config, c.blocked),
+        &mut |e, c| e.set_conv_point(*c),
         &mut db,
     )?;
     for (op, (cand, gflops)) in &conv_sweep.winners {
         println!(
-            "  {op:<28} -> [{}] {:<26} {gflops:>8.2} GF/s",
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s",
             cand.config.algorithm,
             cand.name()
         );
@@ -296,7 +324,8 @@ fn measured_host_sweep(
     // The algorithm axis must actually have been swept: every 3x3/s1
     // conv problem measures all three native algorithms.
     for op in conv_sweep.winners.keys() {
-        let algs = conv_sweep.algorithms_for(op);
+        let algs =
+            conv_sweep.axis_values_for(op, |c| c.config.algorithm);
         if op.starts_with("conv_3x3s1") {
             for want in [
                 ConvAlgorithm::Im2col,
@@ -314,6 +343,53 @@ fn measured_host_sweep(
         }
         println!("  {op}: measured algorithms {algs:?}");
     }
+    // ... and so must the ISA axis, wherever the host supports more
+    // than scalar.
+    let mut isas_swept: Vec<Isa> = Vec::new();
+    for op in gemm_sweep.winners.keys() {
+        let swept = gemm_sweep.axis_values_for(op, |p| p.isa);
+        for isa in &isas {
+            if !swept.contains(isa) {
+                return Err(format!(
+                    "{op}: ISA {isa} was never measured ({swept:?}) — \
+                     the ISA axis collapsed"
+                )
+                .into());
+            }
+        }
+        println!("  {op}: measured ISAs {swept:?}");
+        for isa in swept {
+            if !isas_swept.contains(&isa) {
+                isas_swept.push(isa);
+            }
+        }
+    }
+    if isas.len() >= 2 && isas_swept.len() < 2 {
+        return Err(format!(
+            "host supports {isas:?} but the sweep measured only \
+             {isas_swept:?} — the ISA axis collapsed"
+        )
+        .into());
+    }
+
+    // Fold a previously written (possibly legacy) DB into the unified
+    // schema, keeping the faster entry per key.
+    if let Some(old_path) = merge_path {
+        let old = SelectionDb::load(old_path)?;
+        let stats = db.merge(&old);
+        println!(
+            "merged {} ({} entries): {} added, {} replaced, {} kept, \
+             {} migrated to the unified schema, {} kind conflicts \
+             (kept the fresh sweep's entry)",
+            old_path.display(),
+            old.len(),
+            stats.added,
+            stats.replaced,
+            stats.kept,
+            stats.migrated,
+            stats.kind_conflicts
+        );
+    }
 
     // Persist + reload: the DB a deployment ships.
     let db_path = out_dir.join("tuning_host.json");
@@ -327,7 +403,8 @@ fn measured_host_sweep(
 
     // Prove plan-time consultation: a fresh engine over the same store,
     // with the reloaded DB attached, must plan every swept artifact with
-    // the persisted winner — for conv problems including the algorithm.
+    // the persisted winner — for conv problems including the algorithm,
+    // for GEMM problems including the ISA.
     let mut tuned_engine =
         NativeEngine::with_tuning(engine.store().clone(), loaded.clone());
     let names: Vec<String> =
@@ -337,20 +414,29 @@ fn measured_host_sweep(
         let Some(key) = selection_key_for(&meta, HOST_DEVICE) else {
             continue;
         };
-        if let Some((want, _)) = loaded.get_blocked(&key) {
-            let got = tuned_engine.planned_params(name)?;
-            if got != want {
-                return Err(format!(
-                    "{name}: engine planned {} but the tuned selection is {}",
-                    got.name(),
-                    want.name()
-                )
-                .into());
+        if let Some((want, _)) = loaded.get::<GemmPoint>(&key) {
+            if meta.kind == "gemm" {
+                let got = tuned_engine
+                    .planned_gemm(name)?
+                    .ok_or_else(|| format!("{name}: no gemm plan"))?;
+                // Winners from this host's grid plan verbatim; a merged
+                // off-host entry may legitimately degrade its ISA to
+                // scalar, so compare against the degraded point.
+                let want = want.host_degraded();
+                if got != want {
+                    return Err(format!(
+                        "{name}: engine planned {} but the tuned \
+                         selection is {}",
+                        got.name(),
+                        want.name()
+                    )
+                    .into());
+                }
+                println!("  plan({name}) consults DB -> {}", got.name());
             }
-            println!("  plan({name}) consults DB -> {}", got.name());
         }
         if let Some((want_cfg, want_blocked, _)) =
-            loaded.get_conv_native(&key)
+            loaded.get_conv_native(&key).filter(|_| meta.kind == "conv")
         {
             let got_cfg = tuned_engine
                 .planned_conv(name)?
@@ -375,15 +461,15 @@ fn measured_host_sweep(
         }
     }
 
-    // BENCH_ci.json: tuned vs default per problem.  The default configs
+    // BENCH_ci.json: tuned vs default per problem.  The default points
     // are always in the grids, so tuned >= default is an invariant of
     // the argmax, not a flaky timing assertion.  Conv entries carry the
-    // chosen-algorithm column.
-    let default = BlockedParams::default();
-    let conv_default = ConvCandidate {
-        config: ConvConfig::im2col(),
-        blocked: BlockedParams::default(),
-    };
+    // chosen-algorithm column; GEMM entries the chosen-ISA column plus
+    // the best *scalar* point, so the ISA axis's payoff is archived per
+    // merge (tuned >= scalar-best is the same argmax invariant — the
+    // scalar points are grid members).
+    let default = GemmPoint::default();
+    let conv_default = ConvPoint::default();
     let mut problems = Value::object();
     let mut worst_ratio = f64::INFINITY;
     let add_problem = |op: &str,
@@ -391,6 +477,7 @@ fn measured_host_sweep(
                            default_gf: f64,
                            tuned_config: String,
                            algorithm: Option<&str>,
+                           isa: Option<(&str, f64)>,
                            problems: &mut Value,
                            worst_ratio: &mut f64|
      -> Result<(), Box<dyn std::error::Error>> {
@@ -409,6 +496,16 @@ fn measured_host_sweep(
         if let Some(alg) = algorithm {
             entry.set("algorithm", alg);
         }
+        if let Some((isa, scalar_gf)) = isa {
+            if tuned_gf < scalar_gf {
+                return Err(format!(
+                    "{op}: tuned {tuned_gf:.2} GF/s below the scalar \
+                     winner {scalar_gf:.2} GF/s"
+                )
+                .into());
+            }
+            entry.set("isa", isa).set("scalar_gflops", scalar_gf);
+        }
         if default_gf > 0.0 {
             let ratio = tuned_gf / default_gf;
             entry.set("speedup", ratio);
@@ -417,15 +514,33 @@ fn measured_host_sweep(
         problems.set(op, entry);
         Ok(())
     };
-    for (op, (params, tuned_gf)) in &gemm_sweep.winners {
+    for (op, (point, tuned_gf)) in &gemm_sweep.winners {
         let default_gf =
             gemm_sweep.gflops_for(op, &default).unwrap_or(0.0);
+        // Best scalar grid point for this problem: the baseline the ISA
+        // axis is judged against.
+        let scalar_gf = gemm_sweep
+            .rows
+            .iter()
+            .filter(|r| {
+                &r.problem == op && r.point.isa == Isa::Scalar
+            })
+            .map(|r| r.gflops)
+            .fold(0.0f64, f64::max);
+        if point.isa != Isa::Scalar {
+            println!(
+                "  {op}: ISA axis pays — [{}] {:.2} GF/s vs scalar \
+                 winner {:.2} GF/s",
+                point.isa, tuned_gf, scalar_gf
+            );
+        }
         add_problem(
             op,
             *tuned_gf,
             default_gf,
-            params.name(),
+            point.name(),
             None,
+            Some((point.isa.as_str(), scalar_gf)),
             &mut problems,
             &mut worst_ratio,
         )?;
@@ -439,17 +554,25 @@ fn measured_host_sweep(
             default_gf,
             cand.name(),
             Some(cand.config.algorithm.as_str()),
+            None,
             &mut problems,
             &mut worst_ratio,
         )?;
     }
     let mut bench = Value::object();
+    let isa_strs = |list: &[Isa]| -> Value {
+        Value::Array(
+            list.iter().map(|i| Value::Str(i.as_str().into())).collect(),
+        )
+    };
     bench
         .set("platform", engine.platform())
         .set("device", HOST_DEVICE)
         .set("mode", mode)
         .set("grid_points", grid.len())
         .set("conv_grid_points", conv_grid.len())
+        .set("isas_detected", isa_strs(&isas))
+        .set("isas_swept", isa_strs(&isas_swept))
         .set("iters", iters)
         .set("problems", problems);
     let bench_path = out_dir.join("BENCH_ci.json");
@@ -459,8 +582,9 @@ fn measured_host_sweep(
         println!("worst tuned/default speedup: {worst_ratio:.2}x");
     }
     println!(
-        "OK: all conv algorithms swept; tuned >= default for every \
-         problem; DB (incl. algorithm) consulted at plan time"
+        "OK: all conv algorithms and all detected ISAs swept; tuned >= \
+         default (and >= the scalar winner) for every problem; DB (incl. \
+         algorithm + isa) consulted at plan time"
     );
     Ok(())
 }

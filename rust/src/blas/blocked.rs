@@ -8,7 +8,15 @@
 //! `bm`-row macro-tile bands are distributed over a scoped thread pool
 //! ([`crate::util::pool`]), each worker owning a disjoint band of C rows,
 //! so parallel results are bit-identical to the serial path.
+//!
+//! The micro-kernel additionally carries a runtime-dispatched **ISA
+//! axis** ([`super::Isa`]): full registry tiles can run `#[target_feature]`
+//! SIMD variants (`blas::simd`) selected per plan by the tuner, with the
+//! scalar kernel as the bit-fallback for ragged edges, unregistered
+//! shapes, and hosts without the feature.  [`gemm_blocked`] is the
+//! scalar entry point; [`gemm_blocked_isa`] takes the axis explicitly.
 
+use super::Isa;
 use crate::util::pool;
 
 /// Blocking parameters (the CPU analogue of `GemmConfig`).
@@ -74,14 +82,19 @@ macro_rules! micro_kernel_registry {
             &[$(($mr, $nr)),+];
 
         /// Dispatch one register tile: full tiles of a registered shape
-        /// run their monomorphized kernel, everything else the generic
-        /// one.  `il` is the row within the band slice `c`.
+        /// run their monomorphized kernel — for a SIMD `isa`, the
+        /// matching `#[target_feature]` variant from `blas::simd` —
+        /// everything else (ragged edges, unregistered shapes, and every
+        /// tile on a non-x86-64 host) the generic scalar kernel, the
+        /// bit-fallback of the ISA axis.  `il` is the row within the
+        /// band slice `c`.
         #[allow(clippy::too_many_arguments)]
         #[inline]
         fn dispatch_micro_kernel(
             full: bool,
             mr: usize,
             nr: usize,
+            isa: Isa,
             apack: &[f32],
             b: &[f32],
             c: &mut [f32],
@@ -95,9 +108,33 @@ macro_rules! micro_kernel_registry {
         ) {
             match (full, mr, nr) {
                 $(
-                    (true, $mr, $nr) => micro_kernel_fixed::<$mr, $nr>(
-                        apack, b, c, n, il, j, p0, p1,
-                    ),
+                    (true, $mr, $nr) => match isa {
+                        // SAFETY: `gemm_blocked_isa` asserted
+                        // `isa.is_available()` on entry, so the CPU
+                        // supports the feature each variant was compiled
+                        // for.
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Sse2 => unsafe {
+                            super::simd::micro_kernel_sse2::<$mr, $nr>(
+                                apack, b, c, n, il, j, p0, p1,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 => unsafe {
+                            super::simd::micro_kernel_avx2::<$mr, $nr>(
+                                apack, b, c, n, il, j, p0, p1,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Fma => unsafe {
+                            super::simd::micro_kernel_fma::<$mr, $nr>(
+                                apack, b, c, n, il, j, p0, p1,
+                            )
+                        },
+                        _ => micro_kernel_fixed::<$mr, $nr>(
+                            apack, b, c, n, il, j, p0, p1,
+                        ),
+                    },
                 )+
                 _ => micro_kernel(apack, b, c, n, il, ie, j, je, p0, p1, mr),
             }
@@ -143,6 +180,30 @@ pub fn gemm_blocked(
     k: usize,
     params: &BlockedParams,
 ) -> Vec<f32> {
+    gemm_blocked_isa(a, b, m, n, k, params, Isa::Scalar)
+}
+
+/// [`gemm_blocked`] with an explicit micro-kernel [`Isa`] — the
+/// runtime-dispatched SIMD axis the tuner sweeps.  `Isa::Scalar` is
+/// bit-identical to [`gemm_blocked`] (it *is* that path); `Sse2`/`Avx2`
+/// are bit-identical too (same operation order, wider lanes); `Fma`
+/// agrees within an accumulation tolerance (fused rounding).  Ragged
+/// edges and unregistered `(mr, nr)` shapes always take the scalar
+/// kernel, whatever the ISA — the bit-fallback off the SIMD domain.
+///
+/// Panics (loudly) if `isa` is not available on the executing host:
+/// dispatching a `#[target_feature]` kernel the CPU lacks would be
+/// undefined behavior, so the caller — normally the plan layer, which
+/// degrades unavailable ISAs to scalar — must never let one through.
+pub fn gemm_blocked_isa(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert!(
@@ -156,6 +217,13 @@ pub fn gemm_blocked(
     assert!(
         params.mr <= 16 && params.nr <= 16,
         "micro-tile exceeds the 16x16 register kernel cap: {params:?}"
+    );
+    assert!(
+        isa.is_available(),
+        "micro-kernel ISA {isa} is not available on this host \
+         (detected: {:?}) — resolve the plan through the engine, which \
+         degrades unavailable ISAs to scalar",
+        Isa::detect()
     );
     let mut c = vec![0.0f32; m * n];
     let bm = params.bm;
@@ -177,6 +245,7 @@ pub fn gemm_blocked(
                 i0,
                 i1,
                 params,
+                isa,
                 &mut apack,
             );
             i0 = i1;
@@ -191,7 +260,7 @@ pub fn gemm_blocked(
             let i0 = band * bm;
             let i1 = (i0 + bm).min(m);
             let mut apack = alloc_apack(params);
-            gemm_band(a, b, cband, n, k, i0, i1, params, &mut apack);
+            gemm_band(a, b, cband, n, k, i0, i1, params, isa, &mut apack);
         });
     }
     c
@@ -223,6 +292,7 @@ fn gemm_band(
     i0: usize,
     i1: usize,
     params: &BlockedParams,
+    isa: Isa,
     apack: &mut [f32],
 ) {
     let &BlockedParams { bn, bk, mr, nr, .. } = params;
@@ -248,8 +318,8 @@ fn gemm_band(
                     // path.
                     let full = ie - i == mr && je - j == nr;
                     dispatch_micro_kernel(
-                        full, mr, nr, &apack[strip..], b, cband, n, il,
-                        il + (ie - i), j, je, p0, p1,
+                        full, mr, nr, isa, &apack[strip..], b, cband, n,
+                        il, il + (ie - i), j, je, p0, p1,
                     );
                     j = je;
                 }
@@ -294,10 +364,13 @@ fn pack_a(
 /// Monomorphized micro-kernel for full `MR x NR` tiles: fixed trip
 /// counts let LLVM keep the whole accumulator in vector registers.
 /// `c` is the current band's slice of the output; `i` is the row within
-/// that band.
-#[inline]
+/// that band.  `#[inline(always)]` so the `#[target_feature]` wrappers
+/// in `blas::simd` inline this body and recompile it at their feature
+/// level (the multiversioning trick — same operations, wider lanes,
+/// bit-identical results).
+#[inline(always)]
 #[allow(clippy::too_many_arguments)]
-fn micro_kernel_fixed<const MR: usize, const NR: usize>(
+pub(crate) fn micro_kernel_fixed<const MR: usize, const NR: usize>(
     apack: &[f32],
     b: &[f32],
     c: &mut [f32],
@@ -465,6 +538,100 @@ mod tests {
         // No duplicates: dedup discipline for grid construction.
         for (i, s) in MICRO_KERNEL_SHAPES.iter().enumerate() {
             assert!(!MICRO_KERNEL_SHAPES[i + 1..].contains(s));
+        }
+    }
+
+    #[test]
+    fn isa_scalar_is_the_gemm_blocked_path() {
+        // gemm_blocked IS gemm_blocked_isa(Scalar): bit-equal outputs.
+        let (m, n, k) = (23, 17, 11);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        let params = BlockedParams { threads: 1, ..Default::default() };
+        assert!(
+            gemm_blocked(&a, &b, m, n, k, &params)
+                == gemm_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar)
+        );
+    }
+
+    #[test]
+    fn detected_isa_kernels_agree_with_scalar() {
+        // Ragged shape so full registry tiles (SIMD path) and ragged
+        // edges (scalar bit-fallback) both run.  SSE2/AVX2 recompile the
+        // same operation order, so 0 ULP; FMA fuses the rounding, so an
+        // accumulation tolerance scaled by k.
+        let (m, n, k) = (37, 29, 23);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        for &(mr, nr) in MICRO_KERNEL_SHAPES {
+            let params = BlockedParams {
+                bm: 32,
+                bn: 32,
+                bk: 16,
+                mr,
+                nr,
+                threads: 1,
+            };
+            let scalar = gemm_blocked(&a, &b, m, n, k, &params);
+            for isa in Isa::detect() {
+                let got = gemm_blocked_isa(&a, &b, m, n, k, &params, isa);
+                if isa == Isa::Fma {
+                    assert!(
+                        max_abs_diff(&scalar, &got)
+                            <= 1e-6 * k as f32,
+                        "fma beyond tolerance for ({mr}, {nr})"
+                    );
+                } else {
+                    assert!(
+                        scalar == got,
+                        "{isa} not bit-identical to scalar for ({mr}, {nr})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isa_parallel_bands_bit_identical_to_serial() {
+        // The ISA axis composes with the threads axis: every detected
+        // ISA is bit-identical across thread counts (disjoint bands run
+        // the same per-band code).
+        let (m, n, k) = (53, 31, 19);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 11) as f32 - 5.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let base =
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 1 };
+        for isa in Isa::detect() {
+            let serial = gemm_blocked_isa(&a, &b, m, n, k, &base, isa);
+            for threads in [2usize, 3, 8] {
+                let par = gemm_blocked_isa(
+                    &a,
+                    &b,
+                    m,
+                    n,
+                    k,
+                    &BlockedParams { threads, ..base },
+                    isa,
+                );
+                assert!(serial == par, "{isa} threads={threads} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn unavailable_isa_is_a_loud_panic_not_ub() {
+        // On hosts that lack some ISA (always true off x86-64, and on
+        // pre-AVX2 x86), dispatching it must panic loudly instead of
+        // reaching a #[target_feature] kernel the CPU cannot run.
+        if let Some(missing) =
+            Isa::all().into_iter().find(|i| !i.is_available())
+        {
+            let params =
+                BlockedParams { threads: 1, ..BlockedParams::default() };
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                || gemm_blocked_isa(&[1.0], &[1.0], 1, 1, 1, &params, missing),
+            ));
+            assert!(r.is_err(), "{missing} should have panicked");
         }
     }
 

@@ -23,8 +23,40 @@ use super::conv::Conv2dShape;
 use crate::config::ConvConfig;
 use crate::util::pool;
 
+/// A skipped (padding) row/column entry in the hoisted index tables.
+const PAD: usize = usize::MAX;
+
+/// Hoisted per-call column table: `iw_tab[ow * win + sw]` is the input
+/// column *offset* (`iw * in_c`) output column `ow` reads for filter tap
+/// column `sw`, or [`PAD`] when that tap falls into padding.  Computed
+/// once per call and shared read-only by every band, so the per-tap
+/// stride/padding arithmetic is no longer recomputed for every
+/// `(r, c, oh)` combination.
+fn input_col_table(s: &Conv2dShape) -> Vec<usize> {
+    let win = s.window;
+    let mut iw_tab = vec![PAD; s.out_w * win];
+    for ow in 0..s.out_w {
+        for sw in 0..win {
+            let iw = (ow * s.stride + sw) as isize - s.pad_left as isize;
+            if iw >= 0 && (iw as usize) < s.in_w {
+                iw_tab[ow * win + sw] = iw as usize * s.in_c;
+            }
+        }
+    }
+    iw_tab
+}
+
 /// One `(batch, tile-row)` band: output rows `[r0, r1)` of batch `b`
 /// into `out_band` (pre-zeroed, `(r1 - r0) * out_w * out_c` elements).
+///
+/// `iw_tab` is the shared [`input_col_table`]; `xrow_tab` is this band's
+/// scratch for the hoisted *row* table — `xrow_tab[(oh - r0) * win + r]`
+/// holds the base index of the input row output row `oh` reads for
+/// filter tap row `r` (or [`PAD`] in padding), computed once per band
+/// instead of once per `(tap, channel, oh)`.  The hoist changes only
+/// how indices are computed, never the ascending `(r, s, c)`
+/// accumulation order, so outputs stay bit-identical to
+/// [`conv2d_direct`](super::conv2d_direct).
 #[allow(clippy::too_many_arguments)]
 fn tiled_band(
     x: &[f32],
@@ -38,8 +70,24 @@ fn tiled_band(
     r1: usize,
     out_band: &mut [f32],
     acc: &mut [f32],
+    iw_tab: &[usize],
+    xrow_tab: &mut [usize],
 ) {
     let (ci, co, win) = (s.in_c, s.out_c, s.window);
+    // Hoist the per-tap input row arithmetic: one entry per
+    // (output row, tap row) for the whole band, reused across every
+    // filter column, channel block, and output-column tile below.
+    for oh in r0..r1 {
+        for r in 0..win {
+            let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
+            xrow_tab[(oh - r0) * win + r] =
+                if ih >= 0 && (ih as usize) < s.in_h {
+                    ((b * s.in_h + ih as usize) * s.in_w) * ci
+                } else {
+                    PAD
+                };
+        }
+    }
     for ow0 in (0..s.out_w).step_by(tile_w) {
         let ow1 = (ow0 + tile_w).min(s.out_w);
         for k0 in (0..co).step_by(kb) {
@@ -55,22 +103,17 @@ fn tiled_band(
                             let f0 = ((r * win + sw) * ci + c) * co + k0;
                             let frow = &f[f0..f0 + kbe];
                             for oh in r0..r1 {
-                                let ih = (oh * s.stride + r) as isize
-                                    - s.pad_top as isize;
-                                if ih < 0 || ih as usize >= s.in_h {
+                                let xrow =
+                                    xrow_tab[(oh - r0) * win + r];
+                                if xrow == PAD {
                                     continue;
                                 }
-                                let xrow = ((b * s.in_h + ih as usize)
-                                    * s.in_w)
-                                    * ci;
                                 for ow in ow0..ow1 {
-                                    let iw = (ow * s.stride + sw) as isize
-                                        - s.pad_left as isize;
-                                    if iw < 0 || iw as usize >= s.in_w {
+                                    let iw_off = iw_tab[ow * win + sw];
+                                    if iw_off == PAD {
                                         continue;
                                     }
-                                    let xv =
-                                        x[xrow + iw as usize * ci + c];
+                                    let xv = x[xrow + iw_off + c];
                                     let a0 = ((oh - r0) * tile_w
                                         + (ow - ow0))
                                         * kb;
@@ -148,16 +191,28 @@ pub fn conv2d_tiled(
     }
 
     let acc_len = tile_h * tile_w * kb;
+    let xrow_len = tile_h * s.window;
+    // The column table is shape-only: compute once, share read-only
+    // across every band and worker.
+    let iw_tab = input_col_table(s);
     let workers = pool::resolve_threads(threads);
     if workers <= 1 || bands.len() <= 1 {
         let mut acc = vec![0.0f32; acc_len];
+        let mut xrow_tab = vec![PAD; xrow_len];
         for (b, r0, r1, band) in bands {
-            tiled_band(x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc);
+            tiled_band(
+                x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc,
+                &iw_tab, &mut xrow_tab,
+            );
         }
     } else {
         pool::run_parallel(workers, bands, |_, (b, r0, r1, band)| {
             let mut acc = vec![0.0f32; acc_len];
-            tiled_band(x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc);
+            let mut xrow_tab = vec![PAD; xrow_len];
+            tiled_band(
+                x, f, s, tile_w, kb, cb, b, r0, r1, band, &mut acc,
+                &iw_tab, &mut xrow_tab,
+            );
         });
     }
     out
@@ -235,6 +290,35 @@ mod tests {
                     "{} threads={threads} diverged",
                     cfg.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn hoisted_row_tables_stay_bit_identical_on_strided_shapes() {
+        // The row-reuse hoist targets strided layers, where the old code
+        // recomputed each input row index per filter tap; the hoist must
+        // change timing only, never a bit of output.  Heavy coverage of
+        // stride-2/3 shapes with awkward padding, every knob combination.
+        for &(b, h, w, c, k, win, stride) in &[
+            (1usize, 16usize, 16usize, 3usize, 8usize, 3usize, 2usize),
+            (2, 15, 11, 4, 6, 5, 2),
+            (1, 10, 10, 2, 4, 3, 3),
+            (1, 7, 13, 5, 3, 5, 3),
+            (2, 8, 8, 1, 1, 7, 2),
+        ] {
+            let s = Conv2dShape::same(b, h, w, c, k, win, stride);
+            let x = rand(s.input_elems(), 11);
+            let f = rand(s.filter_elems(), 12);
+            let direct = conv2d_direct(&x, &f, &s);
+            for cfg in cfg_matrix() {
+                for threads in [1usize, 3] {
+                    assert!(
+                        direct == conv2d_tiled(&x, &f, &s, &cfg, threads),
+                        "{} threads={threads} not bit-identical on {s:?}",
+                        cfg.name()
+                    );
+                }
             }
         }
     }

@@ -1,0 +1,144 @@
+//! The SIMD instruction-set axis of the GEMM micro-kernel space.
+//!
+//! The paper's thesis is that device-specific kernel *variants* should be
+//! one more tunable parameter, not a rewrite.  [`Isa`] is exactly such an
+//! axis on the host: each value names a micro-kernel code path compiled
+//! for a specific x86-64 feature level (`#[target_feature]` variants in
+//! `blas::simd`), runtime-detected with `is_x86_feature_detected!` and
+//! swept by the measured tuner like any other knob.  On non-x86-64 hosts
+//! only [`Isa::Scalar`] is available; everything else degrades to scalar
+//! at plan time, so a tuning DB written on one machine loads anywhere.
+
+use crate::error::{Error, Result};
+
+/// Instruction-set variant of the GEMM register micro-kernel.
+///
+/// `Scalar` is the portable baseline (whatever the compiler emits for
+/// plain Rust).  The SIMD variants are monomorphized per registry shape
+/// behind `#[target_feature]` and dispatched at runtime; selecting one
+/// that the executing host does not support is a loud panic in
+/// [`gemm_blocked_isa`](super::gemm_blocked_isa) (the plan layer degrades
+/// unavailable ISAs to `Scalar` before it ever gets there).
+///
+/// Numerics: `Sse2` and `Avx2` run the same multiply-then-add sequence as
+/// `Scalar` in the same order, so their outputs are bit-identical (0 ULP).
+/// `Fma` contracts each multiply-add into a fused operation with a single
+/// rounding, so it agrees with scalar only to within an accumulation
+/// tolerance (~1e-6 per k-step) — proptested.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Isa {
+    /// Portable scalar micro-kernel (every host).
+    Scalar,
+    /// SSE2-compiled micro-kernel (x86-64 baseline; bit-identical to
+    /// scalar).
+    Sse2,
+    /// AVX2-compiled micro-kernel (256-bit lanes; bit-identical to
+    /// scalar).
+    Avx2,
+    /// AVX2 + FMA micro-kernel (`_mm256_fmadd_ps`; fused rounding, within
+    /// tolerance of scalar).
+    Fma,
+}
+
+impl Isa {
+    /// Every ISA value, in sweep/report order (scalar first).
+    pub fn all() -> [Isa; 4] {
+        [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Fma]
+    }
+
+    /// Stable lowercase name (selection DB, reports, CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Isa::Scalar => "scalar",
+            Isa::Sse2 => "sse2",
+            Isa::Avx2 => "avx2",
+            Isa::Fma => "fma",
+        }
+    }
+
+    /// Whether the *executing* host can run this variant.  `Scalar` is
+    /// always available; the SIMD variants require x86-64 plus the
+    /// matching CPUID feature bits (checked at runtime, not compile
+    /// time, so one binary serves every microarchitecture).
+    pub fn is_available(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse2 => std::arch::is_x86_feature_detected!("sse2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Fma => {
+                std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+
+    /// The ISAs the executing host supports, in [`Isa::all`] order.
+    /// Always contains at least [`Isa::Scalar`]; this is the set the
+    /// tuner's grids cross with the blocking parameters.
+    pub fn detect() -> Vec<Isa> {
+        Self::all().into_iter().filter(|i| i.is_available()).collect()
+    }
+}
+
+impl std::fmt::Display for Isa {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Isa {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "scalar" => Ok(Isa::Scalar),
+            "sse2" => Ok(Isa::Sse2),
+            "avx2" => Ok(Isa::Avx2),
+            "fma" => Ok(Isa::Fma),
+            other => Err(Error::Config(format!("unknown isa {other:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_roundtrip() {
+        for isa in Isa::all() {
+            assert_eq!(isa.to_string().parse::<Isa>().unwrap(), isa);
+        }
+        assert!("avx512".parse::<Isa>().is_err());
+        assert!("".parse::<Isa>().is_err());
+    }
+
+    #[test]
+    fn scalar_is_always_available() {
+        assert!(Isa::Scalar.is_available());
+        let detected = Isa::detect();
+        assert!(detected.contains(&Isa::Scalar));
+        // Detection is a subset of the full axis, in axis order.
+        let all = Isa::all();
+        let mut last = 0;
+        for isa in &detected {
+            let pos = all.iter().position(|a| a == isa).unwrap();
+            assert!(pos >= last, "detect() out of axis order");
+            last = pos;
+            assert!(isa.is_available());
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_64_baseline_has_sse2() {
+        // SSE2 is part of the x86-64 baseline; any host running this
+        // test supports it, so the axis is never degenerate on x86-64.
+        assert!(Isa::Sse2.is_available());
+        assert!(Isa::detect().len() >= 2);
+    }
+}

@@ -15,15 +15,24 @@
 //! ([`conv2d_winograd`]), with im2col fallback for shapes an algorithm
 //! cannot compute ([`native_conv_algorithm`]).  GEMM's monomorphized
 //! register micro-tiles are enumerated by the macro-generated
-//! [`MICRO_KERNEL_SHAPES`] registry.
+//! [`MICRO_KERNEL_SHAPES`] registry, and each registry tile can run a
+//! runtime-detected SIMD variant ([`Isa`]: scalar / SSE2 / AVX2 / FMA on
+//! x86-64, dispatched by [`gemm_blocked_isa`]) — the first hardware axis
+//! added through the unified `config::KernelSpace` parameter space.
 
 mod blocked;
 mod conv;
 mod direct;
+mod isa;
 mod naive;
+#[cfg(target_arch = "x86_64")]
+mod simd;
 mod winograd;
 
-pub use blocked::{gemm_blocked, BlockedParams, MICRO_KERNEL_SHAPES};
+pub use blocked::{
+    gemm_blocked, gemm_blocked_isa, BlockedParams, MICRO_KERNEL_SHAPES,
+};
+pub use isa::Isa;
 pub use conv::{
     conv2d_direct, conv2d_im2col, conv2d_native, im2col, im2col_threaded,
     native_conv_algorithm, native_conv_algorithm_dims, Conv2dShape,

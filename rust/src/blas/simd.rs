@@ -1,0 +1,156 @@
+//! x86-64 SIMD variants of the monomorphized GEMM micro-kernel.
+//!
+//! Each function here is the same full-tile register micro-kernel as
+//! `blocked::micro_kernel_fixed`, compiled for a specific feature level
+//! via `#[target_feature]`.  The SSE2 and AVX2 variants reuse the scalar
+//! body verbatim (the `#[inline(always)]` body is inlined into the
+//! feature-annotated wrapper and auto-vectorized at that feature level),
+//! which keeps them **bit-identical** to the scalar kernel: the multiply
+//! and add sequence per accumulator element is unchanged, only the lane
+//! width the compiler may use changes.  The FMA variant is written with
+//! explicit `_mm256_fmadd_ps` intrinsics — a genuinely different
+//! numerical contract (one rounding per multiply-add instead of two), so
+//! it agrees with scalar only within an accumulation tolerance.
+//!
+//! Safety model: every function is `unsafe fn` because calling it on a
+//! CPU without the advertised feature is undefined behavior.  The single
+//! caller (`blocked::dispatch_micro_kernel`) is reached only through
+//! `gemm_blocked_isa`, which asserts `Isa::is_available` on entry; the
+//! plan layer additionally degrades unavailable ISAs to scalar before
+//! execution, so the assert is a backstop, not the primary guard.
+
+use super::blocked::micro_kernel_fixed;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::{
+    __m128, __m256, _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps,
+    _mm256_set1_ps, _mm256_setzero_ps, _mm256_storeu_ps, _mm_add_ps,
+    _mm_fmadd_ps, _mm_loadu_ps, _mm_set1_ps, _mm_setzero_ps, _mm_storeu_ps,
+};
+
+/// The scalar micro-kernel body compiled with SSE2 enabled (the x86-64
+/// baseline).  Bit-identical to the scalar kernel by construction.
+///
+/// # Safety
+///
+/// The executing CPU must support SSE2 (always true on x86-64, checked
+/// anyway by `gemm_blocked_isa`).  Slice/layout preconditions are those
+/// of `micro_kernel_fixed`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn micro_kernel_sse2<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    micro_kernel_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+}
+
+/// The scalar micro-kernel body compiled with AVX2 enabled (256-bit
+/// lanes).  Bit-identical to the scalar kernel by construction.
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2 (`Isa::Avx2.is_available()`).
+/// Slice/layout preconditions are those of `micro_kernel_fixed`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_kernel_avx2<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    micro_kernel_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+}
+
+/// Explicit fused-multiply-add micro-kernel: 256-bit `_mm256_fmadd_ps`
+/// lanes for `NR % 8 == 0`, 128-bit `_mm_fmadd_ps` lanes for the
+/// remaining `NR % 4 == 0` registry shapes, scalar bit-fallback for
+/// anything else (off the FMA domain).  Same k-loop order as scalar, but
+/// each multiply-add rounds once instead of twice, so outputs agree with
+/// scalar within ~`k * 1e-7`, not bitwise.
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2 + FMA (`Isa::Fma.is_available()`).
+/// Slice/layout preconditions are those of `micro_kernel_fixed`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn micro_kernel_fma<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    if NR % 8 == 0 {
+        // NR/8 ymm accumulators per row; the registry caps NR at 16, so
+        // 2 vectors per row always suffice.
+        let nv = NR / 8;
+        let mut acc: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+        for p in 0..(p1 - p0) {
+            let brow = b.as_ptr().add((p0 + p) * n + j);
+            let astrip = apack.as_ptr().add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*astrip.add(r));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm256_fmadd_ps(
+                        av,
+                        _mm256_loadu_ps(brow.add(8 * v)),
+                        *a,
+                    );
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let sum =
+                    _mm256_add_ps(_mm256_loadu_ps(crow.add(8 * v)), *a);
+                _mm256_storeu_ps(crow.add(8 * v), sum);
+            }
+        }
+    } else if NR % 4 == 0 {
+        // Narrow registry shapes (NR = 4): 128-bit FMA lanes, NR/4 xmm
+        // accumulators per row (at most 4 for any NR <= 16).
+        let nv = NR / 4;
+        let mut acc: [[__m128; 4]; MR] = [[_mm_setzero_ps(); 4]; MR];
+        for p in 0..(p1 - p0) {
+            let brow = b.as_ptr().add((p0 + p) * n + j);
+            let astrip = apack.as_ptr().add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm_set1_ps(*astrip.add(r));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm_fmadd_ps(
+                        av,
+                        _mm_loadu_ps(brow.add(4 * v)),
+                        *a,
+                    );
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let sum = _mm_add_ps(_mm_loadu_ps(crow.add(4 * v)), *a);
+                _mm_storeu_ps(crow.add(4 * v), sum);
+            }
+        }
+    } else {
+        // Off the FMA lane domain: scalar bit-fallback.
+        micro_kernel_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+    }
+}

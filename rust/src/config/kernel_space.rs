@@ -1,0 +1,746 @@
+//! The unified kernel parameter space: one [`KernelSpace`] abstraction
+//! for every tunable kernel family.
+//!
+//! The paper's core claim is that one highly parameterized kernel plus
+//! per-device parameter *selection* beats per-device rewrites.  Before
+//! this module, each kernel family carried its own vertical slice of
+//! plumbing (its own DB variant, grid builder, sweep function, and
+//! plan-time resolution arm), so every new tunable axis cost a full
+//! stack of duplicated code.  A [`KernelSpace`] is a *point type* — one
+//! concrete combination of kernel parameters — plus everything the
+//! generic machinery needs to store, sweep, and resolve it:
+//!
+//! * `tuner::SelectionDb` stores any space generically (`put::<P>` /
+//!   `get::<P>`), keyed by the space's `KIND` string, with per-space
+//!   migration shims (`LEGACY_KINDS` + [`KernelSpace::from_legacy_json`])
+//!   keeping old DB JSON loading;
+//! * `tuner::tune_space_sweep` measures any space's grid through any
+//!   backend, filtering points by [`KernelSpace::applicable`];
+//! * `runtime::NativeEngine` resolves any plan through one generic
+//!   tuned → legacy → engine-override → default ladder.
+//!
+//! Four spaces implement it: [`GemmPoint`] (measured host GEMM:
+//! blocking × threads × **ISA**), [`ConvPoint`] (measured host conv:
+//! algorithm × knobs × blocking), and the modeled zoo configurations
+//! [`GemmConfig`] / [`ConvConfig`].  The ISA axis ([`Isa`]) is the proof
+//! the abstraction pays for itself: a genuinely new hardware axis wired
+//! in with no new storage/sweep/resolution code.
+
+use crate::blas::{native_conv_algorithm_dims, BlockedParams, Isa};
+use crate::error::{Error, Result};
+use crate::util::json::Value;
+
+use super::{ConvAlgorithm, ConvConfig, GemmConfig};
+
+/// The problem facts point-applicability may depend on: enough to decide
+/// whether a candidate can run its own kernel on this problem (shape
+/// domain, e.g. Winograd's 3×3/s1) and whether the space tunes this
+/// problem kind at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Problem {
+    /// A GEMM problem with its dimensions.
+    Gemm {
+        /// Rows of C.
+        m: u64,
+        /// Columns of C.
+        n: u64,
+        /// Inner (reduction) dimension.
+        k: u64,
+    },
+    /// A convolution problem with its domain-relevant geometry.
+    Conv {
+        /// Square filter window.
+        window: u32,
+        /// Spatial stride.
+        stride: u32,
+    },
+}
+
+/// One tunable kernel parameter space: a point type plus the hooks the
+/// generic storage/sweep/resolution machinery needs.
+///
+/// Implementations are `Copy` value types; a *point* is one concrete
+/// combination of every axis.  Adding a new axis to a space means
+/// extending its point type and its JSON codec — the DB, the sweep, and
+/// the engine ladder pick it up without modification (that is the whole
+/// purpose of the abstraction; the [`Isa`] axis on [`GemmPoint`] was
+/// added exactly this way).
+pub trait KernelSpace: Copy + PartialEq + std::fmt::Debug {
+    /// Stable kind string stored with every DB entry of this space.
+    const KIND: &'static str;
+
+    /// Legacy DB kind strings this space migrates on lookup (e.g. the
+    /// pre-unification `"blocked"` entries for [`GemmPoint`]).
+    const LEGACY_KINDS: &'static [&'static str];
+
+    /// The entry field the encoded point is stored under.  The modeled
+    /// zoo spaces keep their historical `"config"` field so existing DB
+    /// files round-trip; new spaces use `"point"`.
+    const POINT_FIELD: &'static str = "point";
+
+    /// The axis names of this space, for docs and reports.
+    fn axes() -> &'static [&'static str];
+
+    /// The default point (what an untuned engine falls back to).
+    fn default_point() -> Self;
+
+    /// Structural validation (zero dims, unsupported enum values, ...).
+    fn validate(&self) -> Result<()>;
+
+    /// Compact configuration name for reports and DB `name` columns.
+    fn point_name(&self) -> String;
+
+    /// JSON-encode this point (the value stored under
+    /// [`KernelSpace::POINT_FIELD`]).
+    fn to_json(&self) -> Value;
+
+    /// Decode a point previously written by [`KernelSpace::to_json`].
+    /// Implementations validate before returning, so a successfully
+    /// decoded point is always structurally sound.
+    fn from_json(v: &Value) -> Result<Self>;
+
+    /// Migration shim: decode a whole legacy DB *entry* (kind ∈
+    /// [`KernelSpace::LEGACY_KINDS`]) into a point of this space.
+    fn from_legacy_json(kind: &str, entry: &Value) -> Result<Self>;
+
+    /// Whether a legacy entry of `kind` stored under problem class `op`
+    /// (a `SelectionKey::op` string, e.g. `gemm_128x128x128` /
+    /// `conv_3x3s1_...`) may migrate into this space.  Default:
+    /// anywhere.  [`ConvPoint`] overrides it so GEMM-space entries
+    /// (`blocked`, `gemm_point`) answer conv lookups only under conv
+    /// problem classes — a gemm-keyed blocking is not a conv selection.
+    fn legacy_kind_applies(kind: &str, op: &str) -> bool {
+        let _ = (kind, op);
+        true
+    }
+
+    /// Whether this point can run its own kernel on `problem` **on the
+    /// executing host** — shape-domain rules (a Winograd point off its
+    /// 3×3/s1 domain) and host capability (an ISA the CPU lacks) both
+    /// answer `false`.  The generic sweep skips inapplicable points
+    /// instead of timing fallback duplicates.
+    fn applicable(&self, problem: &Problem) -> bool;
+
+    /// Extra top-level report columns for this point's DB entry (e.g.
+    /// `"algorithm"` for conv points, `"isa"` for GEMM points) so
+    /// reports and CI checks read the headline axis without digging
+    /// into the encoded point.
+    fn report_columns(&self, entry: &mut Value) {
+        let _ = entry;
+    }
+}
+
+// ---- shared JSON codecs ----
+
+/// Encode [`BlockedParams`] (shared by the gemm and conv point codecs).
+pub(crate) fn blocked_to_json(p: &BlockedParams) -> Value {
+    let mut o = Value::object();
+    o.set("bm", p.bm)
+        .set("bn", p.bn)
+        .set("bk", p.bk)
+        .set("mr", p.mr)
+        .set("nr", p.nr)
+        .set("threads", p.threads);
+    o
+}
+
+/// Decode [`BlockedParams`], rejecting zero dimensions and micro-tiles
+/// over the 16×16 register-kernel cap.  Absent `threads` (a pre-threads
+/// DB) means "auto".
+pub(crate) fn blocked_from_json(v: &Value) -> Result<BlockedParams> {
+    let field = |k: &str| -> Result<usize> {
+        v.get(k)
+            .and_then(|x| x.as_u64())
+            .map(|x| x as usize)
+            .ok_or_else(|| Error::Json(format!("blocked config missing {k}")))
+    };
+    let p = BlockedParams {
+        bm: field("bm")?,
+        bn: field("bn")?,
+        bk: field("bk")?,
+        mr: field("mr")?,
+        nr: field("nr")?,
+        threads: v
+            .get("threads")
+            .and_then(|x| x.as_u64())
+            .unwrap_or(0) as usize,
+    };
+    validate_blocked(&p)?;
+    Ok(p)
+}
+
+fn validate_blocked(p: &BlockedParams) -> Result<()> {
+    if p.bm == 0 || p.bn == 0 || p.bk == 0 || p.mr == 0 || p.nr == 0 {
+        return Err(Error::Json(format!(
+            "blocked config has a zero block dimension: {p:?}"
+        )));
+    }
+    if p.mr > 16 || p.nr > 16 {
+        return Err(Error::Json(format!(
+            "blocked config exceeds the 16x16 micro-kernel cap: {p:?}"
+        )));
+    }
+    Ok(())
+}
+
+/// Encode a [`ConvConfig`] (the historical conv/conv_native layout).
+pub(crate) fn conv_to_json(c: &ConvConfig) -> Value {
+    let mut o = Value::object();
+    o.set("tile_h", c.tile_h)
+        .set("tile_w", c.tile_w)
+        .set("vec_c", c.vec_c)
+        .set("vec_k", c.vec_k)
+        .set("block_k", c.block_k)
+        .set("algorithm", c.algorithm.as_str())
+        .set("wino_m", c.wino_m);
+    o
+}
+
+/// Decode a [`ConvConfig`] and validate it.
+pub(crate) fn conv_from_json(v: &Value) -> Result<ConvConfig> {
+    let field = |k: &str| -> Result<u32> {
+        v.get(k)
+            .and_then(|x| x.as_u64())
+            .map(|x| x as u32)
+            .ok_or_else(|| Error::Json(format!("conv config missing {k}")))
+    };
+    let cfg = ConvConfig {
+        tile_h: field("tile_h")?,
+        tile_w: field("tile_w")?,
+        vec_c: field("vec_c")?,
+        vec_k: field("vec_k")?,
+        block_k: field("block_k")?,
+        algorithm: v
+            .get("algorithm")
+            .and_then(|x| x.as_str())
+            .ok_or_else(|| Error::Json("conv config missing algorithm".into()))?
+            .parse::<ConvAlgorithm>()?,
+        wino_m: field("wino_m")?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+// ---- GemmPoint: the measured host GEMM space ----
+
+/// One point of the measured host GEMM space: the cache/register
+/// blocking (with its `threads` knob) **plus the micro-kernel ISA** —
+/// the runtime-detected SIMD axis.  This is what the host sweep
+/// measures, the DB stores (kind `"gemm_point"`; legacy `"blocked"`
+/// entries migrate with `isa: scalar`), and GEMM plans execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmPoint {
+    /// Cache blocking, register micro-tile, and `threads`.
+    pub params: BlockedParams,
+    /// Micro-kernel instruction-set variant.
+    pub isa: Isa,
+}
+
+impl Default for GemmPoint {
+    fn default() -> Self {
+        Self { params: BlockedParams::default(), isa: Isa::Scalar }
+    }
+}
+
+impl GemmPoint {
+    /// A scalar-ISA point over the given blocking (what every legacy
+    /// `BlockedParams` API migrates to).
+    pub fn scalar(params: BlockedParams) -> Self {
+        Self { params, isa: Isa::Scalar }
+    }
+
+    /// Compact name: the blocking name plus the ISA suffix
+    /// (`bm64bn64bk64_4x8_t0_avx2` style).
+    pub fn name(&self) -> String {
+        format!("{}_{}", self.params.name(), self.isa)
+    }
+
+    /// The point this plan can actually execute on the current host:
+    /// identical if the ISA is available, otherwise degraded to
+    /// [`Isa::Scalar`] (same blocking).  This is how a tuning DB written
+    /// on a bigger host stays *safe* to ship everywhere — off-host
+    /// entries lose only the ISA axis, never correctness.
+    pub fn host_degraded(self) -> Self {
+        if self.isa.is_available() {
+            self
+        } else {
+            Self { isa: Isa::Scalar, ..self }
+        }
+    }
+}
+
+impl KernelSpace for GemmPoint {
+    const KIND: &'static str = "gemm_point";
+    const LEGACY_KINDS: &'static [&'static str] = &["blocked"];
+
+    fn axes() -> &'static [&'static str] {
+        &["bm", "bn", "bk", "mr", "nr", "threads", "isa"]
+    }
+
+    fn default_point() -> Self {
+        Self::default()
+    }
+
+    fn validate(&self) -> Result<()> {
+        validate_blocked(&self.params)
+    }
+
+    fn point_name(&self) -> String {
+        self.name()
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = blocked_to_json(&self.params);
+        o.set("isa", self.isa.as_str());
+        o
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            params: blocked_from_json(v)?,
+            // Absent isa (a point written before the axis existed)
+            // means scalar.
+            isa: match v.get("isa").and_then(|x| x.as_str()) {
+                Some(s) => s.parse::<Isa>()?,
+                None => Isa::Scalar,
+            },
+        })
+    }
+
+    fn from_legacy_json(kind: &str, entry: &Value) -> Result<Self> {
+        match kind {
+            // Pre-unification measured GEMM selections: the blocking
+            // lives under "config", and the ISA axis did not exist.
+            "blocked" => Ok(Self::scalar(blocked_from_json(
+                entry.get("config").ok_or_else(|| {
+                    Error::Json("blocked entry missing config".into())
+                })?,
+            )?)),
+            other => Err(Error::Json(format!(
+                "gemm_point cannot migrate kind {other:?}"
+            ))),
+        }
+    }
+
+    fn applicable(&self, _problem: &Problem) -> bool {
+        // The blocking applies to GEMM problems directly and to conv
+        // problems through the im2col lowering (the legacy blocked
+        // sweep's contract); the ISA additionally requires host support.
+        self.isa.is_available()
+    }
+
+    fn report_columns(&self, entry: &mut Value) {
+        entry.set("isa", self.isa.as_str());
+    }
+}
+
+// ---- ConvPoint: the measured host convolution space ----
+
+/// One point of the measured host convolution space: the algorithm and
+/// its tile/vector knobs ([`ConvConfig`]) plus the GEMM blocking the
+/// im2col path uses and the `threads` knob every algorithm honors.
+/// Stored as kind `"conv_point"`; legacy `"conv_native"` entries (and
+/// pre-algorithm `"blocked"` / `"gemm_point"` conv selections, which
+/// plan as im2col) migrate on lookup.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConvPoint {
+    /// Algorithm + tile/vector configuration.
+    pub config: ConvConfig,
+    /// im2col GEMM blocking + `threads`.
+    pub blocked: BlockedParams,
+}
+
+impl Default for ConvPoint {
+    fn default() -> Self {
+        Self::im2col(BlockedParams::default())
+    }
+}
+
+impl ConvPoint {
+    /// The im2col point over the given blocking (the untuned default and
+    /// the migration target for pre-algorithm conv selections).
+    pub fn im2col(blocked: BlockedParams) -> Self {
+        Self { config: ConvConfig::im2col(), blocked }
+    }
+
+    /// Compact name for reports (`wino2_v1x1+bm64bn64bk64_4x8_t2`
+    /// style).
+    pub fn name(&self) -> String {
+        format!("{}+{}", self.config.name(), self.blocked.name())
+    }
+}
+
+impl KernelSpace for ConvPoint {
+    const KIND: &'static str = "conv_point";
+    const LEGACY_KINDS: &'static [&'static str] =
+        &["conv_native", "blocked", "gemm_point"];
+
+    fn axes() -> &'static [&'static str] {
+        &[
+            "algorithm", "tile_h", "tile_w", "vec_c", "vec_k", "block_k",
+            "wino_m", "bm", "bn", "bk", "mr", "nr", "threads",
+        ]
+    }
+
+    fn default_point() -> Self {
+        Self::default()
+    }
+
+    fn validate(&self) -> Result<()> {
+        self.config.validate()?;
+        validate_blocked(&self.blocked)
+    }
+
+    fn point_name(&self) -> String {
+        self.name()
+    }
+
+    fn to_json(&self) -> Value {
+        let mut o = Value::object();
+        o.set("config", conv_to_json(&self.config))
+            .set("blocked", blocked_to_json(&self.blocked));
+        o
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        Ok(Self {
+            config: conv_from_json(v.get("config").ok_or_else(|| {
+                Error::Json("conv point missing config".into())
+            })?)?,
+            blocked: blocked_from_json(v.get("blocked").ok_or_else(|| {
+                Error::Json("conv point missing blocked".into())
+            })?)?,
+        })
+    }
+
+    fn from_legacy_json(kind: &str, entry: &Value) -> Result<Self> {
+        match kind {
+            // Pre-unification measured conv selections: config + blocked
+            // at the entry's top level.
+            "conv_native" => Self::from_json(entry),
+            // Pre-algorithm conv selections (plain blocking): plan as
+            // im2col under those params, exactly as they always did.
+            "blocked" => Ok(Self::im2col(blocked_from_json(
+                entry.get("config").ok_or_else(|| {
+                    Error::Json("blocked entry missing config".into())
+                })?,
+            )?)),
+            // A unified GEMM point stored under a conv key (the legacy
+            // blocked sweep run over a conv group): im2col under that
+            // blocking; the ISA axis does not apply to conv kernels.
+            "gemm_point" => Ok(Self::im2col(blocked_from_json(
+                entry.get("point").ok_or_else(|| {
+                    Error::Json("gemm_point entry missing point".into())
+                })?,
+            )?)),
+            other => Err(Error::Json(format!(
+                "conv_point cannot migrate kind {other:?}"
+            ))),
+        }
+    }
+
+    fn applicable(&self, problem: &Problem) -> bool {
+        match *problem {
+            Problem::Gemm { .. } => false,
+            // Keep only points that run their own algorithm on this
+            // shape — the engine's plan-time fallback rule, verbatim, so
+            // a sweep can never time a fallback duplicate the plan would
+            // resolve differently.
+            Problem::Conv { window, stride } => {
+                native_conv_algorithm_dims(&self.config, window, stride)
+                    == self.config.algorithm
+            }
+        }
+    }
+
+    fn legacy_kind_applies(kind: &str, op: &str) -> bool {
+        match kind {
+            // GEMM-space entries mean "im2col under this blocking" only
+            // when they sit under a conv problem class; under a gemm
+            // class they are GEMM selections and must not answer conv
+            // lookups.
+            "blocked" | "gemm_point" => op.starts_with("conv_"),
+            _ => true,
+        }
+    }
+
+    fn report_columns(&self, entry: &mut Value) {
+        entry.set("algorithm", self.config.algorithm.as_str());
+    }
+}
+
+// ---- the modeled zoo spaces ----
+
+impl KernelSpace for GemmConfig {
+    const KIND: &'static str = "gemm";
+    const LEGACY_KINDS: &'static [&'static str] = &[];
+    // Historical layout: the paper-style name string under "config".
+    const POINT_FIELD: &'static str = "config";
+
+    fn axes() -> &'static [&'static str] {
+        &["rt_m", "rt_n", "wg_r", "wg_c", "block_k", "use_local",
+          "double_buffer"]
+    }
+
+    fn default_point() -> Self {
+        GemmConfig::default()
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.rt_m == 0 || self.rt_n == 0 || self.wg_r == 0
+            || self.wg_c == 0
+        {
+            return Err(Error::Config(format!(
+                "gemm config has a zero dimension: {self:?}"
+            )));
+        }
+        Ok(())
+    }
+
+    fn point_name(&self) -> String {
+        self.name()
+    }
+
+    fn to_json(&self) -> Value {
+        Value::Str(self.name())
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        GemmConfig::parse(v.as_str().ok_or_else(|| {
+            Error::Json("gemm config must be a name string".into())
+        })?)
+    }
+
+    fn from_legacy_json(kind: &str, _entry: &Value) -> Result<Self> {
+        Err(Error::Json(format!("gemm cannot migrate kind {kind:?}")))
+    }
+
+    fn applicable(&self, problem: &Problem) -> bool {
+        matches!(problem, Problem::Gemm { .. })
+    }
+}
+
+impl KernelSpace for ConvConfig {
+    const KIND: &'static str = "conv";
+    const LEGACY_KINDS: &'static [&'static str] = &[];
+    // Historical layout: the config object under "config".
+    const POINT_FIELD: &'static str = "config";
+
+    fn axes() -> &'static [&'static str] {
+        &["algorithm", "tile_h", "tile_w", "vec_c", "vec_k", "block_k",
+          "wino_m"]
+    }
+
+    fn default_point() -> Self {
+        ConvConfig::default()
+    }
+
+    fn validate(&self) -> Result<()> {
+        ConvConfig::validate(self)
+    }
+
+    fn point_name(&self) -> String {
+        self.name()
+    }
+
+    fn to_json(&self) -> Value {
+        conv_to_json(self)
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        conv_from_json(v)
+    }
+
+    fn from_legacy_json(kind: &str, _entry: &Value) -> Result<Self> {
+        Err(Error::Json(format!("conv cannot migrate kind {kind:?}")))
+    }
+
+    fn applicable(&self, problem: &Problem) -> bool {
+        match *problem {
+            Problem::Gemm { .. } => false,
+            Problem::Conv { window, stride } => {
+                self.algorithm.supports(window, stride)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_point_json_roundtrip_includes_isa() {
+        for isa in Isa::all() {
+            let p = GemmPoint {
+                params: BlockedParams {
+                    bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3,
+                },
+                isa,
+            };
+            let back = GemmPoint::from_json(&p.to_json()).unwrap();
+            assert_eq!(back, p);
+            assert!(p.name().ends_with(isa.as_str()), "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn gemm_point_absent_isa_means_scalar() {
+        let v = blocked_to_json(&BlockedParams::default());
+        assert_eq!(
+            GemmPoint::from_json(&v).unwrap().isa,
+            Isa::Scalar
+        );
+    }
+
+    #[test]
+    fn gemm_point_legacy_blocked_migration() {
+        let mut entry = Value::object();
+        entry
+            .set("kind", "blocked")
+            .set("config", blocked_to_json(&BlockedParams::default()))
+            .set("gflops", 1.0);
+        let p = GemmPoint::from_legacy_json("blocked", &entry).unwrap();
+        assert_eq!(p, GemmPoint::default());
+        assert!(GemmPoint::from_legacy_json("conv_native", &entry).is_err());
+    }
+
+    #[test]
+    fn gemm_point_rejects_bad_blocking() {
+        let mut v = blocked_to_json(&BlockedParams::default());
+        v.set("bm", 0u64);
+        assert!(GemmPoint::from_json(&v).is_err());
+        let mut v = blocked_to_json(&BlockedParams::default());
+        v.set("mr", 32u64);
+        assert!(GemmPoint::from_json(&v).is_err(), "over the kernel cap");
+        let mut v = blocked_to_json(&BlockedParams::default());
+        v.set("isa", "avx512");
+        assert!(GemmPoint::from_json(&v).is_err(), "unknown isa");
+    }
+
+    #[test]
+    fn host_degraded_keeps_available_isas_only() {
+        for isa in Isa::all() {
+            let p = GemmPoint { params: BlockedParams::default(), isa };
+            let d = p.host_degraded();
+            assert!(d.isa.is_available());
+            assert_eq!(d.params, p.params);
+            if isa.is_available() {
+                assert_eq!(d.isa, isa);
+            } else {
+                assert_eq!(d.isa, Isa::Scalar);
+            }
+        }
+    }
+
+    #[test]
+    fn conv_point_json_and_legacy_migrations() {
+        let p = ConvPoint {
+            config: ConvConfig::winograd(2),
+            blocked: BlockedParams {
+                bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
+            },
+        };
+        assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
+
+        // conv_native entries: config + blocked at the top level.
+        let mut legacy = Value::object();
+        legacy
+            .set("kind", "conv_native")
+            .set("config", conv_to_json(&p.config))
+            .set("blocked", blocked_to_json(&p.blocked));
+        assert_eq!(
+            ConvPoint::from_legacy_json("conv_native", &legacy).unwrap(),
+            p
+        );
+
+        // blocked entries: im2col under those params.
+        let mut blocked = Value::object();
+        blocked.set("config", blocked_to_json(&p.blocked));
+        let m = ConvPoint::from_legacy_json("blocked", &blocked).unwrap();
+        assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
+        assert_eq!(m.blocked, p.blocked);
+
+        // gemm_point entries: im2col, ISA dropped.
+        let gp = GemmPoint { params: p.blocked, isa: Isa::Avx2 };
+        let mut entry = Value::object();
+        entry.set("kind", "gemm_point").set("point", gp.to_json());
+        let m = ConvPoint::from_legacy_json("gemm_point", &entry).unwrap();
+        assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
+        assert_eq!(m.blocked, p.blocked);
+    }
+
+    #[test]
+    fn applicability_mirrors_the_fallback_rule() {
+        let gemm = Problem::Gemm { m: 64, n: 64, k: 64 };
+        let s1 = Problem::Conv { window: 3, stride: 1 };
+        let s2 = Problem::Conv { window: 3, stride: 2 };
+
+        // Conv points follow the native fallback rule exactly.
+        let wino = ConvPoint {
+            config: ConvConfig::winograd(2),
+            blocked: BlockedParams::default(),
+        };
+        assert!(wino.applicable(&s1));
+        assert!(!wino.applicable(&s2), "winograd off-domain");
+        assert!(!wino.applicable(&gemm));
+        assert!(ConvPoint::default().applicable(&s2), "im2col anywhere");
+
+        // GEMM points require host ISA support (scalar: everywhere;
+        // both problem kinds, for the legacy blocked-sweep contract).
+        let p = GemmPoint::default();
+        assert!(p.applicable(&gemm));
+        assert!(p.applicable(&s1));
+        if let Some(missing) =
+            Isa::all().into_iter().find(|i| !i.is_available())
+        {
+            assert!(!GemmPoint {
+                params: BlockedParams::default(),
+                isa: missing
+            }
+            .applicable(&gemm));
+        }
+        for isa in Isa::detect() {
+            assert!(GemmPoint { params: BlockedParams::default(), isa }
+                .applicable(&gemm));
+        }
+    }
+
+    #[test]
+    fn legacy_kind_gating_is_keyed_on_the_problem_class() {
+        // GEMM-space entries migrate into the conv space only under
+        // conv problem classes; conv_native entries are conv-keyed by
+        // construction and always apply.  GemmPoint keeps the legacy
+        // get_blocked behavior of answering under both.
+        for kind in ["blocked", "gemm_point"] {
+            assert!(ConvPoint::legacy_kind_applies(kind, "conv_3x3s1_x"));
+            assert!(!ConvPoint::legacy_kind_applies(kind, "gemm_64x64x64"));
+        }
+        assert!(ConvPoint::legacy_kind_applies("conv_native", "conv_3x3s1_x"));
+        assert!(GemmPoint::legacy_kind_applies("blocked", "gemm_64x64x64"));
+        assert!(GemmPoint::legacy_kind_applies("blocked", "conv_3x3s1_x"));
+    }
+
+    #[test]
+    fn modeled_spaces_roundtrip_their_historical_layout() {
+        let g = GemmConfig::parse("8x4_8x16_noloc").unwrap();
+        assert_eq!(g.to_json(), Value::Str("8x4_8x16_noloc".into()));
+        assert_eq!(GemmConfig::from_json(&g.to_json()).unwrap(), g);
+        assert_eq!(<GemmConfig as KernelSpace>::POINT_FIELD, "config");
+
+        let c = ConvConfig::tiled(4, 4, 4, 2);
+        assert_eq!(ConvConfig::from_json(&c.to_json()).unwrap(), c);
+        assert_eq!(<ConvConfig as KernelSpace>::POINT_FIELD, "config");
+
+        // Kind strings are pairwise distinct across the four spaces.
+        let kinds = [
+            GemmPoint::KIND,
+            ConvPoint::KIND,
+            <GemmConfig as KernelSpace>::KIND,
+            <ConvConfig as KernelSpace>::KIND,
+        ];
+        for (i, k) in kinds.iter().enumerate() {
+            assert!(!kinds[i + 1..].contains(k), "{k} duplicated");
+        }
+    }
+}

@@ -5,14 +5,28 @@
 //! this space; the types here are shared between the analytic performance
 //! model, the tuner, and the artifact manifest (JSON schema kept in sync
 //! with `python/compile/configs.py`).
+//!
+//! The [`KernelSpace`] trait is the unified face of all of it: any
+//! tunable kernel family — the measured host GEMM space ([`GemmPoint`]:
+//! blocking × threads × runtime-detected [`Isa`]), the measured conv
+//! space ([`ConvPoint`]: algorithm × knobs × blocking), or the modeled
+//! zoo configurations — exposes one axes/validate/encode/decode surface,
+//! so the tuner's storage and sweeps and the engine's plan-time
+//! resolution are written once, generically.
 
 mod conv;
 mod gemm;
+mod kernel_space;
 mod space;
 
 pub use conv::{ConvAlgorithm, ConvConfig};
 pub use gemm::GemmConfig;
+pub use kernel_space::{ConvPoint, GemmPoint, KernelSpace, Problem};
 pub use space::{
     conv_space, gemm_space, micro_kernel_shapes, ConvSpace, GemmSpace,
     MICRO_KERNEL_SHAPES,
 };
+
+/// The micro-kernel ISA axis, re-exported from [`crate::blas`] alongside
+/// the registry so the whole parameter space reads from one module.
+pub use crate::blas::Isa;

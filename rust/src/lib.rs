@@ -74,26 +74,37 @@
 //! Winograd F(2×2, 3×3) kernel (im2col fallback off an algorithm's
 //! domain), and GEMM's monomorphized `mr × nr` micro-tiles come from
 //! the macro-generated [`blas::MICRO_KERNEL_SHAPES`] registry shared
-//! with [`config::micro_kernel_shapes`].
+//! with [`config::micro_kernel_shapes`].  So is the micro-kernel
+//! **ISA** ([`blas::Isa`]): each registry tile has runtime-dispatched
+//! scalar/SSE2/AVX2/FMA `#[target_feature]` variants
+//! ([`blas::gemm_blocked_isa`]), detected per host and degraded to
+//! scalar at plan time when a tuned entry asks for an ISA the
+//! executing CPU lacks.
 //!
-//! The measure→persist→plan loop closes over that space:
-//! [`tuner::tune_blocked_sweep`] times the `BlockedParams × threads`
-//! grid and [`tuner::tune_conv_native_sweep`] the `ConvAlgorithm ×
-//! ConvConfig × threads` grid through any [`runtime::Backend`],
-//! persisting per-problem winners into a [`tuner::SelectionDb`]; a
-//! [`runtime::NativeEngine`] built with `with_tuning` resolves each
-//! artifact's parameters — for conv, including the algorithm — from
-//! that DB at plan time (small untuned problems default to serial
-//! threads per [`runtime::SMALL_PROBLEM_FLOP_CUTOFF`]).  `cargo run
-//! --release --example tune_device -- --quick` runs the whole loop (CI
-//! does, on every merge, archiving the DB and a GFLOP/s summary as
-//! artifacts).
+//! The whole parameter space sits behind one abstraction,
+//! [`config::KernelSpace`] — a point type ([`config::GemmPoint`]:
+//! blocking × threads × ISA; [`config::ConvPoint`]: algorithm × knobs ×
+//! blocking) plus axes/validation/JSON/applicability — so storage,
+//! sweeps, and plan-time resolution are written once, generically.
+//! The measure→persist→plan loop closes over it:
+//! [`tuner::tune_space_sweep`] times any space's grid
+//! ([`tuner::gemm_point_grid`], [`tuner::conv_native_grid`]) through
+//! any [`runtime::Backend`], persisting per-problem winners into a
+//! [`tuner::SelectionDb`] (legacy `blocked`/`conv_native` entries
+//! still load via migration shims; [`tuner::SelectionDb::merge`] folds
+//! whole legacy DBs forward); a [`runtime::NativeEngine`] built with
+//! `with_tuning` resolves each artifact's point — algorithm and ISA
+//! included — from that DB at plan time (small untuned problems
+//! default to serial threads per
+//! [`runtime::SMALL_PROBLEM_FLOP_CUTOFF`]).  `cargo run --release
+//! --example tune_device -- --quick` runs the whole loop (CI does, on
+//! every merge, archiving the DB and a GFLOP/s summary as artifacts).
 //!
 //! ## Module map
 //!
 //! | module | role |
 //! |---|---|
-//! | [`config`] | kernel parameter spaces (`GemmConfig`, `ConvConfig`) |
+//! | [`config`] | kernel parameter spaces (`KernelSpace`, `GemmPoint`, `ConvPoint`, `GemmConfig`, `ConvConfig`) |
 //! | [`device`] | device specifications (paper Table 1) |
 //! | [`perfmodel`] | analytic performance simulator (§2.2 metrics) |
 //! | [`tuner`] | configuration search + selection DB + measured tuning + the per-host `BlockedParams × threads` sweep |

@@ -12,35 +12,44 @@
 //! never opened, so synthetic manifests (tests) and real AOT output both
 //! execute.
 //!
-//! Each plan resolves the parameters it will execute with — for GEMM the
-//! [`BlockedParams`], for conv additionally *which algorithm* runs
-//! ([`crate::config::ConvConfig`]).  Resolution order, first hit wins:
+//! Each plan resolves the [`crate::config::KernelSpace`] point it will
+//! execute with — for GEMM a [`GemmPoint`] (blocking × threads ×
+//! micro-kernel ISA), for conv a [`ConvPoint`] (which *algorithm* runs,
+//! its knobs, and the blocking).  **One generic resolution ladder**
+//! serves every space, first hit wins:
 //!
-//! 1. a measured [`Selection::ConvNative`](crate::tuner::Selection) /
-//!    `Blocked` entry in the attached tuning DB
-//!    ([`NativeEngine::with_tuning`]) for the artifact's problem class;
-//! 2. engine-wide overrides ([`NativeEngine::set_params`] /
-//!    [`NativeEngine::set_conv_params`] — what the tuner's sweeps drive);
-//! 3. the defaults: im2col, auto threads — except that *small* problems
-//!    (below [`SMALL_PROBLEM_FLOP_CUTOFF`] manifest flops) plan
-//!    `threads: 1`, because thread fan-out costs more than it buys on
-//!    sub-millisecond kernels.  A tuned DB entry always overrides the
-//!    heuristic.
+//! 1. a tuned entry for the artifact's problem class in the attached
+//!    tuning DB ([`NativeEngine::with_tuning`]) — unified
+//!    `gemm_point`/`conv_point` entries and legacy `blocked` /
+//!    `conv_native` entries alike (the DB's per-space migration shims
+//!    decode both);
+//! 2. engine-wide overrides ([`NativeEngine::set_gemm_point`] /
+//!    [`NativeEngine::set_conv_point`], with
+//!    [`NativeEngine::set_params`] / [`NativeEngine::set_conv_params`]
+//!    as the legacy typed views — what the tuner's sweeps drive);
+//! 3. the defaults: scalar ISA, im2col, auto threads — except that
+//!    *small* problems (below [`SMALL_PROBLEM_FLOP_CUTOFF`] manifest
+//!    flops) plan `threads: 1`, because thread fan-out costs more than
+//!    it buys on sub-millisecond kernels.  A tuned DB entry always
+//!    overrides the heuristic.
 //!
-//! Winograd selections additionally fall back to im2col at plan time on
-//! shapes outside the F(2×2, 3×3) domain, so
-//! [`NativeEngine::planned_conv`] always reports the algorithm that will
-//! really run.
+//! Two plan-time safety rules keep every resolved point executable on
+//! *this* host: Winograd selections fall back to im2col on shapes
+//! outside the F(2×2, 3×3) domain, and GEMM points whose ISA the
+//! executing CPU lacks degrade to the scalar micro-kernel (same
+//! blocking) — so a DB tuned on a bigger host is always safe to ship,
+//! and [`NativeEngine::planned_conv`] / [`NativeEngine::planned_gemm`]
+//! always report what will really run.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::blas::{
-    conv2d_native, gemm_blocked, native_conv_algorithm, BlockedParams,
+    conv2d_native, gemm_blocked_isa, native_conv_algorithm, BlockedParams,
     Conv2dShape,
 };
-use crate::config::ConvConfig;
+use crate::config::{ConvConfig, ConvPoint, GemmPoint, KernelSpace};
 use crate::error::{Error, Result};
 use crate::tuner::{selection_key_for, SelectionDb};
 
@@ -78,7 +87,9 @@ enum Plan {
         beta: f32,
         /// Third input is a C operand for the β epilogue.
         with_c: bool,
-        params: BlockedParams,
+        /// The resolved GEMM space point — blocking, threads, and the
+        /// micro-kernel ISA, already degraded to what this host can run.
+        point: GemmPoint,
     },
     Conv {
         shape: Conv2dShape,
@@ -86,30 +97,38 @@ enum Plan {
         /// vector over output channels), matching how `aot.py` lowers
         /// `network`-group artifacts.
         fuse_relu: bool,
-        /// The algorithm + tile/vector knobs this plan dispatches to —
-        /// already resolved through the fallback rule, so `algorithm`
-        /// is what will actually execute.
-        conv: ConvConfig,
-        params: BlockedParams,
+        /// The resolved conv space point — the algorithm + tile/vector
+        /// knobs (already resolved through the fallback rule, so
+        /// `point.config.algorithm` is what will actually execute) and
+        /// the im2col blocking + `threads`.
+        point: ConvPoint,
     },
 }
 
 impl Plan {
     fn params(&self) -> BlockedParams {
         match self {
-            Plan::Gemm { params, .. } | Plan::Conv { params, .. } => *params,
+            Plan::Gemm { point, .. } => point.params,
+            Plan::Conv { point, .. } => point.blocked,
+        }
+    }
+
+    fn gemm_point(&self) -> Option<GemmPoint> {
+        match self {
+            Plan::Gemm { point, .. } => Some(*point),
+            Plan::Conv { .. } => None,
         }
     }
 
     fn conv_config(&self) -> Option<ConvConfig> {
         match self {
             Plan::Gemm { .. } => None,
-            Plan::Conv { conv, .. } => Some(*conv),
+            Plan::Conv { point, .. } => Some(point.config),
         }
     }
 }
 
-fn gemm_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
+fn gemm_plan(meta: &ArtifactMeta, point: GemmPoint) -> Result<Plan> {
     let dim = |v: Option<u64>, what: &str| -> Result<usize> {
         v.map(|x| x as usize).ok_or_else(|| {
             Error::Artifact(format!(
@@ -147,15 +166,11 @@ fn gemm_plan(meta: &ArtifactMeta, params: BlockedParams) -> Result<Plan> {
         alpha: meta.alpha.unwrap_or(1.0) as f32,
         beta: meta.beta.unwrap_or(0.0) as f32,
         with_c,
-        params,
+        point,
     })
 }
 
-fn conv_plan(
-    meta: &ArtifactMeta,
-    conv: ConvConfig,
-    params: BlockedParams,
-) -> Result<Plan> {
+fn conv_plan(meta: &ArtifactMeta, point: ConvPoint) -> Result<Plan> {
     let layer: &LayerMeta = meta.layer.as_ref().ok_or_else(|| {
         Error::Artifact(format!(
             "{}: conv artifact missing layer metadata",
@@ -255,26 +270,29 @@ fn conv_plan(
     // Resolve the fallback rule *now*, so the plan (and everything that
     // reports it: `planned_conv`, tuning reports) names the algorithm
     // that will really execute.
-    let conv = ConvConfig {
-        algorithm: native_conv_algorithm(&conv, &shape),
-        ..conv
+    let point = ConvPoint {
+        config: ConvConfig {
+            algorithm: native_conv_algorithm(&point.config, &shape),
+            ..point.config
+        },
+        blocked: point.blocked,
     };
-    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, conv, params })
+    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, point })
 }
 
 /// What the engine falls back to when the tuning DB has no entry for a
 /// problem class.
 #[derive(Debug, Clone, Copy)]
 struct Fallback {
-    /// Engine-wide blocking parameters.
-    params: BlockedParams,
-    /// Whether `params` was set explicitly ([`NativeEngine::with_params`]
-    /// / [`NativeEngine::set_params`]); explicit params bypass the
-    /// small-problem threads heuristic.
+    /// Engine-wide GEMM point (blocking + ISA).
+    gemm: GemmPoint,
+    /// Whether `gemm` was set explicitly ([`NativeEngine::with_params`]
+    /// / [`NativeEngine::set_params`] / [`NativeEngine::set_gemm_point`]);
+    /// explicit points bypass the small-problem threads heuristic.
     explicit: bool,
-    /// Engine-wide conv override ([`NativeEngine::set_conv_params`]):
+    /// Engine-wide conv override ([`NativeEngine::set_conv_point`]):
     /// algorithm + knobs + blocking, used verbatim for conv plans.
-    conv: Option<(ConvConfig, BlockedParams)>,
+    conv: Option<ConvPoint>,
 }
 
 /// The small-problem threads heuristic: auto-threaded (`threads: 0`)
@@ -288,62 +306,39 @@ fn heuristic_params(params: BlockedParams, flops: u64) -> BlockedParams {
 }
 
 impl Fallback {
-    fn gemm_params(&self, meta: &ArtifactMeta) -> BlockedParams {
+    fn gemm_point(&self, meta: &ArtifactMeta) -> GemmPoint {
         if self.explicit {
-            self.params
+            self.gemm
         } else {
-            heuristic_params(self.params, meta.flops)
+            GemmPoint {
+                params: heuristic_params(self.gemm.params, meta.flops),
+                ..self.gemm
+            }
         }
     }
 
-    fn conv_params(
-        &self,
-        meta: &ArtifactMeta,
-    ) -> (ConvConfig, BlockedParams) {
-        match self.conv {
-            Some((config, blocked)) => (config, blocked),
-            None => (ConvConfig::im2col(), self.gemm_params(meta)),
-        }
+    fn conv_point(&self, meta: &ArtifactMeta) -> ConvPoint {
+        self.conv
+            .unwrap_or_else(|| ConvPoint::im2col(self.gemm_point(meta).params))
     }
 }
 
-/// Resolve the GEMM blocking parameters an artifact will execute with: a
-/// tuned entry from the selection DB when one exists for this problem
-/// class on this platform, the engine fallback otherwise.
-fn resolve_params(
+/// The one generic rung of the resolution ladder: the tuned point of
+/// space `P` for this artifact's problem class, when the attached DB has
+/// one.  Unified and legacy entry kinds both answer — the DB's
+/// per-space migration shims decode `blocked` entries for [`GemmPoint`]
+/// lookups and `conv_native`/`blocked` entries for [`ConvPoint`]
+/// lookups — so one ladder serves every space, old DBs included.
+fn resolve_point<P: KernelSpace>(
     meta: &ArtifactMeta,
-    fallback: &Fallback,
     tuning: Option<&SelectionDb>,
     device: &str,
-) -> BlockedParams {
+) -> Option<P> {
     tuning
         .and_then(|db| {
-            selection_key_for(meta, device)
-                .and_then(|key| db.get_blocked(&key))
+            selection_key_for(meta, device).and_then(|key| db.get::<P>(&key))
         })
-        .map(|(params, _gflops)| params)
-        .unwrap_or_else(|| fallback.gemm_params(meta))
-}
-
-/// Resolve the conv algorithm + parameters: a measured `ConvNative`
-/// selection first, then a legacy `Blocked` selection (pre-algorithm
-/// DBs: im2col under those params), then the engine fallback.
-fn resolve_conv(
-    meta: &ArtifactMeta,
-    fallback: &Fallback,
-    tuning: Option<&SelectionDb>,
-    device: &str,
-) -> (ConvConfig, BlockedParams) {
-    if let (Some(db), Some(key)) = (tuning, selection_key_for(meta, device))
-    {
-        if let Some((config, blocked, _)) = db.get_conv_native(&key) {
-            return (config, blocked);
-        }
-        if let Some((params, _)) = db.get_blocked(&key) {
-            return (ConvConfig::im2col(), params);
-        }
-    }
-    fallback.conv_params(meta)
+        .map(|(point, _gflops)| point)
 }
 
 fn build_plan(
@@ -354,12 +349,18 @@ fn build_plan(
 ) -> Result<Plan> {
     match meta.kind.as_str() {
         "gemm" => {
-            gemm_plan(meta, resolve_params(meta, fallback, tuning, device))
+            let point = resolve_point::<GemmPoint>(meta, tuning, device)
+                .unwrap_or_else(|| fallback.gemm_point(meta))
+                // Plan-time safety: an ISA this host lacks (an off-host
+                // DB entry) degrades to the scalar micro-kernel, same
+                // blocking, so what the plan reports is executable.
+                .host_degraded();
+            gemm_plan(meta, point)
         }
         "conv" => {
-            let (conv, params) =
-                resolve_conv(meta, fallback, tuning, device);
-            conv_plan(meta, conv, params)
+            let point = resolve_point::<ConvPoint>(meta, tuning, device)
+                .unwrap_or_else(|| fallback.conv_point(meta));
+            conv_plan(meta, point)
         }
         other => Err(Error::Runtime(format!(
             "{}: unknown op kind {other:?} — the native backend executes \
@@ -378,11 +379,11 @@ pub struct NativeEngine {
     store: ArtifactStore,
     plans: HashMap<String, Plan>,
     fallback: Fallback,
-    /// Per-host tuning DB (`tuner::tune_blocked_sweep` /
-    /// `tuner::tune_conv_native_sweep` output).  When present, plans
-    /// resolve their parameters — including the conv algorithm — from
-    /// it.  Held behind an `Arc` so every actor of an engine pool shares
-    /// one read-only copy instead of cloning the DB per actor.
+    /// Per-host tuning DB (`tuner::tune_space_sweep` output; legacy
+    /// sweep DBs load too).  When present, plans resolve their space
+    /// point — including the conv algorithm and the GEMM ISA — from it.
+    /// Held behind an `Arc` so every actor of an engine pool shares one
+    /// read-only copy instead of cloning the DB per actor.
     tuning: Option<Arc<SelectionDb>>,
     /// Platform string tuned selections are keyed under.
     device: String,
@@ -395,7 +396,7 @@ impl NativeEngine {
             store,
             plans: HashMap::new(),
             fallback: Fallback {
-                params: BlockedParams::default(),
+                gemm: GemmPoint::default(),
                 explicit: false,
                 conv: None,
             },
@@ -412,7 +413,11 @@ impl NativeEngine {
         Self {
             store,
             plans: HashMap::new(),
-            fallback: Fallback { params, explicit: true, conv: None },
+            fallback: Fallback {
+                gemm: GemmPoint::scalar(params),
+                explicit: true,
+                conv: None,
+            },
             tuning: None,
             device: HOST_DEVICE.to_string(),
         }
@@ -440,7 +445,7 @@ impl NativeEngine {
             store,
             plans: HashMap::new(),
             fallback: Fallback {
-                params: BlockedParams::default(),
+                gemm: GemmPoint::default(),
                 explicit: false,
                 conv: None,
             },
@@ -449,29 +454,41 @@ impl NativeEngine {
         }
     }
 
-    /// Replace the fallback blocking parameters.  Invalidates the plan
-    /// cache — plans embed the params they resolved.  Explicitly set
-    /// params bypass the small-problem threads heuristic (this is what
-    /// lets the tuner measure `threads: 0` grid points on small shapes).
-    pub fn set_params(&mut self, params: BlockedParams) {
-        self.fallback.params = params;
+    /// Replace the fallback GEMM space point (blocking + ISA).
+    /// Invalidates the plan cache — plans embed the point they resolved.
+    /// Explicitly set points bypass the small-problem threads heuristic
+    /// (this is what lets the tuner measure `threads: 0` and SIMD grid
+    /// points on small shapes).
+    pub fn set_gemm_point(&mut self, point: GemmPoint) {
+        self.fallback.gemm = point;
         self.fallback.explicit = true;
         self.plans.clear();
     }
 
-    /// Set the engine-wide conv override: the algorithm (+ tile/vector
-    /// knobs) and GEMM blocking every conv plan without a tuned DB entry
-    /// resolves to.  Invalidates the plan cache.  This is the handle the
-    /// measured conv sweep drives (`tuner::tune_conv_native_sweep`);
-    /// shapes an algorithm cannot compute still fall back to im2col at
-    /// plan time.
+    /// Legacy typed view of [`NativeEngine::set_gemm_point`]: replace
+    /// the fallback blocking parameters with a scalar-ISA point.
+    pub fn set_params(&mut self, params: BlockedParams) {
+        self.set_gemm_point(GemmPoint::scalar(params));
+    }
+
+    /// Set the engine-wide conv override: the full conv space point
+    /// (algorithm + tile/vector knobs + GEMM blocking) every conv plan
+    /// without a tuned DB entry resolves to.  Invalidates the plan
+    /// cache.  This is the handle the measured conv sweep drives
+    /// (`tuner::tune_space_sweep`); shapes an algorithm cannot compute
+    /// still fall back to im2col at plan time.
+    pub fn set_conv_point(&mut self, point: ConvPoint) {
+        self.fallback.conv = Some(point);
+        self.plans.clear();
+    }
+
+    /// Legacy typed view of [`NativeEngine::set_conv_point`].
     pub fn set_conv_params(
         &mut self,
         config: ConvConfig,
         blocked: BlockedParams,
     ) {
-        self.fallback.conv = Some((config, blocked));
-        self.plans.clear();
+        self.set_conv_point(ConvPoint { config, blocked });
     }
 
     /// Attach (or replace) the tuning DB.  Invalidates the plan cache.
@@ -480,21 +497,39 @@ impl NativeEngine {
         self.plans.clear();
     }
 
-    /// The fallback blocking parameters currently configured.
-    pub fn params(&self) -> BlockedParams {
-        self.fallback.params
+    /// The fallback GEMM space point currently configured.
+    pub fn gemm_point(&self) -> GemmPoint {
+        self.fallback.gemm
     }
 
-    /// The engine-wide conv override, if one was set.
+    /// The fallback blocking parameters currently configured (the
+    /// blocking half of [`NativeEngine::gemm_point`]).
+    pub fn params(&self) -> BlockedParams {
+        self.fallback.gemm.params
+    }
+
+    /// The engine-wide conv override, if one was set (legacy tuple view
+    /// of the stored [`ConvPoint`]).
     pub fn conv_params(&self) -> Option<(ConvConfig, BlockedParams)> {
-        self.fallback.conv
+        self.fallback.conv.map(|p| (p.config, p.blocked))
     }
 
     /// The blocking parameters artifact `name` will execute with —
     /// plans it if needed.  This is how tests and reports demonstrate
-    /// that a tuned selection is actually consulted.
+    /// that a tuned selection is actually consulted.  (Thin typed view:
+    /// for GEMM artifacts this is the blocking half of
+    /// [`NativeEngine::planned_gemm`], for conv artifacts the blocking
+    /// half of the resolved conv point.)
     pub fn planned_params(&mut self, name: &str) -> Result<BlockedParams> {
         Ok(self.plan(name)?.params())
+    }
+
+    /// The full GEMM space point artifact `name` will execute with —
+    /// `None` for non-GEMM artifacts.  The ISA field is post-degrade:
+    /// it names the micro-kernel variant that will *really* run on this
+    /// host, even when the tuned DB entry asked for one the CPU lacks.
+    pub fn planned_gemm(&mut self, name: &str) -> Result<Option<GemmPoint>> {
+        Ok(self.plan(name)?.gemm_point())
     }
 
     /// The conv configuration artifact `name` will execute with —
@@ -523,14 +558,15 @@ impl NativeEngine {
 
     fn execute(&self, plan: &Plan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match plan {
-            Plan::Gemm { m, n, k, alpha, beta, with_c, params } => {
-                let mut out = gemm_blocked(
+            Plan::Gemm { m, n, k, alpha, beta, with_c, point } => {
+                let mut out = gemm_blocked_isa(
                     &inputs[0],
                     &inputs[1],
                     *m,
                     *n,
                     *k,
-                    params,
+                    &point.params,
+                    point.isa,
                 );
                 if *with_c {
                     for (o, c) in out.iter_mut().zip(&inputs[2]) {
@@ -543,13 +579,13 @@ impl NativeEngine {
                 }
                 vec![out]
             }
-            Plan::Conv { shape, fuse_relu, conv, params } => {
+            Plan::Conv { shape, fuse_relu, point } => {
                 let mut out = conv2d_native(
                     &inputs[0],
                     &inputs[1],
                     shape,
-                    conv,
-                    params,
+                    &point.config,
+                    &point.blocked,
                 );
                 if *fuse_relu {
                     let bias = &inputs[2];
@@ -1084,6 +1120,118 @@ mod tests {
         let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
         // The tiled path is bit-identical to the direct oracle.
         assert_eq!(out.outputs[0], expected);
+    }
+
+    #[test]
+    fn tuned_gemm_point_resolves_isa_and_degrades_off_host() {
+        use crate::blas::Isa;
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1 };
+        let key = SelectionKey::gemm(HOST_DEVICE, 8, 8, 8);
+
+        // A selection with a host-supported SIMD ISA plans verbatim and
+        // computes the right answer through the SIMD micro-kernel.
+        if let Some(&simd) =
+            Isa::detect().iter().find(|i| **i != Isa::Scalar)
+        {
+            let mut db = SelectionDb::new();
+            db.put(key.clone(), GemmPoint { params, isa: simd }, 9.0);
+            let (_dir, plain) = engine_with(GEMM_8);
+            let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+            let planned = e.planned_gemm("g8").unwrap().unwrap();
+            assert_eq!(planned, GemmPoint { params, isa: simd });
+            assert_eq!(e.planned_params("g8").unwrap(), params);
+            let mut rng = XorShift::new(31);
+            let a = rng.f32_vec(64);
+            let b = rng.f32_vec(64);
+            let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
+            let expected = gemm_naive(&a, &b, 8, 8, 8);
+            assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+        }
+
+        // A selection whose ISA this host lacks (an off-host DB entry)
+        // degrades to scalar at plan time — same blocking, and the run
+        // cannot hit the unavailable-ISA panic.
+        if let Some(missing) =
+            Isa::all().into_iter().find(|i| !i.is_available())
+        {
+            let mut db = SelectionDb::new();
+            db.put(key.clone(), GemmPoint { params, isa: missing }, 9.0);
+            let (_dir, plain) = engine_with(GEMM_8);
+            let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+            let planned = e.planned_gemm("g8").unwrap().unwrap();
+            assert_eq!(planned.isa, Isa::Scalar, "degraded at plan time");
+            assert_eq!(planned.params, params, "blocking survives");
+            let inputs = e.synth_inputs("g8", 3).unwrap();
+            e.run("g8", &inputs).unwrap();
+        }
+
+        // Conv artifacts report no GEMM point.
+        let (_dir, mut c) = engine_with(CONV_3X3);
+        assert!(c.planned_gemm("c33").unwrap().is_none());
+    }
+
+    #[test]
+    fn legacy_blocked_db_fixture_plans_identically() {
+        use crate::blas::Isa;
+        use crate::tuner::SelectionDb;
+        use crate::util::tmp::TempDir;
+
+        // A byte-for-byte pre-unification DB file: the blocked entry
+        // must plan exactly as it always did — those params, scalar
+        // micro-kernel.
+        let dir = TempDir::new("legacy-db").unwrap();
+        let path = dir.path().join("old.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 5.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 2},
+                "name": "bm8bn8bk8_2x2_t2"}}"#,
+        )
+        .unwrap();
+        let db = SelectionDb::load(&path).unwrap();
+        let (_dir2, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let want =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 2 };
+        assert_eq!(e.planned_params("g8").unwrap(), want);
+        let planned = e.planned_gemm("g8").unwrap().unwrap();
+        assert_eq!(planned, GemmPoint { params: want, isa: Isa::Scalar });
+    }
+
+    #[test]
+    fn set_gemm_point_drives_the_isa_dispatch() {
+        use crate::blas::Isa;
+
+        let (_dir, mut e) = engine_with(GEMM_8);
+        // Default fallback: scalar.
+        assert_eq!(
+            e.planned_gemm("g8").unwrap().unwrap().isa,
+            Isa::Scalar
+        );
+        // Engine-wide override with a detected ISA (scalar always
+        // qualifies, so this runs on every host).
+        let isa = *Isa::detect().last().unwrap();
+        let point = GemmPoint {
+            params: BlockedParams {
+                bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1,
+            },
+            isa,
+        };
+        e.set_gemm_point(point);
+        assert_eq!(e.cached(), 0, "set_gemm_point must drop stale plans");
+        assert_eq!(e.planned_gemm("g8").unwrap().unwrap(), point);
+        assert_eq!(e.gemm_point(), point);
+        assert_eq!(e.params(), point.params);
+        let mut rng = XorShift::new(44);
+        let a = rng.f32_vec(64);
+        let b = rng.f32_vec(64);
+        let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
+        let expected = gemm_naive(&a, &b, 8, 8, 8);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
     }
 
     #[test]

@@ -1,15 +1,26 @@
-//! Selection database: persisted (device, problem) -> winning config.
+//! Selection database: persisted (device, problem) -> winning point.
 //!
 //! This is the tuning artifact a deployment ships — the paper's "choosing
 //! the combinations of kernel parameters that perform best on the
 //! hardware", made durable.  JSON on disk (via [`crate::util::json`]);
 //! the request path only does map lookups.
+//!
+//! Storage is **generic over [`KernelSpace`]**: [`SelectionDb::put`] /
+//! [`SelectionDb::get`] work for any space, keyed by the space's `KIND`
+//! string (`gemm_point`, `conv_point`, and the modeled zoo's `gemm` /
+//! `conv`).  Legacy kinds (`blocked`, `conv_native`) still load and
+//! resolve through each space's migration shim
+//! ([`KernelSpace::from_legacy_json`]), and round-trip byte-identically
+//! through save/load — migration to the unified schema happens only on
+//! lookup, or explicitly via [`SelectionDb::merge`].  Loading rejects
+//! corrupt entries, unknown kinds, and duplicate keys whose occurrences
+//! carry conflicting kinds (previously a silent last-write-wins).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::blas::BlockedParams;
-use crate::config::{ConvAlgorithm, ConvConfig, GemmConfig};
+use crate::config::{ConvConfig, ConvPoint, GemmConfig, GemmPoint, KernelSpace};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
 
@@ -72,7 +83,118 @@ impl SelectionKey {
     }
 }
 
-/// One stored selection.
+/// One stored selection, in its serialized shape: the kind string, the
+/// full rendered JSON entry (written back verbatim by
+/// [`SelectionDb::save`], so legacy entries survive a load/save cycle
+/// untouched), and the measured/modeled throughput.
+#[derive(Debug, Clone)]
+pub struct StoredSelection {
+    kind: String,
+    entry: Value,
+    gflops: f64,
+}
+
+impl StoredSelection {
+    /// The entry's kind string — a space `KIND` (`gemm_point`,
+    /// `conv_point`, `gemm`, `conv`) or a legacy kind (`blocked`,
+    /// `conv_native`).
+    pub fn kind(&self) -> &str {
+        &self.kind
+    }
+
+    /// Throughput of the stored winner, GFLOP/s.
+    pub fn gflops(&self) -> f64 {
+        self.gflops
+    }
+
+    /// The full JSON entry as serialized (kind, point, name, report
+    /// columns, gflops).
+    pub fn entry(&self) -> &Value {
+        &self.entry
+    }
+
+    /// Decode into the legacy [`Selection`] view, if this entry maps to
+    /// one.  `gemm_point` entries appear as [`Selection::Blocked`] (the
+    /// legacy view has no ISA axis) and `conv_point` entries as
+    /// [`Selection::ConvNative`] — the enum is a read-only migration
+    /// shim, not the storage.
+    pub fn legacy_view(&self) -> Option<Selection> {
+        let g = self.gflops;
+        match self.kind.as_str() {
+            k if k == <GemmConfig as KernelSpace>::KIND => {
+                let config = GemmConfig::from_json(
+                    self.entry.get(<GemmConfig as KernelSpace>::POINT_FIELD)?,
+                )
+                .ok()?;
+                Some(Selection::Gemm { config, gflops: g })
+            }
+            k if k == <ConvConfig as KernelSpace>::KIND => {
+                let config = ConvConfig::from_json(
+                    self.entry.get(<ConvConfig as KernelSpace>::POINT_FIELD)?,
+                )
+                .ok()?;
+                Some(Selection::Conv { config, gflops: g })
+            }
+            k if k == GemmPoint::KIND => {
+                let p =
+                    GemmPoint::from_json(self.entry.get(GemmPoint::POINT_FIELD)?)
+                        .ok()?;
+                Some(Selection::Blocked { params: p.params, gflops: g })
+            }
+            "blocked" => {
+                let p =
+                    GemmPoint::from_legacy_json("blocked", &self.entry).ok()?;
+                Some(Selection::Blocked { params: p.params, gflops: g })
+            }
+            k if k == ConvPoint::KIND => {
+                let p =
+                    ConvPoint::from_json(self.entry.get(ConvPoint::POINT_FIELD)?)
+                        .ok()?;
+                Some(Selection::ConvNative {
+                    config: p.config,
+                    blocked: p.blocked,
+                    gflops: g,
+                })
+            }
+            "conv_native" => {
+                let p = ConvPoint::from_legacy_json("conv_native", &self.entry)
+                    .ok()?;
+                Some(Selection::ConvNative {
+                    config: p.config,
+                    blocked: p.blocked,
+                    gflops: g,
+                })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Decode a stored entry under problem class `op` as a point of space
+/// `P`: directly when the kind matches `P::KIND`, through the migration
+/// shim when it is one of `P::LEGACY_KINDS` *and* the space accepts
+/// that kind under this problem class
+/// ([`KernelSpace::legacy_kind_applies`] — e.g. a GEMM-space entry
+/// under a gemm key never answers a conv lookup), `None` otherwise (the
+/// entry belongs to another space).  Entries were validated through
+/// exactly these decoders at load/put time, so a `None` from a matching
+/// kind cannot happen in practice.
+fn decode_stored<P: KernelSpace>(s: &StoredSelection, op: &str) -> Option<P> {
+    if s.kind == P::KIND {
+        P::from_json(s.entry.get(P::POINT_FIELD)?).ok()
+    } else if P::LEGACY_KINDS.contains(&s.kind.as_str())
+        && P::legacy_kind_applies(&s.kind, op)
+    {
+        P::from_legacy_json(&s.kind, &s.entry).ok()
+    } else {
+        None
+    }
+}
+
+/// The legacy typed view of one stored selection — kept as a read-only
+/// migration shim over the generic [`KernelSpace`] storage (deprecated
+/// as a storage format; new code reads points with
+/// [`SelectionDb::get`]).
 #[derive(Debug, Clone)]
 pub enum Selection {
     /// A modeled device-zoo GEMM selection.
@@ -89,22 +211,17 @@ pub enum Selection {
         /// Its modeled throughput, GFLOP/s.
         gflops: f64,
     },
-    /// A measured host-kernel selection: the winning
-    /// [`BlockedParams`] × threads combination from a per-host sweep
-    /// (`tuner::tune_blocked_sweep`), consulted by `NativeEngine` at
-    /// plan time.
+    /// A measured host GEMM selection (the ISA axis, if the entry has
+    /// one, is not visible in this legacy view — use
+    /// [`SelectionDb::get::<GemmPoint>`](SelectionDb::get)).
     Blocked {
         /// Winning blocking parameters (including `threads`).
         params: BlockedParams,
         /// Its measured throughput, GFLOP/s.
         gflops: f64,
     },
-    /// A measured native convolution selection: the winning *algorithm*
-    /// plus its knobs (`tuner::tune_conv_native_sweep`) — the
-    /// [`ConvConfig`] names the algorithm (tiled/im2col/winograd) and
-    /// its tile/vector parameters, the [`BlockedParams`] carry the
-    /// im2col GEMM blocking and the `threads` knob every path honors.
-    /// `NativeEngine` resolves conv plans from these first.
+    /// A measured native convolution selection: algorithm + knobs +
+    /// blocking.
     ConvNative {
         /// Winning algorithm + tile/vector configuration.
         config: ConvConfig,
@@ -115,76 +232,90 @@ pub enum Selection {
     },
 }
 
-fn blocked_to_json(p: &BlockedParams) -> Value {
-    let mut o = Value::object();
-    o.set("bm", p.bm)
-        .set("bn", p.bn)
-        .set("bk", p.bk)
-        .set("mr", p.mr)
-        .set("nr", p.nr)
-        .set("threads", p.threads);
-    o
+/// What [`SelectionDb::merge`] did, per entry class.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Keys absent from the target DB: inserted.
+    pub added: usize,
+    /// Keys present with a slower same-kind entry: replaced by the
+    /// faster one.
+    pub replaced: usize,
+    /// Keys present with an equal-or-faster same-kind entry: left
+    /// alone.
+    pub kept: usize,
+    /// Entries whose legacy kind was rewritten into the unified schema
+    /// while folding (counted across added + replaced).
+    pub migrated: usize,
+    /// Keys where the incoming kind (post-migration) differs from the
+    /// stored one — e.g. a modeled `gemm` estimate colliding with a
+    /// measured `gemm_point`.  Their throughput figures are not
+    /// comparable (analytic estimates routinely dwarf measured
+    /// numbers), so the target DB's entry is kept and the conflict
+    /// counted instead of silently evicting a measured selection.
+    pub kind_conflicts: usize,
 }
 
-fn blocked_from_json(v: &Value) -> Result<BlockedParams> {
-    let field = |k: &str| -> Result<usize> {
-        v.get(k)
-            .and_then(|x| x.as_u64())
-            .map(|x| x as usize)
-            .ok_or_else(|| Error::Json(format!("blocked config missing {k}")))
+/// Render the unified-schema JSON entry for a point (what [`put`] stores
+/// and [`merge`] migrates legacy entries into).
+///
+/// [`put`]: SelectionDb::put
+/// [`merge`]: SelectionDb::merge
+fn render_entry<P: KernelSpace>(point: &P, gflops: f64) -> StoredSelection {
+    let mut entry = Value::object();
+    entry
+        .set("kind", P::KIND)
+        .set(P::POINT_FIELD, point.to_json())
+        .set("name", point.point_name())
+        .set("gflops", gflops);
+    point.report_columns(&mut entry);
+    StoredSelection { kind: P::KIND.to_string(), entry, gflops }
+}
+
+/// Validate a parsed entry at load time through the same decoders the
+/// lookups use, so anything that loads is guaranteed to decode later.
+///
+/// NOTE: this kind→decoder mapping exists in three places that must
+/// stay in sync when a space is added — here, in
+/// [`StoredSelection::legacy_view`], and in each space's
+/// `KIND`/`LEGACY_KINDS` — all driven by the same four `KernelSpace`
+/// impls, so drift shows up as a loud "bad kind" load error rather
+/// than silent misdecoding.
+fn validate_entry(key: &str, kind: &str, entry: &Value) -> Result<()> {
+    let point = |field: &str| -> Result<&Value> {
+        entry.get(field).ok_or_else(|| {
+            Error::Json(format!("{key}: missing {field}"))
+        })
     };
-    let p = BlockedParams {
-        bm: field("bm")?,
-        bn: field("bn")?,
-        bk: field("bk")?,
-        mr: field("mr")?,
-        nr: field("nr")?,
-        // Absent threads (a pre-threads DB) means "auto".
-        threads: v
-            .get("threads")
-            .and_then(|x| x.as_u64())
-            .unwrap_or(0) as usize,
+    let wrap = |r: Result<()>| -> Result<()> {
+        r.map_err(|e| Error::Json(format!("{key}: {e}")))
     };
-    if p.bm == 0 || p.bn == 0 || p.bk == 0 || p.mr == 0 || p.nr == 0 {
-        return Err(Error::Json(format!(
-            "blocked config has a zero block dimension: {p:?}"
-        )));
+    match kind {
+        k if k == <GemmConfig as KernelSpace>::KIND => wrap(
+            GemmConfig::from_json(point(
+                <GemmConfig as KernelSpace>::POINT_FIELD,
+            )?)
+            .map(drop),
+        ),
+        k if k == <ConvConfig as KernelSpace>::KIND => wrap(
+            ConvConfig::from_json(point(
+                <ConvConfig as KernelSpace>::POINT_FIELD,
+            )?)
+            .map(drop),
+        ),
+        k if k == GemmPoint::KIND => wrap(
+            GemmPoint::from_json(point(GemmPoint::POINT_FIELD)?).map(drop),
+        ),
+        k if k == ConvPoint::KIND => wrap(
+            ConvPoint::from_json(point(ConvPoint::POINT_FIELD)?).map(drop),
+        ),
+        "blocked" => {
+            wrap(GemmPoint::from_legacy_json("blocked", entry).map(drop))
+        }
+        "conv_native" => {
+            wrap(ConvPoint::from_legacy_json("conv_native", entry).map(drop))
+        }
+        other => Err(Error::Json(format!("{key}: bad kind {other:?}"))),
     }
-    Ok(p)
-}
-
-fn conv_to_json(c: &ConvConfig) -> Value {
-    let mut o = Value::object();
-    o.set("tile_h", c.tile_h)
-        .set("tile_w", c.tile_w)
-        .set("vec_c", c.vec_c)
-        .set("vec_k", c.vec_k)
-        .set("block_k", c.block_k)
-        .set("algorithm", c.algorithm.as_str())
-        .set("wino_m", c.wino_m);
-    o
-}
-
-fn conv_from_json(v: &Value) -> Result<ConvConfig> {
-    let field = |k: &str| -> Result<u32> {
-        v.get(k)
-            .and_then(|x| x.as_u64())
-            .map(|x| x as u32)
-            .ok_or_else(|| Error::Json(format!("conv config missing {k}")))
-    };
-    Ok(ConvConfig {
-        tile_h: field("tile_h")?,
-        tile_w: field("tile_w")?,
-        vec_c: field("vec_c")?,
-        vec_k: field("vec_k")?,
-        block_k: field("block_k")?,
-        algorithm: v
-            .get("algorithm")
-            .and_then(|x| x.as_str())
-            .ok_or_else(|| Error::Json("conv config missing algorithm".into()))?
-            .parse::<ConvAlgorithm>()?,
-        wino_m: field("wino_m")?,
-    })
 }
 
 /// The database: ordered map for stable serialization.
@@ -193,22 +324,26 @@ fn conv_from_json(v: &Value) -> Result<ConvConfig> {
 ///
 /// ```
 /// use portable_kernels::blas::BlockedParams;
+/// use portable_kernels::config::GemmPoint;
 /// use portable_kernels::tuner::{SelectionDb, SelectionKey};
 ///
 /// let mut db = SelectionDb::new();
 /// let key = SelectionKey::gemm("host", 96, 96, 96);
-/// let winner = BlockedParams { threads: 2, ..BlockedParams::default() };
-/// db.put_blocked(key.clone(), winner, 12.5);
+/// let winner = GemmPoint::scalar(
+///     BlockedParams { threads: 2, ..BlockedParams::default() },
+/// );
+/// db.put(key.clone(), winner, 12.5);
 ///
 /// // The same bucketed key answers lookups for nearby shapes.
-/// let (params, gflops) =
-///     db.get_blocked(&SelectionKey::gemm("host", 128, 128, 128)).unwrap();
-/// assert_eq!(params, winner);
+/// let (point, gflops) = db
+///     .get::<GemmPoint>(&SelectionKey::gemm("host", 128, 128, 128))
+///     .unwrap();
+/// assert_eq!(point, winner);
 /// assert_eq!(gflops, 12.5);
 /// ```
 #[derive(Debug, Default, Clone)]
 pub struct SelectionDb {
-    entries: BTreeMap<String, Selection>,
+    entries: BTreeMap<String, StoredSelection>,
 }
 
 impl SelectionDb {
@@ -217,62 +352,78 @@ impl SelectionDb {
         Self::default()
     }
 
-    /// Store a modeled GEMM selection for a problem class.
+    /// Store a winning point of any [`KernelSpace`] for a problem class,
+    /// in the unified schema (kind = the space's `KIND`).
+    pub fn put<P: KernelSpace>(
+        &mut self,
+        key: SelectionKey,
+        point: P,
+        gflops: f64,
+    ) {
+        self.entries
+            .insert(key.as_string(), render_entry(&point, gflops));
+    }
+
+    /// Look up the stored point of space `P` for a problem class:
+    /// entries of kind `P::KIND` decode directly, entries of one of
+    /// `P::LEGACY_KINDS` through the space's migration shim — gated on
+    /// the problem class where the space demands it (GEMM-space entries
+    /// answer conv lookups only under `conv_` keys) — and entries of
+    /// any other kind answer `None` (they belong to a different space).
+    pub fn get<P: KernelSpace>(
+        &self,
+        key: &SelectionKey,
+    ) -> Option<(P, f64)> {
+        let stored = self.entries.get(&key.as_string())?;
+        decode_stored::<P>(stored, &key.op).map(|p| (p, stored.gflops))
+    }
+
+    /// Legacy shim: store a modeled GEMM selection
+    /// (= [`SelectionDb::put::<GemmConfig>`](SelectionDb::put)).
     pub fn put_gemm(&mut self, key: SelectionKey, config: GemmConfig, gflops: f64) {
-        self.entries
-            .insert(key.as_string(), Selection::Gemm { config, gflops });
+        self.put(key, config, gflops);
     }
 
-    /// Store a modeled convolution selection for a problem class.
+    /// Legacy shim: store a modeled convolution selection
+    /// (= [`SelectionDb::put::<ConvConfig>`](SelectionDb::put)).
     pub fn put_conv(&mut self, key: SelectionKey, config: ConvConfig, gflops: f64) {
-        self.entries
-            .insert(key.as_string(), Selection::Conv { config, gflops });
+        self.put(key, config, gflops);
     }
 
-    /// Look up a modeled GEMM selection (config + GFLOP/s).
+    /// Legacy shim: look up a modeled GEMM selection.
     pub fn get_gemm(&self, key: &SelectionKey) -> Option<(GemmConfig, f64)> {
-        match self.entries.get(&key.as_string()) {
-            Some(Selection::Gemm { config, gflops }) => Some((*config, *gflops)),
-            _ => None,
-        }
+        self.get::<GemmConfig>(key)
     }
 
-    /// Look up a modeled convolution selection (config + GFLOP/s).
+    /// Legacy shim: look up a modeled convolution selection.
     pub fn get_conv(&self, key: &SelectionKey) -> Option<(ConvConfig, f64)> {
-        match self.entries.get(&key.as_string()) {
-            Some(Selection::Conv { config, gflops }) => Some((*config, *gflops)),
-            _ => None,
-        }
+        self.get::<ConvConfig>(key)
     }
 
-    /// Store a measured host selection ([`BlockedParams`] × threads) for
-    /// a problem class.  The key is the same `gemm`/`conv` key the
-    /// modeled selections use, with the platform as the device.
+    /// Legacy shim: store a measured host blocking selection.  Writes a
+    /// unified `gemm_point` entry with `isa: scalar` — exactly what the
+    /// old `blocked` entry meant.
     pub fn put_blocked(
         &mut self,
         key: SelectionKey,
         params: BlockedParams,
         gflops: f64,
     ) {
-        self.entries
-            .insert(key.as_string(), Selection::Blocked { params, gflops });
+        self.put(key, GemmPoint::scalar(params), gflops);
     }
 
-    /// Look up a measured host selection (params + GFLOP/s).
+    /// Legacy shim: look up a measured host blocking selection (the
+    /// blocking half of the stored [`GemmPoint`]; legacy `blocked`
+    /// entries migrate transparently).
     pub fn get_blocked(
         &self,
         key: &SelectionKey,
     ) -> Option<(BlockedParams, f64)> {
-        match self.entries.get(&key.as_string()) {
-            Some(Selection::Blocked { params, gflops }) => {
-                Some((*params, *gflops))
-            }
-            _ => None,
-        }
+        self.get::<GemmPoint>(key).map(|(p, g)| (p.params, g))
     }
 
-    /// Store a measured native conv selection (algorithm + knobs) for a
-    /// problem class.
+    /// Legacy shim: store a measured native conv selection.  Writes a
+    /// unified `conv_point` entry.
     pub fn put_conv_native(
         &mut self,
         key: SelectionKey,
@@ -280,24 +431,17 @@ impl SelectionDb {
         blocked: BlockedParams,
         gflops: f64,
     ) {
-        self.entries.insert(
-            key.as_string(),
-            Selection::ConvNative { config, blocked, gflops },
-        );
+        self.put(key, ConvPoint { config, blocked }, gflops);
     }
 
-    /// Look up a measured native conv selection
-    /// (config + blocked + GFLOP/s).
+    /// Legacy shim: look up a measured native conv selection (legacy
+    /// `conv_native` / pre-algorithm `blocked` entries migrate
+    /// transparently).
     pub fn get_conv_native(
         &self,
         key: &SelectionKey,
     ) -> Option<(ConvConfig, BlockedParams, f64)> {
-        match self.entries.get(&key.as_string()) {
-            Some(Selection::ConvNative { config, blocked, gflops }) => {
-                Some((*config, *blocked, *gflops))
-            }
-            _ => None,
-        }
+        self.get::<ConvPoint>(key).map(|(p, g)| (p.config, p.blocked, g))
     }
 
     /// Number of stored selections.
@@ -310,111 +454,110 @@ impl SelectionDb {
         self.entries.is_empty()
     }
 
-    /// Iterate all entries (for reports).
-    pub fn iter(&self) -> impl Iterator<Item = (&String, &Selection)> {
+    /// Iterate all entries in stored form (for reports; use
+    /// [`StoredSelection::legacy_view`] for the typed legacy view).
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &StoredSelection)> {
         self.entries.iter()
+    }
+
+    /// Fold `other` into this DB, migrating legacy kinds to the unified
+    /// schema and keeping the faster entry per key (`tune_device
+    /// --merge OLD.json`).  Modeled zoo entries (`gemm` / `conv`) and
+    /// already-unified entries copy through unchanged; `blocked` /
+    /// `conv_native` entries are rewritten as `gemm_point` /
+    /// `conv_point` while folding.  "Faster" is only meaningful within
+    /// one kind: when the incoming entry's kind (post-migration)
+    /// differs from the stored one — a modeled estimate vs a measured
+    /// point — the stored entry is kept and the collision reported in
+    /// [`MergeStats::kind_conflicts`], mirroring the conflicting-kind
+    /// rejection [`SelectionDb::load`] applies to duplicate keys.
+    pub fn merge(&mut self, other: &SelectionDb) -> MergeStats {
+        let mut stats = MergeStats::default();
+        for (key, stored) in &other.entries {
+            let (incoming, migrated) = normalize_for_merge(key, stored);
+            let existing =
+                self.entries.get(key).map(|e| (e.kind.clone(), e.gflops));
+            match existing {
+                Some((kind, _)) if kind != incoming.kind => {
+                    // Incomparable throughput figures (different
+                    // spaces/modes): never silently evict; keep the
+                    // target's entry and surface the collision.
+                    stats.kind_conflicts += 1;
+                }
+                Some((_, g)) if g >= incoming.gflops => {
+                    // The existing entry is equal-or-faster: keep it
+                    // (the migration did not land, so it is not
+                    // counted).
+                    stats.kept += 1;
+                }
+                Some(_) => {
+                    stats.replaced += 1;
+                    stats.migrated += migrated as usize;
+                    self.entries.insert(key.clone(), incoming);
+                }
+                None => {
+                    stats.added += 1;
+                    stats.migrated += migrated as usize;
+                    self.entries.insert(key.clone(), incoming);
+                }
+            }
+        }
+        stats
     }
 
     fn to_json(&self) -> Value {
         let mut root = Value::object();
-        for (k, sel) in &self.entries {
-            let mut o = Value::object();
-            match sel {
-                Selection::Gemm { config, gflops } => {
-                    o.set("kind", "gemm")
-                        .set("config", config.name())
-                        .set("gflops", *gflops);
-                }
-                Selection::Conv { config, gflops } => {
-                    o.set("kind", "conv")
-                        .set("config", conv_to_json(config))
-                        .set("gflops", *gflops);
-                }
-                Selection::Blocked { params, gflops } => {
-                    o.set("kind", "blocked")
-                        .set("config", blocked_to_json(params))
-                        .set("name", params.name())
-                        .set("gflops", *gflops);
-                }
-                Selection::ConvNative { config, blocked, gflops } => {
-                    // The top-level "algorithm" duplicates
-                    // config.algorithm so reports (and the CI check) can
-                    // read the chosen algorithm without digging.
-                    o.set("kind", "conv_native")
-                        .set("algorithm", config.algorithm.as_str())
-                        .set("config", conv_to_json(config))
-                        .set("blocked", blocked_to_json(blocked))
-                        .set(
-                            "name",
-                            format!("{}+{}", config.name(), blocked.name()),
-                        )
-                        .set("gflops", *gflops);
-                }
-            }
-            root.set(k, o);
+        for (k, stored) in &self.entries {
+            root.set(k, stored.entry.clone());
         }
         root
     }
 
-    fn from_json(v: &Value) -> Result<Self> {
+    fn from_json(v: &Value, dups: &[json::DuplicateKey]) -> Result<Self> {
         let obj = v
             .as_object()
             .ok_or_else(|| Error::Json("selection db must be an object".into()))?;
+        // Duplicate top-level keys whose occurrences disagree on the
+        // kind are ambiguous — two different spaces claim the same
+        // problem class — and must fail loudly instead of silently
+        // keeping whichever parsed last.
+        for d in dups.iter().filter(|d| d.depth == 0) {
+            let kept_kind = obj
+                .get(&d.key)
+                .and_then(|e| e.get("kind"))
+                .and_then(|k| k.as_str());
+            let overwritten_kind =
+                d.overwritten.get("kind").and_then(|k| k.as_str());
+            if kept_kind != overwritten_kind {
+                return Err(Error::Json(format!(
+                    "{}: duplicate key with conflicting kinds {:?} vs {:?}",
+                    d.key, overwritten_kind, kept_kind
+                )));
+            }
+        }
         let mut entries = BTreeMap::new();
         for (k, e) in obj {
             let gflops = e
                 .get("gflops")
                 .and_then(|x| x.as_f64())
                 .ok_or_else(|| Error::Json(format!("{k}: missing gflops")))?;
-            let sel = match e.get("kind").and_then(|x| x.as_str()) {
-                Some("gemm") => Selection::Gemm {
-                    config: GemmConfig::parse(
-                        e.get("config").and_then(|x| x.as_str()).ok_or_else(
-                            || Error::Json(format!("{k}: missing config")),
-                        )?,
-                    )?,
-                    gflops,
-                },
-                Some("conv") => Selection::Conv {
-                    config: conv_from_json(e.get("config").ok_or_else(
-                        || Error::Json(format!("{k}: missing config")),
-                    )?)?,
-                    gflops,
-                },
-                Some("blocked") => Selection::Blocked {
-                    params: blocked_from_json(e.get("config").ok_or_else(
-                        || Error::Json(format!("{k}: missing config")),
-                    )?)?,
-                    gflops,
-                },
-                Some("conv_native") => {
-                    let config = conv_from_json(e.get("config").ok_or_else(
-                        || Error::Json(format!("{k}: missing config")),
-                    )?)?;
-                    config.validate().map_err(|err| {
-                        Error::Json(format!("{k}: {err}"))
-                    })?;
-                    Selection::ConvNative {
-                        config,
-                        blocked: blocked_from_json(
-                            e.get("blocked").ok_or_else(|| {
-                                Error::Json(format!("{k}: missing blocked"))
-                            })?,
-                        )?,
-                        gflops,
-                    }
-                }
-                other => {
-                    return Err(Error::Json(format!("{k}: bad kind {other:?}")))
-                }
-            };
-            entries.insert(k.clone(), sel);
+            let kind = e
+                .get("kind")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| Error::Json(format!("{k}: bad kind None")))?
+                .to_string();
+            validate_entry(k, &kind, e)?;
+            entries.insert(
+                k.clone(),
+                StoredSelection { kind, entry: e.clone(), gflops },
+            );
         }
         Ok(Self { entries })
     }
 
     /// Persist to `path` as pretty-printed JSON (atomic: write to a
-    /// sibling `.tmp`, then rename).
+    /// sibling `.tmp`, then rename).  Entries are written back exactly
+    /// as stored, so a loaded legacy DB round-trips untouched.
     pub fn save(&self, path: &Path) -> Result<()> {
         let tmp = path.with_extension("tmp");
         std::fs::write(&tmp, self.to_json().to_json_pretty())?;
@@ -422,17 +565,49 @@ impl SelectionDb {
         Ok(())
     }
 
-    /// Load a database previously written by [`SelectionDb::save`].
+    /// Load a database previously written by [`SelectionDb::save`] (or
+    /// by any pre-unification version — legacy kinds validate through
+    /// their migration shims).  Rejects unknown kinds, invalid points,
+    /// and duplicate keys with conflicting kinds.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)?;
-        let v = json::parse(&text).map_err(|e| Error::Json(e.to_string()))?;
-        Self::from_json(&v)
+        let (v, dups) = json::parse_tracking_duplicates(&text)
+            .map_err(|e| Error::Json(e.to_string()))?;
+        Self::from_json(&v, &dups)
+    }
+}
+
+/// Rewrite one entry into the unified schema for [`SelectionDb::merge`]:
+/// legacy measured kinds become `gemm_point` / `conv_point` (keyed on
+/// the problem-class prefix for ambiguous `blocked` entries); everything
+/// else copies through.  Returns the entry plus whether it was migrated.
+fn normalize_for_merge(
+    key: &str,
+    stored: &StoredSelection,
+) -> (StoredSelection, bool) {
+    let op = key.split_once("::").map(|(_, op)| op).unwrap_or(key);
+    match stored.kind.as_str() {
+        "blocked" if op.starts_with("gemm_") => {
+            match GemmPoint::from_legacy_json("blocked", &stored.entry) {
+                Ok(p) => (render_entry(&p, stored.gflops), true),
+                Err(_) => (stored.clone(), false),
+            }
+        }
+        "blocked" | "conv_native" if op.starts_with("conv_") => {
+            match ConvPoint::from_legacy_json(&stored.kind, &stored.entry) {
+                Ok(p) => (render_entry(&p, stored.gflops), true),
+                Err(_) => (stored.clone(), false),
+            }
+        }
+        _ => (stored.clone(), false),
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::blas::Isa;
+    use crate::config::ConvAlgorithm;
     use crate::util::tmp::TempDir;
 
     #[test]
@@ -482,74 +657,154 @@ mod tests {
             .unwrap();
         assert_eq!(ccfg.tile_h, 4);
         assert_eq!(ccfg.algorithm, ConvAlgorithm::Tiled);
+        // The modeled kinds keep their historical serialized layout.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""kind": "gemm""#), "{text}");
+        assert!(text.contains(r#""config": "8x4_4x8_noloc""#), "{text}");
     }
 
     #[test]
-    fn roundtrip_blocked_via_disk() {
+    fn roundtrip_gemm_point_with_isa_via_disk() {
         let mut db = SelectionDb::new();
-        let gp = BlockedParams {
-            bm: 32, bn: 64, bk: 16, mr: 4, nr: 8, threads: 2,
+        let gp = GemmPoint {
+            params: BlockedParams {
+                bm: 32, bn: 64, bk: 16, mr: 4, nr: 8, threads: 2,
+            },
+            isa: Isa::Avx2,
         };
-        let cp = BlockedParams {
-            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 0,
-        };
-        db.put_blocked(SelectionKey::gemm("host", 96, 96, 96), gp, 7.5);
-        db.put_blocked(
-            SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2),
-            cp,
-            3.25,
-        );
+        let key = SelectionKey::gemm("host", 96, 96, 96);
+        db.put(key.clone(), gp, 7.5);
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("host.json");
         db.save(&path).unwrap();
+        // The entry carries the isa twice: inside the point and as the
+        // top-level report column.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains(r#""kind": "gemm_point""#), "{text}");
+        assert!(text.contains(r#""isa": "avx2""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
-        assert_eq!(loaded.len(), 2);
-        let (p, g) = loaded
-            .get_blocked(&SelectionKey::gemm("host", 96, 96, 96))
-            .unwrap();
-        assert_eq!(p, gp);
-        assert_eq!(g, 7.5);
-        let (p, _) = loaded
-            .get_blocked(&SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2))
-            .unwrap();
-        assert_eq!(p, cp);
-        // A blocked entry never answers gemm/conv lookups and vice versa.
-        assert!(loaded
-            .get_gemm(&SelectionKey::gemm("host", 96, 96, 96))
-            .is_none());
+        assert_eq!(loaded.get::<GemmPoint>(&key).unwrap(), (gp, 7.5));
+        // The legacy typed view still answers (blocking half only).
+        assert_eq!(loaded.get_blocked(&key).unwrap(), (gp.params, 7.5));
+        // A gemm_point entry never answers modeled or conv lookups.
+        assert!(loaded.get_gemm(&key).is_none());
+        assert!(loaded.get::<ConvPoint>(&key).is_none());
     }
 
     #[test]
-    fn roundtrip_conv_native_via_disk() {
+    fn gemm_space_entries_never_answer_conv_lookups_under_gemm_keys() {
+        // The blocked/gemm_point -> im2col migration is a *conv-key*
+        // rule: under a gemm problem class those entries are GEMM
+        // selections, and the conv space must not claim them.
+        let gkey = SelectionKey::gemm("host", 64, 64, 64);
         let mut db = SelectionDb::new();
-        let cfg = ConvConfig::winograd(2);
-        let blk = BlockedParams {
-            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
+        db.put(gkey.clone(), GemmPoint::default(), 2.0);
+        assert!(db.get::<GemmPoint>(&gkey).is_some());
+        assert!(db.get::<ConvPoint>(&gkey).is_none());
+        assert!(db.get_conv_native(&gkey).is_none());
+        // Same for a legacy blocked entry under a gemm key.
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("gemm_blocked.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}}}"#,
+        )
+        .unwrap();
+        let loaded = SelectionDb::load(&path).unwrap();
+        assert!(loaded.get::<GemmPoint>(&gkey).is_some());
+        assert!(loaded.get::<ConvPoint>(&gkey).is_none());
+    }
+
+    #[test]
+    fn legacy_put_blocked_writes_unified_scalar_points() {
+        let mut db = SelectionDb::new();
+        let params = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 0,
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
-        db.put_conv_native(key.clone(), cfg, blk, 5.5);
-        db.put_conv_native(
-            SelectionKey::conv("host", 3, 1, 32, 32, 16, 32, 2),
-            ConvConfig::tiled(2, 2, 1, 4),
-            BlockedParams::default(),
-            7.75,
-        );
+        db.put_blocked(key.clone(), params, 3.25);
+        let (p, g) = db.get::<GemmPoint>(&key).unwrap();
+        assert_eq!((p.params, p.isa, g), (params, Isa::Scalar, 3.25));
+        // Under a conv key, the conv space migrates it to im2col.
+        let (cp, _) = db.get::<ConvPoint>(&key).unwrap();
+        assert_eq!(cp.config.algorithm, ConvAlgorithm::Im2col);
+        assert_eq!(cp.blocked, params);
+    }
+
+    #[test]
+    fn roundtrip_conv_point_via_disk() {
+        let mut db = SelectionDb::new();
+        let cp = ConvPoint {
+            config: ConvConfig::winograd(2),
+            blocked: BlockedParams {
+                bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
+            },
+        };
+        let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
+        db.put_conv_native(key.clone(), cp.config, cp.blocked, 5.5);
         let dir = TempDir::new("seldb").unwrap();
-        let path = dir.path().join("convnative.json");
+        let path = dir.path().join("convpoint.json");
         db.save(&path).unwrap();
         // The serialized entry carries the algorithm twice: once inside
-        // the config, once as the top-level report column.
+        // the point, once as the top-level report column.
         let text = std::fs::read_to_string(&path).unwrap();
-        assert!(text.contains(r#""kind": "conv_native""#), "{text}");
+        assert!(text.contains(r#""kind": "conv_point""#), "{text}");
         assert!(text.contains(r#""algorithm": "winograd""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
         let (c, b, g) = loaded.get_conv_native(&key).unwrap();
-        assert_eq!(c, cfg);
-        assert_eq!(b, blk);
-        assert_eq!(g, 5.5);
-        // A conv_native entry never answers blocked/conv lookups.
+        assert_eq!((c, b, g), (cp.config, cp.blocked, 5.5));
+        // A conv_point entry answers GEMM-space lookups with None...
+        assert!(loaded.get::<GemmPoint>(&key).is_none());
         assert!(loaded.get_blocked(&key).is_none());
-        assert!(loaded.get_conv(&key).is_none());
+        // ...and decodes to the legacy ConvNative view.
+        let (_, stored) = loaded.iter().next().unwrap();
+        assert!(matches!(
+            stored.legacy_view(),
+            Some(Selection::ConvNative { .. })
+        ));
+    }
+
+    #[test]
+    fn legacy_blocked_and_conv_native_fixtures_still_load() {
+        // Byte-for-byte pre-unification DB JSON: both kinds must load,
+        // answer the same lookups they always did, and round-trip
+        // through save untouched.
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("legacy.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 2.5,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1},
+                "name": "bm8bn8bk8_2x2_t1"},
+               "host::conv_3x3s1_8x8x4k4b1": {"kind": "conv_native",
+                "gflops": 4.0, "algorithm": "winograd",
+                "config": {"tile_h": 1, "tile_w": 1, "vec_c": 1,
+                           "vec_k": 1, "block_k": 0,
+                           "algorithm": "winograd", "wino_m": 2},
+                "blocked": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                            "threads": 1}}}"#,
+        )
+        .unwrap();
+        let db = SelectionDb::load(&path).unwrap();
+        let gkey = SelectionKey::gemm("host", 64, 64, 64);
+        let (gp, g) = db.get::<GemmPoint>(&gkey).unwrap();
+        assert_eq!(g, 2.5);
+        assert_eq!(gp.isa, Isa::Scalar, "legacy entries migrate as scalar");
+        assert_eq!((gp.params.bm, gp.params.threads), (8, 1));
+        assert_eq!(db.get_blocked(&gkey).unwrap().0, gp.params);
+        let ckey = SelectionKey::conv("host", 3, 1, 8, 8, 4, 4, 1);
+        let (cp, _) = db.get::<ConvPoint>(&ckey).unwrap();
+        assert_eq!(cp.config.algorithm, ConvAlgorithm::Winograd);
+        // Round-trip: legacy entries are written back verbatim.
+        let out = dir.path().join("resaved.json");
+        db.save(&out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(text.contains(r#""kind": "blocked""#), "{text}");
+        assert!(text.contains(r#""kind": "conv_native""#), "{text}");
+        assert_eq!(SelectionDb::load(&out).unwrap().len(), 2);
     }
 
     #[test]
@@ -597,6 +852,20 @@ mod tests {
     }
 
     #[test]
+    fn gemm_point_bad_isa_rejected_on_load() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("bad_isa.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "gemm_point", "gflops": 1.0,
+                "point": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                          "threads": 1, "isa": "avx512vnni"}}}"#,
+        )
+        .unwrap();
+        assert!(SelectionDb::load(&path).is_err());
+    }
+
+    #[test]
     fn pre_threads_blocked_entry_defaults_to_auto() {
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("old.json");
@@ -614,6 +883,127 @@ mod tests {
     }
 
     #[test]
+    fn duplicate_key_with_conflicting_kinds_rejected_on_load() {
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("dup.json");
+        // The same problem class claimed by two different spaces: loud
+        // error, not silent last-write-wins.
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}},
+               "host::gemm_64x64x64": {"kind": "gemm", "gflops": 2.0,
+                "config": "4x4_8x8_loc"}}"#,
+        )
+        .unwrap();
+        let err = SelectionDb::load(&path).unwrap_err().to_string();
+        assert!(err.contains("conflicting kinds"), "got: {err}");
+        // Same key, same kind: tolerated (last write wins, as JSON
+        // resolves it).
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}},
+               "host::gemm_64x64x64": {"kind": "blocked", "gflops": 2.0,
+                "config": {"bm": 16, "bn": 16, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}}}"#,
+        )
+        .unwrap();
+        let db = SelectionDb::load(&path).unwrap();
+        let (p, g) = db
+            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .unwrap();
+        assert_eq!((p.bm, g), (16, 2.0));
+    }
+
+    #[test]
+    fn merge_folds_legacy_into_unified_keeping_faster() {
+        // Target: a fresh unified sweep.
+        let mut db = SelectionDb::new();
+        let gkey = SelectionKey::gemm("host", 64, 64, 64);
+        let ckey = SelectionKey::conv("host", 3, 1, 8, 8, 4, 4, 1);
+        db.put(gkey.clone(), GemmPoint::default(), 3.0);
+
+        // Source: a legacy DB — one slower gemm entry (kept out), one
+        // conv_native entry for a key the target lacks (folded in,
+        // migrated), one faster gemm entry for another key (folded in).
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("legacy.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 1.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                           "threads": 1}},
+               "host::gemm_256x256x256": {"kind": "blocked", "gflops": 9.0,
+                "config": {"bm": 64, "bn": 64, "bk": 64, "mr": 4, "nr": 8,
+                           "threads": 2}},
+               "host::conv_3x3s1_8x8x4k4b1": {"kind": "conv_native",
+                "gflops": 4.0, "algorithm": "tiled",
+                "config": {"tile_h": 2, "tile_w": 2, "vec_c": 1,
+                           "vec_k": 4, "block_k": 0,
+                           "algorithm": "tiled", "wino_m": 2},
+                "blocked": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2,
+                            "threads": 1}}}"#,
+        )
+        .unwrap();
+        let legacy = SelectionDb::load(&path).unwrap();
+        let stats = db.merge(&legacy);
+        assert_eq!(
+            (stats.added, stats.replaced, stats.kept, stats.migrated),
+            (2, 0, 1, 2)
+        );
+        assert_eq!(db.len(), 3);
+        // The kept entry is the faster unified one.
+        let (p, g) = db.get::<GemmPoint>(&gkey).unwrap();
+        assert_eq!((p, g), (GemmPoint::default(), 3.0));
+        // Folded entries are in the unified schema now.
+        let out = dir.path().join("merged.json");
+        db.save(&out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert!(!text.contains(r#""kind": "blocked""#), "{text}");
+        assert!(!text.contains(r#""kind": "conv_native""#), "{text}");
+        assert!(text.contains(r#""kind": "gemm_point""#), "{text}");
+        assert!(text.contains(r#""kind": "conv_point""#), "{text}");
+        let (cp, _) = db.get::<ConvPoint>(&ckey).unwrap();
+        assert_eq!(cp.config.algorithm, ConvAlgorithm::Tiled);
+        // A slower legacy entry never overwrites a faster unified one,
+        // and merging is idempotent.
+        let stats2 = db.clone().merge(&legacy);
+        assert_eq!(stats2.added, 0);
+    }
+
+    #[test]
+    fn merge_never_evicts_across_kinds() {
+        // A modeled estimate (analytic GFLOP/s, routinely far above
+        // measured numbers) colliding with a measured point is an
+        // incomparable pair: the target's entry survives and the
+        // collision is counted — never a silent eviction.
+        let key = SelectionKey::gemm("host", 64, 64, 64);
+        let mut measured = SelectionDb::new();
+        measured.put(key.clone(), GemmPoint::default(), 3.0);
+        let mut modeled = SelectionDb::new();
+        modeled.put_gemm(
+            key.clone(),
+            GemmConfig::parse("8x4_8x16_loc").unwrap(),
+            900.0,
+        );
+        let stats = measured.merge(&modeled);
+        assert_eq!(stats.kind_conflicts, 1);
+        assert_eq!((stats.added, stats.replaced, stats.kept), (0, 0, 0));
+        // The measured point still answers the engine's lookup.
+        let (p, g) = measured.get::<GemmPoint>(&key).unwrap();
+        assert_eq!((p, g), (GemmPoint::default(), 3.0));
+        // The other direction keeps the modeled entry too (no silent
+        // cross-kind replacement either way).
+        let mut modeled2 = modeled.clone();
+        let stats = modeled2.merge(&measured);
+        assert_eq!(stats.kind_conflicts, 1);
+        assert!(modeled2.get_gemm(&key).is_some());
+    }
+
+    #[test]
     fn missing_key_is_none() {
         let db = SelectionDb::new();
         assert!(db
@@ -621,6 +1011,9 @@ mod tests {
             .is_none());
         assert!(db
             .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .is_none());
+        assert!(db
+            .get::<GemmPoint>(&SelectionKey::gemm("host", 64, 64, 64))
             .is_none());
     }
 

@@ -1,69 +1,274 @@
-//! Measured per-host sweeps: the `BlockedParams` × `threads` grid for
-//! GEMM and the `ConvAlgorithm × ConvConfig × threads` grid for
-//! convolutions.
+//! Measured per-host sweeps over any [`KernelSpace`].
 //!
 //! This is the paper's headline workflow run end-to-end on hardware we
-//! actually own: enumerate kernel parameter combinations — including
-//! *which algorithm* runs, the §4.1 axis — *measure* each one through a
+//! actually own: enumerate kernel parameter combinations — the blocking,
+//! the `threads` knob, *which algorithm* runs (§4.1), and the
+//! runtime-detected micro-kernel **ISA** — *measure* each one through a
 //! [`Backend`] (no model in the loop), and persist the winner per
 //! (platform, problem class) into the [`SelectionDb`] that
 //! `NativeEngine` consults at plan time.  Measured — not modeled — sweeps
 //! are what make the portability claim credible (cf. Reguly,
 //! arXiv:2309.10075); CI runs the quick variant on every merge via
 //! `cargo run --release --example tune_device -- --quick`.
+//!
+//! One generic function, [`tune_space_sweep`], does all of it: the space
+//! point type supplies applicability (shape domain + host capability)
+//! and the DB codec, so a new tunable axis never needs a new sweep.  The
+//! historical entry points [`tune_blocked_sweep`] and
+//! [`tune_conv_native_sweep`] survive as thin wrappers over the generic
+//! (scalar-ISA GEMM grid, conv grid respectively).
 
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::blas::{native_conv_algorithm_dims, BlockedParams};
-use crate::config::{micro_kernel_shapes, ConvAlgorithm, ConvConfig};
+use crate::blas::{BlockedParams, Isa};
+use crate::config::{
+    micro_kernel_shapes, ConvAlgorithm, ConvConfig, ConvPoint, GemmPoint,
+    KernelSpace, Problem,
+};
 use crate::error::Result;
 use crate::runtime::{ArtifactMeta, Backend};
 
 use super::db::{SelectionDb, SelectionKey};
 use super::search::{ExhaustiveSearch, SearchStrategy};
 
-/// One timed grid point: artifact × parameter combination.
+/// One timed grid point of a generic space sweep.
 #[derive(Debug, Clone)]
-pub struct SweepMeasurement {
+pub struct SpaceMeasurement<P: KernelSpace> {
     /// Problem-class op key (the `SelectionKey::op` the winner persists
     /// under, e.g. `gemm_128x128x128`).
     pub problem: String,
     /// Artifact the measurement executed.
     pub artifact: String,
-    /// Parameter combination this grid point timed.
-    pub params: BlockedParams,
+    /// The space point this grid point timed.
+    pub point: P,
     /// Best (minimum) execution time over the repetitions.
     pub best: Duration,
     /// Measured throughput, GFLOP/s (from the artifact's manifest flops).
     pub gflops: f64,
 }
 
-/// A finished sweep: every measurement plus the per-problem winners that
-/// were persisted.
-#[derive(Debug, Default)]
-pub struct BlockedSweep {
+/// A finished generic sweep: every measurement plus the per-problem
+/// winners that were persisted.
+#[derive(Debug)]
+pub struct SpaceSweep<P: KernelSpace> {
     /// Every timed grid point, in measurement order.
-    pub rows: Vec<SweepMeasurement>,
+    pub rows: Vec<SpaceMeasurement<P>>,
     /// Winner per problem-class op key.
-    pub winners: BTreeMap<String, (BlockedParams, f64)>,
+    pub winners: BTreeMap<String, (P, f64)>,
 }
 
-impl BlockedSweep {
-    /// Best measured gflops for a problem under exactly `params`
-    /// (e.g. the default config, for tuned-vs-default reporting).
-    pub fn gflops_for(
-        &self,
-        problem: &str,
-        params: &BlockedParams,
-    ) -> Option<f64> {
+impl<P: KernelSpace> Default for SpaceSweep<P> {
+    fn default() -> Self {
+        Self { rows: Vec::new(), winners: BTreeMap::new() }
+    }
+}
+
+impl<P: KernelSpace> SpaceSweep<P> {
+    /// Best measured gflops for a problem under exactly `point`
+    /// (e.g. the default point, for tuned-vs-default reporting).
+    pub fn gflops_for(&self, problem: &str, point: &P) -> Option<f64> {
         self.rows
             .iter()
-            .filter(|r| r.problem == problem && r.params == *params)
+            .filter(|r| r.problem == problem && r.point == *point)
             .map(|r| r.gflops)
             .reduce(f64::max)
     }
+
+    /// The distinct values of some axis measured for a problem, in
+    /// measurement order — the proof an axis was actually swept, not
+    /// collapsed (`axis` projects the axis out of a point, e.g.
+    /// `|p| p.isa` or `|p| p.config.algorithm`).
+    pub fn axis_values_for<A: PartialEq>(
+        &self,
+        problem: &str,
+        axis: impl Fn(&P) -> A,
+    ) -> Vec<A> {
+        let mut values: Vec<A> = Vec::new();
+        for r in self.rows.iter().filter(|r| r.problem == problem) {
+            let v = axis(&r.point);
+            if !values.contains(&v) {
+                values.push(v);
+            }
+        }
+        values
+    }
 }
+
+/// The problem facts applicability depends on, derived from an
+/// artifact's manifest metadata (`None` for kinds no space tunes).
+pub fn problem_for(meta: &ArtifactMeta) -> Option<Problem> {
+    match meta.kind.as_str() {
+        "gemm" => Some(Problem::Gemm {
+            m: meta.m?,
+            n: meta.n?,
+            k: meta.k?,
+        }),
+        "conv" => {
+            let l = meta.layer.as_ref()?;
+            Some(Problem::Conv { window: l.window, stride: l.stride })
+        }
+        _ => None,
+    }
+}
+
+/// Derive the tuning-DB key for an artifact on `device` (the platform
+/// string the host sweep and `NativeEngine`'s plan-time lookup share —
+/// both must produce identical keys or tuned entries are never found).
+pub fn selection_key_for(
+    meta: &ArtifactMeta,
+    device: &str,
+) -> Option<SelectionKey> {
+    match meta.kind.as_str() {
+        "gemm" => {
+            Some(SelectionKey::gemm(device, meta.m?, meta.n?, meta.k?))
+        }
+        "conv" => {
+            let l = meta.layer.as_ref()?;
+            Some(SelectionKey::conv(
+                device,
+                l.window,
+                l.stride,
+                l.in_h,
+                l.in_w,
+                l.in_c,
+                l.out_c,
+                meta.batch.unwrap_or(1),
+            ))
+        }
+        _ => None,
+    }
+}
+
+/// Measure every artifact in `group` under every *applicable* grid point
+/// of space `P` and persist the per-problem winner into `db` under
+/// `P::KIND` — the one generic measure→persist loop behind every host
+/// sweep.
+///
+/// "Applicable" is the space's own rule ([`KernelSpace::applicable`]):
+/// shape-domain fallbacks (a Winograd point on a strided layer) and
+/// host capability (an ISA this CPU lacks) are *skipped*, never timed as
+/// fallback duplicates.  Artifacts with no applicable points (e.g. GEMM
+/// artifacts under the conv space) are skipped entirely.  `apply`
+/// installs a point on the engine before timing — for `NativeEngine`
+/// that is `|e, p| e.set_gemm_point(*p)` / `|e, p| e.set_conv_point(*p)`.
+/// The per-problem argmax runs through [`ExhaustiveSearch`]; `iters`
+/// repetitions, minimum taken, throughput from manifest flops.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::blas::BlockedParams;
+/// use portable_kernels::config::GemmPoint;
+/// use portable_kernels::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
+/// use portable_kernels::tuner::{
+///     tune_space_sweep, SelectionDb, SelectionKey,
+/// };
+/// use portable_kernels::util::tmp::TempDir;
+///
+/// let dir = TempDir::new("doc-sweep").unwrap();
+/// std::fs::write(
+///     dir.path().join("manifest.json"),
+///     r#"{"version": 1, "artifacts": [{
+///         "name": "g16", "kind": "gemm", "impl": "pallas",
+///         "file": "g16.hlo.txt", "flops": 8192,
+///         "m": 16, "n": 16, "k": 16,
+///         "inputs": [{"shape": [16, 16], "dtype": "float32"},
+///                    {"shape": [16, 16], "dtype": "float32"}],
+///         "groups": ["gemm"]}]}"#,
+/// )
+/// .unwrap();
+/// let store = ArtifactStore::open(dir.path()).unwrap();
+/// let mut engine = NativeEngine::new(store).unwrap();
+///
+/// let grid = [
+///     GemmPoint::default(),
+///     GemmPoint::scalar(BlockedParams {
+///         bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1,
+///     }),
+/// ];
+/// let mut db = SelectionDb::new();
+/// let sweep = tune_space_sweep(
+///     &mut engine,
+///     "gemm",
+///     &grid,
+///     1,
+///     HOST_DEVICE,
+///     &mut |e, p: &GemmPoint| e.set_gemm_point(*p),
+///     &mut db,
+/// )
+/// .unwrap();
+/// assert_eq!(sweep.rows.len(), grid.len());
+/// let key = SelectionKey::gemm(HOST_DEVICE, 16, 16, 16);
+/// assert!(db.get::<GemmPoint>(&key).is_some(), "winner persisted");
+/// ```
+pub fn tune_space_sweep<B: Backend, P: KernelSpace>(
+    engine: &mut B,
+    group: &str,
+    grid: &[P],
+    iters: usize,
+    device: &str,
+    apply: &mut dyn FnMut(&mut B, &P),
+    db: &mut SelectionDb,
+) -> Result<SpaceSweep<P>> {
+    let metas: Vec<ArtifactMeta> =
+        engine.store().in_group(group).cloned().collect();
+    let mut sweep = SpaceSweep::default();
+    for meta in metas {
+        let Some(key) = selection_key_for(&meta, device) else {
+            continue;
+        };
+        let Some(problem) = problem_for(&meta) else {
+            continue;
+        };
+        let applicable: Vec<&P> =
+            grid.iter().filter(|p| p.applicable(&problem)).collect();
+        if applicable.is_empty() {
+            continue;
+        }
+        let inputs = engine.synth_inputs(&meta.name, 17)?;
+        let mut run_err = None;
+        let mut score = |i: usize| -> Option<f64> {
+            apply(engine, applicable[i]);
+            match engine.run_timed(&meta.name, &inputs, iters) {
+                Ok((out, best)) => {
+                    let gflops = out.gflops(meta.flops);
+                    sweep.rows.push(SpaceMeasurement {
+                        problem: key.op.clone(),
+                        artifact: meta.name.clone(),
+                        point: *applicable[i],
+                        best,
+                        gflops,
+                    });
+                    Some(gflops)
+                }
+                Err(e) => {
+                    run_err = Some(e);
+                    None
+                }
+            }
+        };
+        let found = ExhaustiveSearch.search(applicable.len(), &mut score);
+        if let Some(e) = run_err {
+            return Err(e);
+        }
+        if let Some((idx, _evals, gflops)) = found {
+            // Several artifacts can share a problem class (same shape,
+            // different lowering); keep the best selection seen.
+            let better = db
+                .get::<P>(&key)
+                .map(|(_, g)| gflops > g)
+                .unwrap_or(true);
+            if better {
+                db.put(key.clone(), *applicable[idx], gflops);
+                sweep.winners.insert(key.op.clone(), (*applicable[idx], gflops));
+            }
+        }
+    }
+    Ok(sweep)
+}
+
+// ---- grids ----
 
 /// The base `BlockedParams` candidate sets — the same serial candidates
 /// the `blocked.rs` tests and the `rust_blas` bench exercise, widened
@@ -119,9 +324,9 @@ pub fn blocked_candidates(quick: bool) -> Vec<BlockedParams> {
     out
 }
 
-/// The full sweep grid: [`blocked_candidates`] × `threads`, deduplicated,
-/// with [`BlockedParams::default`] always present so every sweep measures
-/// the untuned baseline it is compared against.
+/// The blocking-only grid: [`blocked_candidates`] × `threads`,
+/// deduplicated, with [`BlockedParams::default`] always present so every
+/// sweep measures the untuned baseline it is compared against.
 pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
     let mut grid: Vec<BlockedParams> = Vec::new();
     for base in blocked_candidates(quick) {
@@ -139,24 +344,42 @@ pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
     grid
 }
 
-/// One native conv sweep candidate: an algorithm + its knobs.  The
-/// [`ConvConfig`] names the algorithm and tile/vector parameters; the
-/// [`BlockedParams`] carry the im2col GEMM blocking and the `threads`
-/// knob every algorithm honors.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub struct ConvCandidate {
-    /// Algorithm + tile/vector configuration.
-    pub config: ConvConfig,
-    /// im2col GEMM blocking + `threads`.
-    pub blocked: BlockedParams,
+/// The full measured GEMM grid: [`blocked_grid`] × the given ISAs
+/// (normally [`Isa::detect`]), deduplicated, with the default scalar
+/// point always present as the untuned baseline.  Non-scalar ISAs are
+/// crossed only with *monomorphized* registry micro-tiles — off-registry
+/// shapes run the generic scalar kernel whatever the ISA, so timing them
+/// per-ISA would measure the same kernel repeatedly.
+pub fn gemm_point_grid(
+    quick: bool,
+    threads: &[usize],
+    isas: &[Isa],
+) -> Vec<GemmPoint> {
+    let mut grid: Vec<GemmPoint> = Vec::new();
+    for params in blocked_grid(quick, threads) {
+        for &isa in isas {
+            if isa != Isa::Scalar && !params.is_monomorphized() {
+                continue;
+            }
+            let cand = GemmPoint { params, isa };
+            if !grid.contains(&cand) {
+                grid.push(cand);
+            }
+        }
+    }
+    let default = GemmPoint::default();
+    if !grid.contains(&default) {
+        grid.insert(0, default);
+    }
+    grid
 }
 
-impl ConvCandidate {
-    /// Compact name for reports (`wino2_v1x1+bm64bn64bk64_4x8_t2` style).
-    pub fn name(&self) -> String {
-        format!("{}+{}", self.config.name(), self.blocked.name())
-    }
-}
+/// One native conv sweep candidate: an algorithm + its knobs — since the
+/// space unification this *is* the conv kernel-space point
+/// ([`ConvPoint`]: the [`ConvConfig`] names the algorithm and
+/// tile/vector parameters, the [`BlockedParams`] carry the im2col GEMM
+/// blocking and the `threads` knob every algorithm honors).
+pub type ConvCandidate = ConvPoint;
 
 /// The base [`ConvConfig`] candidates the native conv sweep measures:
 /// im2col, a handful of tiled tile/vector shapes, and Winograd m=2 —
@@ -216,17 +439,58 @@ pub fn conv_native_grid(
             }
         }
     }
-    let default = ConvCandidate {
-        config: ConvConfig::im2col(),
-        blocked: BlockedParams::default(),
-    };
+    let default = ConvCandidate::default();
     if !grid.contains(&default) {
         grid.insert(0, default);
     }
     grid
 }
 
-/// One timed conv grid point.
+// ---- legacy typed wrappers over the generic sweep ----
+
+/// One timed grid point of the legacy blocking-only sweep view.
+#[derive(Debug, Clone)]
+pub struct SweepMeasurement {
+    /// Problem-class op key the winner persists under.
+    pub problem: String,
+    /// Artifact the measurement executed.
+    pub artifact: String,
+    /// Parameter combination this grid point timed.
+    pub params: BlockedParams,
+    /// Best (minimum) execution time over the repetitions.
+    pub best: Duration,
+    /// Measured throughput, GFLOP/s.
+    pub gflops: f64,
+}
+
+/// A finished legacy blocking sweep — the scalar-ISA view of a
+/// [`SpaceSweep<GemmPoint>`].
+#[derive(Debug, Default)]
+pub struct BlockedSweep {
+    /// Every timed grid point, in measurement order.
+    pub rows: Vec<SweepMeasurement>,
+    /// Winner per problem-class op key.
+    pub winners: BTreeMap<String, (BlockedParams, f64)>,
+}
+
+impl BlockedSweep {
+    /// Best measured gflops for a problem under exactly `params`
+    /// (e.g. the default config, for tuned-vs-default reporting).
+    pub fn gflops_for(
+        &self,
+        problem: &str,
+        params: &BlockedParams,
+    ) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| r.problem == problem && r.params == *params)
+            .map(|r| r.gflops)
+            .reduce(f64::max)
+    }
+}
+
+/// One timed conv grid point (legacy view; the candidate *is* the conv
+/// space point).
 #[derive(Debug, Clone)]
 pub struct ConvSweepMeasurement {
     /// Problem-class op key the winner persists under.
@@ -241,8 +505,8 @@ pub struct ConvSweepMeasurement {
     pub gflops: f64,
 }
 
-/// A finished native conv sweep: every measurement plus the per-problem
-/// winners that were persisted as [`super::Selection::ConvNative`].
+/// A finished native conv sweep (legacy view of a
+/// [`SpaceSweep<ConvPoint>`]).
 #[derive(Debug, Default)]
 pub struct ConvNativeSweep {
     /// Every timed grid point, in measurement order.
@@ -278,184 +542,53 @@ impl ConvNativeSweep {
     }
 }
 
-/// Measure every conv artifact in `group` under every applicable grid
-/// point and persist the per-problem winner into `db` as a
-/// [`super::Selection::ConvNative`] entry.
-///
-/// "Applicable" applies the native fallback rule per artifact shape:
-/// candidates whose algorithm would fall back (e.g. Winograd on a
-/// strided layer) are skipped rather than timed as im2col duplicates.
-/// `apply` installs a candidate on the engine before timing — for
-/// `NativeEngine` that is `|e, c| e.set_conv_params(c.config,
-/// c.blocked)`.
-pub fn tune_conv_native_sweep<B: Backend>(
-    engine: &mut B,
-    group: &str,
-    grid: &[ConvCandidate],
-    iters: usize,
-    device: &str,
-    apply: &mut dyn FnMut(&mut B, &ConvCandidate),
-    db: &mut SelectionDb,
-) -> Result<ConvNativeSweep> {
-    let metas: Vec<ArtifactMeta> = engine
-        .store()
-        .in_group(group)
-        .filter(|m| m.kind == "conv")
-        .cloned()
-        .collect();
-    let mut sweep = ConvNativeSweep::default();
-    for meta in metas {
-        let Some(key) = selection_key_for(&meta, device) else {
-            continue;
-        };
-        let Some(layer) = meta.layer.as_ref() else {
-            continue;
-        };
-        // Keep only candidates that run their own algorithm on this
-        // shape — the engine's plan-time fallback rule, verbatim, so
-        // the sweep can never time a fallback duplicate the plan would
-        // resolve differently.
-        let applicable: Vec<&ConvCandidate> = grid
-            .iter()
-            .filter(|c| {
-                native_conv_algorithm_dims(
-                    &c.config,
-                    layer.window,
-                    layer.stride,
-                ) == c.config.algorithm
-            })
-            .collect();
-        if applicable.is_empty() {
-            continue;
+impl From<SpaceSweep<GemmPoint>> for BlockedSweep {
+    fn from(s: SpaceSweep<GemmPoint>) -> Self {
+        BlockedSweep {
+            rows: s
+                .rows
+                .into_iter()
+                .map(|r| SweepMeasurement {
+                    problem: r.problem,
+                    artifact: r.artifact,
+                    params: r.point.params,
+                    best: r.best,
+                    gflops: r.gflops,
+                })
+                .collect(),
+            winners: s
+                .winners
+                .into_iter()
+                .map(|(op, (p, g))| (op, (p.params, g)))
+                .collect(),
         }
-        let inputs = engine.synth_inputs(&meta.name, 17)?;
-        let mut run_err = None;
-        let mut score = |i: usize| -> Option<f64> {
-            apply(engine, applicable[i]);
-            match engine.run_timed(&meta.name, &inputs, iters) {
-                Ok((out, best)) => {
-                    let gflops = out.gflops(meta.flops);
-                    sweep.rows.push(ConvSweepMeasurement {
-                        problem: key.op.clone(),
-                        artifact: meta.name.clone(),
-                        candidate: *applicable[i],
-                        best,
-                        gflops,
-                    });
-                    Some(gflops)
-                }
-                Err(e) => {
-                    run_err = Some(e);
-                    None
-                }
-            }
-        };
-        let found = ExhaustiveSearch.search(applicable.len(), &mut score);
-        if let Some(e) = run_err {
-            return Err(e);
-        }
-        if let Some((idx, _evals, gflops)) = found {
-            let better = db
-                .get_conv_native(&key)
-                .map(|(_, _, g)| gflops > g)
-                .unwrap_or(true);
-            if better {
-                let win = *applicable[idx];
-                db.put_conv_native(
-                    key.clone(),
-                    win.config,
-                    win.blocked,
-                    gflops,
-                );
-                sweep.winners.insert(key.op.clone(), (win, gflops));
-            }
-        }
-    }
-    Ok(sweep)
-}
-
-/// Derive the tuning-DB key for an artifact on `device` (the platform
-/// string the host sweep and `NativeEngine`'s plan-time lookup share —
-/// both must produce identical keys or tuned entries are never found).
-pub fn selection_key_for(
-    meta: &ArtifactMeta,
-    device: &str,
-) -> Option<SelectionKey> {
-    match meta.kind.as_str() {
-        "gemm" => {
-            Some(SelectionKey::gemm(device, meta.m?, meta.n?, meta.k?))
-        }
-        "conv" => {
-            let l = meta.layer.as_ref()?;
-            Some(SelectionKey::conv(
-                device,
-                l.window,
-                l.stride,
-                l.in_h,
-                l.in_w,
-                l.in_c,
-                l.out_c,
-                meta.batch.unwrap_or(1),
-            ))
-        }
-        _ => None,
     }
 }
 
-/// Measure every artifact in `group` under every grid point and persist
-/// the per-problem winner into `db`, keyed by (device, problem class).
-///
-/// Generic over [`Backend`]; `apply` installs a candidate on the engine
-/// before it is timed (for `NativeEngine` that is
-/// `|e, p| e.set_params(*p)`).  The per-problem argmax runs through
-/// [`ExhaustiveSearch`] — the measured counterpart of the modeled
-/// `tune_gemm`/`tune_conv`, and the same discipline as `tune_measured`:
-/// `iters` repetitions, minimum taken, throughput from manifest flops.
-///
-/// # Examples
-///
-/// ```
-/// use portable_kernels::blas::BlockedParams;
-/// use portable_kernels::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
-/// use portable_kernels::tuner::{
-///     tune_blocked_sweep, SelectionDb, SelectionKey,
-/// };
-/// use portable_kernels::util::tmp::TempDir;
-///
-/// let dir = TempDir::new("doc-sweep").unwrap();
-/// std::fs::write(
-///     dir.path().join("manifest.json"),
-///     r#"{"version": 1, "artifacts": [{
-///         "name": "g16", "kind": "gemm", "impl": "pallas",
-///         "file": "g16.hlo.txt", "flops": 8192,
-///         "m": 16, "n": 16, "k": 16,
-///         "inputs": [{"shape": [16, 16], "dtype": "float32"},
-///                    {"shape": [16, 16], "dtype": "float32"}],
-///         "groups": ["gemm"]}]}"#,
-/// )
-/// .unwrap();
-/// let store = ArtifactStore::open(dir.path()).unwrap();
-/// let mut engine = NativeEngine::new(store).unwrap();
-///
-/// let grid = [
-///     BlockedParams { threads: 1, ..BlockedParams::default() },
-///     BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 },
-/// ];
-/// let mut db = SelectionDb::new();
-/// let sweep = tune_blocked_sweep(
-///     &mut engine,
-///     "gemm",
-///     &grid,
-///     1,
-///     HOST_DEVICE,
-///     &mut |e, p| e.set_params(*p),
-///     &mut db,
-/// )
-/// .unwrap();
-/// assert_eq!(sweep.rows.len(), grid.len());
-/// let key = SelectionKey::gemm(HOST_DEVICE, 16, 16, 16);
-/// assert!(db.get_blocked(&key).is_some(), "winner persisted");
-/// ```
+impl From<SpaceSweep<ConvPoint>> for ConvNativeSweep {
+    fn from(s: SpaceSweep<ConvPoint>) -> Self {
+        ConvNativeSweep {
+            rows: s
+                .rows
+                .into_iter()
+                .map(|r| ConvSweepMeasurement {
+                    problem: r.problem,
+                    artifact: r.artifact,
+                    candidate: r.point,
+                    best: r.best,
+                    gflops: r.gflops,
+                })
+                .collect(),
+            winners: s.winners.into_iter().collect(),
+        }
+    }
+}
+
+/// Legacy shim (deprecated): the blocking-only measured sweep.  A thin
+/// wrapper over [`tune_space_sweep`] with a scalar-ISA [`GemmPoint`]
+/// grid — winners persist in the unified schema (kind `gemm_point`,
+/// `isa: scalar`), which the engine resolves exactly like the old
+/// `blocked` entries.
 pub fn tune_blocked_sweep<B: Backend>(
     engine: &mut B,
     group: &str,
@@ -465,53 +598,36 @@ pub fn tune_blocked_sweep<B: Backend>(
     apply: &mut dyn FnMut(&mut B, &BlockedParams),
     db: &mut SelectionDb,
 ) -> Result<BlockedSweep> {
-    let metas: Vec<ArtifactMeta> =
-        engine.store().in_group(group).cloned().collect();
-    let mut sweep = BlockedSweep::default();
-    for meta in metas {
-        let Some(key) = selection_key_for(&meta, device) else {
-            continue;
-        };
-        let inputs = engine.synth_inputs(&meta.name, 17)?;
-        let mut run_err = None;
-        let mut score = |i: usize| -> Option<f64> {
-            apply(engine, &grid[i]);
-            match engine.run_timed(&meta.name, &inputs, iters) {
-                Ok((out, best)) => {
-                    let gflops = out.gflops(meta.flops);
-                    sweep.rows.push(SweepMeasurement {
-                        problem: key.op.clone(),
-                        artifact: meta.name.clone(),
-                        params: grid[i],
-                        best,
-                        gflops,
-                    });
-                    Some(gflops)
-                }
-                Err(e) => {
-                    run_err = Some(e);
-                    None
-                }
-            }
-        };
-        let found = ExhaustiveSearch.search(grid.len(), &mut score);
-        if let Some(e) = run_err {
-            return Err(e);
-        }
-        if let Some((idx, _evals, gflops)) = found {
-            // Several artifacts can share a problem class (same shape,
-            // different lowering); keep the best selection seen.
-            let better = db
-                .get_blocked(&key)
-                .map(|(_, g)| gflops > g)
-                .unwrap_or(true);
-            if better {
-                db.put_blocked(key.clone(), grid[idx], gflops);
-                sweep.winners.insert(key.op.clone(), (grid[idx], gflops));
-            }
-        }
-    }
-    Ok(sweep)
+    let points: Vec<GemmPoint> =
+        grid.iter().map(|&params| GemmPoint::scalar(params)).collect();
+    let sweep = tune_space_sweep::<B, GemmPoint>(
+        engine,
+        group,
+        &points,
+        iters,
+        device,
+        &mut |e, p| apply(e, &p.params),
+        db,
+    )?;
+    Ok(sweep.into())
+}
+
+/// Legacy shim (deprecated): the native conv sweep.  A thin wrapper
+/// over [`tune_space_sweep`] — the candidate type *is* [`ConvPoint`]
+/// now, winners persist as kind `conv_point`.
+pub fn tune_conv_native_sweep<B: Backend>(
+    engine: &mut B,
+    group: &str,
+    grid: &[ConvCandidate],
+    iters: usize,
+    device: &str,
+    apply: &mut dyn FnMut(&mut B, &ConvCandidate),
+    db: &mut SelectionDb,
+) -> Result<ConvNativeSweep> {
+    let sweep = tune_space_sweep::<B, ConvPoint>(
+        engine, group, grid, iters, device, apply, db,
+    )?;
+    Ok(sweep.into())
 }
 
 #[cfg(test)]
@@ -559,6 +675,83 @@ mod tests {
             // The threads axis is actually crossed in.
             assert!(grid.iter().any(|p| p.threads == 2));
         }
+    }
+
+    #[test]
+    fn gemm_point_grid_crosses_detected_isas() {
+        let isas = Isa::detect();
+        for quick in [true, false] {
+            let grid = gemm_point_grid(quick, &[1, 2], &isas);
+            assert!(grid.contains(&GemmPoint::default()), "quick={quick}");
+            // Dedup discipline.
+            for (i, a) in grid.iter().enumerate() {
+                assert!(!grid[i + 1..].contains(a), "{a:?} duplicated");
+            }
+            // Every detected ISA appears, crossed with the threads axis.
+            for &isa in &isas {
+                assert!(
+                    grid.iter().any(|p| p.isa == isa),
+                    "quick={quick}: {isa} missing from the grid"
+                );
+            }
+            // Non-scalar ISAs only ride monomorphized micro-tiles (the
+            // SIMD variants exist per registry shape only).
+            for p in &grid {
+                assert!(
+                    p.isa == Isa::Scalar || p.params.is_monomorphized(),
+                    "{p:?} pairs a SIMD ISA with an off-registry tile"
+                );
+            }
+            // Every point is applicable on this host by construction.
+            let problem = Problem::Gemm { m: 96, n: 96, k: 96 };
+            assert!(grid.iter().all(|p| p.applicable(&problem)));
+        }
+    }
+
+    #[test]
+    fn generic_gemm_sweep_measures_isa_axis_and_persists_points() {
+        let (_dir, mut engine) = sweep_fixture();
+        let isas = Isa::detect();
+        let grid = gemm_point_grid(true, &[1], &isas);
+        let mut db = SelectionDb::new();
+        let sweep = tune_space_sweep(
+            &mut engine,
+            "gemm",
+            &grid,
+            1,
+            HOST_DEVICE,
+            &mut |e, p: &GemmPoint| e.set_gemm_point(*p),
+            &mut db,
+        )
+        .unwrap();
+        // Every grid point is applicable on the host that built the
+        // grid, so the whole grid was measured.
+        assert_eq!(sweep.rows.len(), grid.len());
+        let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+        // Every detected ISA was actually measured.
+        let swept = sweep.axis_values_for(&key.op, |p| p.isa);
+        for &isa in &isas {
+            assert!(swept.contains(&isa), "{isa} never measured");
+        }
+        // The persisted winner is the argmax, stored as a unified point.
+        let (win, win_g) = db.get::<GemmPoint>(&key).unwrap();
+        assert_eq!(sweep.winners[&key.op], (win, win_g));
+        let max = sweep
+            .rows
+            .iter()
+            .filter(|r| r.problem == key.op)
+            .map(|r| r.gflops)
+            .fold(f64::MIN, f64::max);
+        assert!(win_g >= max - 1e-12);
+        // Tuned >= the best *scalar* point: the scalar points are in the
+        // grid, so this is an argmax invariant, not a timing assertion.
+        let scalar_best = sweep
+            .rows
+            .iter()
+            .filter(|r| r.problem == key.op && r.point.isa == Isa::Scalar)
+            .map(|r| r.gflops)
+            .fold(f64::MIN, f64::max);
+        assert!(win_g >= scalar_best);
     }
 
     #[test]
@@ -615,6 +808,15 @@ mod tests {
             .gflops_for(&key.op, &BlockedParams::default())
             .unwrap();
         assert!(tuned >= dflt);
+        // The legacy wrapper persists unified scalar points — including
+        // under the conv key, where the conv space migrates them to
+        // im2col.
+        let ckey = SelectionKey::conv(HOST_DEVICE, 3, 1, 16, 16, 8, 16, 2);
+        let (gp, _) = db.get::<GemmPoint>(&ckey).unwrap();
+        assert_eq!(gp.isa, Isa::Scalar);
+        let (cp, _) = db.get::<ConvPoint>(&ckey).unwrap();
+        assert_eq!(cp.config.algorithm, ConvAlgorithm::Im2col);
+        assert_eq!(cp.blocked, gp.params);
     }
 
     #[test]
@@ -635,10 +837,7 @@ mod tests {
             for (i, c) in grid.iter().enumerate() {
                 assert!(!grid[i + 1..].contains(c), "{} duplicated", c.name());
             }
-            assert!(grid.contains(&ConvCandidate {
-                config: ConvConfig::im2col(),
-                blocked: BlockedParams::default(),
-            }));
+            assert!(grid.contains(&ConvCandidate::default()));
             // The threads axis is crossed into every algorithm family.
             for alg in [ConvAlgorithm::Tiled, ConvAlgorithm::Winograd] {
                 assert!(grid
@@ -650,7 +849,7 @@ mod tests {
     }
 
     #[test]
-    fn conv_sweep_measures_algorithms_and_persists_conv_native() {
+    fn conv_sweep_measures_algorithms_and_persists_conv_points() {
         let (_dir, mut engine) = sweep_fixture();
         let grid = conv_native_grid(true, &[1, 2]);
         let mut db = SelectionDb::new();
@@ -682,11 +881,7 @@ mod tests {
         let (win, win_g) = &sweep.winners[&key.op];
         assert_eq!((wc, wb), (win.config, win.blocked));
         assert_eq!(wg, *win_g);
-        let default = ConvCandidate {
-            config: ConvConfig::im2col(),
-            blocked: BlockedParams::default(),
-        };
-        let dflt = sweep.gflops_for(&key.op, &default).unwrap();
+        let dflt = sweep.gflops_for(&key.op, &ConvCandidate::default()).unwrap();
         assert!(wg >= dflt);
         // GEMM artifacts are untouched by the conv sweep.
         assert!(db

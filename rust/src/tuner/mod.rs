@@ -10,18 +10,21 @@
 //!   wall time);
 //! * [`tune_measured`] — run competing artifacts through a backend and
 //!   keep the fastest per problem;
-//! * [`tune_blocked_sweep`] — the measured per-host GEMM sweep:
-//!   enumerate the `BlockedParams` × `threads` grid (micro-tiles drawn
-//!   from the monomorphized registry), time every point through a
-//!   [`crate::runtime::Backend`], and persist the winners — the
-//!   parametrize → measure → select loop CI runs on every merge
-//!   (`docs/TUNING.md` documents the workflow end to end);
-//! * [`tune_conv_native_sweep`] — the same loop over the convolution
-//!   *algorithm* axis: `ConvAlgorithm × ConvConfig × threads`
-//!   ([`conv_native_grid`]), persisting per-layer algorithm winners as
-//!   [`Selection::ConvNative`] entries;
+//! * [`tune_space_sweep`] — **the** measured per-host sweep, generic
+//!   over any [`crate::config::KernelSpace`]: enumerate a space's grid
+//!   (for GEMM, [`gemm_point_grid`]: `BlockedParams` × `threads` ×
+//!   runtime-detected ISA; for conv, [`conv_native_grid`]:
+//!   `ConvAlgorithm × ConvConfig × threads`), time every *applicable*
+//!   point through a [`crate::runtime::Backend`], and persist the
+//!   winners — the parametrize → measure → select loop CI runs on every
+//!   merge (`docs/TUNING.md` documents the workflow end to end).  The
+//!   historical [`tune_blocked_sweep`] / [`tune_conv_native_sweep`]
+//!   entry points survive as thin wrappers;
 //! * [`SelectionDb`] — a persisted selection database mapping (device,
-//!   problem class) to the winning configuration, the artifact the
+//!   problem class) to the winning point of any space
+//!   ([`SelectionDb::put`] / [`SelectionDb::get`]; legacy `blocked` /
+//!   `conv_native` entries migrate on lookup, [`SelectionDb::merge`]
+//!   folds whole legacy DBs into the unified schema), the artifact the
 //!   coordinator and `NativeEngine` consult at request/plan time — and
 //!   which an engine pool shares read-only across all of its actors.
 
@@ -30,11 +33,12 @@ mod host;
 mod measured;
 mod search;
 
-pub use db::{Selection, SelectionDb, SelectionKey};
+pub use db::{MergeStats, Selection, SelectionDb, SelectionKey, StoredSelection};
 pub use host::{
     blocked_candidates, blocked_grid, conv_candidates, conv_native_grid,
-    selection_key_for, tune_blocked_sweep, tune_conv_native_sweep,
-    BlockedSweep, ConvCandidate, ConvNativeSweep, ConvSweepMeasurement,
+    gemm_point_grid, problem_for, selection_key_for, tune_blocked_sweep,
+    tune_conv_native_sweep, tune_space_sweep, BlockedSweep, ConvCandidate,
+    ConvNativeSweep, ConvSweepMeasurement, SpaceMeasurement, SpaceSweep,
     SweepMeasurement,
 };
 pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};

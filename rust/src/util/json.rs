@@ -287,21 +287,55 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// A duplicate object key found while parsing.  JSON objects
+/// last-write-wins on duplicates; callers that treat a duplicate as
+/// corruption (e.g. the tuner's selection DB, where two entries under
+/// one key with different kinds are ambiguous) can inspect these and
+/// reject.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DuplicateKey {
+    /// The repeated key.
+    pub key: String,
+    /// The value the later occurrence overwrote.
+    pub overwritten: Value,
+    /// Object nesting depth of the owning object (`0` = the document's
+    /// top-level object).
+    pub depth: usize,
+}
+
 /// Parse a complete JSON document (trailing whitespace allowed).
 pub fn parse(input: &str) -> Result<Value, ParseError> {
-    let mut p = Parser { bytes: input.as_bytes(), pos: 0 };
+    parse_tracking_duplicates(input).map(|(v, _)| v)
+}
+
+/// Like [`parse`], additionally reporting every duplicate object key the
+/// document contained (the kept value is the last occurrence, exactly as
+/// [`parse`] resolves it).
+pub fn parse_tracking_duplicates(
+    input: &str,
+) -> Result<(Value, Vec<DuplicateKey>), ParseError> {
+    let mut p = Parser {
+        bytes: input.as_bytes(),
+        pos: 0,
+        depth: 0,
+        dups: Vec::new(),
+    };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
     if p.pos != p.bytes.len() {
         return Err(p.err("trailing characters"));
     }
-    Ok(v)
+    Ok((v, p.dups))
 }
 
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current object nesting depth (for duplicate-key reporting).
+    depth: usize,
+    /// Duplicate object keys seen so far.
+    dups: Vec<DuplicateKey>,
 }
 
 impl<'a> Parser<'a> {
@@ -359,10 +393,13 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Value, ParseError> {
         self.expect(b'{')?;
+        let obj_depth = self.depth;
+        self.depth += 1;
         let mut map = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Object(map));
         }
         loop {
@@ -372,11 +409,25 @@ impl<'a> Parser<'a> {
             self.expect(b':')?;
             self.skip_ws();
             let val = self.value()?;
-            map.insert(key, val);
+            if map.contains_key(&key) {
+                let overwritten = map
+                    .insert(key.clone(), val)
+                    .expect("contains_key said present");
+                self.dups.push(DuplicateKey {
+                    key,
+                    overwritten,
+                    depth: obj_depth,
+                });
+            } else {
+                map.insert(key, val);
+            }
             self.skip_ws();
             match self.bump() {
                 Some(b',') => continue,
-                Some(b'}') => return Ok(Value::Object(map)),
+                Some(b'}') => {
+                    self.depth -= 1;
+                    return Ok(Value::Object(map));
+                }
                 _ => return Err(self.err("expected ',' or '}'")),
             }
         }
@@ -622,6 +673,29 @@ mod tests {
             2
         );
         assert!(arts[0].get("scaled_from").is_none());
+    }
+
+    #[test]
+    fn duplicate_keys_are_tracked_with_depth() {
+        // Last write wins (the parse result), but the overwritten value
+        // and its owning object's depth are reported.
+        let (v, dups) = parse_tracking_duplicates(
+            r#"{"a": 1, "a": 2, "nested": {"b": 3, "b": 4}}"#,
+        )
+        .unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(2));
+        assert_eq!(v.get("nested").unwrap().get("b").unwrap().as_i64(), Some(4));
+        assert_eq!(dups.len(), 2);
+        assert_eq!(dups[0], DuplicateKey {
+            key: "a".into(),
+            overwritten: Value::Int(1),
+            depth: 0,
+        });
+        assert_eq!(dups[1].key, "b");
+        assert_eq!(dups[1].depth, 1);
+        // Clean documents report none.
+        let (_, dups) = parse_tracking_duplicates(r#"{"a": 1, "b": 1}"#).unwrap();
+        assert!(dups.is_empty());
     }
 
     #[test]

@@ -2,8 +2,11 @@
 //! environment has no proptest crate; `util::rng::XorShift` provides the
 //! deterministic generators, and every case prints its inputs on failure).
 
-use portable_kernels::blas::{gemm_blocked, gemm_naive, max_abs_diff, BlockedParams};
-use portable_kernels::config::{ConvConfig, GemmConfig};
+use portable_kernels::blas::{
+    gemm_blocked, gemm_blocked_isa, gemm_naive, max_abs_diff, BlockedParams,
+    Isa, MICRO_KERNEL_SHAPES,
+};
+use portable_kernels::config::{ConvConfig, ConvPoint, GemmConfig, GemmPoint};
 use portable_kernels::coordinator::{BatchPolicy, Batcher};
 use portable_kernels::device::{all_devices, DeviceSpec};
 use portable_kernels::nn::ConvLayer;
@@ -417,6 +420,241 @@ fn prop_conv_algorithms_agree_on_winograd_domain() {
                 ) == reference,
                 "case {case}: im2col threads={threads} diverged on {s:?}"
             );
+        }
+    }
+}
+
+/// Generic `Selection<P: KernelSpace>` storage round-trips arbitrary
+/// GEMM points (every ISA value, including ones this host cannot run —
+/// storage is host-independent; only *plans* degrade) and conv points
+/// through JSON save/load, bit-exactly.
+#[test]
+fn prop_selection_db_points_roundtrip_via_disk() {
+    use portable_kernels::config::ConvAlgorithm;
+    use portable_kernels::tuner::{SelectionDb, SelectionKey};
+    use portable_kernels::util::tmp::TempDir;
+
+    let mut rng = XorShift::new(4242);
+    let dir = TempDir::new("prop-seldb").unwrap();
+    for case in 0..40 {
+        let mut db = SelectionDb::new();
+        // A random GEMM point: registry micro-tile, any ISA.
+        let &(mr, nr) =
+            rng.choose(MICRO_KERNEL_SHAPES);
+        let gp = GemmPoint {
+            params: BlockedParams {
+                bm: rng.range(1, 128) as usize,
+                bn: rng.range(1, 128) as usize,
+                bk: rng.range(1, 128) as usize,
+                mr,
+                nr,
+                threads: rng.range(0, 8) as usize,
+            },
+            isa: *rng.choose(&Isa::all()),
+        };
+        let gkey = SelectionKey::gemm(
+            "prop-host",
+            rng.range(1, 2048),
+            rng.range(1, 2048),
+            rng.range(1, 2048),
+        );
+        let g_gf = rng.range(1, 1_000_000) as f64 / 100.0;
+        db.put(gkey.clone(), gp, g_gf);
+
+        // A random conv point: any algorithm family, legal wino_m.
+        let algorithm = *rng.choose(&[
+            ConvAlgorithm::Im2col,
+            ConvAlgorithm::Tiled,
+            ConvAlgorithm::Winograd,
+            ConvAlgorithm::Naive,
+        ]);
+        let cp = ConvPoint {
+            config: ConvConfig {
+                tile_h: rng.range(1, 8) as u32,
+                tile_w: rng.range(1, 8) as u32,
+                vec_c: *rng.choose(&[1u32, 2, 4]),
+                vec_k: *rng.choose(&[1u32, 2, 4, 16]),
+                block_k: rng.range(0, 4) as u32,
+                algorithm,
+                wino_m: *rng.choose(&[2u32, 4]),
+            },
+            blocked: BlockedParams {
+                bm: rng.range(1, 64) as usize,
+                bn: rng.range(1, 64) as usize,
+                bk: rng.range(1, 64) as usize,
+                mr: rng.range(1, 16) as usize,
+                nr: rng.range(1, 16) as usize,
+                threads: rng.range(0, 4) as usize,
+            },
+        };
+        let ckey = SelectionKey::conv(
+            "prop-host",
+            *rng.choose(&[1u32, 3, 5]),
+            *rng.choose(&[1u32, 2]),
+            rng.range(1, 64) as u32,
+            rng.range(1, 64) as u32,
+            rng.range(1, 64) as u32,
+            rng.range(1, 64) as u32,
+            rng.range(1, 8) as u32,
+        );
+        let c_gf = rng.range(1, 1_000_000) as f64 / 100.0;
+        db.put(ckey.clone(), cp, c_gf);
+
+        let path = dir.path().join(format!("case{case}.json"));
+        db.save(&path).unwrap();
+        let loaded = SelectionDb::load(&path)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        assert_eq!(
+            loaded.get::<GemmPoint>(&gkey),
+            Some((gp, g_gf)),
+            "case {case}: gemm point diverged"
+        );
+        assert_eq!(
+            loaded.get::<ConvPoint>(&ckey),
+            Some((cp, c_gf)),
+            "case {case}: conv point diverged"
+        );
+        // Cross-space lookups stay clean: measured points never answer
+        // modeled-space lookups.
+        assert!(loaded.get::<GemmConfig>(&gkey).is_none(), "case {case}");
+        assert!(loaded.get::<ConvConfig>(&ckey).is_none(), "case {case}");
+        assert_eq!(loaded.len(), 2, "case {case}");
+    }
+}
+
+/// Legacy `blocked` / `conv_native` DB fixtures load through the
+/// migration shims and plan *identically* to what those entries always
+/// meant: the stored blocking (scalar micro-kernel) for GEMM, the
+/// stored algorithm + blocking for conv.
+#[test]
+fn prop_legacy_db_fixtures_plan_identically() {
+    use portable_kernels::runtime::{ArtifactStore, NativeEngine};
+    use portable_kernels::tuner::SelectionDb;
+    use portable_kernels::util::tmp::TempDir;
+
+    let mut rng = XorShift::new(9090);
+    let dir = TempDir::new("prop-legacy").unwrap();
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+          {"name": "g24", "kind": "gemm", "impl": "pallas",
+           "file": "g24.hlo.txt", "flops": 27648,
+           "m": 24, "n": 24, "k": 24, "groups": ["gemm"],
+           "inputs": [{"shape": [24, 24], "dtype": "float32"},
+                      {"shape": [24, 24], "dtype": "float32"}]},
+          {"name": "c8", "kind": "conv", "impl": "pallas",
+           "file": "c8.hlo.txt", "flops": 36864, "batch": 1,
+           "groups": ["conv"],
+           "layer": {"name": "c8", "window": 3, "stride": 1,
+                     "in_h": 8, "in_w": 8, "in_c": 2, "out_c": 4,
+                     "out_h": 8, "out_w": 8, "padding": "SAME",
+                     "flops": 36864},
+           "inputs": [{"shape": [1, 8, 8, 2], "dtype": "float32"},
+                      {"shape": [3, 3, 2, 4], "dtype": "float32"}]}
+        ]}"#,
+    )
+    .unwrap();
+    let store = ArtifactStore::open(dir.path()).unwrap();
+
+    for case in 0..20 {
+        // Random legal legacy entries, written as raw pre-unification
+        // JSON (threads sometimes absent — the pre-threads schema).
+        let (bm, bn, bk) = (
+            rng.range(1, 64),
+            rng.range(1, 64),
+            rng.range(1, 64),
+        );
+        let (mr, nr) = (rng.range(1, 16), rng.range(1, 16));
+        let threads = rng.range(0, 4);
+        let with_threads = rng.below(2) == 0;
+        let threads_field = if with_threads {
+            format!(r#", "threads": {threads}"#)
+        } else {
+            String::new()
+        };
+        let algorithm =
+            *rng.choose(&["im2col", "tiled", "winograd"]);
+        let legacy = format!(
+            r#"{{"host::gemm_64x64x64": {{"kind": "blocked",
+                "gflops": 2.0,
+                "config": {{"bm": {bm}, "bn": {bn}, "bk": {bk},
+                            "mr": {mr}, "nr": {nr}{threads_field}}}}},
+                "host::conv_3x3s1_8x8x2k4b1": {{"kind": "conv_native",
+                "gflops": 3.0, "algorithm": "{algorithm}",
+                "config": {{"tile_h": 2, "tile_w": 2, "vec_c": 1,
+                            "vec_k": 4, "block_k": 0,
+                            "algorithm": "{algorithm}", "wino_m": 2}},
+                "blocked": {{"bm": {bm}, "bn": {bn}, "bk": {bk},
+                             "mr": {mr}, "nr": {nr}{threads_field}}}}}}}"#,
+        );
+        let path = dir.path().join(format!("legacy{case}.json"));
+        std::fs::write(&path, &legacy).unwrap();
+        let db = SelectionDb::load(&path)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{legacy}"));
+        let mut e = NativeEngine::with_tuning(store.clone(), db);
+
+        let want = BlockedParams {
+            bm: bm as usize,
+            bn: bn as usize,
+            bk: bk as usize,
+            mr: mr as usize,
+            nr: nr as usize,
+            threads: if with_threads { threads as usize } else { 0 },
+        };
+        // GEMM: those params, scalar micro-kernel — exactly what the
+        // blocked entry always meant.
+        assert_eq!(e.planned_params("g24").unwrap(), want, "case {case}");
+        let planned = e.planned_gemm("g24").unwrap().unwrap();
+        assert_eq!(planned.isa, Isa::Scalar, "case {case}");
+        // Conv: the stored algorithm + blocking (3x3/s1 is on every
+        // algorithm's domain, so no fallback applies).
+        let conv = e.planned_conv("c8").unwrap().unwrap();
+        assert_eq!(conv.algorithm.as_str(), algorithm, "case {case}");
+        assert_eq!(e.planned_params("c8").unwrap(), want, "case {case}");
+    }
+}
+
+/// Every ISA-dispatched micro-kernel agrees with the scalar kernel on
+/// ragged shapes: SSE2/AVX2 bitwise (0 ULP — same operation order,
+/// wider lanes), FMA within the fused-rounding accumulation tolerance
+/// (1e-6 per k-step).
+#[test]
+fn prop_isa_micro_kernels_agree_with_scalar() {
+    let mut rng = XorShift::new(6464);
+    let isas = Isa::detect();
+    for case in 0..16 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        // Ragged everything: partial strips, short k-panels, plus
+        // degenerate single-row/col shapes on some cases.
+        let m = if case % 5 == 0 { 1 } else { rng.range(2, 80) as usize };
+        let n = if case % 7 == 0 { 1 } else { rng.range(2, 80) as usize };
+        let k = rng.range(1, 64) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 48) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: *rng.choose(&[1usize, 2]),
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let scalar = gemm_blocked(&a, &b, m, n, k, &params);
+        for &isa in &isas {
+            let got = gemm_blocked_isa(&a, &b, m, n, k, &params, isa);
+            if isa == Isa::Fma {
+                let tol = 1e-6 * k as f32;
+                assert!(
+                    max_abs_diff(&scalar, &got) <= tol,
+                    "case {case}: fma beyond {tol} at {m}x{n}x{k} {params:?}"
+                );
+            } else {
+                assert!(
+                    scalar == got,
+                    "case {case}: {isa} not bit-identical at {m}x{n}x{k} \
+                     {params:?}"
+                );
+            }
         }
     }
 }
