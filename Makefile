@@ -56,6 +56,12 @@ docs:
 
 # Serving scale-out smoke — exactly what CI's serve-smoke job runs:
 # 8 closed-loop clients over the synthetic zoo, serial kernels, and the
-# assertion that pool(2) throughput >= the single-actor baseline.
+# assertion that pool(2) throughput >= the single-actor baseline; then
+# the phase-shift scenario (traffic drifts onto a badly tuned shape
+# class, the pool's latency accounting ranks it hot, an online re-tune
+# epoch-swaps a verified-better DB into the live pool) asserting the
+# re-tuned throughput recovers >= 0.9x of the steady phase.
 serve-smoke:
 	cargo run --release --example serve_loadgen -- --smoke --out reports
+	cargo run --release --example serve_loadgen -- --phase-shift \
+		--assert-recovery 0.9 --out reports

@@ -86,6 +86,9 @@ struct Cell {
     p50_ms: f64,
     p95_ms: f64,
     wall_s: f64,
+    /// Requests placed off their ring-home actor — how often affinity
+    /// lost to backpressure in this cell.
+    spills: usize,
 }
 
 fn run_cell(
@@ -142,6 +145,7 @@ fn run_cell(
         }
     });
     let wall = t0.elapsed().as_secs_f64();
+    let spills = pool.spilled();
     pool.shutdown();
 
     latencies.sort();
@@ -153,6 +157,7 @@ fn run_cell(
         p50_ms: percentile_ms(&latencies, 0.50),
         p95_ms: percentile_ms(&latencies, 0.95),
         wall_s: wall,
+        spills,
     }
 }
 
@@ -170,12 +175,13 @@ fn main() {
         store.len()
     );
     println!(
-        "{:>7} {:>5} {:>8} | {:>10} {:>9} {:>9}",
-        "clients", "pool", "threads", "req/s", "p50 ms", "p95 ms"
+        "{:>7} {:>5} {:>8} | {:>10} {:>9} {:>9} {:>7}",
+        "clients", "pool", "threads", "req/s", "p50 ms", "p95 ms", "spills"
     );
 
     let mut csv = String::from(
-        "clients,pool,threads,requests,wall_s,throughput_rps,p50_ms,p95_ms\n",
+        "clients,pool,threads,requests,wall_s,throughput_rps,p50_ms,p95_ms,\
+         spills\n",
     );
     for clients in [1usize, 2, 4, 8] {
         for pool_size in [1usize, 2, 4] {
@@ -184,16 +190,17 @@ fn main() {
             for threads in [1usize, 2, 0] {
                 let cell = run_cell(&store, clients, pool_size, threads);
                 println!(
-                    "{:>7} {:>5} {:>8} | {:>10.1} {:>9.2} {:>9.2}",
+                    "{:>7} {:>5} {:>8} | {:>10.1} {:>9.2} {:>9.2} {:>7}",
                     cell.clients,
                     cell.pool,
                     cell.threads,
                     cell.rps,
                     cell.p50_ms,
-                    cell.p95_ms
+                    cell.p95_ms,
+                    cell.spills
                 );
                 csv.push_str(&format!(
-                    "{},{},{},{},{:.6},{:.2},{:.4},{:.4}\n",
+                    "{},{},{},{},{:.6},{:.2},{:.4},{:.4},{}\n",
                     cell.clients,
                     cell.pool,
                     cell.threads,
@@ -201,7 +208,8 @@ fn main() {
                     cell.wall_s,
                     cell.rps,
                     cell.p50_ms,
-                    cell.p95_ms
+                    cell.p95_ms,
+                    cell.spills
                 ));
             }
         }

@@ -24,16 +24,34 @@
 //! --assert-speedup × pool(1)** (default 1.0) — the CI `serve-smoke`
 //! contract.  All modes write `<out>/serve_loadgen.csv`, with a `mode`
 //! column and shed accounting (always 0 for closed-loop rows).
+//!
+//! `--phase-shift` runs the **online re-tuning** demonstration instead:
+//! a pool serves a steady mix, traffic then shifts onto a shape class
+//! whose seeded selection is deliberately poisoned (throughput craters),
+//! the measured re-tuner promotes a better point from live hot-class
+//! accounting, and [`EnginePool::swap_tuning`] broadcasts the new epoch
+//! into the serving pool without a restart.  With `--assert-recovery R`
+//! the run **exits non-zero unless post-re-tune throughput >= R × the
+//! pre-shift steady state** — the CI recovery contract.
+//!
+//! ```sh
+//! cargo run --release --example serve_loadgen -- \
+//!     --phase-shift --assert-recovery 0.9 --out reports
+//! ```
 
 use std::path::{Path, PathBuf};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use portable_kernels::blas::BlockedParams;
+use portable_kernels::config::GemmPoint;
 use portable_kernels::coordinator::{
     EngineClient, EnginePool, PoolConfig, RunTicket, SubmitError,
 };
-use portable_kernels::runtime::{ArtifactStore, NativeEngine};
+use portable_kernels::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
+use portable_kernels::tuner::{
+    retune_native, RetuneConfig, SelectionDb, SelectionKey, TuningHandle,
+};
 use portable_kernels::util::rng::XorShift;
 use portable_kernels::util::tmp::TempDir;
 
@@ -340,6 +358,226 @@ fn run_cell_open(
     })
 }
 
+/// Drive one closed-loop phase against an already-running pool,
+/// restricted to a subset of the zoo.  Returns (wall seconds, sorted
+/// per-request latencies).
+fn run_phase(
+    pool: &EnginePool,
+    mix: &[(String, Vec<Vec<f32>>)],
+    clients: usize,
+    requests_per_client: usize,
+    seed: u64,
+) -> (f64, Vec<Duration>) {
+    let t0 = Instant::now();
+    let mut latencies: Vec<Duration> = Vec::new();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                s.spawn(move || {
+                    let mut rng = XorShift::new(seed + c as u64);
+                    let mut lat = Vec::with_capacity(requests_per_client);
+                    for _ in 0..requests_per_client {
+                        let i =
+                            (rng.next_u64() % mix.len() as u64) as usize;
+                        let t = Instant::now();
+                        let out =
+                            pool.run(&mix[i].0, mix[i].1.clone()).unwrap();
+                        lat.push(t.elapsed());
+                        assert!(!out.outputs[0].is_empty());
+                    }
+                    lat
+                })
+            })
+            .collect();
+        for h in handles {
+            latencies.extend(h.join().expect("client thread panicked"));
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort();
+    (wall, latencies)
+}
+
+/// Gather a named subset of the zoo with synthesized inputs.
+fn phase_mix(
+    pool: &EnginePool,
+    names: &[&str],
+) -> Result<Vec<(String, Vec<Vec<f32>>)>, Box<dyn std::error::Error>> {
+    let mut mix = Vec::with_capacity(names.len());
+    for name in names {
+        mix.push((name.to_string(), pool.synth_inputs(name, 17)?));
+    }
+    Ok(mix)
+}
+
+/// The online re-tuning demonstration (`--phase-shift`).
+///
+/// 1. Seed the pool's tuning DB with a deliberately poisoned selection
+///    for the shape class `serve_gemm_96` and `serve_gemm_128` bucket
+///    into — the kind of stale entry a DB tuned on different hardware
+///    (or different traffic) leaves behind.
+/// 2. **steady**: serve a mix that never touches the poisoned class.
+/// 3. **shifted**: shift traffic onto the poisoned class; every request
+///    now plans from the bad point and throughput craters.
+/// 4. Re-tune: rank hot shape classes from the pool's own per-class
+///    latency accounting, sweep exactly those classes on a probe
+///    engine, and promote only candidates that *measured* strictly
+///    faster than the incumbent; broadcast the published epoch into the
+///    serving pool ([`EnginePool::swap_tuning`]).
+/// 5. **retuned**: the same shifted mix again — throughput recovers.
+///
+/// Returns the three phase cells plus (steady, retuned) throughput for
+/// the CI recovery assertion.
+fn run_phase_shift(
+    store: &ArtifactStore,
+    actors: usize,
+    clients: usize,
+    requests_per_client: usize,
+    queue_depth: usize,
+) -> Result<(Vec<Cell>, f64, f64), Box<dyn std::error::Error>> {
+    // 8x8x8 tiles, a 2x2 micro-kernel, and 8-way threading is
+    // pathological for ~100-element GEMMs: all packing overhead, no
+    // register reuse, heavy oversubscription.
+    let poison = GemmPoint::scalar(BlockedParams {
+        bm: 8,
+        bn: 8,
+        bk: 8,
+        mr: 2,
+        nr: 2,
+        threads: 8,
+    });
+    let mut seed_db = SelectionDb::new();
+    seed_db.put(SelectionKey::gemm(HOST_DEVICE, 96, 96, 96), poison, 0.01);
+    let handle = TuningHandle::new(seed_db);
+
+    let config = PoolConfig {
+        actors,
+        queue_depth,
+        spill_depth: (queue_depth / 2).max(1),
+        ..Default::default()
+    };
+    let pool = EnginePool::native_tuned(
+        store.clone(),
+        Arc::clone(&handle.snapshot().db),
+        config,
+    )?;
+    for meta_name in store.iter().map(|m| m.name.clone()) {
+        pool.warm(&meta_name)?;
+    }
+
+    // Steady traffic stays off the poisoned class (160 and 192 bucket
+    // into gemm_256x256x256); the shifted mix lands squarely on it.
+    let steady_mix = phase_mix(
+        &pool,
+        &["serve_gemm_160", "serve_conv_16", "serve_conv_24"],
+    )?;
+    let shifted_mix = phase_mix(&pool, &["serve_gemm_96", "serve_gemm_128"])?;
+
+    let cell = |mode: &'static str, wall: f64, lat: &[Duration]| Cell {
+        mode,
+        pool: actors,
+        clients,
+        threads: 0,
+        queue_depth,
+        requests: clients * requests_per_client,
+        target_rps: 0.0,
+        shed: 0,
+        wall_s: wall,
+        rps: (clients * requests_per_client) as f64 / wall,
+        p50_ms: percentile_ms(lat, 0.50),
+        p95_ms: percentile_ms(lat, 0.95),
+    };
+
+    let (wall_a, lat_a) =
+        run_phase(&pool, &steady_mix, clients, requests_per_client, 0x5eed);
+    let steady = cell("steady", wall_a, &lat_a);
+    println!(
+        "phase steady : {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms",
+        steady.rps, steady.p50_ms, steady.p95_ms
+    );
+
+    let (wall_b, lat_b) =
+        run_phase(&pool, &shifted_mix, clients, requests_per_client, 0xfade);
+    let shifted = cell("shifted", wall_b, &lat_b);
+    println!(
+        "phase shifted: {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms  \
+         (poisoned selection in play)",
+        shifted.rps, shifted.p50_ms, shifted.p95_ms
+    );
+
+    // The pool's own accounting names the classes worth re-tuning.
+    let stats = pool.stats();
+    let hot = stats.hot_shape_classes(2);
+    println!("hot shape classes by total serving time: {hot:?}");
+
+    // Probe on a fresh engine with no tuning DB attached (a tuned
+    // engine would override the probe points at plan time).
+    let mut probe = NativeEngine::new(store.clone())?;
+    let cfg = RetuneConfig::default();
+    let pass = retune_native(&mut probe, &handle, &hot, &cfg)?;
+    for p in &pass.promoted {
+        println!(
+            "promoted {}::{} -> {} ({:.2} -> {:.2} GFLOP/s measured)",
+            p.key.device,
+            p.key.op,
+            p.point,
+            p.incumbent_gflops,
+            p.candidate_gflops
+        );
+    }
+    println!(
+        "re-tune pass: probed {} artifacts, promoted {}, rejected {} \
+         (epoch {:?})",
+        pass.probed,
+        pass.promoted.len(),
+        pass.rejected,
+        pass.epoch
+    );
+
+    let snap = handle.snapshot();
+    let applied = pool.swap_tuning(&snap);
+    println!(
+        "swapped tuning epoch {} into {applied}/{} healthy actors",
+        snap.epoch,
+        pool.healthy_actors()
+    );
+
+    let (wall_c, lat_c) =
+        run_phase(&pool, &shifted_mix, clients, requests_per_client, 0xcafe);
+    let retuned = cell("retuned", wall_c, &lat_c);
+    println!(
+        "phase retuned: {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms",
+        retuned.rps, retuned.p50_ms, retuned.p95_ms
+    );
+
+    // Per-(artifact, shape-class) serving latency, the accounting the
+    // hot ranking was read from.
+    let final_stats = pool.stats();
+    println!(
+        "tuning epoch {}  spills {}  per-class serving latency:",
+        final_stats.tuning_epoch,
+        pool.spilled()
+    );
+    println!(
+        "  {:<38} {:>8} {:>10} {:>10}",
+        "artifact::shape_class", "count", "mean_ms", "~p95_ms"
+    );
+    for (key, lat) in &final_stats.latency {
+        println!(
+            "  {:<38} {:>8} {:>10.3} {:>10.3}",
+            key,
+            lat.count,
+            lat.mean().as_secs_f64() * 1e3,
+            lat.approx_percentile(0.95).as_secs_f64() * 1e3
+        );
+    }
+    pool.shutdown();
+
+    let steady_rps = steady.rps;
+    let retuned_rps = retuned.rps;
+    Ok((vec![steady, shifted, retuned], steady_rps, retuned_rps))
+}
+
 fn parse_pools(spec: &str) -> Result<Vec<usize>, Box<dyn std::error::Error>> {
     let pools: Result<Vec<usize>, _> =
         spec.split(',').map(|s| s.trim().parse::<usize>()).collect();
@@ -360,6 +598,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut smoke = false;
     let mut assert_speedup: Option<f64> = None;
     let mut open_loop: Option<f64> = None;
+    let mut phase_shift = false;
+    let mut assert_recovery: Option<f64> = None;
 
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
@@ -384,12 +624,22 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                 }
                 open_loop = Some(rate);
             }
+            "--phase-shift" => phase_shift = true,
+            "--assert-recovery" => {
+                let r: f64 = value("--assert-recovery")?.parse()?;
+                if r <= 0.0 || !r.is_finite() {
+                    return Err("--assert-recovery needs a positive ratio"
+                        .into());
+                }
+                assert_recovery = Some(r);
+            }
             other => {
                 return Err(format!(
                     "unknown argument {other:?}; usage: serve_loadgen \
                      [--pools 1,2,..] [--clients M] [--requests R] \
                      [--threads T] [--depth D] [--out DIR] [--smoke] \
-                     [--assert-speedup X] [--open-loop RATE]"
+                     [--assert-speedup X] [--open-loop RATE] \
+                     [--phase-shift] [--assert-recovery R]"
                 )
                 .into())
             }
@@ -409,6 +659,57 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let zoo = TempDir::new("serve-loadgen")?;
     write_zoo(zoo.path());
     let store = ArtifactStore::open(zoo.path())?;
+
+    if phase_shift {
+        if smoke || open_loop.is_some() {
+            return Err(
+                "--phase-shift is exclusive with --smoke/--open-loop".into()
+            );
+        }
+        let actors = pools[0].max(2);
+        println!(
+            "== serve_loadgen (phase shift): {} artifacts, {clients} \
+             clients x {requests} requests/phase, pool={actors} ==",
+            store.len()
+        );
+        let (cells, steady_rps, retuned_rps) =
+            run_phase_shift(&store, actors, clients, requests, queue_depth)?;
+
+        std::fs::create_dir_all(&out_dir)?;
+        let csv_path = out_dir.join("serve_loadgen.csv");
+        let mut csv = String::from(Cell::csv_header());
+        csv.push('\n');
+        for cell in &cells {
+            csv.push_str(&cell.csv_row());
+            csv.push('\n');
+        }
+        std::fs::write(&csv_path, csv)?;
+        println!("wrote {}", csv_path.display());
+
+        if let Some(required) = assert_recovery {
+            let ratio = retuned_rps / steady_rps;
+            println!(
+                "recovery: retuned / steady throughput = {ratio:.2}x \
+                 (required >= {required:.2}x)"
+            );
+            if ratio < required {
+                return Err(format!(
+                    "phase-shift recovery failed: post-re-tune throughput \
+                     {retuned_rps:.1} req/s is only {ratio:.2}x the \
+                     pre-shift steady state {steady_rps:.1} req/s (need >= \
+                     {required:.2}x): an online re-tune must restore \
+                     serving throughput"
+                )
+                .into());
+            }
+            println!(
+                "OK: online re-tune restored >= {required:.2}x steady \
+                 throughput"
+            );
+        }
+        return Ok(());
+    }
+
     match open_loop {
         Some(rate) => println!(
             "== serve_loadgen (open loop): {} artifacts, {} arrivals at \

@@ -11,7 +11,13 @@
 //! * [`EnginePool`] — the scale-out shape: N backend actors behind a
 //!   consistent-hash router with bounded queues, explicit backpressure
 //!   ([`EnginePool::try_submit_run`] returns [`SubmitError::Busy`]),
-//!   least-loaded spill, and panic containment.
+//!   least-loaded spill (warm-on-first-spill, counted by
+//!   [`EnginePool::spilled`]), panic containment, and epoch-swappable
+//!   tuning ([`EnginePool::swap_tuning`] broadcasts a
+//!   [`TuningSnapshot`](crate::tuner::TuningSnapshot) so an online
+//!   re-tune lands without a restart).  Per-`(artifact, shape-class)`
+//!   serving latency ([`LatencyStats`]) folds into [`EngineStats`] and
+//!   feeds the re-tuner's hot-class ranking.
 //! * [`Batcher`] — groups same-artifact requests to amortize dispatch;
 //!   flushing a group through a pool keeps it on one actor's warm cache.
 //! * [`NetworkRunner`] — runs a whole VGG/ResNet convolution stack
@@ -36,7 +42,7 @@ pub use network::{
     NetworkRunner,
 };
 pub use pool::{EnginePool, PoolConfig, RunTicket, SubmitError};
-pub use scheduler::{EngineHandle, EngineStats};
+pub use scheduler::{EngineHandle, EngineStats, LatencyStats, LATENCY_BUCKETS};
 
 /// Client-side surface shared by the one-actor [`EngineHandle`] and the
 /// multi-actor [`EnginePool`]: everything above the coordinator (the

@@ -16,7 +16,16 @@
 //! * **Least-loaded spill** — when an artifact's home queue reaches the
 //!   configured spill depth, the request spills to the least-loaded
 //!   healthy actor: affinity is a throughput optimization, never a
-//!   head-of-line blocking guarantee violation.
+//!   head-of-line blocking guarantee violation.  The first spill of an
+//!   artifact onto a given actor enqueues a plan-warming request ahead
+//!   of it (so spilled requests do not pay the cold plan/compile the
+//!   spill was meant to dodge), and every spill counts into
+//!   [`EnginePool::spilled`].
+//! * **Epoch-swappable tuning** — [`EnginePool::swap_tuning`] broadcasts
+//!   a [`TuningSnapshot`] to every healthy actor; each actor's backend
+//!   re-resolves only the cached plans whose selection actually changed
+//!   ([`Backend::swap_tuning`]), so an online re-tune never cold-starts
+//!   the whole pool.
 //! * **Panic containment** — a backend panic poisons only its actor:
 //!   the in-flight request fails loudly, the dead actor's queued
 //!   requests drain onto the surviving actors, and routing stops
@@ -33,7 +42,7 @@
 //! [`BlockedParams::threads`]: crate::blas::BlockedParams
 //! [`EngineHandle`]: super::EngineHandle
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -45,7 +54,7 @@ use crate::error::{Error, Result};
 use crate::runtime::{
     ArtifactStore, Backend, DefaultEngine, NativeEngine, RunOutput,
 };
-use crate::tuner::SelectionDb;
+use crate::tuner::{SelectionDb, TuningSnapshot};
 
 use super::scheduler::{serve_request, EngineStats, Request};
 use super::EngineClient;
@@ -232,6 +241,12 @@ struct Shared {
     ring: HashRing,
     spill_depth: usize,
     panics: AtomicUsize,
+    /// Requests routed away from their ring home (spill metric).
+    spills: AtomicUsize,
+    /// Per-actor set of artifacts already warm-requested by a spill, so
+    /// only the *first* spill of an artifact onto an actor enqueues a
+    /// plan-warming request.
+    warmed: Mutex<Vec<HashSet<String>>>,
 }
 
 impl Shared {
@@ -254,18 +269,46 @@ impl Shared {
 
     /// Routing decision for one request: the artifact's ring home while
     /// its queue is under the spill depth, otherwise whichever healthy
-    /// actor is least loaded (if actually less loaded than home).
-    fn route(&self, artifact: &str) -> Option<usize> {
+    /// actor is least loaded (if actually less loaded than home).  The
+    /// flag reports whether the decision is a spill (target ≠ home).
+    fn route(&self, artifact: &str) -> Option<(usize, bool)> {
         let primary = self.ring.route(artifact, |i| self.is_healthy(i))?;
         if self.queues[primary].len() < self.spill_depth {
-            return Some(primary);
+            return Some((primary, false));
         }
-        match self.least_loaded() {
+        let target = match self.least_loaded() {
             Some(ll) if self.queues[ll].len() < self.queues[primary].len() => {
-                Some(ll)
+                ll
             }
-            _ => Some(primary),
+            _ => primary,
+        };
+        Some((target, target != primary))
+    }
+
+    /// The first time `artifact` spills onto `actor`, enqueue a
+    /// plan-warming request ahead of it — the spill-path fix: before
+    /// this, a spilled request paid the cold plan/compile on an actor
+    /// that had never seen the artifact, which is exactly the latency
+    /// spike spilling exists to avoid.  Best-effort: a full or closed
+    /// queue skips the warm and the spilled run plans inline.
+    fn warm_for_spill(&self, actor: usize, artifact: &str) {
+        let first = {
+            let mut warmed =
+                self.warmed.lock().expect("warm-set lock poisoned");
+            warmed[actor].insert(artifact.to_string())
+        };
+        if first {
+            let (reply, _rx) = mpsc::channel();
+            let _ = self.queues[actor].try_push(Request::Warm {
+                name: artifact.to_string(),
+                reply,
+            });
         }
+    }
+
+    /// Count one request actually placed off its ring home.
+    fn count_spill(&self) {
+        self.spills.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -468,10 +511,13 @@ impl EnginePool {
         Self::spawn_with(config, move |_| DefaultEngine::new(store.clone()))
     }
 
-    /// Spawn native-engine actors that all consult one shared, read-only
-    /// tuning DB at plan time — the deployment shape: run the per-host
+    /// Spawn native-engine actors that all consult one shared tuning DB
+    /// snapshot at plan time — the deployment shape: run the per-host
     /// sweep once, then every actor plans with the host-tuned
-    /// [`BlockedParams`](crate::blas::BlockedParams).
+    /// [`BlockedParams`](crate::blas::BlockedParams).  The snapshot is
+    /// not frozen forever: [`EnginePool::swap_tuning`] installs a newer
+    /// epoch on every actor while the pool serves (online re-tuning,
+    /// [`TuningHandle`](crate::tuner::TuningHandle)).
     pub fn native_tuned(
         store: ArtifactStore,
         tuning: Arc<SelectionDb>,
@@ -522,6 +568,10 @@ impl EnginePool {
             ring: HashRing::new(config.actors),
             spill_depth: config.spill_depth,
             panics: AtomicUsize::new(0),
+            spills: AtomicUsize::new(0),
+            warmed: Mutex::new(
+                (0..config.actors).map(|_| HashSet::new()).collect(),
+            ),
         });
         fn cleanup(shared: &Shared, joins: Vec<JoinHandle<()>>) {
             for q in &shared.queues {
@@ -617,6 +667,43 @@ impl EnginePool {
         self.shared.panics.load(Ordering::Relaxed)
     }
 
+    /// Number of requests placed off their ring-home actor since spawn —
+    /// the spill metric.  A persistently high rate means artifact
+    /// affinity is lost (home queues saturate faster than the spill
+    /// targets can absorb) and the pool is under-provisioned.
+    pub fn spilled(&self) -> usize {
+        self.shared.spills.load(Ordering::Relaxed)
+    }
+
+    /// Broadcast a tuning snapshot to every healthy actor and wait for
+    /// each to answer; returns how many backends applied it
+    /// ([`Backend::swap_tuning`]).  The push blocks behind queued work
+    /// rather than being droppable — a published epoch must reach every
+    /// actor.  Requests already queued ahead of the swap still serve
+    /// from the old snapshot: the swap is per-actor atomic, and the pool
+    /// converges once every queue drains past it.
+    pub fn swap_tuning(&self, snap: &TuningSnapshot) -> usize {
+        let mut waiting = Vec::new();
+        for (idx, q) in self.shared.queues.iter().enumerate() {
+            if !self.shared.is_healthy(idx) {
+                continue;
+            }
+            let (reply, rx) = mpsc::channel();
+            let pushed = q.push(Request::SwapTuning {
+                db: Arc::clone(&snap.db),
+                epoch: snap.epoch,
+                reply,
+            });
+            if pushed.is_ok() {
+                waiting.push(rx);
+            }
+        }
+        waiting
+            .into_iter()
+            .filter(|rx| rx.recv().unwrap_or(false))
+            .count()
+    }
+
     /// The artifact's current ring home (ignoring spill), or `None` when
     /// no healthy actor remains.  Stable for a given pool while the home
     /// actor stays healthy — the routing-determinism contract.
@@ -634,11 +721,21 @@ impl EnginePool {
         // Each retry means the routed actor died between the routing
         // decision and the push; one attempt per actor bounds the loop.
         for _ in 0..=self.shared.queues.len() {
-            let Some(target) = self.shared.route(artifact) else {
+            let Some((target, spilled)) = self.shared.route(artifact) else {
                 break;
             };
+            if spilled {
+                // Warm goes in *ahead* of the request, so the spilled
+                // run lands on an already-built plan.
+                self.shared.warm_for_spill(target, artifact);
+            }
             match self.shared.queues[target].push(req) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    if spilled {
+                        self.shared.count_spill();
+                    }
+                    return Ok(());
+                }
                 Err(r) => req = r,
             }
         }
@@ -652,24 +749,44 @@ impl EnginePool {
         artifact: &str,
         req: Request,
     ) -> std::result::Result<(), SubmitError> {
-        let Some(primary) = self.shared.route(artifact) else {
+        let Some((primary, spilled)) = self.shared.route(artifact) else {
             return Err(SubmitError::Engine(Error::Runtime(
                 "engine pool has no healthy actors left".into(),
             )));
         };
+        if spilled {
+            self.shared.warm_for_spill(primary, artifact);
+        }
         let mut req = match self.shared.queues[primary].try_push(req) {
-            Ok(()) => return Ok(()),
+            Ok(()) => {
+                if spilled {
+                    self.shared.count_spill();
+                }
+                return Ok(());
+            }
             Err(PushError::Full(r)) | Err(PushError::Closed(r)) => r,
         };
         // The routed target is full (or died): offer the request to the
-        // remaining healthy actors, least-loaded first.
+        // remaining healthy actors, least-loaded first.  Placements off
+        // the ring home count as spills too.
+        let home =
+            self.shared.ring.route(artifact, |i| self.shared.is_healthy(i));
         let mut others: Vec<usize> = (0..self.shared.queues.len())
             .filter(|&i| i != primary && self.shared.is_healthy(i))
             .collect();
         others.sort_by_key(|&i| self.shared.queues[i].len());
         for i in others {
+            let off_home = home != Some(i);
+            if off_home {
+                self.shared.warm_for_spill(i, artifact);
+            }
             match self.shared.queues[i].try_push(req) {
-                Ok(()) => return Ok(()),
+                Ok(()) => {
+                    if off_home {
+                        self.shared.count_spill();
+                    }
+                    return Ok(());
+                }
                 Err(PushError::Full(r)) | Err(PushError::Closed(r)) => req = r,
             }
         }
@@ -745,14 +862,15 @@ impl EnginePool {
             .map_err(|_| Error::Runtime(format!("engine actor {idx} died")))
     }
 
-    /// Aggregate statistics over the surviving actors.
+    /// Aggregate statistics over the surviving actors
+    /// ([`EngineStats::absorb`]): counters sum, per-`(artifact,
+    /// shape-class)` latency accounting merges, and `tuning_epoch` is
+    /// the newest epoch any actor has applied.
     pub fn stats(&self) -> EngineStats {
         let mut total = EngineStats::default();
         for idx in 0..self.shared.queues.len() {
             if let Ok(s) = self.actor_stats(idx) {
-                total.runs += s.runs;
-                total.cached_executables += s.cached_executables;
-                total.device_time += s.device_time;
+                total.absorb(&s);
             }
         }
         total
@@ -933,10 +1051,13 @@ mod tests {
     /// Backend double: `slow-*` artifacts park on the gate, `poison-*`
     /// artifacts panic, everything else returns immediately.  The pool
     /// never interprets artifact names, so none of these need manifest
-    /// entries beyond an empty store.
+    /// entries beyond an empty store.  Warm calls are logged (shared
+    /// across actors) and tuning swaps are accepted, so the spill-warm
+    /// and epoch-broadcast paths are observable.
     struct MockBackend {
         store: ArtifactStore,
         gate: Arc<Gate>,
+        warms: Arc<Mutex<Vec<String>>>,
     }
 
     impl Backend for MockBackend {
@@ -948,7 +1069,8 @@ mod tests {
             &self.store
         }
 
-        fn warm(&mut self, _name: &str) -> Result<()> {
+        fn warm(&mut self, name: &str) -> Result<()> {
+            self.warms.lock().unwrap().push(name.to_string());
             Ok(())
         }
 
@@ -968,6 +1090,10 @@ mod tests {
                 elapsed: Duration::from_micros(1),
             })
         }
+
+        fn swap_tuning(&mut self, _db: Arc<SelectionDb>) -> bool {
+            true
+        }
     }
 
     fn empty_store() -> (TempDir, ArtifactStore) {
@@ -985,13 +1111,29 @@ mod tests {
         config: PoolConfig,
         gate: &Arc<Gate>,
     ) -> (TempDir, EnginePool) {
+        let (dir, pool, _warms) = mock_pool_logged(config, gate);
+        (dir, pool)
+    }
+
+    /// Like [`mock_pool`] but also hands back the shared warm log, for
+    /// tests asserting on the spill-warm path.
+    fn mock_pool_logged(
+        config: PoolConfig,
+        gate: &Arc<Gate>,
+    ) -> (TempDir, EnginePool, Arc<Mutex<Vec<String>>>) {
         let (dir, store) = empty_store();
         let gate = Arc::clone(gate);
+        let warms = Arc::new(Mutex::new(Vec::new()));
+        let warms_c = Arc::clone(&warms);
         let pool = EnginePool::spawn_with(config, move |_| {
-            Ok(MockBackend { store: store.clone(), gate: Arc::clone(&gate) })
+            Ok(MockBackend {
+                store: store.clone(),
+                gate: Arc::clone(&gate),
+                warms: Arc::clone(&warms_c),
+            })
         })
         .unwrap();
-        (dir, pool)
+        (dir, pool, warms)
     }
 
     /// Find an artifact name with the given prefix whose ring home is
@@ -1063,6 +1205,67 @@ mod tests {
     }
 
     #[test]
+    fn first_spill_warms_the_target_once_and_spills_are_counted() {
+        let gate = Gate::closed();
+        let config = PoolConfig {
+            actors: 2,
+            queue_depth: 8,
+            spill_depth: 1,
+            ..Default::default()
+        };
+        let (_dir, pool, warms) = mock_pool_logged(config, &gate);
+        let slow = name_on(&pool, "slow", 0);
+
+        // Park actor 0 and fill its queue to the spill depth.
+        let t0 = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(1);
+        let t1 = pool.submit_run(&slow, vec![]).unwrap();
+        assert_eq!(pool.spilled(), 0, "home placements are not spills");
+
+        // First spill onto actor 1: a warm for the artifact must be
+        // queued ahead of the run, so the spilled request lands on a
+        // plan the actor already built.
+        let t2 = pool.submit_run(&slow, vec![]).unwrap();
+        gate.wait_entered(2);
+        assert_eq!(pool.spilled(), 1);
+
+        // Second spill of the same artifact onto the same actor: no
+        // second warm, but the spill metric still counts it.
+        let t3 = pool.submit_run(&slow, vec![]).unwrap();
+        assert_eq!(pool.spilled(), 2);
+
+        gate.open();
+        for t in [t0, t1, t2, t3] {
+            assert!(t.wait().is_ok());
+        }
+        pool.shutdown();
+        assert_eq!(
+            warms.lock().unwrap().as_slice(),
+            &[slow],
+            "exactly one warm, issued for the first spill only"
+        );
+    }
+
+    #[test]
+    fn swap_tuning_broadcasts_to_every_healthy_actor() {
+        let gate = Gate::closed();
+        let config = PoolConfig { actors: 2, ..Default::default() };
+        let (_dir, pool) = mock_pool(config, &gate);
+
+        let handle = crate::tuner::TuningHandle::new(SelectionDb::default());
+        let next = handle.publish(SelectionDb::default());
+        assert_eq!(next.epoch, 1);
+        assert_eq!(
+            pool.swap_tuning(&next),
+            2,
+            "both mock backends accept the swap"
+        );
+        // Aggregated stats surface the newest applied epoch.
+        assert_eq!(pool.stats().tuning_epoch, 1);
+        pool.shutdown();
+    }
+
+    #[test]
     fn panic_is_contained_and_backlog_drains_to_survivors() {
         let gate = Gate::closed();
         let config = PoolConfig { actors: 2, queue_depth: 8, spill_depth: 8, ..Default::default() };
@@ -1113,7 +1316,11 @@ mod tests {
             if idx == 1 {
                 return Err(Error::Runtime("actor 1 refused to start".into()));
             }
-            Ok(MockBackend { store: store.clone(), gate: Arc::clone(&gate) })
+            Ok(MockBackend {
+                store: store.clone(),
+                gate: Arc::clone(&gate),
+                warms: Arc::new(Mutex::new(Vec::new())),
+            })
         })
         .err()
         .expect("constructor failure must fail the whole spawn");
@@ -1137,6 +1344,7 @@ mod tests {
                     Ok(MockBackend {
                         store: store.clone(),
                         gate: Arc::clone(&gate),
+                        warms: Arc::new(Mutex::new(Vec::new())),
                     })
                 })
                 .is_err(),

@@ -17,13 +17,16 @@
 //! actor is pure `std::thread` + `mpsc`, which also keeps the request
 //! path allocation-free apart from the payload itself.)
 
+use std::collections::BTreeMap;
 use std::path::Path;
 use std::sync::mpsc;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactStore, Backend, DefaultEngine, RunOutput};
+use crate::tuner::{SelectionDb, TuningSnapshot};
 
 /// One message to an engine actor.  Every variant that expects an answer
 /// carries its own one-shot reply channel, so any number of clients can
@@ -63,6 +66,14 @@ pub(crate) enum Request {
     Stats {
         reply: mpsc::Sender<EngineStats>,
     },
+    /// Install a new tuning snapshot on the actor's backend
+    /// ([`Backend::swap_tuning`]) — the epoch-swap rung of the online
+    /// re-tuning loop.  Replies whether the backend applied it.
+    SwapTuning {
+        db: Arc<SelectionDb>,
+        epoch: u64,
+        reply: mpsc::Sender<bool>,
+    },
     /// Ask the actor to exit its serve loop.
     Shutdown,
 }
@@ -85,6 +96,7 @@ pub(crate) fn serve_request<B: Backend>(
             if let Ok(o) = &out {
                 stats.runs += 1;
                 stats.device_time += o.elapsed;
+                record_latency(engine, stats, &name, o.elapsed);
             }
             stats.cached_executables = engine.cached();
             let _ = reply.send(out);
@@ -120,7 +132,142 @@ pub(crate) fn serve_request<B: Backend>(
             let _ = reply.send(stats.clone());
             true
         }
+        Request::SwapTuning { db, epoch, reply } => {
+            let applied = engine.swap_tuning(db);
+            if applied {
+                stats.tuning_epoch = epoch;
+            }
+            stats.cached_executables = engine.cached();
+            let _ = reply.send(applied);
+            true
+        }
         Request::Shutdown => false,
+    }
+}
+
+/// Fold one served execution into the per-(artifact, shape-class)
+/// latency accounting.  The key is `"{artifact}::{shape_class}"`
+/// ([`crate::tuner::shape_class_for`]); artifacts outside the tuned
+/// kinds bucket under `unclassified`.  Only `Request::Run` traffic is
+/// recorded — `RunTimed` is the measurement path, and mixing probe
+/// timings into serving latency would bias the re-tuner's hot set.
+fn record_latency<B: Backend>(
+    engine: &B,
+    stats: &mut EngineStats,
+    name: &str,
+    elapsed: Duration,
+) {
+    let class = engine
+        .store()
+        .get(name)
+        .ok()
+        .and_then(crate::tuner::shape_class_for)
+        .unwrap_or_else(|| "unclassified".to_string());
+    let key = format!("{name}::{class}");
+    stats.latency.entry(key).or_default().record(elapsed);
+}
+
+/// Number of log2-microsecond latency buckets in a [`LatencyStats`]
+/// histogram.  Bucket `i` covers roughly `[2^i, 2^(i+1))` microseconds;
+/// the last bucket absorbs everything slower (~0.5 s and up), so no
+/// request is ever dropped from the histogram.
+pub const LATENCY_BUCKETS: usize = 20;
+
+/// Serving-latency accounting for one `(artifact, shape-class)` key.
+///
+/// The histogram is log2-microsecond bucketed — coarse, allocation-free,
+/// and mergeable across pool actors — which is exactly what the online
+/// re-tuner needs: it ranks shape classes by *total* time, and operators
+/// read approximate tail percentiles from the buckets.  Exact quantiles
+/// would require retaining samples; a serving path must not.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    /// Requests recorded.
+    pub count: u64,
+    /// Sum of recorded latencies (drives hot-class ranking).
+    pub total: Duration,
+    /// Fastest recorded latency (`Duration::MAX` until first record).
+    pub min: Duration,
+    /// Slowest recorded latency.
+    pub max: Duration,
+    /// Log2-microsecond histogram; see [`LATENCY_BUCKETS`].
+    pub buckets: [u64; LATENCY_BUCKETS],
+}
+
+impl Default for LatencyStats {
+    fn default() -> Self {
+        LatencyStats {
+            count: 0,
+            total: Duration::ZERO,
+            min: Duration::MAX,
+            max: Duration::ZERO,
+            buckets: [0; LATENCY_BUCKETS],
+        }
+    }
+}
+
+impl LatencyStats {
+    /// Fold one served-request latency into the accounting.
+    pub fn record(&mut self, d: Duration) {
+        self.count += 1;
+        self.total += d;
+        self.min = self.min.min(d);
+        self.max = self.max.max(d);
+        self.buckets[Self::bucket_index(d)] += 1;
+    }
+
+    /// Bucket index for a latency: floor(log2(µs)), clamped to the
+    /// histogram width.  Sub-microsecond latencies land in bucket 0.
+    fn bucket_index(d: Duration) -> usize {
+        let mut us = d.as_micros() as u64;
+        let mut idx = 0usize;
+        while us > 1 && idx < LATENCY_BUCKETS - 1 {
+            us >>= 1;
+            idx += 1;
+        }
+        idx
+    }
+
+    /// Fold another actor's accounting for the same key into this one.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.count += other.count;
+        self.total += other.total;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+    }
+
+    /// Mean recorded latency ([`Duration::ZERO`] before any record).
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        self.total / self.count as u32
+    }
+
+    /// Approximate `q`-quantile (`0.0..=1.0`) from the histogram: the
+    /// upper bound of the bucket containing the `ceil(count * q)`-th
+    /// sample.  Bucket resolution means the answer can overestimate by
+    /// up to 2×, which is fine for the "did p99 recover?" reading it
+    /// serves.  Returns [`Duration::ZERO`] before any record.
+    pub fn approx_percentile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let rank = ((self.count as f64 * q).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b;
+            if seen >= rank {
+                if i >= LATENCY_BUCKETS - 1 {
+                    return self.max;
+                }
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max
     }
 }
 
@@ -133,6 +280,51 @@ pub struct EngineStats {
     pub cached_executables: usize,
     /// Total device execution time.
     pub device_time: Duration,
+    /// Per-`(artifact, shape-class)` serving latency, keyed
+    /// `"{artifact}::{shape_class}"`.  Populated by `Request::Run`
+    /// traffic only — the serving signal the online re-tuner ranks hot
+    /// shape classes from.
+    pub latency: BTreeMap<String, LatencyStats>,
+    /// Epoch of the last tuning snapshot the backend applied
+    /// ([`Backend::swap_tuning`]); 0 until a swap lands.
+    pub tuning_epoch: u64,
+}
+
+impl EngineStats {
+    /// Fold another actor's statistics into this one: counters sum,
+    /// latency accounting merges per key, and `tuning_epoch` takes the
+    /// max (actors swap snapshots one at a time; the newest epoch is
+    /// the pool's).  This is how [`EnginePool::stats`](super::EnginePool)
+    /// aggregates across actors.
+    pub fn absorb(&mut self, other: &EngineStats) {
+        self.runs += other.runs;
+        self.cached_executables += other.cached_executables;
+        self.device_time += other.device_time;
+        for (key, stats) in &other.latency {
+            self.latency.entry(key.clone()).or_default().merge(stats);
+        }
+        self.tuning_epoch = self.tuning_epoch.max(other.tuning_epoch);
+    }
+
+    /// The `top` shape classes ranked by total serving time, hottest
+    /// first — the re-tuner's work list.  Keys aggregate across
+    /// artifacts: two artifacts in the same class pool their time.
+    pub fn hot_shape_classes(&self, top: usize) -> Vec<String> {
+        let mut per_class: BTreeMap<&str, Duration> = BTreeMap::new();
+        for (key, stats) in &self.latency {
+            let class = key.rsplit("::").next().unwrap_or(key);
+            *per_class.entry(class).or_insert(Duration::ZERO) +=
+                stats.total;
+        }
+        let mut ranked: Vec<(&str, Duration)> =
+            per_class.into_iter().collect();
+        ranked.sort_by(|a, b| b.1.cmp(&a.1));
+        ranked
+            .into_iter()
+            .take(top)
+            .map(|(class, _)| class.to_string())
+            .collect()
+    }
 }
 
 /// Cloneable handle to a single engine actor.
@@ -280,6 +472,18 @@ impl EngineHandle {
         self.ask(|reply| Request::Stats { reply })
     }
 
+    /// Install a tuning snapshot on the actor's backend
+    /// ([`Backend::swap_tuning`]).  Returns whether the backend applied
+    /// it (the default backend hook is a no-op `false`; the native
+    /// engine re-resolves cached plans and answers `true`).
+    pub fn swap_tuning(&self, snap: &TuningSnapshot) -> Result<bool> {
+        self.ask(|reply| Request::SwapTuning {
+            db: Arc::clone(&snap.db),
+            epoch: snap.epoch,
+            reply,
+        })
+    }
+
     /// Ask the actor to exit (idempotent; pending requests drain first).
     pub fn shutdown(&self) {
         let _ = self.tx.send(Request::Shutdown);
@@ -331,5 +535,103 @@ mod tests {
         .err()
         .expect("constructor panic must surface as Err");
         assert!(err.to_string().contains("died during init"), "got: {err}");
+    }
+
+    #[test]
+    fn latency_buckets_are_log2_microseconds() {
+        let mut lat = LatencyStats::default();
+        lat.record(Duration::from_micros(1));
+        lat.record(Duration::from_micros(3));
+        lat.record(Duration::from_micros(900));
+        assert_eq!(lat.count, 3);
+        assert_eq!(lat.buckets[0], 1, "1us is bucket 0");
+        assert_eq!(lat.buckets[1], 1, "3us is bucket 1 (floor log2)");
+        assert_eq!(lat.buckets[9], 1, "900us is bucket 9 (512..1024)");
+        assert_eq!(lat.min, Duration::from_micros(1));
+        assert_eq!(lat.max, Duration::from_micros(900));
+        // The p99 estimate lands on the slow bucket's upper bound.
+        assert_eq!(lat.approx_percentile(0.99), Duration::from_micros(1024));
+        assert_eq!(
+            LatencyStats::default().approx_percentile(0.5),
+            Duration::ZERO
+        );
+    }
+
+    #[test]
+    fn latency_merge_folds_both_sides() {
+        let mut a = LatencyStats::default();
+        a.record(Duration::from_micros(10));
+        let mut b = LatencyStats::default();
+        b.record(Duration::from_micros(40));
+        b.record(Duration::from_micros(2));
+        a.merge(&b);
+        assert_eq!(a.count, 3);
+        assert_eq!(a.total, Duration::from_micros(52));
+        assert_eq!(a.min, Duration::from_micros(2));
+        assert_eq!(a.max, Duration::from_micros(40));
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_ranks_hot_classes() {
+        let mut a = EngineStats::default();
+        a.runs = 2;
+        a.device_time = Duration::from_micros(30);
+        let mut hot = LatencyStats::default();
+        hot.record(Duration::from_micros(20));
+        a.latency.insert("g96::gemm_128x128x128".into(), hot);
+
+        let mut b = EngineStats::default();
+        b.runs = 1;
+        b.tuning_epoch = 3;
+        let mut warm = LatencyStats::default();
+        warm.record(Duration::from_micros(5));
+        b.latency.insert("g8::gemm_64x64x64".into(), warm);
+        let mut more = LatencyStats::default();
+        more.record(Duration::from_micros(7));
+        b.latency.insert("g128::gemm_128x128x128".into(), more);
+
+        a.absorb(&b);
+        assert_eq!(a.runs, 3);
+        assert_eq!(a.tuning_epoch, 3);
+        assert_eq!(a.latency.len(), 3);
+        // 27us total in gemm_128x128x128 vs 5us in gemm_64x64x64.
+        assert_eq!(
+            a.hot_shape_classes(1),
+            vec!["gemm_128x128x128".to_string()]
+        );
+        assert_eq!(a.hot_shape_classes(8).len(), 2);
+    }
+
+    #[test]
+    fn run_traffic_is_recorded_per_shape_class() {
+        use crate::util::tmp::TempDir;
+        let dir = TempDir::new("sched-latency").unwrap();
+        std::fs::write(
+            dir.path().join("manifest.json"),
+            r#"{"version": 1, "artifacts": [{
+                "name": "g4", "kind": "gemm", "impl": "pallas",
+                "file": "g4.hlo.txt", "flops": 128,
+                "m": 4, "n": 4, "k": 4,
+                "inputs": [{"shape": [4, 4], "dtype": "float32"},
+                           {"shape": [4, 4], "dtype": "float32"}],
+                "groups": ["gemm"]}]}"#,
+        )
+        .unwrap();
+        let (handle, join) = EngineHandle::spawn(dir.path()).unwrap();
+        let inputs = handle.synth_inputs("g4", 7).unwrap();
+        handle.run("g4", inputs).unwrap();
+        let stats = handle.stats().unwrap();
+        assert_eq!(stats.runs, 1);
+        let lat = stats
+            .latency
+            .get("g4::gemm_64x64x64")
+            .expect("run recorded under its shape class");
+        assert_eq!(lat.count, 1);
+        assert_eq!(
+            stats.hot_shape_classes(4),
+            vec!["gemm_64x64x64".to_string()]
+        );
+        handle.shutdown();
+        join.join().unwrap();
     }
 }

@@ -91,6 +91,25 @@ pub trait Backend {
         Ok((out, best))
     }
 
+    /// Install a new tuning-selection snapshot, for backends that
+    /// consult a [`SelectionDb`](crate::tuner::SelectionDb) at plan
+    /// time.  Returns `true` when the snapshot was applied.
+    ///
+    /// The contract for implementors: plans built after this call must
+    /// resolve from the new snapshot, but plans whose resolved point is
+    /// *unchanged* should stay cached — the epoch-swap path exists so a
+    /// serving actor re-plans only the shape classes an online re-tune
+    /// actually promoted.  The default is a no-op (`false`): backends
+    /// without plan-time tuning (PJRT compiles ahead of time) simply
+    /// report that the swap did not apply.
+    fn swap_tuning(
+        &mut self,
+        db: std::sync::Arc<crate::tuner::SelectionDb>,
+    ) -> bool {
+        let _ = db;
+        false
+    }
+
     /// Deterministic pseudo-random input vectors for an artifact (used by
     /// examples, benches, and the measured tuner; values in [-0.5, 0.5)).
     fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {

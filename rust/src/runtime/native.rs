@@ -333,12 +333,53 @@ fn resolve_point<P: KernelSpace>(
     meta: &ArtifactMeta,
     tuning: Option<&SelectionDb>,
     device: &str,
-) -> Option<P> {
-    tuning
-        .and_then(|db| {
-            selection_key_for(meta, device).and_then(|key| db.get::<P>(&key))
-        })
-        .map(|(point, _gflops)| point)
+) -> Option<(P, bool)> {
+    let db = tuning?;
+    let key = selection_key_for(meta, device)?;
+    let (point, _gflops) = db.get::<P>(&key)?;
+    // A *migrated* entry decoded through a legacy kind: absent knobs
+    // were filled with defaults by the shim, not tuned — the plan layer
+    // clamps those defaults where a measured value would not be.
+    let legacy = db
+        .stored(&key)
+        .map(|s| s.kind() != P::KIND)
+        .unwrap_or(false);
+    Some((point, legacy))
+}
+
+/// The migrated-entry clamp: legacy `blocked`/`conv_native` entries
+/// written before the `threads` axis existed decode as `threads: 0`
+/// (auto).  A *tuned* auto is honored verbatim, but a migration-filled
+/// auto on a problem under [`SMALL_PROBLEM_FLOP_CUTOFF`] would silently
+/// bypass the small-problem serial heuristic and pay the fan-out/join
+/// overhead the cutoff exists to avoid — so it clamps to 1.
+fn clamp_migrated_auto(
+    params: BlockedParams,
+    legacy: bool,
+    flops: u64,
+) -> BlockedParams {
+    if legacy && params.threads == 0 && flops < SMALL_PROBLEM_FLOP_CUTOFF {
+        BlockedParams { threads: 1, ..params }
+    } else {
+        params
+    }
+}
+
+/// Whether two plans for the *same artifact* resolve to the same kernel.
+/// The shape halves come from manifest metadata (identical for one
+/// artifact), so plan identity reduces to the resolved space point —
+/// including the conv algorithm, which [`conv_plan`] resolves into
+/// `point.config`.
+fn plans_equivalent(a: &Plan, b: &Plan) -> bool {
+    match (a, b) {
+        (Plan::Gemm { point: pa, .. }, Plan::Gemm { point: pb, .. }) => {
+            pa == pb
+        }
+        (Plan::Conv { point: pa, .. }, Plan::Conv { point: pb, .. }) => {
+            pa == pb
+        }
+        _ => false,
+    }
 }
 
 fn build_plan(
@@ -350,6 +391,10 @@ fn build_plan(
     match meta.kind.as_str() {
         "gemm" => {
             let point = resolve_point::<GemmPoint>(meta, tuning, device)
+                .map(|(p, legacy)| GemmPoint {
+                    params: clamp_migrated_auto(p.params, legacy, meta.flops),
+                    ..p
+                })
                 .unwrap_or_else(|| fallback.gemm_point(meta))
                 // Plan-time safety: an ISA this host lacks (an off-host
                 // DB entry) degrades to the scalar micro-kernel, same
@@ -359,6 +404,10 @@ fn build_plan(
         }
         "conv" => {
             let point = resolve_point::<ConvPoint>(meta, tuning, device)
+                .map(|(p, legacy)| ConvPoint {
+                    blocked: clamp_migrated_auto(p.blocked, legacy, meta.flops),
+                    ..p
+                })
                 .unwrap_or_else(|| fallback.conv_point(meta));
             conv_plan(meta, point)
         }
@@ -497,6 +546,37 @@ impl NativeEngine {
         self.plans.clear();
     }
 
+    /// Install a new tuning snapshot *selectively*: every cached plan is
+    /// re-resolved under the incoming DB and only the entries whose
+    /// resolved point actually changed are dropped — the epoch-swap
+    /// contract.  An online re-tune that promotes one hot shape class
+    /// must not force a serving actor to re-plan its whole working set.
+    /// Returns the number of plans invalidated.
+    pub fn swap_tuning_selective(&mut self, next: Arc<SelectionDb>) -> usize {
+        let mut dropped: Vec<String> = Vec::new();
+        for (name, plan) in &self.plans {
+            let unchanged = match self.store.get(name) {
+                Ok(meta) => build_plan(
+                    meta,
+                    &self.fallback,
+                    Some(&next),
+                    &self.device,
+                )
+                .map(|fresh| plans_equivalent(plan, &fresh))
+                .unwrap_or(false),
+                Err(_) => false,
+            };
+            if !unchanged {
+                dropped.push(name.clone());
+            }
+        }
+        for name in &dropped {
+            self.plans.remove(name);
+        }
+        self.tuning = Some(next);
+        dropped.len()
+    }
+
     /// The fallback GEMM space point currently configured.
     pub fn gemm_point(&self) -> GemmPoint {
         self.fallback.gemm
@@ -623,6 +703,11 @@ impl Backend for NativeEngine {
         let outputs = self.execute(&plan, inputs);
         let elapsed = start.elapsed();
         Ok(RunOutput { outputs, elapsed })
+    }
+
+    fn swap_tuning(&mut self, db: Arc<SelectionDb>) -> bool {
+        self.swap_tuning_selective(db);
+        true
     }
 }
 
@@ -1244,5 +1329,126 @@ mod tests {
         );
         let msg = e.warm("gx").unwrap_err().to_string();
         assert!(msg.contains("missing m"), "got: {msg}");
+    }
+
+    /// Two GEMM artifacts in *different* problem classes, one under and
+    /// one over the small-problem cutoff.
+    const GEMM_SMALL_AND_BIG: &str = r#"[{
+        "name": "g8", "kind": "gemm", "impl": "pallas",
+        "file": "g8.hlo.txt", "flops": 1024,
+        "m": 8, "n": 8, "k": 8,
+        "inputs": [{"shape": [8, 8], "dtype": "float32"},
+                   {"shape": [8, 8], "dtype": "float32"}],
+        "groups": ["gemm"]},
+       {"name": "g256", "kind": "gemm", "impl": "pallas",
+        "file": "g256.hlo.txt", "flops": 33554432,
+        "m": 256, "n": 256, "k": 256,
+        "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                   {"shape": [256, 256], "dtype": "float32"}],
+        "groups": ["gemm"]}]"#;
+
+    #[test]
+    fn swap_tuning_invalidates_only_changed_plans() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let (_dir, mut e) = engine_with(GEMM_SMALL_AND_BIG);
+        e.warm("g8").unwrap();
+        e.warm("g256").unwrap();
+        assert_eq!(e.cached(), 2);
+
+        // A snapshot that promotes a new point only for g8's class.
+        let tuned =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
+        let mut next = SelectionDb::new();
+        next.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint::scalar(tuned),
+            9.0,
+        );
+        let dropped = e.swap_tuning_selective(Arc::new(next));
+        assert_eq!(dropped, 1, "only the promoted class re-plans");
+        assert_eq!(e.cached(), 1, "g256's plan must survive the swap");
+        assert_eq!(e.planned_params("g8").unwrap(), tuned);
+        // A second swap to an identical DB drops nothing.
+        let mut same = SelectionDb::new();
+        same.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint::scalar(tuned),
+            9.5,
+        );
+        let dropped = e.swap_tuning_selective(Arc::new(same));
+        assert_eq!(dropped, 0, "same selections, no invalidation");
+        assert_eq!(e.cached(), 2);
+    }
+
+    #[test]
+    fn swap_tuning_via_backend_trait_applies() {
+        use crate::tuner::SelectionDb;
+
+        let (_dir, mut e) = engine_with(GEMM_8);
+        let applied =
+            Backend::swap_tuning(&mut e, Arc::new(SelectionDb::new()));
+        assert!(applied, "the native engine consumes tuning snapshots");
+    }
+
+    #[test]
+    fn migrated_auto_threads_clamp_below_cutoff() {
+        use crate::tuner::SelectionDb;
+
+        // A pre-unification `blocked` entry written before the `threads`
+        // axis existed: the migration shim decodes absent threads as 0
+        // (auto).  Below the cutoff that must clamp to serial — the
+        // value was never measured, so it does not outrank the
+        // small-problem heuristic.
+        let dir = TempDir::new("legacy-clamp").unwrap();
+        let path = dir.path().join("old.json");
+        std::fs::write(
+            &path,
+            r#"{"host::gemm_64x64x64": {"kind": "blocked", "gflops": 5.0,
+                "config": {"bm": 8, "bn": 8, "bk": 8, "mr": 2, "nr": 2}},
+               "host::gemm_256x256x256": {"kind": "blocked", "gflops": 7.0,
+                "config": {"bm": 32, "bn": 32, "bk": 32, "mr": 4, "nr": 8}}}"#,
+        )
+        .unwrap();
+        let db = SelectionDb::load(&path).unwrap();
+        let (_dir2, plain) = engine_with(GEMM_SMALL_AND_BIG);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let small = e.planned_params("g8").unwrap();
+        assert_eq!(
+            small,
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 },
+            "migrated auto-threads under the cutoff clamps to serial"
+        );
+        // Above the cutoff the migrated auto stands — parallel is the
+        // right default for big problems.
+        let big = e.planned_params("g256").unwrap();
+        assert_eq!(
+            big,
+            BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8, threads: 0 },
+            "migrated auto-threads above the cutoff stays auto"
+        );
+    }
+
+    #[test]
+    fn tuned_auto_threads_is_not_clamped() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A *unified* gemm_point entry with threads: 0 was measured that
+        // way — the clamp applies to migration-filled defaults only.
+        let tuned =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 0 };
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint::scalar(tuned),
+            3.0,
+        );
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        assert_eq!(
+            e.planned_params("g8").unwrap().threads,
+            0,
+            "a measured auto-threads selection is honored verbatim"
+        );
     }
 }

@@ -378,6 +378,16 @@ impl SelectionDb {
         decode_stored::<P>(stored, &key.op).map(|p| (p, stored.gflops))
     }
 
+    /// The raw stored entry for a problem class, if any — kind string,
+    /// gflops and entry JSON included.  This is how plan-time consumers
+    /// distinguish a *migrated* legacy entry (kind in `P::LEGACY_KINDS`)
+    /// from a native one: migration shims fill absent knobs with
+    /// defaults (`threads: 0` = auto), and some defaults deserve
+    /// plan-time clamping that a deliberately tuned value does not.
+    pub fn stored(&self, key: &SelectionKey) -> Option<&StoredSelection> {
+        self.entries.get(&key.as_string())
+    }
+
     /// Legacy shim: store a modeled GEMM selection
     /// (= [`SelectionDb::put::<GemmConfig>`](SelectionDb::put)).
     pub fn put_gemm(&mut self, key: SelectionKey, config: GemmConfig, gflops: f64) {

@@ -140,6 +140,17 @@ pub fn selection_key_for(
     }
 }
 
+/// The device-independent problem-class label for an artifact — the
+/// `op` half of its [`SelectionKey`] (e.g. `gemm_128x128x128`,
+/// `conv_3x3s1_16x16x8k16b2`).  The serving layer buckets its
+/// per-request latency accounting under this label, so the hot classes
+/// a re-tune pass should probe line up exactly with the keys the
+/// selection DB stores winners under.  `None` for artifacts outside the
+/// tuned kinds.
+pub fn shape_class_for(meta: &ArtifactMeta) -> Option<String> {
+    selection_key_for(meta, "").map(|key| key.op)
+}
+
 /// Measure every artifact in `group` under every *applicable* grid point
 /// of space `P` and persist the per-problem winner into `db` under
 /// `P::KIND` — the one generic measure→persist loop behind every host
@@ -202,6 +213,7 @@ pub fn selection_key_for(
 /// let key = SelectionKey::gemm(HOST_DEVICE, 16, 16, 16);
 /// assert!(db.get::<GemmPoint>(&key).is_some(), "winner persisted");
 /// ```
+#[allow(clippy::too_many_arguments)]
 pub fn tune_space_sweep<B: Backend, P: KernelSpace>(
     engine: &mut B,
     group: &str,
@@ -211,8 +223,40 @@ pub fn tune_space_sweep<B: Backend, P: KernelSpace>(
     apply: &mut dyn FnMut(&mut B, &P),
     db: &mut SelectionDb,
 ) -> Result<SpaceSweep<P>> {
-    let metas: Vec<ArtifactMeta> =
-        engine.store().in_group(group).cloned().collect();
+    tune_space_sweep_filtered(
+        engine,
+        group,
+        grid,
+        iters,
+        device,
+        apply,
+        db,
+        &|_| true,
+    )
+}
+
+/// [`tune_space_sweep`] restricted to the artifacts `filter` accepts —
+/// the *targeted* probe shape the online re-tuner uses: instead of
+/// re-measuring the whole group, it probes only the artifacts the
+/// serving latency accounting marked hot, so a re-tune pass costs
+/// seconds, not a full offline sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn tune_space_sweep_filtered<B: Backend, P: KernelSpace>(
+    engine: &mut B,
+    group: &str,
+    grid: &[P],
+    iters: usize,
+    device: &str,
+    apply: &mut dyn FnMut(&mut B, &P),
+    db: &mut SelectionDb,
+    filter: &dyn Fn(&ArtifactMeta) -> bool,
+) -> Result<SpaceSweep<P>> {
+    let metas: Vec<ArtifactMeta> = engine
+        .store()
+        .in_group(group)
+        .filter(|m| filter(m))
+        .cloned()
+        .collect();
     let mut sweep = SpaceSweep::default();
     for meta in metas {
         let Some(key) = selection_key_for(&meta, device) else {

@@ -26,20 +26,32 @@
 //!   `conv_native` entries migrate on lookup, [`SelectionDb::merge`]
 //!   folds whole legacy DBs into the unified schema), the artifact the
 //!   coordinator and `NativeEngine` consult at request/plan time — and
-//!   which an engine pool shares read-only across all of its actors.
+//!   which an engine pool shares read-only across all of its actors;
+//! * online re-tuning ([`TuningHandle`] / [`retune_pass`] /
+//!   [`OnlineTuner`]) — the epoch-swappable serving loop: pool actors
+//!   plan from cheap [`TuningSnapshot`]s, a background tuner probes the
+//!   hot shape classes ([`tune_space_sweep_filtered`]) and publishes a
+//!   new epoch only for candidates that *measured* strictly faster than
+//!   the incumbent in a head-to-head verification probe — a promotion
+//!   never installs a worse-measured point.
 
 mod db;
 mod host;
 mod measured;
+mod online;
 mod search;
 
 pub use db::{MergeStats, Selection, SelectionDb, SelectionKey, StoredSelection};
 pub use host::{
     blocked_candidates, blocked_grid, conv_candidates, conv_native_grid,
-    gemm_point_grid, problem_for, selection_key_for, tune_blocked_sweep,
-    tune_conv_native_sweep, tune_space_sweep, BlockedSweep, ConvCandidate,
-    ConvNativeSweep, ConvSweepMeasurement, SpaceMeasurement, SpaceSweep,
-    SweepMeasurement,
+    gemm_point_grid, problem_for, selection_key_for, shape_class_for,
+    tune_blocked_sweep, tune_conv_native_sweep, tune_space_sweep,
+    tune_space_sweep_filtered, BlockedSweep, ConvCandidate, ConvNativeSweep,
+    ConvSweepMeasurement, SpaceMeasurement, SpaceSweep, SweepMeasurement,
+};
+pub use online::{
+    retune_native, retune_pass, OnlineTuner, Promotion, RetuneConfig,
+    RetunePass, TuningHandle, TuningSnapshot,
 };
 pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};
 pub use search::{

@@ -5,6 +5,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::error::{Error, Result};
+
 /// Statistics over a set of timed repetitions.
 #[derive(Debug, Clone)]
 pub struct BenchStats {
@@ -23,9 +25,41 @@ pub struct BenchStats {
 }
 
 impl BenchStats {
+    /// Build stats from raw timed repetitions.  An empty sample set is a
+    /// loud [`Error::Runtime`] — silently fabricating statistics (or
+    /// panicking on an `unwrap`) would let a broken measurement loop
+    /// masquerade as a result.
+    pub fn from_times(name: &str, mut times: Vec<Duration>) -> Result<Self> {
+        if times.is_empty() {
+            return Err(Error::Runtime(format!(
+                "bench {name:?}: no timed samples recorded — cannot form \
+                 statistics from an empty sample set"
+            )));
+        }
+        times.sort();
+        let sum: Duration = times.iter().sum();
+        Ok(BenchStats {
+            name: name.to_string(),
+            samples: times.len(),
+            min: times[0],
+            median: times[times.len() / 2],
+            mean: sum / times.len() as u32,
+            max: *times.last().expect("non-empty checked above"),
+        })
+    }
+
     /// Throughput in GFLOP/s given useful flops per iteration.
+    ///
+    /// A zero-duration minimum (possible on coarse clocks for tiny
+    /// kernels) reports 0.0 rather than dividing through to `inf` — an
+    /// infinite throughput would win every tuner argmax and poison any
+    /// selection DB it is persisted into.
     pub fn gflops(&self, flops: u64) -> f64 {
-        flops as f64 / self.min.as_secs_f64() / 1e9
+        let secs = self.min.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        flops as f64 / secs / 1e9
     }
 
     /// One-line rendering.
@@ -51,16 +85,8 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) ->
         f();
         times.push(t0.elapsed());
     }
-    times.sort();
-    let sum: Duration = times.iter().sum();
-    BenchStats {
-        name: name.to_string(),
-        samples: times.len(),
-        min: times[0],
-        median: times[times.len() / 2],
-        mean: sum / times.len() as u32,
-        max: *times.last().unwrap(),
-    }
+    BenchStats::from_times(name, times)
+        .expect("samples.max(1) guarantees at least one timed repetition")
 }
 
 /// Prevent the optimizer from discarding a value (std::hint::black_box
@@ -95,5 +121,45 @@ mod tests {
         };
         assert_eq!(s.gflops(2_000_000_000), 2.0);
         assert!(s.line(Some(1_000_000_000)).contains("GF/s"));
+    }
+
+    #[test]
+    fn gflops_zero_duration_is_zero_not_inf() {
+        let s = BenchStats {
+            name: "coarse-clock".into(),
+            samples: 3,
+            min: Duration::ZERO,
+            median: Duration::ZERO,
+            mean: Duration::ZERO,
+            max: Duration::from_nanos(1),
+        };
+        let g = s.gflops(1_000_000_000);
+        assert_eq!(g, 0.0, "zero-duration min must not divide to inf");
+        assert!(g.is_finite());
+    }
+
+    #[test]
+    fn from_times_empty_is_a_loud_error() {
+        let err = BenchStats::from_times("empty", Vec::new())
+            .err()
+            .expect("empty sample set must be an error, not a panic");
+        assert!(err.to_string().contains("no timed samples"), "got: {err}");
+    }
+
+    #[test]
+    fn from_times_sorts_and_aggregates() {
+        let s = BenchStats::from_times(
+            "sorted",
+            vec![
+                Duration::from_millis(3),
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+            ],
+        )
+        .unwrap();
+        assert_eq!(s.min, Duration::from_millis(1));
+        assert_eq!(s.median, Duration::from_millis(2));
+        assert_eq!(s.max, Duration::from_millis(3));
+        assert_eq!(s.samples, 3);
     }
 }

@@ -789,6 +789,281 @@ fn prop_batcher_invariants() {
     }
 }
 
+/// Epoch-swap consistency: concurrent readers of a [`TuningHandle`]
+/// never observe a torn snapshot (the epoch and the DB travel together)
+/// and never see time run backwards.  Each published DB carries a marker
+/// entry whose stored gflops equals its epoch, so a mismatch between a
+/// snapshot's epoch and its content is directly detectable.
+///
+/// [`TuningHandle`]: portable_kernels::tuner::TuningHandle
+#[test]
+fn prop_epoch_swap_readers_never_torn() {
+    use portable_kernels::runtime::HOST_DEVICE;
+    use portable_kernels::tuner::{SelectionDb, SelectionKey, TuningHandle};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let key = SelectionKey::gemm(HOST_DEVICE, 64, 64, 64);
+    let marker = |epoch: u64| {
+        let mut db = SelectionDb::new();
+        db.put(
+            key.clone(),
+            GemmPoint::scalar(BlockedParams::default()),
+            epoch as f64,
+        );
+        db
+    };
+    let handle = Arc::new(TuningHandle::new(marker(0)));
+    let done = Arc::new(AtomicBool::new(false));
+
+    std::thread::scope(|s| {
+        let readers: Vec<_> = (0..4)
+            .map(|_| {
+                let handle = Arc::clone(&handle);
+                let done = Arc::clone(&done);
+                let key = key.clone();
+                s.spawn(move || {
+                    let mut last = 0u64;
+                    let mut observed = 0usize;
+                    loop {
+                        let finishing = done.load(Ordering::Acquire);
+                        let snap = handle.snapshot();
+                        assert!(
+                            snap.epoch >= last,
+                            "epoch went backwards: {last} -> {}",
+                            snap.epoch
+                        );
+                        last = snap.epoch;
+                        let (_, gflops) = snap
+                            .db
+                            .get::<GemmPoint>(&key)
+                            .expect("marker entry exists in every epoch");
+                        assert_eq!(
+                            gflops, snap.epoch as f64,
+                            "torn snapshot: epoch {} carries the DB \
+                             published at epoch {gflops}",
+                            snap.epoch
+                        );
+                        observed += 1;
+                        if finishing {
+                            return observed;
+                        }
+                    }
+                })
+            })
+            .collect();
+
+        for epoch in 1..=50u64 {
+            let published = handle.publish(marker(epoch));
+            assert_eq!(published.epoch, epoch);
+        }
+        done.store(true, Ordering::Release);
+        for r in readers {
+            assert!(r.join().unwrap() > 0, "reader observed nothing");
+        }
+    });
+}
+
+/// Fabricated-cost backend for the promotion-invariant test: every run
+/// takes exactly `cost_ns(current point)` of "device time", so the
+/// measured-promotion protocol can be driven through orderings chosen
+/// by the test instead of wall-clock noise.
+struct CostModelBackend {
+    store: portable_kernels::runtime::ArtifactStore,
+    point: GemmPoint,
+    cost_ns: Box<dyn Fn(&GemmPoint) -> u64>,
+}
+
+impl portable_kernels::runtime::Backend for CostModelBackend {
+    fn platform(&self) -> String {
+        "cost-model".into()
+    }
+
+    fn store(&self) -> &portable_kernels::runtime::ArtifactStore {
+        &self.store
+    }
+
+    fn warm(&mut self, _name: &str) -> portable_kernels::Result<()> {
+        Ok(())
+    }
+
+    fn cached(&self) -> usize {
+        0
+    }
+
+    fn run(
+        &mut self,
+        _name: &str,
+        _inputs: &[Vec<f32>],
+    ) -> portable_kernels::Result<portable_kernels::runtime::RunOutput> {
+        Ok(portable_kernels::runtime::RunOutput {
+            outputs: vec![vec![0.0]],
+            elapsed: std::time::Duration::from_nanos((self.cost_ns)(
+                &self.point,
+            )),
+        })
+    }
+}
+
+/// Deterministic pseudo-cost jitter per point (FNV over the debug form),
+/// so grid points get distinct but reproducible costs.
+fn point_jitter(p: &GemmPoint, salt: u64, spread: u64) -> u64 {
+    let mut h = salt ^ 0xcbf2_9ce4_8422_2325;
+    for b in format!("{p:?}").bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h % spread.max(1)
+}
+
+/// The online-promotion invariant, driven by a fabricated cost model:
+/// a re-tune pass never installs a point that measured worse than the
+/// incumbent in its verification probe.  Both directions are exercised
+/// per random case: a genuinely slow incumbent is replaced (and every
+/// promotion records candidate > incumbent), while a fast incumbent
+/// whose *stored number* lies low — the situation serving drift creates
+/// — survives: the sweep nominates a challenger, the head-to-head
+/// verification rejects it, and the published DB is left untouched.
+#[test]
+fn prop_retune_never_promotes_worse_measured() {
+    use portable_kernels::runtime::{ArtifactStore, HOST_DEVICE};
+    use portable_kernels::tuner::{
+        retune_pass, RetuneConfig, SelectionDb, SelectionKey, TuningHandle,
+    };
+    use portable_kernels::util::tmp::TempDir;
+    use std::sync::Arc;
+
+    let dir = TempDir::new("prop-retune").unwrap();
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version": 1, "artifacts": [{
+            "name": "g96", "kind": "gemm", "impl": "pallas",
+            "file": "g96.hlo.txt", "flops": 1769472,
+            "m": 96, "n": 96, "k": 96,
+            "inputs": [{"shape": [96, 96], "dtype": "float32"},
+                       {"shape": [96, 96], "dtype": "float32"}],
+            "groups": ["gemm"]}]}"#,
+    )
+    .unwrap();
+    let store = ArtifactStore::open(dir.path()).unwrap();
+    let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+    let hot = vec![key.op.clone()];
+    let cfg = RetuneConfig { iters: 2, ..Default::default() };
+
+    let mut rng = XorShift::new(1111);
+    for case in 0..6 {
+        let base = rng.range(100_000, 1_000_000);
+        let spread = (base / 10).max(1);
+        // threads: 8 keeps the incumbent out of the probe grid (the
+        // config's threads axis is [1, 0]), so verification always has
+        // a real head-to-head to run.
+        let incumbent = GemmPoint::scalar(BlockedParams {
+            bm: 8,
+            bn: 8,
+            bk: 8,
+            mr: 2,
+            nr: 2,
+            threads: 8,
+        });
+
+        // Direction 1: the incumbent truly measures slow; some grid
+        // point must win its probe and be promoted.
+        let slow = base * rng.range(20, 100);
+        let mut seed = SelectionDb::new();
+        seed.put(key.clone(), incumbent, 0.01);
+        let handle = TuningHandle::new(seed);
+        let salt = rng.next_u64();
+        let mut engine = CostModelBackend {
+            store: store.clone(),
+            point: GemmPoint::scalar(BlockedParams::default()),
+            cost_ns: Box::new(move |p| {
+                if *p == incumbent {
+                    slow
+                } else {
+                    base + point_jitter(p, salt, spread)
+                }
+            }),
+        };
+        let pass = retune_pass(
+            &mut engine,
+            &handle,
+            &hot,
+            &cfg,
+            &mut |e, p| e.point = *p,
+            &mut |_, _| {},
+        )
+        .unwrap();
+        assert_eq!(pass.probed, 1, "case {case}: g96 probed: {pass:?}");
+        assert!(
+            !pass.promoted.is_empty(),
+            "case {case}: a slow incumbent must lose: {pass:?}"
+        );
+        for p in &pass.promoted {
+            assert!(
+                p.candidate_gflops.is_finite()
+                    && p.candidate_gflops > p.incumbent_gflops,
+                "case {case}: never-worse violated: {p:?}"
+            );
+        }
+        assert_eq!(pass.epoch, Some(1), "case {case}");
+        let (installed, gflops) = handle
+            .snapshot()
+            .db
+            .get::<GemmPoint>(&key)
+            .expect("promoted entry");
+        assert_ne!(installed, incumbent, "case {case}");
+        assert!(gflops.is_finite() && gflops > 0.0, "case {case}");
+
+        // Direction 2: the incumbent truly measures *fast*, but its
+        // stored number lies low, so the sweep nominates a challenger.
+        // The verification probe must reject it and leave the
+        // published DB untouched.
+        let fast = (base / rng.range(3, 10)).max(1);
+        let mut seed = SelectionDb::new();
+        seed.put(key.clone(), incumbent, 0.0001);
+        let handle = TuningHandle::new(seed);
+        let before = handle.snapshot();
+        let salt = rng.next_u64();
+        let mut engine = CostModelBackend {
+            store: store.clone(),
+            point: GemmPoint::scalar(BlockedParams::default()),
+            cost_ns: Box::new(move |p| {
+                if *p == incumbent {
+                    fast
+                } else {
+                    base + point_jitter(p, salt, spread)
+                }
+            }),
+        };
+        let pass = retune_pass(
+            &mut engine,
+            &handle,
+            &hot,
+            &cfg,
+            &mut |e, p| e.point = *p,
+            &mut |_, _| {},
+        )
+        .unwrap();
+        assert!(
+            pass.promoted.is_empty(),
+            "case {case}: a faster-measuring incumbent must survive: \
+             {pass:?}"
+        );
+        assert!(pass.rejected >= 1, "case {case}: {pass:?}");
+        assert_eq!(pass.epoch, None, "case {case}");
+        let after = handle.snapshot();
+        assert_eq!(after.epoch, 0, "case {case}: nothing published");
+        assert!(
+            Arc::ptr_eq(&before.db, &after.db),
+            "case {case}: rejected pass must not touch the published DB"
+        );
+        let (kept, kept_gflops) =
+            after.db.get::<GemmPoint>(&key).expect("incumbent kept");
+        assert_eq!(kept, incumbent, "case {case}");
+        assert_eq!(kept_gflops, 0.0001, "case {case}");
+    }
+}
+
 /// LayerSpec shape arithmetic: SAME output size matches the ceil-div
 /// definition for arbitrary layer shapes, and im2col GEMM dims are
 /// consistent with output size.
