@@ -4,8 +4,8 @@
 # manifest.json (requires JAX; the Rust NativeEngine also runs synthetic
 # manifests without it).
 
-.PHONY: artifacts test rust-test python-test tune tune-merge bench-smoke \
-	docs serve-smoke
+.PHONY: artifacts test rust-test python-test tune tune-exhaustive \
+	tune-merge bench-smoke docs serve-smoke
 
 artifacts:
 	cd python && python3 -m compile.aot --out ../artifacts --groups all
@@ -18,13 +18,22 @@ python-test:
 
 test: rust-test python-test
 
-# Measured per-host tuner sweep, quick grid — exactly what CI's
-# tune-smoke job runs.  Writes reports/tuning_host.json (the selection
-# DB NativeEngine consults at plan time) and reports/BENCH_ci.json
-# (tuned-vs-default GFLOP/s per problem).  Drop --quick for the full
+# Measured per-host tuner sweep, quick grid, model-guided search (the
+# default: --search guided --budget 8; see docs/TUNING.md "Search
+# strategies").  Writes reports/tuning_host.json (the selection DB
+# NativeEngine consults at plan time, each entry annotated with its
+# search provenance) and reports/BENCH_ci.json (tuned-vs-default
+# GFLOP/s and points_measured per problem).  Drop --quick for the full
 # grid (and the modeled device-zoo demo).
 tune:
 	cargo run --release --example tune_device -- --quick --out reports
+
+# The exhaustive ground-truth baseline CI's tune-smoke job compares the
+# guided search against (>= 10x fewer measured points at equal-or-better
+# tuned GFLOP/s).
+tune-exhaustive:
+	cargo run --release --example tune_device -- --quick \
+		--search exhaustive --out reports_ex
 
 # Exercise the selection-DB merge flag end to end: sweep once, then
 # sweep again folding the first run's DB back in (--merge migrates any

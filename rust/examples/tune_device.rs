@@ -7,34 +7,46 @@
 //!    analytic model and show the winning parameters differ per device —
 //!    the paper's core portability workflow.
 //! 2. **Measured**: the real per-host sweep, one generic loop per
-//!    kernel space (`tuner::tune_space_sweep`).  Enumerate the GEMM
-//!    space grid (`BlockedParams` × `threads` × runtime-detected
-//!    micro-kernel **ISA** — scalar/SSE2/AVX2/FMA on x86-64) and the
-//!    conv space grid (`ConvAlgorithm × ConvConfig × threads` — tiled
-//!    vs im2col vs winograd, the paper's §4.1 algorithm axis), execute
-//!    every applicable point through `NativeEngine` via
+//!    kernel space (`tuner::tune_space_sweep`), parameterized by a
+//!    `--search` strategy.  Enumerate the GEMM space grid
+//!    (`BlockedParams` × `threads` × runtime-detected micro-kernel
+//!    **ISA** — scalar/SSE2/AVX2/FMA on x86-64) and the conv space grid
+//!    (`ConvAlgorithm × ConvConfig × threads` — tiled vs im2col vs
+//!    winograd, the paper's §4.1 algorithm axis), let the strategy pick
+//!    which applicable points to execute through `NativeEngine` via
 //!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
 //!    and prove the engine consults it — including the chosen algorithm
 //!    and ISA — at plan time.
 //!
 //! ```sh
-//! cargo run --release --example tune_device              # full
+//! cargo run --release --example tune_device              # full, guided
 //! cargo run --release --example tune_device -- --quick   # CI smoke
 //! cargo run --release --example tune_device -- --quick --out reports
+//! cargo run --release --example tune_device -- --quick \
+//!     --search exhaustive       # measure the whole grid
+//! cargo run --release --example tune_device -- --quick \
+//!     --search guided --budget 4  # tight per-class probe budget
 //! cargo run --release --example tune_device -- --quick --out reports \
 //!     --merge old_reports/tuning_host.json   # fold a legacy DB in
 //! ```
 //!
-//! Outputs (measured half): `<out>/tuning_host.json` (the persisted
-//! selection DB, unified `gemm_point`/`conv_point` schema) and
-//! `<out>/BENCH_ci.json` (tuned-vs-default GFLOP/s per problem, with
-//! `algorithm` columns on conv rows and `isa` columns on GEMM rows).
-//! `--merge OLD.json` folds a previously written (possibly legacy
+//! `--search` picks the [`SearchStrategy`]: `guided` (default — the
+//! `perfmodel` cost hints rank the grid and only the top candidates
+//! plus the pinned default/incumbent are measured, capped at `--budget`
+//! points per shape class), `exhaustive` (measure every applicable
+//! point), or `hill` (seeded hill-climb).  Outputs (measured half):
+//! `<out>/tuning_host.json` (the persisted selection DB, unified
+//! `gemm_point`/`conv_point` schema, each entry annotated with `search`
+//! and `points_measured`) and `<out>/BENCH_ci.json` (tuned-vs-default
+//! GFLOP/s per problem with `points_measured` per problem, `algorithm`
+//! columns on conv rows and `isa` columns on GEMM rows, and the top
+//! level `search` column CI keys its guided-vs-exhaustive assertions
+//! on).  `--merge OLD.json` folds a previously written (possibly legacy
 //! `blocked`/`conv_native`) DB into the unified schema, keeping the
 //! faster entry per key.  Exits non-zero if the sweep produced no
-//! selections, a tuned config measured below the default, the algorithm
-//! axis collapsed, or the ISA axis collapsed on a host that supports
-//! more than scalar — the CI contract.
+//! selections, a tuned config measured below the default, or — under
+//! `--search exhaustive`, where full coverage is the contract — the
+//! algorithm or ISA axis collapsed.
 
 use std::path::{Path, PathBuf};
 
@@ -49,8 +61,8 @@ use portable_kernels::runtime::{
 };
 use portable_kernels::tuner::{
     conv_native_grid, gemm_point_grid, selection_key_for, tune_conv,
-    tune_gemm, tune_space_sweep, ExhaustiveSearch, HillClimb, SelectionDb,
-    SelectionKey, SpaceSweep,
+    tune_gemm, tune_space_sweep, ExhaustiveSearch, GuidedSearch, HillClimb,
+    SearchStrategy, SelectionDb, SelectionKey, SpaceSweep,
 };
 use portable_kernels::util::json::Value;
 use portable_kernels::util::tmp::TempDir;
@@ -59,6 +71,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut quick = false;
     let mut out_dir = PathBuf::from("reports");
     let mut merge_path: Option<PathBuf> = None;
+    let mut search = String::from("guided");
+    let mut budget = 8usize;
     let mut it = std::env::args().skip(1);
     while let Some(arg) = it.next() {
         match arg.as_str() {
@@ -73,10 +87,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     it.next().ok_or("--merge needs a DB path argument")?,
                 ));
             }
+            "--search" => {
+                search = it
+                    .next()
+                    .ok_or("--search needs exhaustive|guided|hill")?;
+            }
+            "--budget" => {
+                budget = it
+                    .next()
+                    .ok_or("--budget needs a point count")?
+                    .parse()
+                    .map_err(|e| format!("bad --budget: {e}"))?;
+            }
             other => {
                 return Err(format!(
                     "unknown argument {other:?}; \
                      usage: tune_device [--quick] [--out DIR] \
+                     [--search exhaustive|guided|hill] [--budget N] \
                      [--merge OLD.json]"
                 )
                 .into())
@@ -87,7 +114,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     if !quick {
         modeled_zoo()?;
     }
-    measured_host_sweep(quick, &out_dir, merge_path.as_deref())
+    measured_host_sweep(quick, &out_dir, merge_path.as_deref(), &search, budget)
 }
 
 /// The modeled half: the paper's device zoo through the analytic model.
@@ -115,7 +142,7 @@ fn modeled_zoo() -> Result<(), Box<dyn std::error::Error>> {
                 r.evaluated,
                 r.infeasible
             );
-            db.put_gemm(
+            db.put(
                 SelectionKey::gemm(dev_id, p.m, p.n, p.k),
                 r.config,
                 r.gflops,
@@ -126,11 +153,11 @@ fn modeled_zoo() -> Result<(), Box<dyn std::error::Error>> {
     // The portability claim, demonstrated: the tuned config for Mali
     // (cache-based, no local memory) differs from the R9 Nano's.
     let mali = db
-        .get_gemm(&SelectionKey::gemm("mali-g71", 1024, 1024, 1024))
+        .get::<GemmConfig>(&SelectionKey::gemm("mali-g71", 1024, 1024, 1024))
         .unwrap()
         .0;
     let amd = db
-        .get_gemm(&SelectionKey::gemm("r9-nano", 1024, 1024, 1024))
+        .get::<GemmConfig>(&SelectionKey::gemm("r9-nano", 1024, 1024, 1024))
         .unwrap()
         .0;
     println!(
@@ -255,16 +282,34 @@ fn sweep_store(
 
 /// The measured half: one generic sweep per kernel space (GEMM:
 /// `BlockedParams × threads × ISA`; conv: `ConvAlgorithm × ConvConfig ×
-/// threads`), persist, optionally fold a legacy DB in, and prove the
-/// engine consults the DB — algorithm and ISA included — at plan time.
+/// threads`) under the chosen strategy, persist, optionally fold a
+/// legacy DB in, and prove the engine consults the DB — algorithm and
+/// ISA included — at plan time.
 fn measured_host_sweep(
     quick: bool,
     out_dir: &Path,
     merge_path: Option<&Path>,
+    search: &str,
+    budget: usize,
 ) -> Result<(), Box<dyn std::error::Error>> {
     let mode = if quick { "quick" } else { "full" };
-    println!("== measured host sweep ({mode}) ==");
+    println!("== measured host sweep ({mode}, search={search}) ==");
     std::fs::create_dir_all(out_dir)?;
+
+    let strategy: Box<dyn SearchStrategy> = match search {
+        "exhaustive" => Box::new(ExhaustiveSearch),
+        "guided" => Box::new(GuidedSearch { budget }),
+        "hill" => Box::new(HillClimb { restarts: budget.max(1), seed: 42 }),
+        other => {
+            return Err(format!(
+                "unknown --search {other:?}; use exhaustive|guided|hill"
+            )
+            .into())
+        }
+    };
+    // Full coverage of every axis is only the contract when every point
+    // gets measured; budgeted strategies prune by design.
+    let exhaustive = search == "exhaustive";
 
     let (_tmp, store) = sweep_store(quick)?;
     let mut engine = NativeEngine::new(store)?;
@@ -277,11 +322,13 @@ fn measured_host_sweep(
     println!(
         "detected ISAs: {:?}; gemm grid: {} blocking x threads x isa \
          points; conv grid: {} algorithm x config x threads points; \
-         {} iters each",
+         {} iters each; search {} (budget {})",
         isas.iter().map(|i| i.as_str()).collect::<Vec<_>>(),
         grid.len(),
         conv_grid.len(),
-        iters
+        iters,
+        search,
+        budget
     );
 
     let mut db = SelectionDb::new();
@@ -291,14 +338,17 @@ fn measured_host_sweep(
         &grid,
         iters,
         HOST_DEVICE,
+        strategy.as_ref(),
         &mut |e, p| e.set_gemm_point(*p),
         &mut db,
     )?;
     for (op, (point, gflops)) in &gemm_sweep.winners {
         println!(
-            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s",
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s \
+             ({} points measured)",
             point.isa,
-            point.name()
+            point.name(),
+            gemm_sweep.points_measured_for(op)
         );
     }
     let conv_sweep: SpaceSweep<ConvPoint> = tune_space_sweep(
@@ -307,26 +357,32 @@ fn measured_host_sweep(
         &conv_grid,
         iters,
         HOST_DEVICE,
+        strategy.as_ref(),
         &mut |e, c| e.set_conv_point(*c),
         &mut db,
     )?;
     for (op, (cand, gflops)) in &conv_sweep.winners {
         println!(
-            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s",
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s \
+             ({} points measured)",
             cand.config.algorithm,
-            cand.name()
+            cand.name(),
+            conv_sweep.points_measured_for(op)
         );
     }
 
     if db.is_empty() {
         return Err("sweep produced an empty tuning DB".into());
     }
-    // The algorithm axis must actually have been swept: every 3x3/s1
-    // conv problem measures all three native algorithms.
+    // Under exhaustive search the algorithm axis must actually have been
+    // swept: every 3x3/s1 conv problem measures all three native
+    // algorithms.  (A budgeted strategy prunes by design, so the
+    // coverage contract only binds the exhaustive run — CI runs both and
+    // compares.)
     for op in conv_sweep.winners.keys() {
         let algs =
             conv_sweep.axis_values_for(op, |c| c.config.algorithm);
-        if op.starts_with("conv_3x3s1") {
+        if exhaustive && op.starts_with("conv_3x3s1") {
             for want in [
                 ConvAlgorithm::Im2col,
                 ConvAlgorithm::Tiled,
@@ -348,13 +404,15 @@ fn measured_host_sweep(
     let mut isas_swept: Vec<Isa> = Vec::new();
     for op in gemm_sweep.winners.keys() {
         let swept = gemm_sweep.axis_values_for(op, |p| p.isa);
-        for isa in &isas {
-            if !swept.contains(isa) {
-                return Err(format!(
-                    "{op}: ISA {isa} was never measured ({swept:?}) — \
-                     the ISA axis collapsed"
-                )
-                .into());
+        if exhaustive {
+            for isa in &isas {
+                if !swept.contains(isa) {
+                    return Err(format!(
+                        "{op}: ISA {isa} was never measured ({swept:?}) — \
+                         the ISA axis collapsed"
+                    )
+                    .into());
+                }
             }
         }
         println!("  {op}: measured ISAs {swept:?}");
@@ -364,7 +422,7 @@ fn measured_host_sweep(
             }
         }
     }
-    if isas.len() >= 2 && isas_swept.len() < 2 {
+    if exhaustive && isas.len() >= 2 && isas_swept.len() < 2 {
         return Err(format!(
             "host supports {isas:?} but the sweep measured only \
              {isas_swept:?} — the ISA axis collapsed"
@@ -435,47 +493,53 @@ fn measured_host_sweep(
                 println!("  plan({name}) consults DB -> {}", got.name());
             }
         }
-        if let Some((want_cfg, want_blocked, _)) =
-            loaded.get_conv_native(&key).filter(|_| meta.kind == "conv")
-        {
-            let got_cfg = tuned_engine
-                .planned_conv(name)?
-                .ok_or_else(|| format!("{name}: no conv plan"))?;
-            let got_blocked = tuned_engine.planned_params(name)?;
-            if got_cfg != want_cfg || got_blocked != want_blocked {
-                return Err(format!(
-                    "{name}: engine planned [{}] {} but the tuned \
-                     selection is [{}] {}",
+        if meta.kind == "conv" {
+            if let Some((want_point, _)) = loaded.get::<ConvPoint>(&key) {
+                let got_cfg = tuned_engine
+                    .planned_conv(name)?
+                    .ok_or_else(|| format!("{name}: no conv plan"))?;
+                let got_blocked = tuned_engine.planned_params(name)?;
+                if got_cfg != want_point.config
+                    || got_blocked != want_point.blocked
+                {
+                    return Err(format!(
+                        "{name}: engine planned [{}] {} but the tuned \
+                         selection is [{}] {}",
+                        got_cfg.algorithm,
+                        got_cfg.name(),
+                        want_point.config.algorithm,
+                        want_point.config.name()
+                    )
+                    .into());
+                }
+                println!(
+                    "  plan({name}) consults DB -> algorithm {} ({})",
                     got_cfg.algorithm,
-                    got_cfg.name(),
-                    want_cfg.algorithm,
-                    want_cfg.name()
-                )
-                .into());
+                    got_cfg.name()
+                );
             }
-            println!(
-                "  plan({name}) consults DB -> algorithm {} ({})",
-                got_cfg.algorithm,
-                got_cfg.name()
-            );
         }
     }
 
     // BENCH_ci.json: tuned vs default per problem.  The default points
-    // are always in the grids, so tuned >= default is an invariant of
-    // the argmax, not a flaky timing assertion.  Conv entries carry the
-    // chosen-algorithm column; GEMM entries the chosen-ISA column plus
-    // the best *scalar* point, so the ISA axis's payoff is archived per
-    // merge (tuned >= scalar-best is the same argmax invariant — the
-    // scalar points are grid members).
+    // are *pinned* into every strategy's proposals, so tuned >= default
+    // is an invariant of the argmax, not a flaky timing assertion.  Conv
+    // entries carry the chosen-algorithm column; GEMM entries the
+    // chosen-ISA column plus the best *measured scalar* point (tuned >=
+    // scalar-best is the same argmax invariant — the winner is the max
+    // over a superset of the measured scalar rows).  Every entry carries
+    // `points_measured` so CI can assert guided search's >=10x
+    // measured-point savings against the exhaustive baseline.
     let default = GemmPoint::default();
     let conv_default = ConvPoint::default();
     let mut problems = Value::object();
     let mut worst_ratio = f64::INFINITY;
+    let mut total_points = 0usize;
     let add_problem = |op: &str,
                            tuned_gf: f64,
                            default_gf: f64,
                            tuned_config: String,
+                           points_measured: usize,
                            algorithm: Option<&str>,
                            isa: Option<(&str, f64)>,
                            problems: &mut Value,
@@ -492,7 +556,8 @@ fn measured_host_sweep(
         entry
             .set("default_gflops", default_gf)
             .set("tuned_gflops", tuned_gf)
-            .set("tuned_config", tuned_config);
+            .set("tuned_config", tuned_config)
+            .set("points_measured", points_measured as u64);
         if let Some(alg) = algorithm {
             entry.set("algorithm", alg);
         }
@@ -517,8 +582,8 @@ fn measured_host_sweep(
     for (op, (point, tuned_gf)) in &gemm_sweep.winners {
         let default_gf =
             gemm_sweep.gflops_for(op, &default).unwrap_or(0.0);
-        // Best scalar grid point for this problem: the baseline the ISA
-        // axis is judged against.
+        // Best measured scalar point for this problem: the baseline the
+        // ISA axis is judged against.
         let scalar_gf = gemm_sweep
             .rows
             .iter()
@@ -534,11 +599,14 @@ fn measured_host_sweep(
                 point.isa, tuned_gf, scalar_gf
             );
         }
+        let points = gemm_sweep.points_measured_for(op);
+        total_points += points;
         add_problem(
             op,
             *tuned_gf,
             default_gf,
             point.name(),
+            points,
             None,
             Some((point.isa.as_str(), scalar_gf)),
             &mut problems,
@@ -548,11 +616,14 @@ fn measured_host_sweep(
     for (op, (cand, tuned_gf)) in &conv_sweep.winners {
         let default_gf =
             conv_sweep.gflops_for(op, &conv_default).unwrap_or(0.0);
+        let points = conv_sweep.points_measured_for(op);
+        total_points += points;
         add_problem(
             op,
             *tuned_gf,
             default_gf,
             cand.name(),
+            points,
             Some(cand.config.algorithm.as_str()),
             None,
             &mut problems,
@@ -569,8 +640,11 @@ fn measured_host_sweep(
         .set("platform", engine.platform())
         .set("device", HOST_DEVICE)
         .set("mode", mode)
+        .set("search", search)
+        .set("budget", budget as u64)
         .set("grid_points", grid.len())
         .set("conv_grid_points", conv_grid.len())
+        .set("points_measured", total_points as u64)
         .set("isas_detected", isa_strs(&isas))
         .set("isas_swept", isa_strs(&isas_swept))
         .set("iters", iters)
@@ -582,9 +656,12 @@ fn measured_host_sweep(
         println!("worst tuned/default speedup: {worst_ratio:.2}x");
     }
     println!(
-        "OK: all conv algorithms and all detected ISAs swept; tuned >= \
-         default (and >= the scalar winner) for every problem; DB (incl. \
-         algorithm + isa) consulted at plan time"
+        "OK [{search}]: {total_points} points measured across {} + {} \
+         grid points; tuned >= default (and >= the measured scalar \
+         winner) for every problem; DB (incl. algorithm + isa) \
+         consulted at plan time",
+        grid.len(),
+        conv_grid.len()
     );
     Ok(())
 }

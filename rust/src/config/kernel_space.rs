@@ -128,6 +128,21 @@ pub trait KernelSpace: Copy + PartialEq + std::fmt::Debug {
     fn report_columns(&self, entry: &mut Value) {
         let _ = entry;
     }
+
+    /// Model-predicted relative cost of this point on `problem` (lower
+    /// = predicted faster), or `None` when the space has no per-point
+    /// model — the hook `tuner::GuidedSearch` ranks candidates by
+    /// (through `tuner::ModelRanker`).  Two contracts keep guided
+    /// pruning conservative: axes the model does not cover (ISA,
+    /// `threads`) must not influence the value, so their variants tie
+    /// and are kept together; and `None` means worst-rank, never
+    /// dropped.  The measured host spaces answer through
+    /// `perfmodel::point_cost`; the default (the modeled zoo configs,
+    /// which are ranked by the full device model instead) is unmodeled.
+    fn rank_hint(&self, problem: &Problem) -> Option<f64> {
+        let _ = problem;
+        None
+    }
 }
 
 // ---- shared JSON codecs ----
@@ -332,6 +347,27 @@ impl KernelSpace for GemmPoint {
     fn report_columns(&self, entry: &mut Value) {
         entry.set("isa", self.isa.as_str());
     }
+
+    fn rank_hint(&self, problem: &Problem) -> Option<f64> {
+        // The ISA axis is deliberately not priced: variants of one
+        // blocking tie, so guided search keeps them all (conservative
+        // ranking of the axis the model cannot see).
+        match *problem {
+            Problem::Gemm { m, n, k } => Some(
+                crate::perfmodel::gemm_point_cost(&self.params, m, n, k),
+            ),
+            // Under a conv key this blocking means "im2col under these
+            // params" (the legacy blocked-sweep contract); the lowered
+            // GEMM dims are not among the Problem facts, so rank on the
+            // blocking quality at a representative cubic problem.
+            Problem::Conv { .. } => Some(crate::perfmodel::gemm_point_cost(
+                &self.params,
+                256,
+                256,
+                256,
+            )),
+        }
+    }
 }
 
 // ---- ConvPoint: the measured host convolution space ----
@@ -466,6 +502,23 @@ impl KernelSpace for ConvPoint {
 
     fn report_columns(&self, entry: &mut Value) {
         entry.set("algorithm", self.config.algorithm.as_str());
+    }
+
+    fn rank_hint(&self, problem: &Problem) -> Option<f64> {
+        // `threads` is deliberately not priced (ties — see the GemmPoint
+        // note); the algorithm + tile/vector knobs and the im2col
+        // blocking are.
+        match *problem {
+            Problem::Gemm { .. } => None,
+            Problem::Conv { window, stride } => {
+                Some(crate::perfmodel::conv_point_cost(
+                    &self.config,
+                    &self.blocked,
+                    window,
+                    stride,
+                ))
+            }
+        }
     }
 }
 
@@ -710,8 +763,8 @@ mod tests {
     fn legacy_kind_gating_is_keyed_on_the_problem_class() {
         // GEMM-space entries migrate into the conv space only under
         // conv problem classes; conv_native entries are conv-keyed by
-        // construction and always apply.  GemmPoint keeps the legacy
-        // get_blocked behavior of answering under both.
+        // construction and always apply.  GemmPoint keeps its historical
+        // contract of answering under both problem classes.
         for kind in ["blocked", "gemm_point"] {
             assert!(ConvPoint::legacy_kind_applies(kind, "conv_3x3s1_x"));
             assert!(!ConvPoint::legacy_kind_applies(kind, "gemm_64x64x64"));
@@ -719,6 +772,47 @@ mod tests {
         assert!(ConvPoint::legacy_kind_applies("conv_native", "conv_3x3s1_x"));
         assert!(GemmPoint::legacy_kind_applies("blocked", "gemm_64x64x64"));
         assert!(GemmPoint::legacy_kind_applies("blocked", "conv_3x3s1_x"));
+    }
+
+    #[test]
+    fn rank_hints_tie_across_unmodeled_axes() {
+        let gemm = Problem::Gemm { m: 128, n: 128, k: 128 };
+        let conv = Problem::Conv { window: 3, stride: 1 };
+
+        // ISA and threads never move a GemmPoint's predicted cost: the
+        // model cannot see those axes, so every variant of a blocking
+        // ties and guided search keeps them together.
+        let base = GemmPoint::default();
+        for isa in Isa::all() {
+            for threads in [0usize, 1, 8] {
+                let p = GemmPoint {
+                    params: BlockedParams { threads, ..base.params },
+                    isa,
+                };
+                assert_eq!(p.rank_hint(&gemm), base.rank_hint(&gemm));
+                assert_eq!(p.rank_hint(&conv), base.rank_hint(&conv));
+            }
+        }
+
+        // Same contract for ConvPoint's threads knob.
+        let cbase = ConvPoint::default();
+        let ct = ConvPoint {
+            blocked: BlockedParams { threads: 8, ..cbase.blocked },
+            ..cbase
+        };
+        assert_eq!(ct.rank_hint(&conv), cbase.rank_hint(&conv));
+
+        // Modeled axes do move it: a Winograd point is predicted
+        // cheaper than default im2col on its 3×3/s1 domain.
+        let wino = ConvPoint {
+            config: ConvConfig::winograd(2),
+            blocked: cbase.blocked,
+        };
+        assert!(wino.rank_hint(&conv).unwrap() < cbase.rank_hint(&conv).unwrap());
+
+        // The modeled zoo spaces have no per-point model: unranked.
+        assert!(GemmConfig::default().rank_hint(&gemm).is_none());
+        assert!(ConvConfig::default().rank_hint(&conv).is_none());
     }
 
     #[test]

@@ -22,8 +22,8 @@ use portable_kernels::harness::{
 use portable_kernels::perfmodel::GemmProblem;
 use portable_kernels::runtime::{ArtifactStore, DefaultEngine};
 use portable_kernels::tuner::{
-    tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,
-    SearchStrategy, SelectionDb, SelectionKey,
+    tune_conv, tune_gemm, ExhaustiveSearch, GuidedSearch, HillClimb,
+    RandomSearch, SearchStrategy, SelectionDb, SelectionKey,
 };
 
 /// CLI-level error: any library error or an ad-hoc message.
@@ -46,7 +46,7 @@ COMMANDS:
   figures [--id ID] [--csv]    regenerate a paper table/figure:
                                t1 t2 t3 t4 f2 f3 f4a f4b f4c f5 f6 f7 f8 f9 | all
   tune --device ID [--gemm MxNxK]... [--networks]
-       [--strategy exhaustive|random|hillclimb] [--db PATH]
+       [--strategy exhaustive|random|hillclimb|guided] [--db PATH]
                                tune kernels for a device, write selection DB
   network [--network vgg|resnet] [--impl xla|pallas] [--iters N]
           [--pool N] [--queue-depth D]
@@ -126,6 +126,7 @@ fn strategy_by_name(name: &str) -> CliResult<Box<dyn SearchStrategy>> {
         "exhaustive" => Ok(Box::new(ExhaustiveSearch)),
         "random" => Ok(Box::new(RandomSearch { samples: 64, seed: 42 })),
         "hillclimb" => Ok(Box::new(HillClimb { restarts: 8, seed: 42 })),
+        "guided" => Ok(Box::new(GuidedSearch { budget: 8 })),
         other => Err(cli(format!("unknown strategy {other:?}"))),
     }
 }
@@ -250,7 +251,7 @@ fn cmd_tune(args: &Args) -> CliResult<()> {
             r.evaluated,
             r.infeasible
         );
-        db.put_gemm(SelectionKey::gemm(device, m, n, k), r.config, r.gflops);
+        db.put(SelectionKey::gemm(device, m, n, k), r.config, r.gflops);
     }
 
     if args.has("networks") {
@@ -265,7 +266,7 @@ fn cmd_tune(args: &Args) -> CliResult<()> {
                     r.config.name(),
                     r.gflops
                 );
-                db.put_conv(
+                db.put(
                     SelectionKey::conv(
                         device,
                         layer.window,

@@ -24,6 +24,7 @@ pub mod conv_model;
 pub mod gemm_model;
 pub mod memory;
 pub mod occupancy;
+pub mod point_cost;
 pub mod registers;
 pub mod reuse;
 pub mod vendor;
@@ -31,6 +32,7 @@ pub mod vendor;
 pub use conv_model::{conv_estimate, ConvProblem};
 pub use gemm_model::{gemm_estimate, GemmProblem};
 pub use occupancy::{occupancy, Occupancy};
+pub use point_cost::{conv_point_cost, gemm_point_cost};
 pub use registers::{conv_regs, gemm_regs};
 pub use vendor::{vendor_conv, vendor_gemm, VendorLib};
 

@@ -1,0 +1,231 @@
+//! Per-point cost queries for the *measured* host spaces — the model
+//! half of guided search.
+//!
+//! The zoo models ([`super::gemm_model`] / [`super::conv_model`])
+//! predict absolute throughput for a `DeviceSpec`; these functions
+//! answer the much weaker question guided search actually needs:
+//! *relative* cost of one measured-space point against another on the
+//! executing host, from the same first-principles ingredients — Eq. 3
+//! register-tile reuse ([`super::reuse::register_tile_reuse`]), blocked
+//! global traffic ([`super::reuse::gemm_global_traffic`]), halo-tile
+//! input reuse, and the Fig. 2 register-pressure estimate.  Lower is
+//! predicted-faster; only the *ordering* matters, so the unit is an
+//! arbitrary "cost per useful flop".
+//!
+//! Axes the model knows nothing about — the micro-kernel ISA and the
+//! `threads` knob — are deliberately absent from both functions: points
+//! differing only along an unmodeled axis cost exactly the same, so
+//! `GuidedSearch`'s stable ranking keeps every variant of a promising
+//! blocking together instead of pruning the axis it cannot see.
+
+use crate::blas::BlockedParams;
+use crate::config::{ConvAlgorithm, ConvConfig};
+
+use super::registers::{conv_regs, ADDRESS_REGS};
+use super::reuse::{gemm_global_traffic, register_tile_reuse};
+
+/// Relative weight of one global-memory byte against one issued load,
+/// per useful flop (host caches hide most traffic; ordering is all that
+/// matters).
+const MEM_WEIGHT: f64 = 4.0;
+
+/// L1 working-set budget (bytes) for the packed `bm×bk` + `bk×bn`
+/// panels; blockings whose panels spill it pay proportionally.
+const L1_PANEL_BYTES: f64 = 32.0 * 1024.0;
+
+/// Scalar f32 registers the host micro-kernel can keep live before the
+/// compiler starts spilling accumulators (16 visible SIMD registers of
+/// 4+ lanes, minus addressing overhead).
+const SPILL_REGS: f64 = 64.0;
+
+/// Issue cost of one redundant input fetch relative to one MAC in the
+/// direct-conv kernels.
+const CONV_LOAD_COST: f64 = 0.5;
+
+/// Winograd F(2×2, 3×3) multiplication ratio: 16 transformed products
+/// replace the 36 direct MACs of a 2×2 output tile.
+const WINO_MUL_RATIO: f64 = 16.0 / 36.0;
+
+/// Winograd input/output transform overhead, as a fraction of the
+/// direct MAC count it eliminates.
+const WINO_TRANSFORM_COST: f64 = 0.25;
+
+/// im2col patch-matrix materialization: every input element is written
+/// once and re-read once through the patch matrix.
+const IM2COL_PATCH_COST: f64 = 2.0;
+
+/// Predicted relative cost per useful flop of running an `m×n×k` GEMM
+/// under `p` on the host: the Eq. 3 issue term (loads per flop of the
+/// `mr×nr` register tile), a register-spill penalty above the host's
+/// accumulator budget, and the blocked global-traffic term with an L1
+/// panel-fit penalty.  Lower is predicted-faster.  `threads` (and the
+/// ISA, which is not part of `BlockedParams`) do not contribute — see
+/// the module docs.
+pub fn gemm_point_cost(p: &BlockedParams, m: u64, n: u64, k: u64) -> f64 {
+    let flops = 2.0 * (m as f64) * (n as f64) * (k as f64);
+    // Eq. 3: loads per flop of the register micro-tile.
+    let issue = 1.0 / register_tile_reuse(p.mr as u32, p.nr as u32);
+    // Fig. 2-style register estimate: accumulators + the rank-1 update
+    // operands + addressing.
+    let regs =
+        (p.mr * p.nr + p.mr + p.nr) as f64 + ADDRESS_REGS as f64;
+    let spill = (regs / SPILL_REGS).max(1.0);
+    // Blocked DRAM traffic, bytes per flop, with an L1 panel-fit
+    // penalty for `bk` panels that outgrow the cache.
+    let traffic = gemm_global_traffic(
+        m,
+        n,
+        k,
+        p.bm as u64,
+        p.bn as u64,
+    ) as f64
+        * 4.0;
+    let panel = ((p.bm * p.bk + p.bk * p.bn) * 4) as f64;
+    let l1 = (panel / L1_PANEL_BYTES).max(1.0);
+    issue * spill + MEM_WEIGHT * l1 * traffic / flops
+}
+
+/// Predicted relative cost per output element (in direct-MAC units) of
+/// running a `window`/`stride` convolution under algorithm `config`
+/// with im2col blocking `blocked`.  Covers all three §4.1 families:
+///
+/// * **tiled direct** — the full `window²` MACs plus redundant halo
+///   fetches per output (shrinking with the tile area) and the Fig. 2
+///   register-pressure penalty;
+/// * **winograd** — the F(2×2, 3×3) multiplication reduction plus
+///   transform overhead;
+/// * **im2col** — the full MACs plus patch materialization traffic,
+///   with the lowered GEMM's Eq. 3 issue term so a good blocking ranks
+///   ahead of a bad one.
+///
+/// Callers pass only points that would actually run their own algorithm
+/// on this shape ([`crate::config::KernelSpace::applicable`] filters
+/// the rest), so no fallback modeling is needed here.  `threads` is
+/// deliberately unmodeled (ties).
+pub fn conv_point_cost(
+    config: &ConvConfig,
+    blocked: &BlockedParams,
+    window: u32,
+    stride: u32,
+) -> f64 {
+    let w = window as f64;
+    let s = stride as f64;
+    let macs = w * w; // direct MACs per output element, per channel
+    match config.algorithm {
+        ConvAlgorithm::Winograd => {
+            macs * (WINO_MUL_RATIO + WINO_TRANSFORM_COST)
+        }
+        ConvAlgorithm::Naive | ConvAlgorithm::Tiled => {
+            let th = config.tile_h.max(1) as f64;
+            let tw = config.tile_w.max(1) as f64;
+            // Halo patch fetched per tile, amortized per output.
+            let patch = ((th - 1.0) * s + w) * ((tw - 1.0) * s + w);
+            let fetch = patch / (th * tw);
+            let regs = conv_regs(config, window) as f64;
+            let spill = (regs / SPILL_REGS).max(1.0);
+            (macs + CONV_LOAD_COST * fetch) * spill
+        }
+        ConvAlgorithm::Im2col => {
+            let issue =
+                1.0 / register_tile_reuse(blocked.mr as u32, blocked.nr as u32);
+            macs * (1.0 + issue) + CONV_LOAD_COST * IM2COL_PATCH_COST
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_cost_prefers_square_register_tiles() {
+        // Eq. 3: at a fixed register count, square micro-tiles reuse
+        // best, so they must rank cheaper.
+        let base = BlockedParams::default();
+        let square = BlockedParams { mr: 4, nr: 4, ..base };
+        let skinny = BlockedParams { mr: 16, nr: 1, ..base };
+        assert!(
+            gemm_point_cost(&square, 256, 256, 256)
+                < gemm_point_cost(&skinny, 256, 256, 256)
+        );
+    }
+
+    #[test]
+    fn gemm_cost_prefers_bigger_macro_tiles_until_l1_spills() {
+        // Bigger bm×bn cuts panel re-reads (less DRAM traffic)...
+        let tiny = BlockedParams { bm: 8, bn: 8, ..BlockedParams::default() };
+        let mid = BlockedParams { bm: 64, bn: 64, ..BlockedParams::default() };
+        assert!(
+            gemm_point_cost(&mid, 512, 512, 512)
+                < gemm_point_cost(&tiny, 512, 512, 512)
+        );
+        // ...but a bk panel far beyond L1 pays the spill penalty.
+        let spilled = BlockedParams { bk: 4096, ..mid };
+        assert!(
+            gemm_point_cost(&mid, 512, 512, 512)
+                < gemm_point_cost(&spilled, 512, 512, 512)
+        );
+    }
+
+    #[test]
+    fn gemm_cost_ignores_threads() {
+        // The threads knob is unmodeled: variants must tie exactly so
+        // guided search keeps them together (conservative ranking).
+        let a = BlockedParams { threads: 1, ..BlockedParams::default() };
+        let b = BlockedParams { threads: 8, ..BlockedParams::default() };
+        assert_eq!(
+            gemm_point_cost(&a, 128, 128, 128),
+            gemm_point_cost(&b, 128, 128, 128)
+        );
+    }
+
+    #[test]
+    fn conv_cost_ranks_winograd_cheapest_on_its_domain() {
+        // On 3×3/s1 the F(2×2) reduction beats both direct and im2col.
+        let blocked = BlockedParams::default();
+        let wino = conv_point_cost(&ConvConfig::winograd(2), &blocked, 3, 1);
+        let tiled = conv_point_cost(
+            &ConvConfig::tiled(2, 2, 1, 4),
+            &blocked,
+            3,
+            1,
+        );
+        let im2col =
+            conv_point_cost(&ConvConfig::im2col(), &blocked, 3, 1);
+        assert!(wino < tiled, "{wino} !< {tiled}");
+        assert!(wino < im2col, "{wino} !< {im2col}");
+    }
+
+    #[test]
+    fn conv_cost_tiling_amortizes_the_halo() {
+        // A 2×2 output tile re-fetches less halo per output than 1×1 at
+        // equal register pressure class.
+        let blocked = BlockedParams::default();
+        let t11 = conv_point_cost(
+            &ConvConfig::tiled(1, 1, 1, 1),
+            &blocked,
+            3,
+            1,
+        );
+        let t22 = conv_point_cost(
+            &ConvConfig::tiled(2, 2, 1, 1),
+            &blocked,
+            3,
+            1,
+        );
+        assert!(t22 < t11, "{t22} !< {t11}");
+    }
+
+    #[test]
+    fn conv_im2col_cost_tracks_the_gemm_blocking() {
+        // im2col's cost must reflect the lowered GEMM's register-tile
+        // quality so guided search ranks good blockings first.
+        let good = BlockedParams::default(); // 4x8 micro-tile
+        let bad = BlockedParams { mr: 1, nr: 1, ..good };
+        let cfg = ConvConfig::im2col();
+        assert!(
+            conv_point_cost(&cfg, &good, 3, 1)
+                < conv_point_cost(&cfg, &bad, 3, 1)
+        );
+    }
+}

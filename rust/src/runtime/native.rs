@@ -57,7 +57,7 @@ use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta};
 use super::backend::{check_inputs, Backend, RunOutput};
 
 /// The device string host selections are keyed under in the tuning DB.
-/// The sweep (`tuner::tune_blocked_sweep`) and the engine's plan-time
+/// The sweep (`tuner::tune_space_sweep`) and the engine's plan-time
 /// lookup must agree on it, or tuned entries are never found.
 pub const HOST_DEVICE: &str = "host";
 
@@ -934,7 +934,11 @@ mod tests {
         let tuned =
             BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
         let mut db = SelectionDb::new();
-        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 9.0);
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            crate::config::GemmPoint::scalar(tuned),
+            9.0,
+        );
         let (_dir, plain) = engine_with(GEMM_8);
         let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
         assert_eq!(
@@ -960,7 +964,11 @@ mod tests {
         let tuned =
             BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
         let mut db = SelectionDb::new();
-        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 9.0);
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            crate::config::GemmPoint::scalar(tuned),
+            9.0,
+        );
         let shared = Arc::new(db);
         let (_dir, plain) = engine_with(GEMM_8);
         let mut a = NativeEngine::with_shared_tuning(
@@ -984,9 +992,11 @@ mod tests {
         // g8 is tiny (1024 flops), so the fallback is the default params
         // shaped by the small-problem heuristic: serial threads.
         let mut db = SelectionDb::new();
-        db.put_blocked(
+        db.put(
             SelectionKey::gemm(HOST_DEVICE, 512, 512, 512),
-            BlockedParams { bm: 128, bn: 128, bk: 64, mr: 8, nr: 16, threads: 4 },
+            crate::config::GemmPoint::scalar(BlockedParams {
+                bm: 128, bn: 128, bk: 64, mr: 8, nr: 16, threads: 4,
+            }),
             20.0,
         );
         let (_dir, plain) = engine_with(GEMM_8);
@@ -1072,7 +1082,11 @@ mod tests {
         let tuned =
             BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 4 };
         let mut db = SelectionDb::new();
-        db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 8, 8, 8), tuned, 2.0);
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            crate::config::GemmPoint::scalar(tuned),
+            2.0,
+        );
         let (_dir, plain) = engine_with(GEMM_8);
         let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
         assert_eq!(e.planned_params("g8").unwrap(), tuned);
@@ -1099,10 +1113,9 @@ mod tests {
         let blocked =
             BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
         let mut db = SelectionDb::new();
-        db.put_conv_native(
+        db.put(
             SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
-            winner,
-            blocked,
+            crate::config::ConvPoint { config: winner, blocked },
             4.0,
         );
         let (_dir, plain) = engine_with(CONV_3X3);
@@ -1132,9 +1145,9 @@ mod tests {
         let params =
             BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 2 };
         let mut db = SelectionDb::new();
-        db.put_blocked(
+        db.put(
             SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
-            params,
+            crate::config::GemmPoint::scalar(params),
             3.0,
         );
         let (_dir, plain) = engine_with(CONV_3X3);
@@ -1165,10 +1178,12 @@ mod tests {
             "groups": ["conv"]}]"#,
         );
         let mut db = SelectionDb::new();
-        db.put_conv_native(
+        db.put(
             SelectionKey::conv(HOST_DEVICE, 3, 2, 8, 8, 2, 4, 1),
-            ConvConfig::winograd(2),
-            BlockedParams::default(),
+            crate::config::ConvPoint {
+                config: ConvConfig::winograd(2),
+                blocked: BlockedParams::default(),
+            },
             1.0,
         );
         let mut e = NativeEngine::with_tuning(plain.store.clone(), db);

@@ -15,11 +15,15 @@
 //! lookup, or explicitly via [`SelectionDb::merge`].  Loading rejects
 //! corrupt entries, unknown kinds, and duplicate keys whose occurrences
 //! carry conflicting kinds (previously a silent last-write-wins).
+//!
+//! Entries additionally carry *search provenance* — which
+//! [`SearchStrategy`](crate::tuner::SearchStrategy) picked the winner
+//! and how many points it measured ([`SelectionDb::annotate_search`]) —
+//! so reports can show the measured-point savings of guided tuning.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::blas::BlockedParams;
 use crate::config::{ConvConfig, ConvPoint, GemmConfig, GemmPoint, KernelSpace};
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
@@ -108,65 +112,10 @@ impl StoredSelection {
     }
 
     /// The full JSON entry as serialized (kind, point, name, report
-    /// columns, gflops).
+    /// columns, gflops, and — when a sweep recorded it — the `search` /
+    /// `points_measured` provenance columns).
     pub fn entry(&self) -> &Value {
         &self.entry
-    }
-
-    /// Decode into the legacy [`Selection`] view, if this entry maps to
-    /// one.  `gemm_point` entries appear as [`Selection::Blocked`] (the
-    /// legacy view has no ISA axis) and `conv_point` entries as
-    /// [`Selection::ConvNative`] — the enum is a read-only migration
-    /// shim, not the storage.
-    pub fn legacy_view(&self) -> Option<Selection> {
-        let g = self.gflops;
-        match self.kind.as_str() {
-            k if k == <GemmConfig as KernelSpace>::KIND => {
-                let config = GemmConfig::from_json(
-                    self.entry.get(<GemmConfig as KernelSpace>::POINT_FIELD)?,
-                )
-                .ok()?;
-                Some(Selection::Gemm { config, gflops: g })
-            }
-            k if k == <ConvConfig as KernelSpace>::KIND => {
-                let config = ConvConfig::from_json(
-                    self.entry.get(<ConvConfig as KernelSpace>::POINT_FIELD)?,
-                )
-                .ok()?;
-                Some(Selection::Conv { config, gflops: g })
-            }
-            k if k == GemmPoint::KIND => {
-                let p =
-                    GemmPoint::from_json(self.entry.get(GemmPoint::POINT_FIELD)?)
-                        .ok()?;
-                Some(Selection::Blocked { params: p.params, gflops: g })
-            }
-            "blocked" => {
-                let p =
-                    GemmPoint::from_legacy_json("blocked", &self.entry).ok()?;
-                Some(Selection::Blocked { params: p.params, gflops: g })
-            }
-            k if k == ConvPoint::KIND => {
-                let p =
-                    ConvPoint::from_json(self.entry.get(ConvPoint::POINT_FIELD)?)
-                        .ok()?;
-                Some(Selection::ConvNative {
-                    config: p.config,
-                    blocked: p.blocked,
-                    gflops: g,
-                })
-            }
-            "conv_native" => {
-                let p = ConvPoint::from_legacy_json("conv_native", &self.entry)
-                    .ok()?;
-                Some(Selection::ConvNative {
-                    config: p.config,
-                    blocked: p.blocked,
-                    gflops: g,
-                })
-            }
-            _ => None,
-        }
     }
 }
 
@@ -189,47 +138,6 @@ fn decode_stored<P: KernelSpace>(s: &StoredSelection, op: &str) -> Option<P> {
     } else {
         None
     }
-}
-
-/// The legacy typed view of one stored selection — kept as a read-only
-/// migration shim over the generic [`KernelSpace`] storage (deprecated
-/// as a storage format; new code reads points with
-/// [`SelectionDb::get`]).
-#[derive(Debug, Clone)]
-pub enum Selection {
-    /// A modeled device-zoo GEMM selection.
-    Gemm {
-        /// Winning kernel configuration.
-        config: GemmConfig,
-        /// Its modeled throughput, GFLOP/s.
-        gflops: f64,
-    },
-    /// A modeled device-zoo convolution selection.
-    Conv {
-        /// Winning kernel configuration.
-        config: ConvConfig,
-        /// Its modeled throughput, GFLOP/s.
-        gflops: f64,
-    },
-    /// A measured host GEMM selection (the ISA axis, if the entry has
-    /// one, is not visible in this legacy view — use
-    /// [`SelectionDb::get::<GemmPoint>`](SelectionDb::get)).
-    Blocked {
-        /// Winning blocking parameters (including `threads`).
-        params: BlockedParams,
-        /// Its measured throughput, GFLOP/s.
-        gflops: f64,
-    },
-    /// A measured native convolution selection: algorithm + knobs +
-    /// blocking.
-    ConvNative {
-        /// Winning algorithm + tile/vector configuration.
-        config: ConvConfig,
-        /// Winning GEMM blocking (im2col path) and `threads`.
-        blocked: BlockedParams,
-        /// Its measured throughput, GFLOP/s.
-        gflops: f64,
-    },
 }
 
 /// What [`SelectionDb::merge`] did, per entry class.
@@ -274,12 +182,12 @@ fn render_entry<P: KernelSpace>(point: &P, gflops: f64) -> StoredSelection {
 /// Validate a parsed entry at load time through the same decoders the
 /// lookups use, so anything that loads is guaranteed to decode later.
 ///
-/// NOTE: this kind→decoder mapping exists in three places that must
-/// stay in sync when a space is added — here, in
-/// [`StoredSelection::legacy_view`], and in each space's
+/// NOTE: this kind→decoder mapping exists in two places that must
+/// stay in sync when a space is added — here and in each space's
 /// `KIND`/`LEGACY_KINDS` — all driven by the same four `KernelSpace`
 /// impls, so drift shows up as a loud "bad kind" load error rather
-/// than silent misdecoding.
+/// than silent misdecoding.  Extra top-level fields (e.g. the search
+/// provenance columns) are tolerated and round-trip verbatim.
 fn validate_entry(key: &str, kind: &str, entry: &Value) -> Result<()> {
     let point = |field: &str| -> Result<&Value> {
         entry.get(field).ok_or_else(|| {
@@ -388,70 +296,25 @@ impl SelectionDb {
         self.entries.get(&key.as_string())
     }
 
-    /// Legacy shim: store a modeled GEMM selection
-    /// (= [`SelectionDb::put::<GemmConfig>`](SelectionDb::put)).
-    pub fn put_gemm(&mut self, key: SelectionKey, config: GemmConfig, gflops: f64) {
-        self.put(key, config, gflops);
-    }
-
-    /// Legacy shim: store a modeled convolution selection
-    /// (= [`SelectionDb::put::<ConvConfig>`](SelectionDb::put)).
-    pub fn put_conv(&mut self, key: SelectionKey, config: ConvConfig, gflops: f64) {
-        self.put(key, config, gflops);
-    }
-
-    /// Legacy shim: look up a modeled GEMM selection.
-    pub fn get_gemm(&self, key: &SelectionKey) -> Option<(GemmConfig, f64)> {
-        self.get::<GemmConfig>(key)
-    }
-
-    /// Legacy shim: look up a modeled convolution selection.
-    pub fn get_conv(&self, key: &SelectionKey) -> Option<(ConvConfig, f64)> {
-        self.get::<ConvConfig>(key)
-    }
-
-    /// Legacy shim: store a measured host blocking selection.  Writes a
-    /// unified `gemm_point` entry with `isa: scalar` — exactly what the
-    /// old `blocked` entry meant.
-    pub fn put_blocked(
+    /// Stamp search provenance onto the stored entry for `key`: which
+    /// strategy picked the winner (`search`) and how many grid points it
+    /// actually measured for the class (`points_measured`).  No-op when
+    /// the key has no entry.  The columns ride along as extra top-level
+    /// fields — decoders ignore them, [`SelectionDb::save`] writes them
+    /// verbatim, and reports read them to show the guided-vs-exhaustive
+    /// measured-point savings.
+    pub fn annotate_search(
         &mut self,
-        key: SelectionKey,
-        params: BlockedParams,
-        gflops: f64,
-    ) {
-        self.put(key, GemmPoint::scalar(params), gflops);
-    }
-
-    /// Legacy shim: look up a measured host blocking selection (the
-    /// blocking half of the stored [`GemmPoint`]; legacy `blocked`
-    /// entries migrate transparently).
-    pub fn get_blocked(
-        &self,
         key: &SelectionKey,
-    ) -> Option<(BlockedParams, f64)> {
-        self.get::<GemmPoint>(key).map(|(p, g)| (p.params, g))
-    }
-
-    /// Legacy shim: store a measured native conv selection.  Writes a
-    /// unified `conv_point` entry.
-    pub fn put_conv_native(
-        &mut self,
-        key: SelectionKey,
-        config: ConvConfig,
-        blocked: BlockedParams,
-        gflops: f64,
+        search: &str,
+        points_measured: usize,
     ) {
-        self.put(key, ConvPoint { config, blocked }, gflops);
-    }
-
-    /// Legacy shim: look up a measured native conv selection (legacy
-    /// `conv_native` / pre-algorithm `blocked` entries migrate
-    /// transparently).
-    pub fn get_conv_native(
-        &self,
-        key: &SelectionKey,
-    ) -> Option<(ConvConfig, BlockedParams, f64)> {
-        self.get::<ConvPoint>(key).map(|(p, g)| (p.config, p.blocked, g))
+        if let Some(stored) = self.entries.get_mut(&key.as_string()) {
+            stored
+                .entry
+                .set("search", search)
+                .set("points_measured", points_measured as u64);
+        }
     }
 
     /// Number of stored selections.
@@ -464,8 +327,9 @@ impl SelectionDb {
         self.entries.is_empty()
     }
 
-    /// Iterate all entries in stored form (for reports; use
-    /// [`StoredSelection::legacy_view`] for the typed legacy view).
+    /// Iterate all entries in stored form, keyed `device::op` (for
+    /// reports and warm-start scans; decode a specific space's point
+    /// with [`SelectionDb::get`]).
     pub fn iter(&self) -> impl Iterator<Item = (&String, &StoredSelection)> {
         self.entries.iter()
     }
@@ -616,7 +480,7 @@ fn normalize_for_merge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::blas::Isa;
+    use crate::blas::{BlockedParams, Isa};
     use crate::config::ConvAlgorithm;
     use crate::util::tmp::TempDir;
 
@@ -642,12 +506,12 @@ mod tests {
     #[test]
     fn roundtrip_via_disk() {
         let mut db = SelectionDb::new();
-        db.put_gemm(
+        db.put(
             SelectionKey::gemm("mali-g71", 512, 512, 512),
             GemmConfig::parse("8x4_4x8_noloc").unwrap(),
             42.0,
         );
-        db.put_conv(
+        db.put(
             SelectionKey::conv("mali-g71", 3, 1, 56, 56, 64, 64, 1),
             ConvConfig::tiled(4, 4, 4, 2),
             33.0,
@@ -658,12 +522,14 @@ mod tests {
         let loaded = SelectionDb::load(&path).unwrap();
         assert_eq!(loaded.len(), 2);
         let (cfg, g) = loaded
-            .get_gemm(&SelectionKey::gemm("mali-g71", 512, 512, 512))
+            .get::<GemmConfig>(&SelectionKey::gemm("mali-g71", 512, 512, 512))
             .unwrap();
         assert_eq!(cfg.name(), "8x4_4x8_noloc");
         assert_eq!(g, 42.0);
         let (ccfg, _) = loaded
-            .get_conv(&SelectionKey::conv("mali-g71", 3, 1, 56, 56, 64, 64, 1))
+            .get::<ConvConfig>(&SelectionKey::conv(
+                "mali-g71", 3, 1, 56, 56, 64, 64, 1,
+            ))
             .unwrap();
         assert_eq!(ccfg.tile_h, 4);
         assert_eq!(ccfg.algorithm, ConvAlgorithm::Tiled);
@@ -694,11 +560,37 @@ mod tests {
         assert!(text.contains(r#""isa": "avx2""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
         assert_eq!(loaded.get::<GemmPoint>(&key).unwrap(), (gp, 7.5));
-        // The legacy typed view still answers (blocking half only).
-        assert_eq!(loaded.get_blocked(&key).unwrap(), (gp.params, 7.5));
         // A gemm_point entry never answers modeled or conv lookups.
-        assert!(loaded.get_gemm(&key).is_none());
+        assert!(loaded.get::<GemmConfig>(&key).is_none());
         assert!(loaded.get::<ConvPoint>(&key).is_none());
+    }
+
+    #[test]
+    fn annotations_survive_roundtrip_and_stay_invisible_to_decoders() {
+        let mut db = SelectionDb::new();
+        let key = SelectionKey::gemm("host", 96, 96, 96);
+        db.put(key.clone(), GemmPoint::default(), 3.0);
+        db.annotate_search(&key, "guided", 7);
+        // Annotating a missing key is a quiet no-op.
+        db.annotate_search(&SelectionKey::gemm("host", 4096, 64, 64), "x", 1);
+        assert_eq!(db.len(), 1);
+        let dir = TempDir::new("seldb").unwrap();
+        let path = dir.path().join("annotated.json");
+        db.save(&path).unwrap();
+        let loaded = SelectionDb::load(&path).unwrap();
+        // The typed lookup is unaffected by the extra columns...
+        let (p, g) = loaded.get::<GemmPoint>(&key).unwrap();
+        assert_eq!((p, g), (GemmPoint::default(), 3.0));
+        // ...and the provenance columns round-trip for reports.
+        let entry = loaded.stored(&key).unwrap().entry();
+        assert_eq!(
+            entry.get("search").and_then(|v| v.as_str()),
+            Some("guided")
+        );
+        assert_eq!(
+            entry.get("points_measured").and_then(|v| v.as_u64()),
+            Some(7)
+        );
     }
 
     #[test]
@@ -711,7 +603,7 @@ mod tests {
         db.put(gkey.clone(), GemmPoint::default(), 2.0);
         assert!(db.get::<GemmPoint>(&gkey).is_some());
         assert!(db.get::<ConvPoint>(&gkey).is_none());
-        assert!(db.get_conv_native(&gkey).is_none());
+        assert!(db.get::<ConvConfig>(&gkey).is_none());
         // Same for a legacy blocked entry under a gemm key.
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("gemm_blocked.json");
@@ -728,13 +620,13 @@ mod tests {
     }
 
     #[test]
-    fn legacy_put_blocked_writes_unified_scalar_points() {
+    fn scalar_points_migrate_to_im2col_under_conv_keys() {
         let mut db = SelectionDb::new();
         let params = BlockedParams {
             bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 0,
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
-        db.put_blocked(key.clone(), params, 3.25);
+        db.put(key.clone(), GemmPoint::scalar(params), 3.25);
         let (p, g) = db.get::<GemmPoint>(&key).unwrap();
         assert_eq!((p.params, p.isa, g), (params, Isa::Scalar, 3.25));
         // Under a conv key, the conv space migrates it to im2col.
@@ -753,7 +645,7 @@ mod tests {
             },
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
-        db.put_conv_native(key.clone(), cp.config, cp.blocked, 5.5);
+        db.put(key.clone(), cp, 5.5);
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("convpoint.json");
         db.save(&path).unwrap();
@@ -763,17 +655,12 @@ mod tests {
         assert!(text.contains(r#""kind": "conv_point""#), "{text}");
         assert!(text.contains(r#""algorithm": "winograd""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
-        let (c, b, g) = loaded.get_conv_native(&key).unwrap();
-        assert_eq!((c, b, g), (cp.config, cp.blocked, 5.5));
-        // A conv_point entry answers GEMM-space lookups with None...
+        let (c, g) = loaded.get::<ConvPoint>(&key).unwrap();
+        assert_eq!((c, g), (cp, 5.5));
+        // A conv_point entry answers GEMM-space lookups with None.
         assert!(loaded.get::<GemmPoint>(&key).is_none());
-        assert!(loaded.get_blocked(&key).is_none());
-        // ...and decodes to the legacy ConvNative view.
         let (_, stored) = loaded.iter().next().unwrap();
-        assert!(matches!(
-            stored.legacy_view(),
-            Some(Selection::ConvNative { .. })
-        ));
+        assert_eq!(stored.kind(), ConvPoint::KIND);
     }
 
     #[test]
@@ -804,7 +691,7 @@ mod tests {
         assert_eq!(g, 2.5);
         assert_eq!(gp.isa, Isa::Scalar, "legacy entries migrate as scalar");
         assert_eq!((gp.params.bm, gp.params.threads), (8, 1));
-        assert_eq!(db.get_blocked(&gkey).unwrap().0, gp.params);
+        assert_eq!(db.stored(&gkey).unwrap().kind(), "blocked");
         let ckey = SelectionKey::conv("host", 3, 1, 8, 8, 4, 4, 1);
         let (cp, _) = db.get::<ConvPoint>(&ckey).unwrap();
         assert_eq!(cp.config.algorithm, ConvAlgorithm::Winograd);
@@ -887,9 +774,9 @@ mod tests {
         .unwrap();
         let db = SelectionDb::load(&path).unwrap();
         let (p, _) = db
-            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .get::<GemmPoint>(&SelectionKey::gemm("host", 64, 64, 64))
             .unwrap();
-        assert_eq!(p.threads, 0);
+        assert_eq!(p.params.threads, 0);
     }
 
     #[test]
@@ -923,9 +810,9 @@ mod tests {
         .unwrap();
         let db = SelectionDb::load(&path).unwrap();
         let (p, g) = db
-            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .get::<GemmPoint>(&SelectionKey::gemm("host", 64, 64, 64))
             .unwrap();
-        assert_eq!((p.bm, g), (16, 2.0));
+        assert_eq!((p.params.bm, g), (16, 2.0));
     }
 
     #[test]
@@ -994,7 +881,7 @@ mod tests {
         let mut measured = SelectionDb::new();
         measured.put(key.clone(), GemmPoint::default(), 3.0);
         let mut modeled = SelectionDb::new();
-        modeled.put_gemm(
+        modeled.put(
             key.clone(),
             GemmConfig::parse("8x4_8x16_loc").unwrap(),
             900.0,
@@ -1010,17 +897,14 @@ mod tests {
         let mut modeled2 = modeled.clone();
         let stats = modeled2.merge(&measured);
         assert_eq!(stats.kind_conflicts, 1);
-        assert!(modeled2.get_gemm(&key).is_some());
+        assert!(modeled2.get::<GemmConfig>(&key).is_some());
     }
 
     #[test]
     fn missing_key_is_none() {
         let db = SelectionDb::new();
         assert!(db
-            .get_gemm(&SelectionKey::gemm("host", 64, 64, 64))
-            .is_none());
-        assert!(db
-            .get_blocked(&SelectionKey::gemm("host", 64, 64, 64))
+            .get::<GemmConfig>(&SelectionKey::gemm("host", 64, 64, 64))
             .is_none());
         assert!(db
             .get::<GemmPoint>(&SelectionKey::gemm("host", 64, 64, 64))

@@ -11,12 +11,17 @@
 //! arXiv:2309.10075); CI runs the quick variant on every merge via
 //! `cargo run --release --example tune_device -- --quick`.
 //!
-//! One generic function, [`tune_space_sweep`], does all of it: the space
-//! point type supplies applicability (shape domain + host capability)
-//! and the DB codec, so a new tunable axis never needs a new sweep.  The
-//! historical entry points [`tune_blocked_sweep`] and
-//! [`tune_conv_native_sweep`] survive as thin wrappers over the generic
-//! (scalar-ISA GEMM grid, conv grid respectively).
+//! One generic function, [`tune_space_sweep`], does all of it,
+//! parameterized by a [`SearchStrategy`]: the space point type supplies
+//! applicability (shape domain + host capability), the DB codec, and a
+//! per-point cost hint ([`KernelSpace::rank_hint`]); the strategy
+//! decides which points actually get timed.  [`ExhaustiveSearch`]
+//! measures the whole grid; [`tune_space_guided`] ([`GuidedSearch`])
+//! measures only the cost model's top-ranked candidates plus the
+//! *pinned* incumbents — the untuned default, the stored winner, and
+//! [`warm_start_seeds`] transferred from already-tuned neighbour shape
+//! classes — then hill-climbs around the measured winner under a hard
+//! per-class budget.
 
 use std::collections::BTreeMap;
 use std::time::Duration;
@@ -30,7 +35,7 @@ use crate::error::Result;
 use crate::runtime::{ArtifactMeta, Backend};
 
 use super::db::{SelectionDb, SelectionKey};
-use super::search::{ExhaustiveSearch, SearchStrategy};
+use super::search::{CostRanker, GuidedSearch, ModelRanker, SearchStrategy};
 
 /// One timed grid point of a generic space sweep.
 #[derive(Debug, Clone)]
@@ -73,6 +78,13 @@ impl<P: KernelSpace> SpaceSweep<P> {
             .filter(|r| r.problem == problem && r.point == *point)
             .map(|r| r.gflops)
             .reduce(f64::max)
+    }
+
+    /// How many points were actually measured for a problem — the
+    /// `points_measured` column of reports, and the number guided
+    /// search keeps ≥10× below the exhaustive grid.
+    pub fn points_measured_for(&self, problem: &str) -> usize {
+        self.rows.iter().filter(|r| r.problem == problem).count()
     }
 
     /// The distinct values of some axis measured for a problem, in
@@ -151,10 +163,80 @@ pub fn shape_class_for(meta: &ArtifactMeta) -> Option<String> {
     selection_key_for(meta, "").map(|key| key.op)
 }
 
-/// Measure every artifact in `group` under every *applicable* grid point
-/// of space `P` and persist the per-problem winner into `db` under
-/// `P::KIND` — the one generic measure→persist loop behind every host
-/// sweep.
+// ---- warm-start transfer ----
+
+/// The bucketed `gemm_{M}x{N}x{K}` dims of a problem-class op.
+fn gemm_dims(op: &str) -> Option<[u64; 3]> {
+    let rest = op.strip_prefix("gemm_")?;
+    let mut it = rest.split('x');
+    let m = it.next()?.parse().ok()?;
+    let n = it.next()?.parse().ok()?;
+    let k = it.next()?.parse().ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some([m, n, k])
+}
+
+/// The `{window}x{window}s{stride}` signature of a conv problem-class
+/// op.
+fn conv_sig(op: &str) -> Option<&str> {
+    op.strip_prefix("conv_")?.split('_').next()
+}
+
+/// Whether two problem-class ops are *adjacent* shape classes — close
+/// enough that one class's tuned winner is a plausible seed for the
+/// other: GEMM buckets within one power-of-two step per dimension,
+/// conv layers sharing the window/stride signature.
+fn ops_adjacent(a: &str, b: &str) -> bool {
+    if let (Some(x), Some(y)) = (gemm_dims(a), gemm_dims(b)) {
+        return x
+            .iter()
+            .zip(y.iter())
+            .all(|(&p, &q)| p * 2 >= q && q * 2 >= p);
+    }
+    match (conv_sig(a), conv_sig(b)) {
+        (Some(x), Some(y)) => x == y,
+        _ => false,
+    }
+}
+
+/// Warm-start transfer: the winning points of *adjacent* already-tuned
+/// shape classes on the same device — the tuned neighbours' winners
+/// seed this class's candidate list (pinned, so a budget can never
+/// drop them).  Because the sweep's DB accumulates winners as it runs,
+/// later classes of one sweep warm-start from earlier ones
+/// automatically.
+pub fn warm_start_seeds<P: KernelSpace>(
+    db: &SelectionDb,
+    key: &SelectionKey,
+) -> Vec<P> {
+    let mut seeds: Vec<P> = Vec::new();
+    for (stored_key, _) in db.iter() {
+        let Some((device, op)) = stored_key.split_once("::") else {
+            continue;
+        };
+        if device != key.device || op == key.op || !ops_adjacent(&key.op, op)
+        {
+            continue;
+        }
+        let neighbour = SelectionKey {
+            device: device.to_string(),
+            op: op.to_string(),
+        };
+        if let Some((p, _)) = db.get::<P>(&neighbour) {
+            if !seeds.contains(&p) {
+                seeds.push(p);
+            }
+        }
+    }
+    seeds
+}
+
+/// Measure artifacts in `group` under the *applicable* grid points of
+/// space `P` — which ones is the `strategy`'s call — and persist the
+/// per-problem winner into `db` under `P::KIND`: the one generic
+/// measure→persist loop behind every host sweep.
 ///
 /// "Applicable" is the space's own rule ([`KernelSpace::applicable`]):
 /// shape-domain fallbacks (a Winograd point on a strided layer) and
@@ -163,8 +245,17 @@ pub fn shape_class_for(meta: &ArtifactMeta) -> Option<String> {
 /// artifacts under the conv space) are skipped entirely.  `apply`
 /// installs a point on the engine before timing — for `NativeEngine`
 /// that is `|e, p| e.set_gemm_point(*p)` / `|e, p| e.set_conv_point(*p)`.
-/// The per-problem argmax runs through [`ExhaustiveSearch`]; `iters`
-/// repetitions, minimum taken, throughput from manifest flops.
+///
+/// Three kinds of candidates are **pinned** (always proposed first,
+/// appended to the candidate list if the grid lacks them): the space's
+/// default point (so tuned-vs-default is always measurable), the
+/// incumbent already stored for the class, and [`warm_start_seeds`]
+/// from adjacent tuned classes.  The per-problem argmax then runs
+/// through `strategy.search_ranked` with [`KernelSpace::rank_hint`] as
+/// the cost model; `iters` repetitions, minimum taken, throughput from
+/// manifest flops.  The winning entry is annotated with the strategy
+/// name and the class's measured point count
+/// ([`SelectionDb::annotate_search`]).
 ///
 /// # Examples
 ///
@@ -173,7 +264,7 @@ pub fn shape_class_for(meta: &ArtifactMeta) -> Option<String> {
 /// use portable_kernels::config::GemmPoint;
 /// use portable_kernels::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
 /// use portable_kernels::tuner::{
-///     tune_space_sweep, SelectionDb, SelectionKey,
+///     tune_space_sweep, ExhaustiveSearch, SelectionDb, SelectionKey,
 /// };
 /// use portable_kernels::util::tmp::TempDir;
 ///
@@ -205,6 +296,7 @@ pub fn shape_class_for(meta: &ArtifactMeta) -> Option<String> {
 ///     &grid,
 ///     1,
 ///     HOST_DEVICE,
+///     &ExhaustiveSearch,
 ///     &mut |e, p: &GemmPoint| e.set_gemm_point(*p),
 ///     &mut db,
 /// )
@@ -220,6 +312,7 @@ pub fn tune_space_sweep<B: Backend, P: KernelSpace>(
     grid: &[P],
     iters: usize,
     device: &str,
+    strategy: &dyn SearchStrategy,
     apply: &mut dyn FnMut(&mut B, &P),
     db: &mut SelectionDb,
 ) -> Result<SpaceSweep<P>> {
@@ -229,9 +322,37 @@ pub fn tune_space_sweep<B: Backend, P: KernelSpace>(
         grid,
         iters,
         device,
+        strategy,
         apply,
         db,
         &|_| true,
+    )
+}
+
+/// [`tune_space_sweep`] with [`GuidedSearch`] capped at `budget`
+/// measured points per shape class — the cheap sweep `tune_device`
+/// defaults to and `tune-smoke` holds to ≥10× fewer measured points
+/// than the exhaustive grid at equal-or-better tuned GFLOP/s.
+#[allow(clippy::too_many_arguments)]
+pub fn tune_space_guided<B: Backend, P: KernelSpace>(
+    engine: &mut B,
+    group: &str,
+    grid: &[P],
+    iters: usize,
+    device: &str,
+    budget: usize,
+    apply: &mut dyn FnMut(&mut B, &P),
+    db: &mut SelectionDb,
+) -> Result<SpaceSweep<P>> {
+    tune_space_sweep(
+        engine,
+        group,
+        grid,
+        iters,
+        device,
+        &GuidedSearch { budget },
+        apply,
+        db,
     )
 }
 
@@ -247,6 +368,7 @@ pub fn tune_space_sweep_filtered<B: Backend, P: KernelSpace>(
     grid: &[P],
     iters: usize,
     device: &str,
+    strategy: &dyn SearchStrategy,
     apply: &mut dyn FnMut(&mut B, &P),
     db: &mut SelectionDb,
     filter: &dyn Fn(&ArtifactMeta) -> bool,
@@ -265,22 +387,53 @@ pub fn tune_space_sweep_filtered<B: Backend, P: KernelSpace>(
         let Some(problem) = problem_for(&meta) else {
             continue;
         };
-        let applicable: Vec<&P> =
-            grid.iter().filter(|p| p.applicable(&problem)).collect();
-        if applicable.is_empty() {
+        let mut candidates: Vec<P> = grid
+            .iter()
+            .filter(|p| p.applicable(&problem))
+            .copied()
+            .collect();
+        if candidates.is_empty() {
             continue;
+        }
+        // Pin the untuned default, the stored incumbent, and the
+        // warm-start seeds from adjacent tuned classes: proposed first,
+        // appended if the grid lacks them, so no budget drops them.
+        let mut pinned: Vec<usize> = Vec::new();
+        {
+            let mut pin = |p: P| {
+                if !p.applicable(&problem) {
+                    return;
+                }
+                let i = match candidates.iter().position(|c| *c == p) {
+                    Some(i) => i,
+                    None => {
+                        candidates.push(p);
+                        candidates.len() - 1
+                    }
+                };
+                if !pinned.contains(&i) {
+                    pinned.push(i);
+                }
+            };
+            pin(P::default_point());
+            if let Some((incumbent, _)) = db.get::<P>(&key) {
+                pin(incumbent);
+            }
+            for seed in warm_start_seeds::<P>(db, &key) {
+                pin(seed);
+            }
         }
         let inputs = engine.synth_inputs(&meta.name, 17)?;
         let mut run_err = None;
         let mut score = |i: usize| -> Option<f64> {
-            apply(engine, applicable[i]);
+            apply(engine, &candidates[i]);
             match engine.run_timed(&meta.name, &inputs, iters) {
                 Ok((out, best)) => {
                     let gflops = out.gflops(meta.flops);
                     sweep.rows.push(SpaceMeasurement {
                         problem: key.op.clone(),
                         artifact: meta.name.clone(),
-                        point: *applicable[i],
+                        point: candidates[i],
                         best,
                         gflops,
                     });
@@ -292,7 +445,14 @@ pub fn tune_space_sweep_filtered<B: Backend, P: KernelSpace>(
                 }
             }
         };
-        let found = ExhaustiveSearch.search(applicable.len(), &mut score);
+        let rank =
+            |i: usize| ModelRanker.rank(&candidates[i], &problem);
+        let found = strategy.search_ranked(
+            candidates.len(),
+            &pinned,
+            &rank,
+            &mut score,
+        );
         if let Some(e) = run_err {
             return Err(e);
         }
@@ -304,9 +464,16 @@ pub fn tune_space_sweep_filtered<B: Backend, P: KernelSpace>(
                 .map(|(_, g)| gflops > g)
                 .unwrap_or(true);
             if better {
-                db.put(key.clone(), *applicable[idx], gflops);
-                sweep.winners.insert(key.op.clone(), (*applicable[idx], gflops));
+                db.put(key.clone(), candidates[idx], gflops);
+                sweep
+                    .winners
+                    .insert(key.op.clone(), (candidates[idx], gflops));
             }
+            db.annotate_search(
+                &key,
+                strategy.name(),
+                sweep.points_measured_for(&key.op),
+            );
         }
     }
     Ok(sweep)
@@ -329,15 +496,23 @@ pub fn blocked_candidates(quick: bool) -> Vec<BlockedParams> {
         threads: 1,
     };
     let mut out = if quick {
-        // Tiny grid for the CI smoke sweep, plus registry shapes beyond
-        // the historical hand-written set so the widened axis is always
-        // exercised.
+        // The CI smoke grid: registry micro-tile shapes at a handful of
+        // blockings.  Deliberately large enough that the guided-vs-
+        // exhaustive measured-point ratio tune-smoke asserts (≥10×) has
+        // headroom, while still sweeping in seconds.
         vec![
             BlockedParams { threads: 1, ..Default::default() },
             p(32, 32, 32, 4, 8),
             p(16, 32, 16, 4, 8),
             p(32, 32, 32, 2, 16),
             p(32, 32, 32, 16, 8),
+            p(32, 32, 32, 8, 8),
+            p(32, 32, 32, 4, 16),
+            p(32, 32, 32, 8, 4),
+            p(32, 32, 32, 2, 8),
+            p(64, 64, 32, 8, 16),
+            p(16, 16, 16, 2, 4),
+            p(64, 32, 32, 16, 16),
         ]
     } else {
         let mut v = vec![
@@ -490,194 +665,11 @@ pub fn conv_native_grid(
     grid
 }
 
-// ---- legacy typed wrappers over the generic sweep ----
-
-/// One timed grid point of the legacy blocking-only sweep view.
-#[derive(Debug, Clone)]
-pub struct SweepMeasurement {
-    /// Problem-class op key the winner persists under.
-    pub problem: String,
-    /// Artifact the measurement executed.
-    pub artifact: String,
-    /// Parameter combination this grid point timed.
-    pub params: BlockedParams,
-    /// Best (minimum) execution time over the repetitions.
-    pub best: Duration,
-    /// Measured throughput, GFLOP/s.
-    pub gflops: f64,
-}
-
-/// A finished legacy blocking sweep — the scalar-ISA view of a
-/// [`SpaceSweep<GemmPoint>`].
-#[derive(Debug, Default)]
-pub struct BlockedSweep {
-    /// Every timed grid point, in measurement order.
-    pub rows: Vec<SweepMeasurement>,
-    /// Winner per problem-class op key.
-    pub winners: BTreeMap<String, (BlockedParams, f64)>,
-}
-
-impl BlockedSweep {
-    /// Best measured gflops for a problem under exactly `params`
-    /// (e.g. the default config, for tuned-vs-default reporting).
-    pub fn gflops_for(
-        &self,
-        problem: &str,
-        params: &BlockedParams,
-    ) -> Option<f64> {
-        self.rows
-            .iter()
-            .filter(|r| r.problem == problem && r.params == *params)
-            .map(|r| r.gflops)
-            .reduce(f64::max)
-    }
-}
-
-/// One timed conv grid point (legacy view; the candidate *is* the conv
-/// space point).
-#[derive(Debug, Clone)]
-pub struct ConvSweepMeasurement {
-    /// Problem-class op key the winner persists under.
-    pub problem: String,
-    /// Artifact the measurement executed.
-    pub artifact: String,
-    /// Candidate this grid point timed.
-    pub candidate: ConvCandidate,
-    /// Best (minimum) execution time over the repetitions.
-    pub best: Duration,
-    /// Measured throughput, GFLOP/s.
-    pub gflops: f64,
-}
-
-/// A finished native conv sweep (legacy view of a
-/// [`SpaceSweep<ConvPoint>`]).
-#[derive(Debug, Default)]
-pub struct ConvNativeSweep {
-    /// Every timed grid point, in measurement order.
-    pub rows: Vec<ConvSweepMeasurement>,
-    /// Winner per problem-class op key.
-    pub winners: BTreeMap<String, (ConvCandidate, f64)>,
-}
-
-impl ConvNativeSweep {
-    /// Best measured gflops for a problem under exactly `candidate`.
-    pub fn gflops_for(
-        &self,
-        problem: &str,
-        candidate: &ConvCandidate,
-    ) -> Option<f64> {
-        self.rows
-            .iter()
-            .filter(|r| r.problem == problem && r.candidate == *candidate)
-            .map(|r| r.gflops)
-            .reduce(f64::max)
-    }
-
-    /// The distinct algorithms measured for a problem — the sweep's
-    /// proof that the algorithm axis was actually swept, not collapsed.
-    pub fn algorithms_for(&self, problem: &str) -> Vec<ConvAlgorithm> {
-        let mut algs: Vec<ConvAlgorithm> = Vec::new();
-        for r in self.rows.iter().filter(|r| r.problem == problem) {
-            if !algs.contains(&r.candidate.config.algorithm) {
-                algs.push(r.candidate.config.algorithm);
-            }
-        }
-        algs
-    }
-}
-
-impl From<SpaceSweep<GemmPoint>> for BlockedSweep {
-    fn from(s: SpaceSweep<GemmPoint>) -> Self {
-        BlockedSweep {
-            rows: s
-                .rows
-                .into_iter()
-                .map(|r| SweepMeasurement {
-                    problem: r.problem,
-                    artifact: r.artifact,
-                    params: r.point.params,
-                    best: r.best,
-                    gflops: r.gflops,
-                })
-                .collect(),
-            winners: s
-                .winners
-                .into_iter()
-                .map(|(op, (p, g))| (op, (p.params, g)))
-                .collect(),
-        }
-    }
-}
-
-impl From<SpaceSweep<ConvPoint>> for ConvNativeSweep {
-    fn from(s: SpaceSweep<ConvPoint>) -> Self {
-        ConvNativeSweep {
-            rows: s
-                .rows
-                .into_iter()
-                .map(|r| ConvSweepMeasurement {
-                    problem: r.problem,
-                    artifact: r.artifact,
-                    candidate: r.point,
-                    best: r.best,
-                    gflops: r.gflops,
-                })
-                .collect(),
-            winners: s.winners.into_iter().collect(),
-        }
-    }
-}
-
-/// Legacy shim (deprecated): the blocking-only measured sweep.  A thin
-/// wrapper over [`tune_space_sweep`] with a scalar-ISA [`GemmPoint`]
-/// grid — winners persist in the unified schema (kind `gemm_point`,
-/// `isa: scalar`), which the engine resolves exactly like the old
-/// `blocked` entries.
-pub fn tune_blocked_sweep<B: Backend>(
-    engine: &mut B,
-    group: &str,
-    grid: &[BlockedParams],
-    iters: usize,
-    device: &str,
-    apply: &mut dyn FnMut(&mut B, &BlockedParams),
-    db: &mut SelectionDb,
-) -> Result<BlockedSweep> {
-    let points: Vec<GemmPoint> =
-        grid.iter().map(|&params| GemmPoint::scalar(params)).collect();
-    let sweep = tune_space_sweep::<B, GemmPoint>(
-        engine,
-        group,
-        &points,
-        iters,
-        device,
-        &mut |e, p| apply(e, &p.params),
-        db,
-    )?;
-    Ok(sweep.into())
-}
-
-/// Legacy shim (deprecated): the native conv sweep.  A thin wrapper
-/// over [`tune_space_sweep`] — the candidate type *is* [`ConvPoint`]
-/// now, winners persist as kind `conv_point`.
-pub fn tune_conv_native_sweep<B: Backend>(
-    engine: &mut B,
-    group: &str,
-    grid: &[ConvCandidate],
-    iters: usize,
-    device: &str,
-    apply: &mut dyn FnMut(&mut B, &ConvCandidate),
-    db: &mut SelectionDb,
-) -> Result<ConvNativeSweep> {
-    let sweep = tune_space_sweep::<B, ConvPoint>(
-        engine, group, grid, iters, device, apply, db,
-    )?;
-    Ok(sweep.into())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::runtime::{ArtifactStore, NativeEngine, HOST_DEVICE};
+    use crate::tuner::search::ExhaustiveSearch;
     use crate::util::tmp::TempDir;
 
     fn sweep_fixture() -> (TempDir, NativeEngine) {
@@ -705,6 +697,13 @@ mod tests {
         let store = ArtifactStore::open(dir.path()).unwrap();
         let engine = NativeEngine::new(store).unwrap();
         (dir, engine)
+    }
+
+    fn scalar_grid(quick: bool, threads: &[usize]) -> Vec<GemmPoint> {
+        blocked_grid(quick, threads)
+            .into_iter()
+            .map(GemmPoint::scalar)
+            .collect()
     }
 
     #[test]
@@ -764,6 +763,7 @@ mod tests {
             &grid,
             1,
             HOST_DEVICE,
+            &ExhaustiveSearch,
             &mut |e, p: &GemmPoint| e.set_gemm_point(*p),
             &mut db,
         )
@@ -772,6 +772,7 @@ mod tests {
         // grid, so the whole grid was measured.
         assert_eq!(sweep.rows.len(), grid.len());
         let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+        assert_eq!(sweep.points_measured_for(&key.op), grid.len());
         // Every detected ISA was actually measured.
         let swept = sweep.axis_values_for(&key.op, |p| p.isa);
         for &isa in &isas {
@@ -796,30 +797,44 @@ mod tests {
             .map(|r| r.gflops)
             .fold(f64::MIN, f64::max);
         assert!(win_g >= scalar_best);
+        // The entry carries the search provenance columns.
+        let entry = db.stored(&key).unwrap().entry().clone();
+        assert_eq!(
+            entry.get("search").and_then(|v| v.as_str()),
+            Some("exhaustive")
+        );
+        assert_eq!(
+            entry.get("points_measured").and_then(|v| v.as_u64()),
+            Some(grid.len() as u64)
+        );
     }
 
     #[test]
     fn sweep_measures_grid_and_persists_winners() {
         let (_dir, mut engine) = sweep_fixture();
-        let grid = blocked_grid(true, &[1, 2]);
+        let grid = scalar_grid(true, &[1, 2]);
         let mut db = SelectionDb::new();
-        let gemm = tune_blocked_sweep(
+        let mut apply =
+            |e: &mut NativeEngine, p: &GemmPoint| e.set_params(p.params);
+        let gemm = tune_space_sweep(
             &mut engine,
             "gemm",
             &grid,
             2,
             HOST_DEVICE,
-            &mut |e, p| e.set_params(*p),
+            &ExhaustiveSearch,
+            &mut apply,
             &mut db,
         )
         .unwrap();
-        let conv = tune_blocked_sweep(
+        let conv = tune_space_sweep(
             &mut engine,
             "conv",
             &grid,
             2,
             HOST_DEVICE,
-            &mut |e, p| e.set_params(*p),
+            &ExhaustiveSearch,
+            &mut apply,
             &mut db,
         )
         .unwrap();
@@ -830,8 +845,8 @@ mod tests {
         // The persisted winner is the row argmax, and it comes from the
         // grid.
         for sweep in [&gemm, &conv] {
-            for (op, (params, gflops)) in &sweep.winners {
-                assert!(grid.contains(params));
+            for (op, (point, gflops)) in &sweep.winners {
+                assert!(grid.contains(point));
                 let max = sweep
                     .rows
                     .iter()
@@ -847,20 +862,137 @@ mod tests {
         // sweep rows carry the same bucketed op.
         let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
         assert_eq!(key.op, "gemm_128x128x128");
-        let (_, tuned) = db.get_blocked(&key).unwrap();
+        let (_, tuned) = db.get::<GemmPoint>(&key).unwrap();
         let dflt = gemm
-            .gflops_for(&key.op, &BlockedParams::default())
+            .gflops_for(&key.op, &GemmPoint::default())
             .unwrap();
         assert!(tuned >= dflt);
-        // The legacy wrapper persists unified scalar points — including
-        // under the conv key, where the conv space migrates them to
-        // im2col.
+        // Scalar points persist in the unified schema — including under
+        // the conv key, where the conv space migrates them to im2col.
         let ckey = SelectionKey::conv(HOST_DEVICE, 3, 1, 16, 16, 8, 16, 2);
         let (gp, _) = db.get::<GemmPoint>(&ckey).unwrap();
         assert_eq!(gp.isa, Isa::Scalar);
         let (cp, _) = db.get::<ConvPoint>(&ckey).unwrap();
         assert_eq!(cp.config.algorithm, ConvAlgorithm::Im2col);
         assert_eq!(cp.blocked, gp.params);
+    }
+
+    #[test]
+    fn guided_sweep_stays_in_budget_and_measures_the_pinned_default() {
+        let (_dir, mut engine) = sweep_fixture();
+        let isas = Isa::detect();
+        let grid = gemm_point_grid(true, &[1, 2], &isas);
+        let budget = 5usize;
+        assert!(grid.len() > budget, "fixture grid too small to prune");
+        let mut db = SelectionDb::new();
+        let sweep = tune_space_guided(
+            &mut engine,
+            "gemm",
+            &grid,
+            1,
+            HOST_DEVICE,
+            budget,
+            &mut |e, p: &GemmPoint| e.set_gemm_point(*p),
+            &mut db,
+        )
+        .unwrap();
+        let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+        let measured = sweep.points_measured_for(&key.op);
+        assert!(measured <= budget, "{measured} > budget {budget}");
+        assert!(measured >= 1);
+        // The untuned default was measured (pinned), so tuned >= default
+        // holds by argmax even under a tiny budget.
+        let dflt = sweep.gflops_for(&key.op, &GemmPoint::default()).unwrap();
+        let (_, tuned) = db.get::<GemmPoint>(&key).unwrap();
+        assert!(tuned >= dflt);
+        // Search provenance columns name the guided strategy.
+        let entry = db.stored(&key).unwrap().entry().clone();
+        assert_eq!(
+            entry.get("search").and_then(|v| v.as_str()),
+            Some("guided")
+        );
+        assert_eq!(
+            entry.get("points_measured").and_then(|v| v.as_u64()),
+            Some(measured as u64)
+        );
+    }
+
+    #[test]
+    fn guided_sweep_warm_starts_from_adjacent_tuned_classes() {
+        let (_dir, mut engine) = sweep_fixture();
+        // A neighbour class (one power-of-two step away per dim) was
+        // already tuned to a distinctive blocking the quick grid lacks.
+        let seed_params = BlockedParams {
+            bm: 24, bn: 24, bk: 12, mr: 2, nr: 4, threads: 1,
+        };
+        let seed = GemmPoint::scalar(seed_params);
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 256, 128, 128),
+            seed,
+            99.0,
+        );
+        let grid = scalar_grid(true, &[1]);
+        assert!(!grid.contains(&seed), "seed must come from transfer");
+        let sweep = tune_space_guided(
+            &mut engine,
+            "gemm",
+            &grid,
+            1,
+            HOST_DEVICE,
+            4,
+            &mut |e, p: &GemmPoint| e.set_params(p.params),
+            &mut db,
+        )
+        .unwrap();
+        let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
+        // The transferred seed was actually measured for the new class.
+        assert!(
+            sweep
+                .rows
+                .iter()
+                .any(|r| r.problem == key.op && r.point == seed),
+            "warm-start seed never measured"
+        );
+    }
+
+    #[test]
+    fn warm_start_seeds_come_from_adjacent_same_device_classes_only() {
+        let mut db = SelectionDb::new();
+        let here = SelectionKey::gemm(HOST_DEVICE, 128, 128, 128);
+        let neighbour = GemmPoint::scalar(BlockedParams {
+            bm: 24, bn: 24, bk: 12, mr: 2, nr: 4, threads: 1,
+        });
+        // Adjacent class, same device: transfers.
+        db.put(SelectionKey::gemm(HOST_DEVICE, 256, 128, 128), neighbour, 1.0);
+        // Far class (two bucket steps on m): does not.
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 512, 128, 128),
+            GemmPoint::default(),
+            1.0,
+        );
+        // Adjacent class, *other* device: does not.
+        db.put(
+            SelectionKey::gemm("other-box", 256, 128, 128),
+            GemmPoint::default(),
+            1.0,
+        );
+        // Conv classes never seed a gemm class.
+        db.put(
+            SelectionKey::conv(HOST_DEVICE, 3, 1, 16, 16, 8, 16, 2),
+            ConvPoint::default(),
+            1.0,
+        );
+        let seeds = warm_start_seeds::<GemmPoint>(&db, &here);
+        assert_eq!(seeds, vec![neighbour]);
+
+        // Conv adjacency is the window/stride signature.
+        let chere = SelectionKey::conv(HOST_DEVICE, 3, 1, 32, 32, 8, 16, 2);
+        let cseeds = warm_start_seeds::<ConvPoint>(&db, &chere);
+        assert_eq!(cseeds, vec![ConvPoint::default()]);
+        // A strided conv class is not adjacent to the s1 signature.
+        let strided = SelectionKey::conv(HOST_DEVICE, 3, 2, 32, 32, 8, 16, 2);
+        assert!(warm_start_seeds::<ConvPoint>(&db, &strided).is_empty());
     }
 
     #[test]
@@ -897,13 +1029,14 @@ mod tests {
         let (_dir, mut engine) = sweep_fixture();
         let grid = conv_native_grid(true, &[1, 2]);
         let mut db = SelectionDb::new();
-        let sweep = tune_conv_native_sweep(
+        let sweep = tune_space_sweep(
             &mut engine,
             "conv",
             &grid,
             2,
             HOST_DEVICE,
-            &mut |e, c| e.set_conv_params(c.config, c.blocked),
+            &ExhaustiveSearch,
+            &mut |e, c: &ConvCandidate| e.set_conv_params(c.config, c.blocked),
             &mut db,
         )
         .unwrap();
@@ -911,7 +1044,7 @@ mod tests {
         // measured and all three algorithms ran natively.
         assert_eq!(sweep.rows.len(), grid.len());
         let key = SelectionKey::conv(HOST_DEVICE, 3, 1, 16, 16, 8, 16, 2);
-        let algs = sweep.algorithms_for(&key.op);
+        let algs = sweep.axis_values_for(&key.op, |c| c.config.algorithm);
         for alg in [
             ConvAlgorithm::Im2col,
             ConvAlgorithm::Tiled,
@@ -921,15 +1054,15 @@ mod tests {
         }
         // The persisted winner is the argmax and beats (or ties) the
         // untuned default, which is in the grid by construction.
-        let (wc, wb, wg) = db.get_conv_native(&key).unwrap();
+        let (wp, wg) = db.get::<ConvPoint>(&key).unwrap();
         let (win, win_g) = &sweep.winners[&key.op];
-        assert_eq!((wc, wb), (win.config, win.blocked));
+        assert_eq!(wp, *win);
         assert_eq!(wg, *win_g);
         let dflt = sweep.gflops_for(&key.op, &ConvCandidate::default()).unwrap();
         assert!(wg >= dflt);
         // GEMM artifacts are untouched by the conv sweep.
         assert!(db
-            .get_conv_native(&SelectionKey::gemm(HOST_DEVICE, 96, 96, 96))
+            .get::<ConvPoint>(&SelectionKey::gemm(HOST_DEVICE, 96, 96, 96))
             .is_none());
     }
 
@@ -962,22 +1095,23 @@ mod tests {
             .count();
         assert!(n_wino > 0);
         let mut db = SelectionDb::new();
-        let sweep = tune_conv_native_sweep(
+        let sweep = tune_space_sweep(
             &mut engine,
             "conv",
             &grid,
             1,
             HOST_DEVICE,
-            &mut |e, c| e.set_conv_params(c.config, c.blocked),
+            &ExhaustiveSearch,
+            &mut |e, c: &ConvCandidate| e.set_conv_params(c.config, c.blocked),
             &mut db,
         )
         .unwrap();
         assert_eq!(sweep.rows.len(), grid.len() - n_wino);
         let key = SelectionKey::conv(HOST_DEVICE, 3, 2, 16, 16, 8, 16, 1);
         assert!(!sweep
-            .algorithms_for(&key.op)
+            .axis_values_for(&key.op, |c| c.config.algorithm)
             .contains(&ConvAlgorithm::Winograd));
-        assert!(db.get_conv_native(&key).is_some());
+        assert!(db.get::<ConvPoint>(&key).is_some());
     }
 
     #[test]
@@ -1015,13 +1149,14 @@ mod tests {
         let store = ArtifactStore::open(dir.path()).unwrap();
         let mut engine = NativeEngine::new(store).unwrap();
         let mut db = SelectionDb::new();
-        let sweep = tune_blocked_sweep(
+        let sweep = tune_space_sweep(
             &mut engine,
             "gemm",
-            &blocked_grid(true, &[1]),
+            &scalar_grid(true, &[1]),
             1,
             HOST_DEVICE,
-            &mut |e, p| e.set_params(*p),
+            &ExhaustiveSearch,
+            &mut |e, p: &GemmPoint| e.set_params(p.params),
             &mut db,
         )
         .unwrap();

@@ -8,10 +8,10 @@
 //! is the measured counterpart of `tune_gemm`/`tune_conv`.
 //!
 //! [`tune_measured`] races *artifacts* against each other for a fixed
-//! engine configuration; its sibling [`super::tune_blocked_sweep`] races
-//! *host configurations* (`BlockedParams` × threads) against each other
-//! per artifact and persists the winners — together they close the
-//! paper's parametrize → measure → select loop on the host.
+//! engine configuration; its sibling [`super::tune_space_sweep`] races
+//! *host configurations* (kernel-space points) against each other per
+//! artifact and persists the winners — together they close the paper's
+//! parametrize → measure → select loop on the host.
 
 use std::collections::BTreeMap;
 use std::time::Duration;

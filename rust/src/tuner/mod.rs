@@ -5,21 +5,29 @@
 //! the hardware" — plus its stated future work ("plans to develop a
 //! machine learning system to tune these libraries"), realized as:
 //!
-//! * search strategies ([`ExhaustiveSearch`], [`RandomSearch`],
-//!   [`HillClimb`]) over a cost function (modeled throughput or measured
-//!   wall time);
+//! * one [`SearchStrategy`] trait (propose → measure → refine) behind
+//!   every search entry point, with four implementations:
+//!   [`ExhaustiveSearch`], [`RandomSearch`], [`HillClimb`], and the
+//!   model-guided [`GuidedSearch`], which ranks candidates by the
+//!   `perfmodel` cost hints ([`CostRanker`] / [`ModelRanker`] over
+//!   [`crate::config::KernelSpace::rank_hint`]) and measures only the
+//!   top of the ranking plus the pinned incumbents, under a hard
+//!   per-class budget;
 //! * [`tune_measured`] — run competing artifacts through a backend and
 //!   keep the fastest per problem;
 //! * [`tune_space_sweep`] — **the** measured per-host sweep, generic
-//!   over any [`crate::config::KernelSpace`]: enumerate a space's grid
-//!   (for GEMM, [`gemm_point_grid`]: `BlockedParams` × `threads` ×
+//!   over any [`crate::config::KernelSpace`] and parameterized by
+//!   strategy: enumerate a space's grid (for GEMM,
+//!   [`gemm_point_grid`]: `BlockedParams` × `threads` ×
 //!   runtime-detected ISA; for conv, [`conv_native_grid`]:
-//!   `ConvAlgorithm × ConvConfig × threads`), time every *applicable*
-//!   point through a [`crate::runtime::Backend`], and persist the
-//!   winners — the parametrize → measure → select loop CI runs on every
-//!   merge (`docs/TUNING.md` documents the workflow end to end).  The
-//!   historical [`tune_blocked_sweep`] / [`tune_conv_native_sweep`]
-//!   entry points survive as thin wrappers;
+//!   `ConvAlgorithm × ConvConfig × threads`), let the strategy pick
+//!   which *applicable* points to time through a
+//!   [`crate::runtime::Backend`], and persist the winners — the
+//!   parametrize → measure → select loop CI runs on every merge
+//!   (`docs/TUNING.md` documents the workflow end to end).
+//!   [`tune_space_guided`] is the budgeted model-guided variant, with
+//!   [`warm_start_seeds`] transferring winners across adjacent shape
+//!   classes;
 //! * [`SelectionDb`] — a persisted selection database mapping (device,
 //!   problem class) to the winning point of any space
 //!   ([`SelectionDb::put`] / [`SelectionDb::get`]; legacy `blocked` /
@@ -41,13 +49,12 @@ mod measured;
 mod online;
 mod search;
 
-pub use db::{MergeStats, Selection, SelectionDb, SelectionKey, StoredSelection};
+pub use db::{MergeStats, SelectionDb, SelectionKey, StoredSelection};
 pub use host::{
     blocked_candidates, blocked_grid, conv_candidates, conv_native_grid,
     gemm_point_grid, problem_for, selection_key_for, shape_class_for,
-    tune_blocked_sweep, tune_conv_native_sweep, tune_space_sweep,
-    tune_space_sweep_filtered, BlockedSweep, ConvCandidate, ConvNativeSweep,
-    ConvSweepMeasurement, SpaceMeasurement, SpaceSweep, SweepMeasurement,
+    tune_space_guided, tune_space_sweep, tune_space_sweep_filtered,
+    warm_start_seeds, ConvCandidate, SpaceMeasurement, SpaceSweep,
 };
 pub use online::{
     retune_native, retune_pass, OnlineTuner, Promotion, RetuneConfig,
@@ -55,6 +62,6 @@ pub use online::{
 };
 pub use measured::{tune_measured, MeasuredCandidate, MeasuredTuning};
 pub use search::{
-    tune_conv, tune_gemm, ExhaustiveSearch, HillClimb, RandomSearch,
-    SearchStrategy, TuneResult,
+    tune_conv, tune_gemm, CostRanker, ExhaustiveSearch, GuidedSearch,
+    HillClimb, ModelRanker, RandomSearch, SearchStrategy, TuneResult,
 };

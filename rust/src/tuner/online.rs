@@ -12,11 +12,14 @@
 //!   [`TuningHandle::publish_from`], bumping the epoch.  Readers never
 //!   see a torn view: epoch and DB travel together in one snapshot.
 //! * [`retune_pass`] — one targeted re-tune: probe only the hot shape
-//!   classes via [`tune_space_sweep_filtered`], then *verify* every
-//!   would-be winner head-to-head against the incumbent point in the
-//!   same probe session.  A candidate that does not measure strictly
-//!   faster than the incumbent is dropped — the promotion path never
-//!   installs a point that measured worse (see
+//!   classes via [`tune_space_sweep_filtered`] under a *guided* search
+//!   ([`super::GuidedSearch`] — model-ranked candidates plus the pinned
+//!   incumbent, capped at [`RetuneConfig::budget`] measured points per
+//!   class, so a pass costs a handful of probes instead of a grid), then
+//!   *verify* every would-be winner head-to-head against the incumbent
+//!   point in the same probe session.  A candidate that does not measure
+//!   strictly faster than the incumbent is dropped — the promotion path
+//!   never installs a point that measured worse (see
 //!   `docs/TUNING.md#online-re-tuning`).
 //! * [`OnlineTuner`] — the background task: a dedicated native probe
 //!   engine re-tunes on an interval, and every published snapshot is
@@ -38,6 +41,7 @@ use super::db::{SelectionDb, SelectionKey};
 use super::host::{
     conv_native_grid, gemm_point_grid, shape_class_for, tune_space_sweep_filtered,
 };
+use super::search::GuidedSearch;
 
 /// An immutable, epoch-stamped view of the selection database.  Cheap to
 /// clone (an `Arc` bump); everything planned against one snapshot sees
@@ -119,6 +123,10 @@ pub struct RetuneConfig {
     pub device: String,
     /// `threads` axis the probe grids cross (0 = auto).
     pub threads: Vec<usize>,
+    /// Measured-point budget per hot shape class: the explore step runs
+    /// [`GuidedSearch`] with this budget, so a pass probes the model's
+    /// top candidates plus the incumbent instead of the whole grid.
+    pub budget: usize,
 }
 
 impl Default for RetuneConfig {
@@ -128,6 +136,7 @@ impl Default for RetuneConfig {
             quick: true,
             device: HOST_DEVICE.to_string(),
             threads: vec![1, 0],
+            budget: 8,
         }
     }
 }
@@ -224,10 +233,13 @@ fn verify_and_promote<B: Backend, P: KernelSpace>(
 /// Protocol (single writer; concurrent passes are rejected loudly):
 ///
 /// 1. snapshot the current DB (epoch `E`);
-/// 2. *explore*: run [`tune_space_sweep_filtered`] over the artifacts
-///    whose [`shape_class_for`] label is in `hot`, against a scratch
-///    clone of the snapshot — the sweep's own incumbent guard keeps
-///    only candidates that beat the stored numbers;
+/// 2. *explore*: run [`tune_space_sweep_filtered`] with a
+///    [`GuidedSearch`] capped at [`RetuneConfig::budget`] probes per
+///    class over the artifacts whose [`shape_class_for`] label is in
+///    `hot`, against a scratch clone of the snapshot — the stored
+///    incumbent is pinned into the probe set, and the sweep's own
+///    incumbent guard keeps only candidates that beat the stored
+///    numbers;
 /// 3. *verify*: re-measure every sweep winner head-to-head against the
 ///    incumbent point in this same session; only strictly-faster,
 ///    finite winners are written into the next DB;
@@ -261,8 +273,11 @@ pub fn retune_pass<B: Backend>(
             .unwrap_or(false)
     };
 
-    // Explore: targeted sweeps against a scratch DB (never published).
+    // Explore: targeted *guided* sweeps against a scratch DB (never
+    // published).  The guided strategy pins the stored incumbent and
+    // spends the per-class budget on the cost model's top candidates.
     let mut scratch = (*snap.db).clone();
+    let guided = GuidedSearch { budget: cfg.budget };
     let isas = Isa::detect();
     let gemm_grid = gemm_point_grid(cfg.quick, &cfg.threads, &isas);
     let gemm_sweep = tune_space_sweep_filtered::<B, GemmPoint>(
@@ -271,6 +286,7 @@ pub fn retune_pass<B: Backend>(
         &gemm_grid,
         cfg.iters,
         &cfg.device,
+        &guided,
         apply_gemm,
         &mut scratch,
         &is_hot,
@@ -282,6 +298,7 @@ pub fn retune_pass<B: Backend>(
         &conv_grid,
         cfg.iters,
         &cfg.device,
+        &guided,
         apply_conv,
         &mut scratch,
         &is_hot,

@@ -1,6 +1,26 @@
-//! Search strategies over kernel configuration spaces.
+//! Search strategies over kernel configuration spaces, unified behind
+//! one **propose → measure → refine** lifecycle.
+//!
+//! Every strategy answers three questions: which candidates to measure
+//! first ([`SearchStrategy::propose`] — possibly consulting a cost
+//! model through the `rank` hook), which neighbours to try around the
+//! measured winner ([`SearchStrategy::refine`]), and how many
+//! measurements it may spend at most ([`SearchStrategy::max_evals`]).
+//! The provided driver [`SearchStrategy::search_ranked`] runs the
+//! lifecycle with memoized scoring, so strategies never re-measure a
+//! candidate; [`SearchStrategy::search`] is the unranked entry point
+//! the modeled zoo uses.
+//!
+//! [`GuidedSearch`] is the model-guided strategy: it measures only the
+//! [`CostRanker`]'s top-ranked candidates plus every *pinned* incumbent
+//! (the untuned default, the stored winner, warm-start seeds), then
+//! hill-climbs around the measured winner — ≥10× fewer measured points
+//! than the exhaustive grid at equal-or-better tuned throughput is the
+//! contract CI's `tune-smoke` job asserts.
 
-use crate::config::{conv_space, gemm_space, ConvConfig, GemmConfig};
+use crate::config::{
+    conv_space, gemm_space, ConvConfig, GemmConfig, KernelSpace, Problem,
+};
 use crate::device::DeviceSpec;
 use crate::nn::ConvLayer;
 use crate::perfmodel::{conv_estimate, gemm_estimate, ConvProblem, GemmProblem};
@@ -18,16 +38,163 @@ pub struct TuneResult<C> {
     pub infeasible: usize,
 }
 
+/// Maps a candidate point plus its [`Problem`] to a predicted relative
+/// cost — the pluggable model half of guided search.  Lower means
+/// predicted-faster; `None` means the model cannot rank the point,
+/// which [`GuidedSearch`] treats as worst-rank (measured only after
+/// every modeled candidate), so pruning stays conservative: an
+/// unmodeled candidate is deprioritized, never silently dropped ahead
+/// of modeled ones.
+pub trait CostRanker<P> {
+    /// Predicted relative cost of `point` on `problem` (lower =
+    /// predicted faster), or `None` if the model cannot rank it.
+    fn rank(&self, point: &P, problem: &Problem) -> Option<f64>;
+}
+
+/// The analytic-model ranker: delegates to
+/// [`KernelSpace::rank_hint`], i.e. the `perfmodel` per-point cost
+/// queries (`perfmodel::point_cost`).  Spaces without a per-point model
+/// (the modeled zoo configs) answer `None` for every point, and guided
+/// search degrades to measuring in grid order under its budget.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ModelRanker;
+
+impl<P: KernelSpace> CostRanker<P> for ModelRanker {
+    fn rank(&self, point: &P, problem: &Problem) -> Option<f64> {
+        point.rank_hint(problem)
+    }
+}
+
 /// A search strategy over an indexable candidate list.
+///
+/// Implementations supply the *policy* hooks ([`name`], [`propose`],
+/// optionally [`refine`] and [`max_evals`]); the provided
+/// [`search_ranked`] driver owns the *mechanism* — memoized evaluation,
+/// the refinement loop, and the measurement cap — so every strategy
+/// measures each candidate at most once and all entry points
+/// (`tune_space_sweep`, `retune_pass`, the modeled `tune_gemm` /
+/// `tune_conv`) route through the same lifecycle.
+///
+/// [`name`]: SearchStrategy::name
+/// [`propose`]: SearchStrategy::propose
+/// [`refine`]: SearchStrategy::refine
+/// [`max_evals`]: SearchStrategy::max_evals
+/// [`search_ranked`]: SearchStrategy::search_ranked
 pub trait SearchStrategy {
-    /// Pick the index of the best candidate given a scoring function
-    /// returning `None` for infeasible candidates.  Returns the chosen
+    /// Stable strategy name for reports (`tuning_host.json` and
+    /// `BENCH_ci.json` carry it in their `search` column).
+    fn name(&self) -> &'static str;
+
+    /// The ordered candidate list to measure.  `pinned` indices (the
+    /// untuned default, the stored incumbent, warm-start seeds) must be
+    /// kept — strategies put them first so a budget cap can never drop
+    /// them in favour of speculative candidates.  `rank` is the cost
+    /// model's prediction (lower = faster, `None` = unmodeled); model-
+    /// blind strategies ignore it.
+    fn propose(
+        &self,
+        n: usize,
+        pinned: &[usize],
+        rank: &dyn Fn(usize) -> Option<f64>,
+    ) -> Vec<usize>;
+
+    /// Neighbour candidates to try around the current measured winner.
+    /// The driver calls this repeatedly while refinement improves the
+    /// winner.  Default: no refinement.  Out-of-range indices are
+    /// filtered by the driver, so `best ± k` neighbourhoods need no
+    /// bounds checks.
+    fn refine(&self, best: usize, n: usize) -> Vec<usize> {
+        let _ = (best, n);
+        Vec::new()
+    }
+
+    /// Hard cap on measured candidates (proposals + refinement), or
+    /// `None` for unbounded.  The driver stops measuring — proposals
+    /// and neighbours alike — once the cap is reached.
+    fn max_evals(&self) -> Option<usize> {
+        None
+    }
+
+    /// The propose → measure → refine driver.  Measures the proposed
+    /// candidates (memoized, capped by [`SearchStrategy::max_evals`]),
+    /// then repeatedly measures [`SearchStrategy::refine`] neighbours of
+    /// the winner while that improves it.  Returns the winning index,
+    /// the number of *fresh* evaluations spent, and the best score
+    /// (higher is better); `None` if nothing scored feasibly.
+    fn search_ranked(
+        &self,
+        n: usize,
+        pinned: &[usize],
+        rank: &dyn Fn(usize) -> Option<f64>,
+        score: &mut dyn FnMut(usize) -> Option<f64>,
+    ) -> Option<(usize, usize, f64)> {
+        if n == 0 {
+            return None;
+        }
+        let cap = self.max_evals().unwrap_or(usize::MAX).max(1);
+        let mut cache: Vec<Option<Option<f64>>> = vec![None; n];
+        let mut evals = 0usize;
+        let mut best: Option<(usize, f64)> = None;
+        for i in self.propose(n, pinned, rank) {
+            if i >= n {
+                continue;
+            }
+            if cache[i].is_none() {
+                if evals >= cap {
+                    break;
+                }
+                evals += 1;
+                cache[i] = Some(score(i));
+            }
+            if let Some(Some(s)) = cache[i] {
+                if best.map(|(_, b)| s > b).unwrap_or(true) {
+                    best = Some((i, s));
+                }
+            }
+        }
+        let (mut best_i, mut best_s) = best?;
+        loop {
+            let mut improved = false;
+            let neighbours = self.refine(best_i, n);
+            if neighbours.is_empty() {
+                break;
+            }
+            for i in neighbours {
+                if i >= n {
+                    continue;
+                }
+                if cache[i].is_none() {
+                    if evals >= cap {
+                        continue;
+                    }
+                    evals += 1;
+                    cache[i] = Some(score(i));
+                }
+                if let Some(Some(s)) = cache[i] {
+                    if s > best_s {
+                        best_i = i;
+                        best_s = s;
+                        improved = true;
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+        Some((best_i, evals, best_s))
+    }
+
+    /// Model-blind entry point: [`SearchStrategy::search_ranked`] with
+    /// no pinned incumbents and no cost model.  Returns the chosen
     /// index, the number of evaluations spent, and the best score.
     fn search(
         &self,
         n_candidates: usize,
         score: &mut dyn FnMut(usize) -> Option<f64>,
-    ) -> Option<(usize, usize, f64)>;
+    ) -> Option<(usize, usize, f64)> {
+        self.search_ranked(n_candidates, &[], &|_| None, score)
+    }
 }
 
 /// Evaluate every candidate (the paper's offline-tuning mode).
@@ -35,20 +202,17 @@ pub trait SearchStrategy {
 pub struct ExhaustiveSearch;
 
 impl SearchStrategy for ExhaustiveSearch {
-    fn search(
+    fn name(&self) -> &'static str {
+        "exhaustive"
+    }
+
+    fn propose(
         &self,
         n: usize,
-        score: &mut dyn FnMut(usize) -> Option<f64>,
-    ) -> Option<(usize, usize, f64)> {
-        let mut best: Option<(usize, f64)> = None;
-        for i in 0..n {
-            if let Some(s) = score(i) {
-                if best.map(|(_, b)| s > b).unwrap_or(true) {
-                    best = Some((i, s));
-                }
-            }
-        }
-        best.map(|(i, s)| (i, n, s))
+        _pinned: &[usize],
+        _rank: &dyn Fn(usize) -> Option<f64>,
+    ) -> Vec<usize> {
+        (0..n).collect()
     }
 }
 
@@ -63,29 +227,33 @@ pub struct RandomSearch {
 }
 
 impl SearchStrategy for RandomSearch {
-    fn search(
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn propose(
         &self,
         n: usize,
-        score: &mut dyn FnMut(usize) -> Option<f64>,
-    ) -> Option<(usize, usize, f64)> {
+        pinned: &[usize],
+        _rank: &dyn Fn(usize) -> Option<f64>,
+    ) -> Vec<usize> {
+        let mut out: Vec<usize> = Vec::new();
+        for &i in pinned {
+            if i < n && !out.contains(&i) {
+                out.push(i);
+            }
+        }
         let mut state = self.seed | 1;
-        let mut next = move || {
+        for _ in 0..self.samples.min(n) {
             state ^= state << 13;
             state ^= state >> 7;
             state ^= state << 17;
-            (state % n as u64) as usize
-        };
-        let mut best: Option<(usize, f64)> = None;
-        let samples = self.samples.min(n);
-        for _ in 0..samples {
-            let i = next();
-            if let Some(s) = score(i) {
-                if best.map(|(_, b)| s > b).unwrap_or(true) {
-                    best = Some((i, s));
-                }
+            let i = (state % n as u64) as usize;
+            if !out.contains(&i) {
+                out.push(i);
             }
         }
-        best.map(|(i, s)| (i, samples, s))
+        out
     }
 }
 
@@ -116,63 +284,155 @@ pub struct HillClimb {
 }
 
 impl SearchStrategy for HillClimb {
-    fn search(
+    fn name(&self) -> &'static str {
+        "hill"
+    }
+
+    fn propose(
         &self,
         n: usize,
-        score: &mut dyn FnMut(usize) -> Option<f64>,
-    ) -> Option<(usize, usize, f64)> {
-        if n == 0 {
-            return None;
+        pinned: &[usize],
+        _rank: &dyn Fn(usize) -> Option<f64>,
+    ) -> Vec<usize> {
+        let mut out: Vec<usize> = Vec::new();
+        for &i in pinned {
+            if i < n && !out.contains(&i) {
+                out.push(i);
+            }
         }
         let mut state = self.seed | 1;
-        let mut next = move || {
+        for _ in 0..self.restarts {
             state ^= state << 13;
             state ^= state >> 7;
             state ^= state << 17;
-            (state % n as u64) as usize
-        };
-        let mut cache: Vec<Option<Option<f64>>> = vec![None; n];
-        let mut evals = 0usize;
-        let mut eval = |i: usize, cache: &mut Vec<Option<Option<f64>>>,
-                        evals: &mut usize| {
-            if cache[i].is_none() {
-                *evals += 1;
-                cache[i] = Some(score(i));
-            }
-            cache[i].unwrap()
-        };
-        let mut best: Option<(usize, f64)> = None;
-        for _ in 0..self.restarts {
-            let mut cur = next();
-            let mut cur_score = match eval(cur, &mut cache, &mut evals) {
-                Some(s) => s,
-                None => continue,
-            };
-            // Greedy walk over the index neighbourhood (candidate lists
-            // are generated in lexicographic parameter order, so +-1 are
-            // parameter neighbours).
-            loop {
-                let mut improved = false;
-                for cand in [cur.wrapping_sub(1), cur + 1, cur + 3, cur.wrapping_sub(3)] {
-                    if cand < n {
-                        if let Some(s) = eval(cand, &mut cache, &mut evals) {
-                            if s > cur_score {
-                                cur = cand;
-                                cur_score = s;
-                                improved = true;
-                            }
-                        }
-                    }
-                }
-                if !improved {
-                    break;
-                }
-            }
-            if best.map(|(_, b)| cur_score > b).unwrap_or(true) {
-                best = Some((cur, cur_score));
+            let i = (state % n as u64) as usize;
+            if !out.contains(&i) {
+                out.push(i);
             }
         }
-        best.map(|(i, s)| (i, evals, s))
+        out
+    }
+
+    // Greedy walk over the index neighbourhood (candidate lists are
+    // generated in lexicographic parameter order, so +-1 / +-3 are
+    // parameter neighbours).
+    fn refine(&self, best: usize, _n: usize) -> Vec<usize> {
+        vec![
+            best.wrapping_sub(1),
+            best + 1,
+            best + 3,
+            best.wrapping_sub(3),
+        ]
+    }
+}
+
+/// Model-guided search: measure only the cost model's top-ranked
+/// candidates (plus every pinned incumbent — the untuned default, the
+/// stored winner, warm-start seeds), then hill-climb around the
+/// measured winner, all under a hard measurement `budget`.
+///
+/// Unmodeled candidates (`rank` = `None`) are worst-ranked: they are
+/// measured only after every modeled candidate, never dropped ahead of
+/// one — conservative pruning.  Candidates whose predicted costs *tie*
+/// keep grid order, so every variant along an unmodeled axis (ISA,
+/// threads) of a tied blocking is proposed together.
+///
+/// # Examples
+///
+/// ```
+/// use portable_kernels::tuner::{GuidedSearch, SearchStrategy};
+///
+/// // A 100-point space; the model correctly ranks index 60 cheapest,
+/// // index 0 is the pinned untuned default.
+/// let strategy = GuidedSearch { budget: 8 };
+/// let (best, evals, score) = strategy
+///     .search_ranked(
+///         100,
+///         &[0],
+///         &|i| Some((i as f64 - 60.0).abs()),
+///         &mut |i| Some(-(i as f64 - 60.0).abs()),
+///     )
+///     .unwrap();
+/// assert_eq!(best, 60);
+/// assert_eq!(score, 0.0);
+/// // ...within the measurement budget, not the exhaustive 100.
+/// assert!(evals <= 8);
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct GuidedSearch {
+    /// Hard cap on measured candidates per search (proposals +
+    /// refinement).  Pinned incumbents are proposed first, so they are
+    /// the last thing a small budget drops.
+    pub budget: usize,
+}
+
+impl Default for GuidedSearch {
+    fn default() -> Self {
+        Self { budget: 8 }
+    }
+}
+
+impl SearchStrategy for GuidedSearch {
+    fn name(&self) -> &'static str {
+        "guided"
+    }
+
+    fn max_evals(&self) -> Option<usize> {
+        Some(self.budget.max(1))
+    }
+
+    fn propose(
+        &self,
+        n: usize,
+        pinned: &[usize],
+        rank: &dyn Fn(usize) -> Option<f64>,
+    ) -> Vec<usize> {
+        let budget = self.budget.max(1);
+        let mut out: Vec<usize> = Vec::new();
+        for &i in pinned {
+            if i < n && !out.contains(&i) {
+                out.push(i);
+            }
+        }
+        // Rank the rest: modeled candidates ascending by predicted
+        // cost (ties keep grid order), unmodeled candidates after every
+        // modeled one (worst rank).
+        let mut modeled: Vec<(f64, usize)> = Vec::new();
+        let mut unmodeled: Vec<usize> = Vec::new();
+        for i in 0..n {
+            if out.contains(&i) {
+                continue;
+            }
+            match rank(i) {
+                Some(c) if c.is_finite() => modeled.push((c, i)),
+                _ => unmodeled.push(i),
+            }
+        }
+        modeled.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.1.cmp(&b.1))
+        });
+        // Keep ~a quarter of the budget for refinement around the
+        // measured winner.
+        let cap = out.len()
+            + (budget.saturating_sub(out.len()) * 3 / 4).max(1);
+        for i in modeled.into_iter().map(|(_, i)| i).chain(unmodeled) {
+            if out.len() >= cap {
+                break;
+            }
+            out.push(i);
+        }
+        out
+    }
+
+    fn refine(&self, best: usize, _n: usize) -> Vec<usize> {
+        vec![
+            best.wrapping_sub(1),
+            best + 1,
+            best + 3,
+            best.wrapping_sub(3),
+        ]
     }
 }
 
@@ -277,6 +537,110 @@ mod tests {
             .search(100, &mut f)
             .unwrap();
         assert!((idx as i64 - 70).abs() <= 5, "landed at {idx}");
+    }
+
+    #[test]
+    fn driver_never_remeasures_a_candidate() {
+        // Pinned, proposed, and refined indices overlap; the memoized
+        // driver must still evaluate each index at most once.
+        let mut measured: Vec<usize> = Vec::new();
+        let strategy = HillClimb { restarts: 16, seed: 3 };
+        let (_, evals, _) = strategy
+            .search_ranked(20, &[0, 0, 5], &|_| None, &mut |i| {
+                measured.push(i);
+                Some(i as f64)
+            })
+            .unwrap();
+        assert_eq!(evals, measured.len());
+        let mut dedup = measured.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), measured.len(), "re-measured: {measured:?}");
+    }
+
+    #[test]
+    fn guided_measures_pinned_before_ranked_candidates() {
+        // Truthful model: cheapest-cost candidate is the true winner.
+        let mut measured: Vec<usize> = Vec::new();
+        let strategy = GuidedSearch { budget: 4 };
+        let (best, evals, _) = strategy
+            .search_ranked(
+                10,
+                &[7],
+                &|i| Some(i as f64),
+                &mut |i| {
+                    measured.push(i);
+                    Some(-(i as f64))
+                },
+            )
+            .unwrap();
+        // The pinned incumbent is the very first measurement, the
+        // model's top pick follows, and the budget caps the rest.
+        assert_eq!(measured[0], 7);
+        assert_eq!(measured[1], 0);
+        assert_eq!(best, 0);
+        assert!(evals <= 4, "budget exceeded: {measured:?}");
+    }
+
+    #[test]
+    fn guided_tied_ranks_keep_grid_order() {
+        // Pairs of candidates tie on predicted cost (an unmodeled axis
+        // such as ISA or threads): both variants of the best-ranked
+        // pair must be proposed, in grid order, before the next pair.
+        let strategy = GuidedSearch { budget: 16 };
+        let proposals =
+            strategy.propose(8, &[], &|i| Some((i / 2) as f64));
+        assert_eq!(&proposals[..4], &[0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn guided_unmodeled_candidates_rank_worst_but_survive() {
+        // Candidates 0..3 are unmodeled (None): they must come after
+        // every modeled candidate, not be dropped, so pruning is
+        // conservative.
+        let strategy = GuidedSearch { budget: 32 };
+        let proposals = strategy.propose(6, &[], &|i| {
+            if i < 3 {
+                None
+            } else {
+                Some(i as f64)
+            }
+        });
+        assert_eq!(proposals, vec![3, 4, 5, 0, 1, 2]);
+    }
+
+    #[test]
+    fn guided_with_lying_model_never_beats_the_pinned_default() {
+        // The model inverts the truth (claims the worst candidate is
+        // cheapest).  The pinned default is still measured, so the
+        // returned winner can never score below it.
+        let truth = |i: usize| Some(((i % 3) as f64) - (i as f64) / 10.0);
+        let strategy = GuidedSearch { budget: 3 };
+        let (_, _, best) = strategy
+            .search_ranked(
+                12,
+                &[0],
+                // Lying rank: pretends high indices are cheapest.
+                &|i| Some(-(i as f64)),
+                &mut |i| truth(i),
+            )
+            .unwrap();
+        let default_score = truth(0).unwrap();
+        assert!(best >= default_score, "{best} < default {default_score}");
+    }
+
+    #[test]
+    fn guided_budget_one_measures_exactly_the_default() {
+        let mut measured: Vec<usize> = Vec::new();
+        let strategy = GuidedSearch { budget: 1 };
+        let (best, evals, _) = strategy
+            .search_ranked(10, &[0], &|i| Some(-(i as f64)), &mut |i| {
+                measured.push(i);
+                Some(i as f64)
+            })
+            .unwrap();
+        assert_eq!((best, evals), (0, 1));
+        assert_eq!(measured, vec![0]);
     }
 
     #[test]

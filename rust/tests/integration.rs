@@ -27,7 +27,7 @@ fn full_tuning_workflow_roundtrip() {
         for layer in resnet50_layers().iter().take(6) {
             let r = tune_conv(&dev, layer, 1, &ExhaustiveSearch).unwrap();
             assert!(r.gflops > 0.0);
-            db.put_conv(
+            db.put(
                 SelectionKey::conv(
                     dev_id, layer.window, layer.stride, layer.in_h,
                     layer.in_w, layer.in_c, layer.out_c, 1,
@@ -46,7 +46,7 @@ fn full_tuning_workflow_roundtrip() {
     for dev_id in devices {
         let stem = &resnet50_layers()[0];
         let (cfg, g) = loaded
-            .get_conv(&SelectionKey::conv(
+            .get::<ConvConfig>(&SelectionKey::conv(
                 dev_id, stem.window, stem.stride, stem.in_h, stem.in_w,
                 stem.in_c, stem.out_c, 1,
             ))

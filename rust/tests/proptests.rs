@@ -424,10 +424,11 @@ fn prop_conv_algorithms_agree_on_winograd_domain() {
     }
 }
 
-/// Generic `Selection<P: KernelSpace>` storage round-trips arbitrary
-/// GEMM points (every ISA value, including ones this host cannot run —
-/// storage is host-independent; only *plans* degrade) and conv points
-/// through JSON save/load, bit-exactly.
+/// Generic kernel-space storage (`SelectionDb::put`/`get` over any
+/// `P: KernelSpace`) round-trips arbitrary GEMM points (every ISA
+/// value, including ones this host cannot run — storage is
+/// host-independent; only *plans* degrade) and conv points through
+/// JSON save/load, bit-exactly.
 #[test]
 fn prop_selection_db_points_roundtrip_via_disk() {
     use portable_kernels::config::ConvAlgorithm;
@@ -523,8 +524,8 @@ fn prop_selection_db_points_roundtrip_via_disk() {
 }
 
 /// Legacy `blocked` / `conv_native` DB fixtures load through the
-/// migration shims and plan *identically* to what those entries always
-/// meant: the stored blocking (scalar micro-kernel) for GEMM, the
+/// migrate-on-lookup path and plan *identically* to what those entries
+/// always meant: the stored blocking (scalar micro-kernel) for GEMM, the
 /// stored algorithm + blocking for conv.
 #[test]
 fn prop_legacy_db_fixtures_plan_identically() {
@@ -864,10 +865,20 @@ fn prop_epoch_swap_readers_never_torn() {
     });
 }
 
-/// Fabricated-cost backend for the promotion-invariant test: every run
-/// takes exactly `cost_ns(current point)` of "device time", so the
-/// measured-promotion protocol can be driven through orderings chosen
-/// by the test instead of wall-clock noise.
+/// Manifest with a single 96^3 GEMM artifact, shared by the fabricated
+/// cost-model sweep tests.
+const G96_MANIFEST: &str = r#"{"version": 1, "artifacts": [{
+    "name": "g96", "kind": "gemm", "impl": "pallas",
+    "file": "g96.hlo.txt", "flops": 1769472,
+    "m": 96, "n": 96, "k": 96,
+    "inputs": [{"shape": [96, 96], "dtype": "float32"},
+               {"shape": [96, 96], "dtype": "float32"}],
+    "groups": ["gemm"]}]}"#;
+
+/// Fabricated-cost backend for the cost-model-driven tuning tests:
+/// every run takes exactly `cost_ns(current point)` of "device time",
+/// so search and promotion protocols can be driven through orderings
+/// chosen by the test instead of wall-clock noise.
 struct CostModelBackend {
     store: portable_kernels::runtime::ArtifactStore,
     point: GemmPoint,
@@ -934,17 +945,7 @@ fn prop_retune_never_promotes_worse_measured() {
     use std::sync::Arc;
 
     let dir = TempDir::new("prop-retune").unwrap();
-    std::fs::write(
-        dir.path().join("manifest.json"),
-        r#"{"version": 1, "artifacts": [{
-            "name": "g96", "kind": "gemm", "impl": "pallas",
-            "file": "g96.hlo.txt", "flops": 1769472,
-            "m": 96, "n": 96, "k": 96,
-            "inputs": [{"shape": [96, 96], "dtype": "float32"},
-                       {"shape": [96, 96], "dtype": "float32"}],
-            "groups": ["gemm"]}]}"#,
-    )
-    .unwrap();
+    std::fs::write(dir.path().join("manifest.json"), G96_MANIFEST).unwrap();
     let store = ArtifactStore::open(dir.path()).unwrap();
     let key = SelectionKey::gemm(HOST_DEVICE, 96, 96, 96);
     let hot = vec![key.op.clone()];
@@ -1061,6 +1062,157 @@ fn prop_retune_never_promotes_worse_measured() {
             after.db.get::<GemmPoint>(&key).expect("incumbent kept");
         assert_eq!(kept, incumbent, "case {case}");
         assert_eq!(kept_gflops, 0.0001, "case {case}");
+    }
+}
+
+/// Guided search under a *truthful* cost model: fabricate run costs as
+/// a monotone function of the very `rank_hint` the guided ranking
+/// consults, so the model's top-ranked candidate really is the fastest
+/// point.  The guided sweep must then find a winner measuring at least
+/// as fast as the exhaustive sweep's — while measuring only its budget,
+/// not the whole grid.
+#[test]
+fn prop_guided_sweep_matches_exhaustive_under_truthful_model() {
+    use portable_kernels::config::{KernelSpace, Problem};
+    use portable_kernels::runtime::{ArtifactStore, HOST_DEVICE};
+    use portable_kernels::tuner::{
+        gemm_point_grid, tune_space_sweep, ExhaustiveSearch, GuidedSearch,
+        SearchStrategy, SelectionDb,
+    };
+    use portable_kernels::util::tmp::TempDir;
+
+    fn truthful_cost(p: &GemmPoint) -> u64 {
+        match p.rank_hint(&Problem::Gemm { m: 96, n: 96, k: 96 }) {
+            Some(r) if r.is_finite() => (r * 1_000_000.0) as u64 + 1,
+            _ => 10_000_000_000,
+        }
+    }
+
+    let dir = TempDir::new("prop-guided-truthful").unwrap();
+    std::fs::write(dir.path().join("manifest.json"), G96_MANIFEST).unwrap();
+    let store = ArtifactStore::open(dir.path()).unwrap();
+    let grid = gemm_point_grid(true, &[1, 2], &Isa::detect());
+    let op = "gemm_96x96x96";
+
+    let run = |strategy: &dyn SearchStrategy| {
+        let mut db = SelectionDb::new();
+        let mut engine = CostModelBackend {
+            store: store.clone(),
+            point: GemmPoint::default(),
+            cost_ns: Box::new(truthful_cost),
+        };
+        let sweep = tune_space_sweep(
+            &mut engine,
+            "gemm",
+            &grid,
+            2,
+            HOST_DEVICE,
+            strategy,
+            &mut |e: &mut CostModelBackend, p: &GemmPoint| e.point = *p,
+            &mut db,
+        )
+        .unwrap();
+        let (_, gf) = sweep.winners[op];
+        (gf, sweep.points_measured_for(op))
+    };
+
+    let (ex_gf, ex_points) = run(&ExhaustiveSearch);
+    // The pinned default may sit outside the grid (its threads value
+    // need not be on the sampled axis), hence >= rather than ==.
+    assert!(ex_points >= grid.len(), "{ex_points} < {}", grid.len());
+
+    let mut rng = XorShift::new(2468);
+    for case in 0..6 {
+        let budget = rng.range(2, 8) as usize;
+        let (gf, points) = run(&GuidedSearch { budget });
+        assert!(
+            points <= budget,
+            "case {case}: guided measured {points} > budget {budget}"
+        );
+        assert!(points < ex_points, "case {case}: no pruning happened");
+        assert!(
+            gf + 1e-9 >= ex_gf,
+            "case {case}: truthful-model guided winner {gf} GF/s lost \
+             to exhaustive {ex_gf} GF/s"
+        );
+    }
+}
+
+/// Guided search under a *lying* cost model: run costs are uncorrelated
+/// with the rank hints, and the model's favorite candidate is made the
+/// slowest point of all.  The default point is pinned into every
+/// strategy's proposals, so even a maximally wrong model degrades the
+/// guided sweep to the measured default — never below it.
+#[test]
+fn prop_guided_sweep_with_lying_model_never_loses_to_the_default() {
+    use portable_kernels::config::{KernelSpace, Problem};
+    use portable_kernels::runtime::{ArtifactStore, HOST_DEVICE};
+    use portable_kernels::tuner::{
+        gemm_point_grid, tune_space_sweep, GuidedSearch, SelectionDb,
+    };
+    use portable_kernels::util::tmp::TempDir;
+
+    let dir = TempDir::new("prop-guided-lying").unwrap();
+    std::fs::write(dir.path().join("manifest.json"), G96_MANIFEST).unwrap();
+    let store = ArtifactStore::open(dir.path()).unwrap();
+    let grid = gemm_point_grid(true, &[1, 2], &Isa::detect());
+    let op = "gemm_96x96x96";
+    let problem = Problem::Gemm { m: 96, n: 96, k: 96 };
+    // The model's favorite: the grid point it ranks fastest.
+    let favorite = grid
+        .iter()
+        .copied()
+        .min_by(|a, b| {
+            a.rank_hint(&problem)
+                .unwrap_or(f64::INFINITY)
+                .partial_cmp(&b.rank_hint(&problem).unwrap_or(f64::INFINITY))
+                .unwrap()
+        })
+        .unwrap();
+    let default = GemmPoint::default();
+
+    let mut rng = XorShift::new(1357);
+    for case in 0..6 {
+        let budget = rng.range(1, 8) as usize;
+        let salt = rng.next_u64();
+        let cost = move |p: &GemmPoint| -> u64 {
+            if *p == favorite && favorite != default {
+                // The model lies: its favorite is in truth the slowest.
+                100_000_000
+            } else {
+                1_000_000 + point_jitter(p, salt, 900_000)
+            }
+        };
+        let mut db = SelectionDb::new();
+        let mut engine = CostModelBackend {
+            store: store.clone(),
+            point: default,
+            cost_ns: Box::new(cost),
+        };
+        let sweep = tune_space_sweep(
+            &mut engine,
+            "gemm",
+            &grid,
+            2,
+            HOST_DEVICE,
+            &GuidedSearch { budget },
+            &mut |e: &mut CostModelBackend, p: &GemmPoint| e.point = *p,
+            &mut db,
+        )
+        .unwrap();
+        let (_, gf) = sweep.winners[op];
+        let default_gf = sweep
+            .gflops_for(op, &default)
+            .expect("the pinned default is always measured");
+        assert!(
+            gf + 1e-9 >= default_gf,
+            "case {case}: lying-model winner {gf} GF/s measured below \
+             the default {default_gf} GF/s"
+        );
+        assert!(
+            sweep.points_measured_for(op) <= budget.max(1),
+            "case {case}: budget overrun"
+        );
     }
 }
 

@@ -153,7 +153,11 @@ fn every_actor_plans_with_the_shared_tuning_db() {
     // tuned entry covers the lot.
     let tuned = BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 1 };
     let mut db = SelectionDb::new();
-    db.put_blocked(SelectionKey::gemm(HOST_DEVICE, 16, 16, 16), tuned, 9.0);
+    db.put(
+        SelectionKey::gemm(HOST_DEVICE, 16, 16, 16),
+        portable_kernels::config::GemmPoint::scalar(tuned),
+        9.0,
+    );
     let shared = Arc::new(db);
 
     // The constructor runs on each actor thread and *proves* the shared
