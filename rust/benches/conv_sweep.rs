@@ -6,7 +6,8 @@
 use std::path::Path;
 
 use portable_kernels::blas::{
-    conv2d_im2col, conv2d_native, BlockedParams, Conv2dShape,
+    conv2d_im2col, conv2d_native_isa, conv2d_winograd, BlockedParams,
+    Conv2dShape, Isa,
 };
 use portable_kernels::config::ConvAlgorithm;
 use portable_kernels::harness::{fig_conv, fig_registers, Report};
@@ -104,8 +105,8 @@ fn host_blocked() {
 }
 
 /// Measured host anchor for the *algorithm* axis: the same 3×3/s1 layer
-/// through every native algorithm × config × threads candidate of the
-/// tuner's conv grid — Fig. 3's "the winning algorithm flips" story,
+/// through every native algorithm × config × threads × ISA candidate of
+/// the tuner's conv grid — Fig. 3's "the winning algorithm flips" story,
 /// measured on the host with no artifacts needed.
 fn host_algorithms() {
     let s = Conv2dShape::same(2, 32, 32, 16, 32, 3, 1);
@@ -118,17 +119,25 @@ fn host_algorithms() {
     let mut table = Report::new(
         "host conv algorithms 2x32x32x16->32 across the tuner grid \
          (best of 3)",
-        &["algorithm", "config", "ms", "effective GF/s"],
+        &["algorithm", "config", "isa", "ms", "effective GF/s"],
     );
     let mut default_gf = 0.0f64;
     let mut best: Option<(String, f64)> = None;
-    for cand in conv_native_grid(true, &[1, 2, 0]) {
+    for cand in conv_native_grid(true, &[1, 2, 0], &Isa::detect()) {
         let stats = bench(&cand.name(), 1, 3, || {
-            black_box(conv2d_native(&x, &f, &s, &cand.config, &cand.blocked));
+            black_box(conv2d_native_isa(
+                &x,
+                &f,
+                &s,
+                &cand.config,
+                &cand.blocked,
+                cand.isa,
+            ));
         });
         let gf = stats.gflops(flops);
         if cand.config.algorithm == ConvAlgorithm::Im2col
             && cand.blocked == BlockedParams::default()
+            && cand.isa == Isa::Scalar
         {
             default_gf = gf;
         }
@@ -138,6 +147,7 @@ fn host_algorithms() {
         table.row(vec![
             cand.config.algorithm.to_string(),
             cand.name(),
+            cand.isa.to_string(),
             format!("{:.3}", stats.min.as_secs_f64() * 1e3),
             format!("{gf:.2}"),
         ]);
@@ -154,9 +164,54 @@ fn host_algorithms() {
         .expect("write csv");
 }
 
+/// Measured host anchor for the *Winograd tile-size* axis: the same
+/// 3×3/s1 layer through `wino_m ∈ {2, 4}` crossed with every detected
+/// micro-kernel ISA, direct calls into `conv2d_winograd` so the row is
+/// exactly one transform-domain batched-GEMM lowering.  F(4×4) does
+/// 36 transform-domain multiplies where F(2×2) does 16 but replaces
+/// 4× as many direct-conv MACs per tile, so the effective-GF/s column
+/// shows which tile size the arithmetic saving actually pays on.
+fn host_wino() {
+    let s = Conv2dShape::same(2, 32, 32, 16, 32, 3, 1);
+    let flops = 2 * (s.batch * s.out_h * s.out_w * s.out_c
+        * s.window * s.window * s.in_c) as u64;
+    let mut rng = XorShift::new(17);
+    let x = rng.f32_vec(s.input_elems());
+    let f = rng.f32_vec(s.filter_elems());
+
+    let mut table = Report::new(
+        "host winograd tile size x isa 2x32x32x16->32 (best of 3)",
+        &["wino_m", "isa", "threads", "ms", "effective GF/s"],
+    );
+    let params = BlockedParams::default();
+    for wino_m in [2usize, 4] {
+        for &isa in &Isa::detect() {
+            for threads in [1usize, 0] {
+                let p = BlockedParams { threads, ..params };
+                let label = format!("wino{wino_m}_{isa}_t{threads}");
+                let stats = bench(&label, 1, 3, || {
+                    black_box(conv2d_winograd(&x, &f, &s, wino_m, &p, isa));
+                });
+                table.row(vec![
+                    wino_m.to_string(),
+                    isa.to_string(),
+                    threads.to_string(),
+                    format!("{:.3}", stats.min.as_secs_f64() * 1e3),
+                    format!("{:.2}", stats.gflops(flops)),
+                ]);
+            }
+        }
+    }
+    println!("\n{}", table.render());
+    table
+        .save_csv(Path::new("reports/conv_wino_host.csv"))
+        .expect("write csv");
+}
+
 fn main() {
     modeled();
     host_blocked();
     host_algorithms();
+    host_wino();
     measured();
 }

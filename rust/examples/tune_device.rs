@@ -11,8 +11,10 @@
 //!    `--search` strategy.  Enumerate the GEMM space grid
 //!    (`BlockedParams` × `threads` × runtime-detected micro-kernel
 //!    **ISA** — scalar/SSE2/AVX2/FMA on x86-64) and the conv space grid
-//!    (`ConvAlgorithm × ConvConfig × threads` — tiled vs im2col vs
-//!    winograd, the paper's §4.1 algorithm axis), let the strategy pick
+//!    (`ConvAlgorithm × ConvConfig × threads × ISA` — tiled vs im2col
+//!    vs winograd with its `wino_m ∈ {2, 4}` tile size, the paper's
+//!    §4.1 algorithm axis, plus the micro-kernel ISA the lowered
+//!    transform-domain/im2col GEMMs dispatch), let the strategy pick
 //!    which applicable points to execute through `NativeEngine` via
 //!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
 //!    and prove the engine consults it — including the chosen algorithm
@@ -39,9 +41,9 @@
 //! `gemm_point`/`conv_point` schema, each entry annotated with `search`
 //! and `points_measured`) and `<out>/BENCH_ci.json` (tuned-vs-default
 //! GFLOP/s per problem with `points_measured` per problem, `algorithm`
-//! columns on conv rows and `isa` columns on GEMM rows, and the top
-//! level `search` column CI keys its guided-vs-exhaustive assertions
-//! on).  `--merge OLD.json` folds a previously written (possibly legacy
+//! + `wino_m` + `isa` columns on conv rows and `isa` columns on GEMM
+//! rows, and the top level `search` column CI keys its
+//! guided-vs-exhaustive assertions on).  `--merge OLD.json` folds a previously written (possibly legacy
 //! `blocked`/`conv_native`) DB into the unified schema, keeping the
 //! faster entry per key.  Exits non-zero if the sweep produced no
 //! selections, a tuned config measured below the default, or — under
@@ -282,9 +284,10 @@ fn sweep_store(
 
 /// The measured half: one generic sweep per kernel space (GEMM:
 /// `BlockedParams × threads × ISA`; conv: `ConvAlgorithm × ConvConfig ×
-/// threads`) under the chosen strategy, persist, optionally fold a
-/// legacy DB in, and prove the engine consults the DB — algorithm and
-/// ISA included — at plan time.
+/// threads × ISA`, the config axis carrying the Winograd `wino_m` tile
+/// size) under the chosen strategy, persist, optionally fold a legacy
+/// DB in, and prove the engine consults the DB — algorithm and ISA
+/// included — at plan time.
 fn measured_host_sweep(
     quick: bool,
     out_dir: &Path,
@@ -317,12 +320,12 @@ fn measured_host_sweep(
         if quick { &[1, 2] } else { &[1, 2, 4, 0] };
     let isas = Isa::detect();
     let grid = gemm_point_grid(quick, threads, &isas);
-    let conv_grid = conv_native_grid(quick, threads);
+    let conv_grid = conv_native_grid(quick, threads, &isas);
     let iters = if quick { 3 } else { 5 };
     println!(
         "detected ISAs: {:?}; gemm grid: {} blocking x threads x isa \
-         points; conv grid: {} algorithm x config x threads points; \
-         {} iters each; search {} (budget {})",
+         points; conv grid: {} algorithm x config x threads x isa \
+         points; {} iters each; search {} (budget {})",
         isas.iter().map(|i| i.as_str()).collect::<Vec<_>>(),
         grid.len(),
         conv_grid.len(),
@@ -376,12 +379,17 @@ fn measured_host_sweep(
     }
     // Under exhaustive search the algorithm axis must actually have been
     // swept: every 3x3/s1 conv problem measures all three native
-    // algorithms.  (A budgeted strategy prunes by design, so the
-    // coverage contract only binds the exhaustive run — CI runs both and
-    // compares.)
+    // algorithms — and, within Winograd, both `wino_m` tile sizes.  (A
+    // budgeted strategy prunes by design, so the coverage contract only
+    // binds the exhaustive run — CI runs both and compares.)
+    let mut winos_swept: Vec<u32> = Vec::new();
     for op in conv_sweep.winners.keys() {
         let algs =
             conv_sweep.axis_values_for(op, |c| c.config.algorithm);
+        let winos = conv_sweep.axis_values_for(op, |c| {
+            (c.config.algorithm == ConvAlgorithm::Winograd)
+                .then_some(c.config.wino_m)
+        });
         if exhaustive && op.starts_with("conv_3x3s1") {
             for want in [
                 ConvAlgorithm::Im2col,
@@ -396,9 +404,27 @@ fn measured_host_sweep(
                     .into());
                 }
             }
+            for want in [2u32, 4] {
+                if !winos.contains(&Some(want)) {
+                    return Err(format!(
+                        "{op}: winograd wino_m={want} was never \
+                         measured — the wino_m axis collapsed"
+                    )
+                    .into());
+                }
+            }
         }
-        println!("  {op}: measured algorithms {algs:?}");
+        let winos: Vec<u32> = winos.into_iter().flatten().collect();
+        for &m in &winos {
+            if !winos_swept.contains(&m) {
+                winos_swept.push(m);
+            }
+        }
+        println!(
+            "  {op}: measured algorithms {algs:?}, wino_m {winos:?}"
+        );
     }
+    winos_swept.sort_unstable();
     // ... and so must the ISA axis, wherever the host supports more
     // than scalar.
     let mut isas_swept: Vec<Isa> = Vec::new();
@@ -524,12 +550,13 @@ fn measured_host_sweep(
     // BENCH_ci.json: tuned vs default per problem.  The default points
     // are *pinned* into every strategy's proposals, so tuned >= default
     // is an invariant of the argmax, not a flaky timing assertion.  Conv
-    // entries carry the chosen-algorithm column; GEMM entries the
-    // chosen-ISA column plus the best *measured scalar* point (tuned >=
-    // scalar-best is the same argmax invariant — the winner is the max
-    // over a superset of the measured scalar rows).  Every entry carries
-    // `points_measured` so CI can assert guided search's >=10x
-    // measured-point savings against the exhaustive baseline.
+    // entries carry the chosen-algorithm and `wino_m` columns; conv and
+    // GEMM entries alike carry the chosen-ISA column plus the best
+    // *measured scalar* point (tuned >= scalar-best is the same argmax
+    // invariant — the winner is the max over a superset of the measured
+    // scalar rows).  Every entry carries `points_measured` so CI can
+    // assert guided search's >=10x measured-point savings against the
+    // exhaustive baseline.
     let default = GemmPoint::default();
     let conv_default = ConvPoint::default();
     let mut problems = Value::object();
@@ -541,6 +568,7 @@ fn measured_host_sweep(
                            tuned_config: String,
                            points_measured: usize,
                            algorithm: Option<&str>,
+                           wino_m: Option<u64>,
                            isa: Option<(&str, f64)>,
                            problems: &mut Value,
                            worst_ratio: &mut f64|
@@ -560,6 +588,9 @@ fn measured_host_sweep(
             .set("points_measured", points_measured as u64);
         if let Some(alg) = algorithm {
             entry.set("algorithm", alg);
+        }
+        if let Some(m) = wino_m {
+            entry.set("wino_m", m);
         }
         if let Some((isa, scalar_gf)) = isa {
             if tuned_gf < scalar_gf {
@@ -608,6 +639,7 @@ fn measured_host_sweep(
             point.name(),
             points,
             None,
+            None,
             Some((point.isa.as_str(), scalar_gf)),
             &mut problems,
             &mut worst_ratio,
@@ -616,6 +648,16 @@ fn measured_host_sweep(
     for (op, (cand, tuned_gf)) in &conv_sweep.winners {
         let default_gf =
             conv_sweep.gflops_for(op, &conv_default).unwrap_or(0.0);
+        // Best measured scalar-ISA conv point: the same argmax baseline
+        // the GEMM ISA column is judged against.
+        let scalar_gf = conv_sweep
+            .rows
+            .iter()
+            .filter(|r| {
+                &r.problem == op && r.point.isa == Isa::Scalar
+            })
+            .map(|r| r.gflops)
+            .fold(0.0f64, f64::max);
         let points = conv_sweep.points_measured_for(op);
         total_points += points;
         add_problem(
@@ -625,7 +667,8 @@ fn measured_host_sweep(
             cand.name(),
             points,
             Some(cand.config.algorithm.as_str()),
-            None,
+            Some(cand.config.wino_m as u64),
+            Some((cand.isa.as_str(), scalar_gf)),
             &mut problems,
             &mut worst_ratio,
         )?;
@@ -647,6 +690,12 @@ fn measured_host_sweep(
         .set("points_measured", total_points as u64)
         .set("isas_detected", isa_strs(&isas))
         .set("isas_swept", isa_strs(&isas_swept))
+        .set(
+            "conv_wino_swept",
+            Value::Array(
+                winos_swept.iter().map(|&m| Value::from(m)).collect(),
+            ),
+        )
         .set("iters", iters)
         .set("problems", problems);
     let bench_path = out_dir.join("BENCH_ci.json");

@@ -266,6 +266,47 @@ pub fn gemm_blocked_isa(
     c
 }
 
+/// Batched `C[i] = A[i] @ B[i]` for `batch` independent row-major GEMMs
+/// of identical shape, concatenated slice-wise in all three operands —
+/// the entry point Winograd's transform-domain multiplies lower onto
+/// (paper §4.1.2: one GEMM per transform-domain position).
+///
+/// Each slice runs [`gemm_blocked_isa`] verbatim under the same `params`
+/// and `isa`, so every batch element is bit-identical to a standalone
+/// [`gemm_blocked_isa`] call on that slice — including across thread
+/// counts (`params.threads` parallelizes *inside* each GEMM over its
+/// macro-tile bands; the batch loop itself is sequential, preserving
+/// the crate's disjoint-band determinism).
+///
+/// Panics on operand/shape mismatch or an unavailable `isa`, exactly
+/// like [`gemm_blocked_isa`].
+pub fn gemm_batched_isa(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
+    assert_eq!(a.len(), batch * m * k, "batched A shape mismatch");
+    assert_eq!(b.len(), batch * k * n, "batched B shape mismatch");
+    let mut c = Vec::with_capacity(batch * m * n);
+    for i in 0..batch {
+        c.extend_from_slice(&gemm_blocked_isa(
+            &a[i * m * k..(i + 1) * m * k],
+            &b[i * k * n..(i + 1) * k * n],
+            m,
+            n,
+            k,
+            params,
+            isa,
+        ));
+    }
+    c
+}
+
 /// Packing buffer for one `bm x bk` A macro-panel: strips of `mr` rows,
 /// ragged strips zero-padded, so size for the rounded-up strip count.
 fn alloc_apack(params: &BlockedParams) -> Vec<f32> {
@@ -633,6 +674,82 @@ mod tests {
             ));
             assert!(r.is_err(), "{missing} should have panicked");
         }
+    }
+
+    #[test]
+    fn batched_gemm_is_slicewise_bit_identical() {
+        // Each batch element must equal a standalone gemm_blocked_isa
+        // call on its slice, bit for bit, for every detected ISA and
+        // across thread counts.
+        let (batch, m, n, k) = (5, 13, 11, 7);
+        let a: Vec<f32> =
+            (0..batch * m * k).map(|i| (i % 9) as f32 - 4.0).collect();
+        let b: Vec<f32> =
+            (0..batch * k * n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let base =
+            BlockedParams { bm: 8, bn: 8, bk: 4, mr: 2, nr: 4, threads: 1 };
+        for isa in Isa::detect() {
+            for threads in [1usize, 0, 3] {
+                let params = BlockedParams { threads, ..base };
+                let c = gemm_batched_isa(&a, &b, batch, m, n, k, &params, isa);
+                assert_eq!(c.len(), batch * m * n);
+                for i in 0..batch {
+                    let solo = gemm_blocked_isa(
+                        &a[i * m * k..(i + 1) * m * k],
+                        &b[i * k * n..(i + 1) * k * n],
+                        m,
+                        n,
+                        k,
+                        &params,
+                        isa,
+                    );
+                    assert!(
+                        c[i * m * n..(i + 1) * m * n] == solo[..],
+                        "{isa} threads={threads} batch element {i} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_gemm_matches_naive_per_slice() {
+        let (batch, m, n, k) = (3, 6, 5, 4);
+        let a: Vec<f32> =
+            (0..batch * m * k).map(|i| (i % 5) as f32 - 2.0).collect();
+        let b: Vec<f32> =
+            (0..batch * k * n).map(|i| (i % 3) as f32 - 1.0).collect();
+        let params = BlockedParams { threads: 1, ..Default::default() };
+        let c =
+            gemm_batched_isa(&a, &b, batch, m, n, k, &params, Isa::Scalar);
+        for i in 0..batch {
+            let naive = gemm_naive(
+                &a[i * m * k..(i + 1) * m * k],
+                &b[i * k * n..(i + 1) * k * n],
+                m,
+                n,
+                k,
+            );
+            assert!(
+                max_abs_diff(&c[i * m * n..(i + 1) * m * n], &naive) < 1e-5,
+                "batch element {i}"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "batched A shape mismatch")]
+    fn batched_gemm_rejects_short_operands() {
+        gemm_batched_isa(
+            &[1.0; 3],
+            &[1.0; 4],
+            2,
+            1,
+            1,
+            2,
+            &BlockedParams::default(),
+            Isa::Scalar,
+        );
     }
 
     #[test]

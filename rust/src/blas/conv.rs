@@ -14,9 +14,10 @@
 //! the pool workers (disjoint writes, so bit-identical to serial), and
 //! the lowered GEMM parallelizes over its own macro-tile bands.
 
-use super::blocked::{gemm_blocked, BlockedParams};
+use super::blocked::{gemm_blocked_isa, BlockedParams};
 use super::direct::conv2d_tiled;
 use super::winograd::conv2d_winograd;
+use super::Isa;
 use crate::config::{ConvAlgorithm, ConvConfig};
 use crate::util::pool;
 
@@ -243,19 +244,36 @@ pub fn im2col_threaded(
 
 /// Convolution by im2col + blocked GEMM — the native engine's historical
 /// conv path (the paper's §4.1 "lower onto GEMM" algorithm played on the
-/// host).  Both stages honor `params.threads`.
+/// host), with the scalar micro-kernel.  See [`conv2d_im2col_isa`] for
+/// the ISA-explicit form plans execute.
 pub fn conv2d_im2col(
     x: &[f32],
     f: &[f32],
     s: &Conv2dShape,
     params: &BlockedParams,
 ) -> Vec<f32> {
+    conv2d_im2col_isa(x, f, s, params, Isa::Scalar)
+}
+
+/// [`conv2d_im2col`] with an explicit micro-kernel [`Isa`] for the
+/// lowered GEMM — the conv side of the runtime-dispatched SIMD axis
+/// (`ConvPoint::isa`).  Both stages honor `params.threads`; `isa` must
+/// be available on the executing host (the plan layer degrades off-host
+/// ISAs to scalar), and `Isa::Scalar` is bit-identical to
+/// [`conv2d_im2col`].
+pub fn conv2d_im2col_isa(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
     assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
     let patches = im2col_threaded(x, s, params.threads);
     let m = s.batch * s.out_h * s.out_w;
     let k = s.window * s.window * s.in_c;
     // Filters are RSCK row-major: already the (K x N) operand.
-    gemm_blocked(&patches, f, m, s.out_c, k, params)
+    gemm_blocked_isa(&patches, f, m, s.out_c, k, params, isa)
 }
 
 /// Dimensions-only form of [`native_conv_algorithm`], for callers that
@@ -263,8 +281,8 @@ pub fn conv2d_im2col(
 /// tuner's sweep applicability filter).  THE single fallback rule —
 /// everything else ([`native_conv_algorithm`], the sweep filter)
 /// delegates here: an algorithm whose kernel cannot compute the layer
-/// ([`ConvAlgorithm::supports`]), or a Winograd configuration with
-/// `wino_m != 2` (only the m=2 kernel exists natively), runs
+/// ([`ConvAlgorithm::supports`]), or a Winograd configuration with a
+/// `wino_m` outside the native F(2×2)/F(4×4) kernels, runs
 /// [`ConvAlgorithm::Im2col`] instead.
 pub fn native_conv_algorithm_dims(
     cfg: &ConvConfig,
@@ -272,7 +290,8 @@ pub fn native_conv_algorithm_dims(
     stride: u32,
 ) -> ConvAlgorithm {
     if cfg.algorithm.supports(window, stride)
-        && (cfg.algorithm != ConvAlgorithm::Winograd || cfg.wino_m == 2)
+        && (cfg.algorithm != ConvAlgorithm::Winograd
+            || matches!(cfg.wino_m, 2 | 4))
     {
         cfg.algorithm
     } else {
@@ -293,22 +312,9 @@ pub fn native_conv_algorithm(
     native_conv_algorithm_dims(cfg, s.window as u32, s.stride as u32)
 }
 
-/// Convolution by whichever algorithm `cfg` selects — the dispatch the
-/// native engine's plans execute, making the conv *algorithm* a kernel
-/// parameter exactly like the tile sizes (paper §4.1):
-///
-/// * [`ConvAlgorithm::Im2col`] → [`conv2d_im2col`] under `blocked`;
-/// * [`ConvAlgorithm::Tiled`] / [`ConvAlgorithm::Naive`] →
-///   [`conv2d_tiled`](super::conv2d_tiled) under `cfg`'s tile/vector
-///   knobs (the naive kernel is the 1×1-tile member of the family);
-/// * [`ConvAlgorithm::Winograd`] →
-///   [`conv2d_winograd`](super::conv2d_winograd), falling back to im2col
-///   off its domain (see [`native_conv_algorithm`]).
-///
-/// All paths honor `blocked.threads` with the crate's disjoint-slice
-/// discipline, so every algorithm is bit-identical across thread counts;
-/// algorithms agree with each other within floating-point tolerance
-/// (proptested).
+/// Convolution by whichever algorithm `cfg` selects, with the scalar
+/// micro-kernel — see [`conv2d_native_isa`] for the ISA-explicit form
+/// the native engine's plans execute.
 pub fn conv2d_native(
     x: &[f32],
     f: &[f32],
@@ -316,11 +322,47 @@ pub fn conv2d_native(
     cfg: &ConvConfig,
     blocked: &BlockedParams,
 ) -> Vec<f32> {
+    conv2d_native_isa(x, f, s, cfg, blocked, Isa::Scalar)
+}
+
+/// Convolution by whichever algorithm `cfg` selects — the dispatch the
+/// native engine's plans execute, making the conv *algorithm* a kernel
+/// parameter exactly like the tile sizes (paper §4.1):
+///
+/// * [`ConvAlgorithm::Im2col`] → [`conv2d_im2col_isa`] under `blocked`
+///   and `isa`;
+/// * [`ConvAlgorithm::Tiled`] / [`ConvAlgorithm::Naive`] →
+///   [`conv2d_tiled`](super::conv2d_tiled) under `cfg`'s tile/vector
+///   knobs (the naive kernel is the 1×1-tile member of the family; the
+///   direct kernels have no lowered GEMM, so `isa` does not apply);
+/// * [`ConvAlgorithm::Winograd`] →
+///   [`conv2d_winograd`](super::conv2d_winograd) at `cfg.wino_m`, its
+///   transform-domain batched GEMMs under `blocked` and `isa`, falling
+///   back to im2col off its domain (see [`native_conv_algorithm`]).
+///
+/// All paths honor `blocked.threads` with the crate's disjoint-slice
+/// discipline, so every algorithm is bit-identical across thread counts;
+/// algorithms agree with each other within floating-point tolerance
+/// (proptested).  `isa` must be available on the executing host — the
+/// plan layer degrades off-host ISAs to scalar before dispatch.
+pub fn conv2d_native_isa(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    cfg: &ConvConfig,
+    blocked: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
     match native_conv_algorithm(cfg, s) {
-        ConvAlgorithm::Im2col => conv2d_im2col(x, f, s, blocked),
-        ConvAlgorithm::Winograd => {
-            conv2d_winograd(x, f, s, blocked.threads)
-        }
+        ConvAlgorithm::Im2col => conv2d_im2col_isa(x, f, s, blocked, isa),
+        ConvAlgorithm::Winograd => conv2d_winograd(
+            x,
+            f,
+            s,
+            cfg.wino_m as usize,
+            blocked,
+            isa,
+        ),
         ConvAlgorithm::Tiled | ConvAlgorithm::Naive => {
             conv2d_tiled(x, f, s, cfg, blocked.threads)
         }
@@ -441,17 +483,16 @@ mod tests {
 
     #[test]
     fn native_dispatch_falls_back_off_the_winograd_domain() {
-        // 3x3 stride 1: winograd runs natively (m=2 only).
+        // 3x3 stride 1: both native tile sizes run natively.
         let s1 = Conv2dShape::same(1, 8, 8, 2, 2, 3, 1);
         let w2 = ConvConfig::winograd(2);
         assert_eq!(
             native_conv_algorithm(&w2, &s1),
             ConvAlgorithm::Winograd
         );
-        // m=4 has no native kernel: im2col fallback.
         assert_eq!(
             native_conv_algorithm(&ConvConfig::winograd(4), &s1),
-            ConvAlgorithm::Im2col
+            ConvAlgorithm::Winograd
         );
         // Strided / non-3x3 shapes: im2col fallback.
         let s2 = Conv2dShape::same(1, 8, 8, 2, 2, 3, 2);
@@ -469,7 +510,8 @@ mod tests {
 
     #[test]
     fn native_dispatch_agrees_across_algorithms() {
-        // One 3x3/s1 shape where all three algorithms run natively.
+        // One 3x3/s1 shape where every algorithm (and both winograd
+        // tile sizes) runs natively.
         let s = Conv2dShape::same(2, 7, 9, 3, 4, 3, 1);
         let x = rand(s.input_elems(), 31);
         let f = rand(s.filter_elems(), 32);
@@ -481,20 +523,70 @@ mod tests {
             ConvConfig::tiled(2, 2, 1, 4),
             ConvConfig::naive(),
             ConvConfig::winograd(2),
-            ConvConfig::winograd(4), // falls back to im2col
+            ConvConfig::winograd(4),
         ] {
             let out = conv2d_native(&x, &f, &s, &cfg, &blocked);
+            // F(4×4) carries the loosest (still tight) bound of the
+            // family — see tests/proptests.rs for the pinned contract.
+            let tol = if cfg.algorithm == ConvAlgorithm::Winograd
+                && cfg.wino_m == 4
+            {
+                5e-3
+            } else {
+                1e-3
+            };
             assert!(
-                max_abs_diff(&direct, &out) < 1e-3,
+                max_abs_diff(&direct, &out) < tol,
                 "{} disagrees with the oracle",
                 cfg.name()
             );
         }
-        // The fallback really is the im2col computation, bit for bit.
+        // Off-domain winograd really is the im2col computation, bit for
+        // bit (a strided shape forces the fallback).
+        let s2 = Conv2dShape::same(2, 7, 9, 3, 4, 3, 2);
+        let x2 = rand(s2.input_elems(), 33);
+        let f2 = rand(s2.filter_elems(), 34);
         assert!(
-            conv2d_native(&x, &f, &s, &ConvConfig::winograd(4), &blocked)
-                == conv2d_im2col(&x, &f, &s, &blocked)
+            conv2d_native(&x2, &f2, &s2, &ConvConfig::winograd(2), &blocked)
+                == conv2d_im2col(&x2, &f2, &s2, &blocked)
         );
+    }
+
+    #[test]
+    fn native_isa_dispatch_agrees_with_scalar() {
+        // The ISA axis reaches both GEMM-lowered algorithms (im2col and
+        // winograd): SSE2/AVX2 bit-identical to scalar, FMA within an
+        // accumulation tolerance; the direct kernels ignore the axis.
+        let s = Conv2dShape::same(1, 9, 7, 5, 4, 3, 1);
+        let x = rand(s.input_elems(), 41);
+        let f = rand(s.filter_elems(), 42);
+        let blocked =
+            BlockedParams { bm: 8, bn: 8, bk: 4, mr: 2, nr: 4, threads: 1 };
+        for cfg in [
+            ConvConfig::im2col(),
+            ConvConfig::winograd(2),
+            ConvConfig::winograd(4),
+            ConvConfig::tiled(2, 2, 1, 4),
+        ] {
+            let scalar = conv2d_native(&x, &f, &s, &cfg, &blocked);
+            for isa in crate::blas::Isa::detect() {
+                let got =
+                    conv2d_native_isa(&x, &f, &s, &cfg, &blocked, isa);
+                if isa == crate::blas::Isa::Fma {
+                    assert!(
+                        max_abs_diff(&scalar, &got) <= 1e-5,
+                        "{} fma beyond tolerance",
+                        cfg.name()
+                    );
+                } else {
+                    assert!(
+                        scalar == got,
+                        "{} {isa} not bit-identical to scalar",
+                        cfg.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

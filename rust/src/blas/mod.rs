@@ -9,16 +9,19 @@
 //! (offline) execution backend.
 //!
 //! The convolution *algorithm* is itself a kernel parameter (paper §4.1):
-//! [`conv2d_native`] dispatches one [`crate::config::ConvConfig`] to the
-//! im2col/GEMM lowering ([`conv2d_im2col`]), the §4.1.1 tiled direct
-//! kernel ([`conv2d_tiled`]), or the §4.1.2 Winograd F(2×2, 3×3) kernel
-//! ([`conv2d_winograd`]), with im2col fallback for shapes an algorithm
+//! [`conv2d_native_isa`] dispatches one [`crate::config::ConvConfig`] to
+//! the im2col/GEMM lowering ([`conv2d_im2col_isa`]), the §4.1.1 tiled
+//! direct kernel ([`conv2d_tiled`]), or the §4.1.2 Winograd
+//! F(m×m, 3×3) kernel ([`conv2d_winograd`], `wino_m ∈ {2, 4}`, lowered
+//! as scatter → `(m+2)²` transform-domain batched GEMMs → gather via
+//! [`gemm_batched_isa`]), with im2col fallback for shapes an algorithm
 //! cannot compute ([`native_conv_algorithm`]).  GEMM's monomorphized
 //! register micro-tiles are enumerated by the macro-generated
 //! [`MICRO_KERNEL_SHAPES`] registry, and each registry tile can run a
 //! runtime-detected SIMD variant ([`Isa`]: scalar / SSE2 / AVX2 / FMA on
-//! x86-64, dispatched by [`gemm_blocked_isa`]) — the first hardware axis
-//! added through the unified `config::KernelSpace` parameter space.
+//! x86-64, dispatched by [`gemm_blocked_isa`]) — a hardware axis both
+//! GEMM plans and (through the lowered conv GEMMs) conv plans sweep via
+//! the unified `config::KernelSpace` parameter space.
 
 mod blocked;
 mod conv;
@@ -30,16 +33,21 @@ mod simd;
 mod winograd;
 
 pub use blocked::{
-    gemm_blocked, gemm_blocked_isa, BlockedParams, MICRO_KERNEL_SHAPES,
+    gemm_batched_isa, gemm_blocked, gemm_blocked_isa, BlockedParams,
+    MICRO_KERNEL_SHAPES,
 };
 pub use isa::Isa;
 pub use conv::{
-    conv2d_direct, conv2d_im2col, conv2d_native, im2col, im2col_threaded,
-    native_conv_algorithm, native_conv_algorithm_dims, Conv2dShape,
+    conv2d_direct, conv2d_im2col, conv2d_im2col_isa, conv2d_native,
+    conv2d_native_isa, im2col, im2col_threaded, native_conv_algorithm,
+    native_conv_algorithm_dims, Conv2dShape,
 };
 pub use direct::conv2d_tiled;
 pub use naive::gemm_naive;
-pub use winograd::{conv2d_winograd, winograd_supports};
+pub use winograd::{
+    conv2d_winograd, scatter_input, transform_filters, winograd_supports,
+    winograd_tiles,
+};
 
 /// Max |a - b| over two equal-length slices (test helper).
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {

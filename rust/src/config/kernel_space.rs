@@ -21,10 +21,12 @@
 //!
 //! Four spaces implement it: [`GemmPoint`] (measured host GEMM:
 //! blocking × threads × **ISA**), [`ConvPoint`] (measured host conv:
-//! algorithm × knobs × blocking), and the modeled zoo configurations
-//! [`GemmConfig`] / [`ConvConfig`].  The ISA axis ([`Isa`]) is the proof
-//! the abstraction pays for itself: a genuinely new hardware axis wired
-//! in with no new storage/sweep/resolution code.
+//! algorithm × knobs × `wino_m` × blocking × **ISA**), and the modeled
+//! zoo configurations [`GemmConfig`] / [`ConvConfig`].  The ISA axis
+//! ([`Isa`]) is the proof the abstraction pays for itself: a genuinely
+//! new hardware axis wired in with no new storage/sweep/resolution
+//! code — first on GEMM plans, then multiplied into every 3×3 conv by
+//! the Winograd transform-domain GEMM lowering.
 
 use crate::blas::{native_conv_algorithm_dims, BlockedParams, Isa};
 use crate::error::{Error, Result};
@@ -373,17 +375,23 @@ impl KernelSpace for GemmPoint {
 // ---- ConvPoint: the measured host convolution space ----
 
 /// One point of the measured host convolution space: the algorithm and
-/// its tile/vector knobs ([`ConvConfig`]) plus the GEMM blocking the
-/// im2col path uses and the `threads` knob every algorithm honors.
-/// Stored as kind `"conv_point"`; legacy `"conv_native"` entries (and
-/// pre-algorithm `"blocked"` / `"gemm_point"` conv selections, which
-/// plan as im2col) migrate on lookup.
+/// its tile/vector knobs ([`ConvConfig`], including the Winograd
+/// `wino_m` tile size), the GEMM blocking the lowered-GEMM paths
+/// (im2col and Winograd's transform-domain batched GEMMs) use, the
+/// `threads` knob every algorithm honors, **and the micro-kernel ISA**
+/// those lowered GEMMs dispatch.  Stored as kind `"conv_point"`;
+/// legacy `"conv_native"` entries (and pre-algorithm `"blocked"` /
+/// `"gemm_point"` conv selections, which plan as im2col) migrate on
+/// lookup.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ConvPoint {
     /// Algorithm + tile/vector configuration.
     pub config: ConvConfig,
-    /// im2col GEMM blocking + `threads`.
+    /// Lowered-GEMM blocking + `threads`.
     pub blocked: BlockedParams,
+    /// Micro-kernel ISA of the lowered GEMM (im2col and Winograd
+    /// paths; the direct kernels ignore it).
+    pub isa: Isa,
 }
 
 impl Default for ConvPoint {
@@ -393,16 +401,30 @@ impl Default for ConvPoint {
 }
 
 impl ConvPoint {
-    /// The im2col point over the given blocking (the untuned default and
-    /// the migration target for pre-algorithm conv selections).
+    /// The scalar-ISA im2col point over the given blocking (the untuned
+    /// default and the migration target for pre-algorithm conv
+    /// selections).
     pub fn im2col(blocked: BlockedParams) -> Self {
-        Self { config: ConvConfig::im2col(), blocked }
+        Self { config: ConvConfig::im2col(), blocked, isa: Isa::Scalar }
     }
 
-    /// Compact name for reports (`wino2_v1x1+bm64bn64bk64_4x8_t2`
-    /// style).
+    /// Compact name for reports
+    /// (`wino2_v1x1+bm64bn64bk64_4x8_t2_avx2` style).
     pub fn name(&self) -> String {
-        format!("{}+{}", self.config.name(), self.blocked.name())
+        format!("{}+{}_{}", self.config.name(), self.blocked.name(), self.isa)
+    }
+
+    /// The point this plan can actually execute on the current host:
+    /// identical if the ISA is available, otherwise degraded to
+    /// [`Isa::Scalar`] (same algorithm and blocking) — the conv side of
+    /// the [`GemmPoint::host_degraded`] safety rule, so a tuning DB
+    /// written on a bigger host stays safe to ship everywhere.
+    pub fn host_degraded(self) -> Self {
+        if self.isa.is_available() {
+            self
+        } else {
+            Self { isa: Isa::Scalar, ..self }
+        }
     }
 }
 
@@ -414,7 +436,7 @@ impl KernelSpace for ConvPoint {
     fn axes() -> &'static [&'static str] {
         &[
             "algorithm", "tile_h", "tile_w", "vec_c", "vec_k", "block_k",
-            "wino_m", "bm", "bn", "bk", "mr", "nr", "threads",
+            "wino_m", "bm", "bn", "bk", "mr", "nr", "threads", "isa",
         ]
     }
 
@@ -434,7 +456,8 @@ impl KernelSpace for ConvPoint {
     fn to_json(&self) -> Value {
         let mut o = Value::object();
         o.set("config", conv_to_json(&self.config))
-            .set("blocked", blocked_to_json(&self.blocked));
+            .set("blocked", blocked_to_json(&self.blocked))
+            .set("isa", self.isa.as_str());
         o
     }
 
@@ -446,13 +469,19 @@ impl KernelSpace for ConvPoint {
             blocked: blocked_from_json(v.get("blocked").ok_or_else(|| {
                 Error::Json("conv point missing blocked".into())
             })?)?,
+            // Absent isa (a point written before the conv axis existed)
+            // means scalar, mirroring GemmPoint.
+            isa: match v.get("isa").and_then(|x| x.as_str()) {
+                Some(s) => s.parse::<Isa>()?,
+                None => Isa::Scalar,
+            },
         })
     }
 
     fn from_legacy_json(kind: &str, entry: &Value) -> Result<Self> {
         match kind {
             // Pre-unification measured conv selections: config + blocked
-            // at the entry's top level.
+            // at the entry's top level (no isa field → scalar).
             "conv_native" => Self::from_json(entry),
             // Pre-algorithm conv selections (plain blocking): plan as
             // im2col under those params, exactly as they always did.
@@ -463,12 +492,14 @@ impl KernelSpace for ConvPoint {
             )?)),
             // A unified GEMM point stored under a conv key (the legacy
             // blocked sweep run over a conv group): im2col under that
-            // blocking; the ISA axis does not apply to conv kernels.
-            "gemm_point" => Ok(Self::im2col(blocked_from_json(
-                entry.get("point").ok_or_else(|| {
-                    Error::Json("gemm_point entry missing point".into())
-                })?,
-            )?)),
+            // blocking, keeping the measured ISA — the lowered conv
+            // GEMM dispatches it now.
+            "gemm_point" => {
+                let gp = GemmPoint::from_json(entry.get("point").ok_or_else(
+                    || Error::Json("gemm_point entry missing point".into()),
+                )?)?;
+                Ok(Self { isa: gp.isa, ..Self::im2col(gp.params) })
+            }
             other => Err(Error::Json(format!(
                 "conv_point cannot migrate kind {other:?}"
             ))),
@@ -481,10 +512,15 @@ impl KernelSpace for ConvPoint {
             // Keep only points that run their own algorithm on this
             // shape — the engine's plan-time fallback rule, verbatim, so
             // a sweep can never time a fallback duplicate the plan would
-            // resolve differently.
+            // resolve differently — and whose lowered-GEMM ISA the
+            // executing host supports.
             Problem::Conv { window, stride } => {
-                native_conv_algorithm_dims(&self.config, window, stride)
-                    == self.config.algorithm
+                self.isa.is_available()
+                    && native_conv_algorithm_dims(
+                        &self.config,
+                        window,
+                        stride,
+                    ) == self.config.algorithm
             }
         }
     }
@@ -501,13 +537,16 @@ impl KernelSpace for ConvPoint {
     }
 
     fn report_columns(&self, entry: &mut Value) {
-        entry.set("algorithm", self.config.algorithm.as_str());
+        entry
+            .set("algorithm", self.config.algorithm.as_str())
+            .set("wino_m", self.config.wino_m)
+            .set("isa", self.isa.as_str());
     }
 
     fn rank_hint(&self, problem: &Problem) -> Option<f64> {
-        // `threads` is deliberately not priced (ties — see the GemmPoint
-        // note); the algorithm + tile/vector knobs and the im2col
-        // blocking are.
+        // `threads` and the ISA are deliberately not priced (ties — see
+        // the GemmPoint note); the algorithm + tile/vector knobs
+        // (including `wino_m`) and the lowered-GEMM blocking are.
         match *problem {
             Problem::Gemm { .. } => None,
             Problem::Conv { window, stride } => {
@@ -688,15 +727,26 @@ mod tests {
 
     #[test]
     fn conv_point_json_and_legacy_migrations() {
+        let blocked_params = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
+        };
+        for isa in Isa::all() {
+            let p = ConvPoint {
+                config: ConvConfig::winograd(4),
+                blocked: blocked_params,
+                isa,
+            };
+            assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
+            assert!(p.name().ends_with(isa.as_str()), "{}", p.name());
+        }
         let p = ConvPoint {
             config: ConvConfig::winograd(2),
-            blocked: BlockedParams {
-                bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
-            },
+            blocked: blocked_params,
+            isa: Isa::Scalar,
         };
-        assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
 
-        // conv_native entries: config + blocked at the top level.
+        // conv_native entries: config + blocked at the top level, no
+        // isa field → scalar.
         let mut legacy = Value::object();
         legacy
             .set("kind", "conv_native")
@@ -713,14 +763,50 @@ mod tests {
         let m = ConvPoint::from_legacy_json("blocked", &blocked).unwrap();
         assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
         assert_eq!(m.blocked, p.blocked);
+        assert_eq!(m.isa, Isa::Scalar);
 
-        // gemm_point entries: im2col, ISA dropped.
+        // gemm_point entries: im2col, measured ISA preserved (the
+        // lowered conv GEMM dispatches it now).
         let gp = GemmPoint { params: p.blocked, isa: Isa::Avx2 };
         let mut entry = Value::object();
         entry.set("kind", "gemm_point").set("point", gp.to_json());
         let m = ConvPoint::from_legacy_json("gemm_point", &entry).unwrap();
         assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
         assert_eq!(m.blocked, p.blocked);
+        assert_eq!(m.isa, Isa::Avx2);
+    }
+
+    #[test]
+    fn conv_point_absent_isa_means_scalar() {
+        // A point written before the conv ISA axis existed decodes as
+        // scalar, so pre-axis DBs keep planning identically.
+        let p = ConvPoint::default();
+        let mut v = Value::object();
+        v.set("config", conv_to_json(&p.config))
+            .set("blocked", blocked_to_json(&p.blocked));
+        let back = ConvPoint::from_json(&v).unwrap();
+        assert_eq!(back, p);
+        assert_eq!(back.isa, Isa::Scalar);
+    }
+
+    #[test]
+    fn conv_point_host_degraded_mirrors_gemm() {
+        for isa in Isa::all() {
+            let p = ConvPoint {
+                config: ConvConfig::winograd(4),
+                blocked: BlockedParams::default(),
+                isa,
+            };
+            let d = p.host_degraded();
+            assert!(d.isa.is_available());
+            assert_eq!(d.config, p.config, "algorithm axes survive");
+            assert_eq!(d.blocked, p.blocked);
+            if isa.is_available() {
+                assert_eq!(d.isa, isa);
+            } else {
+                assert_eq!(d.isa, Isa::Scalar);
+            }
+        }
     }
 
     #[test]
@@ -729,15 +815,31 @@ mod tests {
         let s1 = Problem::Conv { window: 3, stride: 1 };
         let s2 = Problem::Conv { window: 3, stride: 2 };
 
-        // Conv points follow the native fallback rule exactly.
-        let wino = ConvPoint {
-            config: ConvConfig::winograd(2),
-            blocked: BlockedParams::default(),
-        };
-        assert!(wino.applicable(&s1));
-        assert!(!wino.applicable(&s2), "winograd off-domain");
-        assert!(!wino.applicable(&gemm));
+        // Conv points follow the native fallback rule exactly — for
+        // both native wino_m values.
+        for m in [2u32, 4] {
+            let wino = ConvPoint {
+                config: ConvConfig::winograd(m),
+                blocked: BlockedParams::default(),
+                isa: Isa::Scalar,
+            };
+            assert!(wino.applicable(&s1), "wino_m={m} on-domain");
+            assert!(!wino.applicable(&s2), "winograd off-domain");
+            assert!(!wino.applicable(&gemm));
+        }
         assert!(ConvPoint::default().applicable(&s2), "im2col anywhere");
+
+        // The conv ISA axis requires host support, like GemmPoint's.
+        if let Some(missing) =
+            Isa::all().into_iter().find(|i| !i.is_available())
+        {
+            assert!(!ConvPoint { isa: missing, ..ConvPoint::default() }
+                .applicable(&s1));
+        }
+        for isa in Isa::detect() {
+            assert!(ConvPoint { isa, ..ConvPoint::default() }
+                .applicable(&s1));
+        }
 
         // GEMM points require host ISA support (scalar: everywhere;
         // both problem kinds, for the legacy blocked-sweep contract).
@@ -794,21 +896,36 @@ mod tests {
             }
         }
 
-        // Same contract for ConvPoint's threads knob.
+        // Same contract for ConvPoint's threads knob and ISA axis.
         let cbase = ConvPoint::default();
         let ct = ConvPoint {
             blocked: BlockedParams { threads: 8, ..cbase.blocked },
             ..cbase
         };
         assert_eq!(ct.rank_hint(&conv), cbase.rank_hint(&conv));
+        for isa in Isa::all() {
+            let ci = ConvPoint { isa, ..cbase };
+            assert_eq!(ci.rank_hint(&conv), cbase.rank_hint(&conv));
+        }
 
         // Modeled axes do move it: a Winograd point is predicted
-        // cheaper than default im2col on its 3×3/s1 domain.
-        let wino = ConvPoint {
+        // cheaper than default im2col on its 3×3/s1 domain, and the
+        // wino_m axis is itself modeled (F(4×4) amortizes more).
+        let wino2 = ConvPoint {
             config: ConvConfig::winograd(2),
             blocked: cbase.blocked,
+            isa: cbase.isa,
         };
-        assert!(wino.rank_hint(&conv).unwrap() < cbase.rank_hint(&conv).unwrap());
+        let wino4 = ConvPoint {
+            config: ConvConfig::winograd(4),
+            ..wino2
+        };
+        assert!(
+            wino2.rank_hint(&conv).unwrap() < cbase.rank_hint(&conv).unwrap()
+        );
+        assert!(
+            wino4.rank_hint(&conv).unwrap() < wino2.rank_hint(&conv).unwrap()
+        );
 
         // The modeled zoo spaces have no per-point model: unranked.
         assert!(GemmConfig::default().rank_hint(&gemm).is_none());

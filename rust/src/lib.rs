@@ -69,22 +69,27 @@
 //! is just one more axis of the parameter space.
 //!
 //! The convolution *algorithm* is one more axis of the same space:
-//! [`blas::conv2d_native`] dispatches a [`config::ConvConfig`] to the
-//! im2col/GEMM lowering, the §4.1.1 tiled direct kernel, or the §4.1.2
-//! Winograd F(2×2, 3×3) kernel (im2col fallback off an algorithm's
-//! domain), and GEMM's monomorphized `mr × nr` micro-tiles come from
-//! the macro-generated [`blas::MICRO_KERNEL_SHAPES`] registry shared
-//! with [`config::micro_kernel_shapes`].  So is the micro-kernel
+//! [`blas::conv2d_native_isa`] dispatches a [`config::ConvConfig`] to
+//! the im2col/GEMM lowering, the §4.1.1 tiled direct kernel, or the
+//! §4.1.2 Winograd F(m×m, 3×3) kernel — its `wino_m ∈ {2, 4}` tile
+//! size one more tuned axis, its transform-domain multiplies lowered
+//! as `(wino_m+2)²` batched GEMMs ([`blas::gemm_batched_isa`]) so the
+//! tuned GEMM stack serves every 3×3 conv — with im2col fallback off
+//! an algorithm's domain, and GEMM's monomorphized `mr × nr`
+//! micro-tiles come from the macro-generated
+//! [`blas::MICRO_KERNEL_SHAPES`] registry shared with
+//! [`config::micro_kernel_shapes`].  So is the micro-kernel
 //! **ISA** ([`blas::Isa`]): each registry tile has runtime-dispatched
 //! scalar/SSE2/AVX2/FMA `#[target_feature]` variants
 //! ([`blas::gemm_blocked_isa`]), detected per host and degraded to
 //! scalar at plan time when a tuned entry asks for an ISA the
-//! executing CPU lacks.
+//! executing CPU lacks — for GEMM points and conv points alike.
 //!
 //! The whole parameter space sits behind one abstraction,
 //! [`config::KernelSpace`] — a point type ([`config::GemmPoint`]:
-//! blocking × threads × ISA; [`config::ConvPoint`]: algorithm × knobs ×
-//! blocking) plus axes/validation/JSON/applicability — so storage,
+//! blocking × threads × ISA; [`config::ConvPoint`]: algorithm × knobs
+//! (incl. `wino_m`) × blocking × ISA) plus
+//! axes/validation/JSON/applicability — so storage,
 //! sweeps, and plan-time resolution are written once, generically.
 //! The measure→persist→plan loop closes over it:
 //! [`tuner::tune_space_sweep`] times any space's grid

@@ -42,13 +42,11 @@ const SPILL_REGS: f64 = 64.0;
 /// direct-conv kernels.
 const CONV_LOAD_COST: f64 = 0.5;
 
-/// Winograd F(2×2, 3×3) multiplication ratio: 16 transformed products
-/// replace the 36 direct MACs of a 2×2 output tile.
-const WINO_MUL_RATIO: f64 = 16.0 / 36.0;
-
-/// Winograd input/output transform overhead, as a fraction of the
-/// direct MAC count it eliminates.
-const WINO_TRANSFORM_COST: f64 = 0.25;
+/// Winograd input/inverse transform overhead: relative cost of one
+/// transform add against one transform-domain MAC, after amortization
+/// over the channel depth of the batched GEMMs (the scatter/gather
+/// stages touch each tile once; the GEMMs contract every channel).
+const WINO_TRANSFORM_COST: f64 = 0.1;
 
 /// im2col patch-matrix materialization: every input element is written
 /// once and re-read once through the patch matrix.
@@ -92,16 +90,20 @@ pub fn gemm_point_cost(p: &BlockedParams, m: u64, n: u64, k: u64) -> f64 {
 /// * **tiled direct** — the full `window²` MACs plus redundant halo
 ///   fetches per output (shrinking with the tile area) and the Fig. 2
 ///   register-pressure penalty;
-/// * **winograd** — the F(2×2, 3×3) multiplication reduction plus
-///   transform overhead;
+/// * **winograd** — the F(m×m, 3×3) multiplication reduction for the
+///   configured `wino_m` (`(m+2)²/m²` transform-domain multiplies
+///   replace the `window²` direct MACs — F(4×4) amortizes more than
+///   F(2×2)), each multiply issued through the lowered batched GEMM's
+///   register micro-tile (Eq. 3), plus the scatter/gather transform
+///   adds (`~2·(m+2)³` per tile, amortized over its `m²` outputs);
 /// * **im2col** — the full MACs plus patch materialization traffic,
 ///   with the lowered GEMM's Eq. 3 issue term so a good blocking ranks
 ///   ahead of a bad one.
 ///
 /// Callers pass only points that would actually run their own algorithm
 /// on this shape ([`crate::config::KernelSpace::applicable`] filters
-/// the rest), so no fallback modeling is needed here.  `threads` is
-/// deliberately unmodeled (ties).
+/// the rest), so no fallback modeling is needed here.  `threads` and
+/// the lowered-GEMM ISA are deliberately unmodeled (ties).
 pub fn conv_point_cost(
     config: &ConvConfig,
     blocked: &BlockedParams,
@@ -113,7 +115,18 @@ pub fn conv_point_cost(
     let macs = w * w; // direct MACs per output element, per channel
     match config.algorithm {
         ConvAlgorithm::Winograd => {
-            macs * (WINO_MUL_RATIO + WINO_TRANSFORM_COST)
+            let wm = config.wino_m.max(2) as f64;
+            let t = wm + 2.0;
+            // Transform-domain multiplies per output element, issued
+            // through the batched GEMM's register micro-tile.
+            let issue = 1.0
+                / register_tile_reuse(blocked.mr as u32, blocked.nr as u32);
+            let mul = (t * t) / (wm * wm);
+            // Scatter + gather adds per output element: ~2·t³ per tile
+            // over its m² outputs.
+            let transform = WINO_TRANSFORM_COST * 2.0 * t * t * t
+                / (wm * wm);
+            mul * (1.0 + issue) + transform
         }
         ConvAlgorithm::Naive | ConvAlgorithm::Tiled => {
             let th = config.tile_h.max(1) as f64;
@@ -194,6 +207,37 @@ mod tests {
             conv_point_cost(&ConvConfig::im2col(), &blocked, 3, 1);
         assert!(wino < tiled, "{wino} !< {tiled}");
         assert!(wino < im2col, "{wino} !< {im2col}");
+    }
+
+    #[test]
+    fn conv_cost_ranks_the_wino_m_axis() {
+        // F(4×4) replaces 144 direct MACs with 36 multiplies where
+        // F(2×2) replaces 36 with 16, so at equal blocking the model
+        // must rank m=4 cheaper — the axis is modeled, not a tie, and
+        // both beat im2col on the 3×3/s1 domain.
+        let blocked = BlockedParams::default();
+        let w2 = conv_point_cost(&ConvConfig::winograd(2), &blocked, 3, 1);
+        let w4 = conv_point_cost(&ConvConfig::winograd(4), &blocked, 3, 1);
+        let im2col = conv_point_cost(&ConvConfig::im2col(), &blocked, 3, 1);
+        assert!(w4 < w2, "{w4} !< {w2}");
+        assert!(w2 < im2col, "{w2} !< {im2col}");
+    }
+
+    #[test]
+    fn conv_wino_cost_tracks_the_gemm_blocking() {
+        // The transform-domain multiplies run through the lowered
+        // batched GEMM, so a good register micro-tile must rank ahead
+        // of a bad one — same contract as im2col.
+        let good = BlockedParams::default(); // 4x8 micro-tile
+        let bad = BlockedParams { mr: 1, nr: 1, ..good };
+        for m in [2u32, 4] {
+            let cfg = ConvConfig::winograd(m);
+            assert!(
+                conv_point_cost(&cfg, &good, 3, 1)
+                    < conv_point_cost(&cfg, &bad, 3, 1),
+                "wino_m={m}"
+            );
+        }
     }
 
     #[test]

@@ -7,16 +7,18 @@
 //! artifact — keying on the manifest's GEMM dims or conv [`LayerMeta`] —
 //! and dispatches to [`blas::gemm_blocked`](crate::blas::gemm_blocked)
 //! (GEMM, with the α/β epilogue) or the native conv algorithm family
-//! ([`blas::conv2d_native`](crate::blas::conv2d_native): im2col, tiled
-//! direct, or Winograd).  The HLO files referenced by the manifest are
+//! ([`blas::conv2d_native_isa`](crate::blas::conv2d_native_isa): im2col,
+//! tiled direct, or Winograd).  The HLO files referenced by the manifest are
 //! never opened, so synthetic manifests (tests) and real AOT output both
 //! execute.
 //!
 //! Each plan resolves the [`crate::config::KernelSpace`] point it will
 //! execute with — for GEMM a [`GemmPoint`] (blocking × threads ×
 //! micro-kernel ISA), for conv a [`ConvPoint`] (which *algorithm* runs,
-//! its knobs, and the blocking).  **One generic resolution ladder**
-//! serves every space, first hit wins:
+//! its knobs — including the Winograd `wino_m` tile size — the lowered-
+//! GEMM blocking, and the micro-kernel ISA that lowered GEMM
+//! dispatches).  **One generic resolution ladder** serves every space,
+//! first hit wins:
 //!
 //! 1. a tuned entry for the artifact's problem class in the attached
 //!    tuning DB ([`NativeEngine::with_tuning`]) — unified
@@ -33,12 +35,13 @@
 //!    it buys on sub-millisecond kernels.  A tuned DB entry always
 //!    overrides the heuristic.
 //!
-//! Two plan-time safety rules keep every resolved point executable on
+//! Three plan-time safety rules keep every resolved point executable on
 //! *this* host: Winograd selections fall back to im2col on shapes
-//! outside the F(2×2, 3×3) domain, and GEMM points whose ISA the
-//! executing CPU lacks degrade to the scalar micro-kernel (same
-//! blocking) — so a DB tuned on a bigger host is always safe to ship,
-//! and [`NativeEngine::planned_conv`] / [`NativeEngine::planned_gemm`]
+//! outside the F(m×m, 3×3) domain, GEMM points whose ISA the executing
+//! CPU lacks degrade to the scalar micro-kernel (same blocking), and
+//! conv points do the same for the ISA their lowered GEMMs dispatch —
+//! so a DB tuned on a bigger host is always safe to ship, and
+//! [`NativeEngine::planned_conv`] / [`NativeEngine::planned_gemm`]
 //! always report what will really run.
 
 use std::collections::HashMap;
@@ -46,8 +49,8 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::blas::{
-    conv2d_native, gemm_blocked_isa, native_conv_algorithm, BlockedParams,
-    Conv2dShape,
+    conv2d_native_isa, gemm_blocked_isa, native_conv_algorithm,
+    BlockedParams, Conv2dShape, Isa,
 };
 use crate::config::{ConvConfig, ConvPoint, GemmPoint, KernelSpace};
 use crate::error::{Error, Result};
@@ -99,8 +102,9 @@ enum Plan {
         fuse_relu: bool,
         /// The resolved conv space point — the algorithm + tile/vector
         /// knobs (already resolved through the fallback rule, so
-        /// `point.config.algorithm` is what will actually execute) and
-        /// the im2col blocking + `threads`.
+        /// `point.config.algorithm` is what will actually execute), the
+        /// lowered-GEMM blocking + `threads`, and the micro-kernel ISA
+        /// (already degraded to what this host can run).
         point: ConvPoint,
     },
 }
@@ -275,7 +279,7 @@ fn conv_plan(meta: &ArtifactMeta, point: ConvPoint) -> Result<Plan> {
             algorithm: native_conv_algorithm(&point.config, &shape),
             ..point.config
         },
-        blocked: point.blocked,
+        ..point
     };
     Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, point })
 }
@@ -408,7 +412,11 @@ fn build_plan(
                     blocked: clamp_migrated_auto(p.blocked, legacy, meta.flops),
                     ..p
                 })
-                .unwrap_or_else(|| fallback.conv_point(meta));
+                .unwrap_or_else(|| fallback.conv_point(meta))
+                // Plan-time safety: an ISA this host lacks degrades the
+                // lowered-GEMM micro-kernel to scalar, same blocking and
+                // algorithm, so what the plan reports is executable.
+                .host_degraded();
             conv_plan(meta, point)
         }
         other => Err(Error::Runtime(format!(
@@ -521,8 +529,8 @@ impl NativeEngine {
     }
 
     /// Set the engine-wide conv override: the full conv space point
-    /// (algorithm + tile/vector knobs + GEMM blocking) every conv plan
-    /// without a tuned DB entry resolves to.  Invalidates the plan
+    /// (algorithm + tile/vector knobs + lowered-GEMM blocking + ISA)
+    /// every conv plan without a tuned DB entry resolves to.  Invalidates the plan
     /// cache.  This is the handle the measured conv sweep drives
     /// (`tuner::tune_space_sweep`); shapes an algorithm cannot compute
     /// still fall back to im2col at plan time.
@@ -531,13 +539,14 @@ impl NativeEngine {
         self.plans.clear();
     }
 
-    /// Legacy typed view of [`NativeEngine::set_conv_point`].
+    /// Legacy typed view of [`NativeEngine::set_conv_point`]: a
+    /// scalar-ISA conv point.
     pub fn set_conv_params(
         &mut self,
         config: ConvConfig,
         blocked: BlockedParams,
     ) {
-        self.set_conv_point(ConvPoint { config, blocked });
+        self.set_conv_point(ConvPoint { config, blocked, isa: Isa::Scalar });
     }
 
     /// Attach (or replace) the tuning DB.  Invalidates the plan cache.
@@ -660,12 +669,13 @@ impl NativeEngine {
                 vec![out]
             }
             Plan::Conv { shape, fuse_relu, point } => {
-                let mut out = conv2d_native(
+                let mut out = conv2d_native_isa(
                     &inputs[0],
                     &inputs[1],
                     shape,
                     &point.config,
                     &point.blocked,
+                    point.isa,
                 );
                 if *fuse_relu {
                     let bias = &inputs[2];
@@ -1115,7 +1125,11 @@ mod tests {
         let mut db = SelectionDb::new();
         db.put(
             SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
-            crate::config::ConvPoint { config: winner, blocked },
+            crate::config::ConvPoint {
+                config: winner,
+                blocked,
+                isa: Isa::Scalar,
+            },
             4.0,
         );
         let (_dir, plain) = engine_with(CONV_3X3);
@@ -1183,6 +1197,7 @@ mod tests {
             crate::config::ConvPoint {
                 config: ConvConfig::winograd(2),
                 blocked: BlockedParams::default(),
+                isa: Isa::Scalar,
             },
             1.0,
         );
@@ -1271,6 +1286,98 @@ mod tests {
         // Conv artifacts report no GEMM point.
         let (_dir, mut c) = engine_with(CONV_3X3);
         assert!(c.planned_gemm("c33").unwrap().is_none());
+    }
+
+    #[test]
+    fn tuned_conv_point_resolves_isa_and_degrades_off_host() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let blocked =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
+        let key = SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1);
+        let shape = Conv2dShape::same(1, 8, 8, 3, 4, 3, 1);
+
+        // A conv selection with a host-supported SIMD ISA plans verbatim
+        // and the lowered GEMM computes the right answer through the
+        // SIMD micro-kernel.
+        if let Some(&simd) =
+            Isa::detect().iter().find(|i| **i != Isa::Scalar)
+        {
+            let point = ConvPoint {
+                config: ConvConfig::im2col(),
+                blocked,
+                isa: simd,
+            };
+            let mut db = SelectionDb::new();
+            db.put(key.clone(), point, 9.0);
+            let (_dir, plain) = engine_with(CONV_3X3);
+            let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+            assert_eq!(e.planned_params("c33").unwrap(), blocked);
+            let inputs = e.synth_inputs("c33", 9).unwrap();
+            let out = e.run("c33", &inputs).unwrap();
+            let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+            assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+        }
+
+        // A conv selection whose ISA this host lacks (an off-host DB
+        // entry) degrades to scalar at plan time — the algorithm and
+        // blocking survive, and the run cannot hit the unavailable-ISA
+        // panic.
+        if let Some(missing) =
+            Isa::all().into_iter().find(|i| !i.is_available())
+        {
+            let point = ConvPoint {
+                config: ConvConfig::winograd(2),
+                blocked,
+                isa: missing,
+            };
+            let mut db = SelectionDb::new();
+            db.put(key.clone(), point, 9.0);
+            let (_dir, plain) = engine_with(CONV_3X3);
+            let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+            let planned = e.planned_conv("c33").unwrap().unwrap();
+            assert_eq!(
+                planned.algorithm,
+                crate::config::ConvAlgorithm::Winograd,
+                "the algorithm survives the ISA degrade"
+            );
+            assert_eq!(e.planned_params("c33").unwrap(), blocked);
+            let inputs = e.synth_inputs("c33", 11).unwrap();
+            let out = e.run("c33", &inputs).unwrap();
+            let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+            assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn tuned_wino4_selection_plans_and_computes() {
+        use crate::config::ConvAlgorithm;
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // An F(4×4, 3×3) winner on an in-domain shape plans as Winograd
+        // with wino_m = 4 and matches the direct oracle within the
+        // looser F(4×4) tolerance.
+        let winner = ConvConfig::winograd(4);
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
+            ConvPoint {
+                config: winner,
+                blocked: BlockedParams::default(),
+                isa: Isa::Scalar,
+            },
+            6.0,
+        );
+        let (_dir, plain) = engine_with(CONV_3X3);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_conv("c33").unwrap().unwrap();
+        assert_eq!(planned.algorithm, ConvAlgorithm::Winograd);
+        assert_eq!(planned.wino_m, 4);
+        let inputs = e.synth_inputs("c33", 17).unwrap();
+        let out = e.run("c33", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 8, 8, 3, 4, 3, 1);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 5e-3);
     }
 
     #[test]

@@ -643,6 +643,7 @@ mod tests {
             blocked: BlockedParams {
                 bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
             },
+            isa: Isa::Scalar,
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
         db.put(key.clone(), cp, 5.5);

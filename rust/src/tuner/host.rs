@@ -595,40 +595,47 @@ pub fn gemm_point_grid(
 
 /// One native conv sweep candidate: an algorithm + its knobs — since the
 /// space unification this *is* the conv kernel-space point
-/// ([`ConvPoint`]: the [`ConvConfig`] names the algorithm and
-/// tile/vector parameters, the [`BlockedParams`] carry the im2col GEMM
-/// blocking and the `threads` knob every algorithm honors).
+/// ([`ConvPoint`]: the [`ConvConfig`] names the algorithm,
+/// tile/vector parameters and the Winograd `wino_m` tile size, the
+/// [`BlockedParams`] carry the lowered-GEMM blocking and the `threads`
+/// knob every algorithm honors, and the [`Isa`] picks the SIMD
+/// micro-kernel the lowered GEMMs dispatch).
 pub type ConvCandidate = ConvPoint;
 
 /// The base [`ConvConfig`] candidates the native conv sweep measures:
-/// im2col, a handful of tiled tile/vector shapes, and Winograd m=2 —
-/// all three §4.1 algorithm families, deliberately much smaller than
-/// the modeled `config::conv_space` (these get *measured*, every point
-/// costs wall time).
+/// im2col, a handful of tiled tile/vector shapes, and both Winograd
+/// tile sizes (`wino_m ∈ {2, 4}`) — all three §4.1 algorithm families
+/// with the F(m×m, 3×3) reduction as a measured axis, deliberately much
+/// smaller than the modeled `config::conv_space` (these get *measured*,
+/// every point costs wall time).
 pub fn conv_candidates(quick: bool) -> Vec<ConvConfig> {
     let mut out = vec![ConvConfig::im2col()];
     if quick {
         out.push(ConvConfig::tiled(1, 1, 1, 4));
         out.push(ConvConfig::tiled(2, 2, 1, 4));
-        out.push(ConvConfig::winograd(2));
     } else {
         for (th, tw, vc, vk) in
             [(1, 1, 1, 4), (2, 2, 1, 4), (4, 4, 4, 4), (2, 4, 1, 8)]
         {
             out.push(ConvConfig::tiled(th, tw, vc, vk));
         }
-        out.push(ConvConfig::winograd(2));
     }
+    out.push(ConvConfig::winograd(2));
+    out.push(ConvConfig::winograd(4));
     out
 }
 
-/// The full native conv grid: [`conv_candidates`] × `threads`, im2col
-/// additionally crossed with the [`blocked_candidates`] GEMM blockings,
-/// deduplicated, with the plain default im2col candidate always present
-/// as the untuned baseline.
+/// The full native conv grid: [`conv_candidates`] × `threads`, the
+/// GEMM-lowered algorithms (im2col *and* Winograd, whose transform-domain
+/// multiplies run as batched GEMMs) additionally crossed with the
+/// [`blocked_candidates`] GEMM blockings and — at the default
+/// monomorphized blocking — the given micro-kernel ISAs (normally
+/// [`Isa::detect`]), deduplicated, with the plain default im2col
+/// candidate always present as the untuned baseline.
 pub fn conv_native_grid(
     quick: bool,
     threads: &[usize],
+    isas: &[Isa],
 ) -> Vec<ConvCandidate> {
     let mut grid: Vec<ConvCandidate> = Vec::new();
     let push = |grid: &mut Vec<ConvCandidate>, cand: ConvCandidate| {
@@ -637,15 +644,18 @@ pub fn conv_native_grid(
         }
     };
     for config in conv_candidates(quick) {
-        // Only the im2col path uses the GEMM blocking; other algorithms
-        // read just `threads` from it, so sweeping blockings for them
-        // would time the same kernel repeatedly.
-        let bases: Vec<BlockedParams> =
-            if config.algorithm == ConvAlgorithm::Im2col {
-                blocked_candidates(quick)
-            } else {
-                vec![BlockedParams { threads: 1, ..Default::default() }]
-            };
+        let lowered = matches!(
+            config.algorithm,
+            ConvAlgorithm::Im2col | ConvAlgorithm::Winograd
+        );
+        // Only the GEMM-lowered paths read the blocking and the ISA;
+        // the direct kernels read just `threads`, so sweeping either
+        // axis for them would time the same kernel repeatedly.
+        let bases: Vec<BlockedParams> = if lowered {
+            blocked_candidates(quick)
+        } else {
+            vec![BlockedParams { threads: 1, ..Default::default() }]
+        };
         for base in bases {
             for &t in threads {
                 push(
@@ -653,8 +663,34 @@ pub fn conv_native_grid(
                     ConvCandidate {
                         config,
                         blocked: BlockedParams { threads: t, ..base },
+                        isa: Isa::Scalar,
                     },
                 );
+            }
+        }
+        if lowered {
+            // Non-scalar ISAs ride the default blocking only: the SIMD
+            // micro-kernel variants exist per monomorphized registry
+            // shape, and the default 4×8 tile is in the registry —
+            // crossing every blocking with every ISA would square the
+            // measured grid for little ranking information.
+            for &isa in isas {
+                if isa == Isa::Scalar {
+                    continue;
+                }
+                for &t in threads {
+                    push(
+                        &mut grid,
+                        ConvCandidate {
+                            config,
+                            blocked: BlockedParams {
+                                threads: t,
+                                ..Default::default()
+                            },
+                            isa,
+                        },
+                    );
+                }
             }
         }
     }
@@ -997,8 +1033,9 @@ mod tests {
 
     #[test]
     fn conv_grid_sweeps_all_three_algorithms() {
+        let isas = Isa::detect();
         for quick in [true, false] {
-            let grid = conv_native_grid(quick, &[1, 2]);
+            let grid = conv_native_grid(quick, &[1, 2], &isas);
             for alg in [
                 ConvAlgorithm::Im2col,
                 ConvAlgorithm::Tiled,
@@ -1009,6 +1046,37 @@ mod tests {
                     "quick={quick}: {alg} missing from the grid"
                 );
             }
+            // Both Winograd tile sizes are candidate axes, each crossed
+            // with the GEMM blockings (> 1 blocking per wino_m).
+            for m in [2u32, 4] {
+                let blockings: Vec<BlockedParams> = grid
+                    .iter()
+                    .filter(|c| {
+                        c.config.algorithm == ConvAlgorithm::Winograd
+                            && c.config.wino_m == m
+                    })
+                    .map(|c| BlockedParams { threads: 1, ..c.blocked })
+                    .collect();
+                assert!(
+                    blockings.iter().any(|b| *b != blockings[0]),
+                    "quick={quick}: wino_m={m} not crossed with blockings"
+                );
+            }
+            // Every detected ISA rides both GEMM-lowered algorithms; the
+            // direct kernels stay scalar (no lowered GEMM to dispatch).
+            for &isa in &isas {
+                for alg in [ConvAlgorithm::Im2col, ConvAlgorithm::Winograd] {
+                    assert!(
+                        grid.iter().any(|c| c.config.algorithm == alg
+                            && c.isa == isa),
+                        "quick={quick}: {alg} never paired with {isa}"
+                    );
+                }
+            }
+            assert!(grid
+                .iter()
+                .all(|c| c.config.algorithm != ConvAlgorithm::Tiled
+                    || c.isa == Isa::Scalar));
             // Dedup + the untuned baseline is always present.
             for (i, c) in grid.iter().enumerate() {
                 assert!(!grid[i + 1..].contains(c), "{} duplicated", c.name());
@@ -1027,7 +1095,8 @@ mod tests {
     #[test]
     fn conv_sweep_measures_algorithms_and_persists_conv_points() {
         let (_dir, mut engine) = sweep_fixture();
-        let grid = conv_native_grid(true, &[1, 2]);
+        let isas = Isa::detect();
+        let grid = conv_native_grid(true, &[1, 2], &isas);
         let mut db = SelectionDb::new();
         let sweep = tune_space_sweep(
             &mut engine,
@@ -1036,7 +1105,7 @@ mod tests {
             2,
             HOST_DEVICE,
             &ExhaustiveSearch,
-            &mut |e, c: &ConvCandidate| e.set_conv_params(c.config, c.blocked),
+            &mut |e, c: &ConvCandidate| e.set_conv_point(*c),
             &mut db,
         )
         .unwrap();
@@ -1051,6 +1120,19 @@ mod tests {
             ConvAlgorithm::Winograd,
         ] {
             assert!(algs.contains(&alg), "{alg} never measured: {algs:?}");
+        }
+        // Both Winograd tile sizes and every detected micro-kernel ISA
+        // were actually timed — the new axes are measured, not collapsed.
+        let wino_ms = sweep.axis_values_for(&key.op, |c| {
+            (c.config.algorithm == ConvAlgorithm::Winograd)
+                .then_some(c.config.wino_m)
+        });
+        for m in [2u32, 4] {
+            assert!(wino_ms.contains(&Some(m)), "wino_m={m} never measured");
+        }
+        let swept_isas = sweep.axis_values_for(&key.op, |c| c.isa);
+        for &isa in &isas {
+            assert!(swept_isas.contains(&isa), "{isa} never measured");
         }
         // The persisted winner is the argmax and beats (or ties) the
         // untuned default, which is in the grid by construction.
@@ -1088,7 +1170,7 @@ mod tests {
         .unwrap();
         let store = ArtifactStore::open(dir.path()).unwrap();
         let mut engine = NativeEngine::new(store).unwrap();
-        let grid = conv_native_grid(true, &[1]);
+        let grid = conv_native_grid(true, &[1], &Isa::detect());
         let n_wino = grid
             .iter()
             .filter(|c| c.config.algorithm == ConvAlgorithm::Winograd)
@@ -1102,7 +1184,7 @@ mod tests {
             1,
             HOST_DEVICE,
             &ExhaustiveSearch,
-            &mut |e, c: &ConvCandidate| e.set_conv_params(c.config, c.blocked),
+            &mut |e, c: &ConvCandidate| e.set_conv_point(*c),
             &mut db,
         )
         .unwrap();

@@ -20,7 +20,9 @@
 //!   strategy: enumerate a space's grid (for GEMM,
 //!   [`gemm_point_grid`]: `BlockedParams` × `threads` ×
 //!   runtime-detected ISA; for conv, [`conv_native_grid`]:
-//!   `ConvAlgorithm × ConvConfig × threads`), let the strategy pick
+//!   `ConvAlgorithm × ConvConfig × threads × ISA`, the config axis
+//!   carrying the Winograd `wino_m ∈ {2, 4}` tile size), let the
+//!   strategy pick
 //!   which *applicable* points to time through a
 //!   [`crate::runtime::Backend`], and persist the winners — the
 //!   parametrize → measure → select loop CI runs on every merge

@@ -291,7 +291,7 @@ pub fn retune_pass<B: Backend>(
         &mut scratch,
         &is_hot,
     )?;
-    let conv_grid = conv_native_grid(cfg.quick, &cfg.threads);
+    let conv_grid = conv_native_grid(cfg.quick, &cfg.threads, &isas);
     let conv_sweep = tune_space_sweep_filtered::<B, ConvPoint>(
         engine,
         "conv",

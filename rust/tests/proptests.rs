@@ -19,6 +19,41 @@ use portable_kernels::util::rng::XorShift;
 
 const CASES: usize = 60;
 
+// ---- tolerance-aware conformance bounds ----
+//
+// Each conv algorithm conforms to the direct oracle within an
+// algorithm-specific bound, because the algorithms do different
+// arithmetic:
+//
+// * tiled direct reorders nothing per output — bit-exact (rtol 0);
+// * Winograd F(2×2, 3×3) evaluates at points {0, ±1}: transform entries
+//   are 0/±1/±½, so the transform-domain round-trip loses only a couple
+//   of ULPs per accumulation — 1e-3 relative is generous;
+// * Winograd F(4×4, 3×3) evaluates at points {0, ±1, ±2}: transform
+//   entries reach 8 (Aᵀ) and 5 (Bᵀ), and the 6×6 congruences both
+//   amplify intermediates and cancel them back down, so the error bound
+//   derives as roughly |Bᵀ|·|B|·|Aᵀ|·|A| ≈ 10× the F(2×2) conditioning —
+//   one order of magnitude looser, 1e-2 relative.
+const TOL_TILED: f32 = 0.0;
+const TOL_WINO2: f32 = 1e-3;
+const TOL_WINO4: f32 = 1e-2;
+
+/// Assert element-wise closeness under a *relative* bound:
+/// `|a - e| <= rtol * max(|e|, 1)` — the `max(|e|, 1)` floor keeps the
+/// bound meaningful around zero-valued outputs.  `rtol == 0` demands
+/// exact equality (the tiled-direct contract).
+fn assert_close_rel(actual: &[f32], expected: &[f32], rtol: f32, what: &str) {
+    assert_eq!(actual.len(), expected.len(), "{what}: length mismatch");
+    for (i, (a, e)) in actual.iter().zip(expected).enumerate() {
+        let bound = rtol * e.abs().max(1.0);
+        let diff = (a - e).abs();
+        assert!(
+            diff <= bound,
+            "{what}: element {i}: {a} vs {e} (|diff| {diff} > {bound})"
+        );
+    }
+}
+
 fn random_gemm_config(rng: &mut XorShift) -> GemmConfig {
     GemmConfig {
         rt_m: *rng.choose(&[1, 2, 4, 8, 16]),
@@ -342,16 +377,18 @@ fn prop_parallel_conv_bit_identical_to_serial() {
     }
 }
 
-/// The conv algorithm family agrees: winograd and tiled-direct outputs
-/// match im2col within tolerance on ragged/degenerate 3×3-stride-1
-/// shapes — the shapes where all three algorithms run natively — and
-/// each algorithm is BIT-identical across thread counts (threads ∈
-/// {2, 8} vs serial).  This is the native counterpart of the paper's
-/// "the algorithm is a parameter, not a semantic" claim.
+/// The tolerance-aware conv conformance suite: every algorithm family
+/// conforms to the *direct* oracle within its documented bound
+/// ([`TOL_TILED`] / [`TOL_WINO2`] / [`TOL_WINO4`]) on ragged/degenerate
+/// 3×3-stride-1 shapes — the shapes where all of them run natively —
+/// and each algorithm is BIT-identical across thread counts (threads ∈
+/// {2, 8} vs serial), for both `wino_m` tile sizes.  This is the native
+/// counterpart of the paper's "the algorithm is a parameter, not a
+/// semantic" claim, with the numerics contract stated per algorithm.
 #[test]
 fn prop_conv_algorithms_agree_on_winograd_domain() {
     use portable_kernels::blas::{
-        conv2d_im2col, conv2d_tiled, conv2d_winograd, max_abs_diff,
+        conv2d_direct, conv2d_im2col, conv2d_tiled, conv2d_winograd,
         Conv2dShape,
     };
     let mut rng = XorShift::new(7777);
@@ -359,6 +396,8 @@ fn prop_conv_algorithms_agree_on_winograd_domain() {
         // Force degenerate corners through the cycle: single-row,
         // single-column, single-channel, and batch-of-one shapes all
         // occur (SAME pads, so any spatial size is legal for 3x3/s1).
+        // h/w from 1 (sub-tile, fully ragged) through sizes that leave
+        // partial tiles for both m=2 and m=4.
         let h = match case % 4 {
             0 => 1,
             1 => 2,
@@ -388,28 +427,49 @@ fn prop_conv_algorithms_agree_on_winograd_domain() {
             *rng.choose(&[1u32, 2, 4]),
             *rng.choose(&[1u32, 2, 4]),
         );
-        let reference = conv2d_im2col(&x, &f, &s, &params);
+        let oracle = conv2d_direct(&x, &f, &s);
+
+        // Tiled direct: same arithmetic as the oracle — bit-exact.
         let tiled = conv2d_tiled(&x, &f, &s, &tile, 1);
-        let wino = conv2d_winograd(&x, &f, &s, 1);
-        assert!(
-            max_abs_diff(&reference, &tiled) < 1e-3,
-            "case {case}: tiled {} vs im2col on {s:?}",
-            tile.name()
+        assert_close_rel(
+            &tiled,
+            &oracle,
+            TOL_TILED,
+            &format!("case {case}: tiled {} on {s:?}", tile.name()),
         );
-        assert!(
-            max_abs_diff(&reference, &wino) < 1e-3,
-            "case {case}: winograd vs im2col on {s:?}"
+        // im2col: the lowered GEMM accumulates in a different order but
+        // never transforms — the F(2×2) bound covers it comfortably.
+        let im2col = conv2d_im2col(&x, &f, &s, &params);
+        assert_close_rel(
+            &im2col,
+            &oracle,
+            TOL_WINO2,
+            &format!("case {case}: im2col on {s:?}"),
         );
-        // Threaded runs of every algorithm are bit-identical to their
-        // serial runs.
+        // Both Winograd tile sizes, each within its documented bound.
+        for (m, tol) in [(2usize, TOL_WINO2), (4, TOL_WINO4)] {
+            let wino = conv2d_winograd(&x, &f, &s, m, &params, Isa::Scalar);
+            assert_close_rel(
+                &wino,
+                &oracle,
+                tol,
+                &format!("case {case}: winograd F({m}x{m}) on {s:?}"),
+            );
+            // Threaded runs are bit-identical to serial for each m.
+            for threads in [2usize, 8] {
+                let tp = BlockedParams { threads, ..params };
+                assert!(
+                    conv2d_winograd(&x, &f, &s, m, &tp, Isa::Scalar) == wino,
+                    "case {case}: winograd F({m}x{m}) threads={threads} \
+                     diverged on {s:?}"
+                );
+            }
+        }
+        // Threaded runs of the non-Winograd algorithms too.
         for threads in [2usize, 8] {
             assert!(
                 conv2d_tiled(&x, &f, &s, &tile, threads) == tiled,
                 "case {case}: tiled threads={threads} diverged on {s:?}"
-            );
-            assert!(
-                conv2d_winograd(&x, &f, &s, threads) == wino,
-                "case {case}: winograd threads={threads} diverged on {s:?}"
             );
             assert!(
                 conv2d_im2col(
@@ -417,7 +477,7 @@ fn prop_conv_algorithms_agree_on_winograd_domain() {
                     &f,
                     &s,
                     &BlockedParams { threads, ..params }
-                ) == reference,
+                ) == im2col,
                 "case {case}: im2col threads={threads} diverged on {s:?}"
             );
         }
@@ -487,6 +547,7 @@ fn prop_selection_db_points_roundtrip_via_disk() {
                 nr: rng.range(1, 16) as usize,
                 threads: rng.range(0, 4) as usize,
             },
+            isa: *rng.choose(&Isa::all()),
         };
         let ckey = SelectionKey::conv(
             "prop-host",

@@ -1,0 +1,151 @@
+//! Decomposition regression for the Winograd batched-GEMM lowering.
+//!
+//! `scripts/wino_decomposition.py` is an exact-f32 Python port of
+//! `blas/winograd.rs` that computes the transform-domain products of
+//! BOTH conv formulations — the old inline per-tile path (transform a
+//! patch, contract channels elementwise, inverse-transform) and the new
+//! scatter → batched-GEMM → gather lowering — asserts the two agree
+//! **bitwise**, and pins U, V, M and the output into
+//! `tests/fixtures/wino_decomp.json`.  This suite replays the corpus
+//! through the real kernels and requires bit-exact agreement with the
+//! fixture, so any change to the decomposition's layouts or its
+//! ascending-k accumulation order (the contract `congruence()` and
+//! `gemm_batched_isa` share) fails loudly instead of drifting.
+//!
+//! The GEMM runs with `bk` ≥ `in_c` (a single k-panel), where the
+//! blocked kernel's accumulation is the same ascending-k sum the
+//! fixture encodes — that is what makes bit-exactness a fair contract.
+
+use portable_kernels::blas::{
+    conv2d_winograd, gemm_batched_isa, scatter_input, transform_filters,
+    BlockedParams, Conv2dShape, Isa,
+};
+use portable_kernels::util::json::{parse, Value};
+use portable_kernels::util::rng::XorShift;
+
+const FIXTURE: &str = include_str!("fixtures/wino_decomp.json");
+
+fn dim(case: &Value, key: &str) -> usize {
+    case.get(key)
+        .and_then(Value::as_u64)
+        .unwrap_or_else(|| panic!("fixture case missing {key}"))
+        as usize
+}
+
+fn f32s(case: &Value, key: &str) -> Vec<f32> {
+    case.get(key)
+        .and_then(Value::as_array)
+        .unwrap_or_else(|| panic!("fixture case missing {key}"))
+        .iter()
+        .map(|e| e.as_f64().expect("fixture value is a number") as f32)
+        .collect()
+}
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{what}: element {i}: {g} != pinned {w} (not bit-exact)"
+        );
+    }
+}
+
+/// Single k-panel blocking: `bk` covers every fixture case's `in_c`,
+/// so the blocked GEMM's per-element sum is the plain ascending-k
+/// accumulation the fixture (and the old inline path) encode.
+fn fixture_params() -> BlockedParams {
+    BlockedParams { bm: 32, bn: 32, bk: 32, mr: 4, nr: 8, threads: 1 }
+}
+
+#[test]
+fn decomposition_matches_the_pinned_inline_path() {
+    let root = parse(FIXTURE).expect("fixture parses");
+    let cases = root
+        .get("cases")
+        .and_then(Value::as_array)
+        .expect("fixture has cases");
+    assert_eq!(cases.len(), 3, "fixture corpus is the 3-case set");
+    for case in cases {
+        let m = dim(case, "wino_m");
+        let s = Conv2dShape::same(
+            dim(case, "batch"),
+            dim(case, "in_h"),
+            dim(case, "in_w"),
+            dim(case, "in_c"),
+            dim(case, "out_c"),
+            3,
+            1,
+        );
+        let label = format!(
+            "m={m} b{}x{}x{}x{}->{}",
+            s.batch, s.in_h, s.in_w, s.in_c, s.out_c
+        );
+        let x = XorShift::new(dim(case, "seed_x") as u64)
+            .f32_vec(s.input_elems());
+        let f = XorShift::new(dim(case, "seed_f") as u64)
+            .f32_vec(s.filter_elems());
+
+        // The filter transform: U[pos] (in_c x out_c) per position.
+        let u = transform_filters(&f, &s, m);
+        assert_bits(&u, &f32s(case, "u"), &format!("{label}: U"));
+
+        // The input scatter: V[pos] (tiles x in_c) per position.
+        let v = scatter_input(&x, &s, m);
+        assert_bits(&v, &f32s(case, "v"), &format!("{label}: V"));
+
+        // The transform-domain products through the real batched GEMM —
+        // pinned against the OLD inline path's products (the Python
+        // generator asserts inline == batched bitwise before writing).
+        let t = m + 2;
+        let tiles_h = s.out_h.div_ceil(m);
+        let tiles = s.batch * tiles_h * s.out_w.div_ceil(m);
+        let mmat = gemm_batched_isa(
+            &v,
+            &u,
+            t * t,
+            tiles,
+            s.out_c,
+            s.in_c,
+            &fixture_params(),
+            Isa::Scalar,
+        );
+        assert_bits(&mmat, &f32s(case, "m"), &format!("{label}: M"));
+
+        // End to end through the public kernel (scatter + GEMM + the
+        // ragged-clipping gather).
+        let y = conv2d_winograd(&x, &f, &s, m, &fixture_params(), Isa::Scalar);
+        assert_bits(&y, &f32s(case, "y"), &format!("{label}: Y"));
+    }
+}
+
+#[test]
+fn fixture_covers_both_tile_sizes_and_ragged_grids() {
+    // The corpus must keep exercising the axes the regression exists
+    // for: both wino_m values, a batched case, and ragged tile grids
+    // (out_h not divisible by m) for each tile size family.
+    let root = parse(FIXTURE).expect("fixture parses");
+    let cases = root
+        .get("cases")
+        .and_then(Value::as_array)
+        .expect("fixture has cases");
+    let mut wino_ms: Vec<usize> = Vec::new();
+    let mut ragged = 0usize;
+    let mut batched = 0usize;
+    for case in cases {
+        let m = dim(case, "wino_m");
+        if !wino_ms.contains(&m) {
+            wino_ms.push(m);
+        }
+        if dim(case, "in_h") % m != 0 {
+            ragged += 1;
+        }
+        if dim(case, "batch") > 1 {
+            batched += 1;
+        }
+    }
+    wino_ms.sort_unstable();
+    assert_eq!(wino_ms, [2, 4], "both tile sizes pinned");
+    assert!(ragged >= 2, "ragged tile grids pinned");
+    assert!(batched >= 1, "a batched case pinned");
+}
