@@ -1,11 +1,14 @@
 //! Bench: the host-Rust GEMM baselines (naive vs blocked) — the "native
 //! library" comparator and a sanity check that blocking pays on the host
-//! exactly as §3.1.1 predicts.
+//! exactly as §3.1.1 predicts — plus the int8 × ISA section comparing
+//! the widening i8 kernels against their f32 twins (GOP/s, CSV to
+//! `reports/gemm_int8_host.csv`).
 //!
 //! Run: `cargo bench --bench rust_blas`.
 
 use portable_kernels::blas::{
-    gemm_blocked, gemm_blocked_isa, gemm_naive, BlockedParams, Isa,
+    gemm_blocked, gemm_blocked_isa, gemm_i8_blocked_isa, gemm_naive,
+    quantize_slice, BlockedParams, Isa, QuantParams,
 };
 use portable_kernels::config::micro_kernel_shapes;
 use portable_kernels::util::bench::{bench, black_box};
@@ -68,6 +71,63 @@ fn registry_sweep() {
     println!();
 }
 
+/// The int8 × ISA section: the widening i8×i8→i32 kernel against its
+/// f32 twin, per detected ISA, at two sizes.  Integer rows report GOP/s
+/// (same useful multiply-add count, honest unit); the per-row CSV lands
+/// in `reports/gemm_int8_host.csv` so the speedup is diffable across
+/// hosts.  The i8 rows time the raw widening GEMM (quantization done
+/// once outside the loop) — the kernel-level counterpart of
+/// `tune_device`'s end-to-end head-to-head.
+fn int8_isa_sweep() {
+    let params =
+        BlockedParams { bm: 64, bn: 64, bk: 64, mr: 8, nr: 16, threads: 1 };
+    let mut csv = String::from("n,isa,dtype,unit,gops,min_s\n");
+    println!(
+        "== int8 x ISA sweep (serial, {}; detected {:?}) ==",
+        params.name(),
+        Isa::detect()
+    );
+    for &n in &[256usize, 512] {
+        let mut rng = XorShift::new(0x18 + n as u64);
+        let a = rng.f32_vec(n * n);
+        let b = rng.f32_vec(n * n);
+        let q = QuantParams { scale: 1.0 / 256.0, zero_point: 0 };
+        let aq = quantize_slice(&a, &q);
+        let bq = quantize_slice(&b, &q);
+        let ops = 2 * (n as u64).pow(3);
+        for isa in Isa::detect() {
+            let sf = bench(&format!("f32 {n}^3 {isa}"), 1, 3, || {
+                black_box(gemm_blocked_isa(&a, &b, n, n, n, &params, isa));
+            });
+            println!("{}", sf.line(Some(ops)));
+            csv.push_str(&format!(
+                "{n},{isa},f32,GFLOP/s,{:.3},{:.6}\n",
+                sf.gflops(ops),
+                sf.min.as_secs_f64()
+            ));
+            let si = bench(&format!("i8  {n}^3 {isa}"), 1, 3, || {
+                black_box(gemm_i8_blocked_isa(
+                    &aq, &bq, n, n, n, &params, isa,
+                ));
+            });
+            println!("{}", si.line_int(Some(ops)));
+            csv.push_str(&format!(
+                "{n},{isa},i8,GOP/s,{:.3},{:.6}\n",
+                si.gops(ops),
+                si.min.as_secs_f64()
+            ));
+        }
+    }
+    if std::fs::create_dir_all("reports").is_ok() {
+        let path = "reports/gemm_int8_host.csv";
+        match std::fs::write(path, &csv) {
+            Ok(()) => println!("int8 csv -> {path}"),
+            Err(e) => println!("int8 csv not written ({e})"),
+        }
+    }
+    println!();
+}
+
 fn main() {
     for &n in &[64usize, 128, 256, 512] {
         let mut rng = XorShift::new(n as u64);
@@ -105,4 +165,5 @@ fn main() {
     }
     registry_sweep();
     isa_sweep();
+    int8_isa_sweep();
 }

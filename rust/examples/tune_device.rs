@@ -10,15 +10,19 @@
 //!    kernel space (`tuner::tune_space_sweep`), parameterized by a
 //!    `--search` strategy.  Enumerate the GEMM space grid
 //!    (`BlockedParams` × `threads` × runtime-detected micro-kernel
-//!    **ISA** — scalar/SSE2/AVX2/FMA on x86-64) and the conv space grid
-//!    (`ConvAlgorithm × ConvConfig × threads × ISA` — tiled vs im2col
-//!    vs winograd with its `wino_m ∈ {2, 4}` tile size, the paper's
-//!    §4.1 algorithm axis, plus the micro-kernel ISA the lowered
-//!    transform-domain/im2col GEMMs dispatch), let the strategy pick
-//!    which applicable points to execute through `NativeEngine` via
+//!    **ISA** — scalar/SSE2/AVX2/FMA/AVX-512 on x86-64 — × **dtype**,
+//!    f32 vs quantized i8) and the conv space grid
+//!    (`ConvAlgorithm × ConvConfig × threads × ISA × dtype` — tiled vs
+//!    im2col vs winograd with its `wino_m ∈ {2, 4}` tile size, the
+//!    paper's §4.1 algorithm axis, plus the micro-kernel ISA the
+//!    lowered transform-domain/im2col GEMMs dispatch; i8 rides the
+//!    im2col lowering only), let the strategy pick which applicable
+//!    points to execute through `NativeEngine` via
 //!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
-//!    and prove the engine consults it — including the chosen algorithm
-//!    and ISA — at plan time.
+//!    and prove the engine consults it — including the chosen
+//!    algorithm, ISA and dtype — at plan time.  A final 512^3
+//!    head-to-head times tuned int8 against tuned f32 in
+//!    elements/second (>= 2x asserted on AVX2 hosts).
 //!
 //! ```sh
 //! cargo run --release --example tune_device              # full, guided
@@ -52,7 +56,10 @@
 
 use std::path::{Path, PathBuf};
 
-use portable_kernels::blas::Isa;
+use portable_kernels::blas::{
+    gemm_blocked_isa, gemm_i8_dequant, quantize_slice, Dtype, Isa,
+    QuantParams,
+};
 use portable_kernels::config::{
     ConvAlgorithm, ConvPoint, GemmConfig, GemmPoint,
 };
@@ -61,12 +68,15 @@ use portable_kernels::perfmodel::{gemm_estimate, GemmProblem};
 use portable_kernels::runtime::{
     ArtifactStore, Backend, NativeEngine, HOST_DEVICE,
 };
+use portable_kernels::config::KernelSpace;
 use portable_kernels::tuner::{
     conv_native_grid, gemm_point_grid, selection_key_for, tune_conv,
     tune_gemm, tune_space_sweep, ExhaustiveSearch, GuidedSearch, HillClimb,
-    SearchStrategy, SelectionDb, SelectionKey, SpaceSweep,
+    SearchStrategy, SelectionDb, SelectionKey, SpaceMeasurement, SpaceSweep,
 };
+use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::json::Value;
+use portable_kernels::util::rng::XorShift;
 use portable_kernels::util::tmp::TempDir;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -212,13 +222,20 @@ fn modeled_zoo() -> Result<(), Box<dyn std::error::Error>> {
     Ok(())
 }
 
-/// One synthetic gemm manifest entry.
+/// One synthetic gemm manifest entry.  The `quant` block matters: the
+/// sweep's grid crosses `dtype ∈ {f32, i8}`, and without quantization
+/// metadata the planner degrades i8 points to f32 — the sweep would
+/// silently time the f32 kernel under an i8 label.  `synth_inputs`
+/// draws from [-0.5, 0.5), so scale 1/256 with zero-point 0 spans the
+/// data range.
 fn gemm_entry(name: &str, m: usize, n: usize, k: usize) -> String {
     let flops = 2 * m as u64 * n as u64 * k as u64;
     format!(
         r#"{{"name": "{name}", "kind": "gemm", "impl": "native",
             "file": "{name}.hlo.txt", "flops": {flops},
             "m": {m}, "n": {n}, "k": {k}, "groups": ["gemm"],
+            "quant": {{"a": {{"scale": 0.00390625, "zero_point": 0}},
+                       "b": {{"scale": 0.00390625, "zero_point": 0}}}},
             "inputs": [{{"shape": [{m}, {k}], "dtype": "float32"}},
                        {{"shape": [{k}, {n}], "dtype": "float32"}}]}}"#
     )
@@ -238,6 +255,8 @@ fn conv_entry(
         r#"{{"name": "{name}", "kind": "conv", "impl": "native",
             "file": "{name}.hlo.txt", "flops": {flops}, "batch": {batch},
             "algorithm": "im2col", "groups": ["conv"],
+            "quant": {{"a": {{"scale": 0.00390625, "zero_point": 0}},
+                       "b": {{"scale": 0.00390625, "zero_point": 0}}}},
             "layer": {{"name": "{name}", "window": {window}, "stride": 1,
                        "in_h": {h}, "in_w": {h}, "in_c": {c}, "out_c": {k},
                        "out_h": {h}, "out_w": {h}, "padding": "SAME",
@@ -280,6 +299,56 @@ fn sweep_store(
     )?;
     let store = ArtifactStore::open(dir.path())?;
     Ok((Some(dir), store))
+}
+
+/// Per-dtype argmax columns for one problem: within each precision the
+/// tuned winner is the max over a superset of that precision's scalar
+/// rows, so tuned >= scalar *per dtype* is an argmax invariant, not a
+/// timing assertion — violated only if the sweep mislabeled rows.  CI
+/// additionally keys on the i8 pair (tuned-i8 >= scalar-i8).  Integer
+/// rows report GOP/s, f32 rows GFLOP/s — same useful-op count, honest
+/// unit.
+fn per_dtype_columns<P: KernelSpace>(
+    rows: &[SpaceMeasurement<P>],
+    op: &str,
+    dtype_of: &dyn Fn(&P) -> Dtype,
+    isa_of: &dyn Fn(&P) -> Isa,
+) -> Result<Value, Box<dyn std::error::Error>> {
+    let mut per = Value::object();
+    for d in Dtype::all() {
+        let best = |scalar_only: bool| -> f64 {
+            rows.iter()
+                .filter(|r| {
+                    r.problem == op
+                        && dtype_of(&r.point) == d
+                        && (!scalar_only || isa_of(&r.point) == Isa::Scalar)
+                })
+                .map(|r| r.gflops)
+                .fold(0.0f64, f64::max)
+        };
+        let tuned = best(false);
+        if tuned <= 0.0 {
+            // This precision was never measured for this problem (a
+            // budgeted strategy pruned it, or i8 is off-domain).
+            continue;
+        }
+        let scalar = best(true);
+        if tuned < scalar {
+            return Err(format!(
+                "{op}: tuned {d} {tuned:.2} below the scalar {d} winner \
+                 {scalar:.2} — per-dtype argmax violated"
+            )
+            .into());
+        }
+        let mut o = Value::object();
+        if d == Dtype::I8 {
+            o.set("tuned_gops", tuned).set("scalar_gops", scalar);
+        } else {
+            o.set("tuned_gflops", tuned).set("scalar_gflops", scalar);
+        }
+        per.set(d.as_str(), o);
+    }
+    Ok(per)
 }
 
 /// The measured half: one generic sweep per kernel space (GEMM:
@@ -346,8 +415,12 @@ fn measured_host_sweep(
         &mut db,
     )?;
     for (op, (point, gflops)) in &gemm_sweep.winners {
+        // Integer winners report GOP/s — same useful-op count, honest
+        // unit (satellite of the dtype axis; see util::bench::gops).
+        let unit =
+            if point.dtype == Dtype::I8 { "GOP/s" } else { "GF/s" };
         println!(
-            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s \
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} {unit} \
              ({} points measured)",
             point.isa,
             point.name(),
@@ -365,8 +438,10 @@ fn measured_host_sweep(
         &mut db,
     )?;
     for (op, (cand, gflops)) in &conv_sweep.winners {
+        let unit =
+            if cand.dtype == Dtype::I8 { "GOP/s" } else { "GF/s" };
         println!(
-            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} GF/s \
+            "  {op:<28} -> [{}] {:<30} {gflops:>8.2} {unit} \
              ({} points measured)",
             cand.config.algorithm,
             cand.name(),
@@ -455,6 +530,47 @@ fn measured_host_sweep(
         )
         .into());
     }
+    // ... and the dtype axis: under exhaustive search every GEMM problem
+    // measures both precisions, and every 3x3/s1 conv problem measures
+    // the quantized im2col points (i8 exists only on the im2col
+    // lowering, so conv problems off that domain legitimately stay f32).
+    let mut dtypes_swept: Vec<Dtype> = Vec::new();
+    let mut note_dtypes = |swept: &[Dtype]| {
+        for &d in swept {
+            if !dtypes_swept.contains(&d) {
+                dtypes_swept.push(d);
+            }
+        }
+    };
+    for op in gemm_sweep.winners.keys() {
+        let swept = gemm_sweep.axis_values_for(op, |p| p.dtype);
+        if exhaustive {
+            for want in Dtype::all() {
+                if !swept.contains(&want) {
+                    return Err(format!(
+                        "{op}: dtype {want} was never measured \
+                         ({swept:?}) — the dtype axis collapsed"
+                    )
+                    .into());
+                }
+            }
+        }
+        println!("  {op}: measured dtypes {swept:?}");
+        note_dtypes(&swept);
+    }
+    for op in conv_sweep.winners.keys() {
+        let swept = conv_sweep.axis_values_for(op, |c| c.dtype);
+        if exhaustive && !swept.contains(&Dtype::I8) {
+            return Err(format!(
+                "{op}: dtype i8 was never measured ({swept:?}) — the \
+                 conv dtype axis collapsed"
+            )
+            .into());
+        }
+        println!("  {op}: measured dtypes {swept:?}");
+        note_dtypes(&swept);
+    }
+    dtypes_swept.sort_by_key(|d| d.as_str());
 
     // Fold a previously written (possibly legacy) DB into the unified
     // schema, keeping the faster entry per key.
@@ -505,8 +621,13 @@ fn measured_host_sweep(
                     .ok_or_else(|| format!("{name}: no gemm plan"))?;
                 // Winners from this host's grid plan verbatim; a merged
                 // off-host entry may legitimately degrade its ISA to
-                // scalar, so compare against the degraded point.
-                let want = want.host_degraded();
+                // scalar, and an i8 winner degrades to f32 on an
+                // artifact without quantization metadata — compare
+                // against the same degrade ladder the planner applies.
+                let mut want = want.host_degraded();
+                if meta.quant.is_none() {
+                    want = GemmPoint { dtype: Dtype::F32, ..want };
+                }
                 if got != want {
                     return Err(format!(
                         "{name}: engine planned {} but the tuned \
@@ -570,6 +691,7 @@ fn measured_host_sweep(
                            algorithm: Option<&str>,
                            wino_m: Option<u64>,
                            isa: Option<(&str, f64)>,
+                           dtype: Option<(&str, Value)>,
                            problems: &mut Value,
                            worst_ratio: &mut f64|
      -> Result<(), Box<dyn std::error::Error>> {
@@ -602,6 +724,9 @@ fn measured_host_sweep(
             }
             entry.set("isa", isa).set("scalar_gflops", scalar_gf);
         }
+        if let Some((dt, per_dtype)) = dtype {
+            entry.set("dtype", dt).set("per_dtype", per_dtype);
+        }
         if default_gf > 0.0 {
             let ratio = tuned_gf / default_gf;
             entry.set("speedup", ratio);
@@ -632,6 +757,10 @@ fn measured_host_sweep(
         }
         let points = gemm_sweep.points_measured_for(op);
         total_points += points;
+        let per_dtype =
+            per_dtype_columns(&gemm_sweep.rows, op, &|p| p.dtype, &|p| {
+                p.isa
+            })?;
         add_problem(
             op,
             *tuned_gf,
@@ -641,6 +770,7 @@ fn measured_host_sweep(
             None,
             None,
             Some((point.isa.as_str(), scalar_gf)),
+            Some((point.dtype.as_str(), per_dtype)),
             &mut problems,
             &mut worst_ratio,
         )?;
@@ -660,6 +790,10 @@ fn measured_host_sweep(
             .fold(0.0f64, f64::max);
         let points = conv_sweep.points_measured_for(op);
         total_points += points;
+        let per_dtype =
+            per_dtype_columns(&conv_sweep.rows, op, &|c| c.dtype, &|c| {
+                c.isa
+            })?;
         add_problem(
             op,
             *tuned_gf,
@@ -669,10 +803,96 @@ fn measured_host_sweep(
             Some(cand.config.algorithm.as_str()),
             Some(cand.config.wino_m as u64),
             Some((cand.isa.as_str(), scalar_gf)),
+            Some((cand.dtype.as_str(), per_dtype)),
             &mut problems,
             &mut worst_ratio,
         )?;
     }
+    // The quantization acceptance head-to-head: tuned int8 vs tuned f32
+    // at 512^3, compared in elements/second (the unit that is common to
+    // both precisions — GFLOP/s vs GOP/s would compare apples to
+    // oranges).  Each side runs its best measured point; the i8 side
+    // times the full end-to-end path the engine executes — quantize,
+    // widening GEMM, dequantize epilogue — so the ratio is what a
+    // deployment actually gains.  On hosts with AVX2 the widening
+    // `_mm256_madd_epi16` kernel must deliver >= 2x; scalar-only hosts
+    // record the ratio without asserting (the scalar widening loop has
+    // no lane-width advantage to exploit).
+    let best_point_for = |d: Dtype| -> Option<GemmPoint> {
+        gemm_sweep
+            .rows
+            .iter()
+            .filter(|r| r.point.dtype == d)
+            .max_by(|x, y| x.gflops.total_cmp(&y.gflops))
+            .map(|r| r.point)
+    };
+    let f32_pt = best_point_for(Dtype::F32)
+        .unwrap_or_default()
+        .host_degraded();
+    let i8_pt = best_point_for(Dtype::I8)
+        .unwrap_or(GemmPoint { dtype: Dtype::I8, ..f32_pt })
+        .host_degraded();
+    let (hm, hn, hk) = (512usize, 512, 512);
+    let hops = 2 * (hm * hn * hk) as u64;
+    let mut rng = XorShift::new(4242);
+    let ha = rng.f32_vec(hm * hk);
+    let hb = rng.f32_vec(hk * hn);
+    let hq = QuantParams { scale: 1.0 / 256.0, zero_point: 0 };
+    let h2h_iters = if quick { 3 } else { 5 };
+    let sf = bench("gemm_f32_512^3 (tuned)", 1, h2h_iters, || {
+        black_box(gemm_blocked_isa(
+            &ha, &hb, hm, hn, hk, &f32_pt.params, f32_pt.isa,
+        ));
+    });
+    let si = bench("gemm_i8_512^3 (tuned, end-to-end)", 1, h2h_iters, || {
+        let aq = quantize_slice(&ha, &hq);
+        let bq = quantize_slice(&hb, &hq);
+        black_box(gemm_i8_dequant(
+            &aq, &bq, hm, hn, hk, &hq, &hq, &i8_pt.params, i8_pt.isa,
+        ));
+    });
+    println!("== int8 head-to-head at 512^3 ==");
+    println!("{}", sf.line(Some(hops)));
+    println!("{}", si.line_int(Some(hops)));
+    let elems = (hm * hn * hk) as f64;
+    let eps = |min_secs: f64| {
+        if min_secs <= 0.0 { 0.0 } else { elems / min_secs }
+    };
+    let eps_f32 = eps(sf.min.as_secs_f64());
+    let eps_i8 = eps(si.min.as_secs_f64());
+    let i8_speedup =
+        if eps_f32 > 0.0 { eps_i8 / eps_f32 } else { 0.0 };
+    println!(
+        "  [{}] {} vs [{}] {}: int8 {:.3e} elems/s, f32 {:.3e} elems/s \
+         -> {:.2}x",
+        i8_pt.isa,
+        i8_pt.name(),
+        f32_pt.isa,
+        f32_pt.name(),
+        eps_i8,
+        eps_f32,
+        i8_speedup
+    );
+    let have_avx2 = isas.contains(&Isa::Avx2);
+    if have_avx2 && i8_speedup < 2.0 {
+        return Err(format!(
+            "int8 head-to-head at 512^3: {i8_speedup:.2}x below the 2x \
+             elements/second bar the AVX2 widening kernel must clear \
+             (i8 {eps_i8:.3e} vs f32 {eps_f32:.3e} elems/s)"
+        )
+        .into());
+    }
+    let mut h2h = Value::object();
+    h2h.set("m", hm as u64)
+        .set("n", hn as u64)
+        .set("k", hk as u64)
+        .set("f32_point", f32_pt.name())
+        .set("i8_point", i8_pt.name())
+        .set("f32_elems_per_s", eps_f32)
+        .set("i8_elems_per_s", eps_i8)
+        .set("i8_speedup", i8_speedup)
+        .set("asserted", have_avx2);
+
     let mut bench = Value::object();
     let isa_strs = |list: &[Isa]| -> Value {
         Value::Array(
@@ -691,6 +911,16 @@ fn measured_host_sweep(
         .set("isas_detected", isa_strs(&isas))
         .set("isas_swept", isa_strs(&isas_swept))
         .set(
+            "dtypes_swept",
+            Value::Array(
+                dtypes_swept
+                    .iter()
+                    .map(|d| Value::Str(d.as_str().into()))
+                    .collect(),
+            ),
+        )
+        .set("int8_head_to_head", h2h)
+        .set(
             "conv_wino_swept",
             Value::Array(
                 winos_swept.iter().map(|&m| Value::from(m)).collect(),
@@ -707,10 +937,12 @@ fn measured_host_sweep(
     println!(
         "OK [{search}]: {total_points} points measured across {} + {} \
          grid points; tuned >= default (and >= the measured scalar \
-         winner) for every problem; DB (incl. algorithm + isa) \
-         consulted at plan time",
+         winner, per dtype) for every problem; DB (incl. algorithm, \
+         isa + dtype) consulted at plan time; int8 512^3 head-to-head \
+         {:.2}x",
         grid.len(),
-        conv_grid.len()
+        conv_grid.len(),
+        i8_speedup
     );
     Ok(())
 }

@@ -125,12 +125,17 @@ macro_rules! micro_kernel_registry {
                                 apack, b, c, n, il, j, p0, p1,
                             )
                         },
+                        // Avx512 dispatches the widest shipped f32
+                        // kernel (no 512-bit-specific bodies yet);
+                        // availability implies FMA support.
                         #[cfg(target_arch = "x86_64")]
-                        Isa::Fma => unsafe {
+                        Isa::Fma | Isa::Avx512 => unsafe {
                             super::simd::micro_kernel_fma::<$mr, $nr>(
                                 apack, b, c, n, il, j, p0, p1,
                             )
                         },
+                        // Scalar, Neon (portable bodies), and every
+                        // value on a non-x86-64 build.
                         _ => micro_kernel_fixed::<$mr, $nr>(
                             apack, b, c, n, il, j, p0, p1,
                         ),
@@ -274,9 +279,14 @@ pub fn gemm_blocked_isa(
 /// Each slice runs [`gemm_blocked_isa`] verbatim under the same `params`
 /// and `isa`, so every batch element is bit-identical to a standalone
 /// [`gemm_blocked_isa`] call on that slice — including across thread
-/// counts (`params.threads` parallelizes *inside* each GEMM over its
-/// macro-tile bands; the batch loop itself is sequential, preserving
-/// the crate's disjoint-band determinism).
+/// counts.  `params.threads` parallelizes *inside* each GEMM over its
+/// macro-tile bands when a slice has several; when each slice fits a
+/// single `bm` band (the Winograd transform-domain batch of small
+/// GEMMs), the band path degenerates to serial and the threads are
+/// spent across the *batch* dimension instead — each worker owns a
+/// disjoint per-batch output slice and runs the serial per-slice code,
+/// preserving the crate's disjoint-output determinism (bit-identical
+/// to the sequential loop for every thread count).
 ///
 /// Panics on operand/shape mismatch or an unavailable `isa`, exactly
 /// like [`gemm_blocked_isa`].
@@ -292,6 +302,33 @@ pub fn gemm_batched_isa(
 ) -> Vec<f32> {
     assert_eq!(a.len(), batch * m * k, "batched A shape mismatch");
     assert_eq!(b.len(), batch * k * n, "batched B shape mismatch");
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(params.bm.max(1));
+    if workers > 1 && batch > 1 && bands <= 1 && m * n > 0 {
+        // Per-GEMM work is below the band-parallel threshold (a single
+        // bm band), so inner parallelism would run every slice serially
+        // anyway: spend the threads across the batch.  Each worker
+        // computes whole slices with the serial per-GEMM path into its
+        // disjoint chunk of C; gemm_blocked_isa is bit-identical across
+        // thread counts, so this path is bit-identical to the
+        // sequential loop below.
+        let serial = BlockedParams { threads: 1, ..*params };
+        let mut c = vec![0.0f32; batch * m * n];
+        let slices: Vec<(usize, &mut [f32])> =
+            c.chunks_mut(m * n).enumerate().collect();
+        pool::run_parallel(workers, slices, |_, (i, cslice)| {
+            cslice.copy_from_slice(&gemm_blocked_isa(
+                &a[i * m * k..(i + 1) * m * k],
+                &b[i * k * n..(i + 1) * k * n],
+                m,
+                n,
+                k,
+                &serial,
+                isa,
+            ));
+        });
+        return c;
+    }
     let mut c = Vec::with_capacity(batch * m * n);
     for i in 0..batch {
         c.extend_from_slice(&gemm_blocked_isa(
@@ -616,7 +653,9 @@ mod tests {
             let scalar = gemm_blocked(&a, &b, m, n, k, &params);
             for isa in Isa::detect() {
                 let got = gemm_blocked_isa(&a, &b, m, n, k, &params, isa);
-                if isa == Isa::Fma {
+                // Avx512 dispatches the FMA kernel, so it shares FMA's
+                // fused-rounding tolerance contract.
+                if matches!(isa, Isa::Fma | Isa::Avx512) {
                     assert!(
                         max_abs_diff(&scalar, &got)
                             <= 1e-6 * k as f32,
@@ -734,6 +773,42 @@ mod tests {
                 max_abs_diff(&c[i * m * n..(i + 1) * m * n], &naive) < 1e-5,
                 "batch element {i}"
             );
+        }
+    }
+
+    #[test]
+    fn batched_gemm_batch_parallel_path_bit_identical() {
+        // Slices smaller than one bm band take the batch-parallel path
+        // (threads spent across the batch); it must be bit-identical to
+        // the sequential loop for every detected ISA and thread count.
+        let (batch, m, n, k) = (7, 6, 5, 4);
+        let a: Vec<f32> =
+            (0..batch * m * k).map(|i| (i % 9) as f32 - 4.0).collect();
+        let b: Vec<f32> =
+            (0..batch * k * n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let base = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1,
+        };
+        assert!(m <= base.bm, "test premise: one band per slice");
+        for isa in Isa::detect() {
+            let serial =
+                gemm_batched_isa(&a, &b, batch, m, n, k, &base, isa);
+            for threads in [0usize, 2, 3, 8] {
+                let par = gemm_batched_isa(
+                    &a,
+                    &b,
+                    batch,
+                    m,
+                    n,
+                    k,
+                    &BlockedParams { threads, ..base },
+                    isa,
+                );
+                assert!(
+                    serial == par,
+                    "{isa} threads={threads} batch-parallel diverged"
+                );
+            }
         }
     }
 

@@ -572,7 +572,11 @@ mod tests {
             for isa in crate::blas::Isa::detect() {
                 let got =
                     conv2d_native_isa(&x, &f, &s, &cfg, &blocked, isa);
-                if isa == crate::blas::Isa::Fma {
+                // Avx512 dispatches the FMA kernel: same tolerance.
+                if matches!(
+                    isa,
+                    crate::blas::Isa::Fma | crate::blas::Isa::Avx512
+                ) {
                     assert!(
                         max_abs_diff(&scalar, &got) <= 1e-5,
                         "{} fma beyond tolerance",

@@ -1,0 +1,1006 @@
+//! Quantized int8 GEMM stack: the `dtype` axis of the kernel space.
+//!
+//! The paper's parametrization covers tile shapes, algorithms, threads,
+//! and the ISA; precision is the remaining performance-critical axis.
+//! This module adds it for the host: i8×i8→i32 accumulation GEMM with
+//! per-tensor affine quantization (`real = scale · (q - zero_point)`),
+//! riding the *same* blocked macro-tiling, packing, thread pool, and ISA
+//! dispatch as the f32 stack in `blas::blocked` — the int8 kernels are a
+//! second micro-kernel family behind the same knobs, not a parallel
+//! implementation.
+//!
+//! Numerics: integer accumulation is **exact** — every kernel variant
+//! (scalar widening loop, AVX2 widening dot product, any thread count)
+//! computes the identical `i32` result bit for bit, because integer adds
+//! are associative.  The AVX2 kernel widens `i8 → i16` with
+//! `_mm256_cvtepi8_epi16` and reduces k-step *pairs* with
+//! `_mm256_madd_epi16` (each 32-bit lane gets `a_p·b_p + a_{p+1}·b_{p+1}`
+//! of i16 operands — products cap at 128², so the pairwise sum caps at
+//! 2·2¹⁴ and can never saturate, unlike a true u8×i8 `maddubs` whose i16
+//! pair sums can).  The only overflow hazard left is the `i32`
+//! accumulator itself, which is why [`gemm_i8_blocked_isa`] bounds `k`
+//! loudly ([`MAX_I8_GEMM_K`]).
+//!
+//! The dequantize epilogue applies the per-tensor zero-point corrections
+//! from row/column sums:
+//! `Σ (a-za)(b-zb) = Σ a·b − zb·Σa − za·Σb + k·za·zb`, then scales by
+//! `scale_a · scale_b` — so the padded entries of the quantized im2col
+//! patch matrix (filled with the input zero-point) contribute exactly
+//! zero, matching the f32 path's zero padding.
+
+use super::blocked::BlockedParams;
+use super::{Conv2dShape, Isa};
+use crate::error::{Error, Result};
+use crate::util::pool;
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::{
+    __m128i, __m256i, _mm256_add_epi32, _mm256_loadu_si256,
+    _mm256_madd_epi16, _mm256_set1_epi32, _mm256_set_m128i,
+    _mm256_setzero_si256, _mm256_storeu_si256, _mm_add_epi32,
+    _mm_cvtepi8_epi16, _mm_cvtsi32_si128, _mm_loadl_epi64,
+    _mm_loadu_si128, _mm_madd_epi16, _mm_set1_epi32, _mm_setzero_si128,
+    _mm_storeu_si128, _mm_unpackhi_epi16, _mm_unpacklo_epi16,
+};
+
+/// The element-type axis of the kernel space: which precision the
+/// GEMM/conv micro-kernels compute in.  `F32` is the historical (and
+/// default) family; `I8` runs the quantized stack in this module and
+/// requires quantization metadata on the artifact (the plan layer
+/// degrades `I8` to `F32` when an artifact has none — the precision
+/// analogue of the unavailable-ISA scalar degrade).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Dtype {
+    /// 32-bit float kernels (the historical family).
+    #[default]
+    F32,
+    /// Quantized int8 kernels: i8×i8→i32 accumulation with per-tensor
+    /// scale/zero-point dequantize.
+    I8,
+}
+
+impl Dtype {
+    /// Every dtype value, in sweep/report order (f32 first).
+    pub fn all() -> [Dtype; 2] {
+        [Dtype::F32, Dtype::I8]
+    }
+
+    /// Stable lowercase name (selection DB, reports, CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::I8 => "i8",
+        }
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Dtype {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i8" => Ok(Dtype::I8),
+            other => Err(Error::Config(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// Per-tensor affine quantization parameters:
+/// `real = scale · (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    /// Step between adjacent quantized values (must be positive).
+    pub scale: f32,
+    /// The quantized value representing real 0 (within i8 range).
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    /// Parameters covering `[lo, hi]` with the full i8 range.  The range
+    /// is widened to include 0 so real zero is exactly representable
+    /// (the property the zero-point padding of the quantized im2col
+    /// patch matrix relies on).  A degenerate (empty or single-point)
+    /// range quantizes everything to the zero point with unit scale.
+    pub fn from_range(lo: f32, hi: f32) -> Self {
+        let lo = lo.min(0.0);
+        let hi = hi.max(0.0);
+        if !(hi > lo) || !lo.is_finite() || !hi.is_finite() {
+            return Self { scale: 1.0, zero_point: 0 };
+        }
+        let scale = (hi - lo) / 255.0;
+        let zp = (-128.0 - lo / scale).round();
+        Self { scale, zero_point: zp.clamp(-128.0, 127.0) as i32 }
+    }
+
+    /// Parameters covering the min/max of `data` (see
+    /// [`QuantParams::from_range`]).
+    pub fn for_data(data: &[f32]) -> Self {
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &x in data {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        Self::from_range(lo, hi)
+    }
+
+    /// Quantize one value: `round(x / scale) + zero_point`, saturated to
+    /// the i8 range.
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = (x / self.scale).round() + self.zero_point as f32;
+        q.clamp(-128.0, 127.0) as i8
+    }
+
+    /// Dequantize one value: `scale · (q - zero_point)`.
+    pub fn dequantize(&self, q: i8) -> f32 {
+        self.scale * (q as i32 - self.zero_point) as f32
+    }
+}
+
+/// Quantize a slice under `q` (element-wise [`QuantParams::quantize`]).
+pub fn quantize_slice(xs: &[f32], q: &QuantParams) -> Vec<i8> {
+    xs.iter().map(|&x| q.quantize(x)).collect()
+}
+
+/// Largest `k` the int8 GEMM accepts: the i32 accumulator holds up to
+/// `k · 128²` in magnitude, so `k` beyond this could overflow.  Far
+/// above any registry or im2col-lowered shape in the repo; exceeding it
+/// is a loud panic, never silent wraparound.
+pub const MAX_I8_GEMM_K: usize = (i32::MAX as usize) / (128 * 128);
+
+/// Generate the monomorphized int8 micro-kernel registry: the mirror of
+/// `blocked::micro_kernel_registry!` for the widening i8×i8→i32 kernel
+/// family.  [`INT8_MICRO_KERNEL_SHAPES`] must stay equal to
+/// [`super::MICRO_KERNEL_SHAPES`] (asserted in tests) so the tuner's
+/// grids mean the same thing under either dtype.
+macro_rules! int8_micro_kernel_registry {
+    ($(($mr:literal, $nr:literal)),+ $(,)?) => {
+        /// Every `(mr, nr)` register micro-tile with a monomorphized
+        /// int8 kernel — identical to the f32 registry by construction.
+        pub const INT8_MICRO_KERNEL_SHAPES: &[(usize, usize)] =
+            &[$(($mr, $nr)),+];
+
+        /// Dispatch one int8 register tile: full registry tiles run the
+        /// monomorphized widening kernel — the AVX2 `madd`-pair variant
+        /// for the 256-bit ISAs, the scalar widening loop otherwise —
+        /// ragged edges and unregistered shapes the generic widening
+        /// kernel.  Every path computes the identical exact i32 result.
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        fn dispatch_micro_kernel_i8(
+            full: bool,
+            mr: usize,
+            nr: usize,
+            isa: Isa,
+            apack: &[i8],
+            b: &[i8],
+            c: &mut [i32],
+            n: usize,
+            il: usize,
+            ie: usize,
+            j: usize,
+            je: usize,
+            p0: usize,
+            p1: usize,
+        ) {
+            match (full, mr, nr) {
+                $(
+                    (true, $mr, $nr) => match isa {
+                        // SAFETY: `gemm_i8_blocked_isa` asserted
+                        // `isa.is_available()` on entry; Fma and Avx512
+                        // availability both imply AVX2.
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 | Isa::Fma | Isa::Avx512 => unsafe {
+                            micro_kernel_i8_avx2::<$mr, $nr>(
+                                apack, b, c, n, il, j, p0, p1,
+                            )
+                        },
+                        // Scalar, Sse2 (no i8 widening body below
+                        // AVX2), Neon, and non-x86-64 builds: the
+                        // portable widening loop — same exact result.
+                        _ => micro_kernel_i8_fixed::<$mr, $nr>(
+                            apack, b, c, n, il, j, p0, p1,
+                        ),
+                    },
+                )+
+                _ => micro_kernel_i8(
+                    apack, b, c, n, il, ie, j, je, p0, p1, mr,
+                ),
+            }
+        }
+    };
+}
+
+// Keep in lockstep with `micro_kernel_registry!` in blocked.rs (test:
+// `int8_registry_matches_f32_registry`).
+int8_micro_kernel_registry!(
+    (2, 4),
+    (2, 8),
+    (2, 16),
+    (4, 4),
+    (4, 8),
+    (4, 16),
+    (8, 4),
+    (8, 8),
+    (8, 16),
+    (16, 4),
+    (16, 8),
+    (16, 16),
+);
+
+/// `C = A @ B` over i8 operands with exact i32 accumulation, blocked per
+/// `params` — the int8 twin of
+/// [`gemm_blocked_isa`](super::gemm_blocked_isa), sharing its macro-tile
+/// bands, A-panel packing discipline, thread pool, and ISA dispatch.
+/// Every `(params, isa, threads)` combination returns the identical i32
+/// result bit for bit (integer arithmetic is exact).
+///
+/// Panics on shape mismatch, invalid params, an unavailable `isa`, or
+/// `k > `[`MAX_I8_GEMM_K`] (i32 accumulator overflow bound).
+pub fn gemm_i8_blocked_isa(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<i32> {
+    assert_eq!(a.len(), m * k, "A shape mismatch");
+    assert_eq!(b.len(), k * n, "B shape mismatch");
+    assert!(
+        params.bm > 0
+            && params.bn > 0
+            && params.bk > 0
+            && params.mr > 0
+            && params.nr > 0,
+        "BlockedParams dims must be non-zero: {params:?}"
+    );
+    assert!(
+        params.mr <= 16 && params.nr <= 16,
+        "micro-tile exceeds the 16x16 register kernel cap: {params:?}"
+    );
+    assert!(
+        k <= MAX_I8_GEMM_K,
+        "int8 gemm k={k} exceeds the i32 accumulation bound {MAX_I8_GEMM_K}"
+    );
+    assert!(
+        isa.is_available(),
+        "micro-kernel ISA {isa} is not available on this host \
+         (detected: {:?}) — resolve the plan through the engine, which \
+         degrades unavailable ISAs to scalar",
+        Isa::detect()
+    );
+    let mut c = vec![0i32; m * n];
+    let bm = params.bm;
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(bm);
+    if workers <= 1 || bands <= 1 || n == 0 {
+        let mut apack = alloc_apack_i8(params);
+        let mut i0 = 0;
+        while i0 < m {
+            let i1 = (i0 + bm).min(m);
+            gemm_i8_band(
+                a,
+                b,
+                &mut c[i0 * n..i1 * n],
+                n,
+                k,
+                i0,
+                i1,
+                params,
+                isa,
+                &mut apack,
+            );
+            i0 = i1;
+        }
+    } else {
+        let row_bands: Vec<(usize, &mut [i32])> =
+            c.chunks_mut(bm * n).enumerate().collect();
+        pool::run_parallel(workers, row_bands, |_, (band, cband)| {
+            let i0 = band * bm;
+            let i1 = (i0 + bm).min(m);
+            let mut apack = alloc_apack_i8(params);
+            gemm_i8_band(a, b, cband, n, k, i0, i1, params, isa, &mut apack);
+        });
+    }
+    c
+}
+
+/// Quantized GEMM with the dequantize epilogue: multiply the quantized
+/// operands exactly in i32, then map back to f32 applying the per-tensor
+/// zero-point corrections and scales — the end-to-end int8 fast path a
+/// `dtype: i8` GEMM plan executes.
+///
+/// `out[i,j] = sa·sb · (acc[i,j] − zb·Σ_p a[i,p] − za·Σ_p b[p,j]
+///             + k·za·zb)`
+/// which equals `Σ_p dequant(a[i,p]) · dequant(b[p,j])` exactly (the
+/// correction arithmetic runs in i64, so it cannot overflow for any
+/// `k ≤ `[`MAX_I8_GEMM_K`]).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_dequant(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    qa: &QuantParams,
+    qb: &QuantParams,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
+    let acc = gemm_i8_blocked_isa(a, b, m, n, k, params, isa);
+    let za = qa.zero_point as i64;
+    let zb = qb.zero_point as i64;
+    let row_sums: Vec<i64> = (0..m)
+        .map(|i| a[i * k..(i + 1) * k].iter().map(|&v| v as i64).sum())
+        .collect();
+    let mut col_sums = vec![0i64; n];
+    for p in 0..k {
+        for (j, s) in col_sums.iter_mut().enumerate() {
+            *s += b[p * n + j] as i64;
+        }
+    }
+    let scale = qa.scale * qb.scale;
+    let kzz = k as i64 * za * zb;
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let corr_row = zb * row_sums[i] - kzz;
+        for j in 0..n {
+            let exact = acc[i * n + j] as i64 - corr_row - za * col_sums[j];
+            out[i * n + j] = scale * exact as f32;
+        }
+    }
+    out
+}
+
+/// Quantized im2col convolution: quantize the NHWC input and RSCK
+/// filters under the given per-tensor params, build the patch matrix in
+/// the quantized domain — **padding taps filled with the input
+/// zero-point**, which dequantizes to exactly 0, matching the f32
+/// path's zero padding — and run the lowered GEMM through
+/// [`gemm_i8_dequant`].  Both stages honor `params.threads`; the
+/// lowered GEMM dispatches `isa` exactly like the f32 conv.
+pub fn conv2d_im2col_i8(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    qx: &QuantParams,
+    qf: &QuantParams,
+    params: &BlockedParams,
+    isa: Isa,
+) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    let xq = quantize_slice(x, qx);
+    let fq = quantize_slice(f, qf);
+    let patches = im2col_i8_threaded(&xq, s, qx.zero_point, params.threads);
+    let m = s.batch * s.out_h * s.out_w;
+    let k = s.window * s.window * s.in_c;
+    gemm_i8_dequant(&patches, &fq, m, s.out_c, k, qx, qf, params, isa)
+}
+
+/// The quantized twin of `conv::im2col_threaded`: patch rows built in
+/// parallel chunks writing disjoint ranges of a buffer pre-filled with
+/// `pad` (the input zero-point), bit-identical for every thread count.
+fn im2col_i8_threaded(
+    x: &[i8],
+    s: &Conv2dShape,
+    pad: i32,
+    threads: usize,
+) -> Vec<i8> {
+    let kdim = s.window * s.window * s.in_c;
+    let rows = s.batch * s.out_h * s.out_w;
+    let pad = pad.clamp(-128, 127) as i8;
+    let mut patches = vec![pad; rows * kdim];
+    let workers = pool::resolve_threads(threads);
+    if workers <= 1 || rows <= 1 || kdim == 0 {
+        im2col_i8_rows(x, s, 0, rows, &mut patches);
+        return patches;
+    }
+    let chunk_rows = rows.div_ceil(workers);
+    let chunks: Vec<(usize, &mut [i8])> = patches
+        .chunks_mut(chunk_rows * kdim)
+        .enumerate()
+        .collect();
+    pool::run_parallel(workers, chunks, |_, (c, chunk)| {
+        let row0 = c * chunk_rows;
+        let row1 = (row0 + chunk_rows).min(rows);
+        im2col_i8_rows(x, s, row0, row1, chunk);
+    });
+    patches
+}
+
+/// Fill rows `[row0, row1)` of the quantized patch matrix (`out` is the
+/// pre-filled-with-zero-point chunk for exactly that range); padding
+/// taps are skipped, leaving the zero-point fill in place.
+fn im2col_i8_rows(
+    x: &[i8],
+    s: &Conv2dShape,
+    row0: usize,
+    row1: usize,
+    out: &mut [i8],
+) {
+    let kdim = s.window * s.window * s.in_c;
+    debug_assert_eq!(out.len(), (row1 - row0) * kdim);
+    for row in row0..row1 {
+        let ow = row % s.out_w;
+        let oh = (row / s.out_w) % s.out_h;
+        let b = row / (s.out_w * s.out_h);
+        let base = (row - row0) * kdim;
+        for r in 0..s.window {
+            let ih = (oh * s.stride + r) as isize - s.pad_top as isize;
+            for sw in 0..s.window {
+                let iw =
+                    (ow * s.stride + sw) as isize - s.pad_left as isize;
+                if ih < 0
+                    || ih as usize >= s.in_h
+                    || iw < 0
+                    || iw as usize >= s.in_w
+                {
+                    continue; // zero-point padding (buffer pre-filled)
+                }
+                let x0 = ((b * s.in_h + ih as usize) * s.in_w
+                    + iw as usize)
+                    * s.in_c;
+                let p0 = base + (r * s.window + sw) * s.in_c;
+                out[p0..p0 + s.in_c].copy_from_slice(&x[x0..x0 + s.in_c]);
+            }
+        }
+    }
+}
+
+/// Packing buffer for one `bm x bk` int8 A macro-panel (the i8 twin of
+/// `blocked::alloc_apack`).
+fn alloc_apack_i8(params: &BlockedParams) -> Vec<i8> {
+    vec![
+        0i8;
+        params.bm.max(params.mr).div_ceil(params.mr)
+            * params.mr
+            * params.bk.max(1)
+    ]
+}
+
+/// One `bm`-row macro-tile band of the int8 GEMM — the exact structure
+/// of `blocked::gemm_band`, over i8 operands and i32 output.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_band(
+    a: &[i8],
+    b: &[i8],
+    cband: &mut [i32],
+    n: usize,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    apack: &mut [i8],
+) {
+    let &BlockedParams { bn, bk, mr, nr, .. } = params;
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        pack_a_i8(a, apack, k, i0, i1, p0, p1, mr);
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            let mut i = i0;
+            while i < i1 {
+                let ie = (i + mr).min(i1);
+                let strip = ((i - i0) / mr) * (mr * (p1 - p0));
+                let il = i - i0;
+                let mut j = j0;
+                while j < j1 {
+                    let je = (j + nr).min(j1);
+                    let full = ie - i == mr && je - j == nr;
+                    dispatch_micro_kernel_i8(
+                        full, mr, nr, isa, &apack[strip..], b, cband, n,
+                        il, il + (ie - i), j, je, p0, p1,
+                    );
+                    j = je;
+                }
+                i = ie;
+            }
+        }
+    }
+}
+
+/// Pack `A[i0..i1, p0..p1]` into `mr`-row strips, k-major (the i8 twin
+/// of `blocked::pack_a`).  Ragged strips are zero-padded; the pad value
+/// is irrelevant to correctness because accumulator rows beyond the
+/// ragged edge are never written back to C — zero just keeps the
+/// buffer deterministic.
+fn pack_a_i8(
+    a: &[i8],
+    apack: &mut [i8],
+    k: usize,
+    i0: usize,
+    i1: usize,
+    p0: usize,
+    p1: usize,
+    mr: usize,
+) {
+    let kc = p1 - p0;
+    let mut out = 0;
+    let mut i = i0;
+    while i < i1 {
+        let rows = (i + mr).min(i1) - i;
+        for p in 0..kc {
+            for r in 0..rows {
+                apack[out] = a[(i + r) * k + p0 + p];
+                out += 1;
+            }
+            for _ in rows..mr {
+                apack[out] = 0;
+                out += 1;
+            }
+        }
+        i += mr;
+    }
+}
+
+/// Monomorphized widening micro-kernel for full `MR x NR` tiles: i8
+/// operands widened to i32 per multiply, exact i32 accumulation.  The
+/// scalar member of the int8 kernel family and the reference every SIMD
+/// variant must match bit for bit.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_i8_fixed<const MR: usize, const NR: usize>(
+    apack: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    let mut acc = [[0i32; NR]; MR];
+    for p in 0..(p1 - p0) {
+        let brow: &[i8] = &b[(p0 + p) * n + j..(p0 + p) * n + j + NR];
+        let astrip = &apack[p * MR..(p + 1) * MR];
+        for r in 0..MR {
+            let aip = astrip[r] as i32;
+            for s in 0..NR {
+                acc[r][s] += aip * brow[s] as i32;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+        for s in 0..NR {
+            crow[s] += accr[s];
+        }
+    }
+}
+
+/// Generic widening micro-kernel for ragged edges and unregistered
+/// shapes (the i8 twin of `blocked::micro_kernel`; 16×16 accumulator
+/// cap).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_i8(
+    apack: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    ie: usize,
+    j: usize,
+    je: usize,
+    p0: usize,
+    p1: usize,
+    mr: usize,
+) {
+    let mut acc = [[0i32; 16]; 16];
+    let (mh, nw) = (ie - i, je - j);
+    debug_assert!(mh <= 16 && nw <= 16);
+    for p in 0..(p1 - p0) {
+        let brow = &b[(p0 + p) * n + j..(p0 + p) * n + je];
+        let astrip = &apack[p * mr..p * mr + mh];
+        for (accr, aip) in acc.iter_mut().zip(astrip.iter()) {
+            let aw = *aip as i32;
+            for (s, bv) in brow.iter().enumerate() {
+                accr[s] += aw * *bv as i32;
+            }
+        }
+    }
+    for r in 0..mh {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + je];
+        for (s, cv) in crow.iter_mut().enumerate() {
+            *cv += acc[r][s];
+        }
+    }
+    let _ = nw;
+}
+
+/// AVX2 widening dot-product micro-kernel: k-step *pairs* reduced with
+/// `_mm256_madd_epi16` over `_mm256_cvtepi8_epi16`-widened operands —
+/// 8 (256-bit) or 4 (128-bit) output columns per `madd`, 2 MACs per
+/// lane per instruction.  Exact: i16 pair products cap at 2·128² <
+/// 2¹⁵·2, summed in i32 lanes; bit-identical to the scalar widening
+/// kernel because integer addition is associative.  Odd trailing
+/// k-steps pair with an implicit zero row.  `NR % 4 != 0` shapes fall
+/// back to the scalar widening body (off the SIMD lane domain, still
+/// exact).
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2 (`Isa::Avx2.is_available()`;
+/// `Fma`/`Avx512` availability implies it).  Slice/layout
+/// preconditions are those of `micro_kernel_i8_fixed`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn micro_kernel_i8_avx2<const MR: usize, const NR: usize>(
+    apack: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    j: usize,
+    p0: usize,
+    p1: usize,
+) {
+    // Broadcast the (a_p, a_{p+1}) pair for one packed-A row as the
+    // 16-bit halves of every 32-bit lane, matching madd's pairing.
+    #[inline(always)]
+    fn pair_broadcast_val(a0: i8, a1: i8) -> i32 {
+        ((a0 as i16 as u16 as u32) | ((a1 as i16 as u16 as u32) << 16))
+            as i32
+    }
+    let kc = p1 - p0;
+    if NR % 8 == 0 {
+        // NR/8 ymm accumulators per row; registry caps NR at 16.
+        let nv = NR / 8;
+        let mut acc: [[__m256i; 2]; MR] =
+            [[_mm256_setzero_si256(); 2]; MR];
+        let mut p = 0;
+        while p < kc {
+            let pair = p + 1 < kc;
+            // Interleave the two widened B rows into (row p, row p+1)
+            // i16 pairs per output column, one ymm per 8 columns.
+            let mut bvec = [_mm256_setzero_si256(); 2];
+            for (v, bv) in bvec.iter_mut().take(nv).enumerate() {
+                let bp_ptr = b.as_ptr().add((p0 + p) * n + j + 8 * v);
+                let bp = _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                    bp_ptr as *const __m128i,
+                ));
+                let bq = if pair {
+                    let bq_ptr =
+                        b.as_ptr().add((p0 + p + 1) * n + j + 8 * v);
+                    _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                        bq_ptr as *const __m128i,
+                    ))
+                } else {
+                    _mm_setzero_si128()
+                };
+                let lo = _mm_unpacklo_epi16(bp, bq);
+                let hi = _mm_unpackhi_epi16(bp, bq);
+                *bv = _mm256_set_m128i(hi, lo);
+            }
+            let astrip = apack.as_ptr().add(p * MR);
+            let astrip2 = apack.as_ptr().add((p + 1) * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let a0 = *astrip.add(r);
+                let a1 = if pair { *astrip2.add(r) } else { 0 };
+                let av = _mm256_set1_epi32(pair_broadcast_val(a0, a1));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm256_add_epi32(
+                        *a,
+                        _mm256_madd_epi16(av, bvec[v]),
+                    );
+                }
+            }
+            p += 2;
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let cp = crow.add(8 * v) as *mut __m256i;
+                let sum = _mm256_add_epi32(_mm256_loadu_si256(cp), *a);
+                _mm256_storeu_si256(cp, sum);
+            }
+        }
+    } else if NR % 4 == 0 {
+        // Narrow registry shapes (NR = 4): 128-bit madd lanes.
+        let nv = NR / 4;
+        let mut acc: [[__m128i; 4]; MR] = [[_mm_setzero_si128(); 4]; MR];
+        let mut p = 0;
+        while p < kc {
+            let pair = p + 1 < kc;
+            let mut bvec = [_mm_setzero_si128(); 4];
+            for (v, bv) in bvec.iter_mut().take(nv).enumerate() {
+                let bp_ptr = b.as_ptr().add((p0 + p) * n + j + 4 * v);
+                let bp = _mm_cvtepi8_epi16(_mm_cvtsi32_si128(
+                    (bp_ptr as *const i32).read_unaligned(),
+                ));
+                let bq = if pair {
+                    let bq_ptr =
+                        b.as_ptr().add((p0 + p + 1) * n + j + 4 * v);
+                    _mm_cvtepi8_epi16(_mm_cvtsi32_si128(
+                        (bq_ptr as *const i32).read_unaligned(),
+                    ))
+                } else {
+                    _mm_setzero_si128()
+                };
+                *bv = _mm_unpacklo_epi16(bp, bq);
+            }
+            let astrip = apack.as_ptr().add(p * MR);
+            let astrip2 = apack.as_ptr().add((p + 1) * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let a0 = *astrip.add(r);
+                let a1 = if pair { *astrip2.add(r) } else { 0 };
+                let av = _mm_set1_epi32(pair_broadcast_val(a0, a1));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm_add_epi32(*a, _mm_madd_epi16(av, bvec[v]));
+                }
+            }
+            p += 2;
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let cp = crow.add(4 * v) as *mut __m128i;
+                let sum = _mm_add_epi32(_mm_loadu_si128(cp), *a);
+                _mm_storeu_si128(cp, sum);
+            }
+        }
+    } else {
+        // Off the SIMD lane domain: scalar widening fallback (exact, so
+        // still bit-identical).
+        micro_kernel_i8_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blas::MICRO_KERNEL_SHAPES;
+    use crate::util::rng::XorShift;
+
+    fn rand_i8(len: usize, seed: u64) -> Vec<i8> {
+        let mut rng = XorShift::new(seed);
+        (0..len).map(|_| (rng.next_u64() % 256) as u8 as i8).collect()
+    }
+
+    /// Naive widening i32 oracle: the definitionally correct result.
+    fn gemm_i8_naive(
+        a: &[i8],
+        b: &[i8],
+        m: usize,
+        n: usize,
+        k: usize,
+    ) -> Vec<i32> {
+        let mut c = vec![0i32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p] as i32;
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j] as i32;
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn int8_registry_matches_f32_registry() {
+        // One grid means one thing: the int8 kernel family covers
+        // exactly the same monomorphized shapes as the f32 family.
+        assert_eq!(INT8_MICRO_KERNEL_SHAPES, MICRO_KERNEL_SHAPES);
+    }
+
+    #[test]
+    fn blocked_i8_matches_naive_oracle_bitexact() {
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (17, 13, 9),
+            (37, 29, 23),
+            (64, 64, 64),
+        ] {
+            let a = rand_i8(m * k, 7);
+            let b = rand_i8(k * n, 8);
+            let oracle = gemm_i8_naive(&a, &b, m, n, k);
+            for &(mr, nr) in MICRO_KERNEL_SHAPES {
+                let params = BlockedParams {
+                    bm: 32,
+                    bn: 32,
+                    bk: 16,
+                    mr,
+                    nr,
+                    threads: 1,
+                };
+                for isa in Isa::detect() {
+                    let got =
+                        gemm_i8_blocked_isa(&a, &b, m, n, k, &params, isa);
+                    assert!(
+                        got == oracle,
+                        "{m}x{n}x{k} ({mr},{nr}) {isa} not bit-exact"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_i8_bit_identical_to_serial() {
+        let (m, n, k) = (53, 31, 19);
+        let a = rand_i8(m * k, 3);
+        let b = rand_i8(k * n, 4);
+        let base =
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 1 };
+        for isa in Isa::detect() {
+            let serial = gemm_i8_blocked_isa(&a, &b, m, n, k, &base, isa);
+            for threads in [0usize, 2, 3, 8] {
+                let par = gemm_i8_blocked_isa(
+                    &a,
+                    &b,
+                    m,
+                    n,
+                    k,
+                    &BlockedParams { threads, ..base },
+                    isa,
+                );
+                assert!(serial == par, "{isa} threads={threads} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_values_never_saturate_the_madd_path() {
+        // The -128·-128 corner is the one a true maddubs kernel would
+        // saturate on; the widening madd pairs cap at 2·128² and must
+        // stay exact.
+        let (m, n, k) = (8, 16, 33); // odd k exercises the zero-pair tail
+        let a = vec![-128i8; m * k];
+        let b = vec![-128i8; k * n];
+        let oracle = gemm_i8_naive(&a, &b, m, n, k);
+        assert_eq!(oracle[0], k as i32 * 128 * 128);
+        let params =
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 1 };
+        for isa in Isa::detect() {
+            let got = gemm_i8_blocked_isa(&a, &b, m, n, k, &params, isa);
+            assert!(got == oracle, "{isa} saturated or diverged");
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_and_range() {
+        let q = QuantParams::from_range(-3.0, 5.0);
+        assert!(q.scale > 0.0);
+        assert_eq!(q.quantize(-3.0), -128);
+        assert_eq!(q.quantize(5.0), 127);
+        // Real zero is exactly representable (the padding contract).
+        assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+        // Round-trip error is bounded by half a step.
+        for x in [-2.7f32, -0.1, 0.0, 0.4, 1.9, 4.99] {
+            let back = q.dequantize(q.quantize(x));
+            assert!(
+                (back - x).abs() <= q.scale * 0.5 + 1e-6,
+                "{x} -> {back} (scale {})",
+                q.scale
+            );
+        }
+        // Degenerate ranges quantize to the zero point.
+        let d = QuantParams::from_range(0.0, 0.0);
+        assert_eq!((d.scale, d.zero_point), (1.0, 0));
+        assert_eq!(d.quantize(0.0), 0);
+    }
+
+    #[test]
+    fn dequant_gemm_tracks_the_f32_oracle() {
+        // Quantize an f32 problem, run the int8 path, and bound the
+        // error against the f32 result by the quantization step sizes.
+        let (m, n, k) = (24, 18, 31);
+        let mut rng = XorShift::new(11);
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let qa = QuantParams::for_data(&a);
+        let qb = QuantParams::for_data(&b);
+        let aq = quantize_slice(&a, &qa);
+        let bq = quantize_slice(&b, &qb);
+        let f32_oracle = crate::blas::gemm_naive(&a, &b, m, n, k);
+        let params =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
+        for isa in Isa::detect() {
+            let got =
+                gemm_i8_dequant(&aq, &bq, m, n, k, &qa, &qb, &params, isa);
+            // Per-product error ≤ 0.5·sa·|b| + 0.5·sb·|a| + 0.25·sa·sb;
+            // inputs are in [-0.5, 0.5], so a comfortable bound is
+            // k · (0.5·sa·0.5 + 0.5·sb·0.5 + sa·sb).
+            let bound = k as f32
+                * (0.25 * qa.scale + 0.25 * qb.scale
+                    + qa.scale * qb.scale)
+                + 1e-5;
+            for (g, o) in got.iter().zip(&f32_oracle) {
+                assert!(
+                    (g - o).abs() <= bound,
+                    "dequant {g} vs f32 {o} beyond {bound} ({isa})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn conv_i8_padding_contributes_zero() {
+        // SAME padding in the quantized domain uses the input
+        // zero-point, which dequantizes to exactly 0 — so an all-zeros
+        // input convolves to exactly 0 even with a nonzero zero-point.
+        let s = Conv2dShape::same(1, 5, 5, 3, 4, 3, 1);
+        let x = vec![0.0f32; s.input_elems()];
+        let mut rng = XorShift::new(21);
+        let f = rng.f32_vec(s.filter_elems());
+        let qx = QuantParams::from_range(-1.0, 3.0); // nonzero zero-point
+        assert_ne!(qx.zero_point, 0);
+        let qf = QuantParams::for_data(&f);
+        let params = BlockedParams { threads: 1, ..Default::default() };
+        let out = conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &params, Isa::Scalar);
+        assert!(out.iter().all(|&v| v == 0.0), "padding leaked");
+    }
+
+    #[test]
+    fn conv_i8_tracks_the_direct_oracle() {
+        let s = Conv2dShape::same(2, 7, 6, 3, 4, 3, 1);
+        let mut rng = XorShift::new(31);
+        let x = rng.f32_vec(s.input_elems());
+        let f = rng.f32_vec(s.filter_elems());
+        let qx = QuantParams::for_data(&x);
+        let qf = QuantParams::for_data(&f);
+        let oracle = crate::blas::conv2d_direct(&x, &f, &s);
+        let k = s.window * s.window * s.in_c;
+        let bound = k as f32
+            * (0.25 * qx.scale + 0.25 * qf.scale + qx.scale * qf.scale)
+            + 1e-5;
+        let params =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1 };
+        for isa in Isa::detect() {
+            let got = conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &params, isa);
+            for (g, o) in got.iter().zip(&oracle) {
+                assert!(
+                    (g - o).abs() <= bound,
+                    "conv i8 {g} vs direct {o} beyond {bound} ({isa})"
+                );
+            }
+        }
+        // And across thread counts the int8 conv is bit-identical.
+        let serial =
+            conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &params, Isa::Scalar);
+        for threads in [0usize, 2, 3] {
+            let p = BlockedParams { threads, ..params };
+            let par =
+                conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &p, Isa::Scalar);
+            assert!(serial == par, "threads={threads} diverged");
+        }
+    }
+
+    #[test]
+    fn dtype_name_roundtrip() {
+        for d in Dtype::all() {
+            assert_eq!(d.to_string().parse::<Dtype>().unwrap(), d);
+        }
+        assert!("f16".parse::<Dtype>().is_err());
+        assert_eq!(Dtype::default(), Dtype::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "i32 accumulation bound")]
+    fn oversized_k_is_a_loud_panic() {
+        let k = MAX_I8_GEMM_K + 1;
+        let a = vec![0i8; k];
+        let b = vec![0i8; k];
+        gemm_i8_blocked_isa(
+            &a,
+            &b,
+            1,
+            1,
+            k,
+            &BlockedParams { threads: 1, ..Default::default() },
+            Isa::Scalar,
+        );
+    }
+}

@@ -6,8 +6,9 @@
 //! for a specific x86-64 feature level (`#[target_feature]` variants in
 //! `blas::simd`), runtime-detected with `is_x86_feature_detected!` and
 //! swept by the measured tuner like any other knob.  On non-x86-64 hosts
-//! only [`Isa::Scalar`] is available; everything else degrades to scalar
-//! at plan time, so a tuning DB written on one machine loads anywhere.
+//! only [`Isa::Scalar`] (and, on aarch64, [`Isa::Neon`]) is available;
+//! everything else degrades to scalar at plan time, so a tuning DB
+//! written on one machine loads anywhere.
 
 use crate::error::{Error, Result};
 
@@ -24,7 +25,11 @@ use crate::error::{Error, Result};
 /// `Scalar` in the same order, so their outputs are bit-identical (0 ULP).
 /// `Fma` contracts each multiply-add into a fused operation with a single
 /// rounding, so it agrees with scalar only to within an accumulation
-/// tolerance (~1e-6 per k-step) — proptested.
+/// tolerance (~1e-6 per k-step) — proptested.  `Avx512` and `Neon` are
+/// *dispatch* values today: `Avx512` runs the widest kernel this crate
+/// ships (the FMA f32 kernel / the AVX2 int8 kernel — no 512-bit-specific
+/// bodies yet), `Neon` runs the portable scalar bodies on aarch64, so
+/// both inherit the numerics of the kernel they dispatch to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Isa {
     /// Portable scalar micro-kernel (every host).
@@ -38,12 +43,23 @@ pub enum Isa {
     /// AVX2 + FMA micro-kernel (`_mm256_fmadd_ps`; fused rounding, within
     /// tolerance of scalar).
     Fma,
+    /// AVX-512 Foundation hosts.  Currently dispatches the widest
+    /// shipped kernel family (FMA for f32, the AVX2 widening kernel for
+    /// int8) — a detection + dispatch value so DBs tuned on AVX-512
+    /// hosts are representable today and 512-bit kernel bodies can land
+    /// later without a schema change.
+    Avx512,
+    /// aarch64 NEON hosts.  Currently dispatches the portable scalar
+    /// kernel bodies (bit-identical); exists so non-x86 hosts have a
+    /// detected non-degenerate axis value and NEON intrinsic bodies can
+    /// land without a schema change.
+    Neon,
 }
 
 impl Isa {
     /// Every ISA value, in sweep/report order (scalar first).
-    pub fn all() -> [Isa; 4] {
-        [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Fma]
+    pub fn all() -> [Isa; 6] {
+        [Isa::Scalar, Isa::Sse2, Isa::Avx2, Isa::Fma, Isa::Avx512, Isa::Neon]
     }
 
     /// Stable lowercase name (selection DB, reports, CLI).
@@ -53,13 +69,16 @@ impl Isa {
             Isa::Sse2 => "sse2",
             Isa::Avx2 => "avx2",
             Isa::Fma => "fma",
+            Isa::Avx512 => "avx512",
+            Isa::Neon => "neon",
         }
     }
 
     /// Whether the *executing* host can run this variant.  `Scalar` is
     /// always available; the SIMD variants require x86-64 plus the
     /// matching CPUID feature bits (checked at runtime, not compile
-    /// time, so one binary serves every microarchitecture).
+    /// time, so one binary serves every microarchitecture), and `Neon`
+    /// requires an aarch64 host with NEON (the aarch64 baseline).
     pub fn is_available(self) -> bool {
         match self {
             Isa::Scalar => true,
@@ -72,8 +91,20 @@ impl Isa {
                 std::arch::is_x86_feature_detected!("avx2")
                     && std::arch::is_x86_feature_detected!("fma")
             }
+            // Avx512 dispatches the FMA/AVX2 kernel bodies today, so it
+            // requires those feature bits alongside avx512f.
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512 => {
+                std::arch::is_x86_feature_detected!("avx512f")
+                    && std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => std::arch::is_aarch64_feature_detected!("neon"),
             #[cfg(not(target_arch = "x86_64"))]
             _ => false,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Neon => false,
         }
     }
 
@@ -99,6 +130,8 @@ impl std::str::FromStr for Isa {
             "sse2" => Ok(Isa::Sse2),
             "avx2" => Ok(Isa::Avx2),
             "fma" => Ok(Isa::Fma),
+            "avx512" => Ok(Isa::Avx512),
+            "neon" => Ok(Isa::Neon),
             other => Err(Error::Config(format!("unknown isa {other:?}"))),
         }
     }
@@ -113,7 +146,7 @@ mod tests {
         for isa in Isa::all() {
             assert_eq!(isa.to_string().parse::<Isa>().unwrap(), isa);
         }
-        assert!("avx512".parse::<Isa>().is_err());
+        assert!("avx512vnni".parse::<Isa>().is_err());
         assert!("".parse::<Isa>().is_err());
     }
 
@@ -140,5 +173,18 @@ mod tests {
         // test supports it, so the axis is never degenerate on x86-64.
         assert!(Isa::Sse2.is_available());
         assert!(Isa::detect().len() >= 2);
+        // NEON is an aarch64 value; it must never detect on x86-64.
+        assert!(!Isa::Neon.is_available());
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx512_implies_its_dispatch_targets() {
+        // Avx512 executes the FMA/AVX2 kernel bodies, so availability
+        // must never claim a host that lacks them.
+        if Isa::Avx512.is_available() {
+            assert!(Isa::Fma.is_available());
+            assert!(Isa::Avx2.is_available());
+        }
     }
 }

@@ -18,14 +18,21 @@
 //! cannot compute ([`native_conv_algorithm`]).  GEMM's monomorphized
 //! register micro-tiles are enumerated by the macro-generated
 //! [`MICRO_KERNEL_SHAPES`] registry, and each registry tile can run a
-//! runtime-detected SIMD variant ([`Isa`]: scalar / SSE2 / AVX2 / FMA on
-//! x86-64, dispatched by [`gemm_blocked_isa`]) — a hardware axis both
-//! GEMM plans and (through the lowered conv GEMMs) conv plans sweep via
-//! the unified `config::KernelSpace` parameter space.
+//! runtime-detected SIMD variant ([`Isa`]: scalar / SSE2 / AVX2 / FMA /
+//! AVX-512 on x86-64, NEON on aarch64, dispatched by
+//! [`gemm_blocked_isa`]) — a hardware axis both GEMM plans and (through
+//! the lowered conv GEMMs) conv plans sweep via the unified
+//! `config::KernelSpace` parameter space.  Precision is one more axis of
+//! the same space ([`Dtype`]): the `int8` module carries a second,
+//! quantized micro-kernel family (i8×i8→i32 widening kernels with
+//! per-tensor scale/zero-point dequantize, [`gemm_i8_blocked_isa`] /
+//! [`conv2d_im2col_i8`]) over the identical blocked macro-tiling,
+//! thread pool, and ISA dispatch.
 
 mod blocked;
 mod conv;
 mod direct;
+mod int8;
 mod isa;
 mod naive;
 #[cfg(target_arch = "x86_64")]
@@ -35,6 +42,11 @@ mod winograd;
 pub use blocked::{
     gemm_batched_isa, gemm_blocked, gemm_blocked_isa, BlockedParams,
     MICRO_KERNEL_SHAPES,
+};
+pub use int8::{
+    conv2d_im2col_i8, gemm_i8_blocked_isa, gemm_i8_dequant,
+    quantize_slice, Dtype, QuantParams, INT8_MICRO_KERNEL_SHAPES,
+    MAX_I8_GEMM_K,
 };
 pub use isa::Isa;
 pub use conv::{

@@ -20,15 +20,19 @@
 //!   tuned → legacy → engine-override → default ladder.
 //!
 //! Four spaces implement it: [`GemmPoint`] (measured host GEMM:
-//! blocking × threads × **ISA**), [`ConvPoint`] (measured host conv:
-//! algorithm × knobs × `wino_m` × blocking × **ISA**), and the modeled
-//! zoo configurations [`GemmConfig`] / [`ConvConfig`].  The ISA axis
-//! ([`Isa`]) is the proof the abstraction pays for itself: a genuinely
-//! new hardware axis wired in with no new storage/sweep/resolution
-//! code — first on GEMM plans, then multiplied into every 3×3 conv by
-//! the Winograd transform-domain GEMM lowering.
+//! blocking × threads × **ISA** × **dtype**), [`ConvPoint`] (measured
+//! host conv: algorithm × knobs × `wino_m` × blocking × **ISA** ×
+//! **dtype**), and the modeled zoo configurations [`GemmConfig`] /
+//! [`ConvConfig`].  The ISA axis ([`Isa`]) is the proof the abstraction
+//! pays for itself: a genuinely new hardware axis wired in with no new
+//! storage/sweep/resolution code — first on GEMM plans, then multiplied
+//! into every 3×3 conv by the Winograd transform-domain GEMM lowering.
+//! The precision axis ([`Dtype`]) repeats the trick: `i8` points run the
+//! quantized widening-kernel family (`blas::int8`) under the same
+//! blocking/threads/ISA knobs, with DB entries written before the axis
+//! existed decoding as `f32`.
 
-use crate::blas::{native_conv_algorithm_dims, BlockedParams, Isa};
+use crate::blas::{native_conv_algorithm_dims, BlockedParams, Dtype, Isa};
 use crate::error::{Error, Result};
 use crate::util::json::Value;
 
@@ -186,6 +190,15 @@ pub(crate) fn blocked_from_json(v: &Value) -> Result<BlockedParams> {
     Ok(p)
 }
 
+/// Decode the `dtype` field of an encoded point; absent (a point
+/// written before the precision axis existed) means [`Dtype::F32`].
+pub(crate) fn decode_dtype(v: &Value) -> Result<Dtype> {
+    match v.get("dtype").and_then(|x| x.as_str()) {
+        Some(s) => s.parse::<Dtype>(),
+        None => Ok(Dtype::F32),
+    }
+}
+
 fn validate_blocked(p: &BlockedParams) -> Result<()> {
     if p.bm == 0 || p.bn == 0 || p.bk == 0 || p.mr == 0 || p.nr == 0 {
         return Err(Error::Json(format!(
@@ -241,35 +254,44 @@ pub(crate) fn conv_from_json(v: &Value) -> Result<ConvConfig> {
 // ---- GemmPoint: the measured host GEMM space ----
 
 /// One point of the measured host GEMM space: the cache/register
-/// blocking (with its `threads` knob) **plus the micro-kernel ISA** —
-/// the runtime-detected SIMD axis.  This is what the host sweep
-/// measures, the DB stores (kind `"gemm_point"`; legacy `"blocked"`
-/// entries migrate with `isa: scalar`), and GEMM plans execute.
+/// blocking (with its `threads` knob), **the micro-kernel ISA** — the
+/// runtime-detected SIMD axis — **and the dtype** — which kernel family
+/// computes, the f32 one or the quantized i8×i8→i32 widening one.  This
+/// is what the host sweep measures, the DB stores (kind `"gemm_point"`;
+/// legacy `"blocked"` entries migrate with `isa: scalar`; points
+/// written before the precision axis decode as `dtype: f32`), and GEMM
+/// plans execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct GemmPoint {
     /// Cache blocking, register micro-tile, and `threads`.
     pub params: BlockedParams,
     /// Micro-kernel instruction-set variant.
     pub isa: Isa,
+    /// Micro-kernel element type (f32 or quantized int8).
+    pub dtype: Dtype,
 }
 
 impl Default for GemmPoint {
     fn default() -> Self {
-        Self { params: BlockedParams::default(), isa: Isa::Scalar }
+        Self {
+            params: BlockedParams::default(),
+            isa: Isa::Scalar,
+            dtype: Dtype::F32,
+        }
     }
 }
 
 impl GemmPoint {
-    /// A scalar-ISA point over the given blocking (what every legacy
-    /// `BlockedParams` API migrates to).
+    /// A scalar-ISA f32 point over the given blocking (what every
+    /// legacy `BlockedParams` API migrates to).
     pub fn scalar(params: BlockedParams) -> Self {
-        Self { params, isa: Isa::Scalar }
+        Self { params, isa: Isa::Scalar, dtype: Dtype::F32 }
     }
 
-    /// Compact name: the blocking name plus the ISA suffix
-    /// (`bm64bn64bk64_4x8_t0_avx2` style).
+    /// Compact name: the blocking name plus the ISA and dtype suffixes
+    /// (`bm64bn64bk64_4x8_t0_avx2_i8` style).
     pub fn name(&self) -> String {
-        format!("{}_{}", self.params.name(), self.isa)
+        format!("{}_{}_{}", self.params.name(), self.isa, self.dtype)
     }
 
     /// The point this plan can actually execute on the current host:
@@ -291,7 +313,7 @@ impl KernelSpace for GemmPoint {
     const LEGACY_KINDS: &'static [&'static str] = &["blocked"];
 
     fn axes() -> &'static [&'static str] {
-        &["bm", "bn", "bk", "mr", "nr", "threads", "isa"]
+        &["bm", "bn", "bk", "mr", "nr", "threads", "isa", "dtype"]
     }
 
     fn default_point() -> Self {
@@ -308,7 +330,8 @@ impl KernelSpace for GemmPoint {
 
     fn to_json(&self) -> Value {
         let mut o = blocked_to_json(&self.params);
-        o.set("isa", self.isa.as_str());
+        o.set("isa", self.isa.as_str())
+            .set("dtype", self.dtype.as_str());
         o
     }
 
@@ -321,6 +344,9 @@ impl KernelSpace for GemmPoint {
                 Some(s) => s.parse::<Isa>()?,
                 None => Isa::Scalar,
             },
+            // Absent dtype (a point written before the precision axis
+            // existed) means f32, so pre-axis DBs plan identically.
+            dtype: decode_dtype(v)?,
         })
     }
 
@@ -347,16 +373,27 @@ impl KernelSpace for GemmPoint {
     }
 
     fn report_columns(&self, entry: &mut Value) {
-        entry.set("isa", self.isa.as_str());
+        entry
+            .set("isa", self.isa.as_str())
+            .set("dtype", self.dtype.as_str());
     }
 
     fn rank_hint(&self, problem: &Problem) -> Option<f64> {
         // The ISA axis is deliberately not priced: variants of one
         // blocking tie, so guided search keeps them all (conservative
-        // ranking of the axis the model cannot see).
+        // ranking of the axis the model cannot see).  The dtype axis IS
+        // priced — int8 quarters per-element traffic and packs 4× the
+        // elements per lane, which the model must see to rank i8
+        // candidates ahead of f32 ones.
         match *problem {
             Problem::Gemm { m, n, k } => Some(
-                crate::perfmodel::gemm_point_cost(&self.params, m, n, k),
+                crate::perfmodel::gemm_point_cost(
+                    &self.params,
+                    self.dtype,
+                    m,
+                    n,
+                    k,
+                ),
             ),
             // Under a conv key this blocking means "im2col under these
             // params" (the legacy blocked-sweep contract); the lowered
@@ -364,6 +401,7 @@ impl KernelSpace for GemmPoint {
             // blocking quality at a representative cubic problem.
             Problem::Conv { .. } => Some(crate::perfmodel::gemm_point_cost(
                 &self.params,
+                self.dtype,
                 256,
                 256,
                 256,
@@ -392,6 +430,11 @@ pub struct ConvPoint {
     /// Micro-kernel ISA of the lowered GEMM (im2col and Winograd
     /// paths; the direct kernels ignore it).
     pub isa: Isa,
+    /// Element type of the lowered GEMM.  `i8` runs the quantized
+    /// im2col lowering (`blas::conv2d_im2col_i8`) and is only valid
+    /// with `algorithm: im2col` — Winograd's transform domain and the
+    /// tiled/naive direct kernels have no quantized bodies.
+    pub dtype: Dtype,
 }
 
 impl Default for ConvPoint {
@@ -401,17 +444,28 @@ impl Default for ConvPoint {
 }
 
 impl ConvPoint {
-    /// The scalar-ISA im2col point over the given blocking (the untuned
-    /// default and the migration target for pre-algorithm conv
+    /// The scalar-ISA f32 im2col point over the given blocking (the
+    /// untuned default and the migration target for pre-algorithm conv
     /// selections).
     pub fn im2col(blocked: BlockedParams) -> Self {
-        Self { config: ConvConfig::im2col(), blocked, isa: Isa::Scalar }
+        Self {
+            config: ConvConfig::im2col(),
+            blocked,
+            isa: Isa::Scalar,
+            dtype: Dtype::F32,
+        }
     }
 
     /// Compact name for reports
-    /// (`wino2_v1x1+bm64bn64bk64_4x8_t2_avx2` style).
+    /// (`wino2_v1x1+bm64bn64bk64_4x8_t2_avx2_f32` style).
     pub fn name(&self) -> String {
-        format!("{}+{}_{}", self.config.name(), self.blocked.name(), self.isa)
+        format!(
+            "{}+{}_{}_{}",
+            self.config.name(),
+            self.blocked.name(),
+            self.isa,
+            self.dtype
+        )
     }
 
     /// The point this plan can actually execute on the current host:
@@ -437,6 +491,7 @@ impl KernelSpace for ConvPoint {
         &[
             "algorithm", "tile_h", "tile_w", "vec_c", "vec_k", "block_k",
             "wino_m", "bm", "bn", "bk", "mr", "nr", "threads", "isa",
+            "dtype",
         ]
     }
 
@@ -446,7 +501,17 @@ impl KernelSpace for ConvPoint {
 
     fn validate(&self) -> Result<()> {
         self.config.validate()?;
-        validate_blocked(&self.blocked)
+        validate_blocked(&self.blocked)?;
+        if self.dtype == Dtype::I8
+            && self.config.algorithm != ConvAlgorithm::Im2col
+        {
+            return Err(Error::Config(format!(
+                "dtype i8 requires the im2col algorithm (no quantized \
+                 {} bodies): {self:?}",
+                self.config.algorithm.as_str()
+            )));
+        }
+        Ok(())
     }
 
     fn point_name(&self) -> String {
@@ -457,12 +522,13 @@ impl KernelSpace for ConvPoint {
         let mut o = Value::object();
         o.set("config", conv_to_json(&self.config))
             .set("blocked", blocked_to_json(&self.blocked))
-            .set("isa", self.isa.as_str());
+            .set("isa", self.isa.as_str())
+            .set("dtype", self.dtype.as_str());
         o
     }
 
     fn from_json(v: &Value) -> Result<Self> {
-        Ok(Self {
+        let p = Self {
             config: conv_from_json(v.get("config").ok_or_else(|| {
                 Error::Json("conv point missing config".into())
             })?)?,
@@ -475,7 +541,13 @@ impl KernelSpace for ConvPoint {
                 Some(s) => s.parse::<Isa>()?,
                 None => Isa::Scalar,
             },
-        })
+            // Absent dtype means f32 (pre-axis DBs plan identically).
+            dtype: decode_dtype(v)?,
+        };
+        // The parts validate above; the cross-field dtype/algorithm
+        // rule needs the whole point.
+        p.validate()?;
+        Ok(p)
     }
 
     fn from_legacy_json(kind: &str, entry: &Value) -> Result<Self> {
@@ -498,7 +570,13 @@ impl KernelSpace for ConvPoint {
                 let gp = GemmPoint::from_json(entry.get("point").ok_or_else(
                     || Error::Json("gemm_point entry missing point".into()),
                 )?)?;
-                Ok(Self { isa: gp.isa, ..Self::im2col(gp.params) })
+                // The measured ISA *and* dtype both transfer: the conv
+                // plans as im2col, which has a quantized lowering.
+                Ok(Self {
+                    isa: gp.isa,
+                    dtype: gp.dtype,
+                    ..Self::im2col(gp.params)
+                })
             }
             other => Err(Error::Json(format!(
                 "conv_point cannot migrate kind {other:?}"
@@ -540,19 +618,22 @@ impl KernelSpace for ConvPoint {
         entry
             .set("algorithm", self.config.algorithm.as_str())
             .set("wino_m", self.config.wino_m)
-            .set("isa", self.isa.as_str());
+            .set("isa", self.isa.as_str())
+            .set("dtype", self.dtype.as_str());
     }
 
     fn rank_hint(&self, problem: &Problem) -> Option<f64> {
         // `threads` and the ISA are deliberately not priced (ties — see
         // the GemmPoint note); the algorithm + tile/vector knobs
-        // (including `wino_m`) and the lowered-GEMM blocking are.
+        // (including `wino_m`), the lowered-GEMM blocking, and the
+        // dtype are.
         match *problem {
             Problem::Gemm { .. } => None,
             Problem::Conv { window, stride } => {
                 Some(crate::perfmodel::conv_point_cost(
                     &self.config,
                     &self.blocked,
+                    self.dtype,
                     window,
                     stride,
                 ))
@@ -662,27 +743,33 @@ mod tests {
     use super::*;
 
     #[test]
-    fn gemm_point_json_roundtrip_includes_isa() {
+    fn gemm_point_json_roundtrip_includes_isa_and_dtype() {
         for isa in Isa::all() {
-            let p = GemmPoint {
-                params: BlockedParams {
-                    bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3,
-                },
-                isa,
-            };
-            let back = GemmPoint::from_json(&p.to_json()).unwrap();
-            assert_eq!(back, p);
-            assert!(p.name().ends_with(isa.as_str()), "{}", p.name());
+            for dtype in Dtype::all() {
+                let p = GemmPoint {
+                    params: BlockedParams {
+                        bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3,
+                    },
+                    isa,
+                    dtype,
+                };
+                let back = GemmPoint::from_json(&p.to_json()).unwrap();
+                assert_eq!(back, p);
+                // Name anatomy: blocking, then ISA, then dtype.
+                let want = format!("_{isa}_{dtype}");
+                assert!(p.name().ends_with(&want), "{}", p.name());
+            }
         }
     }
 
     #[test]
     fn gemm_point_absent_isa_means_scalar() {
+        // A pre-axis point (no isa, no dtype) decodes as the scalar f32
+        // point — pre-axis DBs keep planning identically.
         let v = blocked_to_json(&BlockedParams::default());
-        assert_eq!(
-            GemmPoint::from_json(&v).unwrap().isa,
-            Isa::Scalar
-        );
+        let p = GemmPoint::from_json(&v).unwrap();
+        assert_eq!(p.isa, Isa::Scalar);
+        assert_eq!(p.dtype, Dtype::F32);
     }
 
     #[test]
@@ -706,21 +793,33 @@ mod tests {
         v.set("mr", 32u64);
         assert!(GemmPoint::from_json(&v).is_err(), "over the kernel cap");
         let mut v = blocked_to_json(&BlockedParams::default());
-        v.set("isa", "avx512");
+        v.set("isa", "avx512vnni");
         assert!(GemmPoint::from_json(&v).is_err(), "unknown isa");
+        let mut v = blocked_to_json(&BlockedParams::default());
+        v.set("dtype", "f16");
+        assert!(GemmPoint::from_json(&v).is_err(), "unknown dtype");
     }
 
     #[test]
     fn host_degraded_keeps_available_isas_only() {
         for isa in Isa::all() {
-            let p = GemmPoint { params: BlockedParams::default(), isa };
-            let d = p.host_degraded();
-            assert!(d.isa.is_available());
-            assert_eq!(d.params, p.params);
-            if isa.is_available() {
-                assert_eq!(d.isa, isa);
-            } else {
-                assert_eq!(d.isa, Isa::Scalar);
+            for dtype in Dtype::all() {
+                let p = GemmPoint {
+                    params: BlockedParams::default(),
+                    isa,
+                    dtype,
+                };
+                let d = p.host_degraded();
+                assert!(d.isa.is_available());
+                assert_eq!(d.params, p.params);
+                // The ISA degrade never touches the dtype axis — any
+                // host can run the scalar widening i8 kernel.
+                assert_eq!(d.dtype, dtype);
+                if isa.is_available() {
+                    assert_eq!(d.isa, isa);
+                } else {
+                    assert_eq!(d.isa, Isa::Scalar);
+                }
             }
         }
     }
@@ -735,14 +834,21 @@ mod tests {
                 config: ConvConfig::winograd(4),
                 blocked: blocked_params,
                 isa,
+                dtype: Dtype::F32,
             };
             assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
-            assert!(p.name().ends_with(isa.as_str()), "{}", p.name());
+            let want = format!("_{isa}_f32");
+            assert!(p.name().ends_with(&want), "{}", p.name());
         }
+        // The i8 conv point round-trips too — im2col only.
+        let q = ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() };
+        assert_eq!(ConvPoint::from_json(&q.to_json()).unwrap(), q);
+        assert!(q.name().ends_with("_i8"), "{}", q.name());
         let p = ConvPoint {
             config: ConvConfig::winograd(2),
             blocked: blocked_params,
             isa: Isa::Scalar,
+            dtype: Dtype::F32,
         };
 
         // conv_native entries: config + blocked at the top level, no
@@ -764,16 +870,38 @@ mod tests {
         assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
         assert_eq!(m.blocked, p.blocked);
         assert_eq!(m.isa, Isa::Scalar);
+        assert_eq!(m.dtype, Dtype::F32);
 
-        // gemm_point entries: im2col, measured ISA preserved (the
-        // lowered conv GEMM dispatches it now).
-        let gp = GemmPoint { params: p.blocked, isa: Isa::Avx2 };
+        // gemm_point entries: im2col, measured ISA and dtype preserved
+        // (the lowered conv GEMM dispatches them now).
+        let gp = GemmPoint {
+            params: p.blocked,
+            isa: Isa::Avx2,
+            dtype: Dtype::I8,
+        };
         let mut entry = Value::object();
         entry.set("kind", "gemm_point").set("point", gp.to_json());
         let m = ConvPoint::from_legacy_json("gemm_point", &entry).unwrap();
         assert_eq!(m.config.algorithm, ConvAlgorithm::Im2col);
         assert_eq!(m.blocked, p.blocked);
         assert_eq!(m.isa, Isa::Avx2);
+        assert_eq!(m.dtype, Dtype::I8);
+    }
+
+    #[test]
+    fn conv_point_i8_requires_im2col() {
+        // No quantized Winograd/tiled bodies exist; such a point must
+        // fail validation and decoding.
+        let p = ConvPoint {
+            config: ConvConfig::winograd(2),
+            blocked: BlockedParams::default(),
+            isa: Isa::Scalar,
+            dtype: Dtype::I8,
+        };
+        assert!(p.validate().is_err());
+        assert!(ConvPoint::from_json(&p.to_json()).is_err());
+        let ok = ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() };
+        assert!(ok.validate().is_ok());
     }
 
     #[test]
@@ -787,6 +915,7 @@ mod tests {
         let back = ConvPoint::from_json(&v).unwrap();
         assert_eq!(back, p);
         assert_eq!(back.isa, Isa::Scalar);
+        assert_eq!(back.dtype, Dtype::F32);
     }
 
     #[test]
@@ -796,6 +925,7 @@ mod tests {
                 config: ConvConfig::winograd(4),
                 blocked: BlockedParams::default(),
                 isa,
+                dtype: Dtype::F32,
             };
             let d = p.host_degraded();
             assert!(d.isa.is_available());
@@ -822,6 +952,7 @@ mod tests {
                 config: ConvConfig::winograd(m),
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
+                dtype: Dtype::F32,
             };
             assert!(wino.applicable(&s1), "wino_m={m} on-domain");
             assert!(!wino.applicable(&s2), "winograd off-domain");
@@ -851,14 +982,26 @@ mod tests {
         {
             assert!(!GemmPoint {
                 params: BlockedParams::default(),
-                isa: missing
+                isa: missing,
+                dtype: Dtype::F32,
             }
             .applicable(&gemm));
         }
         for isa in Isa::detect() {
-            assert!(GemmPoint { params: BlockedParams::default(), isa }
+            for dtype in Dtype::all() {
+                // The dtype axis never constrains GEMM applicability —
+                // every host runs the widening i8 kernels.
+                assert!(GemmPoint {
+                    params: BlockedParams::default(),
+                    isa,
+                    dtype,
+                }
                 .applicable(&gemm));
+            }
         }
+        // An i8 im2col conv point is applicable wherever f32 im2col is.
+        assert!(ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() }
+            .applicable(&s1));
     }
 
     #[test]
@@ -890,11 +1033,24 @@ mod tests {
                 let p = GemmPoint {
                     params: BlockedParams { threads, ..base.params },
                     isa,
+                    dtype: base.dtype,
                 };
                 assert_eq!(p.rank_hint(&gemm), base.rank_hint(&gemm));
                 assert_eq!(p.rank_hint(&conv), base.rank_hint(&conv));
             }
         }
+
+        // The dtype axis IS modeled: an i8 point is predicted cheaper
+        // than its f32 twin (quarter traffic, denser lanes) for both
+        // spaces, but never free.
+        let gi8 = GemmPoint { dtype: Dtype::I8, ..base };
+        assert!(gi8.rank_hint(&gemm).unwrap() < base.rank_hint(&gemm).unwrap());
+        assert!(gi8.rank_hint(&gemm).unwrap() > 0.0);
+        let cbase8 = ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() };
+        assert!(
+            cbase8.rank_hint(&conv).unwrap()
+                < ConvPoint::default().rank_hint(&conv).unwrap()
+        );
 
         // Same contract for ConvPoint's threads knob and ISA axis.
         let cbase = ConvPoint::default();
@@ -915,6 +1071,7 @@ mod tests {
             config: ConvConfig::winograd(2),
             blocked: cbase.blocked,
             isa: cbase.isa,
+            dtype: cbase.dtype,
         };
         let wino4 = ConvPoint {
             config: ConvConfig::winograd(4),

@@ -8,8 +8,9 @@
 //!
 //! The [`KernelSpace`] trait is the unified face of all of it: any
 //! tunable kernel family — the measured host GEMM space ([`GemmPoint`]:
-//! blocking × threads × runtime-detected [`Isa`]), the measured conv
-//! space ([`ConvPoint`]: algorithm × knobs × blocking), or the modeled
+//! blocking × threads × runtime-detected [`Isa`] × [`Dtype`]), the
+//! measured conv space ([`ConvPoint`]: algorithm × knobs × blocking ×
+//! [`Dtype`]), or the modeled
 //! zoo configurations — exposes one axes/validate/encode/decode surface,
 //! so the tuner's storage and sweeps and the engine's plan-time
 //! resolution are written once, generically.
@@ -30,3 +31,8 @@ pub use space::{
 /// The micro-kernel ISA axis, re-exported from [`crate::blas`] alongside
 /// the registry so the whole parameter space reads from one module.
 pub use crate::blas::Isa;
+
+/// The micro-kernel precision axis, re-exported from [`crate::blas`]
+/// for the same reason: `i8` points run the quantized widening-kernel
+/// family, `f32` the historical one.
+pub use crate::blas::Dtype;

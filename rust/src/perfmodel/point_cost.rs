@@ -17,8 +17,16 @@
 //! differing only along an unmodeled axis cost exactly the same, so
 //! `GuidedSearch`'s stable ranking keeps every variant of a promising
 //! blocking together instead of pruning the axis it cannot see.
+//!
+//! The **dtype** axis is modeled: int8 elements are a quarter the bytes
+//! (quarter DRAM traffic, 4× more of a panel fits in L1) and pack 4×
+//! more elements per SIMD lane (quarter issue cost per element), so an
+//! `i8` point prices at a [`DTYPE_I8_DISCOUNT`] of its f32 twin's
+//! compute and traffic terms — cheaper, never free.  The discount is a
+//! pure per-dtype factor, so points differing only along *unmodeled*
+//! axes still tie exactly within each dtype.
 
-use crate::blas::BlockedParams;
+use crate::blas::{BlockedParams, Dtype};
 use crate::config::{ConvAlgorithm, ConvConfig};
 
 use super::registers::{conv_regs, ADDRESS_REGS};
@@ -52,24 +60,57 @@ const WINO_TRANSFORM_COST: f64 = 0.1;
 /// once and re-read once through the patch matrix.
 const IM2COL_PATCH_COST: f64 = 2.0;
 
+/// Per-element cost factor of the int8 kernel family against f32: 4×
+/// elements per SIMD lane quarters the issue cost, and 1-byte elements
+/// quarter the DRAM traffic, so both modeled terms scale by ¼.
+pub const DTYPE_I8_DISCOUNT: f64 = 0.25;
+
+/// Bytes per element of one dtype (traffic and panel-fit terms).
+fn dtype_bytes(dtype: Dtype) -> f64 {
+    match dtype {
+        Dtype::F32 => 4.0,
+        Dtype::I8 => 1.0,
+    }
+}
+
+/// Issue-cost factor of one dtype (elements per lane, f32-relative).
+fn dtype_issue_discount(dtype: Dtype) -> f64 {
+    match dtype {
+        Dtype::F32 => 1.0,
+        Dtype::I8 => DTYPE_I8_DISCOUNT,
+    }
+}
+
 /// Predicted relative cost per useful flop of running an `m×n×k` GEMM
-/// under `p` on the host: the Eq. 3 issue term (loads per flop of the
-/// `mr×nr` register tile), a register-spill penalty above the host's
-/// accumulator budget, and the blocked global-traffic term with an L1
-/// panel-fit penalty.  Lower is predicted-faster.  `threads` (and the
-/// ISA, which is not part of `BlockedParams`) do not contribute — see
-/// the module docs.
-pub fn gemm_point_cost(p: &BlockedParams, m: u64, n: u64, k: u64) -> f64 {
+/// under `p` on the host with the `dtype` kernel family: the Eq. 3
+/// issue term (loads per flop of the `mr×nr` register tile), a
+/// register-spill penalty above the host's accumulator budget, and the
+/// blocked global-traffic term with an L1 panel-fit penalty — the
+/// compute term discounted by the dtype's lane density and the traffic
+/// terms by its element width.  Lower is predicted-faster.  `threads`
+/// (and the ISA, which is not part of `BlockedParams`) do not
+/// contribute — see the module docs.
+pub fn gemm_point_cost(
+    p: &BlockedParams,
+    dtype: Dtype,
+    m: u64,
+    n: u64,
+    k: u64,
+) -> f64 {
     let flops = 2.0 * (m as f64) * (n as f64) * (k as f64);
-    // Eq. 3: loads per flop of the register micro-tile.
-    let issue = 1.0 / register_tile_reuse(p.mr as u32, p.nr as u32);
+    // Eq. 3: loads per flop of the register micro-tile, discounted by
+    // the dtype's elements-per-lane density.
+    let issue = dtype_issue_discount(dtype)
+        / register_tile_reuse(p.mr as u32, p.nr as u32);
     // Fig. 2-style register estimate: accumulators + the rank-1 update
     // operands + addressing.
     let regs =
         (p.mr * p.nr + p.mr + p.nr) as f64 + ADDRESS_REGS as f64;
     let spill = (regs / SPILL_REGS).max(1.0);
     // Blocked DRAM traffic, bytes per flop, with an L1 panel-fit
-    // penalty for `bk` panels that outgrow the cache.
+    // penalty for `bk` panels that outgrow the cache — both in the
+    // dtype's element width (4× more of an i8 panel fits).
+    let bytes = dtype_bytes(dtype);
     let traffic = gemm_global_traffic(
         m,
         n,
@@ -77,8 +118,8 @@ pub fn gemm_point_cost(p: &BlockedParams, m: u64, n: u64, k: u64) -> f64 {
         p.bm as u64,
         p.bn as u64,
     ) as f64
-        * 4.0;
-    let panel = ((p.bm * p.bk + p.bk * p.bn) * 4) as f64;
+        * bytes;
+    let panel = (p.bm * p.bk + p.bk * p.bn) as f64 * bytes;
     let l1 = (panel / L1_PANEL_BYTES).max(1.0);
     issue * spill + MEM_WEIGHT * l1 * traffic / flops
 }
@@ -103,10 +144,14 @@ pub fn gemm_point_cost(p: &BlockedParams, m: u64, n: u64, k: u64) -> f64 {
 /// Callers pass only points that would actually run their own algorithm
 /// on this shape ([`crate::config::KernelSpace::applicable`] filters
 /// the rest), so no fallback modeling is needed here.  `threads` and
-/// the lowered-GEMM ISA are deliberately unmodeled (ties).
+/// the lowered-GEMM ISA are deliberately unmodeled (ties).  The dtype
+/// discounts the im2col arm only — `i8` points are valid solely with
+/// the im2col algorithm (`ConvPoint::validate` rejects the rest), so
+/// the direct and Winograd arms ignore it.
 pub fn conv_point_cost(
     config: &ConvConfig,
     blocked: &BlockedParams,
+    dtype: Dtype,
     window: u32,
     stride: u32,
 ) -> f64 {
@@ -139,9 +184,13 @@ pub fn conv_point_cost(
             (macs + CONV_LOAD_COST * fetch) * spill
         }
         ConvAlgorithm::Im2col => {
+            // Both terms quarter under i8: the lowered GEMM packs 4×
+            // elements per lane and the patch matrix is 1-byte
+            // elements, so the whole arm takes the dtype discount.
             let issue =
                 1.0 / register_tile_reuse(blocked.mr as u32, blocked.nr as u32);
-            macs * (1.0 + issue) + CONV_LOAD_COST * IM2COL_PATCH_COST
+            (macs * (1.0 + issue) + CONV_LOAD_COST * IM2COL_PATCH_COST)
+                * dtype_issue_discount(dtype)
         }
     }
 }
@@ -158,8 +207,8 @@ mod tests {
         let square = BlockedParams { mr: 4, nr: 4, ..base };
         let skinny = BlockedParams { mr: 16, nr: 1, ..base };
         assert!(
-            gemm_point_cost(&square, 256, 256, 256)
-                < gemm_point_cost(&skinny, 256, 256, 256)
+            gemm_point_cost(&square, Dtype::F32, 256, 256, 256)
+                < gemm_point_cost(&skinny, Dtype::F32, 256, 256, 256)
         );
     }
 
@@ -169,14 +218,14 @@ mod tests {
         let tiny = BlockedParams { bm: 8, bn: 8, ..BlockedParams::default() };
         let mid = BlockedParams { bm: 64, bn: 64, ..BlockedParams::default() };
         assert!(
-            gemm_point_cost(&mid, 512, 512, 512)
-                < gemm_point_cost(&tiny, 512, 512, 512)
+            gemm_point_cost(&mid, Dtype::F32, 512, 512, 512)
+                < gemm_point_cost(&tiny, Dtype::F32, 512, 512, 512)
         );
         // ...but a bk panel far beyond L1 pays the spill penalty.
         let spilled = BlockedParams { bk: 4096, ..mid };
         assert!(
-            gemm_point_cost(&mid, 512, 512, 512)
-                < gemm_point_cost(&spilled, 512, 512, 512)
+            gemm_point_cost(&mid, Dtype::F32, 512, 512, 512)
+                < gemm_point_cost(&spilled, Dtype::F32, 512, 512, 512)
         );
     }
 
@@ -187,8 +236,8 @@ mod tests {
         let a = BlockedParams { threads: 1, ..BlockedParams::default() };
         let b = BlockedParams { threads: 8, ..BlockedParams::default() };
         assert_eq!(
-            gemm_point_cost(&a, 128, 128, 128),
-            gemm_point_cost(&b, 128, 128, 128)
+            gemm_point_cost(&a, Dtype::F32, 128, 128, 128),
+            gemm_point_cost(&b, Dtype::F32, 128, 128, 128)
         );
     }
 
@@ -196,15 +245,17 @@ mod tests {
     fn conv_cost_ranks_winograd_cheapest_on_its_domain() {
         // On 3×3/s1 the F(2×2) reduction beats both direct and im2col.
         let blocked = BlockedParams::default();
-        let wino = conv_point_cost(&ConvConfig::winograd(2), &blocked, 3, 1);
+        let wino =
+            conv_point_cost(&ConvConfig::winograd(2), &blocked, Dtype::F32, 3, 1);
         let tiled = conv_point_cost(
             &ConvConfig::tiled(2, 2, 1, 4),
             &blocked,
+            Dtype::F32,
             3,
             1,
         );
         let im2col =
-            conv_point_cost(&ConvConfig::im2col(), &blocked, 3, 1);
+            conv_point_cost(&ConvConfig::im2col(), &blocked, Dtype::F32, 3, 1);
         assert!(wino < tiled, "{wino} !< {tiled}");
         assert!(wino < im2col, "{wino} !< {im2col}");
     }
@@ -216,9 +267,12 @@ mod tests {
         // must rank m=4 cheaper — the axis is modeled, not a tie, and
         // both beat im2col on the 3×3/s1 domain.
         let blocked = BlockedParams::default();
-        let w2 = conv_point_cost(&ConvConfig::winograd(2), &blocked, 3, 1);
-        let w4 = conv_point_cost(&ConvConfig::winograd(4), &blocked, 3, 1);
-        let im2col = conv_point_cost(&ConvConfig::im2col(), &blocked, 3, 1);
+        let w2 =
+            conv_point_cost(&ConvConfig::winograd(2), &blocked, Dtype::F32, 3, 1);
+        let w4 =
+            conv_point_cost(&ConvConfig::winograd(4), &blocked, Dtype::F32, 3, 1);
+        let im2col =
+            conv_point_cost(&ConvConfig::im2col(), &blocked, Dtype::F32, 3, 1);
         assert!(w4 < w2, "{w4} !< {w2}");
         assert!(w2 < im2col, "{w2} !< {im2col}");
     }
@@ -233,8 +287,8 @@ mod tests {
         for m in [2u32, 4] {
             let cfg = ConvConfig::winograd(m);
             assert!(
-                conv_point_cost(&cfg, &good, 3, 1)
-                    < conv_point_cost(&cfg, &bad, 3, 1),
+                conv_point_cost(&cfg, &good, Dtype::F32, 3, 1)
+                    < conv_point_cost(&cfg, &bad, Dtype::F32, 3, 1),
                 "wino_m={m}"
             );
         }
@@ -248,16 +302,54 @@ mod tests {
         let t11 = conv_point_cost(
             &ConvConfig::tiled(1, 1, 1, 1),
             &blocked,
+            Dtype::F32,
             3,
             1,
         );
         let t22 = conv_point_cost(
             &ConvConfig::tiled(2, 2, 1, 1),
             &blocked,
+            Dtype::F32,
             3,
             1,
         );
         assert!(t22 < t11, "{t22} !< {t11}");
+    }
+
+    #[test]
+    fn dtype_axis_prices_i8_cheaper_but_never_free() {
+        // int8 quarters both the issue and traffic terms, so an i8
+        // point must rank strictly cheaper than its f32 twin — for
+        // GEMM and for the im2col conv arm — and stay positive.
+        let p = BlockedParams::default();
+        let f = gemm_point_cost(&p, Dtype::F32, 512, 512, 512);
+        let q = gemm_point_cost(&p, Dtype::I8, 512, 512, 512);
+        assert!(q < f, "{q} !< {f}");
+        assert!(q > 0.0);
+        let cfg = ConvConfig::im2col();
+        let cf = conv_point_cost(&cfg, &p, Dtype::F32, 3, 1);
+        let cq = conv_point_cost(&cfg, &p, Dtype::I8, 3, 1);
+        assert!(cq < cf, "{cq} !< {cf}");
+        assert!(cq > 0.0);
+    }
+
+    #[test]
+    fn dtype_is_a_pure_factor_so_unmodeled_ties_survive() {
+        // Within one dtype, threads variants still tie exactly — the
+        // discount must not break the unmodeled-axis tie contract.
+        for dtype in Dtype::all() {
+            let a = BlockedParams { threads: 1, ..BlockedParams::default() };
+            let b = BlockedParams { threads: 8, ..BlockedParams::default() };
+            assert_eq!(
+                gemm_point_cost(&a, dtype, 128, 128, 128),
+                gemm_point_cost(&b, dtype, 128, 128, 128)
+            );
+            let cfg = ConvConfig::im2col();
+            assert_eq!(
+                conv_point_cost(&cfg, &a, dtype, 3, 1),
+                conv_point_cost(&cfg, &b, dtype, 3, 1)
+            );
+        }
     }
 
     #[test]
@@ -268,8 +360,8 @@ mod tests {
         let bad = BlockedParams { mr: 1, nr: 1, ..good };
         let cfg = ConvConfig::im2col();
         assert!(
-            conv_point_cost(&cfg, &good, 3, 1)
-                < conv_point_cost(&cfg, &bad, 3, 1)
+            conv_point_cost(&cfg, &good, Dtype::F32, 3, 1)
+                < conv_point_cost(&cfg, &bad, Dtype::F32, 3, 1)
         );
     }
 }

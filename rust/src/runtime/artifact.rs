@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+use crate::blas::QuantParams;
 use crate::error::{Error, Result};
 use crate::util::json::{self, Value};
 
@@ -105,6 +106,59 @@ impl LayerMeta {
     }
 }
 
+/// Per-tensor quantization metadata for the int8 fast path: affine
+/// scale/zero-point for both GEMM operands (`a` = LHS / conv input,
+/// `b` = RHS / conv filters).  An artifact without a `quant` block
+/// cannot run `dtype: i8` plans — the engine degrades them to `f32` at
+/// plan time (the precision analogue of the unavailable-ISA degrade).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantMeta {
+    /// LHS / conv-input quantization.
+    pub a: QuantParams,
+    /// RHS / conv-filter quantization.
+    pub b: QuantParams,
+}
+
+impl QuantMeta {
+    fn params_from_json(v: &Value, which: &str) -> Result<QuantParams> {
+        let scale = v
+            .get("scale")
+            .and_then(|x| x.as_f64())
+            .ok_or_else(|| {
+                Error::Artifact(format!("quant.{which} missing scale"))
+            })? as f32;
+        if !(scale > 0.0 && scale.is_finite()) {
+            return Err(Error::Artifact(format!(
+                "quant.{which} scale must be positive and finite: {scale}"
+            )));
+        }
+        let zero_point = v
+            .get("zero_point")
+            .and_then(|x| x.as_i64())
+            .ok_or_else(|| {
+                Error::Artifact(format!("quant.{which} missing zero_point"))
+            })?;
+        if !(-128..=127).contains(&zero_point) {
+            return Err(Error::Artifact(format!(
+                "quant.{which} zero_point out of i8 range: {zero_point}"
+            )));
+        }
+        Ok(QuantParams { scale, zero_point: zero_point as i32 })
+    }
+
+    fn from_json(v: &Value) -> Result<Self> {
+        let side = |which: &str| -> Result<QuantParams> {
+            Self::params_from_json(
+                v.get(which).ok_or_else(|| {
+                    Error::Artifact(format!("quant missing {which}"))
+                })?,
+                which,
+            )
+        };
+        Ok(QuantMeta { a: side("a")?, b: side("b")? })
+    }
+}
+
 /// One artifact's metadata.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
@@ -150,6 +204,9 @@ pub struct ArtifactMeta {
     /// Spatial scaling note when the measured artifact is shrunk
     /// (see python/compile/manifests.py).
     pub scaled_from: Option<String>,
+    /// Per-tensor quantization params (present iff the artifact may
+    /// run the int8 fast path).
+    pub quant: Option<QuantMeta>,
 }
 
 impl ArtifactMeta {
@@ -212,6 +269,7 @@ impl ArtifactMeta {
                 .get("scaled_from")
                 .and_then(|x| x.as_str())
                 .map(String::from),
+            quant: v.get("quant").map(QuantMeta::from_json).transpose()?,
         })
     }
 }
@@ -368,6 +426,52 @@ mod tests {
         assert_eq!(layer.out_c, 16);
         assert_eq!(meta.batch, Some(2));
         assert!(meta.fuse_relu);
+    }
+
+    #[test]
+    fn parses_quant_metadata() {
+        let dir = TempDir::new("arts").unwrap();
+        write_manifest(
+            dir.path(),
+            r#"[{"name": "q1", "kind": "gemm", "file": "q1.hlo.txt",
+                 "flops": 1, "m": 8, "n": 8, "k": 8, "inputs": [],
+                 "quant": {"a": {"scale": 0.02, "zero_point": -3},
+                           "b": {"scale": 0.5, "zero_point": 0}}},
+                {"name": "f1", "kind": "gemm", "file": "f1.hlo.txt",
+                 "flops": 1, "m": 8, "n": 8, "k": 8, "inputs": []}]"#,
+        );
+        let store = ArtifactStore::open(dir.path()).unwrap();
+        let q = store.get("q1").unwrap().quant.unwrap();
+        assert!((q.a.scale - 0.02).abs() < 1e-9);
+        assert_eq!(q.a.zero_point, -3);
+        assert_eq!(q.b.zero_point, 0);
+        // Artifacts without the block simply have no quant metadata
+        // (their i8 plans degrade to f32 at plan time).
+        assert!(store.get("f1").unwrap().quant.is_none());
+    }
+
+    #[test]
+    fn bad_quant_metadata_rejected() {
+        for quant in [
+            // zero_point outside the i8 range
+            r#"{"a": {"scale": 0.1, "zero_point": 300},
+                "b": {"scale": 0.1, "zero_point": 0}}"#,
+            // non-positive scale
+            r#"{"a": {"scale": 0.0, "zero_point": 0},
+                "b": {"scale": 0.1, "zero_point": 0}}"#,
+            // missing side
+            r#"{"a": {"scale": 0.1, "zero_point": 0}}"#,
+        ] {
+            let dir = TempDir::new("arts").unwrap();
+            write_manifest(
+                dir.path(),
+                &format!(
+                    r#"[{{"name": "q", "kind": "gemm", "file": "q.hlo.txt",
+                         "flops": 1, "inputs": [], "quant": {quant}}}]"#
+                ),
+            );
+            assert!(ArtifactStore::open(dir.path()).is_err(), "{quant}");
+        }
     }
 
     #[test]

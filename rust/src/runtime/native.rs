@@ -35,28 +35,35 @@
 //!    it buys on sub-millisecond kernels.  A tuned DB entry always
 //!    overrides the heuristic.
 //!
-//! Three plan-time safety rules keep every resolved point executable on
-//! *this* host: Winograd selections fall back to im2col on shapes
-//! outside the F(m×m, 3×3) domain, GEMM points whose ISA the executing
-//! CPU lacks degrade to the scalar micro-kernel (same blocking), and
-//! conv points do the same for the ISA their lowered GEMMs dispatch —
-//! so a DB tuned on a bigger host is always safe to ship, and
+//! Four plan-time safety rules keep every resolved point executable on
+//! *this* host and *this* artifact: Winograd selections fall back to
+//! im2col on shapes outside the F(m×m, 3×3) domain, GEMM points whose
+//! ISA the executing CPU lacks degrade to the scalar micro-kernel (same
+//! blocking), conv points do the same for the ISA their lowered GEMMs
+//! dispatch, and `i8` points degrade to `f32` (same blocking, same ISA)
+//! when the artifact's manifest carries no quantization metadata — so a
+//! DB tuned on a bigger host is always safe to ship, and
 //! [`NativeEngine::planned_conv`] / [`NativeEngine::planned_gemm`]
-//! always report what will really run.
+//! always report what will really run.  `i8` plans quantize their f32
+//! operands with the manifest's per-tensor [`QuantMeta`], run the
+//! widening i8×i8→i32 kernels, and dequantize in the epilogue.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Instant;
 
 use crate::blas::{
-    conv2d_native_isa, gemm_blocked_isa, native_conv_algorithm,
-    BlockedParams, Conv2dShape, Isa,
+    conv2d_im2col_i8, conv2d_native_isa, gemm_blocked_isa, gemm_i8_dequant,
+    native_conv_algorithm, quantize_slice, BlockedParams, Conv2dShape,
+    Dtype, Isa,
 };
-use crate::config::{ConvConfig, ConvPoint, GemmPoint, KernelSpace};
+use crate::config::{
+    ConvAlgorithm, ConvConfig, ConvPoint, GemmPoint, KernelSpace,
+};
 use crate::error::{Error, Result};
 use crate::tuner::{selection_key_for, SelectionDb};
 
-use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta};
+use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta, QuantMeta};
 use super::backend::{check_inputs, Backend, RunOutput};
 
 /// The device string host selections are keyed under in the tuning DB.
@@ -90,9 +97,14 @@ enum Plan {
         beta: f32,
         /// Third input is a C operand for the β epilogue.
         with_c: bool,
-        /// The resolved GEMM space point — blocking, threads, and the
-        /// micro-kernel ISA, already degraded to what this host can run.
+        /// The resolved GEMM space point — blocking, threads, the
+        /// micro-kernel ISA, and the dtype, already degraded to what
+        /// this host (and this artifact's metadata) can run.
         point: GemmPoint,
+        /// Per-tensor quantization parameters from the manifest.  Always
+        /// `Some` when `point.dtype` is `i8` — [`build_plan`] degrades
+        /// `i8` points to `f32` on artifacts without quant metadata.
+        quant: Option<QuantMeta>,
     },
     Conv {
         shape: Conv2dShape,
@@ -106,6 +118,9 @@ enum Plan {
         /// lowered-GEMM blocking + `threads`, and the micro-kernel ISA
         /// (already degraded to what this host can run).
         point: ConvPoint,
+        /// Per-tensor quantization parameters (input, filter) from the
+        /// manifest; same `Some`-iff-`i8` invariant as the GEMM plan.
+        quant: Option<QuantMeta>,
     },
 }
 
@@ -125,9 +140,13 @@ impl Plan {
     }
 
     fn conv_config(&self) -> Option<ConvConfig> {
+        self.conv_point().map(|p| p.config)
+    }
+
+    fn conv_point(&self) -> Option<ConvPoint> {
         match self {
             Plan::Gemm { .. } => None,
-            Plan::Conv { point, .. } => Some(point.config),
+            Plan::Conv { point, .. } => Some(*point),
         }
     }
 }
@@ -171,6 +190,7 @@ fn gemm_plan(meta: &ArtifactMeta, point: GemmPoint) -> Result<Plan> {
         beta: meta.beta.unwrap_or(0.0) as f32,
         with_c,
         point,
+        quant: meta.quant,
     })
 }
 
@@ -281,7 +301,22 @@ fn conv_plan(meta: &ArtifactMeta, point: ConvPoint) -> Result<Plan> {
         },
         ..point
     };
-    Ok(Plan::Conv { shape, fuse_relu: meta.fuse_relu, point })
+    // Defensive companion to [`ConvPoint::validate`]'s i8-implies-im2col
+    // rule: if an engine-wide override paired `i8` with an algorithm
+    // that has no quantized body, the dtype (not the algorithm) yields.
+    let point = if point.dtype == Dtype::I8
+        && point.config.algorithm != ConvAlgorithm::Im2col
+    {
+        ConvPoint { dtype: Dtype::F32, ..point }
+    } else {
+        point
+    };
+    Ok(Plan::Conv {
+        shape,
+        fuse_relu: meta.fuse_relu,
+        point,
+        quant: meta.quant,
+    })
 }
 
 /// What the engine falls back to when the tuning DB has no entry for a
@@ -404,6 +439,16 @@ fn build_plan(
                 // DB entry) degrades to the scalar micro-kernel, same
                 // blocking, so what the plan reports is executable.
                 .host_degraded();
+            // The precision analogue of the ISA degrade: an `i8` point
+            // needs the artifact's quantization metadata (scales +
+            // zero-points) to execute; without it the plan keeps the
+            // tuned blocking/ISA and falls back to the f32 kernels.
+            let point = if point.dtype == Dtype::I8 && meta.quant.is_none()
+            {
+                GemmPoint { dtype: Dtype::F32, ..point }
+            } else {
+                point
+            };
             gemm_plan(meta, point)
         }
         "conv" => {
@@ -417,6 +462,14 @@ fn build_plan(
                 // lowered-GEMM micro-kernel to scalar, same blocking and
                 // algorithm, so what the plan reports is executable.
                 .host_degraded();
+            // Precision degrade, same rule as the GEMM arm: no quant
+            // metadata on the artifact → `i8` points plan as `f32`.
+            let point = if point.dtype == Dtype::I8 && meta.quant.is_none()
+            {
+                ConvPoint { dtype: Dtype::F32, ..point }
+            } else {
+                point
+            };
             conv_plan(meta, point)
         }
         other => Err(Error::Runtime(format!(
@@ -546,7 +599,12 @@ impl NativeEngine {
         config: ConvConfig,
         blocked: BlockedParams,
     ) {
-        self.set_conv_point(ConvPoint { config, blocked, isa: Isa::Scalar });
+        self.set_conv_point(ConvPoint {
+            config,
+            blocked,
+            isa: Isa::Scalar,
+            dtype: Dtype::F32,
+        });
     }
 
     /// Attach (or replace) the tuning DB.  Invalidates the plan cache.
@@ -629,6 +687,18 @@ impl NativeEngine {
         Ok(self.plan(name)?.conv_config())
     }
 
+    /// The full conv space point artifact `name` will execute with —
+    /// `None` for non-conv artifacts.  Like
+    /// [`NativeEngine::planned_gemm`], every field is post-degrade: the
+    /// ISA and dtype name what will really run on this host against
+    /// this artifact's metadata.
+    pub fn planned_conv_point(
+        &mut self,
+        name: &str,
+    ) -> Result<Option<ConvPoint>> {
+        Ok(self.plan(name)?.conv_point())
+    }
+
     /// Plan (or fetch the cached plan for) an artifact.
     fn plan(&mut self, name: &str) -> Result<Plan> {
         if let Some(plan) = self.plans.get(name) {
@@ -647,16 +717,37 @@ impl NativeEngine {
 
     fn execute(&self, plan: &Plan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match plan {
-            Plan::Gemm { m, n, k, alpha, beta, with_c, point } => {
-                let mut out = gemm_blocked_isa(
-                    &inputs[0],
-                    &inputs[1],
-                    *m,
-                    *n,
-                    *k,
-                    &point.params,
-                    point.isa,
-                );
+            Plan::Gemm { m, n, k, alpha, beta, with_c, point, quant } => {
+                // The i8 fast path: quantize the f32 operands with the
+                // artifact's per-tensor params, run the widening-kernel
+                // GEMM, dequantize in the epilogue.  `build_plan`
+                // guarantees `quant` is present for i8 plans.
+                let mut out = if point.dtype == Dtype::I8 {
+                    let q = quant.expect("i8 plan carries quant metadata");
+                    let aq = quantize_slice(&inputs[0], &q.a);
+                    let bq = quantize_slice(&inputs[1], &q.b);
+                    gemm_i8_dequant(
+                        &aq,
+                        &bq,
+                        *m,
+                        *n,
+                        *k,
+                        &q.a,
+                        &q.b,
+                        &point.params,
+                        point.isa,
+                    )
+                } else {
+                    gemm_blocked_isa(
+                        &inputs[0],
+                        &inputs[1],
+                        *m,
+                        *n,
+                        *k,
+                        &point.params,
+                        point.isa,
+                    )
+                };
                 if *with_c {
                     for (o, c) in out.iter_mut().zip(&inputs[2]) {
                         *o = alpha * *o + beta * c;
@@ -668,15 +759,28 @@ impl NativeEngine {
                 }
                 vec![out]
             }
-            Plan::Conv { shape, fuse_relu, point } => {
-                let mut out = conv2d_native_isa(
-                    &inputs[0],
-                    &inputs[1],
-                    shape,
-                    &point.config,
-                    &point.blocked,
-                    point.isa,
-                );
+            Plan::Conv { shape, fuse_relu, point, quant } => {
+                let mut out = if point.dtype == Dtype::I8 {
+                    let q = quant.expect("i8 plan carries quant metadata");
+                    conv2d_im2col_i8(
+                        &inputs[0],
+                        &inputs[1],
+                        shape,
+                        &q.a,
+                        &q.b,
+                        &point.blocked,
+                        point.isa,
+                    )
+                } else {
+                    conv2d_native_isa(
+                        &inputs[0],
+                        &inputs[1],
+                        shape,
+                        &point.config,
+                        &point.blocked,
+                        point.isa,
+                    )
+                };
                 if *fuse_relu {
                     let bias = &inputs[2];
                     for (i, o) in out.iter_mut().enumerate() {
@@ -1129,6 +1233,7 @@ mod tests {
                 config: winner,
                 blocked,
                 isa: Isa::Scalar,
+                dtype: Dtype::F32,
             },
             4.0,
         );
@@ -1198,6 +1303,7 @@ mod tests {
                 config: ConvConfig::winograd(2),
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
+                dtype: Dtype::F32,
             },
             1.0,
         );
@@ -1252,11 +1358,13 @@ mod tests {
             Isa::detect().iter().find(|i| **i != Isa::Scalar)
         {
             let mut db = SelectionDb::new();
-            db.put(key.clone(), GemmPoint { params, isa: simd }, 9.0);
+            let point =
+                GemmPoint { params, isa: simd, dtype: Dtype::F32 };
+            db.put(key.clone(), point, 9.0);
             let (_dir, plain) = engine_with(GEMM_8);
             let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
             let planned = e.planned_gemm("g8").unwrap().unwrap();
-            assert_eq!(planned, GemmPoint { params, isa: simd });
+            assert_eq!(planned, point);
             assert_eq!(e.planned_params("g8").unwrap(), params);
             let mut rng = XorShift::new(31);
             let a = rng.f32_vec(64);
@@ -1273,7 +1381,11 @@ mod tests {
             Isa::all().into_iter().find(|i| !i.is_available())
         {
             let mut db = SelectionDb::new();
-            db.put(key.clone(), GemmPoint { params, isa: missing }, 9.0);
+            db.put(
+                key.clone(),
+                GemmPoint { params, isa: missing, dtype: Dtype::F32 },
+                9.0,
+            );
             let (_dir, plain) = engine_with(GEMM_8);
             let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
             let planned = e.planned_gemm("g8").unwrap().unwrap();
@@ -1307,6 +1419,7 @@ mod tests {
                 config: ConvConfig::im2col(),
                 blocked,
                 isa: simd,
+                dtype: Dtype::F32,
             };
             let mut db = SelectionDb::new();
             db.put(key.clone(), point, 9.0);
@@ -1330,6 +1443,7 @@ mod tests {
                 config: ConvConfig::winograd(2),
                 blocked,
                 isa: missing,
+                dtype: Dtype::F32,
             };
             let mut db = SelectionDb::new();
             db.put(key.clone(), point, 9.0);
@@ -1365,6 +1479,7 @@ mod tests {
                 config: winner,
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
+                dtype: Dtype::F32,
             },
             6.0,
         );
@@ -1406,7 +1521,10 @@ mod tests {
             BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 2, threads: 2 };
         assert_eq!(e.planned_params("g8").unwrap(), want);
         let planned = e.planned_gemm("g8").unwrap().unwrap();
-        assert_eq!(planned, GemmPoint { params: want, isa: Isa::Scalar });
+        assert_eq!(
+            planned,
+            GemmPoint { params: want, isa: Isa::Scalar, dtype: Dtype::F32 }
+        );
     }
 
     #[test]
@@ -1427,6 +1545,7 @@ mod tests {
                 bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1,
             },
             isa,
+            dtype: Dtype::F32,
         };
         e.set_gemm_point(point);
         assert_eq!(e.cached(), 0, "set_gemm_point must drop stale plans");
@@ -1572,5 +1691,138 @@ mod tests {
             0,
             "a measured auto-threads selection is honored verbatim"
         );
+    }
+
+    /// GEMM_8 with per-tensor quantization metadata: symmetric 1/256
+    /// scales sized for the centered synthetic inputs.
+    const GEMM_8_QUANT: &str = r#"[{
+        "name": "g8q", "kind": "gemm", "impl": "pallas",
+        "file": "g8q.hlo.txt", "flops": 1024,
+        "m": 8, "n": 8, "k": 8,
+        "quant": {"a": {"scale": 0.00390625, "zero_point": 0},
+                  "b": {"scale": 0.00390625, "zero_point": -2}},
+        "inputs": [{"shape": [8, 8], "dtype": "float32"},
+                   {"shape": [8, 8], "dtype": "float32"}],
+        "groups": ["gemm"]}]"#;
+
+    #[test]
+    fn i8_gemm_plan_degrades_to_f32_without_quant_metadata() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A tuned i8 winner against an artifact that carries no quant
+        // metadata: the dtype degrades at plan time, the blocking and
+        // ISA survive, and the run produces exact f32 results.
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1 };
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint { params, isa: Isa::Scalar, dtype: Dtype::I8 },
+            9.0,
+        );
+        let (_dir, plain) = engine_with(GEMM_8);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_gemm("g8").unwrap().unwrap();
+        assert_eq!(planned.dtype, Dtype::F32, "degraded at plan time");
+        assert_eq!(planned.params, params, "blocking survives");
+        let mut rng = XorShift::new(71);
+        let a = rng.f32_vec(64);
+        let b = rng.f32_vec(64);
+        let out = e.run("g8", &[a.clone(), b.clone()]).unwrap();
+        let expected = gemm_naive(&a, &b, 8, 8, 8);
+        assert!(max_abs_diff(&out.outputs[0], &expected) < 1e-4);
+    }
+
+    #[test]
+    fn i8_gemm_plan_executes_within_the_quantization_bound() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1 };
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint { params, isa: Isa::Scalar, dtype: Dtype::I8 },
+            9.0,
+        );
+        let (_dir, plain) = engine_with(GEMM_8_QUANT);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_gemm("g8q").unwrap().unwrap();
+        assert_eq!(planned.dtype, Dtype::I8, "quant metadata present");
+        let mut rng = XorShift::new(72);
+        let a = rng.f32_vec(64);
+        let b = rng.f32_vec(64);
+        let out = e.run("g8q", &[a.clone(), b.clone()]).unwrap();
+        let expected = gemm_naive(&a, &b, 8, 8, 8);
+        // Quantization error bound: each product contributes up to
+        // half-step rounding on each operand (inputs are in [-0.5, 0.5),
+        // so |a|,|b| <= 0.5), summed over k = 8.
+        let (sa, sb) = (0.00390625_f32, 0.00390625_f32);
+        let bound = 8.0 * (0.25 * sa + 0.25 * sb + sa * sb) + 1e-5;
+        assert!(
+            max_abs_diff(&out.outputs[0], &expected) < bound,
+            "i8 plan tracks the f32 oracle within the quant bound"
+        );
+    }
+
+    #[test]
+    fn i8_conv_plan_executes_and_degrades_without_quant() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // CONV_3X3 plus quant metadata (zero-point'd input side so the
+        // SAME-padding path is exercised in quantized space).
+        let quantized = r#"[{
+            "name": "c33q", "kind": "conv", "impl": "pallas",
+            "file": "c33q.hlo.txt", "flops": 55296, "batch": 1,
+            "algorithm": "im2col", "groups": ["conv"],
+            "quant": {"a": {"scale": 0.00390625, "zero_point": 3},
+                      "b": {"scale": 0.00390625, "zero_point": 0}},
+            "layer": {"name": "c33q", "window": 3, "stride": 1,
+                      "in_h": 8, "in_w": 8, "in_c": 3, "out_c": 4,
+                      "out_h": 8, "out_w": 8, "padding": "SAME",
+                      "flops": 55296},
+            "inputs": [{"shape": [1, 8, 8, 3], "dtype": "float32"},
+                       {"shape": [3, 3, 3, 4], "dtype": "float32"}]}]"#;
+        let point = ConvPoint {
+            config: ConvConfig::im2col(),
+            blocked: BlockedParams {
+                bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1,
+            },
+            isa: Isa::Scalar,
+            dtype: Dtype::I8,
+        };
+        let key = SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1);
+
+        let mut db = SelectionDb::new();
+        db.put(key.clone(), point, 9.0);
+        let (_dir, plain) = engine_with(quantized);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        let planned = e.planned_conv_point("c33q").unwrap().unwrap();
+        assert_eq!(planned.dtype, Dtype::I8);
+        let inputs = e.synth_inputs("c33q", 29).unwrap();
+        let out = e.run("c33q", &inputs).unwrap();
+        let shape = Conv2dShape::same(1, 8, 8, 3, 4, 3, 1);
+        let expected = conv2d_direct(&inputs[0], &inputs[1], &shape);
+        // k_eff = 3·3·3 = 27 accumulated products per output.
+        let (sa, sb) = (0.00390625_f32, 0.00390625_f32);
+        let bound = 27.0 * (0.25 * sa + 0.25 * sb + sa * sb) + 1e-5;
+        assert!(
+            max_abs_diff(&out.outputs[0], &expected) < bound,
+            "i8 conv plan tracks the direct oracle within the quant bound"
+        );
+
+        // The same i8 selection against the quant-less CONV_3X3 artifact
+        // degrades to f32 — algorithm, blocking, and ISA survive.
+        let mut db2 = SelectionDb::new();
+        db2.put(key, point, 9.0);
+        let (_dir2, plain2) = engine_with(CONV_3X3);
+        let mut e2 = NativeEngine::with_tuning(plain2.store.clone(), db2);
+        let planned2 = e2.planned_conv_point("c33").unwrap().unwrap();
+        assert_eq!(planned2.dtype, Dtype::F32, "degraded at plan time");
+        assert_eq!(planned2.blocked, point.blocked, "blocking survives");
+        let inputs2 = e2.synth_inputs("c33", 31).unwrap();
+        let out2 = e2.run("c33", &inputs2).unwrap();
+        let expected2 = conv2d_direct(&inputs2[0], &inputs2[1], &shape);
+        assert!(max_abs_diff(&out2.outputs[0], &expected2) < 1e-3);
     }
 }

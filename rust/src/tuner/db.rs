@@ -480,7 +480,7 @@ fn normalize_for_merge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::blas::{BlockedParams, Isa};
+    use crate::blas::{BlockedParams, Dtype, Isa};
     use crate::config::ConvAlgorithm;
     use crate::util::tmp::TempDir;
 
@@ -547,17 +547,19 @@ mod tests {
                 bm: 32, bn: 64, bk: 16, mr: 4, nr: 8, threads: 2,
             },
             isa: Isa::Avx2,
+            dtype: Dtype::I8,
         };
         let key = SelectionKey::gemm("host", 96, 96, 96);
         db.put(key.clone(), gp, 7.5);
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("host.json");
         db.save(&path).unwrap();
-        // The entry carries the isa twice: inside the point and as the
-        // top-level report column.
+        // The entry carries the isa and dtype twice: inside the point
+        // and as top-level report columns.
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains(r#""kind": "gemm_point""#), "{text}");
         assert!(text.contains(r#""isa": "avx2""#), "{text}");
+        assert!(text.contains(r#""dtype": "i8""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
         assert_eq!(loaded.get::<GemmPoint>(&key).unwrap(), (gp, 7.5));
         // A gemm_point entry never answers modeled or conv lookups.
@@ -644,6 +646,7 @@ mod tests {
                 bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
             },
             isa: Isa::Scalar,
+            dtype: Dtype::F32,
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
         db.put(key.clone(), cp, 5.5);

@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::blas::{BlockedParams, Isa};
+use crate::blas::{BlockedParams, Dtype, Isa};
 use crate::config::{
     micro_kernel_shapes, ConvAlgorithm, ConvConfig, ConvPoint, GemmPoint,
     KernelSpace, Problem,
@@ -564,11 +564,13 @@ pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
 }
 
 /// The full measured GEMM grid: [`blocked_grid`] × the given ISAs
-/// (normally [`Isa::detect`]), deduplicated, with the default scalar
-/// point always present as the untuned baseline.  Non-scalar ISAs are
-/// crossed only with *monomorphized* registry micro-tiles — off-registry
-/// shapes run the generic scalar kernel whatever the ISA, so timing them
-/// per-ISA would measure the same kernel repeatedly.
+/// (normally [`Isa::detect`]) × both [`Dtype`]s, deduplicated, with the
+/// default scalar point always present as the untuned baseline.
+/// Non-scalar ISAs are crossed only with *monomorphized* registry
+/// micro-tiles — off-registry shapes run the generic scalar kernel
+/// whatever the ISA, so timing them per-ISA would measure the same
+/// kernel repeatedly.  The same rule bounds the `i8` half of the grid:
+/// the widening-kernel registry mirrors the f32 one shape-for-shape.
 pub fn gemm_point_grid(
     quick: bool,
     threads: &[usize],
@@ -580,9 +582,11 @@ pub fn gemm_point_grid(
             if isa != Isa::Scalar && !params.is_monomorphized() {
                 continue;
             }
-            let cand = GemmPoint { params, isa };
-            if !grid.contains(&cand) {
-                grid.push(cand);
+            for dtype in Dtype::all() {
+                let cand = GemmPoint { params, isa, dtype };
+                if !grid.contains(&cand) {
+                    grid.push(cand);
+                }
             }
         }
     }
@@ -631,7 +635,9 @@ pub fn conv_candidates(quick: bool) -> Vec<ConvConfig> {
 /// [`blocked_candidates`] GEMM blockings and — at the default
 /// monomorphized blocking — the given micro-kernel ISAs (normally
 /// [`Isa::detect`]), deduplicated, with the plain default im2col
-/// candidate always present as the untuned baseline.
+/// candidate always present as the untuned baseline.  The im2col
+/// candidates (the one family with a quantized body) are additionally
+/// crossed with the `i8` [`Dtype`].
 pub fn conv_native_grid(
     quick: bool,
     threads: &[usize],
@@ -656,16 +662,28 @@ pub fn conv_native_grid(
         } else {
             vec![BlockedParams { threads: 1, ..Default::default() }]
         };
+        // The dtype axis: `i8` has a quantized body for the im2col
+        // lowering only ([`ConvPoint::validate`]), so only im2col
+        // candidates are crossed with it.
+        let dtypes: &[Dtype] = if config.algorithm == ConvAlgorithm::Im2col
+        {
+            &[Dtype::F32, Dtype::I8]
+        } else {
+            &[Dtype::F32]
+        };
         for base in bases {
             for &t in threads {
-                push(
-                    &mut grid,
-                    ConvCandidate {
-                        config,
-                        blocked: BlockedParams { threads: t, ..base },
-                        isa: Isa::Scalar,
-                    },
-                );
+                for &dtype in dtypes {
+                    push(
+                        &mut grid,
+                        ConvCandidate {
+                            config,
+                            blocked: BlockedParams { threads: t, ..base },
+                            isa: Isa::Scalar,
+                            dtype,
+                        },
+                    );
+                }
             }
         }
         if lowered {
@@ -679,17 +697,20 @@ pub fn conv_native_grid(
                     continue;
                 }
                 for &t in threads {
-                    push(
-                        &mut grid,
-                        ConvCandidate {
-                            config,
-                            blocked: BlockedParams {
-                                threads: t,
-                                ..Default::default()
+                    for &dtype in dtypes {
+                        push(
+                            &mut grid,
+                            ConvCandidate {
+                                config,
+                                blocked: BlockedParams {
+                                    threads: t,
+                                    ..Default::default()
+                                },
+                                isa,
+                                dtype,
                             },
-                            isa,
-                        },
-                    );
+                        );
+                    }
                 }
             }
         }
@@ -780,6 +801,17 @@ mod tests {
                     p.isa == Isa::Scalar || p.params.is_monomorphized(),
                     "{p:?} pairs a SIMD ISA with an off-registry tile"
                 );
+            }
+            // Both dtypes are swept, each crossed with every detected
+            // ISA — the quantized fast path is a measured axis.
+            for dtype in Dtype::all() {
+                for &isa in &isas {
+                    assert!(
+                        grid.iter().any(|p| p.dtype == dtype
+                            && p.isa == isa),
+                        "quick={quick}: {dtype} never crossed with {isa}"
+                    );
+                }
             }
             // Every point is applicable on this host by construction.
             let problem = Problem::Gemm { m: 96, n: 96, k: 96 };
@@ -1077,6 +1109,22 @@ mod tests {
                 .iter()
                 .all(|c| c.config.algorithm != ConvAlgorithm::Tiled
                     || c.isa == Isa::Scalar));
+            // The i8 dtype rides im2col candidates only (the one conv
+            // lowering with a quantized body) — and it does ride them.
+            assert!(
+                grid.iter().any(|c| c.dtype == Dtype::I8
+                    && c.config.algorithm == ConvAlgorithm::Im2col),
+                "quick={quick}: no i8 im2col candidates"
+            );
+            for c in &grid {
+                assert!(
+                    c.dtype == Dtype::F32
+                        || c.config.algorithm == ConvAlgorithm::Im2col,
+                    "{} pairs i8 with a non-im2col algorithm",
+                    c.name()
+                );
+                assert!(c.validate().is_ok(), "{} invalid", c.name());
+            }
             // Dedup + the untuned baseline is always present.
             for (i, c) in grid.iter().enumerate() {
                 assert!(!grid[i + 1..].contains(c), "{} duplicated", c.name());

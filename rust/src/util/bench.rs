@@ -62,6 +62,16 @@ impl BenchStats {
         flops as f64 / secs / 1e9
     }
 
+    /// Throughput in GOP/s — the honest unit for integer kernels, where
+    /// "flops" would be a misnomer: `ops` counts useful multiply-adds
+    /// (×2) per iteration exactly as `flops` does for f32, only the
+    /// arithmetic is i8×i8→i32.  Numerically identical to
+    /// [`BenchStats::gflops`]; the separate name keeps reports from
+    /// labeling integer throughput as floating-point.
+    pub fn gops(&self, ops: u64) -> f64 {
+        self.gflops(ops)
+    }
+
     /// One-line rendering.
     pub fn line(&self, flops: Option<u64>) -> String {
         let gf = flops
@@ -69,6 +79,18 @@ impl BenchStats {
             .unwrap_or_default();
         format!(
             "{:<44} min {:>10.3?}  med {:>10.3?}  mean {:>10.3?}{gf}",
+            self.name, self.min, self.median, self.mean
+        )
+    }
+
+    /// One-line rendering for integer kernels: like [`BenchStats::line`]
+    /// but labeled GOP/s via [`BenchStats::gops`].
+    pub fn line_int(&self, ops: Option<u64>) -> String {
+        let go = ops
+            .map(|o| format!("  {:>9.3} GOP/s", self.gops(o)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} min {:>10.3?}  med {:>10.3?}  mean {:>10.3?}{go}",
             self.name, self.min, self.median, self.mean
         )
     }
@@ -121,6 +143,10 @@ mod tests {
         };
         assert_eq!(s.gflops(2_000_000_000), 2.0);
         assert!(s.line(Some(1_000_000_000)).contains("GF/s"));
+        // The integer-kernel twin: same math, honest unit label.
+        assert_eq!(s.gops(2_000_000_000), 2.0);
+        let li = s.line_int(Some(1_000_000_000));
+        assert!(li.contains("GOP/s") && !li.contains("GF/s"), "{li}");
     }
 
     #[test]

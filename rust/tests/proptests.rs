@@ -3,8 +3,9 @@
 //! deterministic generators, and every case prints its inputs on failure).
 
 use portable_kernels::blas::{
-    gemm_blocked, gemm_blocked_isa, gemm_naive, max_abs_diff, BlockedParams,
-    Isa, MICRO_KERNEL_SHAPES,
+    gemm_blocked, gemm_blocked_isa, gemm_i8_blocked_isa, gemm_i8_dequant,
+    gemm_naive, max_abs_diff, quantize_slice, BlockedParams, Dtype, Isa,
+    QuantParams, MICRO_KERNEL_SHAPES,
 };
 use portable_kernels::config::{ConvConfig, ConvPoint, GemmConfig, GemmPoint};
 use portable_kernels::coordinator::{BatchPolicy, Batcher};
@@ -512,6 +513,7 @@ fn prop_selection_db_points_roundtrip_via_disk() {
                 threads: rng.range(0, 8) as usize,
             },
             isa: *rng.choose(&Isa::all()),
+            dtype: *rng.choose(&Dtype::all()),
         };
         let gkey = SelectionKey::gemm(
             "prop-host",
@@ -548,6 +550,14 @@ fn prop_selection_db_points_roundtrip_via_disk() {
                 threads: rng.range(0, 4) as usize,
             },
             isa: *rng.choose(&Isa::all()),
+            // The i8 dtype is only legal on im2col conv points
+            // (ConvPoint::validate); storage round-trips re-validate on
+            // decode, so the sampler respects the same rule.
+            dtype: if algorithm == ConvAlgorithm::Im2col {
+                *rng.choose(&Dtype::all())
+            } else {
+                Dtype::F32
+            },
         };
         let ckey = SelectionKey::conv(
             "prop-host",
@@ -668,11 +678,16 @@ fn prop_legacy_db_fixtures_plan_identically() {
         assert_eq!(e.planned_params("g24").unwrap(), want, "case {case}");
         let planned = e.planned_gemm("g24").unwrap().unwrap();
         assert_eq!(planned.isa, Isa::Scalar, "case {case}");
+        // Pre-dtype entries carry no dtype field: they migrate as f32,
+        // which is the arithmetic those entries were measured under.
+        assert_eq!(planned.dtype, Dtype::F32, "case {case}");
         // Conv: the stored algorithm + blocking (3x3/s1 is on every
         // algorithm's domain, so no fallback applies).
         let conv = e.planned_conv("c8").unwrap().unwrap();
         assert_eq!(conv.algorithm.as_str(), algorithm, "case {case}");
         assert_eq!(e.planned_params("c8").unwrap(), want, "case {case}");
+        let cpoint = e.planned_conv_point("c8").unwrap().unwrap();
+        assert_eq!(cpoint.dtype, Dtype::F32, "case {case}");
     }
 }
 
@@ -704,7 +719,7 @@ fn prop_isa_micro_kernels_agree_with_scalar() {
         let scalar = gemm_blocked(&a, &b, m, n, k, &params);
         for &isa in &isas {
             let got = gemm_blocked_isa(&a, &b, m, n, k, &params, isa);
-            if isa == Isa::Fma {
+            if matches!(isa, Isa::Fma | Isa::Avx512) {
                 let tol = 1e-6 * k as f32;
                 assert!(
                     max_abs_diff(&scalar, &got) <= tol,
@@ -718,6 +733,264 @@ fn prop_isa_micro_kernels_agree_with_scalar() {
                 );
             }
         }
+    }
+}
+
+/// Reference widening GEMM: the plain i8×i8→i32 triple loop that every
+/// int8 code path must reproduce bit for bit (integer accumulation is
+/// exact, so the contract is equality, never a tolerance).
+fn gemm_i8_naive(a: &[i8], b: &[i8], m: usize, n: usize, k: usize) -> Vec<i32> {
+    let mut c = vec![0i32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p] as i32;
+            for j in 0..n {
+                c[i * n + j] += av * b[p * n + j] as i32;
+            }
+        }
+    }
+    c
+}
+
+/// Uniform random i8 values over the full [-128, 127] range.
+fn i8_vec(rng: &mut XorShift, n: usize) -> Vec<i8> {
+    (0..n).map(|_| rng.below(256) as u8 as i8).collect()
+}
+
+/// The blocked int8 GEMM is bit-exact against the naive widening i32
+/// oracle on ragged shapes — partial micro-tile strips, short k-panels,
+/// degenerate single-row/col problems — for every registered
+/// micro-kernel shape.
+#[test]
+fn prop_int8_gemm_bitexact_vs_widening_oracle() {
+    let mut rng = XorShift::new(8181);
+    for case in 0..24 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = if case % 5 == 0 { 1 } else { rng.range(2, 80) as usize };
+        let n = if case % 7 == 0 { 1 } else { rng.range(2, 80) as usize };
+        let k = rng.range(1, 96) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 48) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let a = i8_vec(&mut rng, m * k);
+        let b = i8_vec(&mut rng, k * n);
+        let want = gemm_i8_naive(&a, &b, m, n, k);
+        let got = gemm_i8_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar);
+        assert!(
+            want == got,
+            "case {case}: scalar int8 differs from the widening oracle \
+             at {m}x{n}x{k} {params:?}"
+        );
+    }
+}
+
+/// Every detected ISA's int8 kernel is 0-ULP identical to the scalar
+/// widening kernel.  Unlike f32 FMA (fused rounding), the AVX2 path's
+/// `_mm256_madd_epi16` partials are exact i32 — products of i8 values
+/// are ≤ 128², two per lane never saturate i32 — so lane width cannot
+/// change a single bit.
+#[test]
+fn prop_int8_simd_vs_scalar_zero_ulp() {
+    let mut rng = XorShift::new(8282);
+    let isas = Isa::detect();
+    for case in 0..16 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = rng.range(1, 96) as usize;
+        let n = rng.range(1, 96) as usize;
+        let k = rng.range(1, 128) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 48) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let a = i8_vec(&mut rng, m * k);
+        let b = i8_vec(&mut rng, k * n);
+        let scalar =
+            gemm_i8_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar);
+        for &isa in &isas {
+            let got = gemm_i8_blocked_isa(&a, &b, m, n, k, &params, isa);
+            assert!(
+                scalar == got,
+                "case {case}: {isa} int8 not bit-identical at {m}x{n}x{k} \
+                 {params:?}"
+            );
+        }
+    }
+}
+
+/// Band-parallel int8 GEMM is bit-identical to serial for any thread
+/// count: each worker owns a disjoint row-band of the output, and the
+/// per-band integer accumulation never depends on scheduling order.
+#[test]
+fn prop_int8_threaded_bit_identical_to_serial() {
+    let mut rng = XorShift::new(8383);
+    for case in 0..12 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = rng.range(8, 160) as usize;
+        let n = rng.range(1, 96) as usize;
+        let k = rng.range(1, 64) as usize;
+        // Small bm forces several row bands so the parallel path
+        // actually engages.
+        let mut params = BlockedParams {
+            bm: rng.range(1, 24) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let a = i8_vec(&mut rng, m * k);
+        let b = i8_vec(&mut rng, k * n);
+        let serial =
+            gemm_i8_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar);
+        for &threads in &[2usize, 3, 4, 8] {
+            params.threads = threads;
+            let par =
+                gemm_i8_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar);
+            assert!(
+                serial == par,
+                "case {case}: {threads} threads not bit-identical at \
+                 {m}x{n}x{k} {params:?}"
+            );
+        }
+    }
+}
+
+/// The quantize → int8 GEMM → dequantize round trip tracks the f32
+/// oracle within the analytic bound.  Inputs live in [-0.5, 0.5), so a
+/// per-element quantization error of at most scale/2 propagates through
+/// each of the k products as
+/// `|a||Δb| + |b̂||Δa| ≤ 0.25·sb + (0.5 + sb/2)·sa/2`, and
+/// `k·(0.25·sa + 0.25·sb + sa·sb)` covers the sum with margin; the 1e-5
+/// constant absorbs f32 rounding in the epilogue and the oracle itself.
+#[test]
+fn prop_int8_quantize_dequantize_error_bound() {
+    let mut rng = XorShift::new(8484);
+    for case in 0..12 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = rng.range(1, 48) as usize;
+        let n = rng.range(1, 48) as usize;
+        let k = rng.range(1, 64) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 32) as usize,
+            bn: rng.range(1, 32) as usize,
+            bk: rng.range(1, 32) as usize,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let qa = QuantParams::for_data(&a);
+        let qb = QuantParams::for_data(&b);
+        let aq = quantize_slice(&a, &qa);
+        let bq = quantize_slice(&b, &qb);
+        let got =
+            gemm_i8_dequant(&aq, &bq, m, n, k, &qa, &qb, &params, Isa::Scalar);
+        let oracle = gemm_naive(&a, &b, m, n, k);
+        let bound = k as f32
+            * (0.25 * qa.scale + 0.25 * qb.scale + qa.scale * qb.scale)
+            + 1e-5;
+        for (i, (g, o)) in got.iter().zip(&oracle).enumerate() {
+            let diff = (g - o).abs();
+            assert!(
+                diff <= bound,
+                "case {case}: element {i}: {g} vs {o} (|diff| {diff} > \
+                 {bound}) at {m}x{n}x{k} sa={} sb={}",
+                qa.scale, qb.scale
+            );
+        }
+    }
+}
+
+/// Unified-schema DB entries written before the dtype axis existed
+/// (no "dtype" field on the stored point) decode as f32 and plan
+/// *identically* to a twin DB that spells `"dtype": "f32"` explicitly —
+/// the migration contract for the precision axis.
+#[test]
+fn prop_unified_db_dtype_absent_migrates_to_f32() {
+    use portable_kernels::runtime::{ArtifactStore, NativeEngine};
+    use portable_kernels::tuner::SelectionDb;
+    use portable_kernels::util::tmp::TempDir;
+
+    let mut rng = XorShift::new(9191);
+    let dir = TempDir::new("prop-dtype-migrate").unwrap();
+    std::fs::write(
+        dir.path().join("manifest.json"),
+        r#"{"version": 1, "artifacts": [
+          {"name": "g24", "kind": "gemm", "impl": "pallas",
+           "file": "g24.hlo.txt", "flops": 27648,
+           "m": 24, "n": 24, "k": 24, "groups": ["gemm"],
+           "inputs": [{"shape": [24, 24], "dtype": "float32"},
+                      {"shape": [24, 24], "dtype": "float32"}]},
+          {"name": "c8", "kind": "conv", "impl": "pallas",
+           "file": "c8.hlo.txt", "flops": 36864, "batch": 1,
+           "groups": ["conv"],
+           "layer": {"name": "c8", "window": 3, "stride": 1,
+                     "in_h": 8, "in_w": 8, "in_c": 2, "out_c": 4,
+                     "out_h": 8, "out_w": 8, "padding": "SAME",
+                     "flops": 36864},
+           "inputs": [{"shape": [1, 8, 8, 2], "dtype": "float32"},
+                      {"shape": [3, 3, 2, 4], "dtype": "float32"}]}
+        ]}"#,
+    )
+    .unwrap();
+    let store = ArtifactStore::open(dir.path()).unwrap();
+
+    for case in 0..12 {
+        let (bm, bn, bk) =
+            (rng.range(1, 64), rng.range(1, 64), rng.range(1, 64));
+        let (mr, nr) = (rng.range(1, 16), rng.range(1, 16));
+        let blocked = format!(
+            r#""bm": {bm}, "bn": {bn}, "bk": {bk},
+               "mr": {mr}, "nr": {nr}, "threads": 1"#
+        );
+        let conv_cfg = r#"{"tile_h": 2, "tile_w": 2, "vec_c": 1,
+            "vec_k": 4, "block_k": 0, "algorithm": "im2col",
+            "wino_m": 2}"#;
+        let make_db = |dtype_field: &str, tag: &str| {
+            let text = format!(
+                r#"{{"host::gemm_64x64x64": {{"kind": "gemm_point",
+                    "gflops": 2.0, "name": "x",
+                    "point": {{{blocked}, "isa": "scalar"{dtype_field}}}}},
+                    "host::conv_3x3s1_8x8x2k4b1": {{"kind": "conv_point",
+                    "gflops": 3.0, "name": "y",
+                    "point": {{"config": {conv_cfg},
+                               "blocked": {{{blocked}}},
+                               "isa": "scalar"{dtype_field}}}}}}}"#
+            );
+            let path = dir.path().join(format!("db-{tag}{case}.json"));
+            std::fs::write(&path, &text).unwrap();
+            SelectionDb::load(&path)
+                .unwrap_or_else(|e| panic!("case {case} {tag}: {e}\n{text}"))
+        };
+        let mut bare = NativeEngine::with_tuning(
+            store.clone(),
+            make_db("", "bare"),
+        );
+        let mut explicit = NativeEngine::with_tuning(
+            store.clone(),
+            make_db(r#", "dtype": "f32""#, "explicit"),
+        );
+
+        let gp_bare = bare.planned_gemm("g24").unwrap().unwrap();
+        let gp_explicit = explicit.planned_gemm("g24").unwrap().unwrap();
+        assert_eq!(gp_bare.dtype, Dtype::F32, "case {case}");
+        assert_eq!(gp_bare, gp_explicit, "case {case}");
+
+        let cp_bare = bare.planned_conv_point("c8").unwrap().unwrap();
+        let cp_explicit =
+            explicit.planned_conv_point("c8").unwrap().unwrap();
+        assert_eq!(cp_bare.dtype, Dtype::F32, "case {case}");
+        assert_eq!(cp_bare, cp_explicit, "case {case}");
     }
 }
 
