@@ -2,17 +2,21 @@
 //! library" comparator and a sanity check that blocking pays on the host
 //! exactly as §3.1.1 predicts — plus the int8 × ISA section comparing
 //! the widening i8 kernels against their f32 twins (GOP/s, CSV to
-//! `reports/gemm_int8_host.csv`).
+//! `reports/gemm_int8_host.csv`) and the pack × ISA section comparing
+//! A-only against A+B panel packing (CSV to
+//! `reports/gemm_pack_host.csv`).
 //!
 //! Run: `cargo bench --bench rust_blas`.
 
 use portable_kernels::blas::{
-    gemm_blocked, gemm_blocked_isa, gemm_i8_blocked_isa, gemm_naive,
-    quantize_slice, BlockedParams, Isa, QuantParams,
+    gemm_blocked, gemm_blocked_ex, gemm_blocked_isa, gemm_i8_blocked_isa,
+    gemm_naive, gemm_workspace, quantize_slice, BlockedParams, Isa, Pack,
+    QuantParams,
 };
 use portable_kernels::config::micro_kernel_shapes;
 use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::scratch::Scratch;
 
 /// The runtime-detected ISA axis end to end: one registry blocking,
 /// every micro-kernel variant this host supports — the per-host payoff
@@ -128,6 +132,60 @@ fn int8_isa_sweep() {
     println!();
 }
 
+/// The pack × ISA section: A-only packing against A+B panel packing
+/// through the same `gemm_blocked_ex` entry point, per detected ISA, at
+/// two sizes.  Scratch comes from a prewarmed arena (the serving shape),
+/// so the timed region is allocation-free for both variants and the
+/// delta is purely the B-panel layout: streaming `nr`-interleaved panels
+/// vs strided loads from the unpacked B.  Per-row CSV lands in
+/// `reports/gemm_pack_host.csv`.
+fn pack_isa_sweep() {
+    let params =
+        BlockedParams { bm: 64, bn: 64, bk: 64, mr: 8, nr: 16, threads: 1 };
+    let mut csv = String::from("n,isa,pack,gflops,min_s\n");
+    println!(
+        "== pack x ISA sweep (serial, {}; detected {:?}) ==",
+        params.name(),
+        Isa::detect()
+    );
+    let scratch = Scratch::new();
+    for &n in &[256usize, 512] {
+        let mut rng = XorShift::new(0xb9 + n as u64);
+        let a = rng.f32_vec(n * n);
+        let b = rng.f32_vec(n * n);
+        let flops = 2 * (n as u64).pow(3);
+        for isa in Isa::detect() {
+            for pack in Pack::all() {
+                scratch.prewarm(&gemm_workspace(n, n, n, &params, pack));
+                let s = bench(
+                    &format!("pack {n}^3 {isa} {pack}"),
+                    1,
+                    3,
+                    || {
+                        black_box(gemm_blocked_ex(
+                            &a, &b, n, n, n, &params, isa, pack, &scratch,
+                        ));
+                    },
+                );
+                println!("{}", s.line(Some(flops)));
+                csv.push_str(&format!(
+                    "{n},{isa},{pack},{:.3},{:.6}\n",
+                    s.gflops(flops),
+                    s.min.as_secs_f64()
+                ));
+            }
+        }
+    }
+    if std::fs::create_dir_all("reports").is_ok() {
+        let path = "reports/gemm_pack_host.csv";
+        match std::fs::write(path, &csv) {
+            Ok(()) => println!("pack csv -> {path}"),
+            Err(e) => println!("pack csv not written ({e})"),
+        }
+    }
+    println!();
+}
+
 fn main() {
     for &n in &[64usize, 128, 256, 512] {
         let mut rng = XorShift::new(n as u64);
@@ -166,4 +224,5 @@ fn main() {
     registry_sweep();
     isa_sweep();
     int8_isa_sweep();
+    pack_isa_sweep();
 }

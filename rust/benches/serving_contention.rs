@@ -89,6 +89,14 @@ struct Cell {
     /// Requests placed off their ring-home actor — how often affinity
     /// lost to backpressure in this cell.
     spills: usize,
+    /// Kernel-scratch arena checkouts served from pooled buffers during
+    /// the measured workload (summed across pool actors).
+    scratch_hits: u64,
+    /// Arena growth allocations during the measured workload — 0 after
+    /// warmup is the zero-allocation steady-state invariant.
+    steady_grows: u64,
+    /// Arena high-water mark in bytes, summed across pool actors.
+    scratch_high_water: u64,
 }
 
 fn run_cell(
@@ -116,6 +124,9 @@ fn run_cell(
         inputs.push(pool.synth_inputs(name, 17).unwrap());
         pool.warm(name).unwrap();
     }
+    // Arena baseline after warmup: growth past this point means a
+    // kernel hot path allocated during steady-state serving.
+    let warmed = pool.stats().scratch;
 
     let per_client = (REQUESTS_PER_CELL / clients).max(1);
     let t0 = Instant::now();
@@ -146,6 +157,7 @@ fn run_cell(
     });
     let wall = t0.elapsed().as_secs_f64();
     let spills = pool.spilled();
+    let scratch = pool.stats().scratch;
     pool.shutdown();
 
     latencies.sort();
@@ -158,6 +170,9 @@ fn run_cell(
         p95_ms: percentile_ms(&latencies, 0.95),
         wall_s: wall,
         spills,
+        scratch_hits: scratch.hits.saturating_sub(warmed.hits),
+        steady_grows: scratch.grows.saturating_sub(warmed.grows),
+        scratch_high_water: scratch.high_water_bytes,
     }
 }
 
@@ -175,13 +190,14 @@ fn main() {
         store.len()
     );
     println!(
-        "{:>7} {:>5} {:>8} | {:>10} {:>9} {:>9} {:>7}",
-        "clients", "pool", "threads", "req/s", "p50 ms", "p95 ms", "spills"
+        "{:>7} {:>5} {:>8} | {:>10} {:>9} {:>9} {:>7} {:>6}",
+        "clients", "pool", "threads", "req/s", "p50 ms", "p95 ms", "spills",
+        "grows"
     );
 
     let mut csv = String::from(
         "clients,pool,threads,requests,wall_s,throughput_rps,p50_ms,p95_ms,\
-         spills\n",
+         spills,scratch_hits,steady_grows,scratch_high_water_bytes\n",
     );
     for clients in [1usize, 2, 4, 8] {
         for pool_size in [1usize, 2, 4] {
@@ -190,17 +206,19 @@ fn main() {
             for threads in [1usize, 2, 0] {
                 let cell = run_cell(&store, clients, pool_size, threads);
                 println!(
-                    "{:>7} {:>5} {:>8} | {:>10.1} {:>9.2} {:>9.2} {:>7}",
+                    "{:>7} {:>5} {:>8} | {:>10.1} {:>9.2} {:>9.2} {:>7} \
+                     {:>6}",
                     cell.clients,
                     cell.pool,
                     cell.threads,
                     cell.rps,
                     cell.p50_ms,
                     cell.p95_ms,
-                    cell.spills
+                    cell.spills,
+                    cell.steady_grows
                 );
                 csv.push_str(&format!(
-                    "{},{},{},{},{:.6},{:.2},{:.4},{:.4},{}\n",
+                    "{},{},{},{},{:.6},{:.2},{:.4},{:.4},{},{},{},{}\n",
                     cell.clients,
                     cell.pool,
                     cell.threads,
@@ -209,7 +227,10 @@ fn main() {
                     cell.rps,
                     cell.p50_ms,
                     cell.p95_ms,
-                    cell.spills
+                    cell.spills,
+                    cell.scratch_hits,
+                    cell.steady_grows,
+                    cell.scratch_high_water
                 ));
             }
         }

@@ -21,9 +21,13 @@
 //!
 //! `--smoke` runs pool sizes 1 and 2 on the closed-loop contention
 //! workload and **exits non-zero unless pool(2) throughput >=
-//! --assert-speedup × pool(1)** (default 1.0) — the CI `serve-smoke`
-//! contract.  All modes write `<out>/serve_loadgen.csv`, with a `mode`
-//! column and shed accounting (always 0 for closed-loop rows).
+//! --assert-speedup × pool(1)** (default 1.0) **and steady-state arena
+//! growth is zero** (after warmup prewarms every plan's worst-case
+//! workspace, serving must not allocate kernel scratch) — the CI
+//! `serve-smoke` contract.  All modes write `<out>/serve_loadgen.csv`,
+//! with a `mode` column, shed accounting (always 0 for closed-loop
+//! rows), and per-cell arena counters (`scratch_hits`, `scratch_grows`,
+//! `steady_grows`, `scratch_high_water_bytes`).
 //!
 //! `--phase-shift` runs the **online re-tuning** demonstration instead:
 //! a pool serves a steady mix, traffic then shifts onto a shape class
@@ -53,6 +57,7 @@ use portable_kernels::tuner::{
     retune_native, RetuneConfig, SelectionDb, SelectionKey, TuningHandle,
 };
 use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::scratch::ScratchStats;
 use portable_kernels::util::tmp::TempDir;
 
 /// One synthetic square GEMM manifest entry.
@@ -122,12 +127,25 @@ struct Cell {
     rps: f64,
     p50_ms: f64,
     p95_ms: f64,
+    /// Kernel-scratch arena checkouts served from pooled buffers during
+    /// this cell's workload (summed across pool actors).
+    scratch_hits: u64,
+    /// Total arena growth allocations since the pool spawned, warmup
+    /// prewarming included.
+    scratch_grows: u64,
+    /// Arena growth allocations during the measured workload itself —
+    /// 0 is the zero-allocation steady-state invariant the serving
+    /// smoke gate asserts.
+    steady_grows: u64,
+    /// Arena high-water mark in bytes, summed across pool actors.
+    scratch_high_water: u64,
 }
 
 impl Cell {
     fn csv_header() -> &'static str {
         "mode,pool,clients,threads,queue_depth,requests,target_rps,shed,\
-         shed_rate,wall_s,throughput_rps,p50_ms,p95_ms"
+         shed_rate,wall_s,throughput_rps,p50_ms,p95_ms,\
+         scratch_hits,scratch_grows,steady_grows,scratch_high_water_bytes"
     }
 
     fn shed_rate(&self) -> f64 {
@@ -140,7 +158,8 @@ impl Cell {
 
     fn csv_row(&self) -> String {
         format!(
-            "{},{},{},{},{},{},{:.2},{},{:.4},{:.6},{:.2},{:.4},{:.4}",
+            "{},{},{},{},{},{},{:.2},{},{:.4},{:.6},{:.2},{:.4},{:.4},\
+             {},{},{},{}",
             self.mode,
             self.pool,
             self.clients,
@@ -153,7 +172,11 @@ impl Cell {
             self.wall_s,
             self.rps,
             self.p50_ms,
-            self.p95_ms
+            self.p95_ms,
+            self.scratch_hits,
+            self.scratch_grows,
+            self.steady_grows,
+            self.scratch_high_water
         )
     }
 }
@@ -195,6 +218,10 @@ fn run_cell(
         inputs.push(pool.synth_inputs(name, 17)?);
         pool.warm(name)?;
     }
+    // Arena baseline after warmup: every plan has prewarmed its
+    // worst-case workspace, so growth from here on breaks the
+    // zero-allocation steady-state invariant.
+    let warmed = pool.stats().scratch;
 
     let t0 = Instant::now();
     let mut latencies: Vec<Duration> = Vec::new();
@@ -225,6 +252,7 @@ fn run_cell(
         }
     });
     let wall = t0.elapsed().as_secs_f64();
+    let scratch = pool.stats().scratch;
     pool.shutdown();
 
     latencies.sort();
@@ -242,6 +270,10 @@ fn run_cell(
         rps: requests as f64 / wall,
         p50_ms: percentile_ms(&latencies, 0.50),
         p95_ms: percentile_ms(&latencies, 0.95),
+        scratch_hits: scratch.hits.saturating_sub(warmed.hits),
+        scratch_grows: scratch.grows,
+        steady_grows: scratch.grows.saturating_sub(warmed.grows),
+        scratch_high_water: scratch.high_water_bytes,
     })
 }
 
@@ -277,6 +309,7 @@ fn run_cell_open(
         inputs.push(pool.synth_inputs(name, 17)?);
         pool.warm(name)?;
     }
+    let warmed = pool.stats().scratch;
 
     let mut shed = 0usize;
     let mut latencies: Vec<Duration> = Vec::new();
@@ -338,6 +371,7 @@ fn run_cell_open(
         Ok(())
     })?;
     let wall = t0.elapsed().as_secs_f64();
+    let scratch = pool.stats().scratch;
     pool.shutdown();
 
     latencies.sort();
@@ -355,6 +389,10 @@ fn run_cell_open(
         rps: served as f64 / wall,
         p50_ms: percentile_ms(&latencies, 0.50),
         p95_ms: percentile_ms(&latencies, 0.95),
+        scratch_hits: scratch.hits.saturating_sub(warmed.hits),
+        scratch_grows: scratch.grows,
+        steady_grows: scratch.grows.saturating_sub(warmed.grows),
+        scratch_high_water: scratch.high_water_bytes,
     })
 }
 
@@ -473,7 +511,11 @@ fn run_phase_shift(
     )?;
     let shifted_mix = phase_mix(&pool, &["serve_gemm_96", "serve_gemm_128"])?;
 
-    let cell = |mode: &'static str, wall: f64, lat: &[Duration]| Cell {
+    let cell = |mode: &'static str,
+                wall: f64,
+                lat: &[Duration],
+                before: ScratchStats,
+                after: ScratchStats| Cell {
         mode,
         pool: actors,
         clients,
@@ -486,11 +528,17 @@ fn run_phase_shift(
         rps: (clients * requests_per_client) as f64 / wall,
         p50_ms: percentile_ms(lat, 0.50),
         p95_ms: percentile_ms(lat, 0.95),
+        scratch_hits: after.hits.saturating_sub(before.hits),
+        scratch_grows: after.grows,
+        steady_grows: after.grows.saturating_sub(before.grows),
+        scratch_high_water: after.high_water_bytes,
     };
 
+    let s_warm = pool.stats().scratch;
     let (wall_a, lat_a) =
         run_phase(&pool, &steady_mix, clients, requests_per_client, 0x5eed);
-    let steady = cell("steady", wall_a, &lat_a);
+    let s_steady = pool.stats().scratch;
+    let steady = cell("steady", wall_a, &lat_a, s_warm, s_steady);
     println!(
         "phase steady : {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms",
         steady.rps, steady.p50_ms, steady.p95_ms
@@ -498,7 +546,8 @@ fn run_phase_shift(
 
     let (wall_b, lat_b) =
         run_phase(&pool, &shifted_mix, clients, requests_per_client, 0xfade);
-    let shifted = cell("shifted", wall_b, &lat_b);
+    let s_shifted = pool.stats().scratch;
+    let shifted = cell("shifted", wall_b, &lat_b, s_steady, s_shifted);
     println!(
         "phase shifted: {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms  \
          (poisoned selection in play)",
@@ -542,9 +591,14 @@ fn run_phase_shift(
         pool.healthy_actors()
     );
 
+    // Re-plan prewarming from the tuning swap lands between here and the
+    // retuned phase; baseline after it so the retuned cell's
+    // `steady_grows` reads serving-time growth only.
+    let s_post_swap = pool.stats().scratch;
     let (wall_c, lat_c) =
         run_phase(&pool, &shifted_mix, clients, requests_per_client, 0xcafe);
-    let retuned = cell("retuned", wall_c, &lat_c);
+    let s_retuned = pool.stats().scratch;
+    let retuned = cell("retuned", wall_c, &lat_c, s_post_swap, s_retuned);
     println!(
         "phase retuned: {:>8.1} req/s  p50 {:>7.2} ms  p95 {:>7.2} ms",
         retuned.rps, retuned.p50_ms, retuned.p95_ms
@@ -553,6 +607,13 @@ fn run_phase_shift(
     // Per-(artifact, shape-class) serving latency, the accounting the
     // hot ranking was read from.
     let final_stats = pool.stats();
+    println!(
+        "arena: {} hits, {} grows, high water {} KiB across {} actors",
+        final_stats.scratch.hits,
+        final_stats.scratch.grows,
+        final_stats.scratch.high_water_bytes / 1024,
+        pool.healthy_actors()
+    );
     println!(
         "tuning epoch {}  spills {}  per-class serving latency:",
         final_stats.tuning_epoch,
@@ -742,14 +803,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         };
         println!(
             "pool={:<2} threads={threads}: {:>8.1} req/s  p50 {:>7.2} ms  \
-             p95 {:>7.2} ms  shed {:>4} ({:>5.1}%)  (wall {:.2} s, {} \
-             {})",
+             p95 {:>7.2} ms  shed {:>4} ({:>5.1}%)  arena +{} grows  \
+             (wall {:.2} s, {} {})",
             cell.pool,
             cell.rps,
             cell.p50_ms,
             cell.p95_ms,
             cell.shed,
             cell.shed_rate() * 100.0,
+            cell.steady_grows,
             cell.wall_s,
             cell.requests,
             if cell.mode == "open" { "arrivals" } else { "requests" }
@@ -794,6 +856,25 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             .into());
         }
         println!("OK: pool(2) sustains >= {min_speedup:.2}x single-actor throughput");
+
+        // The arena contract: after warmup (every plan prewarmed its
+        // worst-case workspace), steady-state serving must not grow the
+        // arena — kernel hot paths run allocation-free.
+        let steady_grows: u64 = cells.iter().map(|c| c.steady_grows).sum();
+        if steady_grows != 0 {
+            return Err(format!(
+                "serving smoke failed: {steady_grows} arena growth \
+                 allocation(s) during steady-state serving: plan-time \
+                 workspace sizing must make warmed kernel hot paths \
+                 allocation-free"
+            )
+            .into());
+        }
+        println!(
+            "OK: zero arena growth after warmup across {} cells \
+             (allocation-free steady state)",
+            cells.len()
+        );
     }
     Ok(())
 }

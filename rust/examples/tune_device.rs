@@ -11,8 +11,10 @@
 //!    `--search` strategy.  Enumerate the GEMM space grid
 //!    (`BlockedParams` × `threads` × runtime-detected micro-kernel
 //!    **ISA** — scalar/SSE2/AVX2/FMA/AVX-512 on x86-64 — × **dtype**,
-//!    f32 vs quantized i8) and the conv space grid
-//!    (`ConvAlgorithm × ConvConfig × threads × ISA × dtype` — tiled vs
+//!    f32 vs quantized i8 — × **pack**, A-only vs A+B panel packing)
+//!    and the conv space grid
+//!    (`ConvAlgorithm × ConvConfig × threads × ISA × dtype × pack` —
+//!    tiled vs
 //!    im2col vs winograd with its `wino_m ∈ {2, 4}` tile size, the
 //!    paper's §4.1 algorithm axis, plus the micro-kernel ISA the
 //!    lowered transform-domain/im2col GEMMs dispatch; i8 rides the
@@ -20,9 +22,11 @@
 //!    points to execute through `NativeEngine` via
 //!    `Backend::run_timed`, persist the winners into a `SelectionDb`,
 //!    and prove the engine consults it — including the chosen
-//!    algorithm, ISA and dtype — at plan time.  A final 512^3
+//!    algorithm, ISA, dtype and pack — at plan time.  A final 512^3
 //!    head-to-head times tuned int8 against tuned f32 in
-//!    elements/second (>= 2x asserted on AVX2 hosts).
+//!    elements/second (>= 2x asserted on AVX2 hosts), and a pack
+//!    head-to-head times the best A+B point against the best A-only
+//!    point at the same size (CI asserts ab does not lose).
 //!
 //! ```sh
 //! cargo run --release --example tune_device              # full, guided
@@ -57,8 +61,8 @@
 use std::path::{Path, PathBuf};
 
 use portable_kernels::blas::{
-    gemm_blocked_isa, gemm_i8_dequant, quantize_slice, Dtype, Isa,
-    QuantParams,
+    gemm_blocked_ex, gemm_blocked_isa, gemm_i8_dequant, gemm_workspace,
+    quantize_slice, Dtype, Isa, Pack, QuantParams,
 };
 use portable_kernels::config::{
     ConvAlgorithm, ConvPoint, GemmConfig, GemmPoint,
@@ -77,6 +81,7 @@ use portable_kernels::tuner::{
 use portable_kernels::util::bench::{bench, black_box};
 use portable_kernels::util::json::Value;
 use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::scratch::Scratch;
 use portable_kernels::util::tmp::TempDir;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -571,6 +576,52 @@ fn measured_host_sweep(
         note_dtypes(&swept);
     }
     dtypes_swept.sort_by_key(|d| d.as_str());
+    // ... and the pack axis: under exhaustive search every GEMM problem
+    // measures A-only and A+B panel packing, and every conv problem
+    // measures both on its GEMM-lowered points (im2col applies
+    // everywhere, so packed-B candidates exist for every conv problem;
+    // direct tiled points are A-only by construction).
+    let mut packs_swept: Vec<Pack> = Vec::new();
+    let mut note_packs = |swept: &[Pack]| {
+        for &p in swept {
+            if !packs_swept.contains(&p) {
+                packs_swept.push(p);
+            }
+        }
+    };
+    for op in gemm_sweep.winners.keys() {
+        let swept = gemm_sweep.axis_values_for(op, |p| p.pack);
+        if exhaustive {
+            for want in Pack::all() {
+                if !swept.contains(&want) {
+                    return Err(format!(
+                        "{op}: pack {want} was never measured ({swept:?}) \
+                         — the pack axis collapsed"
+                    )
+                    .into());
+                }
+            }
+        }
+        println!("  {op}: measured packs {swept:?}");
+        note_packs(&swept);
+    }
+    for op in conv_sweep.winners.keys() {
+        let swept = conv_sweep.axis_values_for(op, |c| c.pack);
+        if exhaustive {
+            for want in Pack::all() {
+                if !swept.contains(&want) {
+                    return Err(format!(
+                        "{op}: pack {want} was never measured ({swept:?}) \
+                         — the conv pack axis collapsed"
+                    )
+                    .into());
+                }
+            }
+        }
+        println!("  {op}: measured packs {swept:?}");
+        note_packs(&swept);
+    }
+    packs_swept.sort_by_key(|p| p.as_str());
 
     // Fold a previously written (possibly legacy) DB into the unified
     // schema, keeping the faster entry per key.
@@ -692,6 +743,7 @@ fn measured_host_sweep(
                            wino_m: Option<u64>,
                            isa: Option<(&str, f64)>,
                            dtype: Option<(&str, Value)>,
+                           pack: &str,
                            problems: &mut Value,
                            worst_ratio: &mut f64|
      -> Result<(), Box<dyn std::error::Error>> {
@@ -727,6 +779,7 @@ fn measured_host_sweep(
         if let Some((dt, per_dtype)) = dtype {
             entry.set("dtype", dt).set("per_dtype", per_dtype);
         }
+        entry.set("pack", pack);
         if default_gf > 0.0 {
             let ratio = tuned_gf / default_gf;
             entry.set("speedup", ratio);
@@ -771,6 +824,7 @@ fn measured_host_sweep(
             None,
             Some((point.isa.as_str(), scalar_gf)),
             Some((point.dtype.as_str(), per_dtype)),
+            point.pack.as_str(),
             &mut problems,
             &mut worst_ratio,
         )?;
@@ -804,6 +858,7 @@ fn measured_host_sweep(
             Some(cand.config.wino_m as u64),
             Some((cand.isa.as_str(), scalar_gf)),
             Some((cand.dtype.as_str(), per_dtype)),
+            cand.pack.as_str(),
             &mut problems,
             &mut worst_ratio,
         )?;
@@ -893,6 +948,58 @@ fn measured_host_sweep(
         .set("i8_speedup", i8_speedup)
         .set("asserted", have_avx2);
 
+    // The pack-axis acceptance head-to-head: the best measured A-only
+    // point against the best measured A+B point, each re-timed at 512^3
+    // through `gemm_blocked_ex` with a prewarmed arena.  At this size
+    // the k-panels of B are revisited once per row band, which is
+    // exactly the reuse B-panel packing monetizes — CI asserts the
+    // tuned-ab side does not lose to tuned-a.
+    let best_packed = |pk: Pack| -> GemmPoint {
+        gemm_sweep
+            .rows
+            .iter()
+            .filter(|r| r.point.dtype == Dtype::F32 && r.point.pack == pk)
+            .max_by(|x, y| x.gflops.total_cmp(&y.gflops))
+            .map(|r| r.point)
+            .unwrap_or(GemmPoint { pack: pk, ..GemmPoint::default() })
+            .host_degraded()
+    };
+    let scratch = Scratch::new();
+    println!("== pack head-to-head at 512^3 ==");
+    let mut pack_h2h = Value::object();
+    pack_h2h.set("m", hm as u64).set("n", hn as u64).set("k", hk as u64);
+    let mut pack_gflops = [0.0f64; 2];
+    for (slot, pk) in Pack::all().into_iter().enumerate() {
+        let pt = best_packed(pk);
+        scratch.prewarm(&gemm_workspace(hm, hn, hk, &pt.params, pk));
+        let s = bench(
+            &format!("gemm_512^3 (tuned, pack {pk})"),
+            1,
+            h2h_iters,
+            || {
+                black_box(gemm_blocked_ex(
+                    &ha, &hb, hm, hn, hk, &pt.params, pt.isa, pk,
+                    &scratch,
+                ));
+            },
+        );
+        println!("{}", s.line(Some(hops)));
+        pack_gflops[slot] = s.gflops(hops);
+        pack_h2h
+            .set(&format!("{pk}_point"), pt.name())
+            .set(&format!("{pk}_gflops"), s.gflops(hops));
+    }
+    let pack_speedup = if pack_gflops[0] > 0.0 {
+        pack_gflops[1] / pack_gflops[0]
+    } else {
+        0.0
+    };
+    println!(
+        "  pack ab vs pack a at 512^3: {:.2} vs {:.2} GFLOP/s -> {:.2}x",
+        pack_gflops[1], pack_gflops[0], pack_speedup
+    );
+    pack_h2h.set("ab_speedup", pack_speedup);
+
     let mut bench = Value::object();
     let isa_strs = |list: &[Isa]| -> Value {
         Value::Array(
@@ -919,7 +1026,17 @@ fn measured_host_sweep(
                     .collect(),
             ),
         )
+        .set(
+            "packs_swept",
+            Value::Array(
+                packs_swept
+                    .iter()
+                    .map(|p| Value::Str(p.as_str().into()))
+                    .collect(),
+            ),
+        )
         .set("int8_head_to_head", h2h)
+        .set("pack_head_to_head", pack_h2h)
         .set(
             "conv_wino_swept",
             Value::Array(
@@ -938,11 +1055,12 @@ fn measured_host_sweep(
         "OK [{search}]: {total_points} points measured across {} + {} \
          grid points; tuned >= default (and >= the measured scalar \
          winner, per dtype) for every problem; DB (incl. algorithm, \
-         isa + dtype) consulted at plan time; int8 512^3 head-to-head \
-         {:.2}x",
+         isa, dtype + pack) consulted at plan time; int8 512^3 \
+         head-to-head {:.2}x; pack ab/a 512^3 {:.2}x",
         grid.len(),
         conv_grid.len(),
-        i8_speedup
+        i8_speedup,
+        pack_speedup
     );
     Ok(())
 }

@@ -15,9 +15,25 @@
 //! scalar kernel as the bit-fallback for ragged edges, unregistered
 //! shapes, and hosts without the feature.  [`gemm_blocked`] is the
 //! scalar entry point; [`gemm_blocked_isa`] takes the axis explicitly.
+//!
+//! **Operand staging is itself a tuned axis** ([`Pack`]): `pack: a`
+//! stages only the A macro-panel (`mr`-row-interleaved strips — the
+//! historical behavior), while `pack: ab` additionally stages B once per
+//! call into BLIS-style `nr`-column-interleaved `bk×bn` panels
+//! ([`pack_b`]), shared read-only across every row band, so the
+//! micro-kernel's B reads become unit-stride instead of stride-`n`.
+//! The packed-B micro-kernel twins read the *same values in the same
+//! floating-point order* from the packed layout, so `pack: ab` is
+//! bit-identical to `pack: a` for every ISA (0 ULP — proptested); which
+//! one is *faster* is shape- and cache-dependent, which is exactly why
+//! it is a swept axis and not a default.  Packing buffers come from a
+//! caller-supplied [`Scratch`] arena ([`gemm_blocked_ex`]) so serving
+//! hot paths stage operands without per-call allocation.
 
 use super::Isa;
+use crate::error::{Error, Result};
 use crate::util::pool;
+use crate::util::scratch::{Scratch, Workspace};
 
 /// Blocking parameters (the CPU analogue of `GemmConfig`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,13 +82,68 @@ impl BlockedParams {
     }
 }
 
+/// The operand-staging axis of the kernel space: which GEMM operands are
+/// packed into interleaved panels before the micro-kernels run.
+///
+/// * [`Pack::A`] — stage only A (`mr`-row strips; the historical
+///   behavior and the migration default for legacy DB entries);
+/// * [`Pack::Ab`] — additionally stage B once per call into
+///   `nr`-column-interleaved `bk×bn` panels reused across all row bands.
+///
+/// Both settings compute bit-identical results (same values, same
+/// floating-point order); the choice is a pure throughput knob the
+/// tuner measures, like the tile shapes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub enum Pack {
+    /// Pack the A macro-panel only (B read directly, stride-`n`).
+    #[default]
+    A,
+    /// Pack A and B (`nr`-column-interleaved B panels, unit-stride
+    /// micro-kernel reads).
+    Ab,
+}
+
+impl Pack {
+    /// Every pack value, in sweep/report order (`a` first).
+    pub fn all() -> [Pack; 2] {
+        [Pack::A, Pack::Ab]
+    }
+
+    /// Stable lowercase name (selection DB, reports, CLI).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Pack::A => "a",
+            Pack::Ab => "ab",
+        }
+    }
+}
+
+impl std::fmt::Display for Pack {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Pack {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "a" => Ok(Pack::A),
+            "ab" => Ok(Pack::Ab),
+            other => Err(Error::Config(format!("unknown pack {other:?}"))),
+        }
+    }
+}
+
 /// Generate the monomorphized micro-kernel registry: the public list of
 /// `(mr, nr)` register-tile shapes with a fixed-trip-count kernel
-/// ([`MICRO_KERNEL_SHAPES`]) and the dispatch that binds a full tile to
+/// ([`MICRO_KERNEL_SHAPES`]) and the dispatches that bind a full tile to
 /// its monomorphized instantiation (ragged edges and unregistered shapes
-/// take the generic kernel).  One macro invocation is the single source
-/// of truth: the tuner's grids ([`crate::config::micro_kernel_shapes`])
-/// and this dispatch can never disagree about which shapes are "fast".
+/// take the generic kernel) — one dispatch per B layout, unpacked
+/// (`dispatch_micro_kernel`) and packed (`dispatch_micro_kernel_pb`).
+/// One macro invocation is the single source of truth: the tuner's grids
+/// ([`crate::config::micro_kernel_shapes`]) and these dispatches can
+/// never disagree about which shapes are "fast".
 macro_rules! micro_kernel_registry {
     ($(($mr:literal, $nr:literal)),+ $(,)?) => {
         /// Every `(mr, nr)` register micro-tile with a monomorphized
@@ -144,6 +215,63 @@ macro_rules! micro_kernel_registry {
                 _ => micro_kernel(apack, b, c, n, il, ie, j, je, p0, p1, mr),
             }
         }
+
+        /// The packed-B twin of `dispatch_micro_kernel`: `bstrip` points
+        /// at this register tile's `kc×nr` strip of the packed B panel
+        /// (unit stride), replacing the `(b, p0, p1)` view of the
+        /// unpacked dispatch.  Every variant reads the same values in
+        /// the same floating-point order as its unpacked twin, so the
+        /// two dispatches are bit-identical per ISA by construction.
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        fn dispatch_micro_kernel_pb(
+            full: bool,
+            mr: usize,
+            nr: usize,
+            isa: Isa,
+            apack: &[f32],
+            bstrip: &[f32],
+            c: &mut [f32],
+            n: usize,
+            il: usize,
+            ie: usize,
+            j: usize,
+            je: usize,
+            kc: usize,
+        ) {
+            match (full, mr, nr) {
+                $(
+                    (true, $mr, $nr) => match isa {
+                        // SAFETY: as for `dispatch_micro_kernel` — the
+                        // entry point asserted `isa.is_available()`.
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Sse2 => unsafe {
+                            super::simd::micro_kernel_sse2_pb::<$mr, $nr>(
+                                apack, bstrip, c, n, il, j, kc,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 => unsafe {
+                            super::simd::micro_kernel_avx2_pb::<$mr, $nr>(
+                                apack, bstrip, c, n, il, j, kc,
+                            )
+                        },
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Fma | Isa::Avx512 => unsafe {
+                            super::simd::micro_kernel_fma_pb::<$mr, $nr>(
+                                apack, bstrip, c, n, il, j, kc,
+                            )
+                        },
+                        _ => micro_kernel_fixed_pb::<$mr, $nr>(
+                            apack, bstrip, c, n, il, j, kc,
+                        ),
+                    },
+                )+
+                _ => micro_kernel_pb(
+                    apack, bstrip, c, n, il, ie, j, je, kc, mr, nr,
+                ),
+            }
+        }
     };
 }
 
@@ -209,6 +337,32 @@ pub fn gemm_blocked_isa(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
+    gemm_blocked_ex(a, b, m, n, k, params, isa, Pack::A, &Scratch::new())
+}
+
+/// [`gemm_blocked_isa`] with the full hot-path surface: the
+/// operand-staging [`Pack`] axis and a caller-owned [`Scratch`] arena
+/// for every packing buffer.  `Pack::A` with a throwaway arena *is*
+/// [`gemm_blocked_isa`] (that function delegates here); `Pack::Ab`
+/// additionally packs B once per call — shared read-only across every
+/// row band — and runs the packed-B micro-kernel twins, bit-identical
+/// per ISA to the unpacked path.  With a long-lived arena prewarmed via
+/// [`gemm_workspace`], steady-state calls perform zero scratch
+/// allocations.
+///
+/// Panics exactly as [`gemm_blocked_isa`] does.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_blocked_ex(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert!(
@@ -231,44 +385,107 @@ pub fn gemm_blocked_isa(
         Isa::detect()
     );
     let mut c = vec![0.0f32; m * n];
+    let bpack = stage_b(b, n, k, params, pack, scratch);
+    gemm_into_prepacked(
+        a,
+        b,
+        bpack.as_deref(),
+        &mut c,
+        m,
+        n,
+        k,
+        params,
+        isa,
+        scratch,
+    );
+    if let Some(bp) = bpack {
+        scratch.put_f32(bp);
+    }
+    c
+}
+
+/// Pack B per the [`Pack`] axis: `Some(panels)` from the arena for
+/// `Pack::Ab` on a non-degenerate operand, `None` (read B directly)
+/// otherwise.
+fn stage_b(
+    b: &[f32],
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Option<Vec<f32>> {
+    if pack != Pack::Ab || n == 0 || k == 0 {
+        return None;
+    }
+    let mut bp = scratch.take_f32(bpack_len(n, k, params));
+    pack_b(b, &mut bp, n, k, params);
+    Some(bp)
+}
+
+/// The band driver shared by every f32 GEMM entry point: compute
+/// `c = A @ B` (with `c` pre-zeroed, `m*n` row-major) under `params`,
+/// reading B either directly (`bpack: None`) or from pre-packed panels
+/// (`bpack: Some`).  Serial and parallel paths run the identical
+/// per-band code against disjoint slices of `c`, so every thread count
+/// is bit-identical; per-worker A-panel buffers come from the arena.
+#[allow(clippy::too_many_arguments)]
+fn gemm_into_prepacked(
+    a: &[f32],
+    b: &[f32],
+    bpack: Option<&[f32]>,
+    c: &mut [f32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    scratch: &Scratch,
+) {
     let bm = params.bm;
     let workers = pool::resolve_threads(params.threads);
     let bands = m.div_ceil(bm);
     if workers <= 1 || bands <= 1 || n == 0 {
         // Serial path: one packing buffer reused across bands (every band
         // fully rewrites the prefix it reads, so reuse is invisible).
-        let mut apack = alloc_apack(params);
+        let mut apack = scratch.take_f32(apack_len(params));
         let mut i0 = 0;
         while i0 < m {
             let i1 = (i0 + bm).min(m);
-            gemm_band(
-                a,
-                b,
-                &mut c[i0 * n..i1 * n],
-                n,
-                k,
-                i0,
-                i1,
-                params,
-                isa,
-                &mut apack,
-            );
+            let cband = &mut c[i0 * n..i1 * n];
+            match bpack {
+                Some(bp) => gemm_band_packed(
+                    a, bp, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+                None => gemm_band(
+                    a, b, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+            }
             i0 = i1;
         }
+        scratch.put_f32(apack);
     } else {
         // Parallel path: split C into disjoint bm-row bands and let the
-        // pool's workers claim them; each worker packs into its own
-        // buffer and runs the identical per-band code.
+        // pool's workers claim them; each worker checks its packing
+        // buffer out of the shared arena and runs the identical
+        // per-band code.  Packed B (when present) is shared read-only.
         let row_bands: Vec<(usize, &mut [f32])> =
             c.chunks_mut(bm * n).enumerate().collect();
         pool::run_parallel(workers, row_bands, |_, (band, cband)| {
             let i0 = band * bm;
             let i1 = (i0 + bm).min(m);
-            let mut apack = alloc_apack(params);
-            gemm_band(a, b, cband, n, k, i0, i1, params, isa, &mut apack);
+            let mut apack = scratch.take_f32(apack_len(params));
+            match bpack {
+                Some(bp) => gemm_band_packed(
+                    a, bp, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+                None => gemm_band(
+                    a, b, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+            }
+            scratch.put_f32(apack);
         });
     }
-    c
 }
 
 /// Batched `C[i] = A[i] @ B[i]` for `batch` independent row-major GEMMs
@@ -290,6 +507,7 @@ pub fn gemm_blocked_isa(
 ///
 /// Panics on operand/shape mismatch or an unavailable `isa`, exactly
 /// like [`gemm_blocked_isa`].
+#[allow(clippy::too_many_arguments)]
 pub fn gemm_batched_isa(
     a: &[f32],
     b: &[f32],
@@ -300,8 +518,103 @@ pub fn gemm_batched_isa(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
+    gemm_batched_ex(
+        a,
+        b,
+        batch,
+        m,
+        n,
+        k,
+        params,
+        isa,
+        Pack::A,
+        &Scratch::new(),
+    )
+}
+
+/// [`gemm_batched_isa`] with the [`Pack`] axis and a caller-owned
+/// [`Scratch`] arena.  Under `Pack::Ab` every batch element's B panels
+/// are packed **once, up front, in one pass** into a single arena
+/// buffer and reused read-only by that element's GEMM — for Winograd
+/// this is exactly "pack the U (filter-transform) panels once per call
+/// and reuse them across the `(wino_m+2)²` transform-domain GEMMs",
+/// instead of re-staging the operand inside each per-element GEMM.
+/// Bit-identical to [`gemm_batched_isa`] per ISA (the packed twins read
+/// the same values in the same order).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_batched_ex(
+    a: &[f32],
+    b: &[f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
+    let mut c = vec![0.0f32; batch * m * n];
+    gemm_batched_into(
+        a, b, &mut c, batch, m, n, k, params, isa, pack, scratch,
+    );
+    c
+}
+
+/// [`gemm_batched_ex`] into a caller-supplied **pre-zeroed** output
+/// buffer (the arena form Winograd's transform-domain multiply uses for
+/// its M matrix).  Same validation, staging, and band driving — the
+/// public entry point is this plus a `vec![0.0; batch*m*n]`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn gemm_batched_into(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) {
     assert_eq!(a.len(), batch * m * k, "batched A shape mismatch");
     assert_eq!(b.len(), batch * k * n, "batched B shape mismatch");
+    assert!(
+        params.bm > 0
+            && params.bn > 0
+            && params.bk > 0
+            && params.mr > 0
+            && params.nr > 0,
+        "BlockedParams dims must be non-zero: {params:?}"
+    );
+    assert!(
+        params.mr <= 16 && params.nr <= 16,
+        "micro-tile exceeds the 16x16 register kernel cap: {params:?}"
+    );
+    assert!(
+        isa.is_available(),
+        "micro-kernel ISA {isa} is not available on this host \
+         (detected: {:?}) — resolve the plan through the engine, which \
+         degrades unavailable ISAs to scalar",
+        Isa::detect()
+    );
+    debug_assert_eq!(c.len(), batch * m * n, "batched C shape mismatch");
+
+    // Stage every element's B panels once per call (the shared-operand
+    // hoist): one arena buffer, `batch` slots, packed in one pass.
+    let slot = bpack_len(n, k, params);
+    let bpack_all = if pack == Pack::Ab && slot > 0 && batch > 0 {
+        let mut bp = scratch.take_f32(batch * slot);
+        for (i, bslot) in bp.chunks_mut(slot).enumerate() {
+            pack_b(&b[i * k * n..(i + 1) * k * n], bslot, n, k, params);
+        }
+        Some(bp)
+    } else {
+        None
+    };
+
     let workers = pool::resolve_threads(params.threads);
     let bands = m.div_ceil(params.bm.max(1));
     if workers > 1 && batch > 1 && bands <= 1 && m * n > 0 {
@@ -309,50 +622,188 @@ pub fn gemm_batched_isa(
         // bm band), so inner parallelism would run every slice serially
         // anyway: spend the threads across the batch.  Each worker
         // computes whole slices with the serial per-GEMM path into its
-        // disjoint chunk of C; gemm_blocked_isa is bit-identical across
-        // thread counts, so this path is bit-identical to the
+        // disjoint chunk of C; the per-slice code is bit-identical
+        // across thread counts, so this path is bit-identical to the
         // sequential loop below.
         let serial = BlockedParams { threads: 1, ..*params };
-        let mut c = vec![0.0f32; batch * m * n];
         let slices: Vec<(usize, &mut [f32])> =
             c.chunks_mut(m * n).enumerate().collect();
         pool::run_parallel(workers, slices, |_, (i, cslice)| {
-            cslice.copy_from_slice(&gemm_blocked_isa(
+            gemm_into_prepacked(
                 &a[i * m * k..(i + 1) * m * k],
                 &b[i * k * n..(i + 1) * k * n],
+                bpack_all
+                    .as_ref()
+                    .map(|bp| &bp[i * slot..(i + 1) * slot]),
+                cslice,
                 m,
                 n,
                 k,
                 &serial,
                 isa,
-            ));
+                scratch,
+            );
         });
-        return c;
+    } else {
+        for i in 0..batch {
+            gemm_into_prepacked(
+                &a[i * m * k..(i + 1) * m * k],
+                &b[i * k * n..(i + 1) * k * n],
+                bpack_all
+                    .as_ref()
+                    .map(|bp| &bp[i * slot..(i + 1) * slot]),
+                &mut c[i * m * n..(i + 1) * m * n],
+                m,
+                n,
+                k,
+                params,
+                isa,
+                scratch,
+            );
+        }
     }
-    let mut c = Vec::with_capacity(batch * m * n);
-    for i in 0..batch {
-        c.extend_from_slice(&gemm_blocked_isa(
-            &a[i * m * k..(i + 1) * m * k],
-            &b[i * k * n..(i + 1) * k * n],
-            m,
-            n,
-            k,
-            params,
-            isa,
-        ));
+    if let Some(bp) = bpack_all {
+        scratch.put_f32(bp);
     }
-    c
 }
 
-/// Packing buffer for one `bm x bk` A macro-panel: strips of `mr` rows,
-/// ragged strips zero-padded, so size for the rounded-up strip count.
-fn alloc_apack(params: &BlockedParams) -> Vec<f32> {
-    vec![
-        0.0f32;
-        params.bm.max(params.mr).div_ceil(params.mr)
-            * params.mr
-            * params.bk.max(1)
-    ]
+/// Length of the A macro-panel packing buffer for one `bm x bk` panel:
+/// strips of `mr` rows, ragged strips zero-padded, so size for the
+/// rounded-up strip count.
+pub(crate) fn apack_len(params: &BlockedParams) -> usize {
+    params.bm.max(params.mr).div_ceil(params.mr)
+        * params.mr
+        * params.bk.max(1)
+}
+
+/// Uniform packed-B panel slot: every `bk×bn` panel of an `n`-column
+/// operand occupies `bk * strips * nr` elements, where `strips` is the
+/// per-panel strip count of the *widest* panel (`min(bn, n)` columns
+/// rounded up to whole `nr` strips).  Uniform slots make panel
+/// addressing a multiply instead of a prefix sum.
+pub(crate) fn bpack_panel_slot(n: usize, params: &BlockedParams) -> usize {
+    params.bk * params.bn.min(n).div_ceil(params.nr) * params.nr
+}
+
+/// Total packed-B buffer length for a `k x n` operand under `params`:
+/// one uniform slot per `(k-panel, column-panel)` pair.  Zero for
+/// degenerate operands (nothing to pack).
+pub(crate) fn bpack_len(
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+) -> usize {
+    if n == 0 || k == 0 {
+        return 0;
+    }
+    k.div_ceil(params.bk)
+        * n.div_ceil(params.bn)
+        * bpack_panel_slot(n, params)
+}
+
+/// Pack `B` (`k x n`, row-major) into BLIS-style panels:
+/// `bpack` holds one slot per `(p0, j0)` macro-panel (see
+/// [`bpack_len`]); within a panel, `nr`-column strips are contiguous —
+/// strip `t` stores `B[p0 + p, j0 + t*nr + s]` at `t*(kc*nr) + p*nr +
+/// s` — so a micro-kernel walks its strip with unit stride.  Ragged
+/// strip columns are zero-padded; the pad is never read back (ragged
+/// tiles read exactly `je - j` columns), zero just keeps the buffer
+/// deterministic.
+pub(crate) fn pack_b(
+    b: &[f32],
+    bpack: &mut [f32],
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+) {
+    let &BlockedParams { bn, bk, nr, .. } = params;
+    let jpanels = n.div_ceil(bn);
+    let slot = bpack_panel_slot(n, params);
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        let kc = p1 - p0;
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            let base = ((p0 / bk) * jpanels + j0 / bn) * slot;
+            let mut t = 0;
+            let mut j = j0;
+            while j < j1 {
+                let je = (j + nr).min(j1);
+                let off = base + t * (kc * nr);
+                for p in 0..kc {
+                    let row = (p0 + p) * n;
+                    let dst = off + p * nr;
+                    for (s, col) in (j..je).enumerate() {
+                        bpack[dst + s] = b[row + col];
+                    }
+                    for s in (je - j)..nr {
+                        bpack[dst + s] = 0.0;
+                    }
+                }
+                t += 1;
+                j = je;
+            }
+        }
+    }
+}
+
+/// The worst-case arena take-set of one [`gemm_blocked_ex`] call: one
+/// A-panel buffer per concurrently active band worker, plus the packed
+/// B panels under [`Pack::Ab`].  Mirrors the execute path exactly so a
+/// [`Scratch::prewarm`] with this workspace makes steady-state calls
+/// allocation-free.
+pub fn gemm_workspace(
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(params.bm.max(1));
+    let napack = if workers <= 1 || bands <= 1 || n == 0 {
+        1
+    } else {
+        workers.min(bands)
+    };
+    let mut ws = Workspace::none();
+    for _ in 0..napack {
+        ws.f32_lens.push(apack_len(params));
+    }
+    if pack == Pack::Ab {
+        ws.f32_lens.push(bpack_len(n, k, params));
+    }
+    ws
+}
+
+/// The worst-case arena take-set of one [`gemm_batched_ex`] call — the
+/// batched analogue of [`gemm_workspace`] (one packed-B buffer covering
+/// every element, A panels per concurrently active worker).
+pub fn gemm_batched_workspace(
+    batch: usize,
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(params.bm.max(1));
+    let napack = if workers > 1 && batch > 1 && bands <= 1 && m * n > 0 {
+        workers.min(batch)
+    } else if workers <= 1 || bands <= 1 || n == 0 {
+        1
+    } else {
+        workers.min(bands)
+    };
+    let mut ws = Workspace::none();
+    for _ in 0..napack {
+        ws.f32_lens.push(apack_len(params));
+    }
+    if pack == Pack::Ab {
+        ws.f32_lens.push(batch * bpack_len(n, k, params));
+    }
+    ws
 }
 
 /// One `bm`-row macro-tile band: `cband = A[i0..i1, :] @ B`, with
@@ -398,6 +849,68 @@ fn gemm_band(
                     dispatch_micro_kernel(
                         full, mr, nr, isa, &apack[strip..], b, cband, n,
                         il, il + (ie - i), j, je, p0, p1,
+                    );
+                    j = je;
+                }
+                i = ie;
+            }
+        }
+    }
+}
+
+/// The packed-B twin of [`gemm_band`]: identical loop structure (and so
+/// identical accumulation order — the bit-identity contract), but each
+/// register tile reads its `kc×nr` strip of the shared packed B panels
+/// ([`pack_b`] layout) instead of striding through B.  The packing was
+/// done once per call; every row band of every worker reuses it
+/// read-only.
+#[allow(clippy::too_many_arguments)]
+fn gemm_band_packed(
+    a: &[f32],
+    bpack: &[f32],
+    cband: &mut [f32],
+    n: usize,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    apack: &mut [f32],
+) {
+    let &BlockedParams { bn, bk, mr, nr, .. } = params;
+    let jpanels = n.div_ceil(bn.max(1));
+    let slot = bpack_panel_slot(n, params);
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        let kc = p1 - p0;
+        pack_a(a, apack, k, i0, i1, p0, p1, mr);
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            let pbase = ((p0 / bk) * jpanels + j0 / bn) * slot;
+            let mut i = i0;
+            while i < i1 {
+                let ie = (i + mr).min(i1);
+                let strip = ((i - i0) / mr) * (mr * kc);
+                let il = i - i0;
+                let mut j = j0;
+                while j < j1 {
+                    let je = (j + nr).min(j1);
+                    let full = ie - i == mr && je - j == nr;
+                    let boff = pbase + ((j - j0) / nr) * (kc * nr);
+                    dispatch_micro_kernel_pb(
+                        full,
+                        mr,
+                        nr,
+                        isa,
+                        &apack[strip..],
+                        &bpack[boff..],
+                        cband,
+                        n,
+                        il,
+                        il + (ie - i),
+                        j,
+                        je,
+                        kc,
                     );
                     j = je;
                 }
@@ -477,6 +990,43 @@ pub(crate) fn micro_kernel_fixed<const MR: usize, const NR: usize>(
     }
 }
 
+/// The packed-B twin of [`micro_kernel_fixed`]: `bstrip` is this tile's
+/// `kc×NR` strip of the packed panel (`bstrip[p*NR + s]` = `B[p0 + p,
+/// j + s]`), read with unit stride.  The loop nest — `p`, then `r`,
+/// then `s` — and therefore every multiply-add's order is identical to
+/// the unpacked kernel, so outputs are bit-identical (0 ULP).
+/// `#[inline(always)]` for the same `#[target_feature]` multiversioning
+/// trick.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn micro_kernel_fixed_pb<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for p in 0..kc {
+        let brow: &[f32] = &bstrip[p * NR..(p + 1) * NR];
+        let astrip = &apack[p * MR..(p + 1) * MR];
+        for r in 0..MR {
+            let aip = astrip[r];
+            for s in 0..NR {
+                acc[r][s] += aip * brow[s];
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+        for s in 0..NR {
+            crow[s] += accr[s];
+        }
+    }
+}
+
 /// The register micro-kernel: accumulate `C[i..ie, j..je] += Apack_strip
 /// @ B[p0..p1, j..je]` with accumulators held in a fixed-size stack tile
 /// (the "registers" of the device kernel).  `apack` points at the strip:
@@ -522,6 +1072,45 @@ fn micro_kernel(
         }
     }
     let _ = nw;
+}
+
+/// The packed-B twin of the generic [`micro_kernel`] (ragged edges and
+/// unregistered shapes): reads `je - j` columns from the strip's `nr`-
+/// wide rows — the zero pad beyond a ragged edge is never touched.
+/// Same accumulation order as the unpacked generic kernel: bit-identical.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_pb(
+    apack: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    ie: usize,
+    j: usize,
+    je: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f32; 16]; 16];
+    let (mh, nw) = (ie - i, je - j);
+    debug_assert!(mh <= 16 && nw <= 16);
+    for p in 0..kc {
+        let brow = &bstrip[p * nr..p * nr + nw];
+        let astrip = &apack[p * mr..p * mr + mh];
+        for (accr, aip) in acc.iter_mut().zip(astrip.iter()) {
+            for (s, bv) in brow.iter().enumerate() {
+                accr[s] += aip * bv;
+            }
+        }
+    }
+    for r in 0..mh {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + je];
+        for (s, cv) in crow.iter_mut().enumerate() {
+            *cv += acc[r][s];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -716,6 +1305,159 @@ mod tests {
     }
 
     #[test]
+    fn packed_b_bit_identical_to_unpacked_per_isa() {
+        // The tentpole contract: pack:ab reads the same values in the
+        // same floating-point order as pack:a, so outputs are 0 ULP for
+        // EVERY ISA (including FMA — both pack settings run the same
+        // fused kernel structure).  Ragged shape so the monomorphized,
+        // generic, and edge paths all run.
+        let scratch = Scratch::new();
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (17, 13, 9),
+            (37, 29, 23),
+            (64, 64, 64),
+            (5, 64, 3),
+        ] {
+            let a: Vec<f32> =
+                (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+            let b: Vec<f32> =
+                (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+            for &(mr, nr) in
+                &[(2usize, 4usize), (4, 8), (8, 16), (3, 5), (16, 16)]
+            {
+                let params = BlockedParams {
+                    bm: 16,
+                    bn: 16,
+                    bk: 8,
+                    mr,
+                    nr,
+                    threads: 1,
+                };
+                for isa in Isa::detect() {
+                    let unpacked = gemm_blocked_ex(
+                        &a, &b, m, n, k, &params, isa, Pack::A, &scratch,
+                    );
+                    let packed = gemm_blocked_ex(
+                        &a, &b, m, n, k, &params, isa, Pack::Ab, &scratch,
+                    );
+                    assert!(
+                        unpacked == packed,
+                        "{m}x{n}x{k} ({mr},{nr}) {isa}: pack:ab not \
+                         bit-identical to pack:a"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_b_threaded_bit_identical_to_serial() {
+        // pack:ab composes with the threads axis: the packed panels are
+        // shared read-only across bands, and every thread count is
+        // bit-identical to serial.
+        let scratch = Scratch::new();
+        let (m, n, k) = (53, 31, 19);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 11) as f32 - 5.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 13) as f32 - 6.0).collect();
+        let base =
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 1 };
+        for isa in Isa::detect() {
+            let serial = gemm_blocked_ex(
+                &a, &b, m, n, k, &base, isa, Pack::Ab, &scratch,
+            );
+            for threads in [0usize, 2, 3, 8] {
+                let par = gemm_blocked_ex(
+                    &a,
+                    &b,
+                    m,
+                    n,
+                    k,
+                    &BlockedParams { threads, ..base },
+                    isa,
+                    Pack::Ab,
+                    &scratch,
+                );
+                assert!(
+                    serial == par,
+                    "{isa} threads={threads} packed diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_name_roundtrip() {
+        for p in Pack::all() {
+            assert_eq!(p.to_string().parse::<Pack>().unwrap(), p);
+        }
+        assert_eq!(Pack::A.as_str(), "a");
+        assert_eq!(Pack::Ab.as_str(), "ab");
+        assert!("b".parse::<Pack>().is_err());
+        assert_eq!(Pack::default(), Pack::A);
+    }
+
+    #[test]
+    fn pack_b_layout_roundtrips_every_value() {
+        // Every B element lands exactly where gemm_band_packed's strip
+        // arithmetic expects it: panel (p0/bk, j0/bn), strip (j-j0)/nr,
+        // offset p*nr + (j % nr within the strip).
+        let (n, k) = (13usize, 11usize);
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 4, mr: 2, nr: 4, threads: 1 };
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let mut bp = vec![-1.0f32; bpack_len(n, k, &params)];
+        pack_b(&b, &mut bp, n, k, &params);
+        let jpanels = n.div_ceil(params.bn);
+        let slot = bpack_panel_slot(n, &params);
+        for p in 0..k {
+            let p0 = (p / params.bk) * params.bk;
+            let kc = (p0 + params.bk).min(k) - p0;
+            for j in 0..n {
+                let j0 = (j / params.bn) * params.bn;
+                let base = ((p0 / params.bk) * jpanels + j0 / params.bn)
+                    * slot;
+                let t = (j - j0) / params.nr;
+                let s = (j - j0) % params.nr;
+                let got =
+                    bp[base + t * (kc * params.nr) + (p - p0) * params.nr + s];
+                assert_eq!(got, b[p * n + j], "B[{p},{j}] misplaced");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_workspace_prewarm_makes_calls_allocation_free() {
+        // Prewarming with the computed workspace must cover the real
+        // take-set: subsequent calls never grow the arena.
+        let (m, n, k) = (37, 29, 23);
+        let a: Vec<f32> = (0..m * k).map(|i| (i % 7) as f32 - 3.0).collect();
+        let b: Vec<f32> = (0..k * n).map(|i| (i % 5) as f32 - 2.0).collect();
+        for params in [
+            BlockedParams { bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1 },
+            BlockedParams { bm: 8, bn: 16, bk: 8, mr: 4, nr: 8, threads: 3 },
+        ] {
+            for pack in Pack::all() {
+                let scratch = Scratch::new();
+                scratch
+                    .prewarm(&gemm_workspace(m, n, k, &params, pack));
+                let grows = scratch.stats().grows;
+                for _ in 0..3 {
+                    gemm_blocked_ex(
+                        &a, &b, m, n, k, &params, Isa::Scalar, pack,
+                        &scratch,
+                    );
+                }
+                assert_eq!(
+                    scratch.stats().grows,
+                    grows,
+                    "steady state grew the arena ({params:?}, {pack})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn batched_gemm_is_slicewise_bit_identical() {
         // Each batch element must equal a standalone gemm_blocked_isa
         // call on its slice, bit for bit, for every detected ISA and
@@ -810,6 +1552,71 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn batched_packed_b_bit_identical_to_unpacked() {
+        // pack:ab on the batched entry point: the per-element U panels
+        // are staged once up front, and every (ISA, thread count) is
+        // bit-identical to the unpacked batched GEMM — both the
+        // sequential and the batch-parallel path.
+        let scratch = Scratch::new();
+        let (batch, m, n, k) = (7, 6, 5, 4);
+        let a: Vec<f32> =
+            (0..batch * m * k).map(|i| (i % 9) as f32 - 4.0).collect();
+        let b: Vec<f32> =
+            (0..batch * k * n).map(|i| (i % 7) as f32 - 3.0).collect();
+        let base = BlockedParams {
+            bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1,
+        };
+        for isa in Isa::detect() {
+            for threads in [1usize, 0, 3] {
+                let params = BlockedParams { threads, ..base };
+                let unpacked = gemm_batched_isa(
+                    &a, &b, batch, m, n, k, &params, isa,
+                );
+                let packed = gemm_batched_ex(
+                    &a,
+                    &b,
+                    batch,
+                    m,
+                    n,
+                    k,
+                    &params,
+                    isa,
+                    Pack::Ab,
+                    &scratch,
+                );
+                assert!(
+                    unpacked == packed,
+                    "{isa} threads={threads} batched pack:ab diverged"
+                );
+            }
+        }
+        // And the workspace covers the take-set.
+        let fresh = Scratch::new();
+        fresh.prewarm(&gemm_batched_workspace(
+            batch,
+            m,
+            n,
+            k,
+            &BlockedParams { threads: 3, ..base },
+            Pack::Ab,
+        ));
+        let grows = fresh.stats().grows;
+        gemm_batched_ex(
+            &a,
+            &b,
+            batch,
+            m,
+            n,
+            k,
+            &BlockedParams { threads: 3, ..base },
+            Isa::Scalar,
+            Pack::Ab,
+            &fresh,
+        );
+        assert_eq!(fresh.stats().grows, grows, "batched call grew arena");
     }
 
     #[test]

@@ -14,12 +14,15 @@
 //! the pool workers (disjoint writes, so bit-identical to serial), and
 //! the lowered GEMM parallelizes over its own macro-tile bands.
 
-use super::blocked::{gemm_blocked_isa, BlockedParams};
+use super::blocked::{
+    gemm_blocked_ex, gemm_workspace, BlockedParams, Pack,
+};
 use super::direct::conv2d_tiled;
-use super::winograd::conv2d_winograd;
+use super::winograd::{conv2d_winograd_ex, conv2d_winograd_workspace};
 use super::Isa;
 use crate::config::{ConvAlgorithm, ConvConfig};
 use crate::util::pool;
+use crate::util::scratch::{Scratch, Workspace};
 
 /// Fully resolved shape of one conv2d execution.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -220,14 +223,31 @@ pub fn im2col_threaded(
     s: &Conv2dShape,
     threads: usize,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
     let kdim = s.window * s.window * s.in_c;
     let rows = s.batch * s.out_h * s.out_w;
     let mut patches = vec![0.0f32; rows * kdim];
+    im2col_into(x, s, threads, &mut patches);
+    patches
+}
+
+/// [`im2col_threaded`] into a caller-supplied buffer (the arena form):
+/// zero-fill, then build patch rows in disjoint parallel chunks — same
+/// values, no allocation.
+fn im2col_into(
+    x: &[f32],
+    s: &Conv2dShape,
+    threads: usize,
+    patches: &mut [f32],
+) {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    let kdim = s.window * s.window * s.in_c;
+    let rows = s.batch * s.out_h * s.out_w;
+    debug_assert_eq!(patches.len(), rows * kdim);
+    patches.fill(0.0);
     let workers = pool::resolve_threads(threads);
     if workers <= 1 || rows <= 1 || kdim == 0 {
-        im2col_rows(x, s, 0, rows, &mut patches);
-        return patches;
+        im2col_rows(x, s, 0, rows, patches);
+        return;
     }
     let chunk_rows = rows.div_ceil(workers);
     let chunks: Vec<(usize, &mut [f32])> = patches
@@ -239,7 +259,6 @@ pub fn im2col_threaded(
         let row1 = (row0 + chunk_rows).min(rows);
         im2col_rows(x, s, row0, row1, chunk);
     });
-    patches
 }
 
 /// Convolution by im2col + blocked GEMM — the native engine's historical
@@ -268,12 +287,49 @@ pub fn conv2d_im2col_isa(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
+    conv2d_im2col_ex(x, f, s, params, isa, Pack::A, &Scratch::new())
+}
+
+/// [`conv2d_im2col_isa`] with the operand-staging [`Pack`] axis for the
+/// lowered GEMM and a caller-owned [`Scratch`] arena for the patch
+/// matrix and every GEMM packing buffer — the conv side of the
+/// zero-allocation hot path.  Bit-identical to [`conv2d_im2col_isa`]
+/// per ISA (`Pack::Ab` runs the packed-B twins, which preserve the
+/// floating-point order).
+pub fn conv2d_im2col_ex(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
     assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
-    let patches = im2col_threaded(x, s, params.threads);
     let m = s.batch * s.out_h * s.out_w;
     let k = s.window * s.window * s.in_c;
+    let mut patches = scratch.take_f32(m * k);
+    im2col_into(x, s, params.threads, &mut patches);
     // Filters are RSCK row-major: already the (K x N) operand.
-    gemm_blocked_isa(&patches, f, m, s.out_c, k, params, isa)
+    let out = gemm_blocked_ex(
+        &patches, f, m, s.out_c, k, params, isa, pack, scratch,
+    );
+    scratch.put_f32(patches);
+    out
+}
+
+/// The worst-case arena take-set of one [`conv2d_im2col_ex`] call: the
+/// patch matrix plus the lowered GEMM's set.
+pub fn conv2d_im2col_workspace(
+    s: &Conv2dShape,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let m = s.batch * s.out_h * s.out_w;
+    let k = s.window * s.window * s.in_c;
+    let mut ws = gemm_workspace(m, s.out_c, k, params, pack);
+    ws.f32_lens.push(m * k);
+    ws
 }
 
 /// Dimensions-only form of [`native_conv_algorithm`], for callers that
@@ -353,19 +409,69 @@ pub fn conv2d_native_isa(
     blocked: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
+    conv2d_native_ex(x, f, s, cfg, blocked, isa, Pack::A, &Scratch::new())
+}
+
+/// [`conv2d_native_isa`] with the [`Pack`] axis and a caller-owned
+/// [`Scratch`] arena — what a `NativeEngine` conv plan executes.  The
+/// pack axis reaches the GEMM-lowered algorithms (im2col's lowered GEMM
+/// and Winograd's transform-domain batched GEMMs); the direct kernels
+/// (tiled/naive) have no GEMM operand to stage, so `pack` is inert
+/// there by construction (mirrored by the sweep's applicability rule).
+/// Bit-identical to [`conv2d_native_isa`] per ISA.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_native_ex(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    cfg: &ConvConfig,
+    blocked: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
     match native_conv_algorithm(cfg, s) {
-        ConvAlgorithm::Im2col => conv2d_im2col_isa(x, f, s, blocked, isa),
-        ConvAlgorithm::Winograd => conv2d_winograd(
+        ConvAlgorithm::Im2col => {
+            conv2d_im2col_ex(x, f, s, blocked, isa, pack, scratch)
+        }
+        ConvAlgorithm::Winograd => conv2d_winograd_ex(
             x,
             f,
             s,
             cfg.wino_m as usize,
             blocked,
             isa,
+            pack,
+            scratch,
         ),
         ConvAlgorithm::Tiled | ConvAlgorithm::Naive => {
             conv2d_tiled(x, f, s, cfg, blocked.threads)
         }
+    }
+}
+
+/// The worst-case arena take-set of one [`conv2d_native_ex`] call,
+/// resolved through [`native_conv_algorithm`] exactly like the dispatch
+/// (so the plan's workspace reflects what will really run).  The direct
+/// kernels keep their small per-worker stack-like buffers outside the
+/// arena — their take-set is empty.
+pub fn conv2d_native_workspace(
+    s: &Conv2dShape,
+    cfg: &ConvConfig,
+    blocked: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    match native_conv_algorithm(cfg, s) {
+        ConvAlgorithm::Im2col => {
+            conv2d_im2col_workspace(s, blocked, pack)
+        }
+        ConvAlgorithm::Winograd => conv2d_winograd_workspace(
+            s,
+            cfg.wino_m as usize,
+            blocked,
+            pack,
+        ),
+        ConvAlgorithm::Tiled | ConvAlgorithm::Naive => Workspace::none(),
     }
 }
 

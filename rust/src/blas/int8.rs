@@ -28,10 +28,13 @@
 //! patch matrix (filled with the input zero-point) contribute exactly
 //! zero, matching the f32 path's zero padding.
 
-use super::blocked::BlockedParams;
+use super::blocked::{
+    apack_len, bpack_len, bpack_panel_slot, BlockedParams, Pack,
+};
 use super::{Conv2dShape, Isa};
 use crate::error::{Error, Result};
 use crate::util::pool;
+use crate::util::scratch::{Scratch, Workspace};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::{
@@ -148,6 +151,15 @@ pub fn quantize_slice(xs: &[f32], q: &QuantParams) -> Vec<i8> {
     xs.iter().map(|&x| q.quantize(x)).collect()
 }
 
+/// [`quantize_slice`] into a caller-supplied buffer (the arena form —
+/// same values, no allocation).  `out.len()` must equal `xs.len()`.
+pub fn quantize_into(xs: &[f32], q: &QuantParams, out: &mut [i8]) {
+    assert_eq!(xs.len(), out.len(), "quantize_into length mismatch");
+    for (o, &x) in out.iter_mut().zip(xs) {
+        *o = q.quantize(x);
+    }
+}
+
 /// Largest `k` the int8 GEMM accepts: the i32 accumulator holds up to
 /// `k · 128²` in magnitude, so `k` beyond this could overflow.  Far
 /// above any registry or im2col-lowered shape in the repo; exceeding it
@@ -214,6 +226,50 @@ macro_rules! int8_micro_kernel_registry {
                 ),
             }
         }
+
+        /// The packed-B twin of `dispatch_micro_kernel_i8` (the
+        /// `pack: ab` axis): `bstrip` is this tile's `kc×nr` strip of
+        /// the packed B panel.  Integer arithmetic is exact, so every
+        /// path — packed or unpacked, any ISA — computes the identical
+        /// i32 result bit for bit.
+        #[allow(clippy::too_many_arguments)]
+        #[inline]
+        fn dispatch_micro_kernel_i8_pb(
+            full: bool,
+            mr: usize,
+            nr: usize,
+            isa: Isa,
+            apack: &[i8],
+            bstrip: &[i8],
+            c: &mut [i32],
+            n: usize,
+            il: usize,
+            ie: usize,
+            j: usize,
+            je: usize,
+            kc: usize,
+        ) {
+            match (full, mr, nr) {
+                $(
+                    (true, $mr, $nr) => match isa {
+                        // SAFETY: as for `dispatch_micro_kernel_i8` —
+                        // the entry point asserted `isa.is_available()`.
+                        #[cfg(target_arch = "x86_64")]
+                        Isa::Avx2 | Isa::Fma | Isa::Avx512 => unsafe {
+                            micro_kernel_i8_avx2_pb::<$mr, $nr>(
+                                apack, bstrip, c, n, il, j, kc,
+                            )
+                        },
+                        _ => micro_kernel_i8_fixed_pb::<$mr, $nr>(
+                            apack, bstrip, c, n, il, j, kc,
+                        ),
+                    },
+                )+
+                _ => micro_kernel_i8_pb(
+                    apack, bstrip, c, n, il, ie, j, je, kc, mr, nr,
+                ),
+            }
+        }
     };
 }
 
@@ -252,6 +308,45 @@ pub fn gemm_i8_blocked_isa(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<i32> {
+    gemm_i8_blocked_ex(a, b, m, n, k, params, isa, Pack::A, &Scratch::new())
+}
+
+/// [`gemm_i8_blocked_isa`] with the operand-staging [`Pack`] axis and a
+/// caller-owned [`Scratch`] arena — the int8 twin of
+/// [`gemm_blocked_ex`](super::gemm_blocked_ex).  `Pack::Ab` packs B
+/// once per call into `nr`-column-interleaved panels shared read-only
+/// across every band; integer arithmetic is exact, so the packed path
+/// is bit-identical (not merely tolerance-equal) for every ISA and
+/// thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_blocked_ex(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<i32> {
+    gemm_i8_validate(a, b, m, n, k, params, isa);
+    let mut c = vec![0i32; m * n];
+    gemm_i8_compute(a, b, &mut c, m, n, k, params, isa, pack, scratch);
+    c
+}
+
+/// The shared int8 entry asserts (shape, params, k bound, ISA
+/// availability) — identical messages to the historical entry point.
+fn gemm_i8_validate(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+) {
     assert_eq!(a.len(), m * k, "A shape mismatch");
     assert_eq!(b.len(), k * n, "B shape mismatch");
     assert!(
@@ -277,40 +372,100 @@ pub fn gemm_i8_blocked_isa(
          degrades unavailable ISAs to scalar",
         Isa::detect()
     );
-    let mut c = vec![0i32; m * n];
+}
+
+/// The int8 band driver (validated inputs, `c` pre-zeroed `m*n`):
+/// stages B per the pack axis, then runs the serial or band-parallel
+/// path — the same structure as the f32 `gemm_into_prepacked`, with
+/// every packing buffer drawn from the arena.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_compute(
+    a: &[i8],
+    b: &[i8],
+    c: &mut [i32],
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) {
+    let bpack = if pack == Pack::Ab && n > 0 && k > 0 {
+        let mut bp = scratch.take_i8(bpack_len(n, k, params));
+        pack_b_i8(b, &mut bp, n, k, params);
+        Some(bp)
+    } else {
+        None
+    };
+    let bpack_ref = bpack.as_deref();
     let bm = params.bm;
     let workers = pool::resolve_threads(params.threads);
     let bands = m.div_ceil(bm);
     if workers <= 1 || bands <= 1 || n == 0 {
-        let mut apack = alloc_apack_i8(params);
+        let mut apack = scratch.take_i8(apack_len(params));
         let mut i0 = 0;
         while i0 < m {
             let i1 = (i0 + bm).min(m);
-            gemm_i8_band(
-                a,
-                b,
-                &mut c[i0 * n..i1 * n],
-                n,
-                k,
-                i0,
-                i1,
-                params,
-                isa,
-                &mut apack,
-            );
+            let cband = &mut c[i0 * n..i1 * n];
+            match bpack_ref {
+                Some(bp) => gemm_i8_band_packed(
+                    a, bp, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+                None => gemm_i8_band(
+                    a, b, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+            }
             i0 = i1;
         }
+        scratch.put_i8(apack);
     } else {
         let row_bands: Vec<(usize, &mut [i32])> =
             c.chunks_mut(bm * n).enumerate().collect();
         pool::run_parallel(workers, row_bands, |_, (band, cband)| {
             let i0 = band * bm;
             let i1 = (i0 + bm).min(m);
-            let mut apack = alloc_apack_i8(params);
-            gemm_i8_band(a, b, cband, n, k, i0, i1, params, isa, &mut apack);
+            let mut apack = scratch.take_i8(apack_len(params));
+            match bpack_ref {
+                Some(bp) => gemm_i8_band_packed(
+                    a, bp, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+                None => gemm_i8_band(
+                    a, b, cband, n, k, i0, i1, params, isa, &mut apack,
+                ),
+            }
+            scratch.put_i8(apack);
         });
     }
-    c
+    if let Some(bp) = bpack {
+        scratch.put_i8(bp);
+    }
+}
+
+/// The worst-case arena take-set of one [`gemm_i8_blocked_ex`] call
+/// (the i8 twin of [`gemm_workspace`](super::gemm_workspace)).
+pub fn gemm_i8_workspace(
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let workers = pool::resolve_threads(params.threads);
+    let bands = m.div_ceil(params.bm.max(1));
+    let napack = if workers <= 1 || bands <= 1 || n == 0 {
+        1
+    } else {
+        workers.min(bands)
+    };
+    let mut ws = Workspace::none();
+    for _ in 0..napack {
+        ws.i8_lens.push(apack_len(params));
+    }
+    if pack == Pack::Ab {
+        ws.i8_lens.push(bpack_len(n, k, params));
+    }
+    ws
 }
 
 /// Quantized GEMM with the dequantize epilogue: multiply the quantized
@@ -335,13 +490,51 @@ pub fn gemm_i8_dequant(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
-    let acc = gemm_i8_blocked_isa(a, b, m, n, k, params, isa);
+    gemm_i8_dequant_ex(
+        a,
+        b,
+        m,
+        n,
+        k,
+        qa,
+        qb,
+        params,
+        isa,
+        Pack::A,
+        &Scratch::new(),
+    )
+}
+
+/// [`gemm_i8_dequant`] with the [`Pack`] axis and a caller-owned
+/// [`Scratch`] arena: the i32 accumulator and the i64 row/column
+/// zero-point correction sums are arena buffers, so a prewarmed
+/// steady-state call allocates only its f32 output.  Bit-identical to
+/// [`gemm_i8_dequant`] (integer stages are exact; the f32 epilogue is
+/// elementwise in the same order).
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_i8_dequant_ex(
+    a: &[i8],
+    b: &[i8],
+    m: usize,
+    n: usize,
+    k: usize,
+    qa: &QuantParams,
+    qb: &QuantParams,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
+    gemm_i8_validate(a, b, m, n, k, params, isa);
+    let mut acc = scratch.take_i32(m * n);
+    gemm_i8_compute(a, b, &mut acc, m, n, k, params, isa, pack, scratch);
     let za = qa.zero_point as i64;
     let zb = qb.zero_point as i64;
-    let row_sums: Vec<i64> = (0..m)
-        .map(|i| a[i * k..(i + 1) * k].iter().map(|&v| v as i64).sum())
-        .collect();
-    let mut col_sums = vec![0i64; n];
+    let mut row_sums = scratch.take_i64(m);
+    for (i, s) in row_sums.iter_mut().enumerate() {
+        *s = a[i * k..(i + 1) * k].iter().map(|&v| v as i64).sum();
+    }
+    let mut col_sums = scratch.take_i64(n);
     for p in 0..k {
         for (j, s) in col_sums.iter_mut().enumerate() {
             *s += b[p * n + j] as i64;
@@ -357,7 +550,27 @@ pub fn gemm_i8_dequant(
             out[i * n + j] = scale * exact as f32;
         }
     }
+    scratch.put_i64(col_sums);
+    scratch.put_i64(row_sums);
+    scratch.put_i32(acc);
     out
+}
+
+/// The worst-case arena take-set of one [`gemm_i8_dequant_ex`] call:
+/// the GEMM stage's buffers plus the i32 accumulator and i64
+/// correction-sum buffers.
+pub fn gemm_i8_dequant_workspace(
+    m: usize,
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let mut ws = gemm_i8_workspace(m, n, k, params, pack);
+    ws.i32_lens.push(m * n);
+    ws.i64_lens.push(m);
+    ws.i64_lens.push(n);
+    ws
 }
 
 /// Quantized im2col convolution: quantize the NHWC input and RSCK
@@ -376,33 +589,91 @@ pub fn conv2d_im2col_i8(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
-    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
-    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
-    let xq = quantize_slice(x, qx);
-    let fq = quantize_slice(f, qf);
-    let patches = im2col_i8_threaded(&xq, s, qx.zero_point, params.threads);
-    let m = s.batch * s.out_h * s.out_w;
-    let k = s.window * s.window * s.in_c;
-    gemm_i8_dequant(&patches, &fq, m, s.out_c, k, qx, qf, params, isa)
+    conv2d_im2col_i8_ex(
+        x,
+        f,
+        s,
+        qx,
+        qf,
+        params,
+        isa,
+        Pack::A,
+        &Scratch::new(),
+    )
 }
 
-/// The quantized twin of `conv::im2col_threaded`: patch rows built in
-/// parallel chunks writing disjoint ranges of a buffer pre-filled with
-/// `pad` (the input zero-point), bit-identical for every thread count.
-fn im2col_i8_threaded(
+/// [`conv2d_im2col_i8`] with the [`Pack`] axis and a caller-owned
+/// [`Scratch`] arena: the quantize staging buffers (`xq`, `fq`), the
+/// quantized patch matrix, and every lowered-GEMM buffer come from the
+/// arena, so a prewarmed steady-state call allocates only its f32
+/// output.  Bit-identical to [`conv2d_im2col_i8`].
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_im2col_i8_ex(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    qx: &QuantParams,
+    qf: &QuantParams,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
+    assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
+    assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
+    let mut xq = scratch.take_i8(x.len());
+    quantize_into(x, qx, &mut xq);
+    let mut fq = scratch.take_i8(f.len());
+    quantize_into(f, qf, &mut fq);
+    let m = s.batch * s.out_h * s.out_w;
+    let k = s.window * s.window * s.in_c;
+    let mut patches = scratch.take_i8(m * k);
+    im2col_i8_into(&xq, s, qx.zero_point, params.threads, &mut patches);
+    let out = gemm_i8_dequant_ex(
+        &patches, &fq, m, s.out_c, k, qx, qf, params, isa, pack, scratch,
+    );
+    scratch.put_i8(patches);
+    scratch.put_i8(fq);
+    scratch.put_i8(xq);
+    out
+}
+
+/// The worst-case arena take-set of one [`conv2d_im2col_i8_ex`] call:
+/// quantize staging + patch matrix + the lowered dequant GEMM's set.
+pub fn conv2d_im2col_i8_workspace(
+    s: &Conv2dShape,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    let m = s.batch * s.out_h * s.out_w;
+    let k = s.window * s.window * s.in_c;
+    let mut ws = gemm_i8_dequant_workspace(m, s.out_c, k, params, pack);
+    ws.i8_lens.push(s.input_elems());
+    ws.i8_lens.push(s.filter_elems());
+    ws.i8_lens.push(m * k);
+    ws
+}
+
+/// The quantized twin of `conv::im2col_threaded`, writing into a
+/// caller-supplied buffer: pre-fill with `pad` (the input zero-point),
+/// then build patch rows in parallel chunks writing disjoint ranges —
+/// bit-identical for every thread count.
+fn im2col_i8_into(
     x: &[i8],
     s: &Conv2dShape,
     pad: i32,
     threads: usize,
-) -> Vec<i8> {
+    patches: &mut [i8],
+) {
     let kdim = s.window * s.window * s.in_c;
     let rows = s.batch * s.out_h * s.out_w;
+    debug_assert_eq!(patches.len(), rows * kdim);
     let pad = pad.clamp(-128, 127) as i8;
-    let mut patches = vec![pad; rows * kdim];
+    patches.fill(pad);
     let workers = pool::resolve_threads(threads);
     if workers <= 1 || rows <= 1 || kdim == 0 {
-        im2col_i8_rows(x, s, 0, rows, &mut patches);
-        return patches;
+        im2col_i8_rows(x, s, 0, rows, patches);
+        return;
     }
     let chunk_rows = rows.div_ceil(workers);
     let chunks: Vec<(usize, &mut [i8])> = patches
@@ -414,7 +685,6 @@ fn im2col_i8_threaded(
         let row1 = (row0 + chunk_rows).min(rows);
         im2col_i8_rows(x, s, row0, row1, chunk);
     });
-    patches
 }
 
 /// Fill rows `[row0, row1)` of the quantized patch matrix (`out` is the
@@ -456,17 +726,6 @@ fn im2col_i8_rows(
     }
 }
 
-/// Packing buffer for one `bm x bk` int8 A macro-panel (the i8 twin of
-/// `blocked::alloc_apack`).
-fn alloc_apack_i8(params: &BlockedParams) -> Vec<i8> {
-    vec![
-        0i8;
-        params.bm.max(params.mr).div_ceil(params.mr)
-            * params.mr
-            * params.bk.max(1)
-    ]
-}
-
 /// One `bm`-row macro-tile band of the int8 GEMM — the exact structure
 /// of `blocked::gemm_band`, over i8 operands and i32 output.
 #[allow(clippy::too_many_arguments)]
@@ -504,6 +763,108 @@ fn gemm_i8_band(
                     j = je;
                 }
                 i = ie;
+            }
+        }
+    }
+}
+
+/// The packed-B twin of [`gemm_i8_band`]: identical loop structure over
+/// the shared packed panels (`pack_b_i8` layout, identical strip
+/// arithmetic to the f32 `gemm_band_packed`) — exact, so bit-identical
+/// to the unpacked band for every ISA.
+#[allow(clippy::too_many_arguments)]
+fn gemm_i8_band_packed(
+    a: &[i8],
+    bpack: &[i8],
+    cband: &mut [i32],
+    n: usize,
+    k: usize,
+    i0: usize,
+    i1: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    apack: &mut [i8],
+) {
+    let &BlockedParams { bn, bk, mr, nr, .. } = params;
+    let jpanels = n.div_ceil(bn.max(1));
+    let slot = bpack_panel_slot(n, params);
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        let kc = p1 - p0;
+        pack_a_i8(a, apack, k, i0, i1, p0, p1, mr);
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            let pbase = ((p0 / bk) * jpanels + j0 / bn) * slot;
+            let mut i = i0;
+            while i < i1 {
+                let ie = (i + mr).min(i1);
+                let strip = ((i - i0) / mr) * (mr * kc);
+                let il = i - i0;
+                let mut j = j0;
+                while j < j1 {
+                    let je = (j + nr).min(j1);
+                    let full = ie - i == mr && je - j == nr;
+                    let boff = pbase + ((j - j0) / nr) * (kc * nr);
+                    dispatch_micro_kernel_i8_pb(
+                        full,
+                        mr,
+                        nr,
+                        isa,
+                        &apack[strip..],
+                        &bpack[boff..],
+                        cband,
+                        n,
+                        il,
+                        il + (ie - i),
+                        j,
+                        je,
+                        kc,
+                    );
+                    j = je;
+                }
+                i = ie;
+            }
+        }
+    }
+}
+
+/// Pack an i8 `B` into BLIS-style panels — the exact layout of the f32
+/// `blocked::pack_b` ([`bpack_len`] sizing, uniform panel slots,
+/// contiguous `nr`-column strips, ragged columns zero-padded and never
+/// read back).
+fn pack_b_i8(
+    b: &[i8],
+    bpack: &mut [i8],
+    n: usize,
+    k: usize,
+    params: &BlockedParams,
+) {
+    let &BlockedParams { bn, bk, nr, .. } = params;
+    let jpanels = n.div_ceil(bn);
+    let slot = bpack_panel_slot(n, params);
+    for p0 in (0..k).step_by(bk) {
+        let p1 = (p0 + bk).min(k);
+        let kc = p1 - p0;
+        for j0 in (0..n).step_by(bn) {
+            let j1 = (j0 + bn).min(n);
+            let base = ((p0 / bk) * jpanels + j0 / bn) * slot;
+            let mut t = 0;
+            let mut j = j0;
+            while j < j1 {
+                let je = (j + nr).min(j1);
+                let off = base + t * (kc * nr);
+                for p in 0..kc {
+                    let row = (p0 + p) * n;
+                    let dst = off + p * nr;
+                    for (s, col) in (j..je).enumerate() {
+                        bpack[dst + s] = b[row + col];
+                    }
+                    for s in (je - j)..nr {
+                        bpack[dst + s] = 0;
+                    }
+                }
+                t += 1;
+                j = je;
             }
         }
     }
@@ -578,6 +939,39 @@ fn micro_kernel_i8_fixed<const MR: usize, const NR: usize>(
     }
 }
 
+/// The packed-B twin of [`micro_kernel_i8_fixed`]: B rows read from the
+/// tile's `kc×NR` packed strip (`bstrip[p*NR + s]`), unit stride.
+/// Exact — bit-identical to the unpacked kernel.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_i8_fixed_pb<const MR: usize, const NR: usize>(
+    apack: &[i8],
+    bstrip: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    let mut acc = [[0i32; NR]; MR];
+    for p in 0..kc {
+        let brow: &[i8] = &bstrip[p * NR..(p + 1) * NR];
+        let astrip = &apack[p * MR..(p + 1) * MR];
+        for r in 0..MR {
+            let aip = astrip[r] as i32;
+            for s in 0..NR {
+                acc[r][s] += aip * brow[s] as i32;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + j + NR];
+        for s in 0..NR {
+            crow[s] += accr[s];
+        }
+    }
+}
+
 /// Generic widening micro-kernel for ragged edges and unregistered
 /// shapes (the i8 twin of `blocked::micro_kernel`; 16×16 accumulator
 /// cap).
@@ -616,6 +1010,45 @@ fn micro_kernel_i8(
         }
     }
     let _ = nw;
+}
+
+/// The packed-B twin of the generic [`micro_kernel_i8`] (ragged edges
+/// and unregistered shapes): reads `je - j` columns from the strip's
+/// `nr`-wide rows.  Exact, so bit-identical to the unpacked generic.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel_i8_pb(
+    apack: &[i8],
+    bstrip: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    ie: usize,
+    j: usize,
+    je: usize,
+    kc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0i32; 16]; 16];
+    let (mh, nw) = (ie - i, je - j);
+    debug_assert!(mh <= 16 && nw <= 16);
+    for p in 0..kc {
+        let brow = &bstrip[p * nr..p * nr + nw];
+        let astrip = &apack[p * mr..p * mr + mh];
+        for (accr, aip) in acc.iter_mut().zip(astrip.iter()) {
+            let aw = *aip as i32;
+            for (s, bv) in brow.iter().enumerate() {
+                accr[s] += aw * *bv as i32;
+            }
+        }
+    }
+    for r in 0..mh {
+        let crow = &mut c[(i + r) * n + j..(i + r) * n + je];
+        for (s, cv) in crow.iter_mut().enumerate() {
+            *cv += acc[r][s];
+        }
+    }
 }
 
 /// AVX2 widening dot-product micro-kernel: k-step *pairs* reduced with
@@ -754,6 +1187,131 @@ unsafe fn micro_kernel_i8_avx2<const MR: usize, const NR: usize>(
         // Off the SIMD lane domain: scalar widening fallback (exact, so
         // still bit-identical).
         micro_kernel_i8_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+    }
+}
+
+/// The packed-B twin of [`micro_kernel_i8_avx2`]: identical madd-pair
+/// structure, but the paired B rows `p` and `p+1` load from consecutive
+/// `NR`-element rows of the packed strip (`bstrip + p*NR` and
+/// `bstrip + (p+1)*NR`) — adjacent in memory, so the interleave feeds
+/// from one or two cache lines instead of two stride-`n` rows.  Exact,
+/// hence bit-identical to every other int8 kernel.
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2.  Slice/layout preconditions are
+/// those of `micro_kernel_i8_fixed_pb`.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn micro_kernel_i8_avx2_pb<const MR: usize, const NR: usize>(
+    apack: &[i8],
+    bstrip: &[i8],
+    c: &mut [i32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    #[inline(always)]
+    fn pair_broadcast_val(a0: i8, a1: i8) -> i32 {
+        ((a0 as i16 as u16 as u32) | ((a1 as i16 as u16 as u32) << 16))
+            as i32
+    }
+    if NR % 8 == 0 {
+        let nv = NR / 8;
+        let mut acc: [[__m256i; 2]; MR] =
+            [[_mm256_setzero_si256(); 2]; MR];
+        let mut p = 0;
+        while p < kc {
+            let pair = p + 1 < kc;
+            let mut bvec = [_mm256_setzero_si256(); 2];
+            for (v, bv) in bvec.iter_mut().take(nv).enumerate() {
+                let bp_ptr = bstrip.as_ptr().add(p * NR + 8 * v);
+                let bp = _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                    bp_ptr as *const __m128i,
+                ));
+                let bq = if pair {
+                    let bq_ptr =
+                        bstrip.as_ptr().add((p + 1) * NR + 8 * v);
+                    _mm_cvtepi8_epi16(_mm_loadl_epi64(
+                        bq_ptr as *const __m128i,
+                    ))
+                } else {
+                    _mm_setzero_si128()
+                };
+                let lo = _mm_unpacklo_epi16(bp, bq);
+                let hi = _mm_unpackhi_epi16(bp, bq);
+                *bv = _mm256_set_m128i(hi, lo);
+            }
+            let astrip = apack.as_ptr().add(p * MR);
+            let astrip2 = apack.as_ptr().add((p + 1) * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let a0 = *astrip.add(r);
+                let a1 = if pair { *astrip2.add(r) } else { 0 };
+                let av = _mm256_set1_epi32(pair_broadcast_val(a0, a1));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm256_add_epi32(
+                        *a,
+                        _mm256_madd_epi16(av, bvec[v]),
+                    );
+                }
+            }
+            p += 2;
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let cp = crow.add(8 * v) as *mut __m256i;
+                let sum = _mm256_add_epi32(_mm256_loadu_si256(cp), *a);
+                _mm256_storeu_si256(cp, sum);
+            }
+        }
+    } else if NR % 4 == 0 {
+        let nv = NR / 4;
+        let mut acc: [[__m128i; 4]; MR] = [[_mm_setzero_si128(); 4]; MR];
+        let mut p = 0;
+        while p < kc {
+            let pair = p + 1 < kc;
+            let mut bvec = [_mm_setzero_si128(); 4];
+            for (v, bv) in bvec.iter_mut().take(nv).enumerate() {
+                let bp_ptr = bstrip.as_ptr().add(p * NR + 4 * v);
+                let bp = _mm_cvtepi8_epi16(_mm_cvtsi32_si128(
+                    (bp_ptr as *const i32).read_unaligned(),
+                ));
+                let bq = if pair {
+                    let bq_ptr =
+                        bstrip.as_ptr().add((p + 1) * NR + 4 * v);
+                    _mm_cvtepi8_epi16(_mm_cvtsi32_si128(
+                        (bq_ptr as *const i32).read_unaligned(),
+                    ))
+                } else {
+                    _mm_setzero_si128()
+                };
+                *bv = _mm_unpacklo_epi16(bp, bq);
+            }
+            let astrip = apack.as_ptr().add(p * MR);
+            let astrip2 = apack.as_ptr().add((p + 1) * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let a0 = *astrip.add(r);
+                let a1 = if pair { *astrip2.add(r) } else { 0 };
+                let av = _mm_set1_epi32(pair_broadcast_val(a0, a1));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm_add_epi32(*a, _mm_madd_epi16(av, bvec[v]));
+                }
+            }
+            p += 2;
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let cp = crow.add(4 * v) as *mut __m128i;
+                let sum = _mm_add_epi32(_mm_loadu_si128(cp), *a);
+                _mm_storeu_si128(cp, sum);
+            }
+        }
+    } else {
+        micro_kernel_i8_fixed_pb::<MR, NR>(apack, bstrip, c, n, i, j, kc);
     }
 }
 
@@ -976,6 +1534,127 @@ mod tests {
                 conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &p, Isa::Scalar);
             assert!(serial == par, "threads={threads} diverged");
         }
+    }
+
+    #[test]
+    fn packed_b_i8_bit_exact_vs_unpacked() {
+        // pack:ab on the int8 stack: integer arithmetic is exact, so the
+        // packed path must be bit-identical on every shape (including
+        // ragged and degenerate-ish), registry and off-registry tiles,
+        // every detected ISA, serial and threaded.
+        let scratch = Scratch::new();
+        for &(m, n, k) in &[
+            (1usize, 1usize, 1usize),
+            (17, 13, 9),
+            (37, 29, 23),
+            (53, 31, 19),
+        ] {
+            let a = rand_i8(m * k, 41);
+            let b = rand_i8(k * n, 42);
+            for &(mr, nr) in &[(2usize, 4usize), (4, 8), (8, 16), (3, 5)] {
+                for threads in [1usize, 0, 3] {
+                    let params = BlockedParams {
+                        bm: 16,
+                        bn: 16,
+                        bk: 8,
+                        mr,
+                        nr,
+                        threads,
+                    };
+                    for isa in Isa::detect() {
+                        let unpacked = gemm_i8_blocked_isa(
+                            &a, &b, m, n, k, &params, isa,
+                        );
+                        let packed = gemm_i8_blocked_ex(
+                            &a, &b, m, n, k, &params, isa, Pack::Ab,
+                            &scratch,
+                        );
+                        assert!(
+                            unpacked == packed,
+                            "{m}x{n}x{k} ({mr},{nr}) t{threads} {isa}: \
+                             i8 pack:ab not bit-exact"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_and_conv_ex_bit_identical_and_allocation_free() {
+        // The _ex entry points must be bit-identical to the historical
+        // ones under both pack settings, and a prewarmed arena must
+        // absorb the whole per-call take-set (zero growth).
+        let s = Conv2dShape::same(2, 7, 6, 3, 4, 3, 1);
+        let mut rng = XorShift::new(77);
+        let x = rng.f32_vec(s.input_elems());
+        let f = rng.f32_vec(s.filter_elems());
+        let qx = QuantParams::for_data(&x);
+        let qf = QuantParams::for_data(&f);
+        let params =
+            BlockedParams { bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 3 };
+        let baseline =
+            conv2d_im2col_i8(&x, &f, &s, &qx, &qf, &params, Isa::Scalar);
+        for pack in Pack::all() {
+            let scratch = Scratch::new();
+            scratch.prewarm(&conv2d_im2col_i8_workspace(&s, &params, pack));
+            let grows = scratch.stats().grows;
+            for _ in 0..3 {
+                let got = conv2d_im2col_i8_ex(
+                    &x,
+                    &f,
+                    &s,
+                    &qx,
+                    &qf,
+                    &params,
+                    Isa::Scalar,
+                    pack,
+                    &scratch,
+                );
+                assert!(got == baseline, "conv _ex diverged ({pack})");
+            }
+            assert_eq!(
+                scratch.stats().grows,
+                grows,
+                "steady-state conv grew the arena ({pack})"
+            );
+        }
+        // Dequant GEMM: same contract on a raw quantized problem.
+        let (m, n, k) = (24, 18, 31);
+        let a = rand_i8(m * k, 51);
+        let b = rand_i8(k * n, 52);
+        let base = gemm_i8_dequant(&a, &b, m, n, k, &qx, &qf, &params,
+            Isa::Scalar);
+        let scratch = Scratch::new();
+        scratch.prewarm(&gemm_i8_dequant_workspace(
+            m, n, k, &params, Pack::Ab,
+        ));
+        let grows = scratch.stats().grows;
+        let got = gemm_i8_dequant_ex(
+            &a,
+            &b,
+            m,
+            n,
+            k,
+            &qx,
+            &qf,
+            &params,
+            Isa::Scalar,
+            Pack::Ab,
+            &scratch,
+        );
+        assert!(got == base, "dequant _ex diverged");
+        assert_eq!(scratch.stats().grows, grows, "dequant grew the arena");
+    }
+
+    #[test]
+    fn quantize_into_matches_quantize_slice() {
+        let mut rng = XorShift::new(19);
+        let xs = rng.f32_vec(37);
+        let q = QuantParams::for_data(&xs);
+        let mut out = vec![0i8; xs.len()];
+        quantize_into(&xs, &q, &mut out);
+        assert_eq!(out, quantize_slice(&xs, &q));
     }
 
     #[test]

@@ -40,25 +40,29 @@ mod simd;
 mod winograd;
 
 pub use blocked::{
-    gemm_batched_isa, gemm_blocked, gemm_blocked_isa, BlockedParams,
-    MICRO_KERNEL_SHAPES,
+    gemm_batched_ex, gemm_batched_isa, gemm_batched_workspace,
+    gemm_blocked, gemm_blocked_ex, gemm_blocked_isa, gemm_workspace,
+    BlockedParams, Pack, MICRO_KERNEL_SHAPES,
 };
 pub use int8::{
-    conv2d_im2col_i8, gemm_i8_blocked_isa, gemm_i8_dequant,
-    quantize_slice, Dtype, QuantParams, INT8_MICRO_KERNEL_SHAPES,
-    MAX_I8_GEMM_K,
+    conv2d_im2col_i8, conv2d_im2col_i8_ex, conv2d_im2col_i8_workspace,
+    gemm_i8_blocked_ex, gemm_i8_blocked_isa, gemm_i8_dequant,
+    gemm_i8_dequant_ex, gemm_i8_dequant_workspace, gemm_i8_workspace,
+    quantize_into, quantize_slice, Dtype, QuantParams,
+    INT8_MICRO_KERNEL_SHAPES, MAX_I8_GEMM_K,
 };
 pub use isa::Isa;
 pub use conv::{
-    conv2d_direct, conv2d_im2col, conv2d_im2col_isa, conv2d_native,
-    conv2d_native_isa, im2col, im2col_threaded, native_conv_algorithm,
-    native_conv_algorithm_dims, Conv2dShape,
+    conv2d_direct, conv2d_im2col, conv2d_im2col_ex, conv2d_im2col_isa,
+    conv2d_im2col_workspace, conv2d_native, conv2d_native_ex,
+    conv2d_native_isa, conv2d_native_workspace, im2col, im2col_threaded,
+    native_conv_algorithm, native_conv_algorithm_dims, Conv2dShape,
 };
 pub use direct::conv2d_tiled;
 pub use naive::gemm_naive;
 pub use winograd::{
-    conv2d_winograd, scatter_input, transform_filters, winograd_supports,
-    winograd_tiles,
+    conv2d_winograd, conv2d_winograd_ex, conv2d_winograd_workspace,
+    scatter_input, transform_filters, winograd_supports, winograd_tiles,
 };
 
 /// Max |a - b| over two equal-length slices (test helper).

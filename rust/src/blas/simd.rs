@@ -19,7 +19,7 @@
 //! plan layer additionally degrades unavailable ISAs to scalar before
 //! execution, so the assert is a backstop, not the primary guard.
 
-use super::blocked::micro_kernel_fixed;
+use super::blocked::{micro_kernel_fixed, micro_kernel_fixed_pb};
 
 #[cfg(target_arch = "x86_64")]
 use std::arch::x86_64::{
@@ -152,5 +152,134 @@ pub(crate) unsafe fn micro_kernel_fma<const MR: usize, const NR: usize>(
     } else {
         // Off the FMA lane domain: scalar bit-fallback.
         micro_kernel_fixed::<MR, NR>(apack, b, c, n, i, j, p0, p1);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Packed-B twins (the `pack: ab` axis).  Each variant mirrors its
+// unpacked sibling exactly — the only change is where the B row for
+// depth `p` lives: `bstrip[p * NR ..]` (unit stride through the packed
+// panel strip) instead of `b[(p0 + p) * n + j ..]`.  Same values, same
+// floating-point order, so SSE2/AVX2 stay bit-identical to scalar and
+// FMA keeps its fused-rounding tolerance contract.
+// ---------------------------------------------------------------------
+
+/// Packed-B twin of [`micro_kernel_sse2`]: the scalar packed kernel
+/// body compiled with SSE2 enabled.  Bit-identical by construction.
+///
+/// # Safety
+///
+/// The executing CPU must support SSE2; slice/layout preconditions are
+/// those of `micro_kernel_fixed_pb`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "sse2")]
+pub(crate) unsafe fn micro_kernel_sse2_pb<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    micro_kernel_fixed_pb::<MR, NR>(apack, bstrip, c, n, i, j, kc);
+}
+
+/// Packed-B twin of [`micro_kernel_avx2`]: the scalar packed kernel
+/// body compiled with AVX2 enabled.  Bit-identical by construction.
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2; slice/layout preconditions are
+/// those of `micro_kernel_fixed_pb`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(crate) unsafe fn micro_kernel_avx2_pb<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    micro_kernel_fixed_pb::<MR, NR>(apack, bstrip, c, n, i, j, kc);
+}
+
+/// Packed-B twin of [`micro_kernel_fma`]: identical lane structure and
+/// k-loop order, but B rows load from the packed strip
+/// (`bstrip + p * NR`) with unit stride — this is the kernel where
+/// packing pays, since every `_mm256_loadu_ps` now hits consecutive
+/// cache lines.  Agrees with the scalar packed kernel within the same
+/// `~k * 1e-7` fused-rounding tolerance as the unpacked FMA kernel, and
+/// is bit-identical to the *unpacked* FMA kernel (same fused op order,
+/// same values).
+///
+/// # Safety
+///
+/// The executing CPU must support AVX2 + FMA; slice/layout
+/// preconditions are those of `micro_kernel_fixed_pb`.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2,fma")]
+pub(crate) unsafe fn micro_kernel_fma_pb<const MR: usize, const NR: usize>(
+    apack: &[f32],
+    bstrip: &[f32],
+    c: &mut [f32],
+    n: usize,
+    i: usize,
+    j: usize,
+    kc: usize,
+) {
+    if NR % 8 == 0 {
+        let nv = NR / 8;
+        let mut acc: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+        for p in 0..kc {
+            let brow = bstrip.as_ptr().add(p * NR);
+            let astrip = apack.as_ptr().add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*astrip.add(r));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm256_fmadd_ps(
+                        av,
+                        _mm256_loadu_ps(brow.add(8 * v)),
+                        *a,
+                    );
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let sum =
+                    _mm256_add_ps(_mm256_loadu_ps(crow.add(8 * v)), *a);
+                _mm256_storeu_ps(crow.add(8 * v), sum);
+            }
+        }
+    } else if NR % 4 == 0 {
+        let nv = NR / 4;
+        let mut acc: [[__m128; 4]; MR] = [[_mm_setzero_ps(); 4]; MR];
+        for p in 0..kc {
+            let brow = bstrip.as_ptr().add(p * NR);
+            let astrip = apack.as_ptr().add(p * MR);
+            for (r, accr) in acc.iter_mut().enumerate() {
+                let av = _mm_set1_ps(*astrip.add(r));
+                for (v, a) in accr.iter_mut().take(nv).enumerate() {
+                    *a = _mm_fmadd_ps(
+                        av,
+                        _mm_loadu_ps(brow.add(4 * v)),
+                        *a,
+                    );
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate() {
+            let crow = c.as_mut_ptr().add((i + r) * n + j);
+            for (v, a) in accr.iter().take(nv).enumerate() {
+                let sum = _mm_add_ps(_mm_loadu_ps(crow.add(4 * v)), *a);
+                _mm_storeu_ps(crow.add(4 * v), sum);
+            }
+        }
+    } else {
+        micro_kernel_fixed_pb::<MR, NR>(apack, bstrip, c, n, i, j, kc);
     }
 }

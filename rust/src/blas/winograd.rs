@@ -31,10 +31,13 @@
 //! im2col/direct — it is a different factorization — but agrees within
 //! the per-`wino_m` bounds pinned in `tests/proptests.rs`.
 
-use super::blocked::{gemm_batched_isa, BlockedParams};
+use super::blocked::{
+    gemm_batched_into, gemm_batched_workspace, BlockedParams, Pack,
+};
 use super::conv::Conv2dShape;
 use super::Isa;
 use crate::util::pool;
+use crate::util::scratch::{Scratch, Workspace};
 
 /// Whether the native Winograd kernel can compute this shape:
 /// F(m×m, 3×3) covers 3×3 windows at stride 1 (any padding).  Delegates
@@ -170,26 +173,37 @@ pub fn winograd_tiles(s: &Conv2dShape, m: usize) -> (usize, usize) {
 /// layout in, position-major out).  Each `U[pos]` slice is the
 /// row-major `in_c × out_c` right-hand operand of that position's GEMM.
 pub fn transform_filters(f: &[f32], s: &Conv2dShape, m: usize) -> Vec<f32> {
+    let t = m + 2;
+    let mut u = vec![0.0f32; t * t * s.in_c * s.out_c];
+    transform_filters_into(f, s, m, &mut u);
+    u
+}
+
+/// [`transform_filters`] writing into a caller (arena) buffer of length
+/// `(m+2)² * in_c * out_c`.  Every element is overwritten, so the
+/// buffer's prior contents are irrelevant.
+fn transform_filters_into(f: &[f32], s: &Conv2dShape, m: usize, u: &mut [f32]) {
     let (g_mat, _, _) = tables(m);
     let t = m + 2;
     let (ci, co) = (s.in_c, s.out_c);
-    let mut u = vec![0.0f32; t * t * ci * co];
+    debug_assert_eq!(u.len(), t * t * ci * co);
+    // t ≤ 6, so the congruence temps fit fixed stack arrays sliced to
+    // size — no per-call allocation.
     let mut g = [0.0f32; 9];
-    let mut tmp = vec![0.0f32; t * 3];
-    let mut ut = vec![0.0f32; t * t];
+    let mut tmp = [0.0f32; 18]; // t * 3
+    let mut ut = [0.0f32; 36]; // t * t
     for c in 0..ci {
         for k in 0..co {
             for (tap, gv) in g.iter_mut().enumerate() {
                 // f is RSCK: tap = r * 3 + sw.
                 *gv = f[(tap * ci + c) * co + k];
             }
-            congruence(g_mat, t, 3, &g, &mut tmp, &mut ut);
-            for (pos, uv) in ut.iter().enumerate() {
+            congruence(g_mat, t, 3, &g, &mut tmp[..t * 3], &mut ut[..t * t]);
+            for (pos, uv) in ut[..t * t].iter().enumerate() {
                 u[pos * ci * co + c * co + k] = *uv;
             }
         }
     }
-    u
 }
 
 /// Scatter the input into the transform domain: `V[pos][tile * in_c +
@@ -199,15 +213,30 @@ pub fn transform_filters(f: &[f32], s: &Conv2dShape, m: usize) -> Vec<f32> {
 /// VALID zero padding).  Each `V[pos]` slice is the row-major
 /// `tiles × in_c` left-hand operand of that position's GEMM.
 pub fn scatter_input(x: &[f32], s: &Conv2dShape, m: usize) -> Vec<f32> {
+    let t = m + 2;
+    let (tiles_h, tiles_w) = winograd_tiles(s, m);
+    let tiles = s.batch * tiles_h * tiles_w;
+    let mut v = vec![0.0f32; t * t * tiles * s.in_c];
+    scatter_input_into(x, s, m, &mut v);
+    v
+}
+
+/// [`scatter_input`] writing into a caller (arena) buffer of length
+/// `(m+2)² * tiles * in_c`.  Every element is overwritten (out-of-bounds
+/// taps contribute explicit zeros), so the buffer's prior contents are
+/// irrelevant.
+fn scatter_input_into(x: &[f32], s: &Conv2dShape, m: usize, v: &mut [f32]) {
     let (_, bt, _) = tables(m);
     let t = m + 2;
     let ci = s.in_c;
     let (tiles_h, tiles_w) = winograd_tiles(s, m);
     let tiles = s.batch * tiles_h * tiles_w;
-    let mut v = vec![0.0f32; t * t * tiles * ci];
-    let mut d = vec![0.0f32; t * t];
-    let mut tmp = vec![0.0f32; t * t];
-    let mut vt = vec![0.0f32; t * t];
+    debug_assert_eq!(v.len(), t * t * tiles * ci);
+    let mut d = [0.0f32; 36]; // t * t, t ≤ 6
+    let mut tmp = [0.0f32; 36];
+    let mut vt = [0.0f32; 36];
+    let (d, tmp, vt) =
+        (&mut d[..t * t], &mut tmp[..t * t], &mut vt[..t * t]);
     for b in 0..s.batch {
         for ty in 0..tiles_h {
             let ih0 = (m * ty) as isize - s.pad_top as isize;
@@ -233,7 +262,7 @@ pub fn scatter_input(x: &[f32], s: &Conv2dShape, m: usize) -> Vec<f32> {
                             };
                         }
                     }
-                    congruence(bt, t, t, &d, &mut tmp, &mut vt);
+                    congruence(bt, t, t, d, tmp, vt);
                     for (pos, vv) in vt.iter().enumerate() {
                         v[pos * tiles * ci + tile * ci + c] = *vv;
                     }
@@ -241,7 +270,6 @@ pub fn scatter_input(x: &[f32], s: &Conv2dShape, m: usize) -> Vec<f32> {
             }
         }
     }
-    v
 }
 
 /// Gather one `(batch, tile-row)` band: inverse-transform the
@@ -317,6 +345,27 @@ pub fn conv2d_winograd(
     params: &BlockedParams,
     isa: Isa,
 ) -> Vec<f32> {
+    conv2d_winograd_ex(x, f, s, wino_m, params, isa, Pack::A, &Scratch::new())
+}
+
+/// [`conv2d_winograd`] with the plan's packing strategy and workspace
+/// arena.  `Pack::Ab` packs each transform position's `U` panel once
+/// per call and reuses it across that position's GEMM row bands; the
+/// `U`/`V`/`M` transform matrices and all GEMM packing buffers check
+/// out of `scratch`, so a prewarmed arena makes the call
+/// allocation-free.  Bit-identical to [`conv2d_winograd`] for every
+/// `pack` (the packed micro-kernels preserve accumulation order).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_winograd_ex(
+    x: &[f32],
+    f: &[f32],
+    s: &Conv2dShape,
+    wino_m: usize,
+    params: &BlockedParams,
+    isa: Isa,
+    pack: Pack,
+    scratch: &Scratch,
+) -> Vec<f32> {
     assert_eq!(x.len(), s.input_elems(), "input shape mismatch");
     assert_eq!(f.len(), s.filter_elems(), "filter shape mismatch");
     assert!(
@@ -334,12 +383,21 @@ pub fn conv2d_winograd(
 
     // Scatter + filter transform, then the (m+2)² batched GEMMs
     // M[pos] (tiles × co) = V[pos] (tiles × ci) @ U[pos] (ci × co).
-    let u = transform_filters(f, s, wino_m);
-    let v = scatter_input(x, s, wino_m);
+    // U/V/M live in the arena; the _into transforms overwrite every
+    // element, and take_f32 hands back zeroed storage so mmat satisfies
+    // gemm_batched_into's pre-zeroed-output contract.
     let (tiles_h, tiles_w) = winograd_tiles(s, wino_m);
     let tiles = s.batch * tiles_h * tiles_w;
-    let mmat = gemm_batched_isa(&v, &u, t * t, tiles, co, ci, params, isa);
-    drop(v);
+    let mut u = scratch.take_f32(t * t * ci * co);
+    transform_filters_into(f, s, wino_m, &mut u);
+    let mut v = scratch.take_f32(t * t * tiles * ci);
+    scatter_input_into(x, s, wino_m, &mut v);
+    let mut mmat = scratch.take_f32(t * t * tiles * co);
+    gemm_batched_into(
+        &v, &u, &mut mmat, t * t, tiles, co, ci, params, isa, pack, scratch,
+    );
+    scratch.put_f32(v);
+    scratch.put_f32(u);
 
     // Gather: one disjoint output slice per (batch, tile-row) band.
     // Bands are `wino_m` output rows except the last of each batch when
@@ -360,29 +418,81 @@ pub fn conv2d_winograd(
         debug_assert!(rest.is_empty());
     }
 
+    // Per-band congruence temps are fixed stack arrays sliced to size
+    // (t ≤ 6), so the gather allocates nothing on either path.
     let workers = pool::resolve_threads(params.threads);
     if workers <= 1 || bands.len() <= 1 {
-        let mut mtile = vec![0.0f32; t * t];
-        let mut tmp = vec![0.0f32; wino_m * t];
-        let mut ytile = vec![0.0f32; wino_m * wino_m];
+        let mut mtile = [0.0f32; 36]; // t * t
+        let mut tmp = [0.0f32; 24]; // wino_m * t
+        let mut ytile = [0.0f32; 16]; // wino_m * wino_m
         for (b, ty, r0, band) in bands {
             gather_band(
-                &mmat, s, wino_m, tiles_h, tiles_w, b, ty, r0, band,
-                &mut mtile, &mut tmp, &mut ytile,
+                &mmat,
+                s,
+                wino_m,
+                tiles_h,
+                tiles_w,
+                b,
+                ty,
+                r0,
+                band,
+                &mut mtile[..t * t],
+                &mut tmp[..wino_m * t],
+                &mut ytile[..wino_m * wino_m],
             );
         }
     } else {
         pool::run_parallel(workers, bands, |_, (b, ty, r0, band)| {
-            let mut mtile = vec![0.0f32; t * t];
-            let mut tmp = vec![0.0f32; wino_m * t];
-            let mut ytile = vec![0.0f32; wino_m * wino_m];
+            let mut mtile = [0.0f32; 36];
+            let mut tmp = [0.0f32; 24];
+            let mut ytile = [0.0f32; 16];
             gather_band(
-                &mmat, s, wino_m, tiles_h, tiles_w, b, ty, r0, band,
-                &mut mtile, &mut tmp, &mut ytile,
+                &mmat,
+                s,
+                wino_m,
+                tiles_h,
+                tiles_w,
+                b,
+                ty,
+                r0,
+                band,
+                &mut mtile[..t * t],
+                &mut tmp[..wino_m * t],
+                &mut ytile[..wino_m * wino_m],
             );
         });
     }
+    scratch.put_f32(mmat);
     out
+}
+
+/// Worst-case arena demand of one [`conv2d_winograd_ex`] call: the
+/// batched transform-domain GEMM's workspace plus the `U`/`V`/`M`
+/// transform matrices.  [`Workspace::none`] for shapes or tile sizes
+/// the kernel cannot compute (callers resolve fallback through
+/// [`native_conv_algorithm`](super::native_conv_algorithm) before
+/// sizing) and for degenerate shapes that return early.
+pub fn conv2d_winograd_workspace(
+    s: &Conv2dShape,
+    wino_m: usize,
+    params: &BlockedParams,
+    pack: Pack,
+) -> Workspace {
+    if !winograd_supports(s) || !matches!(wino_m, 2 | 4) {
+        return Workspace::none();
+    }
+    let (ci, co) = (s.in_c, s.out_c);
+    if s.output_elems() == 0 || ci == 0 {
+        return Workspace::none();
+    }
+    let t = wino_m + 2;
+    let (tiles_h, tiles_w) = winograd_tiles(s, wino_m);
+    let tiles = s.batch * tiles_h * tiles_w;
+    let mut ws = gemm_batched_workspace(t * t, tiles, co, ci, params, pack);
+    ws.f32_lens.push(t * t * ci * co); // U
+    ws.f32_lens.push(t * t * tiles * ci); // V
+    ws.f32_lens.push(t * t * tiles * co); // M
+    ws
 }
 
 #[cfg(test)]
@@ -585,5 +695,83 @@ mod tests {
             let tol = if m == 2 { 1e-4 } else { 1e-3 };
             assert!(max_abs_diff(&out, &x) < tol, "m={m}");
         }
+    }
+
+    #[test]
+    fn packed_b_is_bit_identical_across_isas_and_threads() {
+        // Pack::Ab must not perturb a single bit relative to Pack::A on
+        // any detected ISA (including FMA: packed-FMA mirrors
+        // unpacked-FMA's fused order) or thread count — the transform
+        // GEMMs' packed micro-kernels preserve accumulation order.
+        for &(b, h, w, c, k) in
+            &[(2usize, 9usize, 7usize, 3usize, 4usize), (1, 4, 4, 5, 2)]
+        {
+            let s = Conv2dShape::same(b, h, w, c, k, 3, 1);
+            let x = rand(s.input_elems(), 41);
+            let f = rand(s.filter_elems(), 42);
+            let params =
+                BlockedParams { bm: 8, bn: 8, bk: 4, mr: 2, nr: 4, threads: 1 };
+            for m in [2usize, 4] {
+                for isa in Isa::detect() {
+                    for threads in [1usize, 0, 3] {
+                        let p = BlockedParams { threads, ..params };
+                        let scratch = Scratch::new();
+                        let unpacked = conv2d_winograd_ex(
+                            &x, &f, &s, m, &p, isa, Pack::A, &scratch,
+                        );
+                        let packed = conv2d_winograd_ex(
+                            &x, &f, &s, m, &p, isa, Pack::Ab, &scratch,
+                        );
+                        assert!(
+                            unpacked == packed,
+                            "m={m} {isa} threads={threads} pack diverged"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_prewarm_makes_calls_allocation_free() {
+        let s = Conv2dShape::same(2, 9, 7, 3, 4, 3, 1);
+        let x = rand(s.input_elems(), 51);
+        let f = rand(s.filter_elems(), 52);
+        let params =
+            BlockedParams { bm: 8, bn: 8, bk: 4, mr: 2, nr: 4, threads: 3 };
+        for m in [2usize, 4] {
+            for pack in Pack::all() {
+                let ws = conv2d_winograd_workspace(&s, m, &params, pack);
+                assert!(ws.bytes() > 0, "m={m} {pack} sized an empty workspace");
+                let scratch = Scratch::new();
+                scratch.prewarm(&ws);
+                let grows_before = scratch.stats().grows;
+                for _ in 0..3 {
+                    let _ = conv2d_winograd_ex(
+                        &x, &f, &s, m, &params, Isa::Scalar, pack, &scratch,
+                    );
+                }
+                assert_eq!(
+                    scratch.stats().grows,
+                    grows_before,
+                    "m={m} {pack}: prewarmed arena still grew"
+                );
+            }
+        }
+        // Degenerate and unsupported shapes size to none.
+        let empty = Conv2dShape::same(0, 9, 7, 3, 4, 3, 1);
+        assert_eq!(
+            conv2d_winograd_workspace(&empty, 2, &params, Pack::Ab).bytes(),
+            0
+        );
+        let strided = Conv2dShape::same(1, 8, 8, 2, 2, 3, 2);
+        assert_eq!(
+            conv2d_winograd_workspace(&strided, 2, &params, Pack::Ab).bytes(),
+            0
+        );
+        assert_eq!(
+            conv2d_winograd_workspace(&s, 3, &params, Pack::Ab).bytes(),
+            0
+        );
     }
 }

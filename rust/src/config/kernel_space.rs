@@ -30,9 +30,13 @@
 //! The precision axis ([`Dtype`]) repeats the trick: `i8` points run the
 //! quantized widening-kernel family (`blas::int8`) under the same
 //! blocking/threads/ISA knobs, with DB entries written before the axis
-//! existed decoding as `f32`.
+//! existed decoding as `f32`.  The packing axis ([`Pack`]) repeats it
+//! again: `ab` points run the packed-B micro-kernel variants
+//! (`nr`-interleaved B panels packed once per k-panel, reused across
+//! row bands) on both measured spaces, with pre-axis entries decoding
+//! as `a` — the unpacked kernels they were measured with.
 
-use crate::blas::{native_conv_algorithm_dims, BlockedParams, Dtype, Isa};
+use crate::blas::{native_conv_algorithm_dims, BlockedParams, Dtype, Isa, Pack};
 use crate::error::{Error, Result};
 use crate::util::json::Value;
 
@@ -199,6 +203,17 @@ pub(crate) fn decode_dtype(v: &Value) -> Result<Dtype> {
     }
 }
 
+/// Decode the `pack` field of an encoded point; absent (a point written
+/// before the packing axis existed) means [`Pack::A`] — the
+/// unpacked-B kernels those DBs were measured with, so pre-axis
+/// entries keep planning identically.
+pub(crate) fn decode_pack(v: &Value) -> Result<Pack> {
+    match v.get("pack").and_then(|x| x.as_str()) {
+        Some(s) => s.parse::<Pack>(),
+        None => Ok(Pack::A),
+    }
+}
+
 fn validate_blocked(p: &BlockedParams) -> Result<()> {
     if p.bm == 0 || p.bn == 0 || p.bk == 0 || p.mr == 0 || p.nr == 0 {
         return Err(Error::Json(format!(
@@ -269,6 +284,11 @@ pub struct GemmPoint {
     pub isa: Isa,
     /// Micro-kernel element type (f32 or quantized int8).
     pub dtype: Dtype,
+    /// Operand packing strategy: `a` packs A bands only (the
+    /// historical kernel), `ab` additionally packs B into
+    /// `nr`-interleaved panels reused across row bands.  Points
+    /// written before the axis existed decode as `a`.
+    pub pack: Pack,
 }
 
 impl Default for GemmPoint {
@@ -277,21 +297,28 @@ impl Default for GemmPoint {
             params: BlockedParams::default(),
             isa: Isa::Scalar,
             dtype: Dtype::F32,
+            pack: Pack::A,
         }
     }
 }
 
 impl GemmPoint {
-    /// A scalar-ISA f32 point over the given blocking (what every
-    /// legacy `BlockedParams` API migrates to).
+    /// A scalar-ISA f32 unpacked-B point over the given blocking (what
+    /// every legacy `BlockedParams` API migrates to).
     pub fn scalar(params: BlockedParams) -> Self {
-        Self { params, isa: Isa::Scalar, dtype: Dtype::F32 }
+        Self { params, isa: Isa::Scalar, dtype: Dtype::F32, pack: Pack::A }
     }
 
-    /// Compact name: the blocking name plus the ISA and dtype suffixes
-    /// (`bm64bn64bk64_4x8_t0_avx2_i8` style).
+    /// Compact name: the blocking name plus the ISA, dtype, and pack
+    /// suffixes (`bm64bn64bk64_4x8_t0_avx2_i8_ab` style).
     pub fn name(&self) -> String {
-        format!("{}_{}_{}", self.params.name(), self.isa, self.dtype)
+        format!(
+            "{}_{}_{}_{}",
+            self.params.name(),
+            self.isa,
+            self.dtype,
+            self.pack
+        )
     }
 
     /// The point this plan can actually execute on the current host:
@@ -313,7 +340,7 @@ impl KernelSpace for GemmPoint {
     const LEGACY_KINDS: &'static [&'static str] = &["blocked"];
 
     fn axes() -> &'static [&'static str] {
-        &["bm", "bn", "bk", "mr", "nr", "threads", "isa", "dtype"]
+        &["bm", "bn", "bk", "mr", "nr", "threads", "isa", "dtype", "pack"]
     }
 
     fn default_point() -> Self {
@@ -331,7 +358,8 @@ impl KernelSpace for GemmPoint {
     fn to_json(&self) -> Value {
         let mut o = blocked_to_json(&self.params);
         o.set("isa", self.isa.as_str())
-            .set("dtype", self.dtype.as_str());
+            .set("dtype", self.dtype.as_str())
+            .set("pack", self.pack.as_str());
         o
     }
 
@@ -347,6 +375,8 @@ impl KernelSpace for GemmPoint {
             // Absent dtype (a point written before the precision axis
             // existed) means f32, so pre-axis DBs plan identically.
             dtype: decode_dtype(v)?,
+            // Absent pack means the unpacked-B kernels (pack: a).
+            pack: decode_pack(v)?,
         })
     }
 
@@ -375,21 +405,24 @@ impl KernelSpace for GemmPoint {
     fn report_columns(&self, entry: &mut Value) {
         entry
             .set("isa", self.isa.as_str())
-            .set("dtype", self.dtype.as_str());
+            .set("dtype", self.dtype.as_str())
+            .set("pack", self.pack.as_str());
     }
 
     fn rank_hint(&self, problem: &Problem) -> Option<f64> {
         // The ISA axis is deliberately not priced: variants of one
         // blocking tie, so guided search keeps them all (conservative
-        // ranking of the axis the model cannot see).  The dtype axis IS
-        // priced — int8 quarters per-element traffic and packs 4× the
-        // elements per lane, which the model must see to rank i8
-        // candidates ahead of f32 ones.
+        // ranking of the axis the model cannot see).  The dtype, pack,
+        // and threads axes ARE priced — int8 quarters per-element
+        // traffic and lane issue, `ab` trades a packed-B copy against
+        // streamed panel re-reads, and `threads` earns the parallel
+        // efficiency discount above the serial cutoff.
         match *problem {
             Problem::Gemm { m, n, k } => Some(
                 crate::perfmodel::gemm_point_cost(
                     &self.params,
                     self.dtype,
+                    self.pack,
                     m,
                     n,
                     k,
@@ -402,6 +435,7 @@ impl KernelSpace for GemmPoint {
             Problem::Conv { .. } => Some(crate::perfmodel::gemm_point_cost(
                 &self.params,
                 self.dtype,
+                self.pack,
                 256,
                 256,
                 256,
@@ -435,6 +469,11 @@ pub struct ConvPoint {
     /// with `algorithm: im2col` — Winograd's transform domain and the
     /// tiled/naive direct kernels have no quantized bodies.
     pub dtype: Dtype,
+    /// Operand packing of the lowered GEMM.  `ab` is only valid with
+    /// the GEMM-lowered algorithms (im2col, winograd) — the direct
+    /// kernels have no B panel to pack.  Points written before the
+    /// axis existed decode as `a`.
+    pub pack: Pack,
 }
 
 impl Default for ConvPoint {
@@ -444,27 +483,29 @@ impl Default for ConvPoint {
 }
 
 impl ConvPoint {
-    /// The scalar-ISA f32 im2col point over the given blocking (the
-    /// untuned default and the migration target for pre-algorithm conv
-    /// selections).
+    /// The scalar-ISA f32 unpacked-B im2col point over the given
+    /// blocking (the untuned default and the migration target for
+    /// pre-algorithm conv selections).
     pub fn im2col(blocked: BlockedParams) -> Self {
         Self {
             config: ConvConfig::im2col(),
             blocked,
             isa: Isa::Scalar,
             dtype: Dtype::F32,
+            pack: Pack::A,
         }
     }
 
     /// Compact name for reports
-    /// (`wino2_v1x1+bm64bn64bk64_4x8_t2_avx2_f32` style).
+    /// (`wino2_v1x1+bm64bn64bk64_4x8_t2_avx2_f32_ab` style).
     pub fn name(&self) -> String {
         format!(
-            "{}+{}_{}_{}",
+            "{}+{}_{}_{}_{}",
             self.config.name(),
             self.blocked.name(),
             self.isa,
-            self.dtype
+            self.dtype,
+            self.pack
         )
     }
 
@@ -491,7 +532,7 @@ impl KernelSpace for ConvPoint {
         &[
             "algorithm", "tile_h", "tile_w", "vec_c", "vec_k", "block_k",
             "wino_m", "bm", "bn", "bk", "mr", "nr", "threads", "isa",
-            "dtype",
+            "dtype", "pack",
         ]
     }
 
@@ -511,6 +552,18 @@ impl KernelSpace for ConvPoint {
                 self.config.algorithm.as_str()
             )));
         }
+        if self.pack == Pack::Ab
+            && !matches!(
+                self.config.algorithm,
+                ConvAlgorithm::Im2col | ConvAlgorithm::Winograd
+            )
+        {
+            return Err(Error::Config(format!(
+                "pack ab requires a GEMM-lowered algorithm (im2col or \
+                 winograd; the direct {} kernel has no B panel): {self:?}",
+                self.config.algorithm.as_str()
+            )));
+        }
         Ok(())
     }
 
@@ -523,7 +576,8 @@ impl KernelSpace for ConvPoint {
         o.set("config", conv_to_json(&self.config))
             .set("blocked", blocked_to_json(&self.blocked))
             .set("isa", self.isa.as_str())
-            .set("dtype", self.dtype.as_str());
+            .set("dtype", self.dtype.as_str())
+            .set("pack", self.pack.as_str());
         o
     }
 
@@ -543,9 +597,11 @@ impl KernelSpace for ConvPoint {
             },
             // Absent dtype means f32 (pre-axis DBs plan identically).
             dtype: decode_dtype(v)?,
+            // Absent pack means the unpacked-B lowering (pack: a).
+            pack: decode_pack(v)?,
         };
-        // The parts validate above; the cross-field dtype/algorithm
-        // rule needs the whole point.
+        // The parts validate above; the cross-field dtype/algorithm and
+        // pack/algorithm rules need the whole point.
         p.validate()?;
         Ok(p)
     }
@@ -570,11 +626,13 @@ impl KernelSpace for ConvPoint {
                 let gp = GemmPoint::from_json(entry.get("point").ok_or_else(
                     || Error::Json("gemm_point entry missing point".into()),
                 )?)?;
-                // The measured ISA *and* dtype both transfer: the conv
-                // plans as im2col, which has a quantized lowering.
+                // The measured ISA, dtype, *and* pack all transfer: the
+                // conv plans as im2col, which is GEMM-lowered, so every
+                // measured GEMM axis is executable there.
                 Ok(Self {
                     isa: gp.isa,
                     dtype: gp.dtype,
+                    pack: gp.pack,
                     ..Self::im2col(gp.params)
                 })
             }
@@ -619,14 +677,15 @@ impl KernelSpace for ConvPoint {
             .set("algorithm", self.config.algorithm.as_str())
             .set("wino_m", self.config.wino_m)
             .set("isa", self.isa.as_str())
-            .set("dtype", self.dtype.as_str());
+            .set("dtype", self.dtype.as_str())
+            .set("pack", self.pack.as_str());
     }
 
     fn rank_hint(&self, problem: &Problem) -> Option<f64> {
-        // `threads` and the ISA are deliberately not priced (ties — see
-        // the GemmPoint note); the algorithm + tile/vector knobs
-        // (including `wino_m`), the lowered-GEMM blocking, and the
-        // dtype are.
+        // The ISA is deliberately not priced (ties — see the GemmPoint
+        // note); the algorithm + tile/vector knobs (including
+        // `wino_m`), the lowered-GEMM blocking, the dtype, the pack
+        // strategy, and the threads knob are.
         match *problem {
             Problem::Gemm { .. } => None,
             Problem::Conv { window, stride } => {
@@ -634,6 +693,7 @@ impl KernelSpace for ConvPoint {
                     &self.config,
                     &self.blocked,
                     self.dtype,
+                    self.pack,
                     window,
                     stride,
                 ))
@@ -746,30 +806,36 @@ mod tests {
     fn gemm_point_json_roundtrip_includes_isa_and_dtype() {
         for isa in Isa::all() {
             for dtype in Dtype::all() {
-                let p = GemmPoint {
-                    params: BlockedParams {
-                        bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3,
-                    },
-                    isa,
-                    dtype,
-                };
-                let back = GemmPoint::from_json(&p.to_json()).unwrap();
-                assert_eq!(back, p);
-                // Name anatomy: blocking, then ISA, then dtype.
-                let want = format!("_{isa}_{dtype}");
-                assert!(p.name().ends_with(&want), "{}", p.name());
+                for pack in Pack::all() {
+                    let p = GemmPoint {
+                        params: BlockedParams {
+                            bm: 32, bn: 48, bk: 8, mr: 2, nr: 4, threads: 3,
+                        },
+                        isa,
+                        dtype,
+                        pack,
+                    };
+                    let back = GemmPoint::from_json(&p.to_json()).unwrap();
+                    assert_eq!(back, p);
+                    // Name anatomy: blocking, then ISA, then dtype,
+                    // then pack.
+                    let want = format!("_{isa}_{dtype}_{pack}");
+                    assert!(p.name().ends_with(&want), "{}", p.name());
+                }
             }
         }
     }
 
     #[test]
     fn gemm_point_absent_isa_means_scalar() {
-        // A pre-axis point (no isa, no dtype) decodes as the scalar f32
-        // point — pre-axis DBs keep planning identically.
+        // A pre-axis point (no isa, no dtype, no pack) decodes as the
+        // scalar f32 unpacked point — pre-axis DBs keep planning
+        // identically.
         let v = blocked_to_json(&BlockedParams::default());
         let p = GemmPoint::from_json(&v).unwrap();
         assert_eq!(p.isa, Isa::Scalar);
         assert_eq!(p.dtype, Dtype::F32);
+        assert_eq!(p.pack, Pack::A);
     }
 
     #[test]
@@ -798,6 +864,9 @@ mod tests {
         let mut v = blocked_to_json(&BlockedParams::default());
         v.set("dtype", "f16");
         assert!(GemmPoint::from_json(&v).is_err(), "unknown dtype");
+        let mut v = blocked_to_json(&BlockedParams::default());
+        v.set("pack", "b");
+        assert!(GemmPoint::from_json(&v).is_err(), "unknown pack");
     }
 
     #[test]
@@ -808,13 +877,16 @@ mod tests {
                     params: BlockedParams::default(),
                     isa,
                     dtype,
+                    pack: Pack::Ab,
                 };
                 let d = p.host_degraded();
                 assert!(d.isa.is_available());
                 assert_eq!(d.params, p.params);
-                // The ISA degrade never touches the dtype axis — any
-                // host can run the scalar widening i8 kernel.
+                // The ISA degrade never touches the dtype or pack axes
+                // — any host can run the scalar widening i8 kernel and
+                // the packed-B scalar kernel.
                 assert_eq!(d.dtype, dtype);
+                assert_eq!(d.pack, Pack::Ab);
                 if isa.is_available() {
                     assert_eq!(d.isa, isa);
                 } else {
@@ -830,15 +902,18 @@ mod tests {
             bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 2,
         };
         for isa in Isa::all() {
-            let p = ConvPoint {
-                config: ConvConfig::winograd(4),
-                blocked: blocked_params,
-                isa,
-                dtype: Dtype::F32,
-            };
-            assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
-            let want = format!("_{isa}_f32");
-            assert!(p.name().ends_with(&want), "{}", p.name());
+            for pack in Pack::all() {
+                let p = ConvPoint {
+                    config: ConvConfig::winograd(4),
+                    blocked: blocked_params,
+                    isa,
+                    dtype: Dtype::F32,
+                    pack,
+                };
+                assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
+                let want = format!("_{isa}_f32_{pack}");
+                assert!(p.name().ends_with(&want), "{}", p.name());
+            }
         }
         // The i8 conv point round-trips too — im2col only.
         let q = ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() };
@@ -849,6 +924,7 @@ mod tests {
             blocked: blocked_params,
             isa: Isa::Scalar,
             dtype: Dtype::F32,
+            pack: Pack::A,
         };
 
         // conv_native entries: config + blocked at the top level, no
@@ -871,13 +947,15 @@ mod tests {
         assert_eq!(m.blocked, p.blocked);
         assert_eq!(m.isa, Isa::Scalar);
         assert_eq!(m.dtype, Dtype::F32);
+        assert_eq!(m.pack, Pack::A);
 
-        // gemm_point entries: im2col, measured ISA and dtype preserved
-        // (the lowered conv GEMM dispatches them now).
+        // gemm_point entries: im2col, measured ISA, dtype, and pack all
+        // preserved (the lowered conv GEMM dispatches them now).
         let gp = GemmPoint {
             params: p.blocked,
             isa: Isa::Avx2,
             dtype: Dtype::I8,
+            pack: Pack::Ab,
         };
         let mut entry = Value::object();
         entry.set("kind", "gemm_point").set("point", gp.to_json());
@@ -886,6 +964,7 @@ mod tests {
         assert_eq!(m.blocked, p.blocked);
         assert_eq!(m.isa, Isa::Avx2);
         assert_eq!(m.dtype, Dtype::I8);
+        assert_eq!(m.pack, Pack::Ab);
     }
 
     #[test]
@@ -897,11 +976,46 @@ mod tests {
             blocked: BlockedParams::default(),
             isa: Isa::Scalar,
             dtype: Dtype::I8,
+            pack: Pack::A,
         };
         assert!(p.validate().is_err());
         assert!(ConvPoint::from_json(&p.to_json()).is_err());
         let ok = ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() };
         assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn conv_point_pack_ab_requires_a_gemm_lowered_algorithm() {
+        // The direct kernels have no B panel; `ab` must fail validation
+        // and decoding there, and pass on im2col and winograd.
+        for cfg in [ConvConfig::tiled(2, 2, 1, 4), ConvConfig::default()] {
+            if matches!(
+                cfg.algorithm,
+                ConvAlgorithm::Im2col | ConvAlgorithm::Winograd
+            ) {
+                continue; // only exercise the direct arms here
+            }
+            let p = ConvPoint {
+                config: cfg,
+                blocked: BlockedParams::default(),
+                isa: Isa::Scalar,
+                dtype: Dtype::F32,
+                pack: Pack::Ab,
+            };
+            assert!(p.validate().is_err(), "{:?}", cfg.algorithm);
+            assert!(ConvPoint::from_json(&p.to_json()).is_err());
+        }
+        for cfg in [ConvConfig::im2col(), ConvConfig::winograd(2)] {
+            let p = ConvPoint {
+                config: cfg,
+                blocked: BlockedParams::default(),
+                isa: Isa::Scalar,
+                dtype: Dtype::F32,
+                pack: Pack::Ab,
+            };
+            assert!(p.validate().is_ok(), "{:?}", cfg.algorithm);
+            assert_eq!(ConvPoint::from_json(&p.to_json()).unwrap(), p);
+        }
     }
 
     #[test]
@@ -916,6 +1030,7 @@ mod tests {
         assert_eq!(back, p);
         assert_eq!(back.isa, Isa::Scalar);
         assert_eq!(back.dtype, Dtype::F32);
+        assert_eq!(back.pack, Pack::A);
     }
 
     #[test]
@@ -926,11 +1041,13 @@ mod tests {
                 blocked: BlockedParams::default(),
                 isa,
                 dtype: Dtype::F32,
+                pack: Pack::Ab,
             };
             let d = p.host_degraded();
             assert!(d.isa.is_available());
             assert_eq!(d.config, p.config, "algorithm axes survive");
             assert_eq!(d.blocked, p.blocked);
+            assert_eq!(d.pack, Pack::Ab, "the pack axis survives");
             if isa.is_available() {
                 assert_eq!(d.isa, isa);
             } else {
@@ -953,6 +1070,7 @@ mod tests {
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             };
             assert!(wino.applicable(&s1), "wino_m={m} on-domain");
             assert!(!wino.applicable(&s2), "winograd off-domain");
@@ -984,23 +1102,31 @@ mod tests {
                 params: BlockedParams::default(),
                 isa: missing,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             }
             .applicable(&gemm));
         }
         for isa in Isa::detect() {
             for dtype in Dtype::all() {
-                // The dtype axis never constrains GEMM applicability —
-                // every host runs the widening i8 kernels.
-                assert!(GemmPoint {
-                    params: BlockedParams::default(),
-                    isa,
-                    dtype,
+                for pack in Pack::all() {
+                    // The dtype and pack axes never constrain GEMM
+                    // applicability — every host runs the widening i8
+                    // kernels and the packed-B kernels.
+                    assert!(GemmPoint {
+                        params: BlockedParams::default(),
+                        isa,
+                        dtype,
+                        pack,
+                    }
+                    .applicable(&gemm));
                 }
-                .applicable(&gemm));
             }
         }
-        // An i8 im2col conv point is applicable wherever f32 im2col is.
+        // An i8 im2col conv point is applicable wherever f32 im2col is,
+        // and so is a packed-B one.
         assert!(ConvPoint { dtype: Dtype::I8, ..ConvPoint::default() }
+            .applicable(&s1));
+        assert!(ConvPoint { pack: Pack::Ab, ..ConvPoint::default() }
             .applicable(&s1));
     }
 
@@ -1021,24 +1147,45 @@ mod tests {
 
     #[test]
     fn rank_hints_tie_across_unmodeled_axes() {
+        // 128³ sits under the serial cutoff, so even the now-modeled
+        // threads axis ties there; 512³ is where the modeled axes move.
         let gemm = Problem::Gemm { m: 128, n: 128, k: 128 };
+        let big = Problem::Gemm { m: 512, n: 512, k: 512 };
         let conv = Problem::Conv { window: 3, stride: 1 };
 
-        // ISA and threads never move a GemmPoint's predicted cost: the
-        // model cannot see those axes, so every variant of a blocking
-        // ties and guided search keeps them together.
+        // The ISA never moves a GemmPoint's predicted cost: the model
+        // cannot see that axis, so every ISA variant of a blocking ties
+        // and guided search keeps them together.
         let base = GemmPoint::default();
         for isa in Isa::all() {
-            for threads in [0usize, 1, 8] {
-                let p = GemmPoint {
-                    params: BlockedParams { threads, ..base.params },
-                    isa,
-                    dtype: base.dtype,
-                };
-                assert_eq!(p.rank_hint(&gemm), base.rank_hint(&gemm));
-                assert_eq!(p.rank_hint(&conv), base.rank_hint(&conv));
-            }
+            let p = GemmPoint { isa, ..base };
+            assert_eq!(p.rank_hint(&gemm), base.rank_hint(&gemm));
+            assert_eq!(p.rank_hint(&big), base.rank_hint(&big));
+            assert_eq!(p.rank_hint(&conv), base.rank_hint(&conv));
         }
+
+        // The threads axis IS modeled — but only above the serial
+        // cutoff, where the engine would actually fan out.  Below it
+        // every thread count ties; above it more threads rank cheaper,
+        // never at ideal speedup.
+        let t1 = GemmPoint {
+            params: BlockedParams { threads: 1, ..base.params },
+            ..base
+        };
+        let t8 = GemmPoint {
+            params: BlockedParams { threads: 8, ..base.params },
+            ..base
+        };
+        assert_eq!(t1.rank_hint(&gemm), t8.rank_hint(&gemm), "under cutoff");
+        let (c1, c8) =
+            (t1.rank_hint(&big).unwrap(), t8.rank_hint(&big).unwrap());
+        assert!(c8 < c1, "{c8} !< {c1}");
+        assert!(c8 > c1 / 8.0, "never ideal speedup");
+
+        // The pack axis IS modeled: on a many-band problem the packed-B
+        // copy amortizes, so `ab` ranks cheaper than its `a` twin.
+        let gab = GemmPoint { pack: Pack::Ab, ..base };
+        assert!(gab.rank_hint(&big).unwrap() < base.rank_hint(&big).unwrap());
 
         // The dtype axis IS modeled: an i8 point is predicted cheaper
         // than its f32 twin (quarter traffic, denser lanes) for both
@@ -1052,17 +1199,29 @@ mod tests {
                 < ConvPoint::default().rank_hint(&conv).unwrap()
         );
 
-        // Same contract for ConvPoint's threads knob and ISA axis.
+        // ConvPoint: the ISA still ties; threads and pack are modeled
+        // (conv problems carry no dims, so threads are priced with no
+        // cutoff gate).
         let cbase = ConvPoint::default();
-        let ct = ConvPoint {
-            blocked: BlockedParams { threads: 8, ..cbase.blocked },
-            ..cbase
-        };
-        assert_eq!(ct.rank_hint(&conv), cbase.rank_hint(&conv));
         for isa in Isa::all() {
             let ci = ConvPoint { isa, ..cbase };
             assert_eq!(ci.rank_hint(&conv), cbase.rank_hint(&conv));
         }
+        let ct1 = ConvPoint {
+            blocked: BlockedParams { threads: 1, ..cbase.blocked },
+            ..cbase
+        };
+        let ct8 = ConvPoint {
+            blocked: BlockedParams { threads: 8, ..cbase.blocked },
+            ..cbase
+        };
+        assert!(
+            ct8.rank_hint(&conv).unwrap() < ct1.rank_hint(&conv).unwrap()
+        );
+        let cab = ConvPoint { pack: Pack::Ab, ..cbase };
+        assert!(
+            cab.rank_hint(&conv).unwrap() < cbase.rank_hint(&conv).unwrap()
+        );
 
         // Modeled axes do move it: a Winograd point is predicted
         // cheaper than default im2col on its 3×3/s1 domain, and the
@@ -1072,6 +1231,7 @@ mod tests {
             blocked: cbase.blocked,
             isa: cbase.isa,
             dtype: cbase.dtype,
+            pack: cbase.pack,
         };
         let wino4 = ConvPoint {
             config: ConvConfig::winograd(4),

@@ -864,8 +864,10 @@ impl EnginePool {
 
     /// Aggregate statistics over the surviving actors
     /// ([`EngineStats::absorb`]): counters sum, per-`(artifact,
-    /// shape-class)` latency accounting merges, and `tuning_epoch` is
-    /// the newest epoch any actor has applied.
+    /// shape-class)` latency accounting merges, `tuning_epoch` is the
+    /// newest epoch any actor has applied, and the kernel-scratch arena
+    /// counters ([`EngineStats::scratch`]) sum across the actors' arenas
+    /// — the pool-level zero-allocation signal the loadgen reports.
     pub fn stats(&self) -> EngineStats {
         let mut total = EngineStats::default();
         for idx in 0..self.shared.queues.len() {

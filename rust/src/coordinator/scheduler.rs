@@ -27,6 +27,7 @@ use std::time::Duration;
 use crate::error::{Error, Result};
 use crate::runtime::{ArtifactStore, Backend, DefaultEngine, RunOutput};
 use crate::tuner::{SelectionDb, TuningSnapshot};
+use crate::util::scratch::ScratchStats;
 
 /// One message to an engine actor.  Every variant that expects an answer
 /// carries its own one-shot reply channel, so any number of clients can
@@ -129,6 +130,11 @@ pub(crate) fn serve_request<B: Backend>(
             true
         }
         Request::Stats { reply } => {
+            // Refresh the arena counters at snapshot time: they live in
+            // the backend (atomics inside its `Scratch`), not in the
+            // per-request accounting, so the snapshot is the one place
+            // they cross into `EngineStats`.
+            stats.scratch = engine.scratch_stats();
             let _ = reply.send(stats.clone());
             true
         }
@@ -288,6 +294,11 @@ pub struct EngineStats {
     /// Epoch of the last tuning snapshot the backend applied
     /// ([`Backend::swap_tuning`]); 0 until a swap lands.
     pub tuning_epoch: u64,
+    /// Kernel-scratch arena counters from [`Backend::scratch_stats`],
+    /// refreshed on every stats snapshot.  `grows` flat across
+    /// steady-state traffic is the zero-allocation invariant the
+    /// loadgen CSVs assert; all-zero for backends without an arena.
+    pub scratch: ScratchStats,
 }
 
 impl EngineStats {
@@ -304,6 +315,7 @@ impl EngineStats {
             self.latency.entry(key.clone()).or_default().merge(stats);
         }
         self.tuning_epoch = self.tuning_epoch.max(other.tuning_epoch);
+        self.scratch.absorb(&other.scratch);
     }
 
     /// The `top` shape classes ranked by total serving time, hottest
@@ -589,10 +601,24 @@ mod tests {
         let mut more = LatencyStats::default();
         more.record(Duration::from_micros(7));
         b.latency.insert("g128::gemm_128x128x128".into(), more);
+        a.scratch =
+            ScratchStats { hits: 4, grows: 2, bytes: 64, high_water_bytes: 64 };
+        b.scratch =
+            ScratchStats { hits: 6, grows: 1, bytes: 32, high_water_bytes: 48 };
 
         a.absorb(&b);
         assert_eq!(a.runs, 3);
         assert_eq!(a.tuning_epoch, 3);
+        assert_eq!(
+            a.scratch,
+            ScratchStats {
+                hits: 10,
+                grows: 3,
+                bytes: 96,
+                high_water_bytes: 112
+            },
+            "arena counters fold across actors"
+        );
         assert_eq!(a.latency.len(), 3);
         // 27us total in gemm_128x128x128 vs 5us in gemm_64x64x64.
         assert_eq!(
@@ -630,6 +656,13 @@ mod tests {
         assert_eq!(
             stats.hot_shape_classes(4),
             vec!["gemm_64x64x64".to_string()]
+        );
+        // The native backend routes kernel scratch through its arena;
+        // the stats snapshot must surface those counters.
+        assert!(
+            stats.scratch.high_water_bytes > 0,
+            "arena counters surface through the stats snapshot: {:?}",
+            stats.scratch
         );
         handle.shutdown();
         join.join().unwrap();

@@ -32,7 +32,11 @@ pub mod vendor;
 pub use conv_model::{conv_estimate, ConvProblem};
 pub use gemm_model::{gemm_estimate, GemmProblem};
 pub use occupancy::{occupancy, Occupancy};
-pub use point_cost::{conv_point_cost, gemm_point_cost, DTYPE_I8_DISCOUNT};
+pub use point_cost::{
+    conv_point_cost, gemm_point_cost, DTYPE_I8_DISCOUNT,
+    PACK_AB_CONV_DISCOUNT, PACK_B_STREAM_DISCOUNT, PACK_B_WRITE_COST,
+    PARALLEL_EFFICIENCY, SMALL_PROBLEM_FLOPS,
+};
 pub use registers::{conv_regs, gemm_regs};
 pub use vendor::{vendor_conv, vendor_gemm, VendorLib};
 

@@ -12,11 +12,11 @@
 //! predicted-faster; only the *ordering* matters, so the unit is an
 //! arbitrary "cost per useful flop".
 //!
-//! Axes the model knows nothing about — the micro-kernel ISA and the
-//! `threads` knob — are deliberately absent from both functions: points
-//! differing only along an unmodeled axis cost exactly the same, so
-//! `GuidedSearch`'s stable ranking keeps every variant of a promising
-//! blocking together instead of pruning the axis it cannot see.
+//! The one axis the model knows nothing about — the micro-kernel ISA —
+//! is deliberately absent from both functions: points differing only
+//! along it cost exactly the same, so `GuidedSearch`'s stable ranking
+//! keeps every ISA variant of a promising blocking together instead of
+//! pruning the axis it cannot see.
 //!
 //! The **dtype** axis is modeled: int8 elements are a quarter the bytes
 //! (quarter DRAM traffic, 4× more of a panel fits in L1) and pack 4×
@@ -25,9 +25,27 @@
 //! compute and traffic terms — cheaper, never free.  The discount is a
 //! pure per-dtype factor, so points differing only along *unmodeled*
 //! axes still tie exactly within each dtype.
+//!
+//! The **pack** axis is modeled as a traffic trade: [`Pack::Ab`] writes
+//! every B element once into the `nr`-interleaved panel layout
+//! ([`PACK_B_WRITE_COST`]) and in exchange re-reads the B panels
+//! unit-stride at [`PACK_B_STREAM_DISCOUNT`] of the strided cost — so
+//! packing is predicted to pay off exactly when the B panel is re-read
+//! across enough row bands to amortize the copy, and a skinny-`m`
+//! problem (one band) correctly ranks `a` ahead of `ab`.
+//!
+//! The **threads** axis is modeled as a pure parallel-efficiency factor
+//! above the engine's small-problem cutoff: `w` resolved workers divide
+//! the whole cost by `1 + (w-1)·`[`PARALLEL_EFFICIENCY`] (linear with a
+//! fan-out tax, never ideal), while problems at or under
+//! [`SMALL_PROBLEM_FLOPS`] keep all thread variants tied — the engine
+//! plans those serial, so ranking them apart would prune nothing real.
+//! Because the factor depends only on `threads` (and the problem), all
+//! other per-axis orderings survive unchanged within one thread count.
 
-use crate::blas::{BlockedParams, Dtype};
+use crate::blas::{BlockedParams, Dtype, Pack};
 use crate::config::{ConvAlgorithm, ConvConfig};
+use crate::util::pool;
 
 use super::registers::{conv_regs, ADDRESS_REGS};
 use super::reuse::{gemm_global_traffic, register_tile_reuse};
@@ -65,6 +83,46 @@ const IM2COL_PATCH_COST: f64 = 2.0;
 /// quarter the DRAM traffic, so both modeled terms scale by ¼.
 pub const DTYPE_I8_DISCOUNT: f64 = 0.25;
 
+/// Cost of streaming a packed (`nr`-interleaved, unit-stride) B panel
+/// relative to re-reading the strided row-major original: packed
+/// re-reads hit full cache lines and never split across `nr` columns.
+pub const PACK_B_STREAM_DISCOUNT: f64 = 0.6;
+
+/// Extra writes per B element under [`Pack::Ab`]: each element is
+/// copied once into the packed panel (the packed re-reads themselves
+/// are the discounted stream term).
+pub const PACK_B_WRITE_COST: f64 = 1.0;
+
+/// Issue-cost factor of a GEMM-lowered conv arm under [`Pack::Ab`]:
+/// the lowered GEMMs stream their packed B panels, trimming the
+/// per-MAC load cost.  Modest — the conv cost has no per-problem
+/// traffic term to trade against, so the axis is priced as a small
+/// strict preference rather than a break-even curve.
+pub const PACK_AB_CONV_DISCOUNT: f64 = 0.95;
+
+/// Parallel efficiency of one extra worker: `w` threads are modeled as
+/// a `1 + (w-1)·η` speedup — linear scaling with a fan-out tax, never
+/// ideal, so more threads always cost *something* per added worker.
+pub const PARALLEL_EFFICIENCY: f64 = 0.85;
+
+/// The engine's small-problem serial cutoff (flops), mirrored here so
+/// the model ties thread variants exactly where the plan ladder would
+/// run them serial anyway (`runtime::NativeEngine`'s
+/// `SMALL_PROBLEM_FLOP_CUTOFF`).
+pub const SMALL_PROBLEM_FLOPS: f64 = 8_000_000.0;
+
+/// The modeled speedup of `threads` on a problem of `flops` useful
+/// flops: 1 at or under the cutoff (the engine plans small problems
+/// serial), else the linear-efficiency curve over the resolved worker
+/// count.  A pure per-`threads` factor — see the module docs.
+fn thread_speedup(threads: usize, flops: f64) -> f64 {
+    if flops <= SMALL_PROBLEM_FLOPS {
+        return 1.0;
+    }
+    let w = pool::resolve_threads(threads) as f64;
+    1.0 + (w - 1.0).max(0.0) * PARALLEL_EFFICIENCY
+}
+
 /// Bytes per element of one dtype (traffic and panel-fit terms).
 fn dtype_bytes(dtype: Dtype) -> f64 {
     match dtype {
@@ -82,17 +140,21 @@ fn dtype_issue_discount(dtype: Dtype) -> f64 {
 }
 
 /// Predicted relative cost per useful flop of running an `m×n×k` GEMM
-/// under `p` on the host with the `dtype` kernel family: the Eq. 3
-/// issue term (loads per flop of the `mr×nr` register tile), a
-/// register-spill penalty above the host's accumulator budget, and the
-/// blocked global-traffic term with an L1 panel-fit penalty — the
-/// compute term discounted by the dtype's lane density and the traffic
-/// terms by its element width.  Lower is predicted-faster.  `threads`
-/// (and the ISA, which is not part of `BlockedParams`) do not
+/// under `p` on the host with the `dtype` kernel family and the `pack`
+/// operand strategy: the Eq. 3 issue term (loads per flop of the
+/// `mr×nr` register tile), a register-spill penalty above the host's
+/// accumulator budget, and the blocked global-traffic term with an L1
+/// panel-fit penalty — the compute term discounted by the dtype's lane
+/// density and the traffic terms by its element width.  `Pack::Ab`
+/// trades one packed-copy write per B element against streaming the B
+/// panel re-reads, and `threads` divides the whole cost by the modeled
+/// parallel speedup above the small-problem cutoff.  Lower is
+/// predicted-faster.  The ISA (not part of `BlockedParams`) does not
 /// contribute — see the module docs.
 pub fn gemm_point_cost(
     p: &BlockedParams,
     dtype: Dtype,
+    pack: Pack,
     m: u64,
     n: u64,
     k: u64,
@@ -119,9 +181,23 @@ pub fn gemm_point_cost(
         p.bn as u64,
     ) as f64
         * bytes;
+    // The pack trade: Ab copies each B element once into the packed
+    // layout and streams the per-row-block B re-reads (the k·n·
+    // row_blocks share of the traffic) at the discounted stream cost.
+    let pack_adjust = match pack {
+        Pack::A => 0.0,
+        Pack::Ab => {
+            let row_blocks = m.div_ceil(p.bm.max(1) as u64) as f64;
+            let b_rereads = (k * n) as f64 * row_blocks * bytes;
+            PACK_B_WRITE_COST * (k * n) as f64 * bytes
+                - (1.0 - PACK_B_STREAM_DISCOUNT) * b_rereads
+        }
+    };
     let panel = (p.bm * p.bk + p.bk * p.bn) as f64 * bytes;
     let l1 = (panel / L1_PANEL_BYTES).max(1.0);
-    issue * spill + MEM_WEIGHT * l1 * traffic / flops
+    let serial =
+        issue * spill + MEM_WEIGHT * (l1 * traffic + pack_adjust) / flops;
+    serial / thread_speedup(p.threads, flops)
 }
 
 /// Predicted relative cost per output element (in direct-MAC units) of
@@ -143,22 +219,36 @@ pub fn gemm_point_cost(
 ///
 /// Callers pass only points that would actually run their own algorithm
 /// on this shape ([`crate::config::KernelSpace::applicable`] filters
-/// the rest), so no fallback modeling is needed here.  `threads` and
-/// the lowered-GEMM ISA are deliberately unmodeled (ties).  The dtype
-/// discounts the im2col arm only — `i8` points are valid solely with
-/// the im2col algorithm (`ConvPoint::validate` rejects the rest), so
-/// the direct and Winograd arms ignore it.
+/// the rest), so no fallback modeling is needed here.  The lowered-GEMM
+/// ISA is deliberately unmodeled (ties); `threads` divides the whole
+/// cost by the linear-efficiency speedup — the conv problem key
+/// ([`crate::config::Problem::Conv`]) carries no output dims, so there
+/// is no flop count to gate on, and the measured conv sweeps are all
+/// far above the serial cutoff.  `Pack::Ab` discounts the lowered-GEMM issue term of
+/// the im2col and Winograd arms ([`PACK_AB_CONV_DISCOUNT`]); the direct
+/// kernels have no B panel, so pack is inert there
+/// (`ConvPoint::validate` rejects `ab` off the GEMM-lowered
+/// algorithms).  The dtype discounts the im2col arm only — `i8` points
+/// are valid solely with the im2col algorithm.
 pub fn conv_point_cost(
     config: &ConvConfig,
     blocked: &BlockedParams,
     dtype: Dtype,
+    pack: Pack,
     window: u32,
     stride: u32,
 ) -> f64 {
     let w = window as f64;
     let s = stride as f64;
     let macs = w * w; // direct MACs per output element, per channel
-    match config.algorithm {
+    let pack_gain = match (pack, config.algorithm) {
+        (
+            Pack::Ab,
+            ConvAlgorithm::Im2col | ConvAlgorithm::Winograd,
+        ) => PACK_AB_CONV_DISCOUNT,
+        _ => 1.0,
+    };
+    let serial = match config.algorithm {
         ConvAlgorithm::Winograd => {
             let wm = config.wino_m.max(2) as f64;
             let t = wm + 2.0;
@@ -171,7 +261,7 @@ pub fn conv_point_cost(
             // over its m² outputs.
             let transform = WINO_TRANSFORM_COST * 2.0 * t * t * t
                 / (wm * wm);
-            mul * (1.0 + issue) + transform
+            mul * (1.0 + issue * pack_gain) + transform
         }
         ConvAlgorithm::Naive | ConvAlgorithm::Tiled => {
             let th = config.tile_h.max(1) as f64;
@@ -189,10 +279,15 @@ pub fn conv_point_cost(
             // elements, so the whole arm takes the dtype discount.
             let issue =
                 1.0 / register_tile_reuse(blocked.mr as u32, blocked.nr as u32);
-            (macs * (1.0 + issue) + CONV_LOAD_COST * IM2COL_PATCH_COST)
+            (macs * (1.0 + issue * pack_gain)
+                + CONV_LOAD_COST * IM2COL_PATCH_COST)
                 * dtype_issue_discount(dtype)
         }
-    }
+    };
+    // No cutoff gate: conv problems carry no dims (see above), and the
+    // factor is pure per-`threads`, so all other orderings survive.
+    let wkr = pool::resolve_threads(blocked.threads) as f64;
+    serial / (1.0 + (wkr - 1.0).max(0.0) * PARALLEL_EFFICIENCY)
 }
 
 #[cfg(test)]
@@ -207,8 +302,8 @@ mod tests {
         let square = BlockedParams { mr: 4, nr: 4, ..base };
         let skinny = BlockedParams { mr: 16, nr: 1, ..base };
         assert!(
-            gemm_point_cost(&square, Dtype::F32, 256, 256, 256)
-                < gemm_point_cost(&skinny, Dtype::F32, 256, 256, 256)
+            gemm_point_cost(&square, Dtype::F32, Pack::A, 256, 256, 256)
+                < gemm_point_cost(&skinny, Dtype::F32, Pack::A, 256, 256, 256)
         );
     }
 
@@ -218,44 +313,129 @@ mod tests {
         let tiny = BlockedParams { bm: 8, bn: 8, ..BlockedParams::default() };
         let mid = BlockedParams { bm: 64, bn: 64, ..BlockedParams::default() };
         assert!(
-            gemm_point_cost(&mid, Dtype::F32, 512, 512, 512)
-                < gemm_point_cost(&tiny, Dtype::F32, 512, 512, 512)
+            gemm_point_cost(&mid, Dtype::F32, Pack::A, 512, 512, 512)
+                < gemm_point_cost(&tiny, Dtype::F32, Pack::A, 512, 512, 512)
         );
         // ...but a bk panel far beyond L1 pays the spill penalty.
         let spilled = BlockedParams { bk: 4096, ..mid };
         assert!(
-            gemm_point_cost(&mid, Dtype::F32, 512, 512, 512)
-                < gemm_point_cost(&spilled, Dtype::F32, 512, 512, 512)
+            gemm_point_cost(&mid, Dtype::F32, Pack::A, 512, 512, 512)
+                < gemm_point_cost(&spilled, Dtype::F32, Pack::A, 512, 512, 512)
         );
     }
 
     #[test]
-    fn gemm_cost_ignores_threads() {
-        // The threads knob is unmodeled: variants must tie exactly so
-        // guided search keeps them together (conservative ranking).
-        let a = BlockedParams { threads: 1, ..BlockedParams::default() };
-        let b = BlockedParams { threads: 8, ..BlockedParams::default() };
+    fn gemm_cost_models_threads_above_the_cutoff() {
+        // At or under the serial cutoff thread variants tie exactly —
+        // the engine plans those problems serial, so ranking them apart
+        // would prune nothing real.  2·128³ ≈ 4.2M flops < 8M.
+        let t1 = BlockedParams { threads: 1, ..BlockedParams::default() };
+        let t8 = BlockedParams { threads: 8, ..BlockedParams::default() };
         assert_eq!(
-            gemm_point_cost(&a, Dtype::F32, 128, 128, 128),
-            gemm_point_cost(&b, Dtype::F32, 128, 128, 128)
+            gemm_point_cost(&t1, Dtype::F32, Pack::A, 128, 128, 128),
+            gemm_point_cost(&t8, Dtype::F32, Pack::A, 128, 128, 128)
         );
+        // Above it the parallel-efficiency discount kicks in: more
+        // threads rank cheaper, but never at ideal linear speedup.
+        let c1 = gemm_point_cost(&t1, Dtype::F32, Pack::A, 256, 256, 256);
+        let c8 = gemm_point_cost(&t8, Dtype::F32, Pack::A, 256, 256, 256);
+        assert!(c8 < c1, "{c8} !< {c1}");
+        assert!(c8 > c1 / 8.0, "speedup must not be ideal: {c8} vs {c1}");
+        // threads: 0 (auto) resolves to the host worker count.
+        let t0 = BlockedParams { threads: 0, ..BlockedParams::default() };
+        let c0 = gemm_point_cost(&t0, Dtype::F32, Pack::A, 256, 256, 256);
+        let w = crate::util::pool::resolve_threads(0) as f64;
+        assert!((c0 - c1 / (1.0 + (w - 1.0) * PARALLEL_EFFICIENCY)).abs()
+            < 1e-12);
+    }
+
+    #[test]
+    fn pack_ab_pays_off_when_b_panels_are_rereaded() {
+        // 512³ under the default 64×64 macro-tile re-reads each B panel
+        // 8×: streaming the packed copies out-earns the one packed
+        // write, so `ab` must rank strictly cheaper — the tune-smoke
+        // head-to-head asserts the measured counterpart.
+        let p = BlockedParams::default();
+        let a = gemm_point_cost(&p, Dtype::F32, Pack::A, 512, 512, 512);
+        let ab = gemm_point_cost(&p, Dtype::F32, Pack::Ab, 512, 512, 512);
+        assert!(ab < a, "{ab} !< {a}");
+        assert!(ab > 0.0);
+        // One row band (m ≤ bm): the packed copy never amortizes, so
+        // the model correctly prefers the unpacked kernel.
+        let a1 = gemm_point_cost(&p, Dtype::F32, Pack::A, 32, 512, 512);
+        let ab1 = gemm_point_cost(&p, Dtype::F32, Pack::Ab, 32, 512, 512);
+        assert!(a1 < ab1, "{a1} !< {ab1}");
+        // The same trade prices the i8 family (quarter-width panels,
+        // same break-even shape).
+        let qa = gemm_point_cost(&p, Dtype::I8, Pack::A, 512, 512, 512);
+        let qab = gemm_point_cost(&p, Dtype::I8, Pack::Ab, 512, 512, 512);
+        assert!(qab < qa, "{qab} !< {qa}");
+    }
+
+    #[test]
+    fn pack_ab_discounts_the_gemm_lowered_conv_arms_only() {
+        let p = BlockedParams::default();
+        for cfg in [ConvConfig::im2col(), ConvConfig::winograd(2)] {
+            let a = conv_point_cost(&cfg, &p, Dtype::F32, Pack::A, 3, 1);
+            let ab = conv_point_cost(&cfg, &p, Dtype::F32, Pack::Ab, 3, 1);
+            assert!(ab < a, "{:?}: {ab} !< {a}", cfg.algorithm);
+            assert!(ab > 0.0);
+        }
+        // The direct kernels have no B panel: pack is inert.
+        let cfg = ConvConfig::tiled(2, 2, 1, 4);
+        assert_eq!(
+            conv_point_cost(&cfg, &p, Dtype::F32, Pack::A, 3, 1),
+            conv_point_cost(&cfg, &p, Dtype::F32, Pack::Ab, 3, 1)
+        );
+    }
+
+    #[test]
+    fn conv_cost_models_threads_as_a_pure_factor() {
+        // More threads rank cheaper (no cutoff gate — the conv problem
+        // key has no dims), never at ideal speedup, and the factor is
+        // pure per-`threads`, so algorithm orderings survive within one
+        // thread count.
+        let t1 = BlockedParams { threads: 1, ..BlockedParams::default() };
+        let t8 = BlockedParams { threads: 8, ..BlockedParams::default() };
+        let cfg = ConvConfig::im2col();
+        let c1 = conv_point_cost(&cfg, &t1, Dtype::F32, Pack::A, 3, 1);
+        let c8 = conv_point_cost(&cfg, &t8, Dtype::F32, Pack::A, 3, 1);
+        assert!(c8 < c1, "{c8} !< {c1}");
+        assert!(c8 > c1 / 8.0);
+        let wino = ConvConfig::winograd(2);
+        let w1 = conv_point_cost(&wino, &t1, Dtype::F32, Pack::A, 3, 1);
+        let w8 = conv_point_cost(&wino, &t8, Dtype::F32, Pack::A, 3, 1);
+        assert_eq!(w1 < c1, w8 < c8, "ordering must survive the factor");
     }
 
     #[test]
     fn conv_cost_ranks_winograd_cheapest_on_its_domain() {
         // On 3×3/s1 the F(2×2) reduction beats both direct and im2col.
         let blocked = BlockedParams::default();
-        let wino =
-            conv_point_cost(&ConvConfig::winograd(2), &blocked, Dtype::F32, 3, 1);
+        let wino = conv_point_cost(
+            &ConvConfig::winograd(2),
+            &blocked,
+            Dtype::F32,
+            Pack::A,
+            3,
+            1,
+        );
         let tiled = conv_point_cost(
             &ConvConfig::tiled(2, 2, 1, 4),
             &blocked,
             Dtype::F32,
+            Pack::A,
             3,
             1,
         );
-        let im2col =
-            conv_point_cost(&ConvConfig::im2col(), &blocked, Dtype::F32, 3, 1);
+        let im2col = conv_point_cost(
+            &ConvConfig::im2col(),
+            &blocked,
+            Dtype::F32,
+            Pack::A,
+            3,
+            1,
+        );
         assert!(wino < tiled, "{wino} !< {tiled}");
         assert!(wino < im2col, "{wino} !< {im2col}");
     }
@@ -267,12 +447,30 @@ mod tests {
         // must rank m=4 cheaper — the axis is modeled, not a tie, and
         // both beat im2col on the 3×3/s1 domain.
         let blocked = BlockedParams::default();
-        let w2 =
-            conv_point_cost(&ConvConfig::winograd(2), &blocked, Dtype::F32, 3, 1);
-        let w4 =
-            conv_point_cost(&ConvConfig::winograd(4), &blocked, Dtype::F32, 3, 1);
-        let im2col =
-            conv_point_cost(&ConvConfig::im2col(), &blocked, Dtype::F32, 3, 1);
+        let w2 = conv_point_cost(
+            &ConvConfig::winograd(2),
+            &blocked,
+            Dtype::F32,
+            Pack::A,
+            3,
+            1,
+        );
+        let w4 = conv_point_cost(
+            &ConvConfig::winograd(4),
+            &blocked,
+            Dtype::F32,
+            Pack::A,
+            3,
+            1,
+        );
+        let im2col = conv_point_cost(
+            &ConvConfig::im2col(),
+            &blocked,
+            Dtype::F32,
+            Pack::A,
+            3,
+            1,
+        );
         assert!(w4 < w2, "{w4} !< {w2}");
         assert!(w2 < im2col, "{w2} !< {im2col}");
     }
@@ -287,8 +485,8 @@ mod tests {
         for m in [2u32, 4] {
             let cfg = ConvConfig::winograd(m);
             assert!(
-                conv_point_cost(&cfg, &good, Dtype::F32, 3, 1)
-                    < conv_point_cost(&cfg, &bad, Dtype::F32, 3, 1),
+                conv_point_cost(&cfg, &good, Dtype::F32, Pack::A, 3, 1)
+                    < conv_point_cost(&cfg, &bad, Dtype::F32, Pack::A, 3, 1),
                 "wino_m={m}"
             );
         }
@@ -303,6 +501,7 @@ mod tests {
             &ConvConfig::tiled(1, 1, 1, 1),
             &blocked,
             Dtype::F32,
+            Pack::A,
             3,
             1,
         );
@@ -310,6 +509,7 @@ mod tests {
             &ConvConfig::tiled(2, 2, 1, 1),
             &blocked,
             Dtype::F32,
+            Pack::A,
             3,
             1,
         );
@@ -322,34 +522,52 @@ mod tests {
         // point must rank strictly cheaper than its f32 twin — for
         // GEMM and for the im2col conv arm — and stay positive.
         let p = BlockedParams::default();
-        let f = gemm_point_cost(&p, Dtype::F32, 512, 512, 512);
-        let q = gemm_point_cost(&p, Dtype::I8, 512, 512, 512);
+        let f = gemm_point_cost(&p, Dtype::F32, Pack::A, 512, 512, 512);
+        let q = gemm_point_cost(&p, Dtype::I8, Pack::A, 512, 512, 512);
         assert!(q < f, "{q} !< {f}");
         assert!(q > 0.0);
         let cfg = ConvConfig::im2col();
-        let cf = conv_point_cost(&cfg, &p, Dtype::F32, 3, 1);
-        let cq = conv_point_cost(&cfg, &p, Dtype::I8, 3, 1);
+        let cf = conv_point_cost(&cfg, &p, Dtype::F32, Pack::A, 3, 1);
+        let cq = conv_point_cost(&cfg, &p, Dtype::I8, Pack::A, 3, 1);
         assert!(cq < cf, "{cq} !< {cf}");
         assert!(cq > 0.0);
     }
 
     #[test]
-    fn dtype_is_a_pure_factor_so_unmodeled_ties_survive() {
-        // Within one dtype, threads variants still tie exactly — the
-        // discount must not break the unmodeled-axis tie contract.
+    fn modeled_factors_are_pure_so_orderings_survive() {
+        // dtype, pack, and threads each price as a factor or an
+        // additive term that never flips the orderings of the *other*
+        // axes: within one (threads, pack) choice, the dtype discount
+        // preserves blocking order; within one (threads, dtype), the
+        // pack trade preserves it on a fixed problem; and the thread
+        // factor cancels entirely when both sides share a count.
+        let good = BlockedParams { threads: 1, ..BlockedParams::default() };
+        let bad = BlockedParams { mr: 1, nr: 1, ..good };
         for dtype in Dtype::all() {
-            let a = BlockedParams { threads: 1, ..BlockedParams::default() };
-            let b = BlockedParams { threads: 8, ..BlockedParams::default() };
-            assert_eq!(
-                gemm_point_cost(&a, dtype, 128, 128, 128),
-                gemm_point_cost(&b, dtype, 128, 128, 128)
-            );
-            let cfg = ConvConfig::im2col();
-            assert_eq!(
-                conv_point_cost(&cfg, &a, dtype, 3, 1),
-                conv_point_cost(&cfg, &b, dtype, 3, 1)
-            );
+            for pack in Pack::all() {
+                assert!(
+                    gemm_point_cost(&good, dtype, pack, 512, 512, 512)
+                        < gemm_point_cost(&bad, dtype, pack, 512, 512, 512),
+                    "{dtype} {pack}"
+                );
+                let cfg = ConvConfig::im2col();
+                assert!(
+                    conv_point_cost(&cfg, &good, dtype, pack, 3, 1)
+                        < conv_point_cost(&cfg, &bad, dtype, pack, 3, 1),
+                    "{dtype} {pack}"
+                );
+            }
         }
+        // The thread factor is a pure divide: scaling both sides of a
+        // comparison by it cannot reorder them.
+        let g8 = BlockedParams { threads: 8, ..good };
+        let b8 = BlockedParams { threads: 8, ..bad };
+        assert_eq!(
+            gemm_point_cost(&good, Dtype::F32, Pack::A, 512, 512, 512)
+                < gemm_point_cost(&bad, Dtype::F32, Pack::A, 512, 512, 512),
+            gemm_point_cost(&g8, Dtype::F32, Pack::A, 512, 512, 512)
+                < gemm_point_cost(&b8, Dtype::F32, Pack::A, 512, 512, 512)
+        );
     }
 
     #[test]
@@ -360,8 +578,8 @@ mod tests {
         let bad = BlockedParams { mr: 1, nr: 1, ..good };
         let cfg = ConvConfig::im2col();
         assert!(
-            conv_point_cost(&cfg, &good, Dtype::F32, 3, 1)
-                < conv_point_cost(&cfg, &bad, Dtype::F32, 3, 1)
+            conv_point_cost(&cfg, &good, Dtype::F32, Pack::A, 3, 1)
+                < conv_point_cost(&cfg, &bad, Dtype::F32, Pack::A, 3, 1)
         );
     }
 }

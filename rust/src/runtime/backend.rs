@@ -110,6 +110,17 @@ pub trait Backend {
         false
     }
 
+    /// Snapshot of the backend's kernel-scratch arena counters, for
+    /// backends that route kernel temporaries through a
+    /// [`Scratch`](crate::util::scratch::Scratch) arena.  The serving
+    /// layer aggregates these per pool into its CSV columns; a flat
+    /// `grows` counter across requests is the zero-allocation
+    /// steady-state invariant.  The default (all-zero stats) is for
+    /// backends without an arena (PJRT manages device buffers itself).
+    fn scratch_stats(&self) -> crate::util::scratch::ScratchStats {
+        crate::util::scratch::ScratchStats::default()
+    }
+
     /// Deterministic pseudo-random input vectors for an artifact (used by
     /// examples, benches, and the measured tuner; values in [-0.5, 0.5)).
     fn synth_inputs(&self, name: &str, seed: u64) -> Result<Vec<Vec<f32>>> {

@@ -5,12 +5,20 @@
 //! the offline build: `NativeEngine` reads the same `manifest.json` the
 //! AOT bridge writes, but instead of compiling HLO text it *plans* each
 //! artifact — keying on the manifest's GEMM dims or conv [`LayerMeta`] —
-//! and dispatches to [`blas::gemm_blocked`](crate::blas::gemm_blocked)
+//! and dispatches to [`blas::gemm_blocked_ex`](crate::blas::gemm_blocked_ex)
 //! (GEMM, with the α/β epilogue) or the native conv algorithm family
-//! ([`blas::conv2d_native_isa`](crate::blas::conv2d_native_isa): im2col,
+//! ([`blas::conv2d_native_ex`](crate::blas::conv2d_native_ex): im2col,
 //! tiled direct, or Winograd).  The HLO files referenced by the manifest are
 //! never opened, so synthetic manifests (tests) and real AOT output both
 //! execute.
+//!
+//! Every kernel temporary rides the engine's [`Scratch`] workspace arena:
+//! each plan records its worst-case [`Workspace`] (the analytic
+//! `blas::*_workspace` take-set under the resolved point, `pack` axis
+//! included) and prewarms the arena at plan time, so steady-state
+//! serving performs **zero** kernel-scratch allocations per request —
+//! [`NativeEngine::scratch_stats`] makes that observable per engine (and
+//! per pool actor, since each actor owns its engine).
 //!
 //! Each plan resolves the [`crate::config::KernelSpace`] point it will
 //! execute with — for GEMM a [`GemmPoint`] (blocking × threads ×
@@ -53,15 +61,18 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::blas::{
-    conv2d_im2col_i8, conv2d_native_isa, gemm_blocked_isa, gemm_i8_dequant,
-    native_conv_algorithm, quantize_slice, BlockedParams, Conv2dShape,
-    Dtype, Isa,
+    conv2d_im2col_i8_ex, conv2d_im2col_i8_workspace, conv2d_native_ex,
+    conv2d_native_workspace,
+    gemm_blocked_ex, gemm_i8_dequant_ex, gemm_i8_dequant_workspace,
+    gemm_workspace, native_conv_algorithm, quantize_into, BlockedParams,
+    Conv2dShape, Dtype, Isa, Pack,
 };
 use crate::config::{
     ConvAlgorithm, ConvConfig, ConvPoint, GemmPoint, KernelSpace,
 };
 use crate::error::{Error, Result};
 use crate::tuner::{selection_key_for, SelectionDb};
+use crate::util::scratch::{Scratch, ScratchStats, Workspace};
 
 use super::artifact::{ArtifactMeta, ArtifactStore, LayerMeta, QuantMeta};
 use super::backend::{check_inputs, Backend, RunOutput};
@@ -105,6 +116,11 @@ enum Plan {
         /// `Some` when `point.dtype` is `i8` — [`build_plan`] degrades
         /// `i8` points to `f32` on artifacts without quant metadata.
         quant: Option<QuantMeta>,
+        /// Worst-case kernel-scratch take-set of one execution under the
+        /// resolved point, computed analytically at plan time.  Feeding
+        /// it to [`Scratch::prewarm`] makes steady-state execution
+        /// allocation-free.
+        workspace: Workspace,
     },
     Conv {
         shape: Conv2dShape,
@@ -121,6 +137,9 @@ enum Plan {
         /// Per-tensor quantization parameters (input, filter) from the
         /// manifest; same `Some`-iff-`i8` invariant as the GEMM plan.
         quant: Option<QuantMeta>,
+        /// Worst-case kernel-scratch take-set (same contract as the GEMM
+        /// plan's field).
+        workspace: Workspace,
     },
 }
 
@@ -147,6 +166,13 @@ impl Plan {
         match self {
             Plan::Gemm { .. } => None,
             Plan::Conv { point, .. } => Some(*point),
+        }
+    }
+
+    fn workspace(&self) -> &Workspace {
+        match self {
+            Plan::Gemm { workspace, .. } => workspace,
+            Plan::Conv { workspace, .. } => workspace,
         }
     }
 }
@@ -182,6 +208,19 @@ fn gemm_plan(meta: &ArtifactMeta, point: GemmPoint) -> Result<Plan> {
             meta.inputs.iter().map(|s| s.elems()).collect::<Vec<_>>()
         )));
     }
+    // The worst-case kernel take-set under the resolved point: the i8
+    // path stages two quantized operands in this module on top of the
+    // dequant kernel's own workspace; the f32 path is the blocked GEMM's
+    // packing buffers (pack-dependent).
+    let workspace = if point.dtype == Dtype::I8 {
+        let mut ws =
+            gemm_i8_dequant_workspace(m, n, k, &point.params, point.pack);
+        ws.i8_lens.push(m * k);
+        ws.i8_lens.push(k * n);
+        ws
+    } else {
+        gemm_workspace(m, n, k, &point.params, point.pack)
+    };
     Ok(Plan::Gemm {
         m,
         n,
@@ -191,6 +230,7 @@ fn gemm_plan(meta: &ArtifactMeta, point: GemmPoint) -> Result<Plan> {
         with_c,
         point,
         quant: meta.quant,
+        workspace,
     })
 }
 
@@ -311,11 +351,35 @@ fn conv_plan(meta: &ArtifactMeta, point: ConvPoint) -> Result<Plan> {
     } else {
         point
     };
+    // Pack companion of the same rule: the direct/tiled kernels have no
+    // B panel to pack, so a `pack: ab` selection landing on a
+    // non-GEMM-lowered algorithm (via the im2col fallback's inverse — an
+    // engine-wide tiled override) plans, reports, and executes as `a`.
+    let point = if point.pack == Pack::Ab
+        && !matches!(
+            point.config.algorithm,
+            ConvAlgorithm::Im2col | ConvAlgorithm::Winograd
+        ) {
+        ConvPoint { pack: Pack::A, ..point }
+    } else {
+        point
+    };
+    let workspace = if point.dtype == Dtype::I8 {
+        conv2d_im2col_i8_workspace(&shape, &point.blocked, point.pack)
+    } else {
+        conv2d_native_workspace(
+            &shape,
+            &point.config,
+            &point.blocked,
+            point.pack,
+        )
+    };
     Ok(Plan::Conv {
         shape,
         fuse_relu: meta.fuse_relu,
         point,
         quant: meta.quant,
+        workspace,
     })
 }
 
@@ -497,6 +561,13 @@ pub struct NativeEngine {
     tuning: Option<Arc<SelectionDb>>,
     /// Platform string tuned selections are keyed under.
     device: String,
+    /// The engine's workspace arena: every kernel temporary (packing
+    /// panels, im2col matrices, Winograd transform buffers, i8 quantize
+    /// staging) is checked out of here.  [`NativeEngine::plan`] prewarms
+    /// it with each new plan's worst-case [`Workspace`], so steady-state
+    /// execution performs zero kernel-scratch allocations per request.
+    /// One arena per engine means one arena per pool actor.
+    scratch: Scratch,
 }
 
 impl NativeEngine {
@@ -512,6 +583,7 @@ impl NativeEngine {
             },
             tuning: None,
             device: HOST_DEVICE.to_string(),
+            scratch: Scratch::new(),
         })
     }
 
@@ -530,6 +602,7 @@ impl NativeEngine {
             },
             tuning: None,
             device: HOST_DEVICE.to_string(),
+            scratch: Scratch::new(),
         }
     }
 
@@ -561,6 +634,7 @@ impl NativeEngine {
             },
             tuning: Some(tuning),
             device: HOST_DEVICE.to_string(),
+            scratch: Scratch::new(),
         }
     }
 
@@ -604,6 +678,7 @@ impl NativeEngine {
             blocked,
             isa: Isa::Scalar,
             dtype: Dtype::F32,
+            pack: Pack::A,
         });
     }
 
@@ -699,6 +774,22 @@ impl NativeEngine {
         Ok(self.plan(name)?.conv_point())
     }
 
+    /// The worst-case kernel-scratch footprint (bytes) of one execution
+    /// of artifact `name` under its resolved plan — what the plan-time
+    /// prewarm sized the arena for.  Zero for kernels that stage nothing
+    /// (e.g. the tiled direct conv).
+    pub fn planned_workspace_bytes(&mut self, name: &str) -> Result<usize> {
+        Ok(self.plan(name)?.workspace().bytes())
+    }
+
+    /// Snapshot of this engine's arena counters (checkout hits, growth
+    /// reallocations, bytes high-water) — the serving observability
+    /// surface.  A flat `grows` across requests is the zero-alloc
+    /// steady-state invariant.
+    pub fn scratch_stats(&self) -> ScratchStats {
+        self.scratch.stats()
+    }
+
     /// Plan (or fetch the cached plan for) an artifact.
     fn plan(&mut self, name: &str) -> Result<Plan> {
         if let Some(plan) = self.plans.get(name) {
@@ -711,22 +802,30 @@ impl NativeEngine {
             self.tuning.as_deref(),
             &self.device,
         )?;
+        // Grow the arena to the new plan's worst case *now* (warm time),
+        // so the request path never pays a kernel-scratch allocation.
+        self.scratch.prewarm(plan.workspace());
         self.plans.insert(name.to_string(), plan.clone());
         Ok(plan)
     }
 
     fn execute(&self, plan: &Plan, inputs: &[Vec<f32>]) -> Vec<Vec<f32>> {
         match plan {
-            Plan::Gemm { m, n, k, alpha, beta, with_c, point, quant } => {
+            Plan::Gemm {
+                m, n, k, alpha, beta, with_c, point, quant, ..
+            } => {
                 // The i8 fast path: quantize the f32 operands with the
-                // artifact's per-tensor params, run the widening-kernel
-                // GEMM, dequantize in the epilogue.  `build_plan`
-                // guarantees `quant` is present for i8 plans.
+                // artifact's per-tensor params (staging the quantized
+                // copies in the arena), run the widening-kernel GEMM,
+                // dequantize in the epilogue.  `build_plan` guarantees
+                // `quant` is present for i8 plans.
                 let mut out = if point.dtype == Dtype::I8 {
                     let q = quant.expect("i8 plan carries quant metadata");
-                    let aq = quantize_slice(&inputs[0], &q.a);
-                    let bq = quantize_slice(&inputs[1], &q.b);
-                    gemm_i8_dequant(
+                    let mut aq = self.scratch.take_i8(inputs[0].len());
+                    quantize_into(&inputs[0], &q.a, &mut aq);
+                    let mut bq = self.scratch.take_i8(inputs[1].len());
+                    quantize_into(&inputs[1], &q.b, &mut bq);
+                    let out = gemm_i8_dequant_ex(
                         &aq,
                         &bq,
                         *m,
@@ -736,9 +835,14 @@ impl NativeEngine {
                         &q.b,
                         &point.params,
                         point.isa,
-                    )
+                        point.pack,
+                        &self.scratch,
+                    );
+                    self.scratch.put_i8(bq);
+                    self.scratch.put_i8(aq);
+                    out
                 } else {
-                    gemm_blocked_isa(
+                    gemm_blocked_ex(
                         &inputs[0],
                         &inputs[1],
                         *m,
@@ -746,6 +850,8 @@ impl NativeEngine {
                         *k,
                         &point.params,
                         point.isa,
+                        point.pack,
+                        &self.scratch,
                     )
                 };
                 if *with_c {
@@ -759,10 +865,10 @@ impl NativeEngine {
                 }
                 vec![out]
             }
-            Plan::Conv { shape, fuse_relu, point, quant } => {
+            Plan::Conv { shape, fuse_relu, point, quant, .. } => {
                 let mut out = if point.dtype == Dtype::I8 {
                     let q = quant.expect("i8 plan carries quant metadata");
-                    conv2d_im2col_i8(
+                    conv2d_im2col_i8_ex(
                         &inputs[0],
                         &inputs[1],
                         shape,
@@ -770,15 +876,19 @@ impl NativeEngine {
                         &q.b,
                         &point.blocked,
                         point.isa,
+                        point.pack,
+                        &self.scratch,
                     )
                 } else {
-                    conv2d_native_isa(
+                    conv2d_native_ex(
                         &inputs[0],
                         &inputs[1],
                         shape,
                         &point.config,
                         &point.blocked,
                         point.isa,
+                        point.pack,
+                        &self.scratch,
                     )
                 };
                 if *fuse_relu {
@@ -822,6 +932,10 @@ impl Backend for NativeEngine {
     fn swap_tuning(&mut self, db: Arc<SelectionDb>) -> bool {
         self.swap_tuning_selective(db);
         true
+    }
+
+    fn scratch_stats(&self) -> ScratchStats {
+        NativeEngine::scratch_stats(self)
     }
 }
 
@@ -1234,6 +1348,7 @@ mod tests {
                 blocked,
                 isa: Isa::Scalar,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             },
             4.0,
         );
@@ -1304,6 +1419,7 @@ mod tests {
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             },
             1.0,
         );
@@ -1358,8 +1474,12 @@ mod tests {
             Isa::detect().iter().find(|i| **i != Isa::Scalar)
         {
             let mut db = SelectionDb::new();
-            let point =
-                GemmPoint { params, isa: simd, dtype: Dtype::F32 };
+            let point = GemmPoint {
+                params,
+                isa: simd,
+                dtype: Dtype::F32,
+                pack: Pack::Ab,
+            };
             db.put(key.clone(), point, 9.0);
             let (_dir, plain) = engine_with(GEMM_8);
             let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
@@ -1383,7 +1503,12 @@ mod tests {
             let mut db = SelectionDb::new();
             db.put(
                 key.clone(),
-                GemmPoint { params, isa: missing, dtype: Dtype::F32 },
+                GemmPoint {
+                    params,
+                    isa: missing,
+                    dtype: Dtype::F32,
+                    pack: Pack::Ab,
+                },
                 9.0,
             );
             let (_dir, plain) = engine_with(GEMM_8);
@@ -1420,6 +1545,7 @@ mod tests {
                 blocked,
                 isa: simd,
                 dtype: Dtype::F32,
+                pack: Pack::Ab,
             };
             let mut db = SelectionDb::new();
             db.put(key.clone(), point, 9.0);
@@ -1444,6 +1570,7 @@ mod tests {
                 blocked,
                 isa: missing,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             };
             let mut db = SelectionDb::new();
             db.put(key.clone(), point, 9.0);
@@ -1480,6 +1607,7 @@ mod tests {
                 blocked: BlockedParams::default(),
                 isa: Isa::Scalar,
                 dtype: Dtype::F32,
+                pack: Pack::A,
             },
             6.0,
         );
@@ -1523,7 +1651,13 @@ mod tests {
         let planned = e.planned_gemm("g8").unwrap().unwrap();
         assert_eq!(
             planned,
-            GemmPoint { params: want, isa: Isa::Scalar, dtype: Dtype::F32 }
+            GemmPoint {
+                params: want,
+                isa: Isa::Scalar,
+                dtype: Dtype::F32,
+                pack: Pack::A,
+            },
+            "legacy entries decode as unpacked-B"
         );
     }
 
@@ -1546,6 +1680,7 @@ mod tests {
             },
             isa,
             dtype: Dtype::F32,
+            pack: Pack::Ab,
         };
         e.set_gemm_point(point);
         assert_eq!(e.cached(), 0, "set_gemm_point must drop stale plans");
@@ -1717,7 +1852,12 @@ mod tests {
         let mut db = SelectionDb::new();
         db.put(
             SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
-            GemmPoint { params, isa: Isa::Scalar, dtype: Dtype::I8 },
+            GemmPoint {
+                params,
+                isa: Isa::Scalar,
+                dtype: Dtype::I8,
+                pack: Pack::A,
+            },
             9.0,
         );
         let (_dir, plain) = engine_with(GEMM_8);
@@ -1742,7 +1882,12 @@ mod tests {
         let mut db = SelectionDb::new();
         db.put(
             SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
-            GemmPoint { params, isa: Isa::Scalar, dtype: Dtype::I8 },
+            GemmPoint {
+                params,
+                isa: Isa::Scalar,
+                dtype: Dtype::I8,
+                pack: Pack::A,
+            },
             9.0,
         );
         let (_dir, plain) = engine_with(GEMM_8_QUANT);
@@ -1790,6 +1935,7 @@ mod tests {
             },
             isa: Isa::Scalar,
             dtype: Dtype::I8,
+            pack: Pack::Ab,
         };
         let key = SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1);
 
@@ -1824,5 +1970,115 @@ mod tests {
         let out2 = e2.run("c33", &inputs2).unwrap();
         let expected2 = conv2d_direct(&inputs2[0], &inputs2[1], &shape);
         assert!(max_abs_diff(&out2.outputs[0], &expected2) < 1e-3);
+    }
+
+    #[test]
+    fn plans_prewarm_the_arena_so_steady_state_is_allocation_free() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        // A packed-B winograd selection — the deepest take-set (U/V/M
+        // transform buffers + batched-GEMM packing panels).
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::conv(HOST_DEVICE, 3, 1, 8, 8, 3, 4, 1),
+            ConvPoint {
+                config: ConvConfig::winograd(2),
+                blocked: BlockedParams {
+                    bm: 16, bn: 16, bk: 8, mr: 2, nr: 4, threads: 1,
+                },
+                isa: Isa::Scalar,
+                dtype: Dtype::F32,
+                pack: Pack::Ab,
+            },
+            4.0,
+        );
+        let (_dir, plain) = engine_with(CONV_3X3);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        assert_eq!(e.scratch_stats().bytes, 0, "fresh engine, empty arena");
+        e.warm("c33").unwrap();
+        let ws_bytes = e.planned_workspace_bytes("c33").unwrap();
+        assert!(ws_bytes > 0, "winograd plans a non-trivial workspace");
+        let warmed = e.scratch_stats();
+        assert!(
+            warmed.bytes as usize >= ws_bytes,
+            "prewarm sizes the arena to the plan's worst case \
+             ({} < {ws_bytes})",
+            warmed.bytes
+        );
+        let inputs = e.synth_inputs("c33", 37).unwrap();
+        for _ in 0..3 {
+            e.run("c33", &inputs).unwrap();
+        }
+        let after = e.scratch_stats();
+        assert_eq!(
+            after.grows, warmed.grows,
+            "steady-state requests must not grow the arena"
+        );
+        assert!(after.hits > warmed.hits, "requests draw from the pool");
+        assert_eq!(after.high_water_bytes, warmed.high_water_bytes);
+    }
+
+    #[test]
+    fn i8_plans_are_allocation_free_after_warm() {
+        use crate::tuner::{SelectionDb, SelectionKey};
+
+        let mut db = SelectionDb::new();
+        db.put(
+            SelectionKey::gemm(HOST_DEVICE, 8, 8, 8),
+            GemmPoint {
+                params: BlockedParams {
+                    bm: 8, bn: 8, bk: 8, mr: 2, nr: 4, threads: 1,
+                },
+                isa: Isa::Scalar,
+                dtype: Dtype::I8,
+                pack: Pack::Ab,
+            },
+            9.0,
+        );
+        let (_dir, plain) = engine_with(GEMM_8_QUANT);
+        let mut e = NativeEngine::with_tuning(plain.store.clone(), db);
+        e.warm("g8q").unwrap();
+        let warmed = e.scratch_stats();
+        let inputs = e.synth_inputs("g8q", 41).unwrap();
+        for _ in 0..3 {
+            e.run("g8q", &inputs).unwrap();
+        }
+        assert_eq!(
+            e.scratch_stats().grows,
+            warmed.grows,
+            "quantize staging + packed i8 GEMM all ride the prewarmed arena"
+        );
+    }
+
+    #[test]
+    fn conv_pack_ab_normalizes_to_a_off_the_gemm_lowered_algorithms() {
+        let (_dir, mut e) = engine_with(CONV_3X3);
+        // An engine-wide tiled override carrying pack: ab — the tiled
+        // kernel has no B panel, so the plan must report (and record a
+        // workspace for) pack: a.
+        e.set_conv_point(ConvPoint {
+            config: ConvConfig::tiled(2, 2, 1, 4),
+            blocked: BlockedParams { threads: 1, ..Default::default() },
+            isa: Isa::Scalar,
+            dtype: Dtype::F32,
+            pack: Pack::Ab,
+        });
+        let planned = e.planned_conv_point("c33").unwrap().unwrap();
+        assert_eq!(planned.pack, Pack::A, "no B panel to pack");
+        assert_eq!(
+            e.planned_workspace_bytes("c33").unwrap(),
+            0,
+            "the tiled direct conv stages nothing"
+        );
+        // A GEMM-lowered override keeps its measured pack.
+        e.set_conv_point(ConvPoint {
+            config: ConvConfig::im2col(),
+            blocked: BlockedParams { threads: 1, ..Default::default() },
+            isa: Isa::Scalar,
+            dtype: Dtype::F32,
+            pack: Pack::Ab,
+        });
+        let planned = e.planned_conv_point("c33").unwrap().unwrap();
+        assert_eq!(planned.pack, Pack::Ab, "im2col keeps packed-B");
     }
 }

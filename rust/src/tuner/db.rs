@@ -480,7 +480,7 @@ fn normalize_for_merge(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::blas::{BlockedParams, Dtype, Isa};
+    use crate::blas::{BlockedParams, Dtype, Isa, Pack};
     use crate::config::ConvAlgorithm;
     use crate::util::tmp::TempDir;
 
@@ -548,18 +548,20 @@ mod tests {
             },
             isa: Isa::Avx2,
             dtype: Dtype::I8,
+            pack: Pack::Ab,
         };
         let key = SelectionKey::gemm("host", 96, 96, 96);
         db.put(key.clone(), gp, 7.5);
         let dir = TempDir::new("seldb").unwrap();
         let path = dir.path().join("host.json");
         db.save(&path).unwrap();
-        // The entry carries the isa and dtype twice: inside the point
-        // and as top-level report columns.
+        // The entry carries the isa, dtype, and pack twice: inside the
+        // point and as top-level report columns.
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains(r#""kind": "gemm_point""#), "{text}");
         assert!(text.contains(r#""isa": "avx2""#), "{text}");
         assert!(text.contains(r#""dtype": "i8""#), "{text}");
+        assert!(text.contains(r#""pack": "ab""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
         assert_eq!(loaded.get::<GemmPoint>(&key).unwrap(), (gp, 7.5));
         // A gemm_point entry never answers modeled or conv lookups.
@@ -647,6 +649,7 @@ mod tests {
             },
             isa: Isa::Scalar,
             dtype: Dtype::F32,
+            pack: Pack::Ab,
         };
         let key = SelectionKey::conv("host", 3, 1, 16, 16, 8, 16, 2);
         db.put(key.clone(), cp, 5.5);
@@ -658,6 +661,7 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert!(text.contains(r#""kind": "conv_point""#), "{text}");
         assert!(text.contains(r#""algorithm": "winograd""#), "{text}");
+        assert!(text.contains(r#""pack": "ab""#), "{text}");
         let loaded = SelectionDb::load(&path).unwrap();
         let (c, g) = loaded.get::<ConvPoint>(&key).unwrap();
         assert_eq!((c, g), (cp, 5.5));

@@ -26,7 +26,7 @@
 use std::collections::BTreeMap;
 use std::time::Duration;
 
-use crate::blas::{BlockedParams, Dtype, Isa};
+use crate::blas::{BlockedParams, Dtype, Isa, Pack};
 use crate::config::{
     micro_kernel_shapes, ConvAlgorithm, ConvConfig, ConvPoint, GemmPoint,
     KernelSpace, Problem,
@@ -564,13 +564,16 @@ pub fn blocked_grid(quick: bool, threads: &[usize]) -> Vec<BlockedParams> {
 }
 
 /// The full measured GEMM grid: [`blocked_grid`] × the given ISAs
-/// (normally [`Isa::detect`]) × both [`Dtype`]s, deduplicated, with the
-/// default scalar point always present as the untuned baseline.
+/// (normally [`Isa::detect`]) × both [`Dtype`]s × both [`Pack`]
+/// strategies, deduplicated, with the default scalar point always
+/// present as the untuned baseline.
 /// Non-scalar ISAs are crossed only with *monomorphized* registry
 /// micro-tiles — off-registry shapes run the generic scalar kernel
 /// whatever the ISA, so timing them per-ISA would measure the same
 /// kernel repeatedly.  The same rule bounds the `i8` half of the grid:
 /// the widening-kernel registry mirrors the f32 one shape-for-shape.
+/// The `pack` axis is crossed everywhere: whether B-panel packing pays
+/// is exactly the shape-dependent question the sweep answers.
 pub fn gemm_point_grid(
     quick: bool,
     threads: &[usize],
@@ -583,9 +586,11 @@ pub fn gemm_point_grid(
                 continue;
             }
             for dtype in Dtype::all() {
-                let cand = GemmPoint { params, isa, dtype };
-                if !grid.contains(&cand) {
-                    grid.push(cand);
+                for pack in Pack::all() {
+                    let cand = GemmPoint { params, isa, dtype, pack };
+                    if !grid.contains(&cand) {
+                        grid.push(cand);
+                    }
                 }
             }
         }
@@ -637,7 +642,9 @@ pub fn conv_candidates(quick: bool) -> Vec<ConvConfig> {
 /// [`Isa::detect`]), deduplicated, with the plain default im2col
 /// candidate always present as the untuned baseline.  The im2col
 /// candidates (the one family with a quantized body) are additionally
-/// crossed with the `i8` [`Dtype`].
+/// crossed with the `i8` [`Dtype`], and the GEMM-lowered candidates with
+/// both [`Pack`] strategies (`ab` needs a lowered B panel to pack, so
+/// the direct kernels stay `a`).
 pub fn conv_native_grid(
     quick: bool,
     threads: &[usize],
@@ -671,18 +678,28 @@ pub fn conv_native_grid(
         } else {
             &[Dtype::F32]
         };
+        // The pack axis rides the GEMM-lowered algorithms only: the
+        // direct kernels have no B panel ([`ConvPoint::validate`]).
+        let packs: &[Pack] =
+            if lowered { &[Pack::A, Pack::Ab] } else { &[Pack::A] };
         for base in bases {
             for &t in threads {
                 for &dtype in dtypes {
-                    push(
-                        &mut grid,
-                        ConvCandidate {
-                            config,
-                            blocked: BlockedParams { threads: t, ..base },
-                            isa: Isa::Scalar,
-                            dtype,
-                        },
-                    );
+                    for &pack in packs {
+                        push(
+                            &mut grid,
+                            ConvCandidate {
+                                config,
+                                blocked: BlockedParams {
+                                    threads: t,
+                                    ..base
+                                },
+                                isa: Isa::Scalar,
+                                dtype,
+                                pack,
+                            },
+                        );
+                    }
                 }
             }
         }
@@ -698,18 +715,21 @@ pub fn conv_native_grid(
                 }
                 for &t in threads {
                     for &dtype in dtypes {
-                        push(
-                            &mut grid,
-                            ConvCandidate {
-                                config,
-                                blocked: BlockedParams {
-                                    threads: t,
-                                    ..Default::default()
+                        for &pack in packs {
+                            push(
+                                &mut grid,
+                                ConvCandidate {
+                                    config,
+                                    blocked: BlockedParams {
+                                        threads: t,
+                                        ..Default::default()
+                                    },
+                                    isa,
+                                    dtype,
+                                    pack,
                                 },
-                                isa,
-                                dtype,
-                            },
-                        );
+                            );
+                        }
                     }
                 }
             }
@@ -813,6 +833,17 @@ mod tests {
                     );
                 }
             }
+            // Both pack strategies are swept, crossed with every dtype
+            // — packed-B is a measured axis, not a hardwired default.
+            for dtype in Dtype::all() {
+                for pack in Pack::all() {
+                    assert!(
+                        grid.iter()
+                            .any(|p| p.dtype == dtype && p.pack == pack),
+                        "quick={quick}: {dtype} never crossed with {pack}"
+                    );
+                }
+            }
             // Every point is applicable on this host by construction.
             let problem = Problem::Gemm { m: 96, n: 96, k: 96 };
             assert!(grid.iter().all(|p| p.applicable(&problem)));
@@ -845,6 +876,11 @@ mod tests {
         let swept = sweep.axis_values_for(&key.op, |p| p.isa);
         for &isa in &isas {
             assert!(swept.contains(&isa), "{isa} never measured");
+        }
+        // Both pack strategies were actually measured.
+        let packs = sweep.axis_values_for(&key.op, |p| p.pack);
+        for pack in Pack::all() {
+            assert!(packs.contains(&pack), "{pack} never measured");
         }
         // The persisted winner is the argmax, stored as a unified point.
         let (win, win_g) = db.get::<GemmPoint>(&key).unwrap();
@@ -1109,6 +1145,21 @@ mod tests {
                 .iter()
                 .all(|c| c.config.algorithm != ConvAlgorithm::Tiled
                     || c.isa == Isa::Scalar));
+            // Packed-B rides both GEMM-lowered algorithms and never the
+            // direct kernels (which have no B panel to pack).
+            for alg in [ConvAlgorithm::Im2col, ConvAlgorithm::Winograd] {
+                assert!(
+                    grid.iter().any(|c| c.config.algorithm == alg
+                        && c.pack == Pack::Ab),
+                    "quick={quick}: {alg} never crossed with pack ab"
+                );
+            }
+            assert!(
+                grid.iter()
+                    .all(|c| c.config.algorithm != ConvAlgorithm::Tiled
+                        || c.pack == Pack::A),
+                "quick={quick}: a tiled candidate carries pack ab"
+            );
             // The i8 dtype rides im2col candidates only (the one conv
             // lowering with a quantized body) — and it does ride them.
             assert!(
@@ -1181,6 +1232,10 @@ mod tests {
         let swept_isas = sweep.axis_values_for(&key.op, |c| c.isa);
         for &isa in &isas {
             assert!(swept_isas.contains(&isa), "{isa} never measured");
+        }
+        let swept_packs = sweep.axis_values_for(&key.op, |c| c.pack);
+        for pack in Pack::all() {
+            assert!(swept_packs.contains(&pack), "{pack} never measured");
         }
         // The persisted winner is the argmax and beats (or ties) the
         // untuned default, which is in the grid by construction.

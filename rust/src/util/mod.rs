@@ -13,10 +13,13 @@
 //!   robust statistics (the criterion stand-in the benches use);
 //! * [`pool`] — a scoped, work-stealing-lite thread pool (the rayon
 //!   stand-in the parallel kernels use);
+//! * [`scratch`] — the zero-allocation workspace arena the kernel hot
+//!   paths draw packing/transform/staging buffers from;
 //! * [`tmp`] — RAII temporary directories for tests.
 
 pub mod bench;
 pub mod json;
 pub mod pool;
 pub mod rng;
+pub mod scratch;
 pub mod tmp;

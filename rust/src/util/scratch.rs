@@ -1,0 +1,391 @@
+//! `Scratch` — the zero-allocation workspace arena the kernel hot paths
+//! draw their temporaries from.
+//!
+//! Every kernel in `blas` needs per-call staging memory: A/B packing
+//! panels, the im2col patch matrix, the Winograd V/U/M transform
+//! buffers, int8 quantize staging.  Allocating those per call is cheap
+//! once and ruinous at serving rates, so each `NativeEngine` owns one
+//! `Scratch` (one arena per pool actor, since each actor owns its
+//! engine) and threads it through the `*_ex` kernel entry points.  A
+//! buffer is checked out with `take_*` and returned with `put_*`;
+//! parallel band workers inside a kernel check out their own buffers
+//! concurrently (the arena is `Sync`), so worker-local scratch rides the
+//! same pool.
+//!
+//! Semantics contract: `take_f32(len)` returns a vector observationally
+//! identical to `vec![0.0; len]` — exact length, every element zero —
+//! so routing a kernel's temporaries through the arena can never change
+//! a result bit (the arena-reuse hygiene proptests pin this).  Recycled
+//! buffers are `clear()`ed and re-zeroed on checkout; stale data from a
+//! previous shape cannot bleed through.
+//!
+//! Sizing: plans know their shapes, so the blas layer exposes
+//! `*_workspace` functions that mirror each kernel's exact take-set as a
+//! [`Workspace`] (one entry per buffer that can be outstanding at once,
+//! worker copies included).  `NativeEngine` computes the worst case at
+//! plan time and [`Scratch::prewarm`]s the arena, after which steady
+//! state performs **zero** kernel-scratch allocations per request — the
+//! counters ([`ScratchStats`]: checkout hits vs growth reallocations,
+//! bytes high-water) make that observable, and serve-smoke asserts the
+//! growth counter is flat after warmup.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Typed free lists behind the arena's mutex.  Buffers retain their
+/// capacity while pooled; checkout picks the best (smallest sufficient)
+/// fit so a large panel buffer is not burned on a tiny transform tile.
+#[derive(Default)]
+struct Pools {
+    f32s: Vec<Vec<f32>>,
+    i8s: Vec<Vec<i8>>,
+    i32s: Vec<Vec<i32>>,
+    i64s: Vec<Vec<i64>>,
+}
+
+/// Counter snapshot of one arena — the observability surface the
+/// loadgen/serving CSVs report per engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ScratchStats {
+    /// Checkouts satisfied by a pooled buffer (no allocation).
+    pub hits: u64,
+    /// Checkouts that had to allocate (pool empty or every pooled
+    /// buffer too small).  Flat after warmup == zero-alloc steady state.
+    pub grows: u64,
+    /// Bytes currently owned by the arena (pooled + checked out).
+    pub bytes: u64,
+    /// High-water mark of `bytes` over the arena's lifetime.
+    pub high_water_bytes: u64,
+}
+
+impl ScratchStats {
+    /// Fold another arena's counters into this one (pool-level
+    /// aggregation across actors).
+    pub fn absorb(&mut self, other: &ScratchStats) {
+        self.hits += other.hits;
+        self.grows += other.grows;
+        self.bytes += other.bytes;
+        self.high_water_bytes += other.high_water_bytes;
+    }
+}
+
+/// The workspace arena.  `Sync`: checkouts lock a mutex around the free
+/// lists (uncontended in steady state — a handful of lock/unlock pairs
+/// per kernel call), counters are atomics.
+pub struct Scratch {
+    pools: Mutex<Pools>,
+    hits: AtomicU64,
+    grows: AtomicU64,
+    bytes: AtomicU64,
+    high_water: AtomicU64,
+}
+
+impl Default for Scratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+macro_rules! typed_pool {
+    ($take:ident, $put:ident, $field:ident, $ty:ty, $zero:expr) => {
+        /// Check out a zero-filled buffer of exactly `len` elements —
+        /// observationally identical to `vec![zero; len]`.  Return it
+        /// with the matching `put_*` when done so steady state recycles
+        /// instead of allocating.
+        pub fn $take(&self, len: usize) -> Vec<$ty> {
+            if len == 0 {
+                // Length-zero vectors never allocate; count as a hit so
+                // degenerate shapes don't read as arena growth.
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Vec::new();
+            }
+            let reused = {
+                let mut pools =
+                    self.pools.lock().expect("scratch arena poisoned");
+                let pool = &mut pools.$field;
+                // Best fit: the smallest pooled capacity that suffices.
+                let mut best: Option<usize> = None;
+                for idx in 0..pool.len() {
+                    let cap = pool[idx].capacity();
+                    let better = match best {
+                        None => true,
+                        Some(b) => cap < pool[b].capacity(),
+                    };
+                    if cap >= len && better {
+                        best = Some(idx);
+                    }
+                }
+                best.map(|idx| pool.swap_remove(idx))
+            };
+            match reused {
+                Some(mut buf) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    // clear + resize re-zeroes every element without
+                    // touching capacity: the vec![zero; len] contract.
+                    buf.clear();
+                    buf.resize(len, $zero);
+                    buf
+                }
+                None => {
+                    self.grows.fetch_add(1, Ordering::Relaxed);
+                    let added = (len * std::mem::size_of::<$ty>()) as u64;
+                    let now =
+                        self.bytes.fetch_add(added, Ordering::Relaxed)
+                            + added;
+                    self.high_water.fetch_max(now, Ordering::Relaxed);
+                    vec![$zero; len]
+                }
+            }
+        }
+
+        /// Return a buffer checked out with the matching `take_*`.
+        pub fn $put(&self, buf: Vec<$ty>) {
+            if buf.capacity() == 0 {
+                return; // nothing to recycle
+            }
+            self.pools
+                .lock()
+                .expect("scratch arena poisoned")
+                .$field
+                .push(buf);
+        }
+    };
+}
+
+impl Scratch {
+    /// An empty arena: no buffers owned, all counters zero.  `const`, so
+    /// wrapper entry points can keep a throwaway arena on the stack for
+    /// callers that don't manage one.
+    pub const fn new() -> Self {
+        Scratch {
+            pools: Mutex::new(Pools {
+                f32s: Vec::new(),
+                i8s: Vec::new(),
+                i32s: Vec::new(),
+                i64s: Vec::new(),
+            }),
+            hits: AtomicU64::new(0),
+            grows: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            high_water: AtomicU64::new(0),
+        }
+    }
+
+    typed_pool!(take_f32, put_f32, f32s, f32, 0.0f32);
+    typed_pool!(take_i8, put_i8, i8s, i8, 0i8);
+    typed_pool!(take_i32, put_i32, i32s, i32, 0i32);
+    typed_pool!(take_i64, put_i64, i64s, i64, 0i64);
+
+    /// Snapshot the counters.
+    pub fn stats(&self) -> ScratchStats {
+        ScratchStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            grows: self.grows.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            high_water_bytes: self.high_water.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Grow the arena to cover a workspace up front: check out every
+    /// buffer the workspace lists (forcing any allocation to happen
+    /// *now*), then return them all to the pool.  After prewarming with
+    /// a plan's worst-case workspace, executing that plan hits the pool
+    /// on every checkout — zero allocations in steady state.
+    pub fn prewarm(&self, ws: &Workspace) {
+        let f: Vec<_> =
+            ws.f32_lens.iter().map(|&l| self.take_f32(l)).collect();
+        let b: Vec<_> =
+            ws.i8_lens.iter().map(|&l| self.take_i8(l)).collect();
+        let w: Vec<_> =
+            ws.i32_lens.iter().map(|&l| self.take_i32(l)).collect();
+        let d: Vec<_> =
+            ws.i64_lens.iter().map(|&l| self.take_i64(l)).collect();
+        f.into_iter().for_each(|v| self.put_f32(v));
+        b.into_iter().for_each(|v| self.put_i8(v));
+        w.into_iter().for_each(|v| self.put_i32(v));
+        d.into_iter().for_each(|v| self.put_i64(v));
+    }
+}
+
+/// The worst-case take-set of one kernel execution: one entry per buffer
+/// that can be outstanding simultaneously (worker-local copies listed
+/// once per worker).  Computed analytically at plan time by the blas
+/// `*_workspace` functions, recorded on the plan, and fed to
+/// [`Scratch::prewarm`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Workspace {
+    /// Lengths (elements) of the f32 buffers.
+    pub f32_lens: Vec<usize>,
+    /// Lengths (elements) of the i8 buffers.
+    pub i8_lens: Vec<usize>,
+    /// Lengths (elements) of the i32 buffers.
+    pub i32_lens: Vec<usize>,
+    /// Lengths (elements) of the i64 buffers.
+    pub i64_lens: Vec<usize>,
+}
+
+impl Workspace {
+    /// An empty workspace (kernels that stage nothing).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Total worst-case bytes across every listed buffer — the number a
+    /// plan records as its workspace footprint.
+    pub fn bytes(&self) -> usize {
+        self.f32_lens.iter().sum::<usize>() * std::mem::size_of::<f32>()
+            + self.i8_lens.iter().sum::<usize>()
+            + self.i32_lens.iter().sum::<usize>()
+                * std::mem::size_of::<i32>()
+            + self.i64_lens.iter().sum::<usize>()
+                * std::mem::size_of::<i64>()
+    }
+
+    /// Append another take-set (a kernel composed of stages sums its
+    /// stages' workspaces; concatenation is the conservative union).
+    pub fn extend(&mut self, other: Workspace) {
+        self.f32_lens.extend(other.f32_lens);
+        self.i8_lens.extend(other.i8_lens);
+        self.i32_lens.extend(other.i32_lens);
+        self.i64_lens.extend(other.i64_lens);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_matches_fresh_vec_semantics() {
+        let s = Scratch::new();
+        for len in [0usize, 1, 7, 64] {
+            let v = s.take_f32(len);
+            assert_eq!(v, vec![0.0f32; len], "len={len}");
+            s.put_f32(v);
+        }
+        let v = s.take_i8(5);
+        assert_eq!(v, vec![0i8; 5]);
+        s.put_i8(v);
+        let v = s.take_i32(5);
+        assert_eq!(v, vec![0i32; 5]);
+        s.put_i32(v);
+        let v = s.take_i64(5);
+        assert_eq!(v, vec![0i64; 5]);
+        s.put_i64(v);
+    }
+
+    #[test]
+    fn recycled_buffers_are_rezeroed() {
+        let s = Scratch::new();
+        let mut v = s.take_f32(8);
+        v.iter_mut().for_each(|x| *x = 3.5);
+        s.put_f32(v);
+        // Same size comes back from the pool — and must be zero again.
+        let v2 = s.take_f32(8);
+        assert_eq!(v2, vec![0.0f32; 8]);
+        // Smaller asks reuse the same capacity, still exact-length zero.
+        s.put_f32(v2);
+        let v3 = s.take_f32(3);
+        assert_eq!(v3, vec![0.0f32; 3]);
+    }
+
+    #[test]
+    fn counters_track_hits_and_growth() {
+        let s = Scratch::new();
+        let v = s.take_f32(16); // grow
+        s.put_f32(v);
+        let v = s.take_f32(16); // hit
+        s.put_f32(v);
+        let v = s.take_f32(4); // hit (fits in the 16-cap buffer)
+        s.put_f32(v);
+        let v = s.take_f32(32); // grow (nothing big enough)
+        s.put_f32(v);
+        let st = s.stats();
+        assert_eq!((st.hits, st.grows), (2, 2));
+        assert_eq!(st.bytes, (16 + 32) * 4);
+        assert_eq!(st.high_water_bytes, st.bytes);
+    }
+
+    #[test]
+    fn best_fit_prefers_the_smallest_sufficient_buffer() {
+        let s = Scratch::new();
+        let big = s.take_f32(100);
+        let small = s.take_f32(10);
+        s.put_f32(big);
+        s.put_f32(small);
+        // A 10-element ask must come from the 10-cap buffer, leaving
+        // the 100-cap one pooled for the next big ask.
+        let v = s.take_f32(10);
+        assert_eq!(v.capacity(), 10);
+        let v100 = s.take_f32(100);
+        assert_eq!(v100.capacity(), 100);
+        assert_eq!(s.stats().grows, 2, "both asks must be pool hits");
+    }
+
+    #[test]
+    fn prewarm_makes_steady_state_allocation_free() {
+        let s = Scratch::new();
+        let ws = Workspace {
+            f32_lens: vec![64, 64, 128],
+            i8_lens: vec![256],
+            i32_lens: vec![32],
+            i64_lens: vec![],
+        };
+        s.prewarm(&ws);
+        let grows_after_warmup = s.stats().grows;
+        // Simulate steady-state execution: the same take-set, twice.
+        for _ in 0..2 {
+            let a = s.take_f32(64);
+            let b = s.take_f32(64);
+            let c = s.take_f32(128);
+            let q = s.take_i8(256);
+            let w = s.take_i32(32);
+            s.put_f32(a);
+            s.put_f32(b);
+            s.put_f32(c);
+            s.put_i8(q);
+            s.put_i32(w);
+        }
+        assert_eq!(
+            s.stats().grows,
+            grows_after_warmup,
+            "steady state must not grow the arena"
+        );
+    }
+
+    #[test]
+    fn workspace_bytes_and_extend() {
+        let mut ws = Workspace {
+            f32_lens: vec![10],
+            i8_lens: vec![10],
+            i32_lens: vec![10],
+            i64_lens: vec![10],
+        };
+        assert_eq!(ws.bytes(), 10 * 4 + 10 + 10 * 4 + 10 * 8);
+        ws.extend(Workspace {
+            f32_lens: vec![5],
+            ..Workspace::none()
+        });
+        assert_eq!(ws.f32_lens, vec![10, 5]);
+        assert_eq!(Workspace::none().bytes(), 0);
+    }
+
+    #[test]
+    fn arena_is_usable_across_threads() {
+        let s = Scratch::new();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                scope.spawn(|| {
+                    for _ in 0..8 {
+                        let v = s.take_f32(64);
+                        assert_eq!(v.len(), 64);
+                        s.put_f32(v);
+                    }
+                });
+            }
+        });
+        let st = s.stats();
+        assert_eq!(st.hits + st.grows, 32);
+        assert!(st.grows <= 4, "at most one growth per worker");
+    }
+}

@@ -3,8 +3,9 @@
 //! deterministic generators, and every case prints its inputs on failure).
 
 use portable_kernels::blas::{
-    gemm_blocked, gemm_blocked_isa, gemm_i8_blocked_isa, gemm_i8_dequant,
-    gemm_naive, max_abs_diff, quantize_slice, BlockedParams, Dtype, Isa,
+    gemm_blocked, gemm_blocked_ex, gemm_blocked_isa, gemm_i8_blocked_isa,
+    gemm_i8_dequant, gemm_i8_dequant_ex, gemm_naive, gemm_workspace,
+    max_abs_diff, quantize_slice, BlockedParams, Dtype, Isa, Pack,
     QuantParams, MICRO_KERNEL_SHAPES,
 };
 use portable_kernels::config::{ConvConfig, ConvPoint, GemmConfig, GemmPoint};
@@ -17,6 +18,7 @@ use portable_kernels::perfmodel::{
 use portable_kernels::tuner::{tune_gemm, ExhaustiveSearch};
 use portable_kernels::util::json;
 use portable_kernels::util::rng::XorShift;
+use portable_kernels::util::scratch::Scratch;
 
 const CASES: usize = 60;
 
@@ -514,6 +516,7 @@ fn prop_selection_db_points_roundtrip_via_disk() {
             },
             isa: *rng.choose(&Isa::all()),
             dtype: *rng.choose(&Dtype::all()),
+            pack: *rng.choose(&Pack::all()),
         };
         let gkey = SelectionKey::gemm(
             "prop-host",
@@ -557,6 +560,16 @@ fn prop_selection_db_points_roundtrip_via_disk() {
                 *rng.choose(&Dtype::all())
             } else {
                 Dtype::F32
+            },
+            // Packed-B lowering is only legal on the GEMM-lowered
+            // algorithms (ConvPoint::validate); same sampler rule.
+            pack: if matches!(
+                algorithm,
+                ConvAlgorithm::Im2col | ConvAlgorithm::Winograd
+            ) {
+                *rng.choose(&Pack::all())
+            } else {
+                Pack::A
             },
         };
         let ckey = SelectionKey::conv(
@@ -681,6 +694,9 @@ fn prop_legacy_db_fixtures_plan_identically() {
         // Pre-dtype entries carry no dtype field: they migrate as f32,
         // which is the arithmetic those entries were measured under.
         assert_eq!(planned.dtype, Dtype::F32, "case {case}");
+        // Pre-pack entries carry no pack field: they migrate as
+        // unpacked-B (pack: a), the kernels they were measured with.
+        assert_eq!(planned.pack, Pack::A, "case {case}");
         // Conv: the stored algorithm + blocking (3x3/s1 is on every
         // algorithm's domain, so no fallback applies).
         let conv = e.planned_conv("c8").unwrap().unwrap();
@@ -688,6 +704,7 @@ fn prop_legacy_db_fixtures_plan_identically() {
         assert_eq!(e.planned_params("c8").unwrap(), want, "case {case}");
         let cpoint = e.planned_conv_point("c8").unwrap().unwrap();
         assert_eq!(cpoint.dtype, Dtype::F32, "case {case}");
+        assert_eq!(cpoint.pack, Pack::A, "case {case}");
     }
 }
 
@@ -1574,5 +1591,182 @@ fn prop_layer_shapes_consistent() {
         assert_eq!(k, (layer.window as u64).pow(2) * layer.in_c as u64);
         // flops consistency: 2*M*N*K == direct conv flops.
         assert_eq!(2 * m * n * k, layer.flops(3));
+    }
+}
+
+/// Packed-B GEMM is BIT-identical (0 ULP, not a tolerance) to the
+/// unpacked path on ragged and degenerate shapes, for every detected
+/// ISA, serial and threaded.  The packed micro-kernels read the same
+/// `k`-major element sequence from the `nr`-interleaved panel that the
+/// unpacked kernels read from the strided B, so the accumulation order —
+/// and therefore every rounding decision — is unchanged; packing is a
+/// layout transform, never an arithmetic one.
+#[test]
+fn prop_packed_b_gemm_bit_identical_to_unpacked() {
+    let mut rng = XorShift::new(9191);
+    let isas = Isa::detect();
+    for case in 0..16 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = if case % 5 == 0 { 1 } else { rng.range(2, 96) as usize };
+        let n = if case % 7 == 0 { 1 } else { rng.range(2, 96) as usize };
+        let k = if case % 3 == 0 { 1 } else { rng.range(2, 80) as usize };
+        let params = BlockedParams {
+            bm: rng.range(1, 48) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: 1,
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        for &isa in &isas {
+            let unpacked = gemm_blocked_isa(&a, &b, m, n, k, &params, isa);
+            for threads in [1usize, 2, 8] {
+                let p = BlockedParams { threads, ..params };
+                let scratch = Scratch::new();
+                scratch.prewarm(&gemm_workspace(m, n, k, &p, Pack::Ab));
+                let packed = gemm_blocked_ex(
+                    &a, &b, m, n, k, &p, isa, Pack::Ab, &scratch,
+                );
+                assert!(
+                    unpacked == packed,
+                    "case {case}: pack ab diverged from pack a at \
+                     {m}x{n}x{k} {isa} threads={threads} {params:?} \
+                     (max diff {})",
+                    max_abs_diff(&unpacked, &packed)
+                );
+            }
+        }
+    }
+}
+
+/// Packed-B int8 GEMM (through the dequantizing entry point) is exactly
+/// equal to the unpacked path — integer accumulation is exact and the
+/// f32 epilogue is elementwise in a fixed order, so the contract is
+/// equality, never a tolerance — serial and threaded, per detected ISA.
+#[test]
+fn prop_packed_b_int8_gemm_exact_vs_unpacked() {
+    let mut rng = XorShift::new(9292);
+    let isas = Isa::detect();
+    for case in 0..12 {
+        let &(mr, nr) = rng.choose(MICRO_KERNEL_SHAPES);
+        let m = if case % 5 == 0 { 1 } else { rng.range(2, 96) as usize };
+        let n = if case % 7 == 0 { 1 } else { rng.range(2, 96) as usize };
+        let k = rng.range(1, 96) as usize;
+        let params = BlockedParams {
+            bm: rng.range(1, 48) as usize,
+            bn: rng.range(1, 48) as usize,
+            bk: rng.range(1, 48) as usize,
+            mr,
+            nr,
+            threads: *rng.choose(&[1usize, 2, 8]),
+        };
+        let a = i8_vec(&mut rng, m * k);
+        let b = i8_vec(&mut rng, k * n);
+        let qa = QuantParams { scale: 1.0 / 64.0, zero_point: 3 };
+        let qb = QuantParams { scale: 1.0 / 32.0, zero_point: -5 };
+        for &isa in &isas {
+            let unpacked = gemm_i8_dequant(
+                &a, &b, m, n, k, &qa, &qb, &params, isa,
+            );
+            let scratch = Scratch::new();
+            let packed = gemm_i8_dequant_ex(
+                &a, &b, m, n, k, &qa, &qb, &params, isa, Pack::Ab, &scratch,
+            );
+            assert!(
+                unpacked == packed,
+                "case {case}: i8 pack ab diverged from pack a at \
+                 {m}x{n}x{k} {isa} {params:?}"
+            );
+        }
+    }
+}
+
+/// Arena-reuse hygiene: ONE `Scratch` shared across many calls with
+/// different shapes, packs and dtypes still produces bit-identical
+/// results every time — `take_*` re-zeroes recycled buffers and sizing
+/// is per-checkout, so a panel or accumulator left over from a larger
+/// problem can never leak stale values into a smaller one.  Also pins
+/// the steady-state invariant the serving arena relies on: replaying an
+/// already-seen shape performs zero growth allocations.
+#[test]
+fn prop_scratch_reuse_across_shapes_stays_exact() {
+    let mut rng = XorShift::new(9393);
+    let scratch = Scratch::new();
+    let mut shapes: Vec<(usize, usize, usize, BlockedParams)> = Vec::new();
+    for case in 0..24 {
+        // Descending-then-ascending sizes maximize recycled-buffer
+        // mismatch: small checkouts right after large ones and back.
+        let (m, n, k, params) = if case >= 12 {
+            shapes[23 - case].clone()
+        } else {
+            let s = (
+                rng.range(1, 96) as usize,
+                rng.range(1, 96) as usize,
+                rng.range(1, 80) as usize,
+                BlockedParams {
+                    bm: rng.range(1, 48) as usize,
+                    bn: rng.range(1, 48) as usize,
+                    bk: rng.range(1, 48) as usize,
+                    mr: rng.range(1, 8) as usize,
+                    nr: rng.range(1, 16) as usize,
+                    threads: *rng.choose(&[1usize, 2]),
+                },
+            );
+            shapes.push(s.clone());
+            s
+        };
+        let a = rng.f32_vec(m * k);
+        let b = rng.f32_vec(k * n);
+        let pack = *rng.choose(&Pack::all());
+        let want = gemm_blocked_isa(&a, &b, m, n, k, &params, Isa::Scalar);
+        let got = gemm_blocked_ex(
+            &a, &b, m, n, k, &params, Isa::Scalar, pack, &scratch,
+        );
+        assert!(
+            want == got,
+            "case {case}: shared-arena result diverged at {m}x{n}x{k} \
+             pack {pack} {params:?}"
+        );
+        let aq = i8_vec(&mut rng, m * k);
+        let bq = i8_vec(&mut rng, k * n);
+        let q = QuantParams { scale: 1.0 / 128.0, zero_point: 1 };
+        let wi = gemm_i8_dequant(
+            &aq, &bq, m, n, k, &q, &q, &params, Isa::Scalar,
+        );
+        let gi = gemm_i8_dequant_ex(
+            &aq, &bq, m, n, k, &q, &q, &params, Isa::Scalar, pack, &scratch,
+        );
+        assert!(
+            wi == gi,
+            "case {case}: shared-arena i8 result diverged at {m}x{n}x{k} \
+             pack {pack} {params:?}"
+        );
+    }
+    // Steady state: prewarm a fresh arena with every shape's declared
+    // worst-case workspace, then replay the whole zoo — growth past the
+    // prewarm baseline would mean a `*_workspace` function under-counts
+    // its kernel's take-set (the invariant serving relies on, since
+    // prewarm allocations are the warmup the serve-smoke baseline
+    // subtracts out).
+    let replay = Scratch::new();
+    for &(m, n, k, ref params) in &shapes {
+        replay.prewarm(&gemm_workspace(m, n, k, params, Pack::Ab));
+    }
+    let warmed_grows = replay.stats().grows;
+    let mut rng2 = XorShift::new(9494);
+    for &(m, n, k, ref params) in &shapes {
+        let a = rng2.f32_vec(m * k);
+        let b = rng2.f32_vec(k * n);
+        let _ = gemm_blocked_ex(
+            &a, &b, m, n, k, params, Isa::Scalar, Pack::Ab, &replay,
+        );
+        assert_eq!(
+            replay.stats().grows,
+            warmed_grows,
+            "prewarmed arena grew during a replayed {m}x{n}x{k} call — \
+             gemm_workspace must cover the hot path's take-set"
+        );
     }
 }
